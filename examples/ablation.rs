@@ -1,0 +1,142 @@
+//! Ablation study (paper Appendix B, Table 9 + Figs 8-9): ResNet-18 on
+//! synthetic CIFAR-10, five configurations x N seeds:
+//!
+//!   (1) FP32 baseline         (2) QAT only          (3) reverse pruning only
+//!   (4) QAT + 90% clipping    (5) QAT + 99% clipping
+//!
+//! Expected shape: all configs converge to similar validation accuracy
+//! (Fig 8), while weight distributions tighten with clipping aggressiveness
+//! (Fig 9) and the QAT+95-style configs yield the lowest deployment MSE.
+//!
+//!   cargo run --release --example ablation -- [--quick] [--weights]
+
+use anyhow::Result;
+
+use quant_trim::backends::backend_by_name;
+use quant_trim::backends::{PtqOptions, RangeSource};
+use quant_trim::coordinator::experiment::{
+    artifacts_dir, deploy_and_eval, train_with_validation, Task,
+};
+use quant_trim::coordinator::{Curriculum, TrainConfig};
+use quant_trim::data::ClsSpec;
+use quant_trim::metrics::dist_summary;
+use quant_trim::perfmodel::Precision;
+use quant_trim::runtime::Runtime;
+
+struct Config {
+    name: &'static str,
+    quant_trim: bool,
+    prune_fn: Option<&'static str>,
+}
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dump_weights = std::env::args().any(|a| a == "--weights");
+    let (epochs, steps, seeds) = if quick { (8, 10, 1) } else { (16, 16, 3) };
+    let dir = artifacts_dir()?;
+    let rt = Runtime::cpu()?;
+    let task = Task::Cls(ClsSpec::cifar10());
+
+    // Table 9 configurations
+    let configs = [
+        Config { name: "(1) FP32 baseline", quant_trim: false, prune_fn: None },
+        Config { name: "(2) QAT only", quant_trim: true, prune_fn: None },
+        Config { name: "(3) RP only (95%)", quant_trim: false, prune_fn: Some("reverse_prune_95") },
+        Config { name: "(4) QAT + 90% clip", quant_trim: true, prune_fn: Some("reverse_prune_90") },
+        Config { name: "(5) QAT + 99% clip", quant_trim: true, prune_fn: Some("reverse_prune_99") },
+    ];
+
+    println!("=== Ablation (Table 9): resnet18_c10, {epochs} epochs x {steps} steps, {seeds} seed(s) ===");
+    let mut rows = Vec::new();
+    for cfg in &configs {
+        let mut accs = Vec::new();
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        let mut final_state = None;
+        for seed in 0..seeds {
+            let cur = Curriculum::cifar().scaled_to(epochs, 100);
+            let tc = TrainConfig {
+                quant_trim: cfg.quant_trim,
+                reverse_prune_fn: cfg.prune_fn.map(|s| s.to_string()),
+                seed: 0xAB1A + seed as u64 * 7717,
+                ..TrainConfig::quant_trim(epochs, steps, cur)
+            };
+            let (tr, logs) =
+                train_with_validation(&rt, &dir, "resnet18_c10", tc, task, 2, false)?;
+            accs.push(logs.last().and_then(|l| l.val_metric).unwrap_or(0.0));
+            curves.push(logs.iter().map(|l| l.val_metric.unwrap_or(f64::NAN)).collect());
+            final_state = Some(tr.state);
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let sd = (accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+            / accs.len() as f64)
+            .sqrt();
+        println!("{:<22} val acc {:.3} ± {:.3}", cfg.name, mean, sd);
+        // Fig 8 series (seed 0 curve)
+        print!("[fig8] {:<22}", cfg.name);
+        for v in &curves[0] {
+            print!(" {v:.3}");
+        }
+        println!();
+        rows.push((cfg, mean, final_state.unwrap()));
+    }
+
+    // Fig 8 claim: all configurations converge to similar accuracy
+    let accs: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    let amax = accs.iter().cloned().fold(f64::MIN, f64::max);
+    let amin = accs.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "\nFig 8 shape: max-min val acc spread = {:.3} ({})",
+        amax - amin,
+        if amax - amin < 0.15 { "similar convergence REPRODUCED" } else { "spread too large" }
+    );
+
+    // Fig 9: weight distribution comparison across configs
+    println!("\n=== Fig 9 analogue: weight distribution per config ===");
+    println!(
+        "{:<22} {:>9} {:>9} {:>9} {:>11} {:>9}",
+        "config", "|w| p99", "|w| p99.9", "|w| max", "tail ratio", "kurtosis"
+    );
+    for (cfg, _, state) in &rows {
+        let mut all: Vec<f32> = Vec::new();
+        for (k, t) in &state.params {
+            if k.ends_with(".w") {
+                all.extend_from_slice(&t.data);
+            }
+        }
+        let d = dist_summary(&all);
+        println!(
+            "{:<22} {:>9.4} {:>9.4} {:>9.4} {:>11.2} {:>9.2}",
+            cfg.name, d.p99, d.p999, d.max, d.tail_ratio, d.kurtosis
+        );
+    }
+    if dump_weights {
+        println!("(per-layer summaries)");
+        for (cfg, _, state) in &rows {
+            for (k, t) in state.params.iter().filter(|(k, _)| k.ends_with(".w")).take(4) {
+                let d = dist_summary(&t.data);
+                println!("  {} {k}: p99={:.4} max={:.4}", cfg.name, d.p99, d.max);
+            }
+        }
+    }
+
+    // deployment MSE per config on hardware_b (Fig 9 caption: 95% sweet spot)
+    println!("\n=== deployment logit-MSE per config (hardware_b INT8) ===");
+    let be = backend_by_name("hardware_b").unwrap();
+    let graph = quant_trim::qir::Graph::load(dir.join("resnet18_c10.qir"))?;
+    let eval: Vec<_> = (0..4).map(|i| task.batch(64, 0xE0A1 + i)).collect();
+    let calib: Vec<_> = (0..4).map(|i| task.batch(16, 0xCA11B + i).images).collect();
+    for (cfg, _, state) in &rows {
+        let m = deploy_and_eval(
+            &be,
+            &graph,
+            state,
+            Precision::Int8,
+            RangeSource::Calibration,
+            PtqOptions::default(),
+            &calib,
+            &eval,
+        )?;
+        println!("{:<22} logitMSE {:.5}  top1 {:.2}", cfg.name, m.logit_mse, m.top1 * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Diagnostic: layerwise SNR of a backend's INT8 deployment vs the FP32
+//! reference, on the init or a freshly-trained checkpoint. Used during the
+//! perf/fidelity pass; kept as a troubleshooting tool.
+//!
+//!   cargo run --release --example debug_int8 -- [--train] [--qat]
+
+use std::collections::HashMap;
+
+use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::experiment::{artifacts_dir, train_with_validation, Task};
+use quant_trim::coordinator::{Curriculum, TrainConfig, TrainState};
+use quant_trim::data::{gen_cls_batch, ClsSpec};
+use quant_trim::perfmodel::Precision;
+use quant_trim::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let do_train = std::env::args().any(|a| a == "--train");
+    let qat = std::env::args().any(|a| a == "--qat");
+    let dir = artifacts_dir()?;
+    let task = ClsSpec::cifar10();
+
+    let state = if do_train {
+        let rt = Runtime::cpu()?;
+        let cur = Curriculum::cifar().scaled_to(8, 100);
+        let cfg = TrainConfig::quant_trim(8, 10, cur);
+        let (tr, _) =
+            train_with_validation(&rt, &dir, "resnet18_c10", cfg, Task::Cls(task), 0, false)?;
+        tr.state
+    } else {
+        TrainState::from_checkpoint(&Checkpoint::load(dir.join("resnet18_c10.init.qtckpt"))?)
+    };
+    let graph = quant_trim::qir::Graph::load(dir.join("resnet18_c10.qir"))?;
+    let calib: Vec<_> = (0..4).map(|i| gen_cls_batch(task, 16, 0xCA11B + i).images).collect();
+    let be = backend_by_name("hardware_d").unwrap();
+    let view = CheckpointView {
+        graph: &graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let src = if qat { RangeSource::QatScales } else { RangeSource::Calibration };
+    let dep = be.compile(view, Precision::Int8, src, &calib, PtqOptions::default())?;
+    let ref_folded = quant_trim::engine::CompiledModel {
+        graph: dep.model.graph.clone(),
+        params: dep.model.params.clone(),
+        bn: Default::default(),
+        qweights: Default::default(),
+        act_ranges: Default::default(),
+        cfg: quant_trim::engine::ExecConfig::FP32,
+    };
+    let b = gen_cls_batch(task, 16, 0xE0A1);
+    let mut reff: HashMap<String, Vec<f32>> = HashMap::new();
+    ref_folded.run_observe(&b.images, &mut |n: &str, t: &quant_trim::tensor::Tensor| {
+        reff.insert(n.to_string(), t.data.clone());
+    })?;
+    dep.model.run_observe(&b.images, &mut |n: &str, t: &quant_trim::tensor::Tensor| {
+        if let Some(r) = reff.get(n) {
+            let snr = quant_trim::metrics::snr_db(r, &t.data);
+            let range = dep.model.act_ranges.get(n);
+            let rmax = r.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            println!(
+                "{n:<16} snr {snr:>8.2} dB   |ref|max {rmax:>8.2}   range {:?}",
+                range.map(|r| (format!("{:.2}", r.0), format!("{:.2}", r.1)))
+            );
+        }
+    })?;
+    Ok(())
+}

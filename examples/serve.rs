@@ -1,0 +1,110 @@
+//! Serving demo: the batching inference server routing requests to a
+//! simulated NPU deployment (Rust integer engine on the request path —
+//! no Python, no JAX). Reports measured latency percentiles, batch sizes,
+//! and throughput under open-loop load.
+//!
+//!   cargo run --release --example serve -- [--requests 256] [--backend hardware_d]
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::experiment::artifacts_dir;
+use quant_trim::coordinator::server::{serve, BatchPolicy, EngineModel, Request};
+use quant_trim::coordinator::TrainState;
+use quant_trim::data::{gen_cls_batch, ClsSpec};
+use quant_trim::perfmodel::Precision;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> Result<()> {
+    let n_requests: usize = arg("--requests", "256").parse()?;
+    let backend = arg("--backend", "hardware_d");
+    let dir = artifacts_dir()?;
+
+    // deploy a checkpoint on the chosen backend (trained if available)
+    let ck_path = ["resnet18.trained_qt.qtckpt", "resnet18.init.qtckpt"]
+        .iter()
+        .map(|f| dir.join(f))
+        .find(|p| p.exists())
+        .unwrap();
+    println!("deploying {} on {backend} (INT8)...", ck_path.display());
+    let state = TrainState::from_checkpoint(&Checkpoint::load(&ck_path)?);
+    let graph = quant_trim::qir::Graph::load(dir.join("resnet18.qir"))?;
+    let be = backend_by_name(&backend).expect("unknown backend");
+    let task = ClsSpec::cifar100();
+    let calib: Vec<_> = (0..4).map(|i| gen_cls_batch(task, 16, 0xCA11B + i).images).collect();
+    let view = CheckpointView {
+        graph: &graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let dep = be.compile(view, Precision::Int8, RangeSource::QatScales, &calib, PtqOptions::default())?;
+    println!(
+        "modelled on-device: {:.0} FPS @ {:.1} W ({} host-fallback ops)",
+        dep.perf_b1.fps, dep.perf_b1.peak_power_w, dep.perf_b1.fallback_ops
+    );
+
+    // spin up the router + worker
+    let model = EngineModel { model: Arc::new(Mutex::new(dep.model)), batch: 16 };
+    let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(4) };
+    let (tx, handle) = serve(Box::new(model), policy);
+
+    // open-loop load: Poisson-ish arrivals
+    println!("sending {n_requests} requests...");
+    let data = gen_cls_batch(task, n_requests.min(256), 0x5E64E);
+    let sz = 3 * 32 * 32;
+    let mut replies = Vec::new();
+    let mut rng = quant_trim::testutil::Rng::new(0x10AD);
+    for i in 0..n_requests {
+        let (rtx, rrx) = mpsc::channel();
+        let j = i % data.labels.len();
+        let image = quant_trim::tensor::Tensor::new(
+            vec![3, 32, 32],
+            data.images.data[j * sz..(j + 1) * sz].to_vec(),
+        );
+        tx.send(Request { image, reply: rtx, submitted: Instant::now() }).unwrap();
+        replies.push((data.labels[j], rrx));
+        if rng.uniform() < 0.3 {
+            std::thread::sleep(Duration::from_micros(rng.below(3000) as u64));
+        }
+    }
+    drop(tx);
+
+    let mut correct = 0usize;
+    let mut batch_hist = std::collections::BTreeMap::new();
+    for (label, rrx) in replies {
+        let resp = rrx.recv()?;
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == label as usize {
+            correct += 1;
+        }
+        *batch_hist.entry(resp.batch_size).or_insert(0usize) += 1;
+    }
+    let stats = handle.join().unwrap();
+    println!("\n=== serving stats (request path: Rust int8 engine only) ===");
+    println!("served          {}", stats.served);
+    println!("batches         {} (mean batch {:.2})", stats.batches, stats.mean_batch);
+    println!("latency p50/p95 {:.2} / {:.2} ms", stats.p50_ms, stats.p95_ms);
+    println!("throughput      {:.1} req/s", stats.throughput_rps);
+    println!("on-device top-1 {:.2}%", correct as f64 / n_requests as f64 * 100.0);
+    println!("batch-size histogram: {batch_hist:?}");
+    Ok(())
+}

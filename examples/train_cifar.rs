@@ -1,0 +1,153 @@
+//! End-to-end driver (DESIGN.md §5): trains a model with the full Quant-Trim
+//! curriculum **through the Rust coordinator executing AOT HLO train steps**
+//! (Python never runs), logs the training-dynamics curve (paper Figs 4/5/10),
+//! optionally dumps the weight distribution shift (Fig 2), then deploys
+//! QT-vs-MAP on INT backends and prints the Table 1/2-style rows.
+//!
+//!   cargo run --release --example train_cifar -- \
+//!       --model resnet18 --epochs 20 --steps 20 [--task seg] [--fig2]
+
+use anyhow::Result;
+
+use quant_trim::backends::{backend_by_name, PtqOptions, RangeSource};
+use quant_trim::coordinator::experiment::{
+    artifacts_dir, deploy_and_eval, reference_metrics, train_with_validation, Task,
+};
+use quant_trim::coordinator::{Curriculum, TrainConfig};
+use quant_trim::data::{ClsSpec, SegSpec};
+use quant_trim::metrics::dist_summary;
+use quant_trim::perfmodel::Precision;
+use quant_trim::runtime::Runtime;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+fn main() -> Result<()> {
+    let model = arg("--model", "resnet18");
+    let epochs: usize = arg("--epochs", "20").parse()?;
+    let steps: usize = arg("--steps", "20").parse()?;
+    let task_name = arg("--task", "cls");
+    let dir = artifacts_dir()?;
+    let rt = Runtime::cpu()?;
+
+    let (task, base_cur) = if task_name == "seg" {
+        (Task::Seg(SegSpec::coco_like()), Curriculum::seg())
+    } else if model == "vit" {
+        (Task::Cls(ClsSpec { classes: 100, image: 32, outlier_p: 0.002 }), Curriculum::transformer())
+    } else {
+        let classes = if model.ends_with("c10") { 10 } else { 100 };
+        (Task::Cls(ClsSpec { classes, image: 32, outlier_p: 0.002 }), Curriculum::cifar())
+    };
+    // compress the paper's 100-epoch curriculum to this run's budget
+    let cur = base_cur.scaled_to(epochs, 100);
+
+    println!("=== Quant-Trim training: {model} ({epochs} epochs x {steps} steps) ===");
+    println!("curriculum: E_w={} E_f={} H={} p_clip={}", cur.e_w, cur.e_f, cur.horizon, cur.p_clip);
+
+    let fig2_probe = |state: &quant_trim::coordinator::TrainState, label: &str| {
+        let mut all: Vec<f32> = Vec::new();
+        for (k, t) in &state.params {
+            if k.ends_with(".w") {
+                all.extend_from_slice(&t.data);
+            }
+        }
+        let d = dist_summary(&all);
+        println!(
+            "[fig2] {label}: |w| p50={:.4} p99={:.4} p99.9={:.4} max={:.4} tail_ratio={:.2} kurtosis={:.2}",
+            d.p50, d.p99, d.p999, d.max, d.tail_ratio, d.kurtosis
+        );
+    };
+
+    // ---- Quant-Trim run (Figs 4/5: expect a dip at the ramp, then recovery)
+    let cfg_qt = TrainConfig { base_lr: 3e-4, ..TrainConfig::quant_trim(epochs, steps, cur) };
+    let (tr_qt, logs_qt) = train_with_validation(&rt, &dir, &model, cfg_qt, task, 4, true)?;
+    if flag("--fig2") {
+        fig2_probe(&tr_qt.state, "after quant-trim");
+    }
+
+    // ---- MAP baseline
+    println!("--- MAP baseline ---");
+    let cfg_map = TrainConfig { base_lr: 3e-4, ..TrainConfig::map_baseline(epochs, steps, cur) };
+    let (tr_map, logs_map) = train_with_validation(&rt, &dir, &model, cfg_map, task, 4, true)?;
+    if flag("--fig2") {
+        fig2_probe(&tr_map.state, "after MAP");
+    }
+
+    // training-dynamics series (Fig 4/5/10 data)
+    println!("\n[curve] epoch lambda qt_loss qt_val map_loss map_val");
+    for (a, b) in logs_qt.iter().zip(logs_map.iter()) {
+        println!(
+            "[curve] {:>3} {:.3} {:.4} {:.3} {:.4} {:.3}",
+            a.epoch,
+            a.lam,
+            a.loss,
+            a.val_metric.unwrap_or(f64::NAN),
+            b.loss,
+            b.val_metric.unwrap_or(f64::NAN),
+        );
+    }
+
+    if task_name == "seg" {
+        println!("(segmentation run: deployment tables use classification models)");
+        return Ok(());
+    }
+
+    // ---- deploy QT vs MAP on INT backends (Tables 1/2 shape)
+    let graph = quant_trim::qir::Graph::load(dir.join(format!("{model}.qir")))?;
+    let eval: Vec<_> = (0..8).map(|i| task.batch(64, 0x5EED_0000 + i)).collect();
+    let calib: Vec<_> = (0..4).map(|i| task.batch(16, 0xCA11B_00 + i).images).collect();
+
+    for (bname, prec) in [("hardware_b", Precision::Bf16), ("hardware_d", Precision::Int8)] {
+        let be = backend_by_name(bname).unwrap();
+        println!("\n=== {} ({}) — Table 1/2 analogue ===", bname, prec.label());
+        println!(
+            "{:<12} {:>14} {:>14} {:>9} {:>17} {:>17}",
+            "method", "Top-1 (FP32)", "Top-5 (FP32)", "MSE", "Brier (FP32)", "ECE (FP32)"
+        );
+        for (label, state, src) in [
+            ("Quant-Trim", &tr_qt.state, RangeSource::QatScales),
+            ("MAP", &tr_map.state, RangeSource::Calibration),
+        ] {
+            let m = deploy_and_eval(
+                &be,
+                &graph,
+                state,
+                prec,
+                src,
+                PtqOptions::default(),
+                &calib,
+                &eval,
+            )?;
+            let (rt1, rt5, rb, re) = reference_metrics(&graph, state, &eval)?;
+            println!(
+                "{:<12} {:>6.2} ({:>5.2}) {:>6.2} ({:>5.2}) {:>9.5} {:>8.5} ({:.5}) {:>8.5} ({:.5})",
+                label,
+                m.top1 * 100.0,
+                rt1 * 100.0,
+                m.top5 * 100.0,
+                rt5 * 100.0,
+                m.logit_mse,
+                m.brier,
+                rb,
+                m.ece,
+                re
+            );
+        }
+    }
+    // persist checkpoints for downstream examples (deploy_matrix etc.)
+    let out_qt = dir.join(format!("{model}.trained_qt.qtckpt"));
+    let out_map = dir.join(format!("{model}.trained_map.qtckpt"));
+    tr_qt.state.to_checkpoint().save(&out_qt)?;
+    tr_map.state.to_checkpoint().save(&out_map)?;
+    println!("\nsaved {} and {}", out_qt.display(), out_map.display());
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time Python package: Layer-2 JAX model/training graphs and Layer-1
+Pallas kernels, AOT-lowered to HLO text artifacts consumed by the Rust
+coordinator. Never imported at runtime."""

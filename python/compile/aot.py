@@ -1,0 +1,303 @@
+"""AOT export: lower every training/eval/device graph to HLO text + emit the
+QIR graph, initial checkpoint, and manifest that the Rust coordinator loads.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ckpt, ir, train
+from .manifest import Manifest
+from .models import BUILDERS
+from .schedule import CIFAR, SEG, TRANSFORMER
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), tree)
+
+
+def _record(man, fn, role_trees_in, role_trees_out):
+    """Record arg/ret order. role_trees: list of (role, tree) where tree is a
+    dict (sorted-key order) or a bare array."""
+    idx = 0
+    for role, tree in role_trees_in:
+        if isinstance(tree, dict):
+            for k in sorted(tree):
+                man.arg(fn, idx, role, k, np.shape(tree[k]),
+                        "i32" if np.asarray(tree[k]).dtype == np.int32 else "f32")
+                idx += 1
+        else:
+            man.arg(fn, idx, role, role, np.shape(tree),
+                    "i32" if np.asarray(tree).dtype == np.int32 else "f32")
+            idx += 1
+    idx = 0
+    for role, tree in role_trees_out:
+        if isinstance(tree, dict):
+            for k in sorted(tree):
+                man.ret(fn, idx, role, k, np.shape(tree[k]))
+                idx += 1
+        else:
+            man.ret(fn, idx, role, role, np.shape(tree))
+            idx += 1
+
+
+# model -> (task, train_batch, eval_batch, curriculum)
+CONFIGS = {
+    "resnet18": ("cls", 32, 64, CIFAR),
+    "resnet18_c10": ("cls", 32, 64, CIFAR),
+    "resnet50": ("cls", 32, 64, CIFAR),
+    "vit": ("cls", 32, 64, TRANSFORMER),
+    "mobilenetv3": ("cls", 32, 64, CIFAR),
+    "unet": ("seg", 8, 8, SEG),
+    "sam_student": ("distill", 8, 8, SEG),
+}
+
+
+def export_model(name, out_dir, quiet=False):
+    task, bt, be, cur = CONFIGS[name]
+    graph = BUILDERS[name]()
+    man = Manifest(name)
+
+    def log(msg):
+        if not quiet:
+            print(f"[aot] {name}: {msg}", flush=True)
+
+    # --- static artifacts: QIR graph + init checkpoint
+    qir_path = f"{name}.qir"
+    with open(os.path.join(out_dir, qir_path), "w") as f:
+        f.write(graph.to_text())
+    man.file("qir", qir_path)
+
+    params = train.init_params(graph, seed=0)
+    bnst = train.init_bn_state(graph)
+    qstate = train.init_qstate(graph, params, p_clip=cur.p_clip)
+    m, v = train.init_opt(params)
+    ck_path = f"{name}.init.qtckpt"
+    merged = {}
+    merged.update({f"param/{k}": x for k, x in params.items()})
+    merged.update({f"bn/{k}": x for k, x in bnst.items()})
+    merged.update({f"qstate/{k}": x for k, x in qstate.items()})
+    ckpt.save(os.path.join(out_dir, ck_path), merged)
+    man.file("ckpt", ck_path)
+    log(f"{len(params)} param tensors, "
+        f"{sum(int(np.prod(np.shape(p))) for p in params.values())} params")
+
+    img = graph.node("image").out_shape  # (C, H, W)
+    step0 = jnp.float32(0.0)
+    lam0 = jnp.float32(0.0)
+    lr0 = jnp.float32(3e-4)
+
+    def dump(fn_name, fn, example_args, roles_in, roles_out):
+        lowered = jax.jit(fn).lower(*_sds(example_args))
+        path = f"{name}.{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        man.artifact(fn_name, path)
+        _record(man, fn_name, roles_in, roles_out)
+        log(f"exported {fn_name}")
+
+    if task in ("cls", "seg"):
+        x_t = np.zeros((bt,) + img, np.float32)
+        if task == "cls":
+            y_t = np.zeros((bt,), np.int32)
+        else:
+            y_t = np.zeros((bt,) + img[1:], np.int32)
+
+        roles_out = [("param", params), ("bn", bnst), ("qstate", qstate),
+                     ("opt_m", m), ("opt_v", v), ("step", step0),
+                     ("loss", step0), ("metric", step0)]
+        step_fn = train.make_train_step(graph, task=task, fq_enabled=True, mu=cur.mu)
+        dump("train_step", step_fn,
+             (params, bnst, qstate, m, v, step0, x_t, y_t, lam0, lr0),
+             [("param", params), ("bn", bnst), ("qstate", qstate),
+              ("opt_m", m), ("opt_v", v), ("step", step0),
+              ("data", x_t), ("label", y_t), ("lam", lam0), ("lr", lr0)],
+             roles_out)
+        # the FP32/MAP step never reads lam — exclude it from the interface,
+        # or jax's lowering DCEs the parameter and the positional contract
+        # with the Rust marshaller breaks
+        fp32_fn = train.make_train_step(graph, task=task, fq_enabled=False, mu=cur.mu)
+
+        def fp32_step(params, bnst, qstate, m, v, step, x, y, lr):
+            import jax.numpy as _jnp
+            return fp32_fn(params, bnst, qstate, m, v, step, x, y, _jnp.float32(0.0), lr)
+
+        dump("train_step_fp32", fp32_step,
+             (params, bnst, qstate, m, v, step0, x_t, y_t, lr0),
+             [("param", params), ("bn", bnst), ("qstate", qstate),
+              ("opt_m", m), ("opt_v", v), ("step", step0),
+              ("data", x_t), ("label", y_t), ("lr", lr0)],
+             roles_out)
+
+        x_e = np.zeros((be,) + img, np.float32)
+        fwd = train.make_forward(graph)
+        out_shape = (be,) + graph.node(graph.output).out_shape
+        dump("forward", fwd, (params, bnst, x_e),
+             [("param", params), ("bn", bnst), ("data", x_e)],
+             [("out", np.zeros(out_shape, np.float32))])
+
+        x_1 = np.zeros((1,) + img, np.float32)
+        dump("forward_b1", fwd, (params, bnst, x_1),
+             [("param", params), ("bn", bnst), ("data", x_1)],
+             [("out", np.zeros((1,) + graph.node(graph.output).out_shape, np.float32))])
+
+        dev = train.make_device_forward(graph)
+        # exclude .tau from the device-forward interface: the function never
+        # reads it, so jax's lowering DCEs those parameters and the positional
+        # interface would no longer match the manifest
+        qs_dev = {k: v for k, v in qstate.items() if not k.endswith(".tau")}
+        dump("device_forward", dev, (params, bnst, qs_dev, x_e),
+             [("param", params), ("bn", bnst), ("qstate", qs_dev), ("data", x_e)],
+             [("out", np.zeros(out_shape, np.float32))])
+
+    elif task == "distill":
+        teacher = BUILDERS["sam_teacher"]()
+        tparams = train.init_params(teacher, seed=7)
+        tbnst = train.init_bn_state(teacher)
+        tck = {f"param/{k}": x for k, x in tparams.items()}
+        tck.update({f"bn/{k}": x for k, x in tbnst.items()})
+        ckpt.save(os.path.join(out_dir, "sam_teacher.init.qtckpt"), tck)
+        with open(os.path.join(out_dir, "sam_teacher.qir"), "w") as f:
+            f.write(teacher.to_text())
+        man.file("teacher_ckpt", "sam_teacher.init.qtckpt")
+        man.file("teacher_qir", "sam_teacher.qir")
+
+        x_t = np.zeros((bt,) + img, np.float32)
+        dstep = train.make_distill_step(graph, teacher, mu=cur.mu)
+        args = (params, bnst, qstate, m, v, step0, tparams, tbnst, x_t, lam0, lr0)
+        roles_in = [("param", params), ("bn", bnst), ("qstate", qstate),
+                    ("opt_m", m), ("opt_v", v), ("step", step0),
+                    ("tparam", tparams), ("tbn", tbnst),
+                    ("data", x_t), ("lam", lam0), ("lr", lr0)]
+        roles_out = [("param", params), ("bn", bnst), ("qstate", qstate),
+                     ("opt_m", m), ("opt_v", v), ("step", step0),
+                     ("loss", step0), ("metric", step0)]
+        dump("distill_step", dstep, args, roles_in, roles_out)
+
+        # student forward (3 FPN scales) for feature-fidelity checks
+        fwd = train.make_forward(graph)
+        x_e = np.zeros((be,) + img, np.float32)
+        outs = {f"feat{i}": np.zeros((be,) + graph.node(o).out_shape, np.float32)
+                for i, o in enumerate(graph.output_names)}
+        dump("forward", fwd, (params, bnst, x_e),
+             [("param", params), ("bn", bnst), ("data", x_e)],
+             [("out", outs)])
+
+    # --- reverse pruning (per-curriculum p_clip; ablation model gets a sweep)
+    taus = {k: qstate[k] for k in qstate if k.endswith(".tau")}
+    pclips = (0.90, 0.95, 0.99) if name == "resnet18_c10" else (cur.p_clip,)
+    for pc in pclips:
+        rp = train.make_reverse_prune(graph, p_clip=pc, beta=cur.beta)
+        fn_name = f"reverse_prune_{int(round(pc * 100))}"
+        dump(fn_name, rp, (params, taus),
+             [("param", params), ("tau", taus)],
+             [("param", params), ("tau", taus)])
+
+    man.save(os.path.join(out_dir, f"{name}.manifest"))
+    log("manifest written")
+
+
+def export_kernel_artifacts(out_dir, quiet=False):
+    """Standalone L1 kernel HLOs for Rust-side kernel benches/cross-checks."""
+    from .kernels import fake_quant as fq
+    from .kernels import qmatmul as qmm
+    from .kernels import ref
+
+    man = Manifest("kernels")
+
+    def qmatmul_fp(x, w):
+        sx = jnp.float32(0.05)
+        zx = jnp.float32(128.0)
+        sw = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6) / 127.0
+        wq = ref.quantize_sym(w, sw).astype(jnp.int8)
+        return qmm.qmatmul(x, wq, sx, zx, sw)
+
+    x = np.zeros((256, 256), np.float32)
+    w = np.zeros((256, 256), np.float32)
+    lowered = jax.jit(qmatmul_fp).lower(*_sds((x, w)))
+    with open(os.path.join(out_dir, "kernel_qmatmul.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    man.artifact("qmatmul", "kernel_qmatmul.hlo.txt")
+    man.arg("qmatmul", 0, "data", "x", (256, 256))
+    man.arg("qmatmul", 1, "data", "w", (256, 256))
+    man.ret("qmatmul", 0, "out", "out", (256, 256))
+
+    def fq_fp(x):
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / 127.0
+        return fq.fake_quant_sym(x, s)
+
+    xa = np.zeros((64, 4096), np.float32)
+    lowered = jax.jit(fq_fp).lower(*_sds((xa,)))
+    with open(os.path.join(out_dir, "kernel_fake_quant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    man.artifact("fake_quant", "kernel_fake_quant.hlo.txt")
+    man.arg("fake_quant", 0, "data", "x", (64, 4096))
+    man.ret("fake_quant", 0, "out", "out", (64, 4096))
+
+    man.save(os.path.join(out_dir, "kernels.manifest"))
+    if not quiet:
+        print("[aot] kernel artifacts written", flush=True)
+
+
+def export_paper_scale_graphs(out_dir, quiet=False):
+    """QIR-only exports at the paper's full input sizes (224^2 / 512^2) for
+    the roofline perf model (Figs 3, 7, 11; Table 10). No training artifacts —
+    the perf model needs only MAC/byte counts, so these cost nothing to emit
+    and keep the latency/power *shape* reproduction at the paper's scale."""
+    from .models.mobilenet import mobilenetv3_slim
+    from .models.resnet import resnet50_slim, resnet_backbone_fpn
+    from .models.unet import unet_slim
+    from .models.vit import vit_dinov2_slim
+
+    graphs = [
+        resnet50_slim(num_classes=1000, base=64, image=224, name="resnet50_paper"),
+        vit_dinov2_slim(num_classes=1000, dim=384, depth=12, heads=6, mlp=1536,
+                        patch=16, image=224, name="vit_paper"),
+        mobilenetv3_slim(num_classes=1000, image=224, name="mobilenetv3_paper"),
+        unet_slim(num_classes=8, base=32, image=224, name="unet_paper"),
+        resnet_backbone_fpn("sam_paper", base=64, image=512, fpn_dim=64),
+    ]
+    for g in graphs:
+        with open(os.path.join(out_dir, f"{g.name}.qir"), "w") as f:
+            f.write(g.to_text())
+        if not quiet:
+            print(f"[aot] paper-scale graph {g.name}.qir", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(CONFIGS))
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    export_kernel_artifacts(args.out_dir, args.quiet)
+    export_paper_scale_graphs(args.out_dir, args.quiet)
+    for name in args.models.split(","):
+        export_model(name, args.out_dir, args.quiet)
+    # stamp for make's up-to-date check
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""`.qtckpt` binary checkpoint format, shared with rust/src/ckpt/.
+
+Layout (little-endian):
+    magic   b"QTCK"
+    u32     version (1)
+    u32     record count
+  per record:
+    u16     name length, then name bytes (utf-8)
+    u8      dtype (0 = f32)
+    u8      ndim
+    u32*n   dims
+    raw     f32 data, C-contiguous
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"QTCK"
+VERSION = 1
+
+
+def save(path, tensors):
+    """tensors: dict name -> np.ndarray (float32). Written in sorted key order
+    (the same order the HLO interface uses)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.asarray(tensors[name], dtype=np.float32)
+            if arr.ndim and not arr.flags.c_contiguous:
+                # NB: np.ascontiguousarray would promote 0-d arrays to 1-d,
+                # breaking the scalar contract with the Rust reader
+                arr = np.ascontiguousarray(arr)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load(path):
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "bad magic"
+    version, count = struct.unpack_from("<II", data, 4)
+    assert version == VERSION
+    off = 12
+    out = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode()
+        off += nlen
+        dtype, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off) if ndim else ()
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype=np.float32, count=n, offset=off).reshape(dims)
+        off += 4 * n
+        out[name] = arr.copy()
+    return out

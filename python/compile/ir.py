@@ -1,0 +1,250 @@
+"""Model graph IR shared by the JAX interpreter (L2) and the Rust engine (L3).
+
+A model is a topologically-ordered list of Nodes. The same Graph object is
+
+  * interpreted by compile/jax_exec.py to build the training / eval / device
+    forwards that aot.py lowers to HLO text, and
+  * serialized to `.qir` text that the Rust deployment simulator parses
+    (rust/src/qir/). Single source of truth — no drift between what we train
+    and what the simulated vendor compilers consume.
+
+Shapes exclude the batch dimension. Layout is NCHW / (tokens, dim).
+
+Node kinds (attrs in brackets):
+  input[shape]                       graph input
+  conv2d[cin,cout,kh,kw,stride,pad,groups,bias]   params: .w (O,I/g,kh,kw), .b
+  bn[c]                              params: .gamma,.beta  state: .mean,.var
+  relu / relu6 / hswish / hsigmoid / gelu / silu / sigmoid
+  add / mul                          two inputs (mul broadcasts (C,1,1) scale)
+  maxpool[k,stride,pad] / avgpool[k,stride,pad] / gap
+  upsample2x                         nearest-neighbour
+  concat                             channel concat, two inputs
+  flatten                            (C,H,W) -> (C*H*W,)
+  reshape[shape]
+  linear[din,dout,bias]              params: .w (out,in), .b
+  layernorm[d]                       params: .gamma,.beta   input (T,D)
+  attention[d,heads]                 params: .wq/.wk/.wv/.wo (+ .bq/.bk/.bv/.bo)
+                                     softmax scores stay FP (paper Table 8)
+  aq                                 activation quant point
+                                     qstate: .lo,.hi  (asymmetric per-tensor)
+Weight-bearing nodes (conv2d, linear, attention) additionally own qstate:
+  .m    per-output-channel |w| quantile EMA (attention: per-matrix scalars)
+  .tau  reverse-pruning threshold EMA (per-tensor)
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Node:
+    kind: str
+    name: str
+    inputs: list
+    attrs: dict = field(default_factory=dict)
+    out_shape: tuple = ()
+
+
+class Graph:
+    """Builder + container. Node names are unique and double as param prefixes."""
+
+    def __init__(self, name):
+        self.name = name
+        self.nodes = []
+        self._by_name = {}
+        self.outputs = None  # list of node names; defaults to [last node]
+
+    def add(self, kind, name, inputs, out_shape, **attrs):
+        if name in self._by_name:
+            raise ValueError(f"duplicate node name {name!r}")
+        node = Node(kind, name, list(inputs), attrs, tuple(out_shape))
+        self.nodes.append(node)
+        self._by_name[name] = node
+        return name
+
+    def node(self, name):
+        return self._by_name[name]
+
+    @property
+    def output(self):
+        return self.nodes[-1].name
+
+    @property
+    def output_names(self):
+        return self.outputs if self.outputs is not None else [self.output]
+
+    # ---- builder helpers (shape inference inline) ----
+
+    def input(self, name, shape):
+        return self.add("input", name, [], shape)
+
+    def conv2d(self, name, x, cout, k, stride=1, pad=None, groups=1, bias=True):
+        cin, h, w = self.node(x).out_shape
+        if pad is None:
+            pad = k // 2
+        ho = (h + 2 * pad - k) // stride + 1
+        wo = (w + 2 * pad - k) // stride + 1
+        return self.add("conv2d", name, [x], (cout, ho, wo), cin=cin, cout=cout,
+                        kh=k, kw=k, stride=stride, pad=pad, groups=groups,
+                        bias=int(bias))
+
+    def bn(self, name, x):
+        c = self.node(x).out_shape[0]
+        return self.add("bn", name, [x], self.node(x).out_shape, c=c)
+
+    def act(self, kind, name, x):
+        return self.add(kind, name, [x], self.node(x).out_shape)
+
+    def aq(self, name, x):
+        return self.add("aq", name, [x], self.node(x).out_shape)
+
+    def add2(self, name, a, b):
+        return self.add("add", name, [a, b], self.node(a).out_shape)
+
+    def mul2(self, name, a, b):
+        return self.add("mul", name, [a, b], self.node(a).out_shape)
+
+    def maxpool(self, name, x, k, stride, pad=0):
+        c, h, w = self.node(x).out_shape
+        ho = (h + 2 * pad - k) // stride + 1
+        wo = (w + 2 * pad - k) // stride + 1
+        return self.add("maxpool", name, [x], (c, ho, wo), k=k, stride=stride, pad=pad)
+
+    def avgpool(self, name, x, k, stride, pad=0):
+        c, h, w = self.node(x).out_shape
+        ho = (h + 2 * pad - k) // stride + 1
+        wo = (w + 2 * pad - k) // stride + 1
+        return self.add("avgpool", name, [x], (c, ho, wo), k=k, stride=stride, pad=pad)
+
+    def gap(self, name, x):
+        c = self.node(x).out_shape[0]
+        return self.add("gap", name, [x], (c, 1, 1))
+
+    def upsample2x(self, name, x):
+        c, h, w = self.node(x).out_shape
+        return self.add("upsample2x", name, [x], (c, 2 * h, 2 * w))
+
+    def concat(self, name, a, b):
+        ca, h, w = self.node(a).out_shape
+        cb, _, _ = self.node(b).out_shape
+        return self.add("concat", name, [a, b], (ca + cb, h, w))
+
+    def flatten(self, name, x):
+        shp = self.node(x).out_shape
+        n = 1
+        for d in shp:
+            n *= d
+        return self.add("flatten", name, [x], (n,))
+
+    def reshape(self, name, x, shape):
+        return self.add("reshape", name, [x], shape, shape=tuple(shape))
+
+    def linear(self, name, x, dout, bias=True):
+        shp = self.node(x).out_shape
+        din = shp[-1]
+        return self.add("linear", name, [x], shp[:-1] + (dout,), din=din,
+                        dout=dout, bias=int(bias))
+
+    def layernorm(self, name, x):
+        shp = self.node(x).out_shape
+        return self.add("layernorm", name, [x], shp, d=shp[-1])
+
+    def attention(self, name, x, heads):
+        t, d = self.node(x).out_shape
+        return self.add("attention", name, [x], (t, d), d=d, heads=heads)
+
+    def to_tokens(self, name, x):
+        """(C, H, W) -> (H*W, C) token layout for transformer blocks."""
+        c, h, w = self.node(x).out_shape
+        return self.add("to_tokens", name, [x], (h * w, c))
+
+    def tokmean(self, name, x):
+        """(T, D) -> (D,) mean pooling over tokens."""
+        t, d = self.node(x).out_shape
+        return self.add("tokmean", name, [x], (d,))
+
+    # ---- serialization ----
+
+    def to_text(self):
+        """Serialize to .qir text: one node per line.
+
+        node <kind> <name> inputs=a,b shape=c,h,w key=val ...
+        """
+        lines = [f"qir {self.name} v1",
+                 "outputs " + ",".join(self.output_names)]
+        for n in self.nodes:
+            parts = [f"node {n.kind} {n.name}"]
+            parts.append("inputs=" + (",".join(n.inputs) if n.inputs else "-"))
+            parts.append("shape=" + ",".join(str(d) for d in n.out_shape))
+            for k in sorted(n.attrs):
+                if n.kind == "reshape" and k == "shape":
+                    continue  # redundant with out_shape; would collide with
+                    # the node-level shape= field in the text format
+                v = n.attrs[k]
+                if isinstance(v, (tuple, list)):
+                    v = "x".join(str(i) for i in v)
+                parts.append(f"{k}={v}")
+            lines.append(" ".join(parts))
+        return "\n".join(lines) + "\n"
+
+
+WEIGHT_KINDS = ("conv2d", "linear", "attention")
+
+
+def param_specs(graph):
+    """Ordered (name, shape, kind) for every parameter tensor in the graph."""
+    specs = []
+    for n in graph.nodes:
+        if n.kind == "conv2d":
+            a = n.attrs
+            specs.append((f"{n.name}.w", (a["cout"], a["cin"] // a["groups"], a["kh"], a["kw"]), "conv_w"))
+            if a["bias"]:
+                specs.append((f"{n.name}.b", (a["cout"],), "bias"))
+        elif n.kind == "linear":
+            a = n.attrs
+            specs.append((f"{n.name}.w", (a["dout"], a["din"]), "linear_w"))
+            if a["bias"]:
+                specs.append((f"{n.name}.b", (a["dout"],), "bias"))
+        elif n.kind == "attention":
+            d = n.attrs["d"]
+            for p in ("wq", "wk", "wv", "wo"):
+                specs.append((f"{n.name}.{p}", (d, d), "linear_w"))
+                specs.append((f"{n.name}.{p[1]}b", (d,), "bias"))
+        elif n.kind == "bn":
+            c = n.attrs["c"]
+            specs.append((f"{n.name}.gamma", (c,), "bn"))
+            specs.append((f"{n.name}.beta", (c,), "bn"))
+        elif n.kind == "layernorm":
+            d = n.attrs["d"]
+            specs.append((f"{n.name}.gamma", (d,), "ln"))
+            specs.append((f"{n.name}.beta", (d,), "ln"))
+    return specs
+
+
+def bn_state_specs(graph):
+    specs = []
+    for n in graph.nodes:
+        if n.kind == "bn":
+            c = n.attrs["c"]
+            specs.append((f"{n.name}.mean", (c,)))
+            specs.append((f"{n.name}.var", (c,)))
+    return specs
+
+
+def qstate_specs(graph):
+    """Ordered (name, shape) for quantization statistics state."""
+    specs = []
+    for n in graph.nodes:
+        if n.kind == "conv2d":
+            specs.append((f"{n.name}.m", (n.attrs["cout"],)))
+            specs.append((f"{n.name}.tau", ()))
+        elif n.kind == "linear":
+            specs.append((f"{n.name}.m", (n.attrs["dout"],)))
+            specs.append((f"{n.name}.tau", ()))
+        elif n.kind == "attention":
+            for p in ("wq", "wk", "wv", "wo"):
+                specs.append((f"{n.name}.{p}.m", ()))
+            specs.append((f"{n.name}.tau", ()))
+        elif n.kind == "aq":
+            specs.append((f"{n.name}.lo", ()))
+            specs.append((f"{n.name}.hi", ()))
+    return specs

@@ -1,0 +1,151 @@
+"""JAX interpreter over the model IR (compile/ir.py).
+
+One interpreter serves three roles, selected by QuantCtx.mode:
+  train  — batch-stat BN (running stats EMA'd), progressive fake quant
+  fp32   — running-stat BN, no quantization (the "ONNX FP32 reference")
+  device — running-stat BN, full fake quant with frozen scales via the
+           Pallas kernels: the static-INT8 "on-device" forward
+
+Inputs are NCHW float32. Params / state / qstate are flat dicts keyed by
+node-name-derived keys (see ir.param_specs etc.).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+BN_EPS = 1e-5
+BN_MOM = 0.1  # running-stat EMA momentum (torch convention)
+
+
+def _conv(x, w, stride, pad, groups):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _pool(x, k, stride, pad, kind):
+    if kind == "max":
+        init, op = -jnp.inf, lax.max
+    else:
+        init, op = 0.0, lax.add
+    out = lax.reduce_window(
+        x, init, op, (1, 1, k, k), (1, 1, stride, stride),
+        [(0, 0), (0, 0), (pad, pad), (pad, pad)],
+    )
+    if kind == "avg":
+        out = out / float(k * k)
+    return out
+
+
+def apply_graph(graph, params, bn_state, x, ctx, train=False):
+    """Run the graph. Returns (output, new_bn_state)."""
+    vals = {}
+    new_bn = dict(bn_state)
+    for n in graph.nodes:
+        k = n.kind
+        if k == "input":
+            vals[n.name] = x
+            continue
+        a = [vals[i] for i in n.inputs]
+        v = None
+        if k == "conv2d":
+            w = ctx.weight(n.name, params[f"{n.name}.w"])
+            v = _conv(a[0], w, n.attrs["stride"], n.attrs["pad"], n.attrs["groups"])
+            if n.attrs["bias"]:
+                v = v + params[f"{n.name}.b"].reshape(1, -1, 1, 1)
+        elif k == "bn":
+            g = params[f"{n.name}.gamma"].reshape(1, -1, 1, 1)
+            b = params[f"{n.name}.beta"].reshape(1, -1, 1, 1)
+            if train:
+                mean = jnp.mean(a[0], axis=(0, 2, 3))
+                var = jnp.var(a[0], axis=(0, 2, 3))
+                new_bn[f"{n.name}.mean"] = (1 - BN_MOM) * bn_state[f"{n.name}.mean"] + BN_MOM * mean
+                new_bn[f"{n.name}.var"] = (1 - BN_MOM) * bn_state[f"{n.name}.var"] + BN_MOM * var
+            else:
+                mean = bn_state[f"{n.name}.mean"]
+                var = bn_state[f"{n.name}.var"]
+            inv = lax.rsqrt(var + BN_EPS).reshape(1, -1, 1, 1)
+            v = (a[0] - mean.reshape(1, -1, 1, 1)) * inv * g + b
+        elif k == "relu":
+            v = jnp.maximum(a[0], 0.0)
+        elif k == "relu6":
+            v = jnp.clip(a[0], 0.0, 6.0)
+        elif k == "hswish":
+            v = a[0] * jnp.clip(a[0] + 3.0, 0.0, 6.0) / 6.0
+        elif k == "hsigmoid":
+            v = jnp.clip(a[0] + 3.0, 0.0, 6.0) / 6.0
+        elif k == "gelu":
+            # tanh approximation — matches the Rust engine implementation
+            c = math.sqrt(2.0 / math.pi)
+            v = 0.5 * a[0] * (1.0 + jnp.tanh(c * (a[0] + 0.044715 * a[0] ** 3)))
+        elif k == "silu":
+            v = a[0] * jax.nn.sigmoid(a[0])
+        elif k == "sigmoid":
+            v = jax.nn.sigmoid(a[0])
+        elif k == "add":
+            v = a[0] + a[1]
+        elif k == "mul":
+            v = a[0] * a[1]
+        elif k == "maxpool":
+            v = _pool(a[0], n.attrs["k"], n.attrs["stride"], n.attrs["pad"], "max")
+        elif k == "avgpool":
+            v = _pool(a[0], n.attrs["k"], n.attrs["stride"], n.attrs["pad"], "avg")
+        elif k == "gap":
+            v = jnp.mean(a[0], axis=(2, 3), keepdims=True)
+        elif k == "upsample2x":
+            v = jnp.repeat(jnp.repeat(a[0], 2, axis=2), 2, axis=3)
+        elif k == "concat":
+            v = jnp.concatenate(a, axis=1)
+        elif k == "flatten":
+            v = a[0].reshape(a[0].shape[0], -1)
+        elif k == "reshape":
+            v = a[0].reshape((a[0].shape[0],) + tuple(n.attrs["shape"]))
+        elif k == "linear":
+            w = ctx.weight(n.name, params[f"{n.name}.w"])
+            v = a[0] @ w.T
+            if n.attrs["bias"]:
+                v = v + params[f"{n.name}.b"]
+        elif k == "layernorm":
+            mean = jnp.mean(a[0], axis=-1, keepdims=True)
+            var = jnp.var(a[0], axis=-1, keepdims=True)
+            v = (a[0] - mean) * lax.rsqrt(var + 1e-6)
+            v = v * params[f"{n.name}.gamma"] + params[f"{n.name}.beta"]
+        elif k == "attention":
+            v = _attention(n, params, a[0], ctx)
+        elif k == "to_tokens":
+            b, c, hh, ww = a[0].shape
+            v = a[0].reshape(b, c, hh * ww).transpose(0, 2, 1)
+        elif k == "tokmean":
+            v = jnp.mean(a[0], axis=1)
+        elif k == "aq":
+            v = ctx.activation(n.name, a[0])
+        else:
+            raise ValueError(f"unknown node kind {k!r}")
+        vals[n.name] = v
+    outs = [vals[o] for o in graph.output_names]
+    return (outs[0] if len(outs) == 1 else tuple(outs)), new_bn
+
+
+def _attention(n, params, x, ctx):
+    """Multi-head self-attention; QKV and output projections fake-quantized
+    per-tensor, softmax scores kept FP (paper Table 8)."""
+    b, t, d = x.shape
+    h = n.attrs["heads"]
+    dh = d // h
+
+    def proj(mat_name, bias_name, inp):
+        w = ctx.weight_scalar(f"{n.name}.{mat_name}", params[f"{n.name}.{mat_name}"])
+        return inp @ w.T + params[f"{n.name}.{bias_name}"]
+
+    q = proj("wq", "qb", x).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    kk = proj("wk", "kb", x).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    vv = proj("wv", "vb", x).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    scores = (q @ kk.transpose(0, 1, 3, 2)) / math.sqrt(dh)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = (att @ vv).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return proj("wo", "ob", out)

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for Quant-Trim.
+
+Every kernel here has a pure-jnp oracle in `ref.py`; the pytest suite in
+python/tests/ sweeps shapes/dtypes with hypothesis and asserts agreement.
+All kernels lower with interpret=True (CPU-PJRT executable HLO).
+"""
+
+from . import blend, fake_quant, qmatmul, ref, reverse_prune  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas progressive-blend kernel (L1).
+
+x~ = x + lambda * (x^ - x), the curriculum interpolation between the FP32 and
+fake-quantized forward. A trivially bandwidth-bound elementwise kernel; the
+point of fusing it is that during the ramp both x and x^ are live, and the
+blend is the last op before the tensor leaves VMEM.
+
+The caller (compile/quant.py) wraps the fake-quant term in stop_gradient, so
+gradients follow FP32 exactly as in the paper (STE).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLK = 8
+COL_BLK = 128
+
+
+def _blend_kernel(x_ref, xq_ref, lam_ref, o_ref):
+    lam = lam_ref[0, 0]
+    x = x_ref[...]
+    o_ref[...] = x + lam * (xq_ref[...] - x)
+
+
+@jax.jit
+def blend_2d(x, xq, lam):
+    """x, xq: (R, C); lam: scalar blend coefficient."""
+    r, c = x.shape
+    pr = (-r) % ROW_BLK
+    pc = (-c) % COL_BLK
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+        xq = jnp.pad(xq, ((0, pr), (0, pc)))
+    lam2 = jnp.asarray(lam, x.dtype).reshape(1, 1)
+    grid = (x.shape[0] // ROW_BLK, x.shape[1] // COL_BLK)
+    out = pl.pallas_call(
+        _blend_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, xq, lam2)
+    return out[:r, :c]
+
+
+def blend(x, xq, lam):
+    """Arbitrary-rank progressive blend."""
+    x2 = x.reshape(1, -1) if x.ndim != 2 else x
+    xq2 = xq.reshape(1, -1) if xq.ndim != 2 else xq
+    out = blend_2d(x2, xq2, lam)
+    return out.reshape(x.shape)

@@ -1,0 +1,126 @@
+"""Pallas fake-quantization kernels (L1).
+
+Quantize-dequantize is the inner loop of Quant-Trim training: it runs at every
+quant point (every weight tensor, every designated activation site) on every
+forward. The kernel fuses round/clip/dequant on a VMEM-resident tile so the
+tensor makes exactly one HBM->VMEM->HBM round trip.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): tiles are (ROW_BLK, 128) —
+lane dimension 128 matches the VPU/MXU lane width; per-channel scales ride
+along as a (ROW_BLK, 1) block so a channel's scale is resident with its rows.
+On CPU we lower with interpret=True (plain HLO), which is the only executable
+path for the PJRT CPU client; the BlockSpec structure is what carries over to
+a real TPU lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLK = 8
+COL_BLK = 128
+
+
+def _fq_sym_kernel(x_ref, s_ref, o_ref, *, qmin, qmax):
+    x = x_ref[...]
+    s = s_ref[...]  # (rows, 1) broadcasts over columns
+    q = jnp.clip(jnp.round(x / s), qmin, qmax)
+    o_ref[...] = q * s
+
+
+def _fq_asym_kernel(x_ref, s_ref, z_ref, o_ref, *, qmin, qmax):
+    x = x_ref[...]
+    s = s_ref[...]
+    z = z_ref[...]
+    q = jnp.clip(jnp.round(x / s) + z, qmin, qmax)
+    o_ref[...] = (q - z) * s
+
+
+def _pad2(x, rb, cb):
+    r, c = x.shape
+    pr = (-r) % rb
+    pc = (-c) % cb
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x, r, c
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax"))
+def fake_quant_sym_2d(x, s, qmin=-128, qmax=127):
+    """Symmetric quant-dequant over a 2-D view.
+
+    x: (R, C) float32.  s: (R, 1) per-row scales (rows = channels) or (1, 1).
+    """
+    r, c = x.shape
+    if s.shape[0] == 1 and r > 1:
+        s = jnp.broadcast_to(s, (r, 1))
+    xp, r0, c0 = _pad2(x, ROW_BLK, COL_BLK)
+    sp = jnp.pad(s, ((0, xp.shape[0] - r), (0, 0)), constant_values=1.0)
+    grid = (xp.shape[0] // ROW_BLK, xp.shape[1] // COL_BLK)
+    out = pl.pallas_call(
+        functools.partial(_fq_sym_kernel, qmin=float(qmin), qmax=float(qmax)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((ROW_BLK, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, sp)
+    return out[:r0, :c0]
+
+
+@functools.partial(jax.jit, static_argnames=("qmin", "qmax"))
+def fake_quant_asym_2d(x, s, z, qmin=0, qmax=255):
+    """Asymmetric quant-dequant over a 2-D view. s, z: (R, 1) or (1, 1)."""
+    r, c = x.shape
+    if s.shape[0] == 1 and r > 1:
+        s = jnp.broadcast_to(s, (r, 1))
+        z = jnp.broadcast_to(z, (r, 1))
+    xp, r0, c0 = _pad2(x, ROW_BLK, COL_BLK)
+    pr = xp.shape[0] - r
+    sp = jnp.pad(s, ((0, pr), (0, 0)), constant_values=1.0)
+    zp = jnp.pad(z, ((0, pr), (0, 0)))
+    grid = (xp.shape[0] // ROW_BLK, xp.shape[1] // COL_BLK)
+    out = pl.pallas_call(
+        functools.partial(_fq_asym_kernel, qmin=float(qmin), qmax=float(qmax)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((ROW_BLK, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((ROW_BLK, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, sp, zp)
+    return out[:r0, :c0]
+
+
+def fake_quant_sym(x, s, qmin=-128, qmax=127, channel_axis=None):
+    """Symmetric quant-dequant on an arbitrary-rank tensor.
+
+    channel_axis=None  -> per-tensor (s scalar)
+    channel_axis=k     -> per-channel along axis k (s shape (C,))
+    """
+    if channel_axis is None:
+        x2 = x.reshape(1, -1)
+        s2 = jnp.asarray(s, x.dtype).reshape(1, 1)
+        return fake_quant_sym_2d(x2, s2, qmin, qmax).reshape(x.shape)
+    xm = jnp.moveaxis(x, channel_axis, 0)
+    shp = xm.shape
+    x2 = xm.reshape(shp[0], -1)
+    s2 = jnp.asarray(s, x.dtype).reshape(shp[0], 1)
+    out = fake_quant_sym_2d(x2, s2, qmin, qmax).reshape(shp)
+    return jnp.moveaxis(out, 0, channel_axis)
+
+
+def fake_quant_asym(x, s, z, qmin=0, qmax=255):
+    """Asymmetric per-tensor quant-dequant on an arbitrary-rank tensor."""
+    x2 = x.reshape(1, -1)
+    s2 = jnp.asarray(s, x.dtype).reshape(1, 1)
+    z2 = jnp.asarray(z, x.dtype).reshape(1, 1)
+    return fake_quant_asym_2d(x2, s2, z2, qmin, qmax).reshape(x.shape)

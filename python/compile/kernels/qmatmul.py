@@ -1,0 +1,90 @@
+"""Pallas int8-simulated matmul (L1 hot spot).
+
+The deployed-NPU inner loop: quantize the activation tile asymmetrically,
+the weight tile is symmetric INT8, accumulate (xq - zx) @ wq in int32, and
+requantize the finished tile back to float with the combined scale sx*sw.
+Fusing quantize -> int-matmul -> requantize in one kernel means the activation
+tile is quantized exactly once while VMEM-resident — the NPU-SRAM dataflow the
+paper's backends rely on, re-expressed for the TPU memory hierarchy
+(DESIGN.md §Hardware-Adaptation).
+
+Block shapes: (BM, BK) x (BK, BN) with BM=BN=BK=128 — MXU-shaped tiles. The
+K grid dimension is innermost so the int32 accumulator tile stays resident in
+the output block across the K loop (revolving accumulation pattern).
+
+interpret=True only on CPU; the int32 dot lowers to an XLA dot with
+preferred_element_type=s32, which is exactly the arithmetic the Rust engine
+implements.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM = 128
+BN = 128
+BK = 128
+
+
+def _qmm_kernel(x_ref, w_ref, sx_ref, zx_ref, sw_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sx = sx_ref[0, 0]
+    zx = zx_ref[0, 0]
+    xq = jnp.clip(jnp.round(x_ref[...] / sx) + zx, 0.0, 255.0).astype(jnp.int32)
+    zq = jnp.round(zx).astype(jnp.int32)
+    # weights arrive pre-quantized as int8 values stored in int8
+    wq = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        xq - zq,
+        wq,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        sw = sw_ref[0, 0]
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * (sx * sw)
+
+
+@jax.jit
+def qmatmul(x, wq_int8, sx, zx, sw):
+    """Int8-simulated matmul: float x (M,K) times pre-quantized w (K,N) int8.
+
+    Returns float32 (M, N). Matches kernels.ref.qmatmul_int8 with
+    wq_int8 = quantize_sym(w, sw).astype(int8).
+    """
+    m, kdim = x.shape
+    k2, n = wq_int8.shape
+    assert kdim == k2
+    pm, pk, pn = (-m) % BM, (-kdim) % BK, (-n) % BN
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    wp = jnp.pad(wq_int8, ((0, pk), (0, pn)))
+    grid = (xp.shape[0] // BM, wp.shape[1] // BN, xp.shape[1] // BK)
+    sx2 = jnp.asarray(sx, jnp.float32).reshape(1, 1)
+    zx2 = jnp.asarray(zx, jnp.float32).reshape(1, 1)
+    sw2 = jnp.asarray(sw, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.int32)],
+        interpret=True,
+    )(xp, wp, sx2, zx2, sw2)
+    return out[:m, :n]

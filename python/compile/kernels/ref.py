@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contracts: each Pallas kernel in this package must
+match its oracle bit-for-bit (integer paths) or to float tolerance (blend /
+requantize paths). The Rust integer engine (rust/src/engine/) implements the
+same arithmetic; conventions shared across all three implementations:
+
+  * round ties-to-even (jnp.round semantics == Rust f32::round_ties_even)
+  * symmetric INT8 weights:      q in [-128, 127], zero_point = 0
+  * asymmetric UINT8 activations: q in [0, 255]
+  * scale_w = max(m, eps) / 127          (2^{b-1} - 1)
+  * scale_a = max(hi - lo, eps) / 255    (2^b - 1)
+  * zero_point_a = clip(round(-lo / s), 0, 255)
+  * integer matmul accumulates in int32
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+QMIN_W, QMAX_W = -128, 127
+QMIN_A, QMAX_A = 0, 255
+
+
+def quantize_sym(x, s, qmin=QMIN_W, qmax=QMAX_W):
+    """Symmetric quantize to the integer grid (returns float-valued ints)."""
+    return jnp.clip(jnp.round(x / s), qmin, qmax)
+
+
+def fake_quant_sym(x, s, qmin=QMIN_W, qmax=QMAX_W):
+    """Symmetric quantize-dequantize. s broadcasts against x (per-channel ok)."""
+    return quantize_sym(x, s, qmin, qmax) * s
+
+
+def quantize_asym(x, s, z, qmin=QMIN_A, qmax=QMAX_A):
+    return jnp.clip(jnp.round(x / s) + z, qmin, qmax)
+
+
+def fake_quant_asym(x, s, z, qmin=QMIN_A, qmax=QMAX_A):
+    return (quantize_asym(x, s, z, qmin, qmax) - z) * s
+
+
+def blend(x, xq, lam):
+    """Progressive blend x~ = x + lam * (x^ - x). (stop_grad applied by caller)."""
+    return x + lam * (xq - x)
+
+
+def reverse_prune(w, tau):
+    """Pin weight tails at the quantile threshold tau (scalar or per-channel)."""
+    return jnp.clip(w, -tau, tau)
+
+
+def weight_scale(m_ema, eps=EPS):
+    return jnp.maximum(m_ema, eps) / float(QMAX_W)
+
+
+def act_scale_zp(lo_ema, hi_ema, eps=EPS):
+    s = jnp.maximum(hi_ema - lo_ema, eps) / float(QMAX_A)
+    z = jnp.clip(jnp.round(-lo_ema / s), QMIN_A, QMAX_A)
+    return s, z
+
+
+def ema(prev, new, mu):
+    return (1.0 - mu) * prev + mu * new
+
+
+def qmatmul_int8(x, w, sx, zx, sw):
+    """Reference int8-simulated matmul.
+
+    x : (M, K) float32 activations, quantized asymmetrically with (sx, zx)
+    w : (K, N) float32 weights, quantized symmetrically with per-tensor sw
+    Returns float32 (M, N): sx*sw * (xq - zx) @ wq, accumulated in int32.
+    """
+    xq = quantize_asym(x, sx, zx).astype(jnp.int32)
+    wq = quantize_sym(w, sw).astype(jnp.int32)
+    zq = jnp.round(zx).astype(jnp.int32)
+    acc = (xq - zq) @ wq  # int32 accumulation
+    return acc.astype(jnp.float32) * (sx * sw)
+
+
+def empirical_quantile(x, p, axis=-1):
+    """Paper-definition empirical quantile: x_(ceil(p*n)) of the order
+    statistics (no interpolation). Static index -> lowers to sort + slice,
+    and matches rust/src/calib exactly."""
+    import math as _math
+
+    xs = jnp.sort(x, axis=axis)
+    n = x.shape[axis]
+    idx = min(n - 1, max(0, int(_math.ceil(p * n)) - 1))
+    return jnp.take(xs, idx, axis=axis)
+
+
+def tensor_quantile(x, p, s_max=100_000):
+    """Empirical p-quantile on a deterministic strided subsample, |S| <= s_max.
+
+    Matches the paper's \\hat{Q}^{(S)}: for large tensors statistics are
+    computed on a subsample. We use a fixed-stride subsample (not RNG) so the
+    exported HLO is deterministic and the Rust side can reproduce it.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if n > s_max:
+        stride = -(-n // s_max)  # ceil div
+        flat = flat[::stride]
+    return empirical_quantile(flat, p)

@@ -1,0 +1,60 @@
+"""Pallas reverse-pruning kernel (L1).
+
+w <- clip(w, -tau, tau): pin the scale-setting weight tails at the EMA'd
+quantile threshold. Applied every K epochs after warmup (Algorithm 1, line 4).
+Per-channel tau rides along as a (ROW_BLK, 1) block, same layout trick as
+fake_quant.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLK = 8
+COL_BLK = 128
+
+
+def _rp_kernel(w_ref, tau_ref, o_ref):
+    tau = tau_ref[...]  # (rows, 1)
+    o_ref[...] = jnp.clip(w_ref[...], -tau, tau)
+
+
+@jax.jit
+def reverse_prune_2d(w, tau):
+    """w: (R, C); tau: (R, 1) per-channel or (1, 1) per-tensor thresholds."""
+    r, c = w.shape
+    if tau.shape[0] == 1 and r > 1:
+        tau = jnp.broadcast_to(tau, (r, 1))
+    pr = (-r) % ROW_BLK
+    pc = (-c) % COL_BLK
+    if pr or pc:
+        w = jnp.pad(w, ((0, pr), (0, pc)))
+    taup = jnp.pad(tau, ((0, w.shape[0] - r), (0, 0)), constant_values=1.0)
+    grid = (w.shape[0] // ROW_BLK, w.shape[1] // COL_BLK)
+    out = pl.pallas_call(
+        _rp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+            pl.BlockSpec((ROW_BLK, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLK, COL_BLK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=True,
+    )(w, taup)
+    return out[:r, :c]
+
+
+def reverse_prune(w, tau, channel_axis=None):
+    """Arbitrary-rank tail pinning.
+
+    channel_axis=None -> scalar tau; otherwise tau has shape (w.shape[axis],).
+    """
+    if channel_axis is None:
+        w2 = w.reshape(1, -1)
+        t2 = jnp.asarray(tau, w.dtype).reshape(1, 1)
+        return reverse_prune_2d(w2, t2).reshape(w.shape)
+    wm = jnp.moveaxis(w, channel_axis, 0)
+    shp = wm.shape
+    out = reverse_prune_2d(wm.reshape(shp[0], -1), jnp.asarray(tau, w.dtype).reshape(shp[0], 1))
+    return jnp.moveaxis(out.reshape(shp), 0, channel_axis)

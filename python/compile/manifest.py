@@ -1,0 +1,38 @@
+"""`.manifest` text format, shared with rust/src/runtime/manifest.rs.
+
+One manifest per model. Sections:
+
+    model <name>
+    qir <file>
+    ckpt <file>
+    artifact <fn-name> <hlo-file>
+    arg <fn-name> <idx> <role> <key> <dtype> <d0,d1,...|scalar>
+    ret <fn-name> <idx> <role> <key> <dtype> <dims>
+
+Roles: param | bn | qstate | opt_m | opt_v | step | data | label | scalar | out
+Keys within a role are the sorted dict keys — identical to jax's dict
+flattening order, so Rust can marshal state dict -> HLO args positionally.
+"""
+
+
+class Manifest:
+    def __init__(self, model):
+        self.lines = [f"model {model}"]
+
+    def file(self, kind, path):
+        self.lines.append(f"{kind} {path}")
+
+    def artifact(self, fn, hlo_path):
+        self.lines.append(f"artifact {fn} {hlo_path}")
+
+    def arg(self, fn, idx, role, key, shape, dtype="f32"):
+        dims = ",".join(str(d) for d in shape) if len(shape) else "scalar"
+        self.lines.append(f"arg {fn} {idx} {role} {key} {dtype} {dims}")
+
+    def ret(self, fn, idx, role, key, shape, dtype="f32"):
+        dims = ",".join(str(d) for d in shape) if len(shape) else "scalar"
+        self.lines.append(f"ret {fn} {idx} {role} {key} {dtype} {dims}")
+
+    def save(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")

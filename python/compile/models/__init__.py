@@ -1,0 +1,24 @@
+"""Model zoo (scaled-down faithful variants of the paper's models).
+
+Every builder returns a compile.ir.Graph. Sizes are chosen so a full
+Quant-Trim training run finishes in minutes on the CPU-PJRT backend while
+keeping the quantization-relevant structure of the original architectures
+(residual adds, attention QKV, depthwise conv + SE, encoder-decoder skips).
+"""
+
+from .mobilenet import mobilenetv3_slim
+from .resnet import resnet18_slim, resnet50_slim
+from .sam import nanosam_student, nanosam_teacher
+from .unet import unet_slim
+from .vit import vit_dinov2_slim
+
+BUILDERS = {
+    "resnet18": lambda: resnet18_slim(num_classes=100),
+    "resnet18_c10": lambda: resnet18_slim(num_classes=10, name="resnet18_c10"),
+    "resnet50": lambda: resnet50_slim(num_classes=100),
+    "vit": lambda: vit_dinov2_slim(num_classes=100),
+    "mobilenetv3": lambda: mobilenetv3_slim(num_classes=100),
+    "unet": lambda: unet_slim(num_classes=8),
+    "sam_student": nanosam_student,
+    "sam_teacher": nanosam_teacher,
+}

@@ -1,0 +1,71 @@
+"""MobileNetV3-Small (slim) — depthwise conv + squeeze-excite under Quant-Trim.
+
+Depthwise convolutions and the SE sigmoid gate are the classic NPU
+quantization stress points (per-channel weight ranges vary wildly); this model
+exists to exercise exactly that path in the backends (paper Fig 11).
+"""
+
+from ..ir import Graph
+
+
+def _se(g, name, x, c, reduce=4):
+    s = g.gap(f"{name}.gap", x)
+    f = g.flatten(f"{name}.flat", s)
+    f1 = g.linear(f"{name}.fc1", f, max(c // reduce, 4))
+    r = g.act("relu", f"{name}.relu", f1)
+    f2 = g.linear(f"{name}.fc2", r, c)
+    hs = g.act("hsigmoid", f"{name}.gate", f2)
+    scale = g.reshape(f"{name}.rs", hs, (c, 1, 1))
+    return g.mul2(f"{name}.mul", x, scale)
+
+
+def _bneck(g, name, x, exp, cout, k, stride, se, act):
+    cin = g.node(x).out_shape[0]
+    e = g.conv2d(f"{name}.exp", x, exp, 1, pad=0, bias=False)
+    eb = g.bn(f"{name}.expbn", e)
+    ea = g.act(act, f"{name}.expact", eb)
+    eq = g.aq(f"{name}.expq", ea)
+    d = g.conv2d(f"{name}.dw", eq, exp, k, stride=stride, groups=exp, bias=False)
+    db = g.bn(f"{name}.dwbn", d)
+    da = g.act(act, f"{name}.dwact", db)
+    dq = g.aq(f"{name}.dwq", da)
+    if se:
+        dq = _se(g, f"{name}.se", dq, exp)
+    p = g.conv2d(f"{name}.proj", dq, cout, 1, pad=0, bias=False)
+    pb = g.bn(f"{name}.projbn", p)
+    if stride == 1 and cin == cout:
+        pb = g.add2(f"{name}.res", pb, x)
+    return g.aq(f"{name}.q", pb)
+
+
+def mobilenetv3_slim(num_classes=100, image=32, name="mobilenetv3"):
+    g = Graph(name)
+    x = g.input("image", (3, image, image))
+    c = g.conv2d("stem.c", x, 16, 3, stride=1, bias=False)
+    b = g.bn("stem.bn", c)
+    r = g.act("hswish", "stem.act", b)
+    h = g.aq("stem.q", r)
+    # (exp, cout, k, stride, se, act) — V3-small schedule adapted to 32x32
+    cfg = [
+        (16, 16, 3, 2, True, "relu"),
+        (72, 24, 3, 2, False, "relu"),
+        (88, 24, 3, 1, False, "relu"),
+        (96, 40, 5, 2, True, "hswish"),
+        (240, 40, 5, 1, True, "hswish"),
+        (120, 48, 5, 1, True, "hswish"),
+        (288, 96, 5, 2, True, "hswish"),
+        (576, 96, 5, 1, True, "hswish"),
+    ]
+    for i, (exp, cout, k, s, se, act) in enumerate(cfg):
+        h = _bneck(g, f"bn{i}", h, exp, cout, k, s, se, act)
+    c2 = g.conv2d("headc", h, 288, 1, pad=0, bias=False)
+    b2 = g.bn("headbn", c2)
+    r2 = g.act("hswish", "headact", b2)
+    q2 = g.aq("headq", r2)
+    p = g.gap("gap", q2)
+    f = g.flatten("flat", p)
+    f1 = g.linear("fc1", f, 256)
+    a1 = g.act("hswish", "fc1act", f1)
+    qa = g.aq("fc1q", a1)
+    g.linear("head", qa, num_classes)
+    return g

@@ -1,0 +1,131 @@
+"""CIFAR-style ResNet-18/50 (slim widths) with Quant-Trim quant points.
+
+Activation quant points sit after every ReLU and after every residual add —
+the "after common nonlinearities" placement of paper §3.4. Weight quant is
+per-output-channel symmetric INT8 on every conv/linear.
+"""
+
+from ..ir import Graph
+
+
+def _basic_block(g, name, x, cout, stride):
+    cin = g.node(x).out_shape[0]
+    c1 = g.conv2d(f"{name}.c1", x, cout, 3, stride=stride, bias=False)
+    b1 = g.bn(f"{name}.bn1", c1)
+    r1 = g.act("relu", f"{name}.r1", b1)
+    q1 = g.aq(f"{name}.q1", r1)
+    c2 = g.conv2d(f"{name}.c2", q1, cout, 3, bias=False)
+    b2 = g.bn(f"{name}.bn2", c2)
+    if stride != 1 or cin != cout:
+        ds = g.conv2d(f"{name}.ds", x, cout, 1, stride=stride, pad=0, bias=False)
+        dsb = g.bn(f"{name}.dsbn", ds)
+        skip = dsb
+    else:
+        skip = x
+    s = g.add2(f"{name}.add", b2, skip)
+    r2 = g.act("relu", f"{name}.r2", s)
+    return g.aq(f"{name}.q2", r2)
+
+
+def _bottleneck(g, name, x, cmid, stride):
+    cin = g.node(x).out_shape[0]
+    cout = cmid * 4
+    c1 = g.conv2d(f"{name}.c1", x, cmid, 1, pad=0, bias=False)
+    b1 = g.bn(f"{name}.bn1", c1)
+    r1 = g.act("relu", f"{name}.r1", b1)
+    q1 = g.aq(f"{name}.q1", r1)
+    c2 = g.conv2d(f"{name}.c2", q1, cmid, 3, stride=stride, bias=False)
+    b2 = g.bn(f"{name}.bn2", c2)
+    r2 = g.act("relu", f"{name}.r2", b2)
+    q2 = g.aq(f"{name}.q2", r2)
+    c3 = g.conv2d(f"{name}.c3", q2, cout, 1, pad=0, bias=False)
+    b3 = g.bn(f"{name}.bn3", c3)
+    if stride != 1 or cin != cout:
+        ds = g.conv2d(f"{name}.ds", x, cout, 1, stride=stride, pad=0, bias=False)
+        dsb = g.bn(f"{name}.dsbn", ds)
+        skip = dsb
+    else:
+        skip = x
+    s = g.add2(f"{name}.add", b3, skip)
+    r3 = g.act("relu", f"{name}.r3", s)
+    return g.aq(f"{name}.q3", r3)
+
+
+def resnet18_slim(num_classes=100, base=16, image=32, name="resnet18"):
+    g = Graph(name)
+    x = g.input("image", (3, image, image))
+    c = g.conv2d("stem.c", x, base, 3, bias=False)
+    b = g.bn("stem.bn", c)
+    r = g.act("relu", "stem.r", b)
+    h = g.aq("stem.q", r)
+    widths = [base, base * 2, base * 4, base * 8]
+    for si, w in enumerate(widths):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _basic_block(g, f"s{si}.b{bi}", h, w, stride)
+    p = g.gap("gap", h)
+    f = g.flatten("flat", p)
+    g.linear("head", f, num_classes)
+    return g
+
+
+def resnet50_slim(num_classes=100, base=16, image=32, name="resnet50"):
+    g = Graph(name)
+    x = g.input("image", (3, image, image))
+    c = g.conv2d("stem.c", x, base, 3, bias=False)
+    b = g.bn("stem.bn", c)
+    r = g.act("relu", "stem.r", b)
+    h = g.aq("stem.q", r)
+    widths = [base, base * 2, base * 4, base * 8]
+    blocks = [3, 4, 6, 3]
+    for si, (w, nb) in enumerate(zip(widths, blocks)):
+        for bi in range(nb):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _bottleneck(g, f"s{si}.b{bi}", h, w, stride)
+    p = g.gap("gap", h)
+    f = g.flatten("flat", p)
+    g.linear("head", f, num_classes)
+    return g
+
+
+def resnet_backbone_fpn(name, base=16, image=64, fpn_dim=32):
+    """ResNet-18 backbone + 3-level FPN (NanoSAM2 encoder shape).
+
+    Outputs the three FPN feature maps (deepest first), matching the
+    three-scale distillation loss of paper §5.2.
+    """
+    g = Graph(name)
+    x = g.input("image", (3, image, image))
+    if image >= 128:
+        # ImageNet-style stem at full resolution: stride-2 7x7 + maxpool,
+        # as in the real NanoSAM2 ResNet encoder (4x downsample up front)
+        c = g.conv2d("stem.c", x, base, 7, stride=2, bias=False)
+        b = g.bn("stem.bn", c)
+        r = g.act("relu", "stem.r", b)
+        q = g.aq("stem.q", r)
+        h = g.maxpool("stem.pool", q, 3, 2, pad=1)
+    else:
+        c = g.conv2d("stem.c", x, base, 3, bias=False)
+        b = g.bn("stem.bn", c)
+        r = g.act("relu", "stem.r", b)
+        h = g.aq("stem.q", r)
+    widths = [base, base * 2, base * 4, base * 8]
+    taps = {}
+    for si, w in enumerate(widths):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _basic_block(g, f"s{si}.b{bi}", h, w, stride)
+        taps[si] = h
+    # FPN lateral 1x1 convs on the last three stages + top-down pathway
+    l3 = g.conv2d("fpn.l3", taps[3], fpn_dim, 1, pad=0)
+    l2 = g.conv2d("fpn.l2", taps[2], fpn_dim, 1, pad=0)
+    l1 = g.conv2d("fpn.l1", taps[1], fpn_dim, 1, pad=0)
+    u3 = g.upsample2x("fpn.u3", l3)
+    m2 = g.add2("fpn.m2", l2, u3)
+    u2 = g.upsample2x("fpn.u2", m2)
+    m1 = g.add2("fpn.m1", l1, u2)
+    p3 = g.conv2d("fpn.p3", l3, fpn_dim, 3)
+    p2 = g.conv2d("fpn.p2", m2, fpn_dim, 3)
+    p1 = g.conv2d("fpn.p1", m1, fpn_dim, 3)
+    g.outputs = [p3, p2, p1]
+    return g

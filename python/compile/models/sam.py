@@ -1,0 +1,20 @@
+"""NanoSAM2 encoder pair (paper §5.2, Figs 6-7, Table 10).
+
+Student: ResNet-18-slim + FPN, trained with Quant-Trim while distilling from
+the teacher's three FPN scales (Huber loss, weights [1, 1/4, 1/8]).
+Teacher: a 2x-wider frozen encoder standing in for SAM-2.1 Hiera — we have no
+SAM weights offline, so the teacher is a fixed randomly-initialized encoder;
+the distillation *mechanics* (multi-scale feature matching under progressive
+fake quant) are identical, which is what the experiment exercises
+(DESIGN.md §2 substitution table).
+"""
+
+from .resnet import resnet_backbone_fpn
+
+
+def nanosam_student():
+    return resnet_backbone_fpn("sam_student", base=16, image=64, fpn_dim=32)
+
+
+def nanosam_teacher():
+    return resnet_backbone_fpn("sam_teacher", base=32, image=64, fpn_dim=32)

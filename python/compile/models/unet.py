@@ -1,0 +1,42 @@
+"""U-Net (slim) for the COCO-proxy segmentation task (paper Figs 10, 11).
+
+Encoder-decoder with channel-concat skip connections — concat of tensors with
+very different dynamic ranges is a known static-INT8 failure mode, which is
+why the paper benches U-Net on the NPUs.
+"""
+
+from ..ir import Graph
+
+
+def _double(g, name, x, c):
+    c1 = g.conv2d(f"{name}.c1", x, c, 3, bias=False)
+    b1 = g.bn(f"{name}.bn1", c1)
+    r1 = g.act("relu", f"{name}.r1", b1)
+    q1 = g.aq(f"{name}.q1", r1)
+    c2 = g.conv2d(f"{name}.c2", q1, c, 3, bias=False)
+    b2 = g.bn(f"{name}.bn2", c2)
+    r2 = g.act("relu", f"{name}.r2", b2)
+    return g.aq(f"{name}.q2", r2)
+
+
+def unet_slim(num_classes=8, base=16, image=64, name="unet"):
+    g = Graph(name)
+    x = g.input("image", (3, image, image))
+    e1 = _double(g, "enc1", x, base)
+    p1 = g.maxpool("pool1", e1, 2, 2)
+    e2 = _double(g, "enc2", p1, base * 2)
+    p2 = g.maxpool("pool2", e2, 2, 2)
+    e3 = _double(g, "enc3", p2, base * 4)
+    p3 = g.maxpool("pool3", e3, 2, 2)
+    mid = _double(g, "mid", p3, base * 8)
+    u3 = g.upsample2x("up3", mid)
+    cat3 = g.concat("cat3", u3, e3)
+    d3 = _double(g, "dec3", cat3, base * 4)
+    u2 = g.upsample2x("up2", d3)
+    cat2 = g.concat("cat2", u2, e2)
+    d2 = _double(g, "dec2", cat2, base * 2)
+    u1 = g.upsample2x("up1", d2)
+    cat1 = g.concat("cat1", u1, e1)
+    d1 = _double(g, "dec1", cat1, base)
+    g.conv2d("seg", d1, num_classes, 1, pad=0)
+    return g

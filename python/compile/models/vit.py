@@ -1,0 +1,34 @@
+"""DINOv2-proxy vision transformer (slim) with Quant-Trim quant points.
+
+Per paper Table 8 ("Attention handling"): Q/K/V and output projections are
+fake-quantized (per-tensor symmetric), attention scores stay FP; activation
+quant points sit after each residual add and after the MLP GELU.
+"""
+
+from ..ir import Graph
+
+
+def vit_dinov2_slim(num_classes=100, dim=128, depth=6, heads=4, mlp=256,
+                    patch=4, image=32, name="vit"):
+    g = Graph(name)
+    x = g.input("image", (3, image, image))
+    # patch embedding: conv stride=patch, then to token layout
+    pe = g.conv2d("patch.c", x, dim, patch, stride=patch, pad=0)
+    tok = g.to_tokens("patch.tok", pe)
+    h = g.aq("patch.q", tok)
+    for i in range(depth):
+        ln1 = g.layernorm(f"blk{i}.ln1", h)
+        att = g.attention(f"blk{i}.att", ln1, heads)
+        a1 = g.add2(f"blk{i}.add1", h, att)
+        q1 = g.aq(f"blk{i}.q1", a1)
+        ln2 = g.layernorm(f"blk{i}.ln2", q1)
+        f1 = g.linear(f"blk{i}.fc1", ln2, mlp)
+        ge = g.act("gelu", f"blk{i}.gelu", f1)
+        qg = g.aq(f"blk{i}.qg", ge)
+        f2 = g.linear(f"blk{i}.fc2", qg, dim)
+        a2 = g.add2(f"blk{i}.add2", q1, f2)
+        h = g.aq(f"blk{i}.q2", a2)
+    ln = g.layernorm("final.ln", h)
+    pooled = g.tokmean("final.pool", ln)
+    g.linear("head", pooled, num_classes)
+    return g

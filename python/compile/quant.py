@@ -1,0 +1,132 @@
+"""Quant points: robust statistics, EMA state, progressive fake quantization.
+
+This is the L2 glue between the model interpreter and the L1 kernels:
+every weight tensor and every `aq` node in the graph passes through here.
+
+Two numerically identical fake-quant implementations are available:
+
+  * the Pallas kernels (kernels.fake_quant / kernels.blend), used in the
+    exported device-forward artifact and benchmarked/validated by pytest;
+  * a pure-jnp path (kernels.ref), used inside the *training* graph where the
+    quant point runs at every tensor of every step — the interpret-mode grid
+    machinery would dominate CPU step time (see DESIGN.md §Perf, L2).
+
+python/tests/test_quant.py asserts the two paths agree bit-for-bit, which is
+what licenses the swap.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import fake_quant as fq_pallas
+from .kernels import ref
+
+S_MAX_ACT = 4096     # activation subsample budget inside the train graph
+S_MAX_W = 100_000    # weight subsample (paper: 1e5)
+
+
+def subsample(flat, s_max):
+    n = flat.shape[0]
+    if n > s_max:
+        stride = -(-n // s_max)
+        flat = flat[::stride]
+    return flat
+
+
+class QuantCtx:
+    """Per-forward quantization context.
+
+    mode:
+      "fp32"    no fake quant (MAP baseline / plain eval)
+      "train"   progressive fake quant, EMA stats updated, jnp path
+      "device"  full fake quant (lam=1) with frozen stats, Pallas path —
+                this is the exported static-INT8 device forward
+    """
+
+    def __init__(self, mode, qstate, lam=None, mu=1e-2, p_hi=0.999, p_lo=0.001,
+                 p_hi_act=0.9999, fq_enabled=True, per_channel=True):
+        self.mode = mode
+        self.qstate = qstate
+        self.new_qstate = dict(qstate)
+        self.lam = lam
+        self.mu = mu
+        self.p_hi = p_hi
+        self.p_lo = p_lo
+        # Activation ranges track a near-max quantile rather than the weight
+        # p99.9: the paper's blend passes gradients everywhere ("gradients
+        # always follow FP32"), so nothing in the loss stops activations from
+        # outgrowing a tight clip range — with p99.9 the train-time forward
+        # saturates while the FP32 eval forward drifts arbitrarily far
+        # (observed as a compensation spiral in short runs). Near-max ranges
+        # keep train/eval forwards aligned; tail compression comes from
+        # reverse pruning on the weights, as in the paper's Fig 2.
+        self.p_hi_act = p_hi_act
+        self.fq_enabled = fq_enabled
+        self.per_channel = per_channel
+
+    # ---- weights (symmetric INT8, per-output-channel) ----
+
+    def weight(self, name, w):
+        if self.mode == "fp32" or not self.fq_enabled:
+            return w
+        cout = w.shape[0]
+        w2 = w.reshape(cout, -1)
+        if self.mode == "train":
+            # statistics are stop-grad: scales must not carry gradients
+            # (paper: "gradients always follow FP32")
+            aw = lax.stop_gradient(jnp.abs(w2))
+            if self.per_channel:
+                m = ref.empirical_quantile(aw, self.p_hi, axis=1)
+            else:
+                m = jnp.broadcast_to(ref.tensor_quantile(aw, self.p_hi, S_MAX_W), (cout,))
+            m_ema = ref.ema(self.qstate[f"{name}.m"], m, self.mu)
+            self.new_qstate[f"{name}.m"] = m_ema
+        else:
+            m_ema = self.qstate[f"{name}.m"]
+        s = ref.weight_scale(m_ema).reshape(cout, *([1] * (w.ndim - 1)))
+        if self.mode == "device":
+            wq = fq_pallas.fake_quant_sym(w2, s.reshape(cout), channel_axis=0).reshape(w.shape)
+            return wq
+        wq = ref.fake_quant_sym(w, s)
+        return w + self.lam * lax.stop_gradient(wq - w)
+
+    def weight_scalar(self, name, w):
+        """Per-tensor symmetric weight quant (attention matrices)."""
+        if self.mode == "fp32" or not self.fq_enabled:
+            return w
+        if self.mode == "train":
+            m = ref.tensor_quantile(lax.stop_gradient(jnp.abs(w)), self.p_hi, S_MAX_W)
+            m_ema = ref.ema(self.qstate[f"{name}.m"], m, self.mu)
+            self.new_qstate[f"{name}.m"] = m_ema
+        else:
+            m_ema = self.qstate[f"{name}.m"]
+        s = ref.weight_scale(m_ema)
+        if self.mode == "device":
+            return fq_pallas.fake_quant_sym(w, s)
+        wq = ref.fake_quant_sym(w, s)
+        return w + self.lam * lax.stop_gradient(wq - w)
+
+    # ---- activations (asymmetric UINT8, per-tensor) ----
+
+    def activation(self, name, x):
+        if self.mode == "fp32" or not self.fq_enabled:
+            return x
+        if self.mode == "train":
+            # exact batch min/max (cheap: no sort). See p_hi_act note above —
+            # subsampled quantiles systematically miss the rare spikes, which
+            # both feeds the compensation spiral and mis-scales deployment.
+            xs = lax.stop_gradient(x)
+            lo = jnp.min(xs)
+            hi = jnp.max(xs)
+            lo_ema = ref.ema(self.qstate[f"{name}.lo"], lo, self.mu)
+            hi_ema = ref.ema(self.qstate[f"{name}.hi"], hi, self.mu)
+            self.new_qstate[f"{name}.lo"] = lo_ema
+            self.new_qstate[f"{name}.hi"] = hi_ema
+        else:
+            lo_ema = self.qstate[f"{name}.lo"]
+            hi_ema = self.qstate[f"{name}.hi"]
+        s, z = ref.act_scale_zp(lo_ema, hi_ema)
+        if self.mode == "device":
+            return fq_pallas.fake_quant_asym(x, s, z)
+        xq = ref.fake_quant_asym(x, s, z)
+        return x + self.lam * lax.stop_gradient(xq - x)

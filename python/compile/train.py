@@ -1,0 +1,229 @@
+"""Training-graph construction: init, AdamW, Quant-Trim train step, eval and
+device forwards, reverse pruning (Algorithm 1).
+
+Everything here is built to be lowered ONCE by aot.py and then driven from the
+Rust coordinator: functions take/return flat dicts of arrays; flattening order
+for the HLO interface is sorted key order (jax's own dict flattening order),
+recorded in the manifest.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ir, jax_exec
+from .kernels import ref
+from .kernels import reverse_prune as rp_pallas
+from .quant import QuantCtx
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------- init
+
+def init_params(graph, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape, kind in ir.param_specs(graph):
+        if kind in ("conv_w", "linear_w"):
+            fan_in = int(np.prod(shape[1:])) if len(shape) > 1 else shape[0]
+            std = math.sqrt(2.0 / fan_in)
+            out[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+        elif kind == "bias":
+            out[name] = np.zeros(shape, np.float32)
+        elif kind in ("bn", "ln"):
+            fill = 1.0 if name.endswith(".gamma") else 0.0
+            out[name] = np.full(shape, fill, np.float32)
+    return out
+
+
+def init_bn_state(graph):
+    out = {}
+    for name, shape in ir.bn_state_specs(graph):
+        fill = 1.0 if name.endswith(".var") else 0.0
+        out[name] = np.full(shape, fill, np.float32)
+    return out
+
+
+def _np_quantile(x, p, axis=None):
+    """Paper-definition empirical quantile (x_(ceil(pn)), no interpolation) —
+    numpy twin of kernels.ref.empirical_quantile."""
+    xs = np.sort(x, axis=axis if axis is not None else None)
+    if axis is None:
+        n = xs.size
+        return xs[min(n - 1, max(0, math.ceil(p * n) - 1))]
+    n = xs.shape[axis]
+    idx = min(n - 1, max(0, math.ceil(p * n) - 1))
+    return np.take(xs, idx, axis=axis)
+
+
+def init_qstate(graph, params, p_hi=0.999, p_clip=0.95):
+    """Quant statistics seeded from the initial weights so the EMA starts in
+    the right ballpark (activations start at a generic [0, 6] range)."""
+    out = {}
+    for name, shape in ir.qstate_specs(graph):
+        base = name.rsplit(".", 1)[0]
+        if name.endswith(".m"):
+            # conv/linear: qstate "node.m" <- param "node.w";
+            # attention:   qstate "node.wq.m" <- param "node.wq"
+            w = np.asarray(params[f"{base}.w"]) if f"{base}.w" in params \
+                else np.asarray(params[base])
+            if shape == ():
+                out[name] = np.float32(_np_quantile(np.abs(w).ravel(), p_hi))
+            else:
+                w2 = np.abs(w.reshape(w.shape[0], -1))
+                out[name] = _np_quantile(w2, p_hi, axis=1).astype(np.float32)
+        elif name.endswith(".tau"):
+            w = np.asarray(params[f"{base}.w"]) if f"{base}.w" in params \
+                else np.asarray(params[f"{base}.wq"])
+            out[name] = np.float32(_np_quantile(np.abs(w).ravel(), p_clip))
+        elif name.endswith(".lo"):
+            out[name] = np.float32(0.0)
+        elif name.endswith(".hi"):
+            out[name] = np.float32(6.0)
+    return out
+
+
+def init_opt(params):
+    zeros = {k: np.zeros_like(np.asarray(v)) for k, v in params.items()}
+    return zeros, {k: v.copy() for k, v in zeros.items()}
+
+
+# ---------------------------------------------------------------- losses
+
+def softmax_xent(logits, labels):
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def seg_xent(logits, labels):
+    """logits (B, C, H, W), labels (B, H, W) int32."""
+    logz = jax.nn.log_softmax(logits, axis=1)
+    picked = jnp.take_along_axis(logz, labels[:, None, :, :], axis=1)
+    return -jnp.mean(picked)
+
+
+def huber(x, delta=1.0):
+    ax = jnp.abs(x)
+    return jnp.where(ax <= delta, 0.5 * x * x, delta * (ax - 0.5 * delta))
+
+
+# ---------------------------------------------------------------- steps
+
+def _adamw(params, grads, m, v, step, lr, wd):
+    step = step + 1.0
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    for k in params:
+        g = grads[k]
+        mk = ADAM_B1 * m[k] + (1 - ADAM_B1) * g
+        vk = ADAM_B2 * v[k] + (1 - ADAM_B2) * g * g
+        upd = (mk / bc1) / (jnp.sqrt(vk / bc2) + ADAM_EPS)
+        new_p[k] = params[k] - lr * (upd + wd * params[k])
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v, step
+
+
+def make_train_step(graph, task="cls", fq_enabled=True, mu=1e-2, wd=0.01,
+                    per_channel=True):
+    """Returns fn(params, bnst, qstate, m, v, step, x, y, lam, lr) ->
+    (params, bnst, qstate, m, v, step, loss, metric)."""
+
+    def loss_fn(params, bnst, qstate, x, y, lam):
+        ctx = QuantCtx("train", qstate, lam=lam, mu=mu, fq_enabled=fq_enabled,
+                       per_channel=per_channel)
+        logits, new_bn = jax_exec.apply_graph(graph, params, bnst, x, ctx, train=True)
+        if task == "cls":
+            loss = softmax_xent(logits, y)
+            metric = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        else:
+            loss = seg_xent(logits, y)
+            metric = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss, (new_bn, ctx.new_qstate, metric)
+
+    def step_fn(params, bnst, qstate, m, v, step, x, y, lam, lr):
+        (loss, (new_bn, new_q, metric)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, bnst, qstate, x, y, lam)
+        new_p, new_m, new_v, new_step = _adamw(params, grads, m, v, step, lr, wd)
+        return new_p, new_bn, new_q, new_m, new_v, new_step, loss, metric
+
+    return step_fn
+
+
+def make_distill_step(student, teacher, mu=1e-2, wd=1e-4, scale_w=(1.0, 0.25, 0.125)):
+    """Three-scale FPN Huber distillation (paper §5.2) with Quant-Trim on the
+    student. Teacher params/bn are frozen inputs."""
+
+    def loss_fn(params, bnst, qstate, tparams, tbnst, x, lam):
+        ctx = QuantCtx("train", qstate, lam=lam, mu=mu)
+        sfeats, new_bn = jax_exec.apply_graph(student, params, bnst, x, ctx, train=True)
+        tctx = QuantCtx("fp32", {})
+        tfeats, _ = jax_exec.apply_graph(teacher, tparams, tbnst, x, tctx, train=False)
+        loss = 0.0
+        for w, sf, tf in zip(scale_w, sfeats, tfeats):
+            loss = loss + w * jnp.mean(huber(sf - jax.lax.stop_gradient(tf)))
+        # feature-alignment metric: mean per-scale MSE (Fig 6 quantitative proxy)
+        mse = jnp.mean((sfeats[0] - tfeats[0]) ** 2)
+        return loss, (new_bn, ctx.new_qstate, mse)
+
+    def step_fn(params, bnst, qstate, m, v, step, tparams, tbnst, x, lam, lr):
+        (loss, (new_bn, new_q, mse)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, bnst, qstate, tparams, tbnst, x, lam)
+        new_p, new_m, new_v, new_step = _adamw(params, grads, m, v, step, lr, wd)
+        return new_p, new_bn, new_q, new_m, new_v, new_step, loss, mse
+
+    return step_fn
+
+
+def make_forward(graph):
+    """FP32 eval forward (the ONNX-reference analogue)."""
+
+    def fwd(params, bnst, x):
+        ctx = QuantCtx("fp32", {})
+        out, _ = jax_exec.apply_graph(graph, params, bnst, x, ctx, train=False)
+        return out
+
+    return fwd
+
+
+def make_device_forward(graph):
+    """Static-INT8 device forward: full fake quant, frozen scales, Pallas
+    kernels. Cross-checks the Rust integer engine."""
+
+    def fwd(params, bnst, qstate, x):
+        ctx = QuantCtx("device", qstate)
+        out, _ = jax_exec.apply_graph(graph, params, bnst, x, ctx, train=False)
+        return out
+
+    return fwd
+
+
+def make_reverse_prune(graph, p_clip=0.95, beta=0.5):
+    """fn(params, taus) -> (clipped params, updated taus). Pallas clip kernel.
+
+    tau EMA: tau' = (1-beta) tau + beta * Q_{|w|}(p_clip); w <- clip(w, ±tau').
+    """
+    wkeys = []
+    for n in graph.nodes:
+        if n.kind in ("conv2d", "linear"):
+            wkeys.append((f"{n.name}.w", f"{n.name}.tau", None))
+        elif n.kind == "attention":
+            for p in ("wq", "wk", "wv", "wo"):
+                wkeys.append((f"{n.name}.{p}", f"{n.name}.tau", p))
+
+    def prune(params, taus):
+        new_p = dict(params)
+        new_t = dict(taus)
+        for wk, tk, _sub in wkeys:
+            w = params[wk]
+            that = ref.tensor_quantile(jnp.abs(w), p_clip)
+            tnew = (1.0 - beta) * new_t[tk] + beta * that
+            new_t[tk] = tnew
+            new_p[wk] = rp_pallas.reverse_prune(w, tnew)
+        return new_p, new_t
+
+    return prune

@@ -1,0 +1,51 @@
+"""Checkpoint + manifest formats: roundtrip and the scalar contract that the
+Rust readers rely on."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import ckpt
+from compile.manifest import Manifest
+
+
+def test_ckpt_roundtrip_with_scalars():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.qtckpt")
+        tensors = {
+            "param/a.w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "qstate/a.tau": np.float32(0.25),  # 0-d scalar MUST stay 0-d
+            "bn/x.mean": np.zeros(7, np.float32),
+        }
+        ckpt.save(path, tensors)
+        back = ckpt.load(path)
+        assert set(back) == set(tensors)
+        assert back["qstate/a.tau"].shape == ()
+        assert back["qstate/a.tau"] == np.float32(0.25)
+        np.testing.assert_array_equal(back["param/a.w"], tensors["param/a.w"])
+
+
+def test_ckpt_noncontiguous_input():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.qtckpt")
+        base = np.arange(24, dtype=np.float32).reshape(4, 6)
+        ckpt.save(path, {"w": base.T})  # transposed view: non-contiguous
+        back = ckpt.load(path)
+        np.testing.assert_array_equal(back["w"], base.T)
+
+
+def test_manifest_text_shape():
+    m = Manifest("demo")
+    m.file("qir", "demo.qir")
+    m.artifact("fwd", "demo.fwd.hlo.txt")
+    m.arg("fwd", 0, "param", "a.w", (2, 3))
+    m.arg("fwd", 1, "lam", "lam", ())
+    m.ret("fwd", 0, "out", "out", (1, 10))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "demo.manifest")
+        m.save(path)
+        lines = open(path).read().strip().split("\n")
+    assert lines[0] == "model demo"
+    assert "arg fwd 1 lam lam f32 scalar" in lines
+    assert "ret fwd 0 out out f32 1,10" in lines

@@ -1,0 +1,137 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes/values with hypothesis. This is the core correctness signal for the
+quantization arithmetic shared by all three implementations."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blend, fake_quant, qmatmul, ref, reverse_prune
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand_arr(rng, r, c, scale=1.0):
+    return (rng.standard_normal((r, c)) * scale).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 17),
+    c=st.integers(1, 300),
+    scale=st.floats(0.01, 4.0),
+    seed=st.integers(0, 2**31),
+)
+def test_fake_quant_sym_matches_ref(r, c, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_arr(rng, r, c, scale)
+    s = (np.abs(rng.standard_normal((r, 1))) * 0.05 + 0.01).astype(np.float32)
+    got = fake_quant.fake_quant_sym_2d(jnp.array(x), jnp.array(s))
+    want = ref.fake_quant_sym(jnp.array(x), jnp.array(s))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 9),
+    c=st.integers(1, 257),
+    seed=st.integers(0, 2**31),
+)
+def test_fake_quant_asym_matches_ref(r, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_arr(rng, r, c, 2.0)
+    s = (np.abs(rng.standard_normal((r, 1))) * 0.05 + 0.01).astype(np.float32)
+    z = np.round(rng.uniform(0, 255, (r, 1))).astype(np.float32)
+    got = fake_quant.fake_quant_asym_2d(jnp.array(x), jnp.array(s), jnp.array(z))
+    want = ref.fake_quant_asym(jnp.array(x), jnp.array(s), jnp.array(z))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4000),
+    lam=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_blend_matches_ref(n, lam, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    xq = rng.standard_normal(n).astype(np.float32)
+    got = blend.blend(jnp.array(x), jnp.array(xq), lam)
+    want = ref.blend(jnp.array(x), jnp.array(xq), lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 12),
+    k=st.integers(1, 200),
+    seed=st.integers(0, 2**31),
+)
+def test_reverse_prune_matches_ref_per_channel(c, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rand_arr(rng, c, k, 0.3)
+    tau = (np.abs(rng.standard_normal(c)) * 0.2 + 0.01).astype(np.float32)
+    got = reverse_prune.reverse_prune(jnp.array(w), jnp.array(tau), channel_axis=0)
+    want = ref.reverse_prune(jnp.array(w), jnp.array(tau).reshape(c, 1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # invariant: pinned at the boundary
+    assert np.all(np.abs(np.asarray(got)) <= tau.reshape(c, 1) + 1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_qmatmul_matches_int32_reference(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, k)) + 0.5).astype(np.float32)
+    w = (rng.standard_normal((k, n)) * 0.1).astype(np.float32)
+    sx, zx = 0.02, 12.0
+    sw = float(max(np.abs(w).max(), 1e-6) / 127.0)
+    wq = np.asarray(ref.quantize_sym(jnp.array(w), sw)).astype(np.int8)
+    got = qmatmul.qmatmul(jnp.array(x), jnp.array(wq), sx, zx, sw)
+    want = ref.qmatmul_int8(jnp.array(x), jnp.array(w), jnp.array(np.float32(sx)),
+                            jnp.array(np.float32(zx)), jnp.array(np.float32(sw)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-5)
+
+
+def test_fake_quant_output_on_grid():
+    """Quant-dequant output must land exactly on the integer grid."""
+    rng = np.random.default_rng(0)
+    x = rand_arr(rng, 4, 128, 2.0)
+    s = np.full((4, 1), 0.05, np.float32)
+    y = np.asarray(fake_quant.fake_quant_sym_2d(jnp.array(x), jnp.array(s)))
+    grid = np.round(y / 0.05)
+    np.testing.assert_allclose(y, grid * 0.05, atol=1e-6)
+    assert grid.min() >= -128 and grid.max() <= 127
+
+
+def test_fake_quant_idempotent():
+    """fq(fq(x)) == fq(x) — quantization is a projection."""
+    rng = np.random.default_rng(1)
+    x = rand_arr(rng, 2, 300, 1.0)
+    s = np.full((2, 1), 0.03, np.float32)
+    y1 = fake_quant.fake_quant_sym_2d(jnp.array(x), jnp.array(s))
+    y2 = fake_quant.fake_quant_sym_2d(y1, jnp.array(s))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_empirical_quantile_paper_definition():
+    """Golden values shared with rust/src/tensor (empirical_quantile)."""
+    data = jnp.array([float(i) for i in range(1, 11)])
+    assert float(ref.empirical_quantile(data, 0.5)) == 5.0
+    assert float(ref.empirical_quantile(data, 0.05)) == 1.0
+    assert float(ref.empirical_quantile(data, 0.90)) == 9.0
+    assert float(ref.empirical_quantile(data, 0.91)) == 10.0
+
+
+def test_act_scale_zp_matches_rust_golden():
+    """ref.act_scale_zp(-1, 2) -> s=3/255, z=85 (same golden in quantized.rs)."""
+    s, z = ref.act_scale_zp(jnp.float32(-1.0), jnp.float32(2.0))
+    assert abs(float(s) - 3.0 / 255.0) < 1e-8
+    assert float(z) == 85.0

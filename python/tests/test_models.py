@@ -1,0 +1,146 @@
+"""L2 model-graph sanity: IR construction, shape inference, spec generation,
+QIR serialization roundtrip, and the training step's semantic invariants
+(quantization off == quantization on at lambda=0, STE gradient flow)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ir, train
+from compile.models import BUILDERS
+from compile.quant import QuantCtx
+from compile import jax_exec
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = ir.Graph("tiny")
+    x = g.input("image", (3, 8, 8))
+    c = g.conv2d("c1", x, 8, 3, bias=False)
+    b = g.bn("bn1", c)
+    r = g.act("relu", "r1", b)
+    q = g.aq("q1", r)
+    p = g.gap("gap", q)
+    f = g.flatten("flat", p)
+    g.linear("head", f, 4)
+    return g
+
+
+@pytest.mark.parametrize("name", list(BUILDERS))
+def test_builders_produce_valid_graphs(name):
+    g = BUILDERS[name]()
+    # unique names, defined inputs (topological order)
+    seen = set()
+    for n in g.nodes:
+        for i in n.inputs:
+            assert i in seen, f"{n.name} references undefined {i}"
+        assert n.name not in seen
+        seen.add(n.name)
+    for o in g.output_names:
+        assert o in seen
+    # every graph has at least one quant point and one weight node
+    assert any(n.kind == "aq" for n in g.nodes)
+    assert any(n.kind in ir.WEIGHT_KINDS for n in g.nodes)
+
+
+@pytest.mark.parametrize("name", ["resnet18_c10", "vit", "mobilenetv3", "unet"])
+def test_forward_shapes(name):
+    g = BUILDERS[name]()
+    params = train.init_params(g, seed=0)
+    bnst = train.init_bn_state(g)
+    x = np.zeros((2,) + g.node("image").out_shape, np.float32)
+    ctx = QuantCtx("fp32", {})
+    out, _ = jax_exec.apply_graph(g, params, bnst, jnp.array(x), ctx, train=False)
+    expect = (2,) + g.node(g.output).out_shape
+    assert out.shape == expect
+
+
+def test_qir_serialization_roundtrip(tiny):
+    text = tiny.to_text()
+    assert text.startswith("qir tiny v1")
+    # reparse via the same textual contract the Rust side uses
+    lines = text.strip().split("\n")
+    assert lines[1] == "outputs head"
+    assert any("node conv2d c1" in l for l in lines)
+    assert any("cin=3" in l and "cout=8" in l for l in lines)
+
+
+def test_param_specs_cover_all_references(tiny):
+    params = train.init_params(tiny, seed=1)
+    specs = {name for name, _, _ in ir.param_specs(tiny)}
+    assert specs == set(params)
+    qspecs = dict(ir.qstate_specs(tiny))
+    assert "c1.m" in qspecs and qspecs["c1.m"] == (8,)
+    assert "c1.tau" in qspecs and qspecs["c1.tau"] == ()
+    assert "q1.lo" in qspecs and "q1.hi" in qspecs
+
+
+def test_lambda_zero_train_equals_fp32_forward(tiny):
+    """At lambda=0 the quant-trim forward must equal plain FP32 (train path
+    uses batch BN, so compare in eval mode with fake-quant ctx at lam=0)."""
+    params = train.init_params(tiny, seed=2)
+    bnst = train.init_bn_state(tiny)
+    qstate = train.init_qstate(tiny, params)
+    x = jnp.array(np.random.default_rng(0).standard_normal((2, 3, 8, 8)), jnp.float32)
+    ctx0 = QuantCtx("train", qstate, lam=jnp.float32(0.0))
+    y0, _ = jax_exec.apply_graph(tiny, params, bnst, x, ctx0, train=False)
+    ctxf = QuantCtx("fp32", {})
+    yf, _ = jax_exec.apply_graph(tiny, params, bnst, x, ctxf, train=False)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yf), atol=1e-6)
+
+
+def test_gradients_flow_at_full_fake_quant(tiny):
+    """STE: gradients must be nonzero for all params even at lambda=1."""
+    params = train.init_params(tiny, seed=3)
+    bnst = train.init_bn_state(tiny)
+    qstate = train.init_qstate(tiny, params)
+    x = jnp.array(np.random.default_rng(1).standard_normal((4, 3, 8, 8)), jnp.float32)
+    y = jnp.array([0, 1, 2, 3], jnp.int32)
+
+    def loss(p):
+        ctx = QuantCtx("train", qstate, lam=jnp.float32(1.0))
+        logits, _ = jax_exec.apply_graph(tiny, p, bnst, x, ctx, train=True)
+        return train.softmax_xent(logits, y)
+
+    grads = jax.grad(loss)(params)
+    for k, gv in grads.items():
+        assert np.all(np.isfinite(np.asarray(gv))), f"non-finite grad for {k}"
+    # the conv weight specifically must receive signal through the STE
+    assert float(jnp.abs(grads["c1.w"]).max()) > 0.0
+
+
+def test_train_step_updates_state_and_qstats(tiny):
+    params = train.init_params(tiny, seed=4)
+    bnst = train.init_bn_state(tiny)
+    qstate = train.init_qstate(tiny, params)
+    m, v = train.init_opt(params)
+    step = train.make_train_step(tiny, task="cls", mu=0.1)
+    x = np.random.default_rng(2).standard_normal((4, 3, 8, 8)).astype(np.float32)
+    y = np.array([0, 1, 2, 3], np.int32)
+    out = jax.jit(step)(params, bnst, qstate, m, v, jnp.float32(0), x, y,
+                        jnp.float32(0.5), jnp.float32(1e-3))
+    new_p, new_bn, new_q, _, _, new_step, loss, acc = out
+    assert float(new_step) == 1.0
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+    # params moved, bn stats moved, activation stats moved toward batch range
+    assert not np.allclose(np.asarray(new_p["c1.w"]), params["c1.w"])
+    assert not np.allclose(np.asarray(new_bn["bn1.mean"]), bnst["bn1.mean"])
+    assert float(new_q["q1.hi"]) != float(qstate["q1.hi"])
+
+
+def test_reverse_prune_pins_at_tau(tiny):
+    params = train.init_params(tiny, seed=5)
+    qstate = train.init_qstate(tiny, params, p_clip=0.9)
+    taus = {k: v for k, v in qstate.items() if k.endswith(".tau")}
+    rp = train.make_reverse_prune(tiny, p_clip=0.9, beta=1.0)
+    new_p, new_t = jax.jit(rp)(params, taus)
+    for wk in ("c1.w", "head.w"):
+        base = wk.rsplit(".", 1)[0]
+        tau = float(new_t[f"{base}.tau"])
+        assert float(jnp.abs(new_p[wk]).max()) <= tau + 1e-6
+        # tau == p90 quantile of |w| (beta=1: no EMA memory)
+        w = np.abs(np.asarray(params[wk]).ravel())
+        idx = min(len(w) - 1, max(0, int(np.ceil(0.9 * len(w))) - 1))
+        assert abs(tau - np.sort(w)[idx]) < 1e-6

@@ -1,0 +1,37 @@
+"""Curriculum golden values — identical assertions exist in
+rust/src/coordinator/schedule.rs so the two implementations cannot drift."""
+
+from compile.schedule import Curriculum
+
+
+def test_golden_lambda_values():
+    c = Curriculum(e_w=10, e_f=50, horizon=20)
+    assert c.lam(0) == 0.0
+    assert c.lam(9) == 0.0
+    assert c.lam(10) == 0.0
+    assert abs(c.lam(30) - 0.03125) < 1e-12
+    assert abs(c.lam(45) - 0.2930908203125) < 1e-12
+    assert abs(c.lam(50) - 0.5) < 1e-12
+    assert abs(c.lam(60) - 0.625) < 1e-12
+    assert c.lam(70) == 1.0
+    assert c.lam(1000) == 1.0
+
+
+def test_lambda_monotone():
+    c = Curriculum(e_w=10, e_f=50, horizon=20)
+    vals = [c.lam(t) for t in range(120)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert all(0.0 <= v <= 1.0 for v in vals)
+
+
+def test_transformer_cap():
+    c = Curriculum(e_w=10, e_f=50, horizon=20, lam_max=0.8)
+    assert c.lam(1000) == 0.8
+
+
+def test_prune_schedule():
+    c = Curriculum(e_w=10, e_f=50, horizon=20, prune_every=5)
+    assert not c.prune_now(9)
+    assert c.prune_now(10)
+    assert not c.prune_now(12)
+    assert c.prune_now(15)

@@ -1,0 +1,130 @@
+//! Engine hot-path microbenchmarks (the §Perf L3 profile): integer GEMM,
+//! im2col, conv f32 vs i8, activation quantization, full-model inference,
+//! and the PJRT-executed Pallas kernels. Custom harness (testutil::bench):
+//! 20 warmup + 200 timed iterations, medians — the paper's protocol.
+//!
+//!   cargo bench --bench engine_hotpath
+
+use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::TrainState;
+use quant_trim::data::{gen_cls_batch, ClsSpec};
+use quant_trim::engine::ops;
+use quant_trim::perfmodel::Precision;
+use quant_trim::tensor::{QuantScheme, QWeight, RoundMode, Tensor};
+use quant_trim::testutil::{bench, Rng};
+
+fn main() {
+    println!("=== engine hot paths (20 warmup + 200 timed, medians) ===");
+    let mut rng = Rng::new(0xBE7C);
+
+    // integer GEMM at the resnet stage-2 conv shape: (1024 rows, 288 cols) x 64
+    let rows = 1024;
+    let cols = 288;
+    let cout = 64;
+    let xq: Vec<u8> = (0..rows * cols).map(|_| rng.below(256) as u8).collect();
+    let wq: Vec<i8> = (0..cout * cols).map(|_| rng.below(255) as i8).collect();
+    let scales = vec![0.01f32; cout];
+    let mut out = vec![0.0f32; rows * cout];
+    let macs = (rows * cols * cout) as f64;
+    let r = bench("gemm_i8 1024x288x64", 20, 200, || {
+        ops::gemm_i8(&xq, rows, cols, &wq, cout, &scales, 0.02, 128, None, &mut out, cout, 0);
+    });
+    r.print();
+    println!("    -> {:.2} GMAC/s int8", macs / r.median_us / 1e3);
+
+    // f32 GEMM same shape
+    let xf: Vec<f32> = rng.normal_vec(rows * cols, 1.0);
+    let wf: Vec<f32> = rng.normal_vec(cout * cols, 0.1);
+    let col = ops::Im2Col { rows, cols, data: xf };
+    let r = bench("gemm_f32 1024x288x64", 20, 200, || {
+        ops::gemm_f32(&col, &wf, cout, &mut out, cout, 0);
+    });
+    r.print();
+    println!("    -> {:.2} GMAC/s f32", macs / r.median_us / 1e3);
+
+    // im2col on a (8, 32, 16, 16) activation, 3x3
+    let x = Tensor::new(vec![8, 32, 16, 16], rng.normal_vec(8 * 32 * 16 * 16, 1.0));
+    bench("im2col 8x32x16x16 k3", 20, 200, || {
+        std::hint::black_box(ops::im2col_group(&x, 0, 1, 3, 3, 1, 1, 16, 16));
+    })
+    .print();
+
+    // conv f32 vs i8, resnet block shape
+    let w = Tensor::new(vec![64, 32, 3, 3], rng.normal_vec(64 * 32 * 9, 0.1));
+    bench("conv2d_f32 8x32x16x16 -> 64", 5, 40, || {
+        std::hint::black_box(ops::conv2d_f32(&x, &w, None, 1, 1, 1));
+    })
+    .print();
+    let qw = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+    bench("conv2d_i8  8x32x16x16 -> 64", 5, 40, || {
+        std::hint::black_box(ops::conv2d_i8(&x, &qw, None, 1, 1, 1, 0.02, 128, RoundMode::TiesEven));
+    })
+    .print();
+
+    // weight + activation quantization
+    let big = Tensor::new(vec![256, 1152], rng.normal_vec(256 * 1152, 0.1));
+    bench("QWeight::quantize per-channel 256x1152", 20, 200, || {
+        std::hint::black_box(QWeight::quantize(&big, QuantScheme::PerChannelSym, RoundMode::TiesEven));
+    })
+    .print();
+
+    // end-to-end engine inference (the serving request path)
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("resnet18_c10.manifest").exists() {
+        let graph = quant_trim::qir::Graph::load(dir.join("resnet18_c10.qir")).unwrap();
+        let state = TrainState::from_checkpoint(
+            &Checkpoint::load(dir.join("resnet18_c10.init.qtckpt")).unwrap(),
+        );
+        let task = ClsSpec::cifar10();
+        let calib: Vec<Tensor> =
+            (0..2).map(|i| gen_cls_batch(task, 8, 500 + i).images).collect();
+        let be = backend_by_name("hardware_d").unwrap();
+        let view = CheckpointView {
+            graph: &graph,
+            params: &state.params,
+            bn: &state.bn,
+            qstate: &state.qstate,
+        };
+        let dep = be
+            .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
+            .unwrap();
+        let b1 = gen_cls_batch(task, 1, 3).images;
+        let r = bench("engine resnet18 int8 forward b=1", 20, 200, || {
+            std::hint::black_box(dep.model.run(&b1).unwrap());
+        });
+        r.print();
+        println!("    -> {:.1} FPS measured (rust engine, single thread)", 1e6 / r.median_us);
+        let b8 = gen_cls_batch(task, 8, 3).images;
+        let r = bench("engine resnet18 int8 forward b=8", 3, 20, || {
+            std::hint::black_box(dep.model.run(&b8).unwrap());
+        });
+        r.print();
+        println!("    -> {:.1} FPS measured at batch 8", 8e6 / r.median_us);
+
+        // PJRT-executed Pallas kernels (the L1 artifacts)
+        if let Ok(rt) = quant_trim::runtime::Runtime::cpu() {
+            let man =
+                quant_trim::runtime::Manifest::load(dir.join("kernels.manifest")).unwrap();
+            let f = rt.load_fn(&man, "fake_quant").unwrap();
+            let xk = Tensor::new(vec![64, 4096], rng.normal_vec(64 * 4096, 1.0));
+            bench("pallas fake_quant 64x4096 (PJRT)", 20, 200, || {
+                std::hint::black_box(f.call_tensors(std::slice::from_ref(&xk)).unwrap());
+            })
+            .print();
+            let f = rt.load_fn(&man, "qmatmul").unwrap();
+            let a = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 1.0));
+            let w2 = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 0.05));
+            let r = bench("pallas qmatmul 256^3 (PJRT, interpret)", 3, 15, || {
+                std::hint::black_box(f.call_tensors(&[a.clone(), w2.clone()]).unwrap());
+            });
+            r.print();
+            println!(
+                "    -> {:.3} GMAC/s (interpret-mode grid loop; structure, not speed, is the target)",
+                (256f64 * 256.0 * 256.0) / r.median_us / 1e3
+            );
+        }
+    } else {
+        println!("(artifacts/ not built: skipping model-level benches)");
+    }
+}

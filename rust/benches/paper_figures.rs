@@ -1,0 +1,150 @@
+//! Regenerates every FIGURE's data series (DESIGN.md §4 index):
+//!
+//!   Fig 2  — weight-tail compression + activation-range narrowing (QT vs MAP)
+//!   Fig 3  — power-throughput trade-off, DINOv2-proxy + ResNet, all devices
+//!   Fig 4/5/10 — training-dynamics curves (from cached run logs if present;
+//!            full curves come from examples/train_cifar — they need minutes
+//!            of training, not bench time)
+//!   Fig 7  — NanoSAM2 end-to-end latency ordering across accelerators
+//!   Fig 8/9 — ablation convergence + weight distributions (examples/ablation)
+//!   Fig 11 — MobileNetV3s + U-Net power/perf across devices
+//!
+//!   cargo bench --bench paper_figures [fig3|fig7|fig11|fig2]
+
+use anyhow::Result;
+
+use quant_trim::backends::all_backends;
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::experiment::artifacts_dir;
+use quant_trim::coordinator::TrainState;
+use quant_trim::metrics::dist_summary;
+use quant_trim::perfmodel::{tiles_for, Precision};
+
+fn want(which: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| a == which)
+}
+
+fn power_throughput(dir: &std::path::Path, model: &str, fig: &str) -> Result<()> {
+    let graph = quant_trim::coordinator::experiment::perf_graph(&dir, model)?;
+    println!("\n=== {fig}: {model} — batch=1 FPS vs power (color=device, marker=precision, filled=vendor runtime) ===");
+    println!(
+        "{:<18} {:<5} {:<8} {:>10} {:>9} {:>9} {:>11}",
+        "device", "prec", "runtime", "FPS", "peak W", "avg W", "mJ/inf"
+    );
+    for be in all_backends() {
+        for prec in be.precisions.clone() {
+            let r = be.perf(&graph, prec, 1);
+            println!(
+                "{:<18} {:<5} {:<8} {:>10.1} {:>9.2} {:>9.2} {:>11.3}",
+                be.name, prec.label(), "vendor", r.fps, r.peak_power_w, r.avg_power_w,
+                r.energy_mj_per_inf
+            );
+            if be.runtime_boost > 1.0 {
+                let n = be.perf_naive(&graph, prec, 1);
+                println!(
+                    "{:<18} {:<5} {:<8} {:>10.1} {:>9.2} {:>9.2} {:>11.3}",
+                    be.name, prec.label(), "naive", n.fps, n.peak_power_w, n.avg_power_w,
+                    n.energy_mj_per_inf
+                );
+            }
+        }
+    }
+    // shape assertions the paper reports
+    let trt = all_backends().into_iter().find(|b| b.name == "jetson_orin_nano").unwrap();
+    let f16_trt = trt.perf(&graph, Precision::Fp16, 1).fps;
+    let f16_naive = trt.perf_naive(&graph, Precision::Fp16, 1).fps;
+    let f32_trt = trt.perf(&graph, Precision::Fp32, 1).fps;
+    println!(
+        "shapes: TRT-FP16 {:.0} FPS vs naive {:.0} ({}x, paper: ~2.5x); FP16 vs FP32 {:.1}x (paper: 2-3x)",
+        f16_trt,
+        f16_naive,
+        (f16_trt / f16_naive).round(),
+        f16_trt / f32_trt
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir()?;
+
+    if want("fig2") {
+        println!("=== Fig 2: distributional effect of Quant-Trim ===");
+        let mut shown = false;
+        for (label, file) in [
+            ("Quant-Trim", "resnet18.trained_qt.qtckpt"),
+            ("MAP", "resnet18.trained_map.qtckpt"),
+        ] {
+            let p = dir.join(file);
+            if !p.exists() {
+                continue;
+            }
+            shown = true;
+            let st = TrainState::from_checkpoint(&Checkpoint::load(p)?);
+            let mut all: Vec<f32> = Vec::new();
+            for (k, t) in &st.params {
+                if k.ends_with(".w") {
+                    all.extend_from_slice(&t.data);
+                }
+            }
+            let d = dist_summary(&all);
+            println!(
+                "{:<12} |w|: p50={:.4} p99={:.4} p99.9={:.4} max={:.4} tail_ratio={:.2} kurtosis={:.2}",
+                label, d.p50, d.p99, d.p999, d.max, d.tail_ratio, d.kurtosis
+            );
+        }
+        if !shown {
+            println!("(run examples/train_cifar first to produce trained checkpoints)");
+        }
+    }
+
+    if want("fig3") {
+        // ResNet-50 and the DINOv2 proxy, as in the paper's Fig 3 panels
+        power_throughput(&dir, "vit", "Fig 3 (left, DINOv2 proxy)")?;
+        power_throughput(&dir, "resnet50", "Fig 3 (right, ResNet-50)")?;
+    }
+
+    if want("fig7") {
+        let sam = quant_trim::coordinator::experiment::perf_graph(&dir, "sam")?;
+        let tiles = tiles_for(2000, 512, 0.5);
+        println!("\n=== Fig 7: NanoSAM2 e2e across accelerators (512^2 tiles, 50% overlap, {tiles} tiles for 2k images) ===");
+        let mut rows: Vec<(String, f64, f64)> = Vec::new();
+        for (name, prec) in [
+            ("rtx3090", Precision::Fp16),
+            ("jetson_orin_nano", Precision::Fp16),
+            ("jetson_agx_orin", Precision::Fp16),
+            ("hardware_a", Precision::Int8),
+            ("hardware_b", Precision::Bf16),
+            ("hardware_d", Precision::Int8),
+        ] {
+            let be = all_backends().into_iter().find(|b| b.name == name).unwrap();
+            let r = be.perf(&sam, prec, 1);
+            rows.push((format!("{name} ({})", prec.label()), r.latency_ms, r.peak_power_w));
+        }
+        rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (n, lat, w) in &rows {
+            println!("{:<28} {:>8.3} ms/tile @ {:>5.1} W", n, lat, w);
+        }
+    }
+
+    if want("fig4") || want("fig5") || want("fig10") || want("fig8") {
+        println!("\n=== Figs 4/5/8/10: training-dynamics curves ===");
+        println!("(generated by the training drivers — minutes of training, not bench time)");
+        println!("  Fig 4:  cargo run --release --example train_cifar -- --model vit");
+        println!("  Fig 5:  cargo run --release --example train_cifar -- --model resnet18");
+        println!("  Fig 8:  cargo run --release --example ablation");
+        println!("  Fig 10: cargo run --release --example train_cifar -- --model unet --task seg");
+        for f in ["results/experiments_run1.log"] {
+            if std::path::Path::new(f).exists() {
+                println!("  (cached curves found in {f}: grep '\\[curve\\]' / '\\[fig8\\]')");
+            }
+        }
+    }
+
+    if want("fig11") {
+        power_throughput(&dir, "mobilenetv3", "Fig 11 (MobileNetV3-Small)")?;
+        power_throughput(&dir, "unet", "Fig 11 (U-Net)")?;
+    }
+
+    Ok(())
+}

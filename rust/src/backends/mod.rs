@@ -1,0 +1,319 @@
+//! Simulated vendor NPU/GPU backends (paper §A.1/A.2, Tables 4-6).
+//!
+//! Each backend is a "black-box compiler": it takes the hardware-neutral
+//! checkpoint (QIR graph + float params + optional embedded QAT stats) and
+//! makes its own opaque choices — weight scheme (per-channel vs per-tensor),
+//! rounding mode, activation precision, calibration observer, operator
+//! coverage. This is exactly the heterogeneity the paper's method is designed
+//! to be robust to; the accuracy consequences are evaluated with the
+//! bit-exact integer engine, the latency/power consequences with the
+//! roofline perf model.
+
+pub mod devices;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::calib::{self, CalibMethod, Calibration};
+use crate::engine::{ActMode, CompiledModel, ExecConfig, WeightMode};
+use crate::perfmodel::{self, PerfReport, Precision};
+use crate::qir::{passes, Graph};
+use crate::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
+
+pub use devices::{all_backends, backend_by_name, BackendKind};
+
+/// Where activation ranges come from at compile time (paper Table 4
+/// "Act. scaling @ inference").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RangeSource {
+    /// Offline calibration on a representative dataset.
+    Calibration,
+    /// QAT statistics embedded in the checkpoint (Quant-Trim qstate).
+    QatScales,
+}
+
+/// One vendor toolchain's fixed choices.
+#[derive(Clone, Debug)]
+pub struct BackendSpec {
+    pub name: &'static str,
+    pub device: perfmodel::DeviceSpec,
+    /// Precisions this toolchain can compile for (first = default).
+    pub precisions: Vec<Precision>,
+    pub weight_scheme: QuantScheme,
+    pub round: RoundMode,
+    pub calib: CalibMethod,
+    /// Whether the compiler can consume embedded QAT scales.
+    pub accepts_qat_scales: bool,
+    /// Node kinds this toolchain cannot map to its kernels (host fallback).
+    pub unsupported: &'static [&'static str],
+    /// Runtime efficiency boost of the vendor's compiled runtime vs naive
+    /// kernel dispatch (TensorRT vs CUDA on NVIDIA parts).
+    pub runtime_boost: f64,
+    /// Whether an INT deployment *requires* a calibration dataset
+    /// (Table 4 "PTQ calib.").
+    pub needs_calib_for_int: bool,
+}
+
+/// Inputs to a backend compile: the hardware-neutral checkpoint contents.
+pub struct CheckpointView<'a> {
+    pub graph: &'a Graph,
+    pub params: &'a BTreeMap<String, Tensor>,
+    pub bn: &'a BTreeMap<String, Tensor>,
+    /// Quant-Trim QAT statistics (empty for MAP checkpoints).
+    pub qstate: &'a BTreeMap<String, Tensor>,
+}
+
+/// Extra PTQ tricks a deployment may enable (Table 3 baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PtqOptions {
+    pub equalization: bool,
+    pub adaround: bool,
+}
+
+/// A compiled deployment: the executable model + modelled edge metrics.
+pub struct Deployment {
+    pub model: CompiledModel,
+    pub precision: Precision,
+    pub backend: &'static str,
+    pub perf_b1: PerfReport,
+}
+
+impl BackendSpec {
+    pub fn default_precision(&self) -> Precision {
+        self.precisions[0]
+    }
+
+    /// Compile the checkpoint for this backend at the given precision.
+    ///
+    /// `calib_batches` may be empty only if the backend doesn't require
+    /// calibration (BF16/FP16 paths, or QAT-scale consumption).
+    pub fn compile(
+        &self,
+        ckpt: CheckpointView<'_>,
+        precision: Precision,
+        range_source: RangeSource,
+        calib_batches: &[Tensor],
+        ptq: PtqOptions,
+    ) -> Result<Deployment> {
+        if !self.precisions.contains(&precision) {
+            bail!("backend {} does not support {:?}", self.name, precision);
+        }
+        // 1. every toolchain folds BN first
+        let (graph, mut params, fold_factors) =
+            passes::fold_bn(ckpt.graph, ckpt.params, ckpt.bn)?;
+
+        // 2. optional cross-layer equalization (PTQ baseline)
+        if ptq.equalization {
+            passes::cross_layer_equalization(&graph, &mut params);
+        }
+
+        let (weight_mode, act_mode) = match precision {
+            Precision::Int8 => (WeightMode::Int8, ActMode::Int8 { round: self.round }),
+            Precision::Bf16 => (WeightMode::Int8, ActMode::Bf16), // W8/ABF16 hybrid
+            Precision::Fp16 => (WeightMode::F32, ActMode::F16),
+            Precision::Fp32 => (WeightMode::F32, ActMode::F32),
+        };
+
+        // 3. activation ranges (INT8 only)
+        let mut calibration = Calibration::default();
+        if matches!(act_mode, ActMode::Int8 { .. }) {
+            let use_qat =
+                range_source == RangeSource::QatScales && self.accepts_qat_scales && !ckpt.qstate.is_empty();
+            if !use_qat && calib_batches.is_empty() && self.needs_calib_for_int {
+                bail!("backend {} requires a calibration dataset for INT8", self.name);
+            }
+            // compiler statistics pass: even QAT-scale deployments run the
+            // compiler's own observer for tensors without embedded scales
+            if !calib_batches.is_empty() {
+                let fp = CompiledModel {
+                    graph: graph.clone(),
+                    params: params.clone(),
+                    bn: BTreeMap::new(),
+                    qweights: Default::default(),
+                    act_ranges: Default::default(),
+                    cfg: ExecConfig::FP32,
+                };
+                calibration = calib::calibrate(&fp, calib_batches, self.calib)?;
+            }
+            if use_qat {
+                // embedded QAT scales take precedence at the quantization
+                // points the checkpoint trained (aq nodes)
+                let qat = calib::ranges_from_qstate(ckpt.qstate, &graph);
+                for (k, v) in qat.ranges {
+                    calibration.ranges.insert(k, v);
+                }
+            }
+            let input_range = input_range_of(calib_batches);
+            calib::propagate_ranges(&graph, &mut calibration, input_range);
+        }
+
+        // 4. weight quantization
+        let mut qweights = std::collections::HashMap::new();
+        if weight_mode == WeightMode::Int8 {
+            for n in graph.weight_nodes() {
+                let keys: Vec<String> = match n.kind.as_str() {
+                    "attention" => ["wq", "wk", "wv", "wo"]
+                        .iter()
+                        .map(|m| format!("{}.{m}", n.name))
+                        .collect(),
+                    _ => vec![format!("{}.w", n.name)],
+                };
+                for key in keys {
+                    let Some(w) = params.get(&key) else { continue };
+                    let mut qw = if range_source == RangeSource::QatScales
+                        && self.accepts_qat_scales
+                    {
+                        // embedded QAT scales: per-channel m EMA from qstate
+                        let mkey = if n.kind == "attention" {
+                            format!("{key}.m")
+                        } else {
+                            format!("{}.m", n.name)
+                        };
+                        match ckpt.qstate.get(&mkey) {
+                            Some(m) => {
+                                // embedded stats were computed on UNfolded
+                                // weights; transport through the BN fold
+                                // factor |gamma|/sqrt(var+eps) per channel
+                                let facs = fold_factors.get(n.name.as_str());
+                                let scales: Vec<f32> = m
+                                    .data
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(c, &v)| {
+                                        let f = facs
+                                            .map(|fv| fv[c.min(fv.len() - 1)])
+                                            .unwrap_or(1.0);
+                                        crate::tensor::weight_scale(v * f)
+                                    })
+                                    .collect();
+                                let scales = match self.weight_scheme {
+                                    QuantScheme::PerChannelSym => scales,
+                                    QuantScheme::PerTensorSym => {
+                                        vec![scales.iter().fold(0.0f32, |a, &b| a.max(b))]
+                                    }
+                                };
+                                QWeight::quantize_with_scales(w, &scales, self.round)
+                            }
+                            None => QWeight::quantize(w, self.weight_scheme, self.round),
+                        }
+                    } else {
+                        QWeight::quantize(w, self.weight_scheme, self.round)
+                    };
+                    // 5. optional AdaRound refinement on calibration data
+                    if ptq.adaround && !calib_batches.is_empty() && n.kind != "attention" {
+                        qw = adaround_refine(&graph, &params, &n.name, w, qw, calib_batches)?;
+                    }
+                    qweights.insert(key, qw);
+                }
+            }
+        }
+
+        let model = CompiledModel {
+            graph,
+            params,
+            bn: BTreeMap::new(),
+            qweights,
+            act_ranges: calibration.ranges,
+            cfg: ExecConfig { weight_mode, act_mode },
+        };
+        let unsupported = self.unsupported;
+        let perf_b1 = perfmodel::estimate(
+            &model.graph,
+            &self.device,
+            precision,
+            1,
+            self.runtime_boost,
+            &|kind| unsupported.contains(&kind),
+        );
+        Ok(Deployment { model, precision, backend: self.name, perf_b1 })
+    }
+
+    pub fn perf(&self, graph: &Graph, precision: Precision, batch: usize) -> PerfReport {
+        let unsupported = self.unsupported;
+        perfmodel::estimate(graph, &self.device, precision, batch, self.runtime_boost, &|k| {
+            unsupported.contains(&k)
+        })
+    }
+
+    /// Perf with naive kernel dispatch (the "CUDA" unfilled markers in Fig 3).
+    pub fn perf_naive(&self, graph: &Graph, precision: Precision, batch: usize) -> PerfReport {
+        let unsupported = self.unsupported;
+        perfmodel::estimate(graph, &self.device, precision, batch, 1.0, &|k| {
+            unsupported.contains(&k)
+        })
+    }
+}
+
+fn input_range_of(batches: &[Tensor]) -> (f32, f32) {
+    let mut lo = -2.5f32;
+    let mut hi = 2.5f32;
+    if !batches.is_empty() {
+        lo = f32::MAX;
+        hi = f32::MIN;
+        for b in batches {
+            for &v in &b.data {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    (lo, hi)
+}
+
+/// Run the fp32 model to collect this layer's input activations, then refine
+/// the rounding (calib::adaround).
+fn adaround_refine(
+    graph: &Graph,
+    params: &BTreeMap<String, Tensor>,
+    node_name: &str,
+    w: &Tensor,
+    qw: QWeight,
+    calib_batches: &[Tensor],
+) -> Result<QWeight> {
+    let node = graph.node(node_name).unwrap();
+    let producer = node.inputs[0].clone();
+    let fp = CompiledModel {
+        graph: graph.clone(),
+        params: params.clone(),
+        bn: BTreeMap::new(),
+        qweights: Default::default(),
+        act_ranges: Default::default(),
+        cfg: ExecConfig::FP32,
+    };
+    // collect (subsampled) inputs of this node
+    let mut xs: Vec<f32> = Vec::new();
+    let take = |t: &Tensor, xs: &mut Vec<f32>| {
+        let budget = 16_384usize.saturating_sub(xs.len());
+        if budget == 0 {
+            return;
+        }
+        let stride = (t.data.len() / budget.max(1)).max(1);
+        xs.extend(t.data.iter().step_by(stride).take(budget).copied());
+    };
+    for b in calib_batches.iter().take(2) {
+        let mut obs = |name: &str, t: &Tensor| {
+            if name == producer {
+                take(t, &mut xs);
+            }
+        };
+        fp.run_observe(b, &mut obs)?;
+    }
+    if xs.is_empty() {
+        return Ok(qw);
+    }
+    // adaround works on (cout, k) weight rows vs k-dim input samples; for conv
+    // we approximate with channel-averaged inputs (the standard fast variant).
+    let k = w.data.len() / w.shape[0];
+    let samples = (xs.len() / k).max(1);
+    xs.truncate(samples * k);
+    if xs.len() < k {
+        return Ok(qw);
+    }
+    Ok(crate::calib::adaround::refine_qweight(
+        &Tensor::new(vec![w.shape[0], k], w.data.clone()),
+        &qw,
+        &xs,
+        k,
+    ))
+}

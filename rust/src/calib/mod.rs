@@ -1,0 +1,343 @@
+//! Activation calibration: the offline range-estimation step every static-INT8
+//! NPU toolchain runs on a representative dataset (paper Table 4 "PTQ calib").
+//!
+//! Observers (per vendor style):
+//! * MinMax       — RKNN-style, cheapest, most outlier-fragile
+//! * Percentile   — clip at p/1-p quantiles (Hailo-style)
+//! * Entropy      — KL-divergence threshold search (TensorRT-style)
+//! * Mse          — pick the clip minimizing quant-dequant MSE (compiler-
+//!                  provided static scaling, Hardware D style)
+//!
+//! Also hosts the Table 3 baseline: AdaRound-like weight rounding (adaround.rs).
+
+pub mod adaround;
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::engine::CompiledModel;
+use crate::tensor::{empirical_quantile, Tensor};
+use crate::testutil::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CalibMethod {
+    MinMax,
+    Percentile(f64),
+    Entropy,
+    Mse,
+}
+
+/// Streaming per-node statistics with a bounded reservoir sample.
+struct NodeStats {
+    lo: f32,
+    hi: f32,
+    reservoir: Vec<f32>,
+    seen: u64,
+}
+
+const RESERVOIR: usize = 32_768;
+
+impl NodeStats {
+    fn new() -> Self {
+        NodeStats { lo: f32::MAX, hi: f32::MIN, reservoir: Vec::new(), seen: 0 }
+    }
+
+    fn update(&mut self, t: &Tensor, rng: &mut Rng) {
+        for &v in &t.data {
+            self.lo = self.lo.min(v);
+            self.hi = self.hi.max(v);
+            self.seen += 1;
+            if self.reservoir.len() < RESERVOIR {
+                self.reservoir.push(v);
+            } else {
+                // reservoir sampling keeps a uniform subsample
+                let j = (rng.next_u64() % self.seen) as usize;
+                if j < RESERVOIR {
+                    self.reservoir[j] = v;
+                }
+            }
+        }
+    }
+}
+
+/// Result of calibration: static (lo, hi) per node output.
+#[derive(Clone, Debug, Default)]
+pub struct Calibration {
+    pub ranges: HashMap<String, (f32, f32)>,
+}
+
+/// Run the FP32 model over the calibration batches and derive static ranges
+/// with the chosen observer.
+pub fn calibrate(
+    model: &CompiledModel,
+    batches: &[Tensor],
+    method: CalibMethod,
+) -> Result<Calibration> {
+    let mut stats: HashMap<String, NodeStats> = HashMap::new();
+    let mut rng = Rng::new(0xCA11B);
+    for x in batches {
+        let mut obs = |name: &str, t: &Tensor| {
+            stats.entry(name.to_string()).or_insert_with(NodeStats::new).update(t, &mut rng);
+        };
+        model.run_observe(x, &mut obs)?;
+    }
+    let mut ranges = HashMap::new();
+    for (name, s) in stats {
+        let range = derive_range(&s, method);
+        ranges.insert(name, range);
+    }
+    Ok(Calibration { ranges })
+}
+
+fn derive_range(s: &NodeStats, method: CalibMethod) -> (f32, f32) {
+    if s.reservoir.is_empty() {
+        return (0.0, 1.0);
+    }
+    match method {
+        CalibMethod::MinMax => (s.lo, s.hi),
+        CalibMethod::Percentile(p) => {
+            let lo = empirical_quantile(&s.reservoir, 1.0 - p);
+            let hi = empirical_quantile(&s.reservoir, p);
+            (lo.min(s.lo.max(lo)), hi)
+        }
+        CalibMethod::Entropy => entropy_range(s),
+        CalibMethod::Mse => mse_range(s),
+    }
+}
+
+/// KL-divergence threshold search over a 2048-bin histogram of the sample
+/// (TensorRT-style, simplified to the positive+negative amplitude axis).
+fn entropy_range(s: &NodeStats) -> (f32, f32) {
+    const BINS: usize = 2048;
+    const LEVELS: usize = 256;
+    let amax = s.reservoir.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6);
+    let mut hist = vec![0.0f64; BINS];
+    for &v in &s.reservoir {
+        let b = ((v.abs() / amax) * (BINS as f32 - 1.0)) as usize;
+        hist[b.min(BINS - 1)] += 1.0;
+    }
+    let mut best_kl = f64::MAX;
+    let mut best_t = BINS;
+    // candidate thresholds from 25% up
+    let start = BINS / 4;
+    for t in (start..=BINS).step_by(16) {
+        let kl = kl_for_threshold(&hist, t, LEVELS);
+        if kl < best_kl {
+            best_kl = kl;
+            best_t = t;
+        }
+    }
+    let clip = amax * best_t as f32 / BINS as f32;
+    // preserve asymmetry of the observed range within the clip amplitude
+    (s.lo.max(-clip), s.hi.min(clip))
+}
+
+fn kl_for_threshold(hist: &[f64], t: usize, levels: usize) -> f64 {
+    // reference distribution: clip everything beyond t into the edge bin
+    let mut p: Vec<f64> = hist[..t].to_vec();
+    let outliers: f64 = hist[t..].iter().sum();
+    if let Some(last) = p.last_mut() {
+        *last += outliers;
+    }
+    // candidate: quantize p to `levels` bins, then expand back
+    let mut q = vec![0.0f64; t];
+    let merge = (t as f64 / levels as f64).max(1.0);
+    for lv in 0..levels {
+        let a = (lv as f64 * merge) as usize;
+        let b = (((lv + 1) as f64 * merge) as usize).min(t);
+        if a >= b {
+            continue;
+        }
+        let total: f64 = p[a..b].iter().sum();
+        let nonzero = p[a..b].iter().filter(|&&v| v > 0.0).count().max(1);
+        let fill = total / nonzero as f64;
+        for i in a..b {
+            if p[i] > 0.0 {
+                q[i] = fill;
+            }
+        }
+    }
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    if sp <= 0.0 || sq <= 0.0 {
+        return f64::MAX;
+    }
+    let mut kl = 0.0;
+    for i in 0..t {
+        let pi = p[i] / sp;
+        let qi = q[i] / sq;
+        if pi > 0.0 && qi > 0.0 {
+            kl += pi * (pi / qi).ln();
+        } else if pi > 0.0 {
+            kl += pi * 10.0; // heavy penalty for zero support
+        }
+    }
+    kl
+}
+
+/// Grid-search the clip range minimizing u8 quant-dequant MSE on the sample.
+fn mse_range(s: &NodeStats) -> (f32, f32) {
+    let mut best = (s.lo, s.hi);
+    let mut best_err = f64::MAX;
+    for frac in [1.0f32, 0.99, 0.97, 0.95, 0.92, 0.88, 0.84, 0.80, 0.75, 0.70] {
+        let lo = s.lo * frac;
+        let hi = s.hi * frac;
+        let (sc, zp) = crate::tensor::act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+        let mut err = 0.0f64;
+        for &v in &s.reservoir {
+            let q = ((v / sc).round_ties_even() + zp as f32).clamp(0.0, 255.0);
+            let d = (q - zp as f32) * sc;
+            err += ((v - d) as f64).powi(2);
+        }
+        if err < best_err {
+            best_err = err;
+            best = (lo, hi);
+        }
+    }
+    best
+}
+
+/// Ranges taken from the Quant-Trim checkpoint's embedded QAT statistics
+/// (aq-node lo/hi EMAs) instead of a calibration run — the "QAT scales
+/// embedded in the graph" path of paper Table 4.
+pub fn ranges_from_qstate(
+    qstate: &std::collections::BTreeMap<String, Tensor>,
+    graph: &crate::qir::Graph,
+) -> Calibration {
+    let mut ranges = HashMap::new();
+    for n in &graph.nodes {
+        if n.kind == "aq" {
+            if let (Some(lo), Some(hi)) =
+                (qstate.get(&format!("{}.lo", n.name)), qstate.get(&format!("{}.hi", n.name)))
+            {
+                ranges.insert(n.name.clone(), (lo.data[0], hi.data[0]));
+            }
+        }
+    }
+    Calibration { ranges }
+}
+
+/// Propagate known ranges to nodes that calibration didn't cover, walking the
+/// graph and reusing the producer's range through shape/range-preserving ops.
+/// Ensures every compute-node input has a static range (QAT-scale deployments
+/// only know ranges at aq points).
+pub fn propagate_ranges(graph: &crate::qir::Graph, calib: &mut Calibration, input_range: (f32, f32)) {
+    for n in &graph.nodes {
+        if calib.ranges.contains_key(&n.name) {
+            continue;
+        }
+        let r = match n.kind.as_str() {
+            "input" => input_range,
+            // range-preserving (or range-shrinking) ops inherit producer range
+            "reshape" | "flatten" | "to_tokens" | "maxpool" | "upsample2x" | "aq" | "gap"
+            | "avgpool" | "tokmean" => {
+                n.inputs.first().and_then(|i| calib.ranges.get(i)).copied().unwrap_or(input_range)
+            }
+            "relu" => {
+                let (_, hi) = n
+                    .inputs
+                    .first()
+                    .and_then(|i| calib.ranges.get(i))
+                    .copied()
+                    .unwrap_or(input_range);
+                (0.0, hi.max(1e-6))
+            }
+            "relu6" => (0.0, 6.0),
+            "hsigmoid" | "sigmoid" => (0.0, 1.0),
+            "concat" | "add" => {
+                let mut lo = f32::MAX;
+                let mut hi = f32::MIN;
+                for i in &n.inputs {
+                    if let Some(&(l, h)) = calib.ranges.get(i) {
+                        lo = lo.min(l);
+                        hi = hi.max(h);
+                    }
+                }
+                if n.kind == "add" {
+                    // conservative: sum can reach the sum of extremes
+                    (lo.min(0.0) * 1.5, hi.max(1e-6) * 1.5)
+                } else {
+                    (lo.min(0.0), hi.max(1e-6))
+                }
+            }
+            _ => {
+                // compute nodes without calibrated output: inherit producer,
+                // widened (weights can amplify)
+                let (lo, hi) = n
+                    .inputs
+                    .first()
+                    .and_then(|i| calib.ranges.get(i))
+                    .copied()
+                    .unwrap_or(input_range);
+                (lo.min(0.0) * 2.0 - 1.0, hi * 2.0 + 1.0)
+            }
+        };
+        calib.ranges.insert(n.name.clone(), r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn stats_from(vals: &[f32]) -> NodeStats {
+        let mut s = NodeStats::new();
+        let mut rng = Rng::new(1);
+        s.update(&Tensor::new(vec![vals.len()], vals.to_vec()), &mut rng);
+        s
+    }
+
+    #[test]
+    fn minmax_covers_outliers_percentile_clips_them() {
+        let mut rng = Rng::new(9);
+        let mut vals: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        vals.push(100.0); // outlier
+        let s = stats_from(&vals);
+        let (_, hi_mm) = derive_range(&s, CalibMethod::MinMax);
+        let (_, hi_p) = derive_range(&s, CalibMethod::Percentile(0.999));
+        assert!(hi_mm >= 100.0);
+        assert!(hi_p < 10.0, "percentile should clip the outlier, got {hi_p}");
+    }
+
+    #[test]
+    fn mse_range_clips_heavy_tails() {
+        let mut rng = Rng::new(11);
+        let vals: Vec<f32> = (0..20_000).map(|_| rng.heavy_tail(0.001, 50.0)).collect();
+        let s = stats_from(&vals);
+        let (lo, hi) = derive_range(&s, CalibMethod::Mse);
+        assert!(hi < s.hi || lo > s.lo, "mse calibration should shrink the range");
+    }
+
+    #[test]
+    fn entropy_range_reasonable_on_gaussian() {
+        let mut rng = Rng::new(13);
+        let vals: Vec<f32> = (0..20_000).map(|_| rng.normal()).collect();
+        let s = stats_from(&vals);
+        let (lo, hi) = derive_range(&s, CalibMethod::Entropy);
+        assert!(hi > 1.0 && hi < 6.0, "hi {hi}");
+        assert!(lo < -1.0 && lo > -6.0, "lo {lo}");
+    }
+
+    #[test]
+    fn propagate_fills_every_node() {
+        let g = crate::qir::Graph::parse(
+            "qir p v1\noutputs head\n\
+             node input image inputs=- shape=3,4,4\n\
+             node conv2d c1 inputs=image shape=4,4,4 bias=0 cin=3 cout=4 groups=1 kh=3 kw=3 pad=1 stride=1\n\
+             node relu r1 inputs=c1 shape=4,4,4\n\
+             node aq q1 inputs=r1 shape=4,4,4\n\
+             node gap g1 inputs=q1 shape=4,1,1\n\
+             node flatten f1 inputs=g1 shape=4\n\
+             node linear head inputs=f1 shape=2 bias=1 din=4 dout=2\n",
+        )
+        .unwrap();
+        let mut calib = Calibration::default();
+        calib.ranges.insert("q1".into(), (0.0, 3.0));
+        propagate_ranges(&g, &mut calib, (-2.0, 2.0));
+        for n in &g.nodes {
+            assert!(calib.ranges.contains_key(&n.name), "missing range for {}", n.name);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! `.qtckpt` checkpoint reader/writer — binary twin of `python/compile/ckpt.py`.
+//!
+//! Checkpoints hold the full training state as named f32 tensors with
+//! role prefixes: `param/...`, `bn/...`, `qstate/...` (and `opt_m/`, `opt_v/`
+//! once training has started on the Rust side).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"QTCK";
+const VERSION: u32 = 1;
+
+/// An ordered (BTreeMap — sorted keys, matching jax dict flattening order)
+/// collection of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        if buf.len() < 12 || &buf[..4] != MAGIC {
+            bail!("bad .qtckpt magic");
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into()?);
+        if version != VERSION {
+            bail!("unsupported .qtckpt version {version}");
+        }
+        let count = u32::from_le_bytes(buf[8..12].try_into()?) as usize;
+        let mut off = 12;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(buf[off..off + 2].try_into()?) as usize;
+            off += 2;
+            let name = std::str::from_utf8(&buf[off..off + nlen])?.to_string();
+            off += nlen;
+            let dtype = buf[off];
+            let ndim = buf[off + 1] as usize;
+            off += 2;
+            if dtype != 0 {
+                bail!("unsupported dtype {dtype} for {name}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(buf[off..off + 4].try_into()?) as usize);
+                off += 4;
+            }
+            let n: usize = shape.iter().product();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                data.push(f32::from_le_bytes(buf[off + 4 * i..off + 4 * i + 4].try_into()?));
+            }
+            off += 4 * n;
+            tensors.insert(name, Tensor::new(shape, data));
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(0);
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {:?}", path.as_ref()))?;
+        f.write_all(&out)?;
+        Ok(())
+    }
+
+    /// All tensors under a `role/` prefix, with the prefix stripped,
+    /// in sorted-key order.
+    pub fn section(&self, role: &str) -> Vec<(String, &Tensor)> {
+        let prefix = format!("{role}/");
+        self.tensors
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix))
+            .map(|(k, v)| (k[prefix.len()..].to_string(), v))
+            .collect()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Tensor> {
+        self.tensors.get(key)
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, t: Tensor) {
+        self.tensors.insert(key.into(), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint::new();
+        ck.insert("param/a.w", Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        ck.insert("qstate/a.m", Tensor::scalar(0.5));
+        let dir = std::env::temp_dir().join("qt_ckpt_test.qtckpt");
+        ck.save(&dir).unwrap();
+        let ck2 = Checkpoint::load(&dir).unwrap();
+        assert_eq!(ck2.tensors.len(), 2);
+        assert_eq!(ck2.get("param/a.w").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ck2.get("qstate/a.m").unwrap().shape.len(), 0);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn sections_are_sorted_and_stripped() {
+        let mut ck = Checkpoint::new();
+        ck.insert("param/b", Tensor::scalar(2.0));
+        ck.insert("param/a", Tensor::scalar(1.0));
+        ck.insert("bn/x", Tensor::scalar(3.0));
+        let sec = ck.section("param");
+        assert_eq!(sec.len(), 2);
+        assert_eq!(sec[0].0, "a");
+        assert_eq!(sec[1].0, "b");
+    }
+}

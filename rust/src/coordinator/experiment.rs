@@ -1,0 +1,250 @@
+//! Shared experiment harness used by examples/ and benches/: artifact
+//! loading, training runs with validation, cross-backend deployment +
+//! metric collection (the machinery behind every paper table/figure).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::backends::{BackendSpec, CheckpointView, PtqOptions, RangeSource};
+use crate::ckpt::Checkpoint;
+use crate::coordinator::state::TrainState;
+use crate::coordinator::trainer::{EpochLog, TrainConfig, Trainer};
+use crate::data::{gen_cls_batch, gen_seg_batch, Batch, ClsSpec, SegSpec};
+use crate::engine::fp32_model;
+use crate::metrics;
+use crate::perfmodel::Precision;
+use crate::qir::Graph;
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Tensor;
+
+/// Locate artifacts/ from any run context (repo root or target/ subdirs).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    for cand in [
+        PathBuf::from("artifacts"),
+        PathBuf::from("../artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if cand.join("kernels.manifest").exists() {
+            return Ok(cand);
+        }
+    }
+    anyhow::bail!("artifacts/ not found — run `make artifacts` first")
+}
+
+/// Graph used for the roofline perf model: prefers the paper-scale variant
+/// (`{model}_paper.qir`, 224^2/512^2 inputs — Figs 3/7/11, Table 10) and
+/// falls back to the trainable slim graph.
+pub fn perf_graph(dir: &Path, model: &str) -> Result<Graph> {
+    let paper = dir.join(format!("{model}_paper.qir"));
+    if paper.exists() {
+        return Graph::load(paper);
+    }
+    Graph::load(dir.join(format!("{model}.qir")))
+}
+
+/// Everything exported for one model.
+pub struct ModelArtifacts {
+    pub manifest: Manifest,
+    pub graph: Graph,
+    pub init: Checkpoint,
+}
+
+pub fn load_model(dir: &Path, model: &str) -> Result<ModelArtifacts> {
+    let manifest = Manifest::load(dir.join(format!("{model}.manifest")))?;
+    let graph = Graph::load(manifest.file_path("qir")?)?;
+    let init = Checkpoint::load(manifest.file_path("ckpt")?)?;
+    Ok(ModelArtifacts { manifest, graph, init })
+}
+
+/// Task data plumbing for training runs.
+#[derive(Clone, Copy, Debug)]
+pub enum Task {
+    Cls(ClsSpec),
+    Seg(SegSpec),
+}
+
+impl Task {
+    pub fn batch(&self, n: usize, seed: u64) -> Batch {
+        match self {
+            Task::Cls(s) => gen_cls_batch(*s, n, seed),
+            Task::Seg(s) => gen_seg_batch(*s, n, seed),
+        }
+    }
+}
+
+/// Train a model through the Rust coordinator with per-epoch validation.
+/// Returns the trainer (holding the final state) and the epoch logs — the
+/// training-dynamics curves of Figs 4, 5, 8, 10.
+pub fn train_with_validation<'rt>(
+    rt: &'rt Runtime,
+    dir: &Path,
+    model: &str,
+    cfg: TrainConfig,
+    task: Task,
+    val_batches: usize,
+    verbose: bool,
+) -> Result<(Trainer<'rt>, Vec<EpochLog>)> {
+    let man = Manifest::load(dir.join(format!("{model}.manifest")))?;
+    let mut tr = Trainer::new(rt, man, cfg.clone())?;
+    let bs = tr.batch_size();
+    let seed = cfg.seed;
+    let make = move |epoch: usize, step: usize| {
+        task.batch(bs, seed ^ ((epoch as u64) << 24) ^ (step as u64 + 1))
+    };
+    // held-out validation batches (seeds disjoint from training)
+    let eval_bs = tr
+        .fns
+        .manifest()
+        .fns
+        .get("forward")
+        .map(|f| f.args.iter().find(|s| s.role == "data").map(|s| s.shape[0]).unwrap_or(bs))
+        .unwrap_or(bs);
+    let val: Vec<Batch> =
+        (0..val_batches).map(|i| task.batch(eval_bs, 0xEA7_0000 + i as u64)).collect();
+
+    let mut logs: Vec<EpochLog> = Vec::new();
+    let epochs = cfg.epochs;
+    for e in 0..epochs {
+        let lam = if cfg.quant_trim { cfg.curriculum.lam(e) } else { 0.0 };
+        let mut pruned = false;
+        if cfg.quant_trim && cfg.curriculum.prune_now(e) {
+            if let Some(rp) = cfg.reverse_prune_fn.clone() {
+                tr.reverse_prune(&rp)?;
+                pruned = true;
+            }
+        }
+        let mut ep_loss = 0.0;
+        let mut ep_metric = 0.0;
+        let total_steps = cfg.epochs * cfg.steps_per_epoch;
+        for s in 0..cfg.steps_per_epoch {
+            let g = e * cfg.steps_per_epoch + s;
+            let lr = crate::coordinator::schedule::cosine_lr(
+                cfg.base_lr,
+                g,
+                total_steps,
+                total_steps / 20 + 1,
+            );
+            let b = make(e, s);
+            let (l, m) = tr.train_step(&b, lam as f32, lr as f32)?;
+            ep_loss += l as f64;
+            ep_metric += m as f64;
+        }
+        let (vl, vm) = if !val.is_empty() {
+            let (l, a) = tr.evaluate(&val)?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+        let log = EpochLog {
+            epoch: e,
+            lam,
+            loss: ep_loss / cfg.steps_per_epoch as f64,
+            metric: ep_metric / cfg.steps_per_epoch as f64,
+            pruned,
+            val_loss: vl,
+            val_metric: vm,
+        };
+        if verbose {
+            println!(
+                "epoch {:>3}  lam {:.3}  loss {:.4}  acc {:.3}  val_acc {}  {}",
+                log.epoch,
+                log.lam,
+                log.loss,
+                log.metric,
+                log.val_metric.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into()),
+                if log.pruned { "[pruned]" } else { "" }
+            );
+        }
+        logs.push(log);
+    }
+    Ok((tr, logs))
+}
+
+/// On-device metric row for Tables 1-2 (and the SNR of Table 3).
+#[derive(Clone, Debug)]
+pub struct DeployMetrics {
+    pub backend: &'static str,
+    pub precision: Precision,
+    pub top1: f64,
+    pub top5: f64,
+    pub logit_mse: f64,
+    pub brier: f64,
+    pub ece: f64,
+    pub snr_db: f64,
+    pub fps_modelled: f64,
+    pub fallback_ops: usize,
+}
+
+/// Deploy a trained checkpoint on one backend and evaluate against the FP32
+/// reference logits (the "ONNX FP32" parenthetical values in Tables 1-2).
+#[allow(clippy::too_many_arguments)]
+pub fn deploy_and_eval(
+    backend: &BackendSpec,
+    graph: &Graph,
+    state: &TrainState,
+    precision: Precision,
+    range_source: RangeSource,
+    ptq: PtqOptions,
+    calib: &[Tensor],
+    eval_batches: &[Batch],
+) -> Result<DeployMetrics> {
+    let params: BTreeMap<String, Tensor> = state.params.clone();
+    let bn: BTreeMap<String, Tensor> = state.bn.clone();
+    let qstate: BTreeMap<String, Tensor> = state.qstate.clone();
+    let view = CheckpointView { graph, params: &params, bn: &bn, qstate: &qstate };
+    let dep = backend.compile(view, precision, range_source, calib, ptq)?;
+
+    // FP32 reference on the same eval set
+    let reference = fp32_model(graph.clone(), params.clone(), bn.clone());
+
+    let mut all_dev: Vec<f32> = Vec::new();
+    let mut all_ref: Vec<f32> = Vec::new();
+    let mut labels: Vec<i32> = Vec::new();
+    let mut cdim = 1;
+    for b in eval_batches {
+        let dl = dep.model.run(&b.images)?.remove(0);
+        let rl = reference.run(&b.images)?.remove(0);
+        cdim = dl.shape[1];
+        all_dev.extend_from_slice(&dl.data);
+        all_ref.extend_from_slice(&rl.data);
+        labels.extend_from_slice(&b.labels);
+    }
+    let dev = Tensor::new(vec![labels.len(), cdim], all_dev);
+    let refl = Tensor::new(vec![labels.len(), cdim], all_ref);
+    let (top1, top5) = metrics::topk_accuracy(&dev, &labels);
+    Ok(DeployMetrics {
+        backend: backend.name,
+        precision,
+        top1,
+        top5,
+        logit_mse: metrics::logit_mse(&dev, &refl),
+        brier: metrics::brier(&dev, &labels),
+        ece: metrics::ece(&dev, &labels, 15),
+        snr_db: metrics::snr_db(&refl.data, &dev.data),
+        fps_modelled: dep.perf_b1.fps,
+        fallback_ops: dep.perf_b1.fallback_ops,
+    })
+}
+
+/// Reference (FP32) metrics on the same eval set — the parenthetical columns.
+pub fn reference_metrics(
+    graph: &Graph,
+    state: &TrainState,
+    eval_batches: &[Batch],
+) -> Result<(f64, f64, f64, f64)> {
+    let reference = fp32_model(graph.clone(), state.params.clone(), state.bn.clone());
+    let mut all: Vec<f32> = Vec::new();
+    let mut labels: Vec<i32> = Vec::new();
+    let mut cdim = 0;
+    for b in eval_batches {
+        let rl = reference.run(&b.images)?.remove(0);
+        cdim = rl.shape[1];
+        all.extend_from_slice(&rl.data);
+        labels.extend_from_slice(&b.labels);
+    }
+    let t = Tensor::new(vec![labels.len(), cdim], all);
+    let (t1, t5) = metrics::topk_accuracy(&t, &labels);
+    Ok((t1, t5, metrics::brier(&t, &labels), metrics::ece(&t, &labels, 15)))
+}

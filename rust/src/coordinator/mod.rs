@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: training orchestration (curriculum, epoch loop over
+//! the AOT train-step executable, reverse-pruning triggers, checkpointing),
+//! evaluation, and the batching inference server.
+
+pub mod schedule;
+pub mod server;
+pub mod state;
+pub mod trainer;
+
+pub use schedule::{cosine_lr, Curriculum};
+pub use state::{CallExtras, TrainState};
+pub use trainer::{EpochLog, TrainConfig, Trainer};
+
+pub mod experiment;

@@ -1,0 +1,173 @@
+//! Quant-Trim curriculum (paper §3.3) — Rust twin of
+//! `python/compile/schedule.py`. Golden values are pinned in both test
+//! suites so the two implementations cannot drift.
+
+/// Curriculum hyperparameters (paper Tables 7-8).
+#[derive(Clone, Copy, Debug)]
+pub struct Curriculum {
+    /// Warmup end (epochs): lambda = 0 before this.
+    pub e_w: usize,
+    /// Ramp end.
+    pub e_f: usize,
+    /// Epochs from e_f until lambda reaches 1.
+    pub horizon: usize,
+    /// Final blend cap (~0.8 for transformers, Table 8).
+    pub lam_max: f64,
+    /// Reverse-pruning clip quantile.
+    pub p_clip: f64,
+    /// Reverse-prune every K epochs after warmup.
+    pub prune_every: usize,
+    /// tau EMA momentum.
+    pub beta: f64,
+    /// Quantile EMA momentum (per step).
+    pub mu: f64,
+}
+
+impl Curriculum {
+    /// Paper Table 7, CIFAR-100 column.
+    pub fn cifar() -> Self {
+        Curriculum {
+            e_w: 10,
+            e_f: 50,
+            horizon: 20,
+            lam_max: 1.0,
+            p_clip: 0.90,
+            prune_every: 5,
+            beta: 0.5,
+            mu: 1e-2,
+        }
+    }
+
+    /// Paper Table 7, segmentation column.
+    pub fn seg() -> Self {
+        Curriculum { e_w: 15, e_f: 30, horizon: 20, lam_max: 1.0, p_clip: 0.95, prune_every: 5, beta: 0.5, mu: 1e-3 }
+    }
+
+    /// Paper Table 8, transformer column.
+    pub fn transformer() -> Self {
+        Curriculum {
+            e_w: 10,
+            e_f: 50,
+            horizon: 20,
+            lam_max: 0.8,
+            p_clip: 0.97,
+            prune_every: 15,
+            beta: 0.5,
+            mu: 1e-3,
+        }
+    }
+
+    /// Compressed curriculum for short runs: scales epoch breakpoints to a
+    /// target epoch budget while keeping the shape.
+    pub fn scaled_to(&self, total_epochs: usize, reference_total: usize) -> Curriculum {
+        let f = total_epochs as f64 / reference_total as f64;
+        let s = |v: usize| ((v as f64 * f).round() as usize).max(1);
+        Curriculum {
+            e_w: s(self.e_w),
+            e_f: s(self.e_f).max(s(self.e_w) + 1),
+            horizon: s(self.horizon),
+            ..*self
+        }
+    }
+
+    /// Blend coefficient at epoch t (paper eq. in §3.3).
+    pub fn lam(&self, t: usize) -> f64 {
+        let v = if t < self.e_w {
+            0.0
+        } else if t < self.e_f {
+            let frac = (t - self.e_w) as f64 / (self.e_f - self.e_w) as f64;
+            (frac.powi(4) * 0.5).min(0.5)
+        } else {
+            let frac = ((t - self.e_f) as f64 / self.horizon as f64).min(1.0);
+            0.5 + frac * frac * 0.5
+        };
+        v.min(self.lam_max)
+    }
+
+    /// Reverse pruning fires at warmup end and every K epochs after
+    /// (Algorithm 1, line 3).
+    pub fn prune_now(&self, t: usize) -> bool {
+        t >= self.e_w && (t - self.e_w) % self.prune_every == 0
+    }
+}
+
+/// Cosine LR schedule with linear warmup over the first `warmup` steps.
+pub fn cosine_lr(base_lr: f64, step: usize, total_steps: usize, warmup: usize) -> f64 {
+    if step < warmup {
+        return base_lr * (step + 1) as f64 / warmup as f64;
+    }
+    let frac = (step - warmup) as f64 / (total_steps.saturating_sub(warmup)).max(1) as f64;
+    base_lr * 0.5 * (1.0 + (std::f64::consts::PI * frac.min(1.0)).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden values — identical assertions exist in
+    /// python/tests/test_schedule.py.
+    #[test]
+    fn golden_lambda_values() {
+        let c = Curriculum::cifar(); // e_w=10 e_f=50 h=20
+        assert_eq!(c.lam(0), 0.0);
+        assert_eq!(c.lam(9), 0.0);
+        assert_eq!(c.lam(10), 0.0); // ramp start
+        // t=30: frac=0.5 -> 0.5^4*0.5 = 0.03125
+        assert!((c.lam(30) - 0.03125).abs() < 1e-12);
+        // t=45: frac=0.875 -> 0.875^4*0.5 = 0.2930908203125
+        assert!((c.lam(45) - 0.293_090_820_312_5).abs() < 1e-12);
+        // t=50: start of quadratic phase -> 0.5
+        assert!((c.lam(50) - 0.5).abs() < 1e-12);
+        // t=60: frac=0.5 -> 0.5 + 0.125 = 0.625
+        assert!((c.lam(60) - 0.625).abs() < 1e-12);
+        // t=70 and beyond: 1.0
+        assert_eq!(c.lam(70), 1.0);
+        assert_eq!(c.lam(1000), 1.0);
+    }
+
+    #[test]
+    fn lambda_monotone_nondecreasing() {
+        let c = Curriculum::cifar();
+        let mut prev = -1.0;
+        for t in 0..120 {
+            let v = c.lam(t);
+            assert!(v >= prev, "lambda decreased at t={t}");
+            assert!((0.0..=1.0).contains(&v));
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn transformer_cap_applies() {
+        let c = Curriculum::transformer();
+        assert!((c.lam(1000) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prune_schedule() {
+        let c = Curriculum::cifar(); // e_w=10, K=5
+        assert!(!c.prune_now(9));
+        assert!(c.prune_now(10));
+        assert!(!c.prune_now(12));
+        assert!(c.prune_now(15));
+        assert!(c.prune_now(20));
+    }
+
+    #[test]
+    fn scaled_curriculum_keeps_shape() {
+        let c = Curriculum::cifar().scaled_to(20, 100);
+        assert_eq!(c.e_w, 2);
+        assert_eq!(c.e_f, 10);
+        assert_eq!(c.horizon, 4);
+        assert_eq!(c.lam(0), 0.0);
+        assert!(c.lam(19) > 0.9);
+    }
+
+    #[test]
+    fn cosine_lr_shape() {
+        let base = 3e-4;
+        assert!(cosine_lr(base, 0, 100, 10) < base * 0.2);
+        assert!((cosine_lr(base, 10, 100, 10) - base).abs() < 1e-9);
+        assert!(cosine_lr(base, 99, 100, 10) < base * 0.01);
+    }
+}

@@ -1,0 +1,227 @@
+//! Batching inference server: the serving half of the coordinator.
+//!
+//! A router thread collects requests into dynamic batches (size- or
+//! deadline-triggered, vLLM-router style), a worker executes the compiled
+//! forward, responses fan back out over per-request channels. Built on std
+//! threads + mpsc (no tokio in the vendored crate set); the request path is
+//! pure Rust + PJRT.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// One inference request: a single image (C, H, W) + reply channel.
+pub struct Request {
+    pub image: Tensor,
+    pub reply: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// Response: logits + timing breakdown.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub queue_ms: f64,
+    pub batch_size: usize,
+    pub total_ms: f64,
+}
+
+/// Dynamic batcher policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// The model side of the server: anything that maps a batched image tensor
+/// (N, C, H, W) to logits (N, K). Implemented by PJRT executables and by the
+/// simulated backends.
+pub trait BatchModel: Send {
+    fn run_batch(&mut self, images: &Tensor) -> Result<Tensor>;
+    fn max_batch(&self) -> usize;
+}
+
+/// Server statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub throughput_rps: f64,
+}
+
+/// Spawn the router+worker; returns the request sender and a join handle
+/// that yields stats once the sender is dropped.
+pub fn serve(
+    mut model: Box<dyn BatchModel>,
+    policy: BatchPolicy,
+) -> (Sender<Request>, std::thread::JoinHandle<ServerStats>) {
+    let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut served = 0usize;
+        let mut batches = 0usize;
+        let started = Instant::now();
+        let max_batch = policy.max_batch.min(model.max_batch());
+        loop {
+            // block for the first request
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break, // all senders dropped: shut down
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + policy.max_wait;
+            // gather until full or deadline
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            let exec_start = Instant::now();
+            let n = batch.len();
+            let (c, h, w) = {
+                let s = &batch[0].image.shape;
+                (s[0], s[1], s[2])
+            };
+            let mut images = Tensor::zeros(&[max_batch, c, h, w]);
+            for (i, r) in batch.iter().enumerate() {
+                let sz = c * h * w;
+                images.data[i * sz..(i + 1) * sz].copy_from_slice(&r.image.data);
+            }
+            let logits = match model.run_batch(&images) {
+                Ok(l) => l,
+                Err(_) => continue,
+            };
+            let k = logits.shape[1];
+            let done = Instant::now();
+            for (i, r) in batch.into_iter().enumerate() {
+                let total_ms = done.duration_since(r.submitted).as_secs_f64() * 1e3;
+                latencies.push(total_ms);
+                let _ = r.reply.send(Response {
+                    logits: logits.data[i * k..(i + 1) * k].to_vec(),
+                    queue_ms: exec_start.duration_since(r.submitted).as_secs_f64() * 1e3,
+                    batch_size: n,
+                    total_ms,
+                });
+            }
+            served += n;
+            batches += 1;
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if latencies.is_empty() {
+                return 0.0;
+            }
+            latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
+        };
+        ServerStats {
+            served,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { served as f64 / batches as f64 },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            throughput_rps: served as f64 / started.elapsed().as_secs_f64().max(1e-9),
+        }
+    });
+    (tx, handle)
+}
+
+/// A BatchModel over the Rust integer engine (simulated NPU deployment).
+pub struct EngineModel {
+    pub model: Arc<Mutex<crate::engine::CompiledModel>>,
+    pub batch: usize,
+}
+
+impl BatchModel for EngineModel {
+    fn run_batch(&mut self, images: &Tensor) -> Result<Tensor> {
+        let m = self.model.lock().unwrap();
+        let outs = m.run(images)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy model: logits = [sum(pixels), -sum(pixels)].
+    struct Toy;
+
+    impl BatchModel for Toy {
+        fn run_batch(&mut self, images: &Tensor) -> Result<Tensor> {
+            let n = images.shape[0];
+            let sz: usize = images.shape[1..].iter().product();
+            let mut out = Tensor::zeros(&[n, 2]);
+            for i in 0..n {
+                let s: f32 = images.data[i * sz..(i + 1) * sz].iter().sum();
+                out.data[i * 2] = s;
+                out.data[i * 2 + 1] = -s;
+            }
+            Ok(out)
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn serves_and_batches() {
+        let (tx, handle) =
+            serve(Box::new(Toy), BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) });
+        let mut replies = Vec::new();
+        for i in 0..16 {
+            let (rtx, rrx) = mpsc::channel();
+            let img = Tensor::full(&[1, 2, 2], i as f32);
+            tx.send(Request { image: img, reply: rtx, submitted: Instant::now() }).unwrap();
+            replies.push((i, rrx));
+        }
+        drop(tx);
+        for (i, rrx) in replies {
+            let resp = rrx.recv().unwrap();
+            assert_eq!(resp.logits[0], (i * 4) as f32);
+            assert_eq!(resp.logits[1], -(i as f32) * 4.0);
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.served, 16);
+        assert!(stats.batches <= 16);
+        assert!(stats.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn deadline_fires_on_partial_batch() {
+        let (tx, handle) =
+            serve(Box::new(Toy), BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            image: Tensor::full(&[1, 2, 2], 1.0),
+            reply: rtx,
+            submitted: Instant::now(),
+        })
+        .unwrap();
+        let resp = rrx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(resp.batch_size, 1);
+        drop(tx);
+        handle.join().unwrap();
+    }
+}

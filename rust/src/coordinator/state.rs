@@ -1,0 +1,192 @@
+//! Training state + positional marshalling against the manifest.
+//!
+//! The exported HLO train step takes ~300 positional parameters (params, BN
+//! state, quant stats, optimizer moments, batch, scalars). `TrainState` holds
+//! the named tensors; `marshal` lines them up against a FnSpec's arg slots and
+//! `absorb` writes the result tuple back. Nothing here knows model shapes —
+//! it is all driven by the manifest.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::Checkpoint;
+use crate::runtime::{self, DType, FnSpec, Slot};
+use crate::tensor::Tensor;
+
+/// Named training state, sectioned by role.
+#[derive(Clone, Debug, Default)]
+pub struct TrainState {
+    pub params: BTreeMap<String, Tensor>,
+    pub bn: BTreeMap<String, Tensor>,
+    pub qstate: BTreeMap<String, Tensor>,
+    pub opt_m: BTreeMap<String, Tensor>,
+    pub opt_v: BTreeMap<String, Tensor>,
+    pub step: f32,
+}
+
+impl TrainState {
+    /// Initialize from an exported `.init.qtckpt` (opt moments start at 0).
+    pub fn from_checkpoint(ck: &Checkpoint) -> Self {
+        let mut s = TrainState::default();
+        for (k, t) in ck.section("param") {
+            s.opt_m.insert(k.clone(), Tensor::zeros(&t.shape));
+            s.opt_v.insert(k.clone(), Tensor::zeros(&t.shape));
+            s.params.insert(k, t.clone());
+        }
+        for (k, t) in ck.section("bn") {
+            s.bn.insert(k, t.clone());
+        }
+        for (k, t) in ck.section("qstate") {
+            s.qstate.insert(k, t.clone());
+        }
+        s
+    }
+
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        for (k, t) in &self.params {
+            ck.insert(format!("param/{k}"), t.clone());
+        }
+        for (k, t) in &self.bn {
+            ck.insert(format!("bn/{k}"), t.clone());
+        }
+        for (k, t) in &self.qstate {
+            ck.insert(format!("qstate/{k}"), t.clone());
+        }
+        ck
+    }
+
+    fn lookup(&self, role: &str, key: &str) -> Option<&Tensor> {
+        match role {
+            "param" => self.params.get(key),
+            "bn" => self.bn.get(key),
+            "qstate" | "tau" => self.qstate.get(key),
+            "opt_m" => self.opt_m.get(key),
+            "opt_v" => self.opt_v.get(key),
+            _ => None,
+        }
+    }
+
+    fn store(&mut self, role: &str, key: &str, t: Tensor) {
+        match role {
+            "param" => {
+                self.params.insert(key.to_string(), t);
+            }
+            "bn" => {
+                self.bn.insert(key.to_string(), t);
+            }
+            "qstate" | "tau" => {
+                self.qstate.insert(key.to_string(), t);
+            }
+            "opt_m" => {
+                self.opt_m.insert(key.to_string(), t);
+            }
+            "opt_v" => {
+                self.opt_v.insert(key.to_string(), t);
+            }
+            "step" => self.step = t.data[0],
+            _ => {}
+        }
+    }
+
+    /// Extra per-call inputs that aren't state: batch data, labels, scalars,
+    /// teacher state.
+    pub fn marshal(
+        &self,
+        spec: &FnSpec,
+        extras: &CallExtras<'_>,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(spec.args.len());
+        for slot in &spec.args {
+            out.push(self.literal_for(slot, extras)?);
+        }
+        Ok(out)
+    }
+
+    fn literal_for(&self, slot: &Slot, extras: &CallExtras<'_>) -> Result<xla::Literal> {
+        match slot.role.as_str() {
+            "param" | "bn" | "qstate" | "tau" | "opt_m" | "opt_v" => {
+                let t = self
+                    .lookup(&slot.role, &slot.key)
+                    .with_context(|| format!("state missing {}/{}", slot.role, slot.key))?;
+                if t.shape != slot.shape {
+                    bail!(
+                        "shape mismatch for {}/{}: state {:?} vs manifest {:?}",
+                        slot.role,
+                        slot.key,
+                        t.shape,
+                        slot.shape
+                    );
+                }
+                runtime::tensor_to_literal(t)
+            }
+            "step" => runtime::tensor_to_literal(&Tensor::scalar(self.step)),
+            "data" => {
+                let x = extras.data.context("call needs data batch")?;
+                runtime::tensor_to_literal(x)
+            }
+            "label" => {
+                let y = extras.labels.context("call needs labels")?;
+                if slot.dtype != DType::I32 {
+                    bail!("labels must be i32");
+                }
+                runtime::i32_to_literal(y, &slot.shape)
+            }
+            "lam" => runtime::tensor_to_literal(&Tensor::scalar(extras.lam)),
+            "lr" => runtime::tensor_to_literal(&Tensor::scalar(extras.lr)),
+            "tparam" => {
+                let t = extras
+                    .teacher
+                    .and_then(|tp| tp.params.get(&slot.key))
+                    .with_context(|| format!("teacher param {} missing", slot.key))?;
+                runtime::tensor_to_literal(t)
+            }
+            "tbn" => {
+                let t = extras
+                    .teacher
+                    .and_then(|tp| tp.bn.get(&slot.key))
+                    .with_context(|| format!("teacher bn {} missing", slot.key))?;
+                runtime::tensor_to_literal(t)
+            }
+            other => bail!("unknown arg role {other}"),
+        }
+    }
+
+    /// Write a result tuple back into the state; returns (loss, metric) if
+    /// the function reports them.
+    pub fn absorb(
+        &mut self,
+        spec: &FnSpec,
+        outs: &[xla::Literal],
+    ) -> Result<(Option<f32>, Option<f32>)> {
+        let mut loss = None;
+        let mut metric = None;
+        for (slot, lit) in spec.rets.iter().zip(outs.iter()) {
+            match slot.role.as_str() {
+                "param" | "bn" | "qstate" | "tau" | "opt_m" | "opt_v" => {
+                    let t = runtime::literal_to_tensor(lit, &slot.shape)?;
+                    self.store(&slot.role, &slot.key, t);
+                }
+                "step" => {
+                    self.step = runtime::literal_to_tensor(lit, &[])?.data[0];
+                }
+                "loss" => loss = Some(runtime::literal_to_tensor(lit, &[])?.data[0]),
+                "metric" => metric = Some(runtime::literal_to_tensor(lit, &[])?.data[0]),
+                "out" => {} // forward outputs handled by caller
+                other => bail!("unknown ret role {other}"),
+            }
+        }
+        Ok((loss, metric))
+    }
+}
+
+/// Per-call inputs beyond the persistent state.
+#[derive(Default)]
+pub struct CallExtras<'a> {
+    pub data: Option<&'a Tensor>,
+    pub labels: Option<&'a [i32]>,
+    pub lam: f32,
+    pub lr: f32,
+    pub teacher: Option<&'a TrainState>,
+}

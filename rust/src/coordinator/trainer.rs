@@ -1,0 +1,244 @@
+//! The training orchestrator: drives the AOT HLO train step from Rust,
+//! applies the Quant-Trim curriculum (lambda schedule + reverse-pruning
+//! triggers), evaluates through the FP32 forward, and writes checkpoints.
+//! Python never runs here — all compute is the PJRT executables.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::schedule::{cosine_lr, Curriculum};
+use crate::coordinator::state::{CallExtras, TrainState};
+use crate::data::Batch;
+use crate::runtime::{FnCache, Manifest, Runtime};
+use crate::tensor::Tensor;
+
+/// One epoch's summary.
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub lam: f64,
+    pub loss: f64,
+    pub metric: f64,
+    pub pruned: bool,
+    pub val_loss: Option<f64>,
+    pub val_metric: Option<f64>,
+}
+
+/// Training configuration for a run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub base_lr: f64,
+    pub curriculum: Curriculum,
+    /// false => MAP baseline: fp32 train step, no reverse pruning.
+    pub quant_trim: bool,
+    /// Reverse-pruning artifact to use (e.g. "reverse_prune_90"); None
+    /// disables pruning (ablation config 2 "QAT only").
+    pub reverse_prune_fn: Option<String>,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    pub fn quant_trim(epochs: usize, steps: usize, cur: Curriculum) -> Self {
+        TrainConfig {
+            epochs,
+            steps_per_epoch: steps,
+            base_lr: 3e-4,
+            curriculum: cur,
+            quant_trim: true,
+            reverse_prune_fn: Some(format!("reverse_prune_{}", (cur.p_clip * 100.0).round() as u32)),
+            seed: 0xDA7A,
+        }
+    }
+
+    pub fn map_baseline(epochs: usize, steps: usize, cur: Curriculum) -> Self {
+        TrainConfig {
+            epochs,
+            steps_per_epoch: steps,
+            base_lr: 3e-4,
+            curriculum: cur,
+            quant_trim: false,
+            reverse_prune_fn: None,
+            seed: 0xDA7A,
+        }
+    }
+}
+
+/// Batch supplier: (epoch, step) -> Batch. Deterministic generators in
+/// `data::` implement this.
+pub type BatchFn<'a> = dyn Fn(usize, usize) -> Batch + 'a;
+
+pub struct Trainer<'rt> {
+    pub fns: FnCache<'rt>,
+    pub state: TrainState,
+    pub cfg: TrainConfig,
+    batch_size: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, man: Manifest, cfg: TrainConfig) -> Result<Self> {
+        let ck_path = man.file_path("ckpt")?;
+        let ck = crate::ckpt::Checkpoint::load(ck_path)?;
+        let state = TrainState::from_checkpoint(&ck);
+        let step_fn = if cfg.quant_trim { "train_step" } else { "train_step_fp32" };
+        let batch_size = man.fns[step_fn]
+            .args
+            .iter()
+            .find(|s| s.role == "data")
+            .context("train step has no data arg")?
+            .shape[0];
+        Ok(Trainer { fns: FnCache::new(rt, man), state, cfg, batch_size })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    fn step_fn_name(&self) -> &'static str {
+        if self.cfg.quant_trim {
+            "train_step"
+        } else {
+            "train_step_fp32"
+        }
+    }
+
+    /// Run the full curriculum. `make_batch(epoch, step)` supplies data;
+    /// `on_epoch` observes progress (logging, curve capture).
+    pub fn train(
+        &mut self,
+        make_batch: &BatchFn<'_>,
+        mut on_epoch: impl FnMut(&EpochLog),
+    ) -> Result<Vec<EpochLog>> {
+        let total_steps = self.cfg.epochs * self.cfg.steps_per_epoch;
+        let mut logs = Vec::new();
+        for epoch in 0..self.cfg.epochs {
+            let lam = if self.cfg.quant_trim { self.cfg.curriculum.lam(epoch) } else { 0.0 };
+            // reverse pruning fires at epoch boundaries (Algorithm 1 line 3)
+            let mut pruned = false;
+            if self.cfg.quant_trim && self.cfg.curriculum.prune_now(epoch) {
+                if let Some(rp) = self.cfg.reverse_prune_fn.clone() {
+                    self.reverse_prune(&rp)?;
+                    pruned = true;
+                }
+            }
+            let mut ep_loss = 0.0f64;
+            let mut ep_metric = 0.0f64;
+            for s in 0..self.cfg.steps_per_epoch {
+                let global = epoch * self.cfg.steps_per_epoch + s;
+                let lr = cosine_lr(self.cfg.base_lr, global, total_steps, total_steps / 20 + 1);
+                let batch = make_batch(epoch, s);
+                let (loss, metric) = self.train_step(&batch, lam as f32, lr as f32)?;
+                ep_loss += loss as f64;
+                ep_metric += metric as f64;
+            }
+            let log = EpochLog {
+                epoch,
+                lam,
+                loss: ep_loss / self.cfg.steps_per_epoch as f64,
+                metric: ep_metric / self.cfg.steps_per_epoch as f64,
+                pruned,
+                val_loss: None,
+                val_metric: None,
+            };
+            on_epoch(&log);
+            logs.push(log);
+        }
+        Ok(logs)
+    }
+
+    pub fn train_step(&mut self, batch: &Batch, lam: f32, lr: f32) -> Result<(f32, f32)> {
+        let name = self.step_fn_name();
+        let spec = self.fns.manifest().fns[name].clone();
+        let extras = CallExtras {
+            data: Some(&batch.images),
+            labels: Some(&batch.labels),
+            lam,
+            lr,
+            teacher: None,
+        };
+        let args = self.state.marshal(&spec, &extras)?;
+        let outs = self.fns.get(name)?.call(&args)?;
+        let (loss, metric) = self.state.absorb(&spec, &outs)?;
+        Ok((loss.unwrap_or(f32::NAN), metric.unwrap_or(f32::NAN)))
+    }
+
+    /// Distillation step (NanoSAM2): same flow with teacher state as input.
+    pub fn distill_step(
+        &mut self,
+        teacher: &TrainState,
+        images: &Tensor,
+        lam: f32,
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let spec = self.fns.manifest().fns["distill_step"].clone();
+        let extras = CallExtras {
+            data: Some(images),
+            labels: None,
+            lam,
+            lr,
+            teacher: Some(teacher),
+        };
+        let args = self.state.marshal(&spec, &extras)?;
+        let outs = self.fns.get("distill_step")?.call(&args)?;
+        let (loss, metric) = self.state.absorb(&spec, &outs)?;
+        Ok((loss.unwrap_or(f32::NAN), metric.unwrap_or(f32::NAN)))
+    }
+
+    /// Apply one reverse-pruning pass through the exported HLO (Pallas clip
+    /// kernel inside).
+    pub fn reverse_prune(&mut self, fn_name: &str) -> Result<()> {
+        let spec = self.fns.manifest().fns[fn_name].clone();
+        let extras = CallExtras::default();
+        let args = self.state.marshal(&spec, &extras)?;
+        let outs = self.fns.get(fn_name)?.call(&args)?;
+        self.state.absorb(&spec, &outs)?;
+        Ok(())
+    }
+
+    /// FP32 eval forward on a batch; returns logits.
+    pub fn forward(&mut self, images: &Tensor) -> Result<Tensor> {
+        let spec = self.fns.manifest().fns["forward"].clone();
+        let extras = CallExtras { data: Some(images), ..Default::default() };
+        let args = self.state.marshal(&spec, &extras)?;
+        let outs = self.fns.get("forward")?.call(&args)?;
+        crate::runtime::literal_to_tensor(&outs[0], &spec.rets[0].shape)
+    }
+
+    /// Device-simulated (full fake-quant, Pallas kernels) forward.
+    pub fn device_forward(&mut self, images: &Tensor) -> Result<Tensor> {
+        let spec = self.fns.manifest().fns["device_forward"].clone();
+        let extras = CallExtras { data: Some(images), ..Default::default() };
+        let args = self.state.marshal(&spec, &extras)?;
+        let outs = self.fns.get("device_forward")?.call(&args)?;
+        crate::runtime::literal_to_tensor(&outs[0], &spec.rets[0].shape)
+    }
+
+    /// Evaluate classification accuracy + loss over batches.
+    pub fn evaluate(&mut self, batches: &[Batch]) -> Result<(f64, f64)> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut loss = 0.0f64;
+        for b in batches {
+            let logits = self.forward(&b.images)?;
+            let n = logits.shape[0];
+            let c = logits.shape[1];
+            for i in 0..n {
+                let row = &logits.data[i * c..(i + 1) * c];
+                let y = b.labels[i] as usize;
+                let p = crate::metrics::softmax_row(row);
+                loss -= (p[y].max(1e-12)).ln() as f64;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == y {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok((loss / total as f64, correct as f64 / total as f64))
+    }
+}

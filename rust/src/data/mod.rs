@@ -1,0 +1,240 @@
+//! Synthetic dataset generators standing in for CIFAR-10/100 and COCO
+//! (DESIGN.md §2: no datasets ship offline; these are *learnable* procedural
+//! tasks that exercise the same code paths — real gradient-based convergence,
+//! heavy-tailed activations, long-tailed segmentation statistics).
+//!
+//! Classification ("CIFAR-like"): each class is a distinct mixture of
+//! oriented sinusoidal gratings + a class-colored blob, plus per-image phase/
+//! position jitter, Gaussian noise, and rare high-amplitude outlier pixels
+//! (the activation-outlier stressor the paper's method targets).
+//!
+//! Segmentation ("COCO-like"): random circles/rectangles of class-specific
+//! texture on a background; labels are per-pixel class ids with a long-tailed
+//! class frequency distribution.
+
+use crate::tensor::Tensor;
+use crate::testutil::Rng;
+
+/// A batch: images (N, C, H, W) + integer labels (classification: N;
+/// segmentation: N*H*W).
+pub struct Batch {
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClsSpec {
+    pub classes: usize,
+    pub image: usize,
+    pub outlier_p: f32,
+}
+
+impl ClsSpec {
+    pub fn cifar100() -> Self {
+        ClsSpec { classes: 100, image: 32, outlier_p: 0.002 }
+    }
+    pub fn cifar10() -> Self {
+        ClsSpec { classes: 10, image: 32, outlier_p: 0.002 }
+    }
+}
+
+/// Deterministic class "style" parameters derived from the class id.
+fn class_style(class: usize) -> (f32, f32, f32, [f32; 3]) {
+    let mut r = Rng::new(0xC1A55 + class as u64 * 7919);
+    let freq = 0.2 + 0.8 * r.uniform(); // grating frequency
+    let theta = std::f32::consts::PI * r.uniform(); // orientation
+    let phase2 = std::f32::consts::PI * r.uniform();
+    let color = [r.uniform(), r.uniform(), r.uniform()];
+    (freq, theta, phase2, color)
+}
+
+/// Generate one classification batch. `seed` controls jitter/noise; the same
+/// (seed, spec, n) is bit-reproducible.
+pub fn gen_cls_batch(spec: ClsSpec, n: usize, seed: u64) -> Batch {
+    let s = spec.image;
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1));
+    let mut images = Tensor::zeros(&[n, 3, s, s]);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = rng.below(spec.classes);
+        labels.push(class as i32);
+        let (freq, theta, phase2, color) = class_style(class);
+        let jx = rng.range(-3.0, 3.0);
+        let jy = rng.range(-3.0, 3.0);
+        let jphase = rng.range(0.0, std::f32::consts::PI);
+        let (ct, st) = (theta.cos(), theta.sin());
+        // class-colored blob position
+        let bx = s as f32 * (0.3 + 0.4 * rng.uniform());
+        let by = s as f32 * (0.3 + 0.4 * rng.uniform());
+        let br = s as f32 * 0.18;
+        for y in 0..s {
+            for x in 0..s {
+                let xf = x as f32 + jx;
+                let yf = y as f32 + jy;
+                let u = ct * xf + st * yf;
+                let v = -st * xf + ct * yf;
+                let grating =
+                    (freq * u + jphase).sin() * 0.5 + (freq * 1.7 * v + phase2).cos() * 0.3;
+                let d2 = (x as f32 - bx).powi(2) + (y as f32 - by).powi(2);
+                let blob = (-d2 / (br * br)).exp();
+                for c in 0..3 {
+                    let mut val = grating * (0.6 + 0.4 * color[c]) + blob * (color[c] * 2.0 - 1.0);
+                    val += rng.normal() * 0.15; // pixel noise
+                    if rng.uniform() < spec.outlier_p {
+                        // rare high-amplitude pixels: the activation-outlier
+                        // stressor (≈3x the signal range, CIFAR-realistic —
+                        // heavier tails make the FP32-vs-INT comparison
+                        // degenerate for ANY method)
+                        val += rng.normal() * 2.5;
+                    }
+                    images.data[((i * 3 + c) * s + y) * s + x] = val;
+                }
+            }
+        }
+    }
+    Batch { images, labels }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SegSpec {
+    pub classes: usize,
+    pub image: usize,
+    pub max_objects: usize,
+}
+
+impl SegSpec {
+    pub fn coco_like() -> Self {
+        SegSpec { classes: 8, image: 64, max_objects: 5 }
+    }
+}
+
+/// Generate one segmentation batch: labels are per-pixel (class 0 =
+/// background). Class frequencies are long-tailed (Zipf-ish), as in COCO.
+pub fn gen_seg_batch(spec: SegSpec, n: usize, seed: u64) -> Batch {
+    let s = spec.image;
+    let mut rng = Rng::new(seed.wrapping_mul(0xB5297A4D).max(1));
+    let mut images = Tensor::zeros(&[n, 3, s, s]);
+    let mut labels = vec![0i32; n * s * s];
+    for i in 0..n {
+        // textured background
+        let bgf = rng.range(0.05, 0.15);
+        for y in 0..s {
+            for x in 0..s {
+                let v = (bgf * (x as f32 + y as f32)).sin() * 0.2;
+                for c in 0..3 {
+                    images.data[((i * 3 + c) * s + y) * s + x] = v + rng.normal() * 0.1;
+                }
+            }
+        }
+        let objects = 1 + rng.below(spec.max_objects);
+        for _ in 0..objects {
+            // Zipf-ish class draw over 1..classes (0 is background)
+            let z = rng.uniform();
+            let class = 1 + ((spec.classes - 1) as f32 * z * z) as usize;
+            let class = class.min(spec.classes - 1);
+            let (freq, theta, _, color) = class_style(class + 1000);
+            let cx = rng.below(s) as f32;
+            let cy = rng.below(s) as f32;
+            let r = rng.range(4.0, s as f32 * 0.3);
+            let is_rect = rng.uniform() < 0.5;
+            let (ct, st) = (theta.cos(), theta.sin());
+            for y in 0..s {
+                for x in 0..s {
+                    let dx = x as f32 - cx;
+                    let dy = y as f32 - cy;
+                    let inside = if is_rect {
+                        dx.abs() < r && dy.abs() < r * 0.6
+                    } else {
+                        dx * dx + dy * dy < r * r
+                    };
+                    if inside {
+                        labels[(i * s + y) * s + x] = class as i32;
+                        let u = ct * dx + st * dy;
+                        let tex = (freq * 3.0 * u).sin() * 0.4;
+                        for c in 0..3 {
+                            images.data[((i * 3 + c) * s + y) * s + x] =
+                                color[c] * 1.5 - 0.5 + tex + rng.normal() * 0.08;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Batch { images, labels }
+}
+
+/// A deterministic epoch of batches: batch b of epoch e uses seed
+/// f(base, e, b) so training data is reproducible but non-repeating.
+pub fn epoch_seeds(base: u64, epoch: usize, batches: usize) -> Vec<u64> {
+    (0..batches).map(|b| base ^ ((epoch as u64) << 32) ^ (b as u64 + 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cls_batch_deterministic_and_shaped() {
+        let spec = ClsSpec::cifar10();
+        let a = gen_cls_batch(spec, 4, 42);
+        let b = gen_cls_batch(spec, 4, 42);
+        assert_eq!(a.images.shape, vec![4, 3, 32, 32]);
+        assert_eq!(a.images.data, b.images.data);
+        assert_eq!(a.labels, b.labels);
+        let c = gen_cls_batch(spec, 4, 43);
+        assert_ne!(a.images.data, c.images.data);
+    }
+
+    #[test]
+    fn cls_labels_in_range_and_varied() {
+        let spec = ClsSpec::cifar100();
+        let b = gen_cls_batch(spec, 64, 7);
+        assert!(b.labels.iter().all(|&l| (0..100).contains(&l)));
+        let distinct: std::collections::HashSet<_> = b.labels.iter().collect();
+        assert!(distinct.len() > 10, "labels should be varied");
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean image distance between two classes should exceed within-class
+        let spec = ClsSpec::cifar10();
+        let mut per_class: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 2];
+        let mut seed = 0;
+        while per_class[0].len() < 3 || per_class[1].len() < 3 {
+            seed += 1;
+            let b = gen_cls_batch(spec, 8, seed);
+            for i in 0..8 {
+                let cls = b.labels[i] as usize;
+                if cls < 2 && per_class[cls].len() < 3 {
+                    let img = b.images.data[i * 3 * 32 * 32..(i + 1) * 3 * 32 * 32].to_vec();
+                    per_class[cls].push(img);
+                }
+            }
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        let within = dist(&per_class[0][0], &per_class[0][1]);
+        let between = dist(&per_class[0][0], &per_class[1][0]);
+        assert!(between > within * 0.5, "classes should differ: w={within} b={between}");
+    }
+
+    #[test]
+    fn seg_batch_has_background_and_objects() {
+        let spec = SegSpec::coco_like();
+        let b = gen_seg_batch(spec, 2, 11);
+        assert_eq!(b.labels.len(), 2 * 64 * 64);
+        let bg = b.labels.iter().filter(|&&l| l == 0).count();
+        let fg = b.labels.len() - bg;
+        assert!(bg > 0 && fg > 0, "bg {bg} fg {fg}");
+        assert!(b.labels.iter().all(|&l| (0..8).contains(&l)));
+    }
+
+    #[test]
+    fn outliers_present_at_configured_rate() {
+        let spec = ClsSpec { classes: 10, image: 32, outlier_p: 0.01 };
+        let b = gen_cls_batch(spec, 16, 3);
+        let extremes = b.images.data.iter().filter(|v| v.abs() > 2.5).count();
+        assert!(extremes > 0, "heavy-tail pixels expected");
+    }
+}

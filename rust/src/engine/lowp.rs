@@ -1,0 +1,147 @@
+//! Low-precision float simulation: bf16 / f16 round-trips.
+//!
+//! Backends like Hardware B run activations in BF16 (Table 4 "W8/ABF16
+//! hybrid"); Jetson/TensorRT paths use FP16. We simulate by rounding f32
+//! payloads through the narrow format at op boundaries — the same numerics a
+//! real mixed-precision pipeline exhibits at tensor granularity.
+
+/// Round f32 -> bf16 -> f32 (round-to-nearest-even on the dropped mantissa).
+#[inline]
+pub fn bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // round to nearest even at bit 16
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb);
+    f32::from_bits(rounded & 0xffff_0000)
+}
+
+/// Round f32 -> IEEE f16 -> f32.
+#[inline]
+pub fn f16(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// f32 -> IEEE binary16 bits (round-to-nearest-even, with overflow->inf,
+/// subnormal handling).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal f16
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let shifted = mant >> 13;
+        let round_bits = mant & 0x1fff;
+        let mut h = sign | half_exp | shifted as u16;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (shifted & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent: correct behaviour
+        }
+        h
+    } else if unbiased >= -24 {
+        // subnormal
+        let full_mant = mant | 0x0080_0000;
+        let shift = (-unbiased - 14 + 13) as u32;
+        let shifted = full_mant >> shift;
+        let rem = full_mant & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = sign | shifted as u16;
+        if rem > halfway || (rem == halfway && (shifted & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        h
+    } else {
+        sign // underflow -> signed zero
+    }
+}
+
+/// IEEE binary16 bits -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: value = mant * 2^-24; normalize so bit 10 is set
+            // after k shifts, biased f32 exponent = 127 - 14 - k
+            let mut m = mant;
+            let mut k = 0u32;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                k += 1;
+            }
+            m &= 0x03ff;
+            sign | ((127 - 14 - k) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Apply a narrowing round-trip to a whole slice in place.
+pub fn narrow_slice(data: &mut [f32], f: impl Fn(f32) -> f32) {
+    for v in data.iter_mut() {
+        *v = f(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_preserves_coarse_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 1024.0, -3.140625] {
+            assert_eq!(bf16(v), v, "{v} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_fine_mantissa() {
+        let v = 1.0 + f32::EPSILON;
+        assert_eq!(bf16(v), 1.0);
+        // relative error bounded by 2^-8
+        for i in 1..100 {
+            let x = 0.731 * i as f32;
+            assert!((bf16(x) - x).abs() <= x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE);
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -2.0, 0.25, 65504.0, -65504.0] {
+            assert_eq!(f16(v), v, "{v} should be f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_and_subnormals() {
+        assert!(f16(70000.0).is_infinite());
+        let tiny = 6e-8f32; // representable as f16 subnormal
+        let r = f16(tiny);
+        assert!(r > 0.0 && (r - tiny).abs() / tiny < 0.5);
+        assert_eq!(f16(1e-12), 0.0);
+    }
+
+    #[test]
+    fn f16_relative_error_bound() {
+        for i in 1..200 {
+            let x = 0.173 * i as f32;
+            assert!((f16(x) - x).abs() <= x.abs() * (1.0 / 1024.0) + 1e-7);
+        }
+    }
+}

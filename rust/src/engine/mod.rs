@@ -1,0 +1,531 @@
+//! Deployment inference engine: executes a QIR graph at the precision a
+//! simulated vendor backend chose.
+//!
+//! Precision model (matches how real NPU toolchains behave at tensor
+//! granularity):
+//! * weights: f32, or pre-quantized i8 (per-channel or per-tensor symmetric)
+//! * activations: f32, bf16/f16 round-trips at op boundaries, or asymmetric
+//!   u8 with *static* per-node ranges fixed at compile time (calibration or
+//!   embedded QAT scales) — "STATIC (no runtime dyn)" in paper Table 4.
+//! * integer compute paths accumulate in i32 (ops.rs); softmax / layernorm /
+//!   SE gates stay in float, as on real NPUs.
+
+pub mod lowp;
+pub mod ops;
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Context, Result};
+
+use crate::qir::{Graph, Node};
+use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
+
+/// Weight precision chosen by a backend compiler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightMode {
+    F32,
+    Int8,
+}
+
+/// Activation precision chosen by a backend compiler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActMode {
+    F32,
+    Bf16,
+    F16,
+    /// Static asymmetric u8 with compile-time ranges.
+    Int8 { round: RoundMode },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    pub weight_mode: WeightMode,
+    pub act_mode: ActMode,
+}
+
+impl ExecConfig {
+    pub const FP32: ExecConfig = ExecConfig { weight_mode: WeightMode::F32, act_mode: ActMode::F32 };
+}
+
+/// A backend-compiled model: transformed graph + prepared weights + static
+/// activation ranges. Produced by `backends::*`, executed here.
+pub struct CompiledModel {
+    pub graph: Graph,
+    /// Float parameters (post graph passes, e.g. BN-folded).
+    pub params: BTreeMap<String, Tensor>,
+    /// BN running stats for graphs that keep explicit bn nodes.
+    pub bn: BTreeMap<String, Tensor>,
+    /// Pre-quantized weights keyed by param key (e.g. "s0.b0.c1.w").
+    pub qweights: HashMap<String, QWeight>,
+    /// Static per-node output ranges (lo, hi) from calibration / QAT scales.
+    pub act_ranges: HashMap<String, (f32, f32)>,
+    pub cfg: ExecConfig,
+}
+
+const BN_EPS: f32 = 1e-5;
+
+impl CompiledModel {
+    /// Run and return the graph outputs.
+    pub fn run(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let mut sink = |_: &str, _: &Tensor| {};
+        self.run_inner(x, &mut sink)
+    }
+
+    /// Run, invoking `observe(node_name, output)` on every node output
+    /// (used by calibration and by the distribution metrics).
+    pub fn run_observe(
+        &self,
+        x: &Tensor,
+        observe: &mut dyn FnMut(&str, &Tensor),
+    ) -> Result<Vec<Tensor>> {
+        self.run_inner(x, observe)
+    }
+
+    fn narrow(&self, mut t: Tensor) -> Tensor {
+        match self.cfg.act_mode {
+            ActMode::Bf16 => lowp::narrow_slice(&mut t.data, lowp::bf16),
+            ActMode::F16 => lowp::narrow_slice(&mut t.data, lowp::f16),
+            _ => {}
+        }
+        t
+    }
+
+    /// (scale, zero_point) for quantizing the *input* of a compute node,
+    /// taken from the producer's static range.
+    fn input_qparams(&self, producer: &str) -> Result<(f32, i32)> {
+        let &(lo, hi) = self
+            .act_ranges
+            .get(producer)
+            .with_context(|| format!("no calibrated range for node {producer}"))?;
+        Ok(act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6)))
+    }
+
+    fn int8_round(&self) -> Option<RoundMode> {
+        match self.cfg.act_mode {
+            ActMode::Int8 { round } => Some(round),
+            _ => None,
+        }
+    }
+
+    fn weight_tensor(&self, key: &str) -> Result<Tensor> {
+        if self.cfg.weight_mode == WeightMode::Int8 {
+            if let Some(qw) = self.qweights.get(key) {
+                return Ok(qw.dequantize());
+            }
+        }
+        self.params.get(key).cloned().with_context(|| format!("missing param {key}"))
+    }
+
+    fn run_inner(
+        &self,
+        x: &Tensor,
+        observe: &mut dyn FnMut(&str, &Tensor),
+    ) -> Result<Vec<Tensor>> {
+        let mut vals: HashMap<String, Tensor> = HashMap::new();
+        let mut remaining = self.graph.consumer_counts();
+        for n in &self.graph.nodes {
+            let out = self.eval_node(n, &vals, x)?;
+            observe(&n.name, &out);
+            vals.insert(n.name.clone(), out);
+            // free dead inputs
+            for i in &n.inputs {
+                if let Some(c) = remaining.get_mut(i.as_str()) {
+                    *c -= 1;
+                    if *c == 0 && !self.graph.outputs.contains(i) {
+                        vals.remove(i.as_str());
+                    }
+                }
+            }
+        }
+        self.graph
+            .outputs
+            .iter()
+            .map(|o| vals.get(o).cloned().with_context(|| format!("missing output {o}")))
+            .collect()
+    }
+
+    fn eval_node(&self, n: &Node, vals: &HashMap<String, Tensor>, x: &Tensor) -> Result<Tensor> {
+        let get = |i: usize| -> Result<&Tensor> {
+            vals.get(&n.inputs[i]).with_context(|| format!("missing value {}", n.inputs[i]))
+        };
+        let out = match n.kind.as_str() {
+            "input" => x.clone(),
+            "conv2d" => {
+                let a = get(0)?;
+                let stride = n.attr_usize("stride")?;
+                let pad = n.attr_usize("pad")?;
+                let groups = n.attr_usize("groups")?;
+                let bias = if n.attr_bool("bias") {
+                    Some(self.params.get(&format!("{}.b", n.name)).context("missing bias")?)
+                } else {
+                    None
+                };
+                let wkey = format!("{}.w", n.name);
+                match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                        let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                        ops::conv2d_i8(a, qw, bias, stride, pad, groups, sx, zx, round)
+                    }
+                    _ => {
+                        let w = self.weight_tensor(&wkey)?;
+                        self.narrow(ops::conv2d_f32(a, &w, bias, stride, pad, groups))
+                    }
+                }
+            }
+            "linear" => {
+                let a = get(0)?;
+                let din = n.attr_usize("din")?;
+                let rows = a.len() / din;
+                let bias = if n.attr_bool("bias") {
+                    self.params.get(&format!("{}.b", n.name))
+                } else {
+                    None
+                };
+                let wkey = format!("{}.w", n.name);
+                let dout = n.attr_usize("dout")?;
+                let mut oshape = a.shape.clone();
+                *oshape.last_mut().unwrap() = dout;
+                let data = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                        let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                        ops::linear_i8(&a.data, rows, din, qw, bias, sx, zx, round)
+                    }
+                    _ => {
+                        let w = self.weight_tensor(&wkey)?;
+                        ops::linear_f32(&a.data, rows, din, &w, bias)
+                    }
+                };
+                self.narrow(Tensor::new(oshape, data))
+            }
+            "bn" => {
+                let a = get(0)?;
+                let g = &self.params[&format!("{}.gamma", n.name)];
+                let b = &self.params[&format!("{}.beta", n.name)];
+                let mean = &self.bn[&format!("{}.mean", n.name)];
+                let var = &self.bn[&format!("{}.var", n.name)];
+                let c = g.len();
+                let mut out = a.clone();
+                let spatial = a.len() / (a.shape[0] * c);
+                for ni in 0..a.shape[0] {
+                    for ci in 0..c {
+                        let inv = (var.data[ci] + BN_EPS).sqrt().recip();
+                        let scale = g.data[ci] * inv;
+                        let shift = b.data[ci] - mean.data[ci] * scale;
+                        let base = (ni * c + ci) * spatial;
+                        for i in 0..spatial {
+                            out.data[base + i] = a.data[base + i] * scale + shift;
+                        }
+                    }
+                }
+                self.narrow(out)
+            }
+            "relu" => self.narrow(get(0)?.map(|v| v.max(0.0))),
+            "relu6" => self.narrow(get(0)?.map(|v| v.clamp(0.0, 6.0))),
+            "hswish" => self.narrow(get(0)?.map(|v| v * (v + 3.0).clamp(0.0, 6.0) / 6.0)),
+            "hsigmoid" => self.narrow(get(0)?.map(|v| (v + 3.0).clamp(0.0, 6.0) / 6.0)),
+            "sigmoid" => self.narrow(get(0)?.map(|v| 1.0 / (1.0 + (-v).exp()))),
+            "silu" => self.narrow(get(0)?.map(|v| v / (1.0 + (-v).exp()))),
+            "gelu" => self.narrow(get(0)?.map(|v| {
+                let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+            })),
+            "add" => {
+                let (a, b) = (get(0)?, get(1)?);
+                if a.shape != b.shape {
+                    bail!("add shape mismatch at {}", n.name);
+                }
+                let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x + y).collect();
+                self.narrow(Tensor::new(a.shape.clone(), data))
+            }
+            "mul" => {
+                let (a, b) = (get(0)?, get(1)?);
+                let out = if a.shape == b.shape {
+                    let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x * y).collect();
+                    Tensor::new(a.shape.clone(), data)
+                } else {
+                    // broadcast (B, C, 1, 1) gate over (B, C, H, W) — SE block
+                    let (bsz, c) = (a.shape[0], a.shape[1]);
+                    let spatial = a.len() / (bsz * c);
+                    let mut out = a.clone();
+                    for ni in 0..bsz {
+                        for ci in 0..c {
+                            let gate = b.data[ni * c + ci];
+                            let base = (ni * c + ci) * spatial;
+                            for i in 0..spatial {
+                                out.data[base + i] *= gate;
+                            }
+                        }
+                    }
+                    out
+                };
+                self.narrow(out)
+            }
+            "maxpool" | "avgpool" => self.narrow(pool(
+                get(0)?,
+                n.attr_usize("k")?,
+                n.attr_usize("stride")?,
+                n.attr_usize("pad")?,
+                n.kind == "maxpool",
+            )),
+            "gap" => {
+                let a = get(0)?;
+                let (bsz, c) = (a.shape[0], a.shape[1]);
+                let spatial = a.len() / (bsz * c);
+                let mut out = Tensor::zeros(&[bsz, c, 1, 1]);
+                for ni in 0..bsz {
+                    for ci in 0..c {
+                        let base = (ni * c + ci) * spatial;
+                        let s: f32 = a.data[base..base + spatial].iter().sum();
+                        out.data[ni * c + ci] = s / spatial as f32;
+                    }
+                }
+                self.narrow(out)
+            }
+            "upsample2x" => {
+                let a = get(0)?;
+                let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+                let mut out = Tensor::zeros(&[bsz, c, 2 * h, 2 * w]);
+                for ni in 0..bsz {
+                    for ci in 0..c {
+                        for y in 0..2 * h {
+                            for xw in 0..2 * w {
+                                out.data[((ni * c + ci) * 2 * h + y) * 2 * w + xw] =
+                                    a.data[((ni * c + ci) * h + y / 2) * w + xw / 2];
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            "concat" => {
+                let (a, b) = (get(0)?, get(1)?);
+                let (bsz, ca, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+                let cb = b.shape[1];
+                let mut out = Tensor::zeros(&[bsz, ca + cb, h, w]);
+                let sp = h * w;
+                for ni in 0..bsz {
+                    let oa = ni * (ca + cb) * sp;
+                    out.data[oa..oa + ca * sp]
+                        .copy_from_slice(&a.data[ni * ca * sp..(ni + 1) * ca * sp]);
+                    out.data[oa + ca * sp..oa + (ca + cb) * sp]
+                        .copy_from_slice(&b.data[ni * cb * sp..(ni + 1) * cb * sp]);
+                }
+                out
+            }
+            "flatten" => {
+                let a = get(0)?;
+                let bsz = a.shape[0];
+                let rest = a.len() / bsz;
+                a.clone().reshaped(&[bsz, rest])
+            }
+            "reshape" => {
+                let a = get(0)?;
+                let bsz = a.shape[0];
+                let mut shape = vec![bsz];
+                shape.extend(n.shape.iter());
+                a.clone().reshaped(&shape)
+            }
+            "layernorm" => {
+                let a = get(0)?;
+                let d = n.attr_usize("d")?;
+                let rows = a.len() / d;
+                let g = &self.params[&format!("{}.gamma", n.name)];
+                let b = &self.params[&format!("{}.beta", n.name)];
+                let mut out = a.clone();
+                for r in 0..rows {
+                    let row = &a.data[r * d..(r + 1) * d];
+                    let mean = row.iter().sum::<f32>() / d as f32;
+                    let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+                    let inv = (var + 1e-6).sqrt().recip();
+                    for i in 0..d {
+                        out.data[r * d + i] = (row[i] - mean) * inv * g.data[i] + b.data[i];
+                    }
+                }
+                self.narrow(out)
+            }
+            "attention" => self.narrow(self.attention(n, get(0)?)?),
+            "to_tokens" => {
+                let a = get(0)?;
+                let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+                let t = h * w;
+                let mut out = Tensor::zeros(&[bsz, t, c]);
+                for ni in 0..bsz {
+                    for ci in 0..c {
+                        for p in 0..t {
+                            out.data[(ni * t + p) * c + ci] = a.data[(ni * c + ci) * t + p];
+                        }
+                    }
+                }
+                out
+            }
+            "tokmean" => {
+                let a = get(0)?;
+                let (bsz, t, d) = (a.shape[0], a.shape[1], a.shape[2]);
+                let mut out = Tensor::zeros(&[bsz, d]);
+                for ni in 0..bsz {
+                    for p in 0..t {
+                        for i in 0..d {
+                            out.data[ni * d + i] += a.data[(ni * t + p) * d + i];
+                        }
+                    }
+                    for i in 0..d {
+                        out.data[ni * d + i] /= t as f32;
+                    }
+                }
+                self.narrow(out)
+            }
+            "aq" => {
+                // integer requantization point: quant-dequant at static range
+                let a = get(0)?;
+                match self.int8_round() {
+                    Some(round) => {
+                        let &(lo, hi) = self
+                            .act_ranges
+                            .get(&n.name)
+                            .with_context(|| format!("no range for aq {}", n.name))?;
+                        let (s, z) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+                        a.map(|v| {
+                            let q = (round.round(v / s) + z as f32).clamp(0.0, 255.0);
+                            (q - z as f32) * s
+                        })
+                    }
+                    None => self.narrow(a.clone()),
+                }
+            }
+            other => bail!("engine: unknown node kind {other:?}"),
+        };
+        Ok(out)
+    }
+
+    fn attention(&self, n: &Node, x: &Tensor) -> Result<Tensor> {
+        let d = n.attr_usize("d")?;
+        let heads = n.attr_usize("heads")?;
+        let dh = d / heads;
+        let (bsz, t) = (x.shape[0], x.shape[1]);
+        let rows = bsz * t;
+
+        let proj = |mat: &str, bias: &str| -> Result<Vec<f32>> {
+            let wkey = format!("{}.{mat}", n.name);
+            let b = &self.params[&format!("{}.{bias}", n.name)];
+            match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+                (WeightMode::Int8, Some(round), Some(qw)) => {
+                    let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                    Ok(ops::linear_i8(&x.data, rows, d, qw, Some(b), sx, zx, round))
+                }
+                _ => {
+                    let w = self.weight_tensor(&wkey)?;
+                    Ok(ops::linear_f32(&x.data, rows, d, &w, Some(b)))
+                }
+            }
+        };
+        let q = proj("wq", "qb")?;
+        let k = proj("wk", "kb")?;
+        let v = proj("wv", "vb")?;
+        // scores + context in f32 (paper: softmax stays FP)
+        let mut ctxt = vec![0.0f32; rows * d];
+        let scale = 1.0 / (dh as f32).sqrt();
+        for b_i in 0..bsz {
+            for h_i in 0..heads {
+                for ti in 0..t {
+                    let qoff = (b_i * t + ti) * d + h_i * dh;
+                    // scores over all source tokens
+                    let mut sc = vec![0.0f32; t];
+                    let mut mx = f32::MIN;
+                    for tj in 0..t {
+                        let koff = (b_i * t + tj) * d + h_i * dh;
+                        let mut s = 0.0f32;
+                        for e in 0..dh {
+                            s += q[qoff + e] * k[koff + e];
+                        }
+                        sc[tj] = s * scale;
+                        mx = mx.max(sc[tj]);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in sc.iter_mut() {
+                        *s = (*s - mx).exp();
+                        denom += *s;
+                    }
+                    let coff = (b_i * t + ti) * d + h_i * dh;
+                    for tj in 0..t {
+                        let a = sc[tj] / denom;
+                        let voff = (b_i * t + tj) * d + h_i * dh;
+                        for e in 0..dh {
+                            ctxt[coff + e] += a * v[voff + e];
+                        }
+                    }
+                }
+            }
+        }
+        // output projection on the context
+        let wkey = format!("{}.wo", n.name);
+        let b = &self.params[&format!("{}.ob", n.name)];
+        let out = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+            (WeightMode::Int8, Some(round), Some(qw)) => {
+                // context range: reuse the block input's range as a proxy
+                let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                ops::linear_i8(&ctxt, rows, d, qw, Some(b), sx, zx, round)
+            }
+            _ => {
+                let w = self.weight_tensor(&wkey)?;
+                ops::linear_f32(&ctxt, rows, d, &w, Some(b))
+            }
+        };
+        Ok(Tensor::new(vec![bsz, t, d], out))
+    }
+}
+
+fn pool(a: &Tensor, k: usize, stride: usize, pad: usize, is_max: bool) -> Tensor {
+    let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c, ho, wo]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let xc = &a.data[(ni * c + ci) * h * w..(ni * c + ci + 1) * h * w];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = if is_max { f32::MIN } else { 0.0 };
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            if is_max {
+                                acc = acc.max(f32::MIN);
+                            }
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = xc[iy as usize * w + ix as usize];
+                            if is_max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                    if !is_max {
+                        acc /= (k * k) as f32;
+                    }
+                    out.data[((ni * c + ci) * ho + oy) * wo + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Build an FP32 reference CompiledModel straight from a checkpoint's
+/// param/bn sections (the "ONNX FP32" analogue all backends are compared to).
+pub fn fp32_model(graph: Graph, params: BTreeMap<String, Tensor>, bn: BTreeMap<String, Tensor>) -> CompiledModel {
+    CompiledModel {
+        graph,
+        params,
+        bn,
+        qweights: HashMap::new(),
+        act_ranges: HashMap::new(),
+        cfg: ExecConfig::FP32,
+    }
+}

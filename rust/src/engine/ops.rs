@@ -1,0 +1,436 @@
+//! Compute kernels for the deployment engine: f32 reference paths and the
+//! bit-exact integer (i8 x i8 -> i32) paths that simulate NPU arithmetic.
+//!
+//! Convolution is im2col + GEMM in both precisions; the integer GEMM uses the
+//! zero-point factorization  sum((xq-zx)*wq) = sum(xq*wq) - zx*sum(wq)  so the
+//! inner loop is a plain i32 dot product (this is also what real INT8 NPU
+//! pipelines do — the row-sum correction is precomputed per output channel).
+
+use crate::tensor::{QWeight, RoundMode, Tensor};
+
+/// im2col for NCHW input: output rows = N*Ho*Wo, cols = (Cin/g)*kh*kw,
+/// one matrix per group.
+pub struct Im2Col {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_group(
+    x: &Tensor,
+    group: usize,
+    groups: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) -> Im2Col {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let cg = c / groups;
+    let c0 = group * cg;
+    let rows = n * ho * wo;
+    let cols = cg * kh * kw;
+    let mut data = vec![0.0f32; rows * cols];
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (ni * ho + oy) * wo + ox;
+                let base = row * cols;
+                for ci in 0..cg {
+                    let xc = &x.data[((ni * c) + c0 + ci) * h * w..((ni * c) + c0 + ci + 1) * h * w];
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let iy = iy as usize;
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            data[base + (ci * kh + ky) * kw + kx] = xc[iy * w + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Im2Col { rows, cols, data }
+}
+
+/// f32 GEMM: out[r][o] += sum_k col[r][k] * w[o][k]; w is (cout_g, cols).
+pub fn gemm_f32(col: &Im2Col, w: &[f32], cout_g: usize, out: &mut [f32], out_stride: usize, o0: usize) {
+    const BK: usize = 64;
+    for r in 0..col.rows {
+        let crow = &col.data[r * col.cols..(r + 1) * col.cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        for o in 0..cout_g {
+            let wrow = &w[o * col.cols..(o + 1) * col.cols];
+            let mut acc = 0.0f32;
+            let mut k = 0;
+            while k + BK <= col.cols {
+                let mut s = 0.0f32;
+                for i in 0..BK {
+                    s += crow[k + i] * wrow[k + i];
+                }
+                acc += s;
+                k += BK;
+            }
+            for i in k..col.cols {
+                acc += crow[i] * wrow[i];
+            }
+            orow[o0 + o] = acc;
+        }
+    }
+}
+
+/// Quantize an f32 im2col buffer to u8 (asymmetric per-tensor).
+pub fn quantize_cols(col: &Im2Col, scale: f32, zp: i32, round: RoundMode) -> Vec<u8> {
+    col.data
+        .iter()
+        .map(|&v| (round.round(v / scale) + zp as f32).clamp(0.0, 255.0) as u8)
+        .collect()
+}
+
+/// Integer GEMM with zero-point factorization.
+/// out[r][o0+o] = sw[o]*sx * ( sum_k xq[r][k]*wq[o][k]  -  zx * rowsum_w[o] ) + bias[o]
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    w_scales: &[f32],
+    sx: f32,
+    zx: i32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    // per-output-channel weight row sums (the zero-point correction)
+    let mut rowsum = vec![0i32; cout_g];
+    for o in 0..cout_g {
+        let mut s = 0i32;
+        for &w in &wq[o * cols..(o + 1) * cols] {
+            s += w as i32;
+        }
+        rowsum[o] = s;
+    }
+    // §Perf iteration 3: parallelize across row chunks (disjoint outputs)
+    // when the problem is large enough to amortize thread spawn
+    let work = rows as u64 * cols as u64 * cout_g as u64;
+    if work > 4_000_000 && rows >= 8 {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+        let chunk = rows.div_ceil(threads);
+        let rowsum_ref = &rowsum;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f32] = out;
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let take = chunk.min(rows - r0);
+                let (mine, tail) = rest.split_at_mut(take * out_stride);
+                rest = tail;
+                let start = r0;
+                scope.spawn(move || {
+                    gemm_i8_rows(
+                        &xq[start * cols..(start + take) * cols],
+                        take, cols, wq, cout_g, rowsum_ref, w_scales, sx, zx, bias, mine,
+                        out_stride, o0,
+                    );
+                });
+                r0 += take;
+            }
+        });
+        return;
+    }
+    gemm_i8_rows(xq, rows, cols, wq, cout_g, &rowsum, w_scales, sx, zx, bias, out, out_stride, o0);
+}
+
+/// Serial row-range kernel behind `gemm_i8`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    w_scales: &[f32],
+    sx: f32,
+    zx: i32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    // 4-way output-channel register blocking: the x row stays hot in L1 and
+    // four i32 accumulators amortize its loads (§Perf iteration 1; the i16
+    // hoist and 8-way variants measured worse — see EXPERIMENTS.md §Perf)
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let w0 = &wq[o * cols..(o + 1) * cols];
+            let w1 = &wq[(o + 1) * cols..(o + 2) * cols];
+            let w2 = &wq[(o + 2) * cols..(o + 3) * cols];
+            let w3 = &wq[(o + 3) * cols..(o + 4) * cols];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for k in 0..cols {
+                let x = xrow[k] as i32;
+                a0 += x * w0[k] as i32;
+                a1 += x * w1[k] as i32;
+                a2 += x * w2[k] as i32;
+                a3 += x * w3[k] as i32;
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let s = w_scales[oo.min(w_scales.len() - 1)] * sx;
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = corrected as f32 * s + b;
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wq[o * cols..(o + 1) * cols];
+            let mut acc = 0i32;
+            for k in 0..cols {
+                acc += xrow[k] as i32 * wrow[k] as i32;
+            }
+            acc -= zx * rowsum[o];
+            let s = w_scales[o.min(w_scales.len() - 1)] * sx;
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = acc as f32 * s + b;
+            o += 1;
+        }
+    }
+}
+
+/// f32 convolution (NCHW, OIHW weights, groups).
+pub fn conv2d_f32(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
+    let n = x.shape[0];
+    let (cout, _cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (h, wdim) = (x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wdim + 2 * pad - kw) / stride + 1;
+    let cout_g = cout / groups;
+    let mut out_mat = vec![0.0f32; n * ho * wo * cout];
+    for g in 0..groups {
+        let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
+        let wslice = &w.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
+        gemm_f32(&col, wslice, cout_g, &mut out_mat, cout, g * cout_g);
+    }
+    let mut out = Tensor::zeros(&[n, cout, ho, wo]);
+    // out_mat is (N*Ho*Wo, Cout) -> NCHW
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let r = (ni * ho + oy) * wo + ox;
+                for o in 0..cout {
+                    let mut v = out_mat[r * cout + o];
+                    if let Some(b) = bias {
+                        v += b.data[o];
+                    }
+                    out.data[((ni * cout + o) * ho + oy) * wo + ox] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Integer (W8/A8) convolution: quantizes the input with (sx, zx), uses the
+/// pre-quantized weights, accumulates i32, dequantizes to f32 output.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8(
+    x: &Tensor,
+    qw: &QWeight,
+    bias: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+) -> Tensor {
+    let n = x.shape[0];
+    let (cout, _cg, kh, kw) = (qw.shape[0], qw.shape[1], qw.shape[2], qw.shape[3]);
+    let (h, wdim) = (x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wdim + 2 * pad - kw) / stride + 1;
+    let cout_g = cout / groups;
+    let mut out_mat = vec![0.0f32; n * ho * wo * cout];
+    for g in 0..groups {
+        let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
+        let xq = quantize_cols(&col, sx, zx, round);
+        let wslice = &qw.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
+        let sl = if qw.scales.len() == 1 {
+            qw.scales.clone()
+        } else {
+            qw.scales[g * cout_g..(g + 1) * cout_g].to_vec()
+        };
+        gemm_i8(
+            &xq, col.rows, col.cols, wslice, cout_g, &sl, sx, zx, None, &mut out_mat, cout,
+            g * cout_g,
+        );
+    }
+    let mut out = Tensor::zeros(&[n, cout, ho, wo]);
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let r = (ni * ho + oy) * wo + ox;
+                for o in 0..cout {
+                    let mut v = out_mat[r * cout + o];
+                    if let Some(b) = bias {
+                        v += b.data[o];
+                    }
+                    out.data[((ni * cout + o) * ho + oy) * wo + ox] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// f32 linear: x (rows, din) @ w.T (dout, din) + b.
+pub fn linear_f32(x: &[f32], rows: usize, din: usize, w: &Tensor, bias: Option<&Tensor>) -> Vec<f32> {
+    let dout = w.shape[0];
+    let mut out = vec![0.0f32; rows * dout];
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        for o in 0..dout {
+            let wrow = &w.data[o * din..(o + 1) * din];
+            let mut acc = 0.0f32;
+            for k in 0..din {
+                acc += xrow[k] * wrow[k];
+            }
+            if let Some(b) = bias {
+                acc += b.data[o];
+            }
+            out[r * dout + o] = acc;
+        }
+    }
+    out
+}
+
+/// Integer linear with asymmetric input quantization.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_i8(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    qw: &QWeight,
+    bias: Option<&Tensor>,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+) -> Vec<f32> {
+    let dout = qw.shape[0];
+    let xq: Vec<u8> = x
+        .iter()
+        .map(|&v| (round.round(v / sx) + zx as f32).clamp(0.0, 255.0) as u8)
+        .collect();
+    let mut out = vec![0.0f32; rows * dout];
+    let bias_slice = bias.map(|b| b.data.as_slice());
+    gemm_i8(&xq, rows, din, &qw.data, dout, &qw.scales, sx, zx, bias_slice, &mut out, dout, 0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{QuantScheme, Tensor};
+
+    fn seq_tensor(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|i| (i as f32) * 0.01 - 0.3).collect())
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input
+        let x = seq_tensor(&[1, 2, 3, 3]);
+        let w = Tensor::new(vec![2, 2, 1, 1], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = conv2d_f32(&x, &w, None, 1, 0, 1);
+        assert_eq!(y.shape, vec![1, 2, 3, 3]);
+        for (a, b) in x.data.iter().zip(y.data.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_stride_and_pad_shapes() {
+        let x = seq_tensor(&[2, 3, 8, 8]);
+        let w = seq_tensor(&[4, 3, 3, 3]);
+        let y = conv2d_f32(&x, &w, None, 2, 1, 1);
+        assert_eq!(y.shape, vec![2, 4, 4, 4]);
+    }
+
+    #[test]
+    fn depthwise_conv_groups() {
+        let x = seq_tensor(&[1, 4, 5, 5]);
+        let w = seq_tensor(&[4, 1, 3, 3]);
+        let y = conv2d_f32(&x, &w, None, 1, 1, 4);
+        assert_eq!(y.shape, vec![1, 4, 5, 5]);
+        // group 0 output depends only on channel 0: perturb channel 3, check ch 0 output fixed
+        let mut x2 = x.clone();
+        for i in 3 * 25..4 * 25 {
+            x2.data[i] += 1.0;
+        }
+        let y2 = conv2d_f32(&x2, &w, None, 1, 1, 4);
+        assert_eq!(&y.data[..25], &y2.data[..25]);
+        assert_ne!(&y.data[75..100], &y2.data[75..100]);
+    }
+
+    #[test]
+    fn int8_conv_close_to_f32() {
+        let x = seq_tensor(&[1, 3, 6, 6]).map(|v| v * 2.0 + 0.5);
+        let w = seq_tensor(&[4, 3, 3, 3]).map(|v| v * 0.3);
+        let yf = conv2d_f32(&x, &w, None, 1, 1, 1);
+        let qw = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+        let (lo, hi) = x.data.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let (sx, zx) = crate::tensor::act_scale_zp(lo, hi);
+        let yq = conv2d_i8(&x, &qw, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+        let scale = yf.abs_max();
+        for (a, b) in yf.data.iter().zip(yq.data.iter()) {
+            assert!((a - b).abs() < scale * 0.05, "int8 conv drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let w = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![2], vec![0.5, -0.5]);
+        let x = vec![1.0, 1.0, 1.0, 2.0, 0.0, -1.0];
+        let y = linear_f32(&x, 2, 3, &w, Some(&b));
+        // row2: [2,0,-1]·[1,2,3] = -1 + 0.5; [2,0,-1]·[4,5,6] = 2 - 0.5
+        assert_eq!(y, vec![6.5, 14.5, -0.5, 1.5]);
+    }
+
+    #[test]
+    fn int8_linear_close_to_f32() {
+        let w = seq_tensor(&[8, 16]).map(|v| v * 0.2);
+        let x: Vec<f32> = (0..32).map(|i| (i as f32) * 0.1 - 1.0).collect();
+        let yf = linear_f32(&x, 2, 16, &w, None);
+        let qw = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+        let (sx, zx) = crate::tensor::act_scale_zp(-1.0, 2.2);
+        let yq = linear_i8(&x, 2, 16, &qw, None, sx, zx, RoundMode::TiesEven);
+        for (a, b) in yf.iter().zip(yq.iter()) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+}

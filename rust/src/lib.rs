@@ -1,0 +1,28 @@
+//! Quant-Trim: hardware-neutral low-bit training and cross-backend edge-NPU
+//! deployment, reproducing Dhahri & Urban, *"Quant-Trim in Practice"* (2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **Layer 1/2 (build time)** — Pallas kernels + JAX training graphs,
+//!   AOT-lowered to HLO text under `artifacts/` by `make artifacts`.
+//! * **Layer 3 (this crate)** — the runtime: a PJRT-backed training
+//!   coordinator ([`coordinator`]), a graph IR + bit-exact integer inference
+//!   engine ([`qir`], [`engine`]), calibration/PTQ baselines ([`calib`]),
+//!   and a fleet of simulated vendor NPU backends ([`backends`]) with
+//!   roofline latency/power models ([`perfmodel`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! and all examples are self-contained.
+
+pub mod backends;
+pub mod calib;
+pub mod ckpt;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod perfmodel;
+pub mod qir;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;

@@ -1,0 +1,91 @@
+//! `quant-trim` CLI: fleet inspection, config dumps, training, deployment.
+//! The heavy experiment drivers live in examples/ (see README); this binary
+//! covers the quick operational commands.
+
+use anyhow::{bail, Result};
+
+use quant_trim::backends::{all_backends, backend_by_name};
+use quant_trim::coordinator::Curriculum;
+
+fn usage() -> ! {
+    eprintln!(
+        "quant-trim — hardware-neutral low-bit deployment (Quant-Trim reproduction)
+
+USAGE:
+  quant-trim devices              print the simulated device fleet (paper Tables 4-6)
+  quant-trim config --show        print curriculum defaults (paper Tables 7-8)
+  quant-trim lambda <e_w> <e_f> <H> <epochs>
+                                  print the blend schedule
+  quant-trim backend <name>       details for one backend
+
+The experiment drivers are cargo examples:
+  cargo run --release --example quickstart
+  cargo run --release --example train_cifar -- --model resnet18 --epochs 20
+  cargo run --release --example deploy_matrix
+  cargo run --release --example edge_benchmark
+  cargo run --release --example ablation
+  cargo run --release --example nanosam_distill
+  cargo run --release --example serve"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("devices") => {
+            println!(
+                "{:<18} {:<22} {:>10} {:>10} {:>8} {:>8} {:>9}",
+                "backend", "form factor", "INT8 TOPS", "F16 TF", "peak W", "price", "calib"
+            );
+            for b in all_backends() {
+                println!(
+                    "{:<18} {:<22} {:>10.1} {:>10.1} {:>8.1} {:>7.0}€ {:>9}",
+                    b.name,
+                    b.device.form_factor,
+                    b.device.tops_int8,
+                    b.device.tflops_fp16.max(b.device.tflops_bf16),
+                    b.device.peak_w,
+                    b.device.price_eur,
+                    format!("{:?}", b.calib).chars().take(9).collect::<String>(),
+                );
+            }
+        }
+        Some("config") => {
+            for (name, c) in [
+                ("cifar (Table 7)", Curriculum::cifar()),
+                ("segmentation (Table 7)", Curriculum::seg()),
+                ("transformer (Table 8)", Curriculum::transformer()),
+            ] {
+                println!(
+                    "{name}: E_w={} E_f={} H={} lam_max={} p_clip={} K={} mu={}",
+                    c.e_w, c.e_f, c.horizon, c.lam_max, c.p_clip, c.prune_every, c.mu
+                );
+            }
+        }
+        Some("lambda") => {
+            if args.len() != 5 {
+                usage();
+            }
+            let c = Curriculum {
+                e_w: args[1].parse()?,
+                e_f: args[2].parse()?,
+                horizon: args[3].parse()?,
+                ..Curriculum::cifar()
+            };
+            let epochs: usize = args[4].parse()?;
+            for t in 0..epochs {
+                println!("{t} {:.6}", c.lam(t));
+            }
+        }
+        Some("backend") => {
+            let Some(name) = args.get(1) else { usage() };
+            let Some(b) = backend_by_name(name) else {
+                bail!("unknown backend {name}; see `quant-trim devices`")
+            };
+            println!("{b:#?}");
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

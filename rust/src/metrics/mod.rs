@@ -1,0 +1,273 @@
+//! Evaluation metrics reported in the paper: Top-1/Top-5, logit MSE vs the
+//! FP32 reference, Brier score, ECE, SNR, mIoU, plus the distribution
+//! statistics behind Figs 2 and 9.
+
+use crate::tensor::{empirical_quantile, Tensor};
+
+/// Top-1 / Top-5 accuracy from logits (N, C) and labels.
+pub fn topk_accuracy(logits: &Tensor, labels: &[i32]) -> (f64, f64) {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    for i in 0..n {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let y = labels[i] as usize;
+        let ly = row[y];
+        let better = row.iter().filter(|&&v| v > ly).count();
+        if better == 0 {
+            top1 += 1;
+        }
+        if better < 5 {
+            top5 += 1;
+        }
+    }
+    (top1 as f64 / n as f64, top5 as f64 / n as f64)
+}
+
+pub fn softmax_row(row: &[f32]) -> Vec<f32> {
+    let mx = row.iter().fold(f32::MIN, |m, &v| m.max(v));
+    let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// Multiclass Brier score: mean over samples of sum_c (p_c - onehot_c)^2.
+pub fn brier(logits: &Tensor, labels: &[i32]) -> f64 {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let p = softmax_row(&logits.data[i * c..(i + 1) * c]);
+        for (j, &pj) in p.iter().enumerate() {
+            let y = if j == labels[i] as usize { 1.0 } else { 0.0 };
+            total += ((pj - y) as f64).powi(2);
+        }
+    }
+    total / n as f64
+}
+
+/// Expected calibration error, 15 equal-width confidence bins.
+pub fn ece(logits: &Tensor, labels: &[i32], bins: usize) -> f64 {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    let mut bin_conf = vec![0.0f64; bins];
+    let mut bin_acc = vec![0.0f64; bins];
+    let mut bin_n = vec![0usize; bins];
+    for i in 0..n {
+        let p = softmax_row(&logits.data[i * c..(i + 1) * c]);
+        let (pred, conf) =
+            p.iter().enumerate().fold((0usize, 0.0f32), |(bi, bv), (j, &v)| {
+                if v > bv {
+                    (j, v)
+                } else {
+                    (bi, bv)
+                }
+            });
+        let b = ((conf as f64 * bins as f64) as usize).min(bins - 1);
+        bin_conf[b] += conf as f64;
+        bin_acc[b] += if pred == labels[i] as usize { 1.0 } else { 0.0 };
+        bin_n[b] += 1;
+    }
+    let mut e = 0.0;
+    for b in 0..bins {
+        if bin_n[b] == 0 {
+            continue;
+        }
+        let conf = bin_conf[b] / bin_n[b] as f64;
+        let acc = bin_acc[b] / bin_n[b] as f64;
+        e += (bin_n[b] as f64 / n as f64) * (conf - acc).abs();
+    }
+    e
+}
+
+/// Paper's backend-drift metric: MSE between on-device and reference logits,
+/// mean over samples of the squared L2 distance.
+pub fn logit_mse(device: &Tensor, reference: &Tensor) -> f64 {
+    assert_eq!(device.shape, reference.shape);
+    let n = device.shape[0];
+    let mut total = 0.0f64;
+    for (a, b) in device.data.iter().zip(reference.data.iter()) {
+        total += ((a - b) as f64).powi(2);
+    }
+    total / n as f64
+}
+
+/// Signal-to-noise ratio (dB) of a deployed tensor vs the FP32 reference:
+/// 10 log10( sum ref^2 / sum (ref - out)^2 ).
+pub fn snr_db(reference: &[f32], output: &[f32]) -> f64 {
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    for (r, o) in reference.iter().zip(output.iter()) {
+        sig += (*r as f64).powi(2);
+        noise += ((*r - *o) as f64).powi(2);
+    }
+    if noise <= 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+/// Mean IoU for segmentation: logits (N, C, H, W) vs labels (N, H, W).
+pub fn miou(logits: &Tensor, labels: &[i32], num_classes: usize) -> f64 {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    let hw = logits.shape[2] * logits.shape[3];
+    let mut inter = vec![0u64; num_classes];
+    let mut uni = vec![0u64; num_classes];
+    for i in 0..n {
+        for p in 0..hw {
+            let mut best = 0usize;
+            let mut bv = f32::MIN;
+            for ci in 0..c {
+                let v = logits.data[(i * c + ci) * hw + p];
+                if v > bv {
+                    bv = v;
+                    best = ci;
+                }
+            }
+            let y = labels[i * hw + p] as usize;
+            if best == y {
+                inter[y] += 1;
+                uni[y] += 1;
+            } else {
+                uni[y] += 1;
+                uni[best] += 1;
+            }
+        }
+    }
+    let mut total = 0.0;
+    let mut seen = 0;
+    for k in 0..num_classes {
+        if uni[k] > 0 {
+            total += inter[k] as f64 / uni[k] as f64;
+            seen += 1;
+        }
+    }
+    if seen == 0 {
+        0.0
+    } else {
+        total / seen as f64
+    }
+}
+
+/// Pixel accuracy for segmentation.
+pub fn pixel_acc(logits: &Tensor, labels: &[i32]) -> f64 {
+    let n = logits.shape[0];
+    let c = logits.shape[1];
+    let hw = logits.shape[2] * logits.shape[3];
+    let mut correct = 0u64;
+    for i in 0..n {
+        for p in 0..hw {
+            let mut best = 0usize;
+            let mut bv = f32::MIN;
+            for ci in 0..c {
+                let v = logits.data[(i * c + ci) * hw + p];
+                if v > bv {
+                    bv = v;
+                    best = ci;
+                }
+            }
+            if best == labels[i * hw + p] as usize {
+                correct += 1;
+            }
+        }
+    }
+    correct as f64 / (n * hw) as f64
+}
+
+/// Distribution summary used for Figs 2 and 9: tail quantiles + excess
+/// kurtosis of a weight/activation sample.
+#[derive(Clone, Debug)]
+pub struct DistSummary {
+    pub p50: f32,
+    pub p99: f32,
+    pub p999: f32,
+    pub max: f32,
+    pub kurtosis: f64,
+    /// |x| range ratio max/p99 — the "scale inflation" factor reverse
+    /// pruning attacks.
+    pub tail_ratio: f32,
+}
+
+pub fn dist_summary(data: &[f32]) -> DistSummary {
+    let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+    let p50 = empirical_quantile(&abs, 0.50);
+    let p99 = empirical_quantile(&abs, 0.99);
+    let p999 = empirical_quantile(&abs, 0.999);
+    let max = abs.iter().fold(0.0f32, |m, &v| m.max(v));
+    let n = data.len() as f64;
+    let mean = data.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let m4 = data.iter().map(|&v| (v as f64 - mean).powi(4)).sum::<f64>() / n;
+    let kurtosis = if var > 0.0 { m4 / (var * var) - 3.0 } else { 0.0 };
+    DistSummary { p50, p99, p999, max, kurtosis, tail_ratio: max / p99.max(1e-12) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits2(rows: Vec<Vec<f32>>) -> Tensor {
+        let n = rows.len();
+        let c = rows[0].len();
+        Tensor::new(vec![n, c], rows.into_iter().flatten().collect())
+    }
+
+    #[test]
+    fn topk_basics() {
+        let l = logits2(vec![vec![0.1, 0.9, 0.0], vec![0.9, 0.1, 0.0]]);
+        let (t1, t5) = topk_accuracy(&l, &[1, 1]);
+        assert_eq!(t1, 0.5);
+        assert_eq!(t5, 1.0);
+    }
+
+    #[test]
+    fn brier_perfect_prediction_near_zero() {
+        let l = logits2(vec![vec![100.0, 0.0], vec![0.0, 100.0]]);
+        assert!(brier(&l, &[0, 1]) < 1e-6);
+        // uniform prediction on 2 classes: brier = 2*(0.5)^2 = 0.5
+        let u = logits2(vec![vec![0.0, 0.0]]);
+        assert!((brier(&u, &[0]) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ece_confident_and_correct_is_zero() {
+        let l = logits2(vec![vec![100.0, 0.0]; 10]);
+        assert!(ece(&l, &vec![0; 10], 15) < 1e-6);
+        // confident but always wrong -> ece near 1
+        assert!(ece(&l, &vec![1; 10], 15) > 0.9);
+    }
+
+    #[test]
+    fn snr_increases_with_fidelity() {
+        let r = vec![1.0f32, -2.0, 3.0, -4.0];
+        let close: Vec<f32> = r.iter().map(|v| v * 1.001).collect();
+        let far: Vec<f32> = r.iter().map(|v| v * 1.3).collect();
+        assert!(snr_db(&r, &close) > snr_db(&r, &far));
+        assert!(snr_db(&r, &r.clone()).is_infinite());
+    }
+
+    #[test]
+    fn miou_perfect_is_one() {
+        // 1 sample, 2 classes, 2x2: logits pick class = label
+        let mut l = Tensor::zeros(&[1, 2, 2, 2]);
+        let labels = [0, 1, 1, 0];
+        for p in 0..4 {
+            l.data[labels[p] as usize * 4 + p] = 5.0;
+        }
+        assert!((miou(&l, &labels, 2) - 1.0).abs() < 1e-9);
+        assert!((pixel_acc(&l, &labels) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dist_summary_detects_heavy_tails() {
+        let mut rng = crate::testutil::Rng::new(5);
+        let normal: Vec<f32> = (0..20_000).map(|_| rng.normal()).collect();
+        let heavy: Vec<f32> = (0..20_000).map(|_| rng.heavy_tail(0.005, 30.0)).collect();
+        let dn = dist_summary(&normal);
+        let dh = dist_summary(&heavy);
+        assert!(dh.kurtosis > dn.kurtosis + 1.0);
+        assert!(dh.tail_ratio > dn.tail_ratio);
+    }
+}

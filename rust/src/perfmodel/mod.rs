@@ -1,0 +1,255 @@
+//! Roofline latency / power / energy models for the edge-device fleet
+//! (paper Tables 5, 6, 10; Figs 3, 7, 11).
+//!
+//! Per-op time = max(compute_time, memory_time) + fixed per-op overhead;
+//! add-in cards pay PCIe transfer for input/output, unsupported ops fall back
+//! to the host with a synchronization penalty. Power = idle + (peak - idle) *
+//! sustained utilization. Absolute numbers are *modelled*, not measured — the
+//! shapes (who wins, by what factor) are what we reproduce; see DESIGN.md §2.
+
+use crate::qir::Graph;
+
+/// Numeric precision of a compiled deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int8,
+    Bf16,
+    Fp16,
+    Fp32,
+}
+
+impl Precision {
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Int8 => "INT8",
+            Precision::Bf16 => "BF16",
+            Precision::Fp16 => "FP16",
+            Precision::Fp32 => "FP32",
+        }
+    }
+
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Int8 => 1.0,
+            Precision::Bf16 | Precision::Fp16 => 2.0,
+            Precision::Fp32 => 4.0,
+        }
+    }
+}
+
+/// Device capability sheet (paper Table 6 + A.1/A.2 descriptions).
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub form_factor: &'static str,
+    pub link: &'static str,
+    /// Peak TOPS per precision; 0.0 = unsupported on this device.
+    pub tops_int8: f64,
+    pub tflops_bf16: f64,
+    pub tflops_fp16: f64,
+    pub tflops_fp32: f64,
+    /// Sustained fraction of peak the compiler's kernels reach.
+    pub efficiency: f64,
+    pub mem_bw_gbs: f64,
+    /// PCIe/USB transfer bandwidth for add-in cards; None = unified memory.
+    pub pcie_gbs: Option<f64>,
+    pub idle_w: f64,
+    pub peak_w: f64,
+    pub price_eur: f64,
+    /// Fixed per-op scheduling overhead (us). SoC runtimes are leaner than
+    /// host-dispatched add-in cards.
+    pub op_overhead_us: f64,
+    /// Penalty for a host-fallback subgraph (ms) — sync + copies.
+    pub fallback_ms: f64,
+}
+
+impl DeviceSpec {
+    pub fn peak_ops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Int8 => self.tops_int8 * 1e12,
+            Precision::Bf16 => self.tflops_bf16 * 1e12,
+            Precision::Fp16 => self.tflops_fp16 * 1e12,
+            Precision::Fp32 => self.tflops_fp32 * 1e12,
+        }
+    }
+
+    pub fn supports(&self, p: Precision) -> bool {
+        self.peak_ops(p) > 0.0
+    }
+}
+
+/// Modelled execution report for one compiled graph at one precision.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    pub latency_ms: f64,
+    pub fps: f64,
+    pub avg_power_w: f64,
+    pub peak_power_w: f64,
+    pub energy_mj_per_inf: f64,
+    pub utilization: f64,
+    pub fallback_ops: usize,
+}
+
+/// Estimate one inference (batch elements amortize per-op overhead).
+///
+/// `runtime_boost`: TensorRT-style compiled runtimes fuse + autotune,
+/// modelled as a multiplier (>1) on sustained efficiency; naive CUDA-kernel
+/// dispatch is 1.0 (paper Fig 3 "filled vs unfilled markers").
+pub fn estimate(
+    graph: &Graph,
+    dev: &DeviceSpec,
+    prec: Precision,
+    batch: usize,
+    runtime_boost: f64,
+    unsupported: &dyn Fn(&str) -> bool,
+) -> PerfReport {
+    let peak = dev.peak_ops(prec).max(1e9);
+    let eff = (dev.efficiency * runtime_boost).min(0.95);
+    let mut compute_s = 0.0f64;
+    let mut busy_s = 0.0f64;
+    let mut fallback_ops = 0usize;
+    let bytes_per = prec.bytes();
+    for n in &graph.nodes {
+        let macs = graph.node_macs(n) as f64 * batch as f64;
+        let bytes = graph.node_out_bytes(n) as f64 / 4.0 * bytes_per * batch as f64;
+        if unsupported(&n.kind) {
+            fallback_ops += 1;
+            // runs on host fp32 at a fraction of device speed + sync penalty
+            let host_time = macs * 2.0 / (50e9) + dev.fallback_ms / 1e3;
+            busy_s += host_time;
+            continue;
+        }
+        let ct = macs * 2.0 / (peak * eff);
+        let mt = bytes / (dev.mem_bw_gbs * 1e9);
+        compute_s += ct;
+        // compiled runtimes (TensorRT) fuse ops: fewer launches -> less overhead
+        busy_s += ct.max(mt) + dev.op_overhead_us / runtime_boost / 1e6;
+    }
+    // add-in cards: PCIe in/out per inference (inputs ship at the deployment
+    // precision — INT8 engines take quantized u8 frames from the host)
+    if let Some(pcie) = dev.pcie_gbs {
+        let in_bytes = graph
+            .nodes
+            .first()
+            .map(|n| graph.node_out_bytes(n) as f64 / 4.0 * bytes_per * batch as f64)
+            .unwrap_or(0.0);
+        let out_bytes: f64 = graph
+            .outputs
+            .iter()
+            .filter_map(|o| graph.node(o))
+            .map(|n| graph.node_out_bytes(n) as f64 * batch as f64)
+            .sum();
+        busy_s += (in_bytes + out_bytes) / (pcie * 1e9);
+    }
+    let latency_s = busy_s.max(1e-9);
+    let util = (compute_s / latency_s).clamp(0.02, 1.0);
+    let avg_power = dev.idle_w + (dev.peak_w - dev.idle_w) * util;
+    let peak_power = dev.idle_w + (dev.peak_w - dev.idle_w) * util.sqrt();
+    let fps = batch as f64 / latency_s;
+    PerfReport {
+        latency_ms: latency_s * 1e3,
+        fps,
+        avg_power_w: avg_power,
+        peak_power_w: peak_power,
+        energy_mj_per_inf: avg_power * latency_s / batch as f64 * 1e3,
+        utilization: util,
+        fallback_ops,
+    }
+}
+
+/// Tiled inference cost for large images (paper Fig 7 / Table 10: 512x512
+/// tiles, 50% overlap => stride 256).
+pub fn tiles_for(image_px: usize, tile: usize, overlap_frac: f64) -> usize {
+    let stride = ((tile as f64) * (1.0 - overlap_frac)) as usize;
+    let per_axis = if image_px <= tile { 1 } else { (image_px - tile).div_ceil(stride) + 1 };
+    per_axis * per_axis
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qir::Graph;
+
+    fn toy_graph() -> Graph {
+        Graph::parse(
+            "qir t v1\noutputs head\n\
+             node input image inputs=- shape=3,32,32\n\
+             node conv2d c1 inputs=image shape=16,32,32 bias=0 cin=3 cout=16 groups=1 kh=3 kw=3 pad=1 stride=1\n\
+             node relu r1 inputs=c1 shape=16,32,32\n\
+             node gap g1 inputs=r1 shape=16,1,1\n\
+             node flatten f1 inputs=g1 shape=16\n\
+             node linear head inputs=f1 shape=10 bias=1 din=16 dout=10\n",
+        )
+        .unwrap()
+    }
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec {
+            name: "test",
+            form_factor: "M.2",
+            link: "PCIe",
+            tops_int8: 26.0,
+            tflops_bf16: 0.0,
+            tflops_fp16: 2.0,
+            tflops_fp32: 1.0,
+            efficiency: 0.4,
+            mem_bw_gbs: 20.0,
+            pcie_gbs: Some(2.0),
+            idle_w: 1.0,
+            peak_w: 5.0,
+            price_eur: 150.0,
+            op_overhead_us: 10.0,
+            fallback_ms: 2.0,
+        }
+    }
+
+    #[test]
+    fn int8_faster_than_fp32() {
+        let g = toy_graph();
+        let d = dev();
+        let r8 = estimate(&g, &d, Precision::Int8, 1, 1.0, &|_| false);
+        let r32 = estimate(&g, &d, Precision::Fp32, 1, 1.0, &|_| false);
+        assert!(r8.fps > r32.fps, "{} vs {}", r8.fps, r32.fps);
+        assert!(r8.energy_mj_per_inf < r32.energy_mj_per_inf);
+    }
+
+    #[test]
+    fn runtime_boost_helps() {
+        let g = toy_graph();
+        let d = dev();
+        let naive = estimate(&g, &d, Precision::Fp16, 1, 1.0, &|_| false);
+        let trt = estimate(&g, &d, Precision::Fp16, 1, 2.0, &|_| false);
+        assert!(trt.fps > naive.fps);
+    }
+
+    #[test]
+    fn fallback_hurts_latency() {
+        let g = toy_graph();
+        let d = dev();
+        let clean = estimate(&g, &d, Precision::Int8, 1, 1.0, &|_| false);
+        let fallback = estimate(&g, &d, Precision::Int8, 1, 1.0, &|k| k == "linear");
+        assert!(fallback.latency_ms > clean.latency_ms + 1.0);
+        assert_eq!(fallback.fallback_ops, 1);
+    }
+
+    #[test]
+    fn power_between_idle_and_peak() {
+        let g = toy_graph();
+        let d = dev();
+        for p in [Precision::Int8, Precision::Fp16, Precision::Fp32] {
+            let r = estimate(&g, &d, p, 8, 1.0, &|_| false);
+            assert!(r.avg_power_w >= d.idle_w && r.avg_power_w <= d.peak_w);
+            assert!(r.peak_power_w >= r.avg_power_w);
+        }
+    }
+
+    #[test]
+    fn tile_math_matches_paper() {
+        // paper Table 10: 2k x 2k image, 512 tiles, 50% overlap -> 50 tiles
+        // ceil((2000-512)/256)+1 = 7 per axis -> 49 (paper says ~50)
+        let t = tiles_for(2000, 512, 0.5);
+        assert!((45..=56).contains(&t), "{t}");
+        assert_eq!(tiles_for(512, 512, 0.5), 1);
+        assert_eq!(tiles_for(1024, 512, 0.5), 9);
+    }
+}

@@ -1,0 +1,238 @@
+//! QIR: the deployment graph IR, parsed from `.qir` text emitted by
+//! `python/compile/ir.py`. This is what the simulated vendor compilers
+//! (rust/src/backends) consume — a standard, ONNX-like op set with no custom
+//! operators, exactly as the paper exports to its NPU toolchains.
+
+pub mod passes;
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One IR node. `attrs` are string-typed in the text format and accessed via
+/// typed getters.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: String,
+    pub name: String,
+    pub inputs: Vec<String>,
+    /// Shape excluding the batch dimension.
+    pub shape: Vec<usize>,
+    pub attrs: BTreeMap<String, String>,
+}
+
+impl Node {
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        self.attrs
+            .get(key)
+            .with_context(|| format!("node {}: missing attr {key}", self.name))?
+            .parse()
+            .with_context(|| format!("node {}: attr {key} not usize", self.name))
+    }
+
+    pub fn attr_bool(&self, key: &str) -> bool {
+        matches!(self.attrs.get(key).map(|s| s.as_str()), Some("1") | Some("true"))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl Graph {
+    pub fn parse(text: &str) -> Result<Graph> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty .qir")?;
+        let hp: Vec<&str> = header.split_whitespace().collect();
+        if hp.len() != 3 || hp[0] != "qir" || hp[2] != "v1" {
+            bail!("bad .qir header: {header:?}");
+        }
+        let name = hp[1].to_string();
+        let mut outputs = Vec::new();
+        let mut nodes = Vec::new();
+        let mut index = HashMap::new();
+        for line in lines {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts[0] {
+                "outputs" => {
+                    outputs = parts[1].split(',').map(|s| s.to_string()).collect();
+                }
+                "node" => {
+                    if parts.len() < 5 {
+                        bail!("malformed node line: {line:?}");
+                    }
+                    let kind = parts[1].to_string();
+                    let nname = parts[2].to_string();
+                    let mut inputs = Vec::new();
+                    let mut shape = Vec::new();
+                    let mut attrs = BTreeMap::new();
+                    for kv in &parts[3..] {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .with_context(|| format!("bad attr {kv:?} in {line:?}"))?;
+                        match k {
+                            "inputs" => {
+                                if v != "-" {
+                                    inputs = v.split(',').map(|s| s.to_string()).collect();
+                                }
+                            }
+                            "shape" => {
+                                shape = v
+                                    .split(',')
+                                    .filter(|s| !s.is_empty())
+                                    .map(|s| s.parse::<usize>().map_err(Into::into))
+                                    .collect::<Result<Vec<_>>>()?;
+                            }
+                            _ => {
+                                attrs.insert(k.to_string(), v.to_string());
+                            }
+                        }
+                    }
+                    index.insert(nname.clone(), nodes.len());
+                    nodes.push(Node { kind, name: nname, inputs, shape, attrs });
+                }
+                other => bail!("unknown .qir line kind {other:?}"),
+            }
+        }
+        if outputs.is_empty() {
+            if let Some(last) = nodes.last() {
+                outputs = vec![last.name.clone()];
+            }
+        }
+        let g = Graph { name, nodes, outputs, index };
+        g.validate()?;
+        Ok(g)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Graph> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Graph::parse(&text)
+    }
+
+    pub fn node(&self, name: &str) -> Option<&Node> {
+        self.index.get(name).map(|&i| &self.nodes[i])
+    }
+
+    /// Every input reference must point at an already-defined node
+    /// (the list is topologically ordered by construction).
+    pub fn validate(&self) -> Result<()> {
+        let mut seen: HashMap<&str, ()> = HashMap::new();
+        for n in &self.nodes {
+            for i in &n.inputs {
+                if !seen.contains_key(i.as_str()) {
+                    bail!("node {} references undefined input {}", n.name, i);
+                }
+            }
+            seen.insert(&n.name, ());
+        }
+        for o in &self.outputs {
+            if !seen.contains_key(o.as_str()) {
+                bail!("graph output {o} undefined");
+            }
+        }
+        Ok(())
+    }
+
+    /// Names of weight-bearing nodes (quantization targets).
+    pub fn weight_nodes(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind.as_str(), "conv2d" | "linear" | "attention"))
+            .collect()
+    }
+
+    /// Per-node consumer counts (for liveness / arena reuse in the engine).
+    pub fn consumer_counts(&self) -> HashMap<String, usize> {
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for n in &self.nodes {
+            for i in &n.inputs {
+                *counts.entry(i.clone()).or_insert(0) += 1;
+            }
+        }
+        for o in &self.outputs {
+            *counts.entry(o.clone()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Total MACs per batch element for compute-bearing ops, used by the
+    /// roofline performance model.
+    pub fn node_macs(&self, n: &Node) -> u64 {
+        match n.kind.as_str() {
+            "conv2d" => {
+                let (cout, ho, wo) = (n.shape[0], n.shape[1], n.shape[2]);
+                let cin = n.attr_usize("cin").unwrap_or(1);
+                let g = n.attr_usize("groups").unwrap_or(1);
+                let kh = n.attr_usize("kh").unwrap_or(1);
+                let kw = n.attr_usize("kw").unwrap_or(1);
+                (cout * ho * wo * (cin / g) * kh * kw) as u64
+            }
+            "linear" => {
+                let din = n.attr_usize("din").unwrap_or(1);
+                let dout = n.attr_usize("dout").unwrap_or(1);
+                let lead: usize = n.shape[..n.shape.len().saturating_sub(1)].iter().product();
+                (lead.max(1) * din * dout) as u64
+            }
+            "attention" => {
+                let d = n.attr_usize("d").unwrap_or(1);
+                let t = n.shape[0];
+                // 4 projections + 2 attention matmuls
+                (4 * t * d * d + 2 * t * t * d) as u64
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| self.node_macs(n)).sum()
+    }
+
+    /// Bytes of activation traffic per batch element (rough: out tensor f32).
+    pub fn node_out_bytes(&self, n: &Node) -> u64 {
+        4 * n.shape.iter().product::<usize>() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = "qir demo v1\noutputs head\n\
+        node input image inputs=- shape=3,8,8\n\
+        node conv2d c1 inputs=image shape=4,8,8 bias=0 cin=3 cout=4 groups=1 kh=3 kw=3 pad=1 stride=1\n\
+        node relu r1 inputs=c1 shape=4,8,8\n\
+        node gap g1 inputs=r1 shape=4,1,1\n\
+        node flatten f1 inputs=g1 shape=4\n\
+        node linear head inputs=f1 shape=10 bias=1 din=4 dout=10\n";
+
+    #[test]
+    fn parse_demo() {
+        let g = Graph::parse(DEMO).unwrap();
+        assert_eq!(g.name, "demo");
+        assert_eq!(g.nodes.len(), 6);
+        assert_eq!(g.outputs, vec!["head"]);
+        assert_eq!(g.node("c1").unwrap().attr_usize("cout").unwrap(), 4);
+        assert_eq!(g.weight_nodes().len(), 2);
+    }
+
+    #[test]
+    fn macs_accounting() {
+        let g = Graph::parse(DEMO).unwrap();
+        let c1 = g.node("c1").unwrap();
+        assert_eq!(g.node_macs(c1), (4 * 8 * 8 * 3 * 3 * 3) as u64);
+        let head = g.node("head").unwrap();
+        assert_eq!(g.node_macs(head), 40);
+    }
+
+    #[test]
+    fn undefined_input_rejected() {
+        let bad = "qir x v1\noutputs a\nnode relu a inputs=ghost shape=1\n";
+        assert!(Graph::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Graph transformation passes applied by the simulated vendor compilers.
+//!
+//! * `fold_bn` — fold BatchNorm (running stats) into the preceding conv,
+//!   the universal first step of every NPU toolchain.
+//! * `cross_layer_equalization` — rescale adjacent conv channel ranges
+//!   (Nagel et al.; the "Equalization" half of the paper's Table 3 baseline).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::qir::{Graph, Node};
+use crate::tensor::Tensor;
+
+const BN_EPS: f32 = 1e-5;
+
+/// Rebuild a graph from parts (validates and re-indexes).
+pub fn rebuild(name: String, nodes: Vec<Node>, outputs: Vec<String>) -> Result<Graph> {
+    let mut text = format!("qir {name} v1\noutputs {}\n", outputs.join(","));
+    for n in &nodes {
+        let inputs = if n.inputs.is_empty() { "-".to_string() } else { n.inputs.join(",") };
+        let shape =
+            n.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+        let attrs = n
+            .attrs
+            .iter()
+            .map(|(k, v)| format!(" {k}={v}"))
+            .collect::<String>();
+        text.push_str(&format!("node {} {} inputs={inputs} shape={shape}{attrs}\n", n.kind, n.name));
+    }
+    Graph::parse(&text)
+}
+
+/// Per-output-channel |gamma / sqrt(var+eps)| factors applied to each folded
+/// conv's weights — needed to transport embedded QAT weight statistics
+/// (computed on unfolded weights) onto the folded graph.
+pub type FoldFactors = BTreeMap<String, Vec<f32>>;
+
+/// Fold every `conv2d -> bn` pair (bn the sole consumer) into the conv.
+/// Returns the new graph, transformed parameters, and the fold factors.
+pub fn fold_bn(
+    graph: &Graph,
+    params: &BTreeMap<String, Tensor>,
+    bn: &BTreeMap<String, Tensor>,
+) -> Result<(Graph, BTreeMap<String, Tensor>, FoldFactors)> {
+    let counts = graph.consumer_counts();
+    let mut new_params = params.clone();
+    let mut factors: FoldFactors = BTreeMap::new();
+    // bn node name -> conv node name, for bns being folded
+    let mut folded: BTreeMap<String, String> = BTreeMap::new();
+    for n in &graph.nodes {
+        if n.kind != "bn" {
+            continue;
+        }
+        let prod = graph.node(&n.inputs[0]);
+        let Some(prod) = prod else { continue };
+        if prod.kind != "conv2d" || counts.get(&prod.name).copied().unwrap_or(0) != 1 {
+            continue;
+        }
+        let gamma = &params[&format!("{}.gamma", n.name)];
+        let beta = &params[&format!("{}.beta", n.name)];
+        let mean = bn.get(&format!("{}.mean", n.name)).context("missing bn mean")?;
+        let var = bn.get(&format!("{}.var", n.name)).context("missing bn var")?;
+        let wkey = format!("{}.w", prod.name);
+        let w = new_params.get(&wkey).context("missing conv weight")?.clone();
+        let cout = w.shape[0];
+        let per = w.data.len() / cout;
+        let had_bias = prod.attr_bool("bias");
+        let old_b = if had_bias {
+            new_params[&format!("{}.b", prod.name)].clone()
+        } else {
+            Tensor::zeros(&[cout])
+        };
+        let mut wn = w.clone();
+        let mut bnew = Tensor::zeros(&[cout]);
+        let mut facs = vec![1.0f32; cout];
+        for c in 0..cout {
+            let inv = (var.data[c] + BN_EPS).sqrt().recip();
+            let s = gamma.data[c] * inv;
+            facs[c] = s.abs();
+            for i in 0..per {
+                wn.data[c * per + i] *= s;
+            }
+            bnew.data[c] = (old_b.data[c] - mean.data[c]) * s + beta.data[c];
+        }
+        factors.insert(prod.name.clone(), facs);
+        new_params.insert(wkey, wn);
+        new_params.insert(format!("{}.b", prod.name), bnew);
+        new_params.remove(&format!("{}.gamma", n.name));
+        new_params.remove(&format!("{}.beta", n.name));
+        folded.insert(n.name.clone(), prod.name.clone());
+    }
+    // rewrite graph: drop folded bn nodes, rewire consumers, set bias=1
+    let mut nodes: Vec<Node> = Vec::new();
+    for n in &graph.nodes {
+        if folded.contains_key(&n.name) {
+            continue;
+        }
+        let mut n2 = n.clone();
+        if n2.kind == "conv2d" && folded.values().any(|c| c == &n2.name) {
+            n2.attrs.insert("bias".into(), "1".into());
+        }
+        for i in n2.inputs.iter_mut() {
+            if let Some(conv) = folded.get(i) {
+                *i = conv.clone();
+            }
+        }
+        nodes.push(n2);
+    }
+    let outputs = graph
+        .outputs
+        .iter()
+        .map(|o| folded.get(o).cloned().unwrap_or_else(|| o.clone()))
+        .collect();
+    let g = rebuild(graph.name.clone(), nodes, outputs)?;
+    Ok((g, new_params, factors))
+}
+
+/// Cross-layer equalization on conv->act->conv chains (groups=1 both sides).
+/// Scales output channel c of conv1 by 1/s and input channel c of conv2 by s,
+/// s = sqrt(r1_c / r2_c), valid through ReLU-family activations and aq nodes.
+pub fn cross_layer_equalization(
+    graph: &Graph,
+    params: &mut BTreeMap<String, Tensor>,
+) -> usize {
+    let counts = graph.consumer_counts();
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    for n in &graph.nodes {
+        if n.kind != "conv2d" || n.attr_usize("groups").unwrap_or(1) != 1 {
+            continue;
+        }
+        // walk a single-consumer chain through relu/relu6/aq to the next conv
+        let mut cur = n.name.clone();
+        loop {
+            if counts.get(&cur).copied().unwrap_or(0) != 1 {
+                break;
+            }
+            let consumer = graph.nodes.iter().find(|m| m.inputs.contains(&cur));
+            let Some(c) = consumer else { break };
+            match c.kind.as_str() {
+                "relu" | "relu6" | "aq" => {
+                    cur = c.name.clone();
+                }
+                "conv2d" if c.attr_usize("groups").unwrap_or(1) == 1 => {
+                    pairs.push((n.name.clone(), c.name.clone()));
+                    break;
+                }
+                _ => break,
+            }
+        }
+    }
+    for (a, b) in &pairs {
+        let w1k = format!("{a}.w");
+        let w2k = format!("{b}.w");
+        let (Some(w1), Some(w2)) = (params.get(&w1k).cloned(), params.get(&w2k).cloned()) else {
+            continue;
+        };
+        let cout1 = w1.shape[0];
+        let per1 = w1.data.len() / cout1;
+        let cin2 = w2.shape[1];
+        if cin2 != cout1 {
+            continue;
+        }
+        let cout2 = w2.shape[0];
+        let khw2 = w2.shape[2] * w2.shape[3];
+        let mut w1n = w1.clone();
+        let mut w2n = w2.clone();
+        let mut b1n = params.get(&format!("{a}.b")).cloned();
+        for c in 0..cout1 {
+            let r1 = w1.data[c * per1..(c + 1) * per1]
+                .iter()
+                .fold(0.0f32, |m, &v| m.max(v.abs()));
+            let mut r2 = 0.0f32;
+            for o in 0..cout2 {
+                for i in 0..khw2 {
+                    r2 = r2.max(w2.data[(o * cin2 + c) * khw2 + i].abs());
+                }
+            }
+            if r1 <= 1e-12 || r2 <= 1e-12 {
+                continue;
+            }
+            let s = (r1 / r2).sqrt();
+            for i in 0..per1 {
+                w1n.data[c * per1 + i] /= s;
+            }
+            if let Some(b) = b1n.as_mut() {
+                b.data[c] /= s;
+            }
+            for o in 0..cout2 {
+                for i in 0..khw2 {
+                    w2n.data[(o * cin2 + c) * khw2 + i] *= s;
+                }
+            }
+        }
+        params.insert(w1k, w1n);
+        params.insert(w2k, w2n);
+        if let Some(b) = b1n {
+            params.insert(format!("{a}.b"), b);
+        }
+    }
+    pairs.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{fp32_model, ops};
+
+    fn demo_graph() -> Graph {
+        Graph::parse(
+            "qir d v1\noutputs r\n\
+             node input image inputs=- shape=2,4,4\n\
+             node conv2d c inputs=image shape=3,4,4 bias=0 cin=2 cout=3 groups=1 kh=3 kw=3 pad=1 stride=1\n\
+             node bn b inputs=c shape=3,4,4 c=3\n\
+             node relu r inputs=b shape=3,4,4\n",
+        )
+        .unwrap()
+    }
+
+    fn demo_state() -> (BTreeMap<String, Tensor>, BTreeMap<String, Tensor>) {
+        let mut params = BTreeMap::new();
+        let wn: usize = 3 * 2 * 3 * 3;
+        params.insert(
+            "c.w".to_string(),
+            Tensor::new(vec![3, 2, 3, 3], (0..wn).map(|i| (i as f32) * 0.01 - 0.2).collect()),
+        );
+        params.insert("b.gamma".to_string(), Tensor::new(vec![3], vec![1.0, 0.5, 2.0]));
+        params.insert("b.beta".to_string(), Tensor::new(vec![3], vec![0.1, -0.1, 0.0]));
+        let mut bn = BTreeMap::new();
+        bn.insert("b.mean".to_string(), Tensor::new(vec![3], vec![0.05, -0.02, 0.1]));
+        bn.insert("b.var".to_string(), Tensor::new(vec![3], vec![1.0, 0.5, 2.0]));
+        (params, bn)
+    }
+
+    #[test]
+    fn bn_fold_preserves_output() {
+        let g = demo_graph();
+        let (params, bn) = demo_state();
+        let x = Tensor::new(
+            vec![1, 2, 4, 4],
+            (0..32).map(|i| (i as f32) * 0.1 - 1.5).collect(),
+        );
+        let m0 = fp32_model(g.clone(), params.clone(), bn.clone());
+        let y0 = m0.run(&x).unwrap();
+        let (g2, p2, _facs) = fold_bn(&g, &params, &bn).unwrap();
+        assert!(g2.node("b").is_none(), "bn node should be gone");
+        let m1 = fp32_model(g2, p2, BTreeMap::new());
+        let y1 = m1.run(&x).unwrap();
+        for (a, b) in y0[0].data.iter().zip(y1[0].data.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn equalization_preserves_function_and_balances_ranges() {
+        // conv(1x1) -> relu -> conv(1x1), no bias
+        let g = Graph::parse(
+            "qir e v1\noutputs c2\n\
+             node input image inputs=- shape=2,2,2\n\
+             node conv2d c1 inputs=image shape=2,2,2 bias=0 cin=2 cout=2 groups=1 kh=1 kw=1 pad=0 stride=1\n\
+             node relu r inputs=c1 shape=2,2,2\n\
+             node conv2d c2 inputs=r shape=2,2,2 bias=0 cin=2 cout=2 groups=1 kh=1 kw=1 pad=0 stride=1\n",
+        )
+        .unwrap();
+        let mut params = BTreeMap::new();
+        // channel 0 of c1 huge, channel 1 tiny — classic imbalance
+        params.insert("c1.w".into(), Tensor::new(vec![2, 2, 1, 1], vec![8.0, 4.0, 0.01, 0.02]));
+        params.insert("c2.w".into(), Tensor::new(vec![2, 2, 1, 1], vec![0.01, 2.0, 0.02, 1.0]));
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![0.3, -0.2, 0.5, 0.1, -0.4, 0.2, 0.6, -0.1]);
+        let before = {
+            let m = fp32_model(g.clone(), params.clone(), BTreeMap::new());
+            m.run(&x).unwrap()[0].clone()
+        };
+        let n = cross_layer_equalization(&g, &mut params);
+        assert_eq!(n, 1);
+        let after = {
+            let m = fp32_model(g.clone(), params.clone(), BTreeMap::new());
+            m.run(&x).unwrap()[0].clone()
+        };
+        for (a, b) in before.data.iter().zip(after.data.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // ranges balanced: per-channel |w| max of c1 should be closer together
+        let w1 = &params["c1.w"];
+        let r0 = w1.data[0..2].iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let r1 = w1.data[2..4].iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(r0 / r1 < 8.0 / 0.02 / 10.0, "ranges should contract: {r0} {r1}");
+        let _ = ops::conv2d_f32; // keep import used
+    }
+}

@@ -1,0 +1,192 @@
+//! `.manifest` parser — text twin of `python/compile/manifest.py`.
+//!
+//! The manifest pins the positional HLO interface of every exported function:
+//! which state-dict entry feeds parameter *i*, and which tuple element of the
+//! result is which updated state entry. The coordinator marshals purely from
+//! this — no shape knowledge is hard-coded in Rust.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One positional argument or return slot of an exported function.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub idx: usize,
+    pub role: String,
+    pub key: String,
+    pub dtype: DType,
+    /// Empty = scalar.
+    pub shape: Vec<usize>,
+}
+
+/// An exported HLO function: file + full positional interface.
+#[derive(Clone, Debug, Default)]
+pub struct FnSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub args: Vec<Slot>,
+    pub rets: Vec<Slot>,
+}
+
+/// Parsed manifest for one model.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    /// kind -> file (qir, ckpt, teacher_ckpt, teacher_qir, ...)
+    pub files: BTreeMap<String, String>,
+    pub fns: BTreeMap<String, FnSpec>,
+}
+
+fn parse_slot(parts: &[&str]) -> Result<(String, Slot)> {
+    // <fn> <idx> <role> <key> <dtype> <dims>
+    if parts.len() != 6 {
+        bail!("malformed slot line: {:?}", parts);
+    }
+    let fn_name = parts[0].to_string();
+    let idx: usize = parts[1].parse()?;
+    let dtype = match parts[4] {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        other => bail!("unknown dtype {other}"),
+    };
+    let shape = if parts[5] == "scalar" {
+        vec![]
+    } else {
+        parts[5]
+            .split(',')
+            .map(|s| s.parse::<usize>().map_err(Into::into))
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok((
+        fn_name,
+        Slot { idx, role: parts[2].to_string(), key: parts[3].to_string(), dtype, shape },
+    ))
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let mut m = Manifest {
+            dir: path.parent().unwrap_or(Path::new(".")).to_path_buf(),
+            ..Default::default()
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("{path:?}:{}", lineno + 1);
+            match parts[0] {
+                "model" => m.model = parts.get(1).map(|s| s.to_string()).unwrap_or_default(),
+                "artifact" => {
+                    if parts.len() != 3 {
+                        bail!("{}: malformed artifact line", ctx());
+                    }
+                    let spec = m.fns.entry(parts[1].to_string()).or_default();
+                    spec.name = parts[1].to_string();
+                    spec.hlo_file = parts[2].to_string();
+                }
+                "arg" => {
+                    let (f, slot) = parse_slot(&parts[1..]).with_context(ctx)?;
+                    m.fns.entry(f.clone()).or_default().args.push(slot);
+                }
+                "ret" => {
+                    let (f, slot) = parse_slot(&parts[1..]).with_context(ctx)?;
+                    m.fns.entry(f.clone()).or_default().rets.push(slot);
+                }
+                kind => {
+                    if parts.len() == 2 {
+                        m.files.insert(kind.to_string(), parts[1].to_string());
+                    } else {
+                        bail!("{}: unrecognized line {line:?}", ctx());
+                    }
+                }
+            }
+        }
+        // sanity: slots must be dense and ordered
+        for spec in m.fns.values() {
+            for (i, s) in spec.args.iter().enumerate() {
+                if s.idx != i {
+                    bail!("fn {} arg order corrupt at {}", spec.name, i);
+                }
+            }
+            for (i, s) in spec.rets.iter().enumerate() {
+                if s.idx != i {
+                    bail!("fn {} ret order corrupt at {}", spec.name, i);
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn hlo_path(&self, fn_name: &str) -> Result<PathBuf> {
+        let spec = self
+            .fns
+            .get(fn_name)
+            .with_context(|| format!("no fn {fn_name} in manifest for {}", self.model))?;
+        Ok(self.dir.join(&spec.hlo_file))
+    }
+
+    pub fn file_path(&self, kind: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(kind)
+            .with_context(|| format!("no file kind {kind} in manifest for {}", self.model))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn parse_minimal() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("qt_manifest_test.manifest");
+        let mut f = std::fs::File::create(&p).unwrap();
+        writeln!(f, "model demo").unwrap();
+        writeln!(f, "qir demo.qir").unwrap();
+        writeln!(f, "artifact fwd demo.fwd.hlo.txt").unwrap();
+        writeln!(f, "arg fwd 0 param a.w f32 2,3").unwrap();
+        writeln!(f, "arg fwd 1 data x f32 1,3").unwrap();
+        writeln!(f, "ret fwd 0 out out f32 1,2").unwrap();
+        drop(f);
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.model, "demo");
+        let spec = &m.fns["fwd"];
+        assert_eq!(spec.args.len(), 2);
+        assert_eq!(spec.args[0].key, "a.w");
+        assert_eq!(spec.args[0].shape, vec![2, 3]);
+        assert_eq!(spec.rets[0].shape, vec![1, 2]);
+        assert!(m.hlo_path("fwd").unwrap().ends_with("demo.fwd.hlo.txt"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn scalar_and_i32_slots() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("qt_manifest_test2.manifest");
+        std::fs::write(
+            &p,
+            "model m\nartifact f a.hlo.txt\narg f 0 lam lam f32 scalar\narg f 1 label y i32 8\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.fns["f"].args[0].shape.is_empty());
+        assert_eq!(m.fns["f"].args[1].dtype, DType::I32);
+        std::fs::remove_file(p).ok();
+    }
+}

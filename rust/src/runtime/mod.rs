@@ -1,0 +1,145 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client. This is the only module that touches the `xla` crate.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Outputs are lowered with `return_tuple=True`, so every call returns one
+//! tuple literal which we decompose against the manifest's ret slots.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{DType, FnSpec, Manifest, Slot};
+
+use crate::tensor::Tensor;
+
+/// Shared PJRT client (CPU). Create once, clone-free; executables borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one exported function from its manifest entry.
+    pub fn load_fn(&self, man: &Manifest, fn_name: &str) -> Result<LoadedFn> {
+        let path = man.hlo_path(fn_name)?;
+        let spec = man.fns[fn_name].clone();
+        self.load_fn_from(&path, spec)
+    }
+
+    pub fn load_fn_from(&self, path: &Path, spec: FnSpec) -> Result<LoadedFn> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+        Ok(LoadedFn { exe, spec })
+    }
+}
+
+/// A compiled executable plus its positional interface.
+pub struct LoadedFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: FnSpec,
+}
+
+impl LoadedFn {
+    /// Execute with marshalled literals; returns the decomposed result tuple.
+    pub fn call(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "fn {}: expected {} args, got {}",
+                self.spec.name,
+                self.spec.args.len(),
+                args.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != self.spec.rets.len() {
+            bail!(
+                "fn {}: expected {} rets, got {}",
+                self.spec.name,
+                self.spec.rets.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute with `Tensor` inputs (all-f32 interface helper for tests and
+    /// single-tensor kernels).
+    pub fn call_tensors(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = args.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let outs = self.call(&lits)?;
+        outs.iter()
+            .zip(self.spec.rets.iter())
+            .map(|(l, s)| literal_to_tensor(l, &s.shape))
+            .collect()
+    }
+}
+
+/// f32 Tensor -> PJRT literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // rank-0: reshape the 1-element vector to a scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// i32 labels -> literal.
+pub fn i32_to_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Literal (f32) -> Tensor with the manifest-declared shape.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    if shape.iter().product::<usize>() != data.len() {
+        bail!("literal size {} != manifest shape {:?}", data.len(), shape);
+    }
+    Ok(Tensor::new(shape.to_vec(), data))
+}
+
+/// Cache of compiled functions for a model (compile once, call many).
+pub struct FnCache<'rt> {
+    rt: &'rt Runtime,
+    man: Manifest,
+    cache: HashMap<String, LoadedFn>,
+}
+
+impl<'rt> FnCache<'rt> {
+    pub fn new(rt: &'rt Runtime, man: Manifest) -> Self {
+        FnCache { rt, man, cache: HashMap::new() }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    pub fn get(&mut self, fn_name: &str) -> Result<&LoadedFn> {
+        if !self.cache.contains_key(fn_name) {
+            let f = self.rt.load_fn(&self.man, fn_name)?;
+            self.cache.insert(fn_name.to_string(), f);
+        }
+        Ok(&self.cache[fn_name])
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal dense tensor types for the deployment engine.
+//!
+//! The engine is deliberately self-contained (no ndarray dependency — the
+//! vendored crate set is fixed): `Tensor` is a shape + contiguous `Vec<f32>`,
+//! `QTensor` carries quantized u8/i8 payloads with their scales.
+//! Layout is row-major; images are NCHW, matching the JAX side.
+
+pub mod quantized;
+
+pub use quantized::{act_scale_zp, weight_scale, QActTensor, QWeight, QuantScheme, RoundMode};
+
+/// Dense float32 tensor, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape element count mismatch"
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 4-D accessor (NCHW).
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let (_, cs, hs, ws) = self.strides4();
+        self.data[n * cs * self.shape[1] + c * hs * self.shape[2] + h * ws * self.shape[3] + w]
+    }
+
+    #[inline]
+    fn strides4(&self) -> (usize, usize, usize, usize) {
+        debug_assert_eq!(self.shape.len(), 4);
+        (0, 1, 1, 1) // helper for at4 only; kept trivial
+    }
+
+    /// Max |x| over all elements.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+}
+
+/// Paper-definition empirical quantile x_(ceil(p*n)) — matches
+/// `compile.kernels.ref.empirical_quantile` on the Python side.
+pub fn empirical_quantile(data: &[f32], p: f64) -> f32 {
+    assert!(!data.is_empty());
+    let mut v: Vec<f32> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = v.len();
+    let idx = ((p * n as f64).ceil() as isize - 1).clamp(0, n as isize - 1) as usize;
+    v[idx]
+}
+
+/// Strided deterministic subsample (|out| <= s_max), matching
+/// `compile.kernels.ref.tensor_quantile`'s subsampling.
+pub fn subsample(data: &[f32], s_max: usize) -> Vec<f32> {
+    let n = data.len();
+    if n <= s_max {
+        return data.to_vec();
+    }
+    let stride = n.div_ceil(s_max);
+    data.iter().step_by(stride).copied().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_matches_paper_definition() {
+        // order statistics of 1..=10; p=0.5 -> x_(5) = 5
+        let data: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        assert_eq!(empirical_quantile(&data, 0.5), 5.0);
+        assert_eq!(empirical_quantile(&data, 0.05), 1.0);
+        assert_eq!(empirical_quantile(&data, 1.0), 10.0);
+        assert_eq!(empirical_quantile(&data, 0.95), 10.0);
+        assert_eq!(empirical_quantile(&data, 0.91), 10.0);
+        assert_eq!(empirical_quantile(&data, 0.90), 9.0);
+    }
+
+    #[test]
+    fn subsample_bounds() {
+        let data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let s = subsample(&data, 100);
+        assert!(s.len() <= 100);
+        assert_eq!(s[0], 0.0);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::zeros(&[2, 3, 4]).reshaped(&[6, 4]);
+        assert_eq!(t.shape, vec![6, 4]);
+    }
+}

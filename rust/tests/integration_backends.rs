@@ -1,0 +1,256 @@
+//! Integration over the deployment substrate: vendor-backend compilation on
+//! real exported models, precision paths, PTQ baselines, QAT-scale
+//! consumption, and the engine-vs-Pallas device-forward cross-check.
+
+use std::path::PathBuf;
+
+use quant_trim::backends::{all_backends, backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::{CallExtras, TrainState};
+use quant_trim::data::{gen_cls_batch, ClsSpec};
+use quant_trim::engine::fp32_model;
+use quant_trim::metrics::snr_db;
+use quant_trim::perfmodel::Precision;
+use quant_trim::qir::Graph;
+use quant_trim::runtime::{Manifest, Runtime};
+use quant_trim::tensor::Tensor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("resnet18_c10.manifest").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+fn load_state(dir: &PathBuf, model: &str) -> (Graph, TrainState) {
+    let graph = Graph::load(dir.join(format!("{model}.qir"))).unwrap();
+    let ck = Checkpoint::load(dir.join(format!("{model}.init.qtckpt"))).unwrap();
+    (graph, TrainState::from_checkpoint(&ck))
+}
+
+#[test]
+fn every_backend_compiles_and_runs_resnet() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, state) = load_state(&dir, "resnet18_c10");
+    let task = ClsSpec::cifar10();
+    let calib: Vec<Tensor> = (0..2).map(|i| gen_cls_batch(task, 8, 100 + i).images).collect();
+    let b = gen_cls_batch(task, 4, 7);
+    let reference = fp32_model(graph.clone(), state.params.clone(), state.bn.clone());
+    let ref_logits = reference.run(&b.images).unwrap().remove(0);
+    for be in all_backends() {
+        for prec in be.precisions.clone() {
+            let view = CheckpointView {
+                graph: &graph,
+                params: &state.params,
+                bn: &state.bn,
+                qstate: &state.qstate,
+            };
+            let dep = be
+                .compile(view, prec, RangeSource::Calibration, &calib, PtqOptions::default())
+                .unwrap_or_else(|e| panic!("{} {:?}: {e}", be.name, prec));
+            let out = dep.model.run(&b.images).unwrap().remove(0);
+            assert_eq!(out.shape, ref_logits.shape, "{} {:?}", be.name, prec);
+            let snr = snr_db(&ref_logits.data, &out.data);
+            // CNN INT8 on an init checkpoint should stay well above 8 dB;
+            // float paths essentially exact
+            // entropy calibration (hardware_c / TensorRT-style) is the most
+            // clipping-aggressive observer — part of the cross-backend
+            // variance the paper targets — so the INT8 floor is permissive
+            let floor = match prec {
+                Precision::Fp32 => 100.0,
+                Precision::Fp16 => 40.0,
+                Precision::Bf16 => 20.0,
+                Precision::Int8 => 5.0,
+            };
+            assert!(snr > floor, "{} {:?}: snr {snr:.1} dB below {floor}", be.name, prec);
+        }
+    }
+}
+
+#[test]
+fn strict_backend_requires_calibration_for_int8() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, state) = load_state(&dir, "resnet18_c10");
+    let ha = backend_by_name("hardware_a").unwrap();
+    // MAP checkpoint (no qstate) without calibration data must fail
+    let empty_q = Default::default();
+    let view = CheckpointView {
+        graph: &graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &empty_q,
+    };
+    let err =
+        ha.compile(view, Precision::Int8, RangeSource::Calibration, &[], PtqOptions::default());
+    assert!(err.is_err(), "hardware_a must demand a calibration dataset");
+    // hardware_d ("compiler-provided static scaling") tolerates it
+    let hd = backend_by_name("hardware_d").unwrap();
+    let view = CheckpointView {
+        graph: &graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    hd.compile(view, Precision::Int8, RangeSource::QatScales, &[], PtqOptions::default())
+        .expect("hardware_d compiles from embedded QAT scales without calib data");
+}
+
+#[test]
+fn qat_scales_match_calibration_quality_on_init() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, state) = load_state(&dir, "resnet18_c10");
+    let task = ClsSpec::cifar10();
+    let calib: Vec<Tensor> = (0..2).map(|i| gen_cls_batch(task, 8, 100 + i).images).collect();
+    let b = gen_cls_batch(task, 8, 9);
+    let reference = fp32_model(graph.clone(), state.params.clone(), state.bn.clone());
+    let ref_logits = reference.run(&b.images).unwrap().remove(0);
+    let hd = backend_by_name("hardware_d").unwrap();
+    let mut snrs = Vec::new();
+    for src in [RangeSource::QatScales, RangeSource::Calibration] {
+        let view = CheckpointView {
+            graph: &graph,
+            params: &state.params,
+            bn: &state.bn,
+            qstate: &state.qstate,
+        };
+        let dep = hd.compile(view, Precision::Int8, src, &calib, PtqOptions::default()).unwrap();
+        let out = dep.model.run(&b.images).unwrap().remove(0);
+        snrs.push(snr_db(&ref_logits.data, &out.data));
+    }
+    // On an INIT checkpoint the embedded QAT activation ranges are still the
+    // generic [0, 6] seeds — untrained, so only *finite* fidelity is required
+    // (trained-checkpoint QAT quality is asserted by the examples and the
+    // engine-vs-device-forward test). Calibration must be healthy regardless.
+    assert!(snrs[0].is_finite(), "qat-scale deployment must run: {snrs:?}");
+    assert!(snrs[1] > 10.0, "calibration source must be healthy: {snrs:?}");
+}
+
+#[test]
+fn ptq_baseline_options_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, state) = load_state(&dir, "resnet18_c10");
+    let task = ClsSpec::cifar10();
+    let calib: Vec<Tensor> = (0..2).map(|i| gen_cls_batch(task, 8, 300 + i).images).collect();
+    let ha = backend_by_name("hardware_a").unwrap();
+    let b = gen_cls_batch(task, 4, 11);
+    let reference = fp32_model(graph.clone(), state.params.clone(), state.bn.clone());
+    let ref_logits = reference.run(&b.images).unwrap().remove(0);
+    for ptq in [
+        PtqOptions::default(),
+        PtqOptions { equalization: true, adaround: false },
+        PtqOptions { equalization: true, adaround: true },
+    ] {
+        let view = CheckpointView {
+            graph: &graph,
+            params: &state.params,
+            bn: &state.bn,
+            qstate: &state.qstate,
+        };
+        let dep =
+            ha.compile(view, Precision::Int8, RangeSource::Calibration, &calib, ptq).unwrap();
+        let out = dep.model.run(&b.images).unwrap().remove(0);
+        let snr = snr_db(&ref_logits.data, &out.data);
+        assert!(snr > 5.0, "PTQ {ptq:?} snr too low: {snr}");
+    }
+}
+
+#[test]
+fn vit_attention_falls_back_on_restrictive_npus() {
+    let Some(dir) = artifacts_dir() else { return };
+    let graph = Graph::load(dir.join("vit.qir")).unwrap();
+    let ha = backend_by_name("hardware_a").unwrap();
+    let perf = ha.perf(&graph, Precision::Int8, 1);
+    assert!(perf.fallback_ops > 0, "attention/layernorm must fall back on hardware_a");
+    let hd = backend_by_name("hardware_d").unwrap();
+    let perf_d = hd.perf(&graph, Precision::Int8, 1);
+    assert_eq!(perf_d.fallback_ops, 0, "hardware_d covers the transformer ops");
+    // fallbacks cost real latency
+    assert!(perf.latency_ms > perf_d.latency_ms);
+}
+
+#[test]
+fn engine_int8_agrees_with_pallas_device_forward() {
+    // The exported device_forward (Pallas fake-quant at lam=1 with qstate
+    // scales) and the Rust engine under the same contract simulate the same
+    // static-INT8 deployment of the same checkpoint. Assert strong agreement
+    // (SNR + argmax), not bit-equality: the engine additionally quantizes
+    // conv inputs, as a real integer pipeline does.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(dir.join("resnet18_c10.manifest")).unwrap();
+    let (graph, state) = load_state(&dir, "resnet18_c10");
+    let spec = man.fns["device_forward"].clone();
+    let bsz = spec.args.iter().find(|s| s.role == "data").unwrap().shape[0];
+    let b = gen_cls_batch(ClsSpec::cifar10(), bsz, 23);
+
+    let f = rt.load_fn(&man, "device_forward").unwrap();
+    let extras = CallExtras { data: Some(&b.images), ..Default::default() };
+    let args = state.marshal(&spec, &extras).unwrap();
+    let outs = f.call(&args).unwrap();
+    let jax_dev = quant_trim::runtime::literal_to_tensor(&outs[0], &spec.rets[0].shape).unwrap();
+
+    let hd = backend_by_name("hardware_d").unwrap();
+    let calib: Vec<Tensor> =
+        (0..2).map(|i| gen_cls_batch(ClsSpec::cifar10(), 8, 700 + i).images).collect();
+    let view = CheckpointView {
+        graph: &graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let dep = hd
+        .compile(view, Precision::Int8, RangeSource::QatScales, &calib, PtqOptions::default())
+        .unwrap();
+    let rust_dev = dep.model.run(&b.images).unwrap().remove(0);
+    let snr = snr_db(&jax_dev.data, &rust_dev.data);
+    assert!(snr > 8.0, "rust int8 engine vs pallas device forward: snr {snr:.1} dB");
+    // argmax agreement on most samples
+    let c = jax_dev.shape[1];
+    let mut agree = 0;
+    for i in 0..bsz {
+        let am = |t: &Tensor| {
+            t.data[i * c..(i + 1) * c]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        if am(&jax_dev) == am(&rust_dev) {
+            agree += 1;
+        }
+    }
+    assert!(agree * 10 >= bsz * 7, "argmax agreement too low: {agree}/{bsz}");
+}
+
+#[test]
+fn bf16_hybrid_beats_int8_fidelity_on_hardware_b() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (graph, state) = load_state(&dir, "resnet18_c10");
+    let task = ClsSpec::cifar10();
+    let calib: Vec<Tensor> = (0..2).map(|i| gen_cls_batch(task, 8, 400 + i).images).collect();
+    let b = gen_cls_batch(task, 4, 17);
+    let reference = fp32_model(graph.clone(), state.params.clone(), state.bn.clone());
+    let ref_logits = reference.run(&b.images).unwrap().remove(0);
+    let hb = backend_by_name("hardware_b").unwrap();
+    let mut snr = std::collections::HashMap::new();
+    for prec in [Precision::Bf16, Precision::Int8] {
+        let view = CheckpointView {
+            graph: &graph,
+            params: &state.params,
+            bn: &state.bn,
+            qstate: &state.qstate,
+        };
+        let dep =
+            hb.compile(view, prec, RangeSource::Calibration, &calib, PtqOptions::default()).unwrap();
+        let out = dep.model.run(&b.images).unwrap().remove(0);
+        snr.insert(prec.label(), snr_db(&ref_logits.data, &out.data));
+    }
+    assert!(
+        snr["BF16"] > snr["INT8"],
+        "W8/ABF16 hybrid should be higher-fidelity than full INT8: {snr:?}"
+    );
+}

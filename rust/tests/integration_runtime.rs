@@ -1,0 +1,194 @@
+//! Integration: the full AOT bridge — load exported HLO artifacts, compile on
+//! the PJRT CPU client, execute train/eval/prune steps from Rust, and
+//! cross-check the Rust integer engine against the JAX/Pallas device forward.
+//!
+//! Requires `make artifacts` to have run (skips cleanly if absent).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::{CallExtras, Curriculum, TrainConfig, Trainer, TrainState};
+use quant_trim::data::{gen_cls_batch, ClsSpec};
+use quant_trim::engine::fp32_model;
+use quant_trim::qir::Graph;
+use quant_trim::runtime::{Manifest, Runtime};
+use quant_trim::tensor::Tensor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("resnet18_c10.manifest").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn kernel_artifacts_execute_and_match_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(dir.join("kernels.manifest")).unwrap();
+
+    // fake_quant kernel: output must be on the INT8 grid of its own scale
+    let f = rt.load_fn(&man, "fake_quant").unwrap();
+    let mut rng = quant_trim::testutil::Rng::new(1);
+    let x = Tensor::new(vec![64, 4096], rng.normal_vec(64 * 4096, 0.7));
+    let outs = f.call_tensors(&[x.clone()]).unwrap();
+    let y = &outs[0];
+    let s = x.abs_max() / 127.0;
+    let mut max_err = 0.0f32;
+    for (a, b) in x.data.iter().zip(y.data.iter()) {
+        let expect = (a / s).round_ties_even().clamp(-128.0, 127.0) * s;
+        max_err = max_err.max((expect - b).abs());
+    }
+    assert!(max_err < 1e-5, "pallas fake_quant drifted from rust ref: {max_err}");
+
+    // qmatmul kernel vs rust integer gemm on the same quantization contract
+    let f = rt.load_fn(&man, "qmatmul").unwrap();
+    let a = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 1.0));
+    let w = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 0.05));
+    let outs = f.call_tensors(&[a.clone(), w.clone()]).unwrap();
+    let y = &outs[0];
+    // reference: sx=0.05, zx=128 (hard-coded in the artifact), sw = absmax/127
+    let sw = w.abs_max().max(1e-6) / 127.0;
+    let wq: Vec<i8> = w
+        .data
+        .iter()
+        .map(|&v| (v / sw).round_ties_even().clamp(-128.0, 127.0) as i8)
+        .collect();
+    let mut max_rel = 0.0f32;
+    for r in 0..4 {
+        for c in 0..256 {
+            let mut acc = 0i64;
+            for k in 0..256 {
+                let xq = ((a.data[r * 256 + k] / 0.05).round_ties_even() + 128.0)
+                    .clamp(0.0, 255.0) as i64;
+                acc += (xq - 128) * wq[k * 256 + c] as i64;
+            }
+            let expect = acc as f32 * 0.05 * sw;
+            let got = y.data[r * 256 + c];
+            let denom = expect.abs().max(1.0);
+            max_rel = max_rel.max((expect - got).abs() / denom);
+        }
+    }
+    assert!(max_rel < 1e-4, "pallas qmatmul vs rust int gemm: rel err {max_rel}");
+}
+
+#[test]
+fn train_step_runs_and_learns_fixed_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(dir.join("resnet18_c10.manifest")).unwrap();
+    let cfg = TrainConfig::quant_trim(1, 1, Curriculum::cifar());
+    let mut tr = Trainer::new(&rt, man, cfg).unwrap();
+    let bs = tr.batch_size();
+    let batch = gen_cls_batch(ClsSpec::cifar10(), bs, 7);
+    let (l0, _) = tr.train_step(&batch, 0.0, 3e-4).unwrap();
+    let mut last = l0;
+    for _ in 0..8 {
+        let (l, _) = tr.train_step(&batch, 0.0, 3e-4).unwrap();
+        last = l;
+    }
+    assert!(last < l0 * 0.8, "loss should drop on a fixed batch: {l0} -> {last}");
+    assert!(tr.state.step > 8.0);
+}
+
+#[test]
+fn reverse_prune_clips_weight_tails() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(dir.join("resnet18_c10.manifest")).unwrap();
+    let cfg = TrainConfig::quant_trim(1, 1, Curriculum::cifar());
+    let mut tr = Trainer::new(&rt, man, cfg).unwrap();
+    let before: f32 = tr.state.params["s0.b0.c1.w"].abs_max();
+    tr.reverse_prune("reverse_prune_90").unwrap();
+    let w = &tr.state.params["s0.b0.c1.w"];
+    let after = w.abs_max();
+    let tau = tr.state.qstate["s0.b0.c1.tau"].data[0];
+    assert!(after <= tau + 1e-6, "weights must be pinned at tau: {after} vs {tau}");
+    assert!(after < before, "tails should be clipped: {before} -> {after}");
+}
+
+#[test]
+fn rust_engine_matches_pjrt_fp32_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(dir.join("resnet18_c10.manifest")).unwrap();
+    let graph = Graph::load(dir.join("resnet18_c10.qir")).unwrap();
+    let ck = Checkpoint::load(dir.join("resnet18_c10.init.qtckpt")).unwrap();
+    let state = TrainState::from_checkpoint(&ck);
+
+    let spec = man.fns["forward"].clone();
+    let batch_size = spec.args.iter().find(|s| s.role == "data").unwrap().shape[0];
+    let batch = gen_cls_batch(ClsSpec::cifar10(), batch_size, 99);
+
+    // PJRT forward
+    let f = rt.load_fn(&man, "forward").unwrap();
+    let extras = CallExtras { data: Some(&batch.images), ..Default::default() };
+    let args = state.marshal(&spec, &extras).unwrap();
+    let outs = f.call(&args).unwrap();
+    let jax_logits =
+        quant_trim::runtime::literal_to_tensor(&outs[0], &spec.rets[0].shape).unwrap();
+
+    // Rust engine forward
+    let params: BTreeMap<String, Tensor> =
+        state.params.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+    let bn: BTreeMap<String, Tensor> =
+        state.bn.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+    let model = fp32_model(graph, params, bn);
+    let rust_logits = model.run(&batch.images).unwrap().remove(0);
+
+    assert_eq!(jax_logits.shape, rust_logits.shape);
+    let scale = jax_logits.abs_max().max(1.0);
+    let mut max_err = 0.0f32;
+    for (a, b) in jax_logits.data.iter().zip(rust_logits.data.iter()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(
+        max_err < scale * 2e-3,
+        "rust fp32 engine vs PJRT forward: max err {max_err} (scale {scale})"
+    );
+}
+
+#[test]
+fn rust_engine_matches_pjrt_forward_all_model_families() {
+    // Exercises every engine op: attention/layernorm/to_tokens/tokmean (vit),
+    // depthwise conv + SE + hswish (mobilenet), concat/upsample (unet),
+    // residual adds (resnet). Gold standard: the PJRT-executed JAX forward.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for model in ["resnet18_c10", "vit", "mobilenetv3", "unet"] {
+        let man = Manifest::load(dir.join(format!("{model}.manifest"))).unwrap();
+        let graph = Graph::load(dir.join(format!("{model}.qir"))).unwrap();
+        let ck = Checkpoint::load(dir.join(format!("{model}.init.qtckpt"))).unwrap();
+        let state = TrainState::from_checkpoint(&ck);
+        let spec = man.fns["forward_b1"].clone();
+        // random input in the image shape
+        let ishape = &spec.args.iter().find(|s| s.role == "data").unwrap().shape;
+        let mut rng = quant_trim::testutil::Rng::new(0xF0_0D + model.len() as u64);
+        let n: usize = ishape.iter().product();
+        let x = Tensor::new(ishape.clone(), rng.normal_vec(n, 1.0));
+
+        let f = rt.load_fn(&man, "forward_b1").unwrap();
+        let extras = CallExtras { data: Some(&x), ..Default::default() };
+        let args = state.marshal(&spec, &extras).unwrap();
+        let outs = f.call(&args).unwrap();
+        let jax_out =
+            quant_trim::runtime::literal_to_tensor(&outs[0], &spec.rets[0].shape).unwrap();
+
+        let model_rs = fp32_model(graph, state.params.clone(), state.bn.clone());
+        let rust_out = model_rs.run(&x).unwrap().remove(0);
+        let rust_out = rust_out.reshaped(&jax_out.shape.clone());
+        let scale = jax_out.abs_max().max(1.0);
+        let mut max_err = 0.0f32;
+        for (a, b) in jax_out.data.iter().zip(rust_out.data.iter()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < scale * 5e-3,
+            "{model}: rust engine vs PJRT forward max err {max_err} (scale {scale})"
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Property-based tests over the coordinator/engine invariants, using the
+//! in-repo mini property harness (testutil::prop_check — the vendored crate
+//! set has no proptest).
+
+use quant_trim::calib::{calibrate, CalibMethod};
+use quant_trim::coordinator::Curriculum;
+use quant_trim::engine::{fp32_model, lowp, ops};
+use quant_trim::metrics;
+use quant_trim::qir::Graph;
+use quant_trim::tensor::{
+    act_scale_zp, empirical_quantile, subsample, QActTensor, QWeight, QuantScheme, RoundMode,
+    Tensor,
+};
+use quant_trim::testutil::{prop_check, Rng};
+
+#[test]
+fn prop_quantize_dequantize_error_bounded() {
+    // |x - dq(q(x))| <= s/2 for in-range x, any scheme/rounding
+    prop_check(
+        "qdq-bounded",
+        200,
+        |r| {
+            let n = 1 + r.below(64);
+            let scale = r.range(0.01, 2.0);
+            (r.normal_vec(n, scale), scale)
+        },
+        |(data, _)| {
+            let t = Tensor::new(vec![1, data.len()], data.clone());
+            let q = QWeight::quantize(&t, QuantScheme::PerTensorSym, RoundMode::TiesEven);
+            let d = q.dequantize();
+            let s = q.scales[0];
+            data.iter().zip(d.data.iter()).all(|(a, b)| (a - b).abs() <= s / 2.0 + 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_act_quant_roundtrip_idempotent() {
+    // quantizing an already quant-dequantized tensor with the same params is
+    // lossless — the invariant the engine's aq->conv double-quant relies on
+    prop_check(
+        "aq-idempotent",
+        200,
+        |r| {
+            let n = 1 + r.below(128);
+            let lo = -r.range(0.1, 3.0);
+            let hi = r.range(0.1, 3.0);
+            (r.normal_vec(n, 1.0), lo, hi)
+        },
+        |(data, lo, hi)| {
+            let t = Tensor::new(vec![data.len()], data.clone());
+            let q1 = QActTensor::quantize(&t, *lo, *hi, RoundMode::TiesEven);
+            let d1 = q1.dequantize();
+            let q2 = QActTensor::quantize(&d1, *lo, *hi, RoundMode::TiesEven);
+            q1.data == q2.data
+        },
+    );
+}
+
+#[test]
+fn prop_zero_always_representable() {
+    // asymmetric activation quantization must map 0.0 exactly (paper §2)
+    prop_check(
+        "zero-exact",
+        300,
+        |r| {
+            let lo = -r.range(0.0, 5.0);
+            let hi = r.range(0.01, 5.0);
+            (lo, hi)
+        },
+        |(lo, hi)| {
+            let t = Tensor::new(vec![1], vec![0.0]);
+            let q = QActTensor::quantize(&t, *lo, *hi, RoundMode::TiesEven);
+            q.dequantize().data[0] == 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_scale_positive_and_monotone_in_range() {
+    prop_check(
+        "scale-monotone",
+        300,
+        |r| (r.range(-4.0, 0.0), r.range(0.01, 4.0), r.range(1.01, 3.0)),
+        |(lo, hi, grow)| {
+            let (s1, z1) = act_scale_zp(*lo, *hi);
+            let (s2, _z2) = act_scale_zp(lo * grow, hi * grow);
+            s1 > 0.0 && s2 > s1 && (0..=255).contains(&z1)
+        },
+    );
+}
+
+#[test]
+fn prop_empirical_quantile_bounds_and_monotone() {
+    prop_check(
+        "quantile-monotone",
+        200,
+        |r| {
+            let n = 1 + r.below(500);
+            r.normal_vec(n, 1.0)
+        },
+        |data| {
+            let q10 = empirical_quantile(data, 0.1);
+            let q50 = empirical_quantile(data, 0.5);
+            let q99 = empirical_quantile(data, 0.99);
+            let mn = data.iter().cloned().fold(f32::MAX, f32::min);
+            let mx = data.iter().cloned().fold(f32::MIN, f32::max);
+            q10 <= q50 && q50 <= q99 && q10 >= mn && q99 <= mx
+        },
+    );
+}
+
+#[test]
+fn prop_subsample_preserves_membership() {
+    prop_check(
+        "subsample-members",
+        100,
+        |r| {
+            let n = 1 + r.below(10_000);
+            r.normal_vec(n, 1.0)
+        },
+        |data| {
+            let s = subsample(data, 256);
+            s.len() <= 256 && s.iter().all(|v| data.contains(v))
+        },
+    );
+}
+
+#[test]
+fn prop_reverse_prune_shrinks_scale_never_grows() {
+    // paper §3.2: post-pruning step size Delta' < Delta
+    prop_check(
+        "rp-shrinks-delta",
+        200,
+        |r| {
+            let n = 8 + r.below(256);
+            let std = r.range(0.05, 1.0);
+            r.normal_vec(n, std)
+        },
+        |w| {
+            let abs: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+            let tau = empirical_quantile(&abs, 0.95);
+            let clipped: Vec<f32> = w.iter().map(|v| v.clamp(-tau, tau)).collect();
+            let d_before = abs.iter().cloned().fold(0.0f32, f32::max) / 127.0;
+            let d_after =
+                clipped.iter().map(|v| v.abs()).fold(0.0f32, f32::max) / 127.0;
+            d_after <= d_before + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_lambda_schedule_invariants() {
+    // monotone, bounded, continuous-ish at phase boundaries for random
+    // curriculum hyperparameters
+    prop_check(
+        "lambda-invariants",
+        100,
+        |r| {
+            let e_w = 1 + r.below(20);
+            let e_f = e_w + 1 + r.below(40);
+            let h = 1 + r.below(30);
+            (e_w, e_f, h)
+        },
+        |(e_w, e_f, h)| {
+            let c = Curriculum { e_w: *e_w, e_f: *e_f, horizon: *h, ..Curriculum::cifar() };
+            let mut prev = -1.0f64;
+            for t in 0..(e_f + h + 10) {
+                let v = c.lam(t);
+                if v < prev - 1e-12 || !(0.0..=1.0).contains(&v) {
+                    return false;
+                }
+                prev = v;
+            }
+            // boundary values
+            c.lam(*e_w) == 0.0 && (c.lam(*e_f) - 0.5).abs() < 1e-9 && c.lam(e_f + h) == 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_bf16_f16_roundtrips_are_projections() {
+    prop_check(
+        "lowp-projection",
+        300,
+        |r| r.normal() * 10f32.powi(r.below(6) as i32 - 3),
+        |x| {
+            let b = lowp::bf16(*x);
+            let f = lowp::f16(*x);
+            // idempotent
+            lowp::bf16(b) == b && lowp::f16(f) == f
+        },
+    );
+}
+
+#[test]
+fn prop_int8_conv_tracks_f32_within_quant_noise() {
+    prop_check(
+        "conv-i8-close",
+        25,
+        |r| {
+            let c = 1 + r.below(4);
+            let hw = 4 + r.below(5);
+            let co = 1 + r.below(6);
+            let x = Tensor::new(vec![1, c, hw, hw], r.normal_vec(c * hw * hw, 1.0));
+            let w = Tensor::new(vec![co, c, 3, 3], r.normal_vec(co * c * 9, 0.2));
+            (x, w)
+        },
+        |(x, w)| {
+            let yf = ops::conv2d_f32(x, w, None, 1, 1, 1);
+            let qw = QWeight::quantize(w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+            let lo = x.data.iter().cloned().fold(f32::MAX, f32::min);
+            let hi = x.data.iter().cloned().fold(f32::MIN, f32::max);
+            let (sx, zx) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+            let yq = ops::conv2d_i8(x, &qw, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+            metrics::snr_db(&yf.data, &yq.data) > 18.0
+        },
+    );
+}
+
+#[test]
+fn prop_calibration_ranges_cover_bulk() {
+    // calibrated (lo,hi) must cover at least the central 98% of observed data
+    let graph = Graph::parse(
+        "qir p v1\noutputs r\n\
+         node input image inputs=- shape=4,6,6\n\
+         node relu r inputs=image shape=4,6,6\n",
+    )
+    .unwrap();
+    prop_check(
+        "calib-covers-bulk",
+        10,
+        |r| {
+            let batches: Vec<Tensor> = (0..3)
+                .map(|_| Tensor::new(vec![2, 4, 6, 6], (0..288).map(|_| r.heavy_tail(0.01, 8.0)).collect()))
+                .collect();
+            batches
+        },
+        |batches| {
+            let model = fp32_model(graph.clone(), Default::default(), Default::default());
+            for m in [CalibMethod::MinMax, CalibMethod::Percentile(0.999), CalibMethod::Mse] {
+                let c = calibrate(&model, batches, m).unwrap();
+                let (lo, hi) = c.ranges["image"];
+                let mut all: Vec<f32> = Vec::new();
+                for b in batches {
+                    all.extend_from_slice(&b.data);
+                }
+                let q01 = empirical_quantile(&all, 0.01);
+                let q99 = empirical_quantile(&all, 0.99);
+                if lo > q01 || hi < q99 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
