@@ -41,14 +41,11 @@ fn main() -> anyhow::Result<()> {
     };
     let src = if qat { RangeSource::QatScales } else { RangeSource::Calibration };
     let dep = be.compile(view, Precision::Int8, src, &calib, PtqOptions::default())?;
-    let ref_folded = quant_trim::engine::CompiledModel {
-        graph: dep.model.graph.clone(),
-        params: dep.model.params.clone(),
-        bn: Default::default(),
-        qweights: Default::default(),
-        act_ranges: Default::default(),
-        cfg: quant_trim::engine::ExecConfig::FP32,
-    };
+    let ref_folded = quant_trim::engine::fp32_model(
+        dep.model.graph.clone(),
+        dep.model.params.clone(),
+        Default::default(),
+    );
     let b = gen_cls_batch(task, 16, 0xE0A1);
     let mut reff: HashMap<String, Vec<f32>> = HashMap::new();
     ref_folded.run_observe(&b.images, &mut |n: &str, t: &quant_trim::tensor::Tensor| {

@@ -1,18 +1,27 @@
 //! Engine hot-path microbenchmarks (the §Perf L3 profile): integer GEMM,
-//! im2col, conv f32 vs i8, activation quantization, full-model inference,
-//! and the PJRT-executed Pallas kernels. Custom harness (testutil::bench):
-//! 20 warmup + 200 timed iterations, medians — the paper's protocol.
+//! f32 GEMM (reference vs planned tiled), im2col, conv f32 vs i8, weight
+//! quantization, and the headline planned-executor-vs-interpreter model
+//! benchmark on a synthetic ResNet-style conv net (runs with no artifacts).
+//! Custom harness (testutil::bench): 20 warmup + 200 timed iterations,
+//! medians — the paper's protocol.
+//!
+//! Emits `BENCH_engine.json` (plan vs interpreter medians + speedups) for
+//! the perf trajectory.
 //!
 //!   cargo bench --bench engine_hotpath
 
+use std::collections::BTreeMap;
+
 use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::calib::{calibrate, CalibMethod};
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::TrainState;
 use quant_trim::data::{gen_cls_batch, ClsSpec};
-use quant_trim::engine::ops;
+use quant_trim::engine::{fp32_model, ops, ActMode, CompiledModel, ExecConfig, WeightMode};
 use quant_trim::perfmodel::Precision;
+use quant_trim::qir::passes;
 use quant_trim::tensor::{QuantScheme, QWeight, RoundMode, Tensor};
-use quant_trim::testutil::{bench, Rng};
+use quant_trim::testutil::{bench, synth, Rng};
 
 fn main() {
     println!("=== engine hot paths (20 warmup + 200 timed, medians) ===");
@@ -33,15 +42,20 @@ fn main() {
     r.print();
     println!("    -> {:.2} GMAC/s int8", macs / r.median_us / 1e3);
 
-    // f32 GEMM same shape
+    // f32 GEMM same shape: reference serial kernel vs planned tiled kernel
     let xf: Vec<f32> = rng.normal_vec(rows * cols, 1.0);
     let wf: Vec<f32> = rng.normal_vec(cout * cols, 0.1);
-    let col = ops::Im2Col { rows, cols, data: xf };
-    let r = bench("gemm_f32 1024x288x64", 20, 200, || {
+    let col = ops::Im2Col { rows, cols, data: xf.clone() };
+    let r = bench("gemm_f32 (reference) 1024x288x64", 20, 200, || {
         ops::gemm_f32(&col, &wf, cout, &mut out, cout, 0);
     });
     r.print();
-    println!("    -> {:.2} GMAC/s f32", macs / r.median_us / 1e3);
+    println!("    -> {:.2} GMAC/s f32 serial", macs / r.median_us / 1e3);
+    let r = bench("gemm_f32_tiled (planned) 1024x288x64", 20, 200, || {
+        ops::gemm_f32_tiled(&xf, rows, cols, &wf, cout, None, None, &mut out, cout, 0);
+    });
+    r.print();
+    println!("    -> {:.2} GMAC/s f32 tiled+parallel", macs / r.median_us / 1e3);
 
     // im2col on a (8, 32, 16, 16) activation, 3x3
     let x = Tensor::new(vec![8, 32, 16, 16], rng.normal_vec(8 * 32 * 16 * 16, 1.0));
@@ -54,6 +68,10 @@ fn main() {
     let w = Tensor::new(vec![64, 32, 3, 3], rng.normal_vec(64 * 32 * 9, 0.1));
     bench("conv2d_f32 8x32x16x16 -> 64", 5, 40, || {
         std::hint::black_box(ops::conv2d_f32(&x, &w, None, 1, 1, 1));
+    })
+    .print();
+    bench("conv2d_f32_fused (planned)    ", 5, 40, || {
+        std::hint::black_box(ops::conv2d_f32_fused(&x, &w, None, 1, 1, 1, Some(ops::Act::Relu)));
     })
     .print();
     let qw = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
@@ -69,62 +87,164 @@ fn main() {
     })
     .print();
 
-    // end-to-end engine inference (the serving request path)
+    // ---- headline: planned executor vs legacy interpreter on a synthetic
+    // ResNet-style conv net (3x32x32), both precision paths -------------
+    let report = plan_vs_interpreter();
+    write_bench_json(&report);
+
+    // end-to-end engine inference on real artifacts when present
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("resnet18_c10.manifest").exists() {
-        let graph = quant_trim::qir::Graph::load(dir.join("resnet18_c10.qir")).unwrap();
-        let state = TrainState::from_checkpoint(
-            &Checkpoint::load(dir.join("resnet18_c10.init.qtckpt")).unwrap(),
-        );
-        let task = ClsSpec::cifar10();
-        let calib: Vec<Tensor> =
-            (0..2).map(|i| gen_cls_batch(task, 8, 500 + i).images).collect();
-        let be = backend_by_name("hardware_d").unwrap();
-        let view = CheckpointView {
-            graph: &graph,
-            params: &state.params,
-            bn: &state.bn,
-            qstate: &state.qstate,
-        };
-        let dep = be
-            .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
-            .unwrap();
-        let b1 = gen_cls_batch(task, 1, 3).images;
-        let r = bench("engine resnet18 int8 forward b=1", 20, 200, || {
-            std::hint::black_box(dep.model.run(&b1).unwrap());
-        });
-        r.print();
-        println!("    -> {:.1} FPS measured (rust engine, single thread)", 1e6 / r.median_us);
-        let b8 = gen_cls_batch(task, 8, 3).images;
-        let r = bench("engine resnet18 int8 forward b=8", 3, 20, || {
-            std::hint::black_box(dep.model.run(&b8).unwrap());
-        });
-        r.print();
-        println!("    -> {:.1} FPS measured at batch 8", 8e6 / r.median_us);
-
-        // PJRT-executed Pallas kernels (the L1 artifacts)
-        if let Ok(rt) = quant_trim::runtime::Runtime::cpu() {
-            let man =
-                quant_trim::runtime::Manifest::load(dir.join("kernels.manifest")).unwrap();
-            let f = rt.load_fn(&man, "fake_quant").unwrap();
-            let xk = Tensor::new(vec![64, 4096], rng.normal_vec(64 * 4096, 1.0));
-            bench("pallas fake_quant 64x4096 (PJRT)", 20, 200, || {
-                std::hint::black_box(f.call_tensors(std::slice::from_ref(&xk)).unwrap());
-            })
-            .print();
-            let f = rt.load_fn(&man, "qmatmul").unwrap();
-            let a = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 1.0));
-            let w2 = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 0.05));
-            let r = bench("pallas qmatmul 256^3 (PJRT, interpret)", 3, 15, || {
-                std::hint::black_box(f.call_tensors(&[a.clone(), w2.clone()]).unwrap());
-            });
-            r.print();
-            println!(
-                "    -> {:.3} GMAC/s (interpret-mode grid loop; structure, not speed, is the target)",
-                (256f64 * 256.0 * 256.0) / r.median_us / 1e3
-            );
-        }
+        artifact_benches(&dir, &mut rng);
     } else {
-        println!("(artifacts/ not built: skipping model-level benches)");
+        println!("(artifacts/ not built: skipping exported-model + PJRT benches)");
+    }
+}
+
+struct PlanReport {
+    fp32_interp_us: f64,
+    fp32_plan_us: f64,
+    int8_interp_us: f64,
+    int8_plan_us: f64,
+}
+
+fn plan_vs_interpreter() -> PlanReport {
+    println!("\n=== planned executor vs legacy interpreter (synthetic resnet, b=1) ===");
+    let sm = synth::resnet_like(32, 64);
+    let (graph, params, _f, fused) = passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    println!("lowered graph: {} nodes ({} activations fused)", graph.nodes.len(), fused);
+    let mut rng = Rng::new(0xBEEF);
+    let x = Tensor::new(vec![1, 3, 32, 32], rng.normal_vec(3 * 32 * 32, 1.0));
+
+    // FP32 path
+    let fp = fp32_model(graph.clone(), params.clone(), BTreeMap::new());
+    fp.plan().unwrap(); // compile outside the timed region
+    let ri = bench("resnet-like fp32 interpreter b=1", 10, 120, || {
+        std::hint::black_box(fp.run_interpreted(&x).unwrap());
+    });
+    ri.print();
+    let rp = bench("resnet-like fp32 planned     b=1", 10, 120, || {
+        std::hint::black_box(fp.run(&x).unwrap());
+    });
+    rp.print();
+    println!("    -> fp32 speedup: {:.2}x", ri.median_us / rp.median_us);
+
+    // INT8 path (W8/A8, per-channel, ties-even — hardware_d style)
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 32, 32], rng.normal_vec(2 * 3 * 32 * 32, 1.0))).collect();
+    let ranges = calibrate(&fp, &batches, CalibMethod::MinMax).unwrap().ranges;
+    let mut qweights = std::collections::HashMap::new();
+    for n in graph.weight_nodes() {
+        let key = format!("{}.w", n.name);
+        if let Some(w) = params.get(&key) {
+            qweights.insert(key, QWeight::quantize(w, QuantScheme::PerChannelSym, RoundMode::TiesEven));
+        }
+    }
+    let m8 = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        qweights,
+        ranges,
+        ExecConfig { weight_mode: WeightMode::Int8, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+    );
+    m8.plan().unwrap();
+    // sanity: the planned int8 executor is bit-exact vs the interpreter
+    assert_eq!(
+        m8.run(&x).unwrap()[0].data,
+        m8.run_interpreted(&x).unwrap()[0].data,
+        "planned int8 executor must be bit-exact"
+    );
+    let ri8 = bench("resnet-like int8 interpreter b=1", 10, 120, || {
+        std::hint::black_box(m8.run_interpreted(&x).unwrap());
+    });
+    ri8.print();
+    let rp8 = bench("resnet-like int8 planned     b=1", 10, 120, || {
+        std::hint::black_box(m8.run(&x).unwrap());
+    });
+    rp8.print();
+    println!("    -> int8 speedup: {:.2}x", ri8.median_us / rp8.median_us);
+
+    PlanReport {
+        fp32_interp_us: ri.median_us,
+        fp32_plan_us: rp.median_us,
+        int8_interp_us: ri8.median_us,
+        int8_plan_us: rp8.median_us,
+    }
+}
+
+fn write_bench_json(r: &PlanReport) {
+    let json = format!(
+        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2}\n}}\n",
+        r.fp32_interp_us,
+        r.fp32_plan_us,
+        r.fp32_interp_us / r.fp32_plan_us,
+        r.int8_interp_us,
+        r.int8_plan_us,
+        r.int8_interp_us / r.int8_plan_us,
+    );
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn artifact_benches(dir: &std::path::Path, rng: &mut Rng) {
+    let graph = quant_trim::qir::Graph::load(dir.join("resnet18_c10.qir")).unwrap();
+    let state = TrainState::from_checkpoint(
+        &Checkpoint::load(dir.join("resnet18_c10.init.qtckpt")).unwrap(),
+    );
+    let task = ClsSpec::cifar10();
+    let calib: Vec<Tensor> = (0..2).map(|i| gen_cls_batch(task, 8, 500 + i).images).collect();
+    let be = backend_by_name("hardware_d").unwrap();
+    let view = CheckpointView {
+        graph: &graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let dep = be
+        .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
+        .unwrap();
+    let b1 = gen_cls_batch(task, 1, 3).images;
+    let r = bench("engine resnet18 int8 planned b=1", 20, 200, || {
+        std::hint::black_box(dep.model.run(&b1).unwrap());
+    });
+    r.print();
+    println!("    -> {:.1} FPS measured (rust engine)", 1e6 / r.median_us);
+    let r = bench("engine resnet18 int8 interp  b=1", 20, 200, || {
+        std::hint::black_box(dep.model.run_interpreted(&b1).unwrap());
+    });
+    r.print();
+    let b8 = gen_cls_batch(task, 8, 3).images;
+    let r = bench("engine resnet18 int8 planned b=8", 3, 20, || {
+        std::hint::black_box(dep.model.run(&b8).unwrap());
+    });
+    r.print();
+    println!("    -> {:.1} FPS measured at batch 8", 8e6 / r.median_us);
+
+    // PJRT-executed Pallas kernels (the L1 artifacts)
+    if let Ok(rt) = quant_trim::runtime::Runtime::cpu() {
+        let man = quant_trim::runtime::Manifest::load(dir.join("kernels.manifest")).unwrap();
+        let f = rt.load_fn(&man, "fake_quant").unwrap();
+        let xk = Tensor::new(vec![64, 4096], rng.normal_vec(64 * 4096, 1.0));
+        bench("pallas fake_quant 64x4096 (PJRT)", 20, 200, || {
+            std::hint::black_box(f.call_tensors(std::slice::from_ref(&xk)).unwrap());
+        })
+        .print();
+        let f = rt.load_fn(&man, "qmatmul").unwrap();
+        let a = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 1.0));
+        let w2 = Tensor::new(vec![256, 256], rng.normal_vec(256 * 256, 0.05));
+        let r = bench("pallas qmatmul 256^3 (PJRT, interpret)", 3, 15, || {
+            std::hint::black_box(f.call_tensors(&[a.clone(), w2.clone()]).unwrap());
+        });
+        r.print();
+        println!(
+            "    -> {:.3} GMAC/s (interpret-mode grid loop; structure, not speed, is the target)",
+            (256f64 * 256.0 * 256.0) / r.median_us / 1e3
+        );
+    } else {
+        println!("(PJRT unavailable in this build: skipping Pallas kernel benches)");
     }
 }

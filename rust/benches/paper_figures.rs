@@ -66,7 +66,10 @@ fn power_throughput(dir: &std::path::Path, model: &str, fig: &str) -> Result<()>
 }
 
 fn main() -> Result<()> {
-    let dir = artifacts_dir()?;
+    let Ok(dir) = artifacts_dir() else {
+        println!("(artifacts/ not built — run `make artifacts` first; skipping paper figures)");
+        return Ok(());
+    };
 
     if want("fig2") {
         println!("=== Fig 2: distributional effect of Quant-Trim ===");

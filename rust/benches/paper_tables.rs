@@ -26,12 +26,18 @@ use quant_trim::perfmodel::{tiles_for, Precision};
 use quant_trim::runtime::Runtime;
 
 fn main() -> Result<()> {
-    let dir = artifacts_dir()?;
+    let Ok(dir) = artifacts_dir() else {
+        println!("(artifacts/ not built — run `make artifacts` first; skipping paper tables)");
+        return Ok(());
+    };
     let model = "resnet18";
     let task = Task::Cls(ClsSpec::cifar100());
 
     // --- checkpoints (cached from train_cifar, else quick runs)
-    let rt = Runtime::cpu()?;
+    let Ok(rt) = Runtime::cpu() else {
+        println!("(PJRT unavailable in this build; skipping paper tables)");
+        return Ok(());
+    };
     let mut get_state = |qt: bool| -> Result<TrainState> {
         let suffix = if qt { "qt" } else { "map" };
         let p = dir.join(format!("{model}.trained_{suffix}.qtckpt"));

@@ -53,6 +53,7 @@ fn hardware_a() -> BackendSpec {
         calib: CalibMethod::Percentile(0.999),
         accepts_qat_scales: true,
         unsupported: &["attention", "layernorm", "gelu", "tokmean", "to_tokens"],
+        fuses_activations: true,
         runtime_boost: 1.0,
         needs_calib_for_int: true,
     }
@@ -86,6 +87,7 @@ fn hardware_b() -> BackendSpec {
         calib: CalibMethod::MinMax,
         accepts_qat_scales: true,
         unsupported: &["attention", "gelu"],
+        fuses_activations: true,
         runtime_boost: 1.0,
         needs_calib_for_int: false,
     }
@@ -119,6 +121,7 @@ fn hardware_c() -> BackendSpec {
         calib: CalibMethod::Entropy,
         accepts_qat_scales: false,
         unsupported: &["gelu"],
+        fuses_activations: true,
         runtime_boost: 1.0,
         needs_calib_for_int: true,
     }
@@ -153,6 +156,7 @@ fn hardware_d() -> BackendSpec {
         calib: CalibMethod::Mse,
         accepts_qat_scales: true,
         unsupported: &[],
+        fuses_activations: true,
         runtime_boost: 1.0,
         needs_calib_for_int: false,
     }
@@ -186,6 +190,7 @@ fn jetson_orin_nano() -> BackendSpec {
         calib: CalibMethod::Entropy,
         accepts_qat_scales: true,
         unsupported: &[],
+        fuses_activations: true,
         runtime_boost: 2.6, // TensorRT vs naive CUDA dispatch
         needs_calib_for_int: true,
     }
@@ -218,6 +223,7 @@ fn jetson_agx_orin() -> BackendSpec {
         calib: CalibMethod::Entropy,
         accepts_qat_scales: true,
         unsupported: &[],
+        fuses_activations: true,
         runtime_boost: 2.6,
         needs_calib_for_int: true,
     }
@@ -251,6 +257,9 @@ fn rk3588() -> BackendSpec {
         calib: CalibMethod::MinMax,
         accepts_qat_scales: false,
         unsupported: &["attention", "layernorm", "gelu", "tokmean", "to_tokens"],
+        // RKNN-class compiler maturity: dispatches activations as their own
+        // ops instead of fusing them into the conv epilogue
+        fuses_activations: false,
         runtime_boost: 1.0,
         needs_calib_for_int: true,
     }
@@ -283,6 +292,7 @@ fn rtx3090() -> BackendSpec {
         calib: CalibMethod::Entropy,
         accepts_qat_scales: true,
         unsupported: &[],
+        fuses_activations: true,
         runtime_boost: 2.6,
         needs_calib_for_int: true,
     }
@@ -338,6 +348,10 @@ mod tests {
         // the cross-backend variance the paper targets: different rounding,
         // schemes and calibration across the fleet
         let fleet = all_backends();
+        // epilogue fusion is a maturity axis too: most stacks fuse, RKNN
+        // (the paper's Table 5 watch-out) does not
+        assert!(!backend_by_name("rk3588").unwrap().fuses_activations);
+        assert!(backend_by_name("hardware_d").unwrap().fuses_activations);
         let rounds: std::collections::HashSet<_> =
             fleet.iter().map(|b| format!("{:?}", b.round)).collect();
         let schemes: std::collections::HashSet<_> =

@@ -13,7 +13,7 @@ pub mod devices;
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::calib::{self, CalibMethod, Calibration};
 use crate::engine::{ActMode, CompiledModel, ExecConfig, WeightMode};
@@ -47,6 +47,10 @@ pub struct BackendSpec {
     pub accepts_qat_scales: bool,
     /// Node kinds this toolchain cannot map to its kernels (host fallback).
     pub unsupported: &'static [&'static str],
+    /// Whether the compiler fuses conv→bn→activation into one kernel with
+    /// an epilogue (mature stacks do; immature ones dispatch the activation
+    /// as its own op and pay the per-op overhead).
+    pub fuses_activations: bool,
     /// Runtime efficiency boost of the vendor's compiled runtime vs naive
     /// kernel dispatch (TensorRT vs CUDA on NVIDIA parts).
     pub runtime_boost: f64,
@@ -99,9 +103,14 @@ impl BackendSpec {
         if !self.precisions.contains(&precision) {
             bail!("backend {} does not support {:?}", self.name, precision);
         }
-        // 1. every toolchain folds BN first
-        let (graph, mut params, fold_factors) =
-            passes::fold_bn(ckpt.graph, ckpt.params, ckpt.bn)?;
+        // 1. every toolchain folds BN first; mature stacks also fuse the
+        //    conv's sole-consumer activation into the kernel epilogue
+        let (graph, mut params, fold_factors) = if self.fuses_activations {
+            let (g, p, f, _fused) = passes::fuse_conv_bn_act(ckpt.graph, ckpt.params, ckpt.bn)?;
+            (g, p, f)
+        } else {
+            passes::fold_bn(ckpt.graph, ckpt.params, ckpt.bn)?
+        };
 
         // 2. optional cross-layer equalization (PTQ baseline)
         if ptq.equalization {
@@ -126,14 +135,7 @@ impl BackendSpec {
             // compiler statistics pass: even QAT-scale deployments run the
             // compiler's own observer for tensors without embedded scales
             if !calib_batches.is_empty() {
-                let fp = CompiledModel {
-                    graph: graph.clone(),
-                    params: params.clone(),
-                    bn: BTreeMap::new(),
-                    qweights: Default::default(),
-                    act_ranges: Default::default(),
-                    cfg: ExecConfig::FP32,
-                };
+                let fp = crate::engine::fp32_model(graph.clone(), params.clone(), BTreeMap::new());
                 calibration = calib::calibrate(&fp, calib_batches, self.calib)?;
             }
             if use_qat {
@@ -209,14 +211,20 @@ impl BackendSpec {
             }
         }
 
-        let model = CompiledModel {
+        let model = CompiledModel::new(
             graph,
             params,
-            bn: BTreeMap::new(),
+            BTreeMap::new(),
             qweights,
-            act_ranges: calibration.ranges,
-            cfg: ExecConfig { weight_mode, act_mode },
-        };
+            calibration.ranges,
+            ExecConfig { weight_mode, act_mode },
+        );
+        // Backends emit planned models: lowering the execution plan here
+        // surfaces missing ranges/params at deploy time and lets the first
+        // request run on the fast path immediately.
+        model
+            .plan()
+            .with_context(|| format!("backend {}: execution plan lowering failed", self.name))?;
         let unsupported = self.unsupported;
         let perf_b1 = perfmodel::estimate(
             &model.graph,
@@ -273,14 +281,7 @@ fn adaround_refine(
 ) -> Result<QWeight> {
     let node = graph.node(node_name).unwrap();
     let producer = node.inputs[0].clone();
-    let fp = CompiledModel {
-        graph: graph.clone(),
-        params: params.clone(),
-        bn: BTreeMap::new(),
-        qweights: Default::default(),
-        act_ranges: Default::default(),
-        cfg: ExecConfig::FP32,
-    };
+    let fp = crate::engine::fp32_model(graph.clone(), params.clone(), BTreeMap::new());
     // collect (subsampled) inputs of this node
     let mut xs: Vec<f32> = Vec::new();
     let take = |t: &Tensor, xs: &mut Vec<f32>| {

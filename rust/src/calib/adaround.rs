@@ -54,9 +54,11 @@ pub fn adaround_layer(w: &Tensor, scales: &[f32], xcal: &[f32], k: usize) -> Vec
 }
 
 /// Apply adaptive rounding to a prepared QWeight given calibration inputs.
+/// Rebuilds through `from_parts` so the precomputed row sums track the
+/// refined payload.
 pub fn refine_qweight(w_float: &Tensor, qw: &QWeight, xcal: &[f32], k: usize) -> QWeight {
     let data = adaround_layer(w_float, &qw.scales, xcal, k);
-    QWeight { shape: qw.shape.clone(), data, scales: qw.scales.clone() }
+    QWeight::from_parts(qw.shape.clone(), data, qw.scales.clone())
 }
 
 #[cfg(test)]

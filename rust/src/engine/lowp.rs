@@ -99,6 +99,21 @@ pub fn narrow_slice(data: &mut [f32], f: impl Fn(f32) -> f32) {
     }
 }
 
+/// In-place bf16 round-trip over a slice (monomorphized hot path for the
+/// planned executor — avoids the per-call closure indirection).
+pub fn bf16_slice(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = bf16(*v);
+    }
+}
+
+/// In-place f16 round-trip over a slice.
+pub fn f16_slice(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = f16(*v);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,11 +9,22 @@
 //!   embedded QAT scales) — "STATIC (no runtime dyn)" in paper Table 4.
 //! * integer compute paths accumulate in i32 (ops.rs); softmax / layernorm /
 //!   SE gates stay in float, as on real NPUs.
+//!
+//! Two executors share one `CompiledModel` (see engine/README.md):
+//! * the **execution plan** ([`plan::ExecPlan`]) — compiled once per model,
+//!   serves `run()`: pre-resolved weights, precomputed quant constants,
+//!   liveness-planned buffers, parallel tiled kernels with fused epilogues.
+//! * the **legacy interpreter** — walks the graph by name per call; serves
+//!   `run_observe()` (calibration / metrics need per-node taps) and
+//!   `run_interpreted()` (the reference the plan is regression-tested
+//!   against, bit-exact on the int8 path).
 
 pub mod lowp;
 pub mod ops;
+pub mod plan;
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
 
@@ -49,6 +60,12 @@ impl ExecConfig {
 
 /// A backend-compiled model: transformed graph + prepared weights + static
 /// activation ranges. Produced by `backends::*`, executed here.
+///
+/// The execution plan is compiled once and cached (`OnceLock`): the pub
+/// fields must be treated as frozen after the first `plan()`/`run()` call —
+/// mutating graph/params/qweights/act_ranges afterwards would leave `run()`
+/// answering from the stale plan while `run_interpreted()` sees the new
+/// state. Build a fresh `CompiledModel::new` instead of mutating in place.
 pub struct CompiledModel {
     pub graph: Graph,
     /// Float parameters (post graph passes, e.g. BN-folded).
@@ -60,19 +77,51 @@ pub struct CompiledModel {
     /// Static per-node output ranges (lo, hi) from calibration / QAT scales.
     pub act_ranges: HashMap<String, (f32, f32)>,
     pub cfg: ExecConfig,
+    /// Lazily compiled execution plan (the hot path behind `run`).
+    exec_plan: OnceLock<plan::ExecPlan>,
 }
 
-const BN_EPS: f32 = 1e-5;
+pub(crate) const BN_EPS: f32 = 1e-5;
 
 impl CompiledModel {
-    /// Run and return the graph outputs.
+    pub fn new(
+        graph: Graph,
+        params: BTreeMap<String, Tensor>,
+        bn: BTreeMap<String, Tensor>,
+        qweights: HashMap<String, QWeight>,
+        act_ranges: HashMap<String, (f32, f32)>,
+        cfg: ExecConfig,
+    ) -> CompiledModel {
+        CompiledModel { graph, params, bn, qweights, act_ranges, cfg, exec_plan: OnceLock::new() }
+    }
+
+    /// The compiled execution plan, lowering the model on first use.
+    /// Backends call this at compile time so deployments ship with a ready
+    /// plan and plan errors surface at deploy, not per-request.
+    pub fn plan(&self) -> Result<&plan::ExecPlan> {
+        if let Some(p) = self.exec_plan.get() {
+            return Ok(p);
+        }
+        let p = plan::ExecPlan::compile(self)
+            .with_context(|| format!("compiling execution plan for graph {}", self.graph.name))?;
+        Ok(self.exec_plan.get_or_init(|| p))
+    }
+
+    /// Run and return the graph outputs (plan-based executor).
     pub fn run(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        self.plan()?.execute(x)
+    }
+
+    /// Run through the legacy per-node interpreter (the reference
+    /// implementation the plan is regression-tested against).
+    pub fn run_interpreted(&self, x: &Tensor) -> Result<Vec<Tensor>> {
         let mut sink = |_: &str, _: &Tensor| {};
         self.run_inner(x, &mut sink)
     }
 
     /// Run, invoking `observe(node_name, output)` on every node output
-    /// (used by calibration and by the distribution metrics).
+    /// (used by calibration and by the distribution metrics). Interpreted:
+    /// observers need per-node taps the planned executor does not keep.
     pub fn run_observe(
         &self,
         x: &Tensor,
@@ -83,8 +132,8 @@ impl CompiledModel {
 
     fn narrow(&self, mut t: Tensor) -> Tensor {
         match self.cfg.act_mode {
-            ActMode::Bf16 => lowp::narrow_slice(&mut t.data, lowp::bf16),
-            ActMode::F16 => lowp::narrow_slice(&mut t.data, lowp::f16),
+            ActMode::Bf16 => lowp::bf16_slice(&mut t.data),
+            ActMode::F16 => lowp::f16_slice(&mut t.data),
             _ => {}
         }
         t
@@ -92,7 +141,7 @@ impl CompiledModel {
 
     /// (scale, zero_point) for quantizing the *input* of a compute node,
     /// taken from the producer's static range.
-    fn input_qparams(&self, producer: &str) -> Result<(f32, i32)> {
+    pub(crate) fn input_qparams(&self, producer: &str) -> Result<(f32, i32)> {
         let &(lo, hi) = self
             .act_ranges
             .get(producer)
@@ -100,14 +149,14 @@ impl CompiledModel {
         Ok(act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6)))
     }
 
-    fn int8_round(&self) -> Option<RoundMode> {
+    pub(crate) fn int8_round(&self) -> Option<RoundMode> {
         match self.cfg.act_mode {
             ActMode::Int8 { round } => Some(round),
             _ => None,
         }
     }
 
-    fn weight_tensor(&self, key: &str) -> Result<Tensor> {
+    pub(crate) fn weight_tensor(&self, key: &str) -> Result<Tensor> {
         if self.cfg.weight_mode == WeightMode::Int8 {
             if let Some(qw) = self.qweights.get(key) {
                 return Ok(qw.dequantize());
@@ -161,16 +210,20 @@ impl CompiledModel {
                     None
                 };
                 let wkey = format!("{}.w", n.name);
-                match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+                let mut t = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
                     (WeightMode::Int8, Some(round), Some(qw)) => {
                         let (sx, zx) = self.input_qparams(&n.inputs[0])?;
                         ops::conv2d_i8(a, qw, bias, stride, pad, groups, sx, zx, round)
                     }
                     _ => {
                         let w = self.weight_tensor(&wkey)?;
-                        self.narrow(ops::conv2d_f32(a, &w, bias, stride, pad, groups))
+                        ops::conv2d_f32(a, &w, bias, stride, pad, groups)
                     }
+                };
+                if let Some(act) = ops::Act::from_attr(n)? {
+                    t = t.map(|v| act.apply(v));
                 }
+                self.narrow(t)
             }
             "linear" => {
                 let a = get(0)?;
@@ -195,7 +248,11 @@ impl CompiledModel {
                         ops::linear_f32(&a.data, rows, din, &w, bias)
                     }
                 };
-                self.narrow(Tensor::new(oshape, data))
+                let mut t = Tensor::new(oshape, data);
+                if let Some(act) = ops::Act::from_attr(n)? {
+                    t = t.map(|v| act.apply(v));
+                }
+                self.narrow(t)
             }
             "bn" => {
                 let a = get(0)?;
@@ -203,32 +260,14 @@ impl CompiledModel {
                 let b = &self.params[&format!("{}.beta", n.name)];
                 let mean = &self.bn[&format!("{}.mean", n.name)];
                 let var = &self.bn[&format!("{}.var", n.name)];
-                let c = g.len();
-                let mut out = a.clone();
-                let spatial = a.len() / (a.shape[0] * c);
-                for ni in 0..a.shape[0] {
-                    for ci in 0..c {
-                        let inv = (var.data[ci] + BN_EPS).sqrt().recip();
-                        let scale = g.data[ci] * inv;
-                        let shift = b.data[ci] - mean.data[ci] * scale;
-                        let base = (ni * c + ci) * spatial;
-                        for i in 0..spatial {
-                            out.data[base + i] = a.data[base + i] * scale + shift;
-                        }
-                    }
-                }
-                self.narrow(out)
+                let (scale, shift) =
+                    ops::bn_fold_params(&g.data, &b.data, &mean.data, &var.data, BN_EPS);
+                self.narrow(ops::bn_apply(a, &scale, &shift))
             }
-            "relu" => self.narrow(get(0)?.map(|v| v.max(0.0))),
-            "relu6" => self.narrow(get(0)?.map(|v| v.clamp(0.0, 6.0))),
-            "hswish" => self.narrow(get(0)?.map(|v| v * (v + 3.0).clamp(0.0, 6.0) / 6.0)),
-            "hsigmoid" => self.narrow(get(0)?.map(|v| (v + 3.0).clamp(0.0, 6.0) / 6.0)),
-            "sigmoid" => self.narrow(get(0)?.map(|v| 1.0 / (1.0 + (-v).exp()))),
-            "silu" => self.narrow(get(0)?.map(|v| v / (1.0 + (-v).exp()))),
-            "gelu" => self.narrow(get(0)?.map(|v| {
-                let c = (2.0f32 / std::f32::consts::PI).sqrt();
-                0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
-            })),
+            "relu" | "relu6" | "hswish" | "hsigmoid" | "sigmoid" | "silu" | "gelu" => {
+                let act = ops::Act::from_kind(&n.kind).expect("covered by match");
+                self.narrow(get(0)?.map(|v| act.apply(v)))
+            }
             "add" => {
                 let (a, b) = (get(0)?, get(1)?);
                 if a.shape != b.shape {
@@ -239,79 +278,18 @@ impl CompiledModel {
             }
             "mul" => {
                 let (a, b) = (get(0)?, get(1)?);
-                let out = if a.shape == b.shape {
-                    let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x * y).collect();
-                    Tensor::new(a.shape.clone(), data)
-                } else {
-                    // broadcast (B, C, 1, 1) gate over (B, C, H, W) — SE block
-                    let (bsz, c) = (a.shape[0], a.shape[1]);
-                    let spatial = a.len() / (bsz * c);
-                    let mut out = a.clone();
-                    for ni in 0..bsz {
-                        for ci in 0..c {
-                            let gate = b.data[ni * c + ci];
-                            let base = (ni * c + ci) * spatial;
-                            for i in 0..spatial {
-                                out.data[base + i] *= gate;
-                            }
-                        }
-                    }
-                    out
-                };
-                self.narrow(out)
+                self.narrow(ops::mul_gate(a, b))
             }
-            "maxpool" | "avgpool" => self.narrow(pool(
+            "maxpool" | "avgpool" => self.narrow(ops::pool(
                 get(0)?,
                 n.attr_usize("k")?,
                 n.attr_usize("stride")?,
                 n.attr_usize("pad")?,
                 n.kind == "maxpool",
             )),
-            "gap" => {
-                let a = get(0)?;
-                let (bsz, c) = (a.shape[0], a.shape[1]);
-                let spatial = a.len() / (bsz * c);
-                let mut out = Tensor::zeros(&[bsz, c, 1, 1]);
-                for ni in 0..bsz {
-                    for ci in 0..c {
-                        let base = (ni * c + ci) * spatial;
-                        let s: f32 = a.data[base..base + spatial].iter().sum();
-                        out.data[ni * c + ci] = s / spatial as f32;
-                    }
-                }
-                self.narrow(out)
-            }
-            "upsample2x" => {
-                let a = get(0)?;
-                let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
-                let mut out = Tensor::zeros(&[bsz, c, 2 * h, 2 * w]);
-                for ni in 0..bsz {
-                    for ci in 0..c {
-                        for y in 0..2 * h {
-                            for xw in 0..2 * w {
-                                out.data[((ni * c + ci) * 2 * h + y) * 2 * w + xw] =
-                                    a.data[((ni * c + ci) * h + y / 2) * w + xw / 2];
-                            }
-                        }
-                    }
-                }
-                out
-            }
-            "concat" => {
-                let (a, b) = (get(0)?, get(1)?);
-                let (bsz, ca, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
-                let cb = b.shape[1];
-                let mut out = Tensor::zeros(&[bsz, ca + cb, h, w]);
-                let sp = h * w;
-                for ni in 0..bsz {
-                    let oa = ni * (ca + cb) * sp;
-                    out.data[oa..oa + ca * sp]
-                        .copy_from_slice(&a.data[ni * ca * sp..(ni + 1) * ca * sp]);
-                    out.data[oa + ca * sp..oa + (ca + cb) * sp]
-                        .copy_from_slice(&b.data[ni * cb * sp..(ni + 1) * cb * sp]);
-                }
-                out
-            }
+            "gap" => self.narrow(ops::gap(get(0)?)),
+            "upsample2x" => ops::upsample2x(get(0)?),
+            "concat" => ops::concat_channels(get(0)?, get(1)?),
             "flatten" => {
                 let a = get(0)?;
                 let bsz = a.shape[0];
@@ -328,52 +306,13 @@ impl CompiledModel {
             "layernorm" => {
                 let a = get(0)?;
                 let d = n.attr_usize("d")?;
-                let rows = a.len() / d;
                 let g = &self.params[&format!("{}.gamma", n.name)];
                 let b = &self.params[&format!("{}.beta", n.name)];
-                let mut out = a.clone();
-                for r in 0..rows {
-                    let row = &a.data[r * d..(r + 1) * d];
-                    let mean = row.iter().sum::<f32>() / d as f32;
-                    let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
-                    let inv = (var + 1e-6).sqrt().recip();
-                    for i in 0..d {
-                        out.data[r * d + i] = (row[i] - mean) * inv * g.data[i] + b.data[i];
-                    }
-                }
-                self.narrow(out)
+                self.narrow(ops::layernorm(a, d, &g.data, &b.data))
             }
             "attention" => self.narrow(self.attention(n, get(0)?)?),
-            "to_tokens" => {
-                let a = get(0)?;
-                let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
-                let t = h * w;
-                let mut out = Tensor::zeros(&[bsz, t, c]);
-                for ni in 0..bsz {
-                    for ci in 0..c {
-                        for p in 0..t {
-                            out.data[(ni * t + p) * c + ci] = a.data[(ni * c + ci) * t + p];
-                        }
-                    }
-                }
-                out
-            }
-            "tokmean" => {
-                let a = get(0)?;
-                let (bsz, t, d) = (a.shape[0], a.shape[1], a.shape[2]);
-                let mut out = Tensor::zeros(&[bsz, d]);
-                for ni in 0..bsz {
-                    for p in 0..t {
-                        for i in 0..d {
-                            out.data[ni * d + i] += a.data[(ni * t + p) * d + i];
-                        }
-                    }
-                    for i in 0..d {
-                        out.data[ni * d + i] /= t as f32;
-                    }
-                }
-                self.narrow(out)
-            }
+            "to_tokens" => ops::to_tokens(get(0)?),
+            "tokmean" => self.narrow(ops::tokmean(get(0)?)),
             "aq" => {
                 // integer requantization point: quant-dequant at static range
                 let a = get(0)?;
@@ -400,132 +339,37 @@ impl CompiledModel {
     fn attention(&self, n: &Node, x: &Tensor) -> Result<Tensor> {
         let d = n.attr_usize("d")?;
         let heads = n.attr_usize("heads")?;
-        let dh = d / heads;
         let (bsz, t) = (x.shape[0], x.shape[1]);
         let rows = bsz * t;
 
-        let proj = |mat: &str, bias: &str| -> Result<Vec<f32>> {
+        let proj = |input: &[f32], mat: &str, bias: &str| -> Result<Vec<f32>> {
             let wkey = format!("{}.{mat}", n.name);
             let b = &self.params[&format!("{}.{bias}", n.name)];
             match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
                 (WeightMode::Int8, Some(round), Some(qw)) => {
                     let (sx, zx) = self.input_qparams(&n.inputs[0])?;
-                    Ok(ops::linear_i8(&x.data, rows, d, qw, Some(b), sx, zx, round))
+                    Ok(ops::linear_i8(input, rows, d, qw, Some(b), sx, zx, round))
                 }
                 _ => {
                     let w = self.weight_tensor(&wkey)?;
-                    Ok(ops::linear_f32(&x.data, rows, d, &w, Some(b)))
+                    Ok(ops::linear_f32(input, rows, d, &w, Some(b)))
                 }
             }
         };
-        let q = proj("wq", "qb")?;
-        let k = proj("wk", "kb")?;
-        let v = proj("wv", "vb")?;
+        let q = proj(&x.data, "wq", "qb")?;
+        let k = proj(&x.data, "wk", "kb")?;
+        let v = proj(&x.data, "wv", "vb")?;
         // scores + context in f32 (paper: softmax stays FP)
-        let mut ctxt = vec![0.0f32; rows * d];
-        let scale = 1.0 / (dh as f32).sqrt();
-        for b_i in 0..bsz {
-            for h_i in 0..heads {
-                for ti in 0..t {
-                    let qoff = (b_i * t + ti) * d + h_i * dh;
-                    // scores over all source tokens
-                    let mut sc = vec![0.0f32; t];
-                    let mut mx = f32::MIN;
-                    for tj in 0..t {
-                        let koff = (b_i * t + tj) * d + h_i * dh;
-                        let mut s = 0.0f32;
-                        for e in 0..dh {
-                            s += q[qoff + e] * k[koff + e];
-                        }
-                        sc[tj] = s * scale;
-                        mx = mx.max(sc[tj]);
-                    }
-                    let mut denom = 0.0f32;
-                    for s in sc.iter_mut() {
-                        *s = (*s - mx).exp();
-                        denom += *s;
-                    }
-                    let coff = (b_i * t + ti) * d + h_i * dh;
-                    for tj in 0..t {
-                        let a = sc[tj] / denom;
-                        let voff = (b_i * t + tj) * d + h_i * dh;
-                        for e in 0..dh {
-                            ctxt[coff + e] += a * v[voff + e];
-                        }
-                    }
-                }
-            }
-        }
-        // output projection on the context
-        let wkey = format!("{}.wo", n.name);
-        let b = &self.params[&format!("{}.ob", n.name)];
-        let out = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
-            (WeightMode::Int8, Some(round), Some(qw)) => {
-                // context range: reuse the block input's range as a proxy
-                let (sx, zx) = self.input_qparams(&n.inputs[0])?;
-                ops::linear_i8(&ctxt, rows, d, qw, Some(b), sx, zx, round)
-            }
-            _ => {
-                let w = self.weight_tensor(&wkey)?;
-                ops::linear_f32(&ctxt, rows, d, &w, Some(b))
-            }
-        };
+        let ctxt = ops::attention_ctx(&q, &k, &v, bsz, t, d, heads);
+        // output projection on the context (ctxt range: the block input's
+        // range serves as a proxy on the int8 path)
+        let out = proj(&ctxt, "wo", "ob")?;
         Ok(Tensor::new(vec![bsz, t, d], out))
     }
-}
-
-fn pool(a: &Tensor, k: usize, stride: usize, pad: usize, is_max: bool) -> Tensor {
-    let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
-    let ho = (h + 2 * pad - k) / stride + 1;
-    let wo = (w + 2 * pad - k) / stride + 1;
-    let mut out = Tensor::zeros(&[n, c, ho, wo]);
-    for ni in 0..n {
-        for ci in 0..c {
-            let xc = &a.data[(ni * c + ci) * h * w..(ni * c + ci + 1) * h * w];
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    let mut acc = if is_max { f32::MIN } else { 0.0 };
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            if is_max {
-                                acc = acc.max(f32::MIN);
-                            }
-                            continue;
-                        }
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            let v = xc[iy as usize * w + ix as usize];
-                            if is_max {
-                                acc = acc.max(v);
-                            } else {
-                                acc += v;
-                            }
-                        }
-                    }
-                    if !is_max {
-                        acc /= (k * k) as f32;
-                    }
-                    out.data[((ni * c + ci) * ho + oy) * wo + ox] = acc;
-                }
-            }
-        }
-    }
-    out
 }
 
 /// Build an FP32 reference CompiledModel straight from a checkpoint's
 /// param/bn sections (the "ONNX FP32" analogue all backends are compared to).
 pub fn fp32_model(graph: Graph, params: BTreeMap<String, Tensor>, bn: BTreeMap<String, Tensor>) -> CompiledModel {
-    CompiledModel {
-        graph,
-        params,
-        bn,
-        qweights: HashMap::new(),
-        act_ranges: HashMap::new(),
-        cfg: ExecConfig::FP32,
-    }
+    CompiledModel::new(graph, params, bn, HashMap::new(), HashMap::new(), ExecConfig::FP32)
 }

@@ -4,9 +4,97 @@
 //! Convolution is im2col + GEMM in both precisions; the integer GEMM uses the
 //! zero-point factorization  sum((xq-zx)*wq) = sum(xq*wq) - zx*sum(wq)  so the
 //! inner loop is a plain i32 dot product (this is also what real INT8 NPU
-//! pipelines do — the row-sum correction is precomputed per output channel).
+//! pipelines do — the row-sum correction is precomputed per output channel,
+//! at weight-quantization time: `QWeight::row_sums`).
+//!
+//! Two tiers of kernels live here:
+//!
+//! * **reference kernels** (`gemm_f32`, `linear_f32`, `conv2d_f32`,
+//!   `conv2d_i8`, `linear_i8`) — the serial, unfused forms the legacy
+//!   interpreter executes. They are the ground truth the plan executor is
+//!   regression-tested against.
+//! * **planned kernels** (`*_tiled`, `*_fused`) — the forms the execution
+//!   plan dispatches: row-chunk scoped-thread parallelism via
+//!   [`par_row_chunks`], 4-way output-channel register blocking on BOTH
+//!   precision paths, and a bias+activation epilogue so fused
+//!   conv→bn→activation graphs finish inside the GEMM (including the i8
+//!   requantization epilogue). Per-output accumulation order is kept
+//!   identical to the reference kernels, so planned f32 results are
+//!   bit-identical too, and the i8 path is bit-exact by construction
+//!   (i32 accumulation is order-independent).
 
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{Context, Result};
+
+use crate::qir::Node;
+use crate::tensor::quantized::row_sums_of;
 use crate::tensor::{QWeight, RoundMode, Tensor};
+
+/// Activation functions a vendor compiler fuses into the GEMM epilogue of
+/// the preceding conv/linear (and that the engine runs as standalone nodes
+/// when unfused). One definition serves both, so fusion cannot drift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Relu6,
+    Hswish,
+    Hsigmoid,
+    Sigmoid,
+    Silu,
+    Gelu,
+}
+
+impl Act {
+    /// Map a QIR node kind (or `act=` attribute value) to the epilogue.
+    pub fn from_kind(kind: &str) -> Option<Act> {
+        Some(match kind {
+            "relu" => Act::Relu,
+            "relu6" => Act::Relu6,
+            "hswish" => Act::Hswish,
+            "hsigmoid" => Act::Hsigmoid,
+            "sigmoid" => Act::Sigmoid,
+            "silu" => Act::Silu,
+            "gelu" => Act::Gelu,
+            _ => return None,
+        })
+    }
+
+    /// Epilogue activation tagged on a conv/linear node by the
+    /// `fuse_conv_bn_act` pass, if any. The single parser both executors use.
+    pub fn from_attr(n: &Node) -> Result<Option<Act>> {
+        match n.attrs.get("act") {
+            None => Ok(None),
+            Some(a) => Act::from_kind(a)
+                .map(Some)
+                .with_context(|| format!("node {}: unknown fused act {a:?}", n.name)),
+        }
+    }
+
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::Relu => v.max(0.0),
+            Act::Relu6 => v.clamp(0.0, 6.0),
+            Act::Hswish => v * (v + 3.0).clamp(0.0, 6.0) / 6.0,
+            Act::Hsigmoid => (v + 3.0).clamp(0.0, 6.0) / 6.0,
+            Act::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            Act::Silu => v / (1.0 + (-v).exp()),
+            Act::Gelu => {
+                let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+            }
+        }
+    }
+}
+
+#[inline]
+fn apply_act(v: f32, act: Option<Act>) -> f32 {
+    match act {
+        Some(a) => a.apply(v),
+        None => v,
+    }
+}
 
 /// im2col for NCHW input: output rows = N*Ho*Wo, cols = (Cin/g)*kh*kw,
 /// one matrix per group.
@@ -62,7 +150,51 @@ pub fn im2col_group(
     Im2Col { rows, cols, data }
 }
 
-/// f32 GEMM: out[r][o] += sum_k col[r][k] * w[o][k]; w is (cout_g, cols).
+// ---------------------------------------------------------------------------
+// shared parallel driver
+// ---------------------------------------------------------------------------
+
+/// Work (in MACs) below which spawning threads costs more than it saves,
+/// and the minimum row count worth splitting (§Perf iteration 3).
+const PAR_WORK_MIN: u64 = 4_000_000;
+const PAR_ROWS_MIN: usize = 8;
+
+/// Shared row-chunk parallel driver behind every planned GEMM: splits the
+/// output matrix into contiguous disjoint row ranges and runs
+/// `kern(first_row, n_rows, out_chunk)` on scoped threads when the problem is
+/// large enough to amortize the spawns. Small problems run inline.
+pub(crate) fn par_row_chunks<F>(rows: usize, out: &mut [f32], out_stride: usize, work: u64, kern: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let out = &mut out[..rows * out_stride];
+    if work <= PAR_WORK_MIN || rows < PAR_ROWS_MIN {
+        kern(0, rows, out);
+        return;
+    }
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let chunk = rows.div_ceil(threads);
+    let kern = &kern;
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = out;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let take = chunk.min(rows - r0);
+            let (mine, tail) = rest.split_at_mut(take * out_stride);
+            rest = tail;
+            let start = r0;
+            scope.spawn(move || kern(start, take, mine));
+            r0 += take;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// f32 GEMM
+// ---------------------------------------------------------------------------
+
+/// Reference f32 GEMM: out[r][o] = sum_k col[r][k] * w[o][k]; w is
+/// (cout_g, cols). Serial, one output at a time, 64-wide partial sums.
 pub fn gemm_f32(col: &Im2Col, w: &[f32], cout_g: usize, out: &mut [f32], out_stride: usize, o0: usize) {
     const BK: usize = 64;
     for r in 0..col.rows {
@@ -88,16 +220,140 @@ pub fn gemm_f32(col: &Im2Col, w: &[f32], cout_g: usize, out: &mut [f32], out_str
     }
 }
 
+/// Planned f32 GEMM: row-chunk parallel, 4-way output register blocking,
+/// bias + activation epilogue. Per-output accumulation order (64-wide k
+/// blocks, sequential within a block) is identical to [`gemm_f32`], so
+/// results are bit-identical — only faster.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_tiled(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    w: &[f32],
+    cout_g: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let work = rows as u64 * cols as u64 * cout_g as u64;
+    par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
+        gemm_f32_rows(&x[r0 * cols..(r0 + nr) * cols], nr, cols, w, cout_g, bias, act, chunk, out_stride, o0);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_rows(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    w: &[f32],
+    cout_g: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    const BK: usize = 64;
+    for r in 0..rows {
+        let xrow = &x[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        // 4-way output-channel register blocking: xrow stays hot in L1 and
+        // four accumulators amortize its loads (mirrors the i8 kernel).
+        while o + 4 <= cout_g {
+            let w0 = &w[o * cols..(o + 1) * cols];
+            let w1 = &w[(o + 1) * cols..(o + 2) * cols];
+            let w2 = &w[(o + 2) * cols..(o + 3) * cols];
+            let w3 = &w[(o + 3) * cols..(o + 4) * cols];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut k = 0;
+            while k + BK <= cols {
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for i in k..k + BK {
+                    let xv = xrow[i];
+                    s0 += xv * w0[i];
+                    s1 += xv * w1[i];
+                    s2 += xv * w2[i];
+                    s3 += xv * w3[i];
+                }
+                a0 += s0;
+                a1 += s1;
+                a2 += s2;
+                a3 += s3;
+                k += BK;
+            }
+            for i in k..cols {
+                let xv = xrow[i];
+                a0 += xv * w0[i];
+                a1 += xv * w1[i];
+                a2 += xv * w2[i];
+                a3 += xv * w3[i];
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[o0 + oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &w[o * cols..(o + 1) * cols];
+            let mut acc = 0.0f32;
+            let mut k = 0;
+            while k + BK <= cols {
+                let mut s = 0.0f32;
+                for i in k..k + BK {
+                    s += xrow[i] * wrow[i];
+                }
+                acc += s;
+                k += BK;
+            }
+            for i in k..cols {
+                acc += xrow[i] * wrow[i];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o0 + o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// integer GEMM
+// ---------------------------------------------------------------------------
+
 /// Quantize an f32 im2col buffer to u8 (asymmetric per-tensor).
 pub fn quantize_cols(col: &Im2Col, scale: f32, zp: i32, round: RoundMode) -> Vec<u8> {
-    col.data
-        .iter()
+    quantize_slice(&col.data, scale, zp, round)
+}
+
+/// Quantize a raw f32 slice to u8 (asymmetric per-tensor) — the single
+/// definition of the activation quantization arithmetic.
+pub fn quantize_slice(x: &[f32], scale: f32, zp: i32, round: RoundMode) -> Vec<u8> {
+    x.iter()
         .map(|&v| (round.round(v / scale) + zp as f32).clamp(0.0, 255.0) as u8)
         .collect()
 }
 
-/// Integer GEMM with zero-point factorization.
-/// out[r][o0+o] = sw[o]*sx * ( sum_k xq[r][k]*wq[o][k]  -  zx * rowsum_w[o] ) + bias[o]
+/// Premultiplied per-output-channel dequantization scales: sw[c] * sx,
+/// expanded to `cout` entries whether the scheme was per-channel or
+/// per-tensor. Resolving this once per call (or once per plan) hoists the
+/// per-element `w_scales[oo.min(len-1)]` branch out of the GEMM output loop.
+pub fn premul_scales(w_scales: &[f32], cout: usize, sx: f32) -> Vec<f32> {
+    (0..cout).map(|c| w_scales[c.min(w_scales.len() - 1)] * sx).collect()
+}
+
+/// Integer GEMM with zero-point factorization (compatibility entry point:
+/// recomputes row sums and premultiplied scales per call).
+/// out[r][o0+o] = sw[o]*sx * ( sum_k xq[r][k]*wq[o][k] - zx * rowsum_w[o] ) + bias[o]
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_i8(
     xq: &[u8],
@@ -113,46 +369,39 @@ pub fn gemm_i8(
     out_stride: usize,
     o0: usize,
 ) {
-    // per-output-channel weight row sums (the zero-point correction)
-    let mut rowsum = vec![0i32; cout_g];
-    for o in 0..cout_g {
-        let mut s = 0i32;
-        for &w in &wq[o * cols..(o + 1) * cols] {
-            s += w as i32;
-        }
-        rowsum[o] = s;
-    }
-    // §Perf iteration 3: parallelize across row chunks (disjoint outputs)
-    // when the problem is large enough to amortize thread spawn
-    let work = rows as u64 * cols as u64 * cout_g as u64;
-    if work > 4_000_000 && rows >= 8 {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-        let chunk = rows.div_ceil(threads);
-        let rowsum_ref = &rowsum;
-        std::thread::scope(|scope| {
-            let mut rest: &mut [f32] = out;
-            let mut r0 = 0usize;
-            while r0 < rows {
-                let take = chunk.min(rows - r0);
-                let (mine, tail) = rest.split_at_mut(take * out_stride);
-                rest = tail;
-                let start = r0;
-                scope.spawn(move || {
-                    gemm_i8_rows(
-                        &xq[start * cols..(start + take) * cols],
-                        take, cols, wq, cout_g, rowsum_ref, w_scales, sx, zx, bias, mine,
-                        out_stride, o0,
-                    );
-                });
-                r0 += take;
-            }
-        });
-        return;
-    }
-    gemm_i8_rows(xq, rows, cols, wq, cout_g, &rowsum, w_scales, sx, zx, bias, out, out_stride, o0);
+    let rowsum = row_sums_of(wq, cout_g);
+    let sxw = premul_scales(w_scales, cout_g, sx);
+    gemm_i8_dispatch(xq, rows, cols, wq, cout_g, &rowsum, &sxw, zx, bias, None, out, out_stride, o0);
 }
 
-/// Serial row-range kernel behind `gemm_i8`.
+/// Planned integer GEMM: precomputed row sums + premultiplied scales,
+/// optional bias + activation requantization epilogue, row-chunk parallel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_i8_dispatch(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let work = rows as u64 * cols as u64 * cout_g as u64;
+    par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
+        gemm_i8_rows(
+            &xq[r0 * cols..(r0 + nr) * cols],
+            nr, cols, wq, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride, o0,
+        );
+    });
+}
+
+/// Serial row-range kernel behind the integer GEMM.
 #[allow(clippy::too_many_arguments)]
 fn gemm_i8_rows(
     xq: &[u8],
@@ -161,10 +410,10 @@ fn gemm_i8_rows(
     wq: &[i8],
     cout_g: usize,
     rowsum: &[i32],
-    w_scales: &[f32],
-    sx: f32,
+    sxw: &[f32],
     zx: i32,
     bias: Option<&[f32]>,
+    act: Option<Act>,
     out: &mut [f32],
     out_stride: usize,
     o0: usize,
@@ -192,9 +441,8 @@ fn gemm_i8_rows(
             for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
                 let oo = o + j;
                 let corrected = acc - zx * rowsum[oo];
-                let s = w_scales[oo.min(w_scales.len() - 1)] * sx;
                 let b = bias.map_or(0.0, |b| b[oo]);
-                orow[o0 + oo] = corrected as f32 * s + b;
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
             }
             o += 4;
         }
@@ -205,37 +453,26 @@ fn gemm_i8_rows(
                 acc += xrow[k] as i32 * wrow[k] as i32;
             }
             acc -= zx * rowsum[o];
-            let s = w_scales[o.min(w_scales.len() - 1)] * sx;
             let b = bias.map_or(0.0, |b| b[o]);
-            orow[o0 + o] = acc as f32 * s + b;
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
             o += 1;
         }
     }
 }
 
-/// f32 convolution (NCHW, OIHW weights, groups).
-pub fn conv2d_f32(
-    x: &Tensor,
-    w: &Tensor,
-    bias: Option<&Tensor>,
-    stride: usize,
-    pad: usize,
-    groups: usize,
-) -> Tensor {
-    let n = x.shape[0];
-    let (cout, _cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
-    let (h, wdim) = (x.shape[2], x.shape[3]);
-    let ho = (h + 2 * pad - kh) / stride + 1;
-    let wo = (wdim + 2 * pad - kw) / stride + 1;
-    let cout_g = cout / groups;
-    let mut out_mat = vec![0.0f32; n * ho * wo * cout];
-    for g in 0..groups {
-        let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
-        let wslice = &w.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
-        gemm_f32(&col, wslice, cout_g, &mut out_mat, cout, g * cout_g);
-    }
+// ---------------------------------------------------------------------------
+// convolution
+// ---------------------------------------------------------------------------
+
+fn conv_out_dims(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> (usize, usize) {
+    let (h, w) = (x.shape[2], x.shape[3]);
+    ((h + 2 * pad - kh) / stride + 1, (w + 2 * pad - kw) / stride + 1)
+}
+
+/// (N*Ho*Wo, Cout) row-major matrix -> NCHW tensor, adding `bias` per output
+/// channel when given.
+fn out_mat_to_nchw(out_mat: &[f32], n: usize, cout: usize, ho: usize, wo: usize, bias: Option<&Tensor>) -> Tensor {
     let mut out = Tensor::zeros(&[n, cout, ho, wo]);
-    // out_mat is (N*Ho*Wo, Cout) -> NCHW
     for ni in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -253,8 +490,56 @@ pub fn conv2d_f32(
     out
 }
 
-/// Integer (W8/A8) convolution: quantizes the input with (sx, zx), uses the
-/// pre-quantized weights, accumulates i32, dequantizes to f32 output.
+/// Reference f32 convolution (NCHW, OIHW weights, groups). Serial.
+pub fn conv2d_f32(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
+    let n = x.shape[0];
+    let (cout, _cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (ho, wo) = conv_out_dims(x, kh, kw, stride, pad);
+    let cout_g = cout / groups;
+    let mut out_mat = vec![0.0f32; n * ho * wo * cout];
+    for g in 0..groups {
+        let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
+        let wslice = &w.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
+        gemm_f32(&col, wslice, cout_g, &mut out_mat, cout, g * cout_g);
+    }
+    out_mat_to_nchw(&out_mat, n, cout, ho, wo, bias)
+}
+
+/// Planned f32 convolution: parallel tiled GEMM with the bias + activation
+/// epilogue fused in (the conv→bn→act lowering target).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_fused(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    act: Option<Act>,
+) -> Tensor {
+    let n = x.shape[0];
+    let (cout, _cg, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (ho, wo) = conv_out_dims(x, kh, kw, stride, pad);
+    let cout_g = cout / groups;
+    let mut out_mat = vec![0.0f32; n * ho * wo * cout];
+    for g in 0..groups {
+        let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
+        let wslice = &w.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
+        let bslice = bias.map(|b| &b.data[g * cout_g..(g + 1) * cout_g]);
+        gemm_f32_tiled(&col.data, col.rows, col.cols, wslice, cout_g, bslice, act, &mut out_mat, cout, g * cout_g);
+    }
+    out_mat_to_nchw(&out_mat, n, cout, ho, wo, None)
+}
+
+/// Reference integer (W8/A8) convolution: quantizes the input with (sx, zx),
+/// uses the pre-quantized weights, accumulates i32, dequantizes to f32.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_i8(
     x: &Tensor,
@@ -267,46 +552,74 @@ pub fn conv2d_i8(
     zx: i32,
     round: RoundMode,
 ) -> Tensor {
+    let sxw = premul_scales(&qw.scales, qw.shape[0], sx);
+    conv2d_i8_inner(x, qw, bias, stride, pad, groups, sx, zx, round, &sxw, None, false)
+}
+
+/// Planned integer convolution: bias + activation run in the requantization
+/// epilogue of the integer GEMM, using the row sums fixed at quantize time
+/// and the premultiplied dequant scales fixed at plan time.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_fused(
+    x: &Tensor,
+    qw: &QWeight,
+    bias: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+    sxw: &[f32],
+    act: Option<Act>,
+) -> Tensor {
+    conv2d_i8_inner(x, qw, bias, stride, pad, groups, sx, zx, round, sxw, act, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_i8_inner(
+    x: &Tensor,
+    qw: &QWeight,
+    bias: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+    sxw: &[f32],
+    act: Option<Act>,
+    bias_in_epilogue: bool,
+) -> Tensor {
     let n = x.shape[0];
     let (cout, _cg, kh, kw) = (qw.shape[0], qw.shape[1], qw.shape[2], qw.shape[3]);
-    let (h, wdim) = (x.shape[2], x.shape[3]);
-    let ho = (h + 2 * pad - kh) / stride + 1;
-    let wo = (wdim + 2 * pad - kw) / stride + 1;
+    let (ho, wo) = conv_out_dims(x, kh, kw, stride, pad);
     let cout_g = cout / groups;
     let mut out_mat = vec![0.0f32; n * ho * wo * cout];
     for g in 0..groups {
         let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
         let xq = quantize_cols(&col, sx, zx, round);
         let wslice = &qw.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
-        let sl = if qw.scales.len() == 1 {
-            qw.scales.clone()
+        let rowsum = &qw.row_sums[g * cout_g..(g + 1) * cout_g];
+        let sxw_g = &sxw[g * cout_g..(g + 1) * cout_g];
+        let bslice = if bias_in_epilogue {
+            bias.map(|b| &b.data[g * cout_g..(g + 1) * cout_g])
         } else {
-            qw.scales[g * cout_g..(g + 1) * cout_g].to_vec()
+            None
         };
-        gemm_i8(
-            &xq, col.rows, col.cols, wslice, cout_g, &sl, sx, zx, None, &mut out_mat, cout,
-            g * cout_g,
+        gemm_i8_dispatch(
+            &xq, col.rows, col.cols, wslice, cout_g, rowsum, sxw_g, zx, bslice, act, &mut out_mat,
+            cout, g * cout_g,
         );
     }
-    let mut out = Tensor::zeros(&[n, cout, ho, wo]);
-    for ni in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let r = (ni * ho + oy) * wo + ox;
-                for o in 0..cout {
-                    let mut v = out_mat[r * cout + o];
-                    if let Some(b) = bias {
-                        v += b.data[o];
-                    }
-                    out.data[((ni * cout + o) * ho + oy) * wo + ox] = v;
-                }
-            }
-        }
-    }
-    out
+    out_mat_to_nchw(&out_mat, n, cout, ho, wo, if bias_in_epilogue { None } else { bias })
 }
 
-/// f32 linear: x (rows, din) @ w.T (dout, din) + b.
+// ---------------------------------------------------------------------------
+// linear
+// ---------------------------------------------------------------------------
+
+/// Reference f32 linear: x (rows, din) @ w.T (dout, din) + b. Serial.
 pub fn linear_f32(x: &[f32], rows: usize, din: usize, w: &Tensor, bias: Option<&Tensor>) -> Vec<f32> {
     let dout = w.shape[0];
     let mut out = vec![0.0f32; rows * dout];
@@ -327,7 +640,81 @@ pub fn linear_f32(x: &[f32], rows: usize, din: usize, w: &Tensor, bias: Option<&
     out
 }
 
-/// Integer linear with asymmetric input quantization.
+/// Planned f32 linear: row-chunk parallel, 4-way output blocking, activation
+/// epilogue. Plain (unblocked-k) accumulation, matching [`linear_f32`]
+/// bit-for-bit per output.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_f32_tiled(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * dout];
+    let work = rows as u64 * din as u64 * dout as u64;
+    par_row_chunks(rows, &mut out, dout, work, |r0, nr, chunk| {
+        linear_f32_rows(&x[r0 * din..(r0 + nr) * din], nr, din, w, dout, bias, act, chunk);
+    });
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn linear_f32_rows(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    w: &[f32],
+    dout: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut o = 0;
+        while o + 4 <= dout {
+            let w0 = &w[o * din..(o + 1) * din];
+            let w1 = &w[(o + 1) * din..(o + 2) * din];
+            let w2 = &w[(o + 2) * din..(o + 3) * din];
+            let w3 = &w[(o + 3) * din..(o + 4) * din];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for k in 0..din {
+                let xv = xrow[k];
+                a0 += xv * w0[k];
+                a1 += xv * w1[k];
+                a2 += xv * w2[k];
+                a3 += xv * w3[k];
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < dout {
+            let wrow = &w[o * din..(o + 1) * din];
+            let mut acc = 0.0f32;
+            for k in 0..din {
+                acc += xrow[k] * wrow[k];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}
+
+/// Reference integer linear with asymmetric input quantization.
 #[allow(clippy::too_many_arguments)]
 pub fn linear_i8(
     x: &[f32],
@@ -340,20 +727,332 @@ pub fn linear_i8(
     round: RoundMode,
 ) -> Vec<f32> {
     let dout = qw.shape[0];
-    let xq: Vec<u8> = x
-        .iter()
-        .map(|&v| (round.round(v / sx) + zx as f32).clamp(0.0, 255.0) as u8)
-        .collect();
+    let sxw = premul_scales(&qw.scales, dout, sx);
+    linear_i8_inner(x, rows, din, qw, bias.map(|b| b.data.as_slice()), sx, zx, round, &sxw, None)
+}
+
+/// Planned integer linear: precomputed premultiplied scales + activation in
+/// the requantization epilogue.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_i8_fused(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    qw: &QWeight,
+    bias: Option<&[f32]>,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+    sxw: &[f32],
+    act: Option<Act>,
+) -> Vec<f32> {
+    linear_i8_inner(x, rows, din, qw, bias, sx, zx, round, sxw, act)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn linear_i8_inner(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    qw: &QWeight,
+    bias: Option<&[f32]>,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+    sxw: &[f32],
+    act: Option<Act>,
+) -> Vec<f32> {
+    let dout = qw.shape[0];
+    let xq = quantize_slice(x, sx, zx, round);
     let mut out = vec![0.0f32; rows * dout];
-    let bias_slice = bias.map(|b| b.data.as_slice());
-    gemm_i8(&xq, rows, din, &qw.data, dout, &qw.scales, sx, zx, bias_slice, &mut out, dout, 0);
+    gemm_i8_dispatch(&xq, rows, din, &qw.data, dout, &qw.row_sums, sxw, zx, bias, act, &mut out, dout, 0);
     out
+}
+
+// ---------------------------------------------------------------------------
+// pooling
+// ---------------------------------------------------------------------------
+
+/// Max / average pooling (NCHW). A max window that is entirely padding
+/// yields 0.0 (the padding value), matching every framework's semantics —
+/// the seed returned f32::MIN there.
+pub fn pool(a: &Tensor, k: usize, stride: usize, pad: usize, is_max: bool) -> Tensor {
+    let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let ho = (h + 2 * pad - k) / stride + 1;
+    let wo = (w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c, ho, wo]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let xc = &a.data[(ni * c + ci) * h * w..(ni * c + ci + 1) * h * w];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = if is_max { f32::MIN } else { 0.0 };
+                    let mut covered = false;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = xc[iy as usize * w + ix as usize];
+                            if is_max {
+                                acc = acc.max(v);
+                                covered = true;
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                    if is_max && !covered {
+                        acc = 0.0;
+                    }
+                    if !is_max {
+                        acc /= (k * k) as f32;
+                    }
+                    out.data[((ni * c + ci) * ho + oy) * wo + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// shared structural / normalization ops
+//
+// One definition each, executed by BOTH the legacy interpreter and the plan
+// executor — same rationale as `pool`/`attention_ctx`: a numerical change in
+// one path cannot silently miss the other.
+// ---------------------------------------------------------------------------
+
+/// Per-channel BN (scale, shift) from running stats:
+/// scale = gamma / sqrt(var + eps), shift = beta - mean * scale.
+pub fn bn_fold_params(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32], eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let c = gamma.len();
+    let mut scale = vec![0.0f32; c];
+    let mut shift = vec![0.0f32; c];
+    for ci in 0..c {
+        let inv = (var[ci] + eps).sqrt().recip();
+        let s = gamma[ci] * inv;
+        scale[ci] = s;
+        shift[ci] = beta[ci] - mean[ci] * s;
+    }
+    (scale, shift)
+}
+
+/// Apply per-channel affine (BN) over NCHW-like data.
+pub fn bn_apply(a: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
+    let c = scale.len();
+    let spatial = a.len() / (a.shape[0] * c);
+    let mut out = a.clone();
+    for ni in 0..a.shape[0] {
+        for ci in 0..c {
+            let base = (ni * c + ci) * spatial;
+            for i in 0..spatial {
+                out.data[base + i] = a.data[base + i] * scale[ci] + shift[ci];
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise product, broadcasting a (B, C, 1, 1) gate over (B, C, H, W)
+/// when shapes differ (SE block).
+pub fn mul_gate(a: &Tensor, b: &Tensor) -> Tensor {
+    if a.shape == b.shape {
+        let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x * y).collect();
+        return Tensor::new(a.shape.clone(), data);
+    }
+    let (bsz, c) = (a.shape[0], a.shape[1]);
+    let spatial = a.len() / (bsz * c);
+    let mut out = a.clone();
+    for ni in 0..bsz {
+        for ci in 0..c {
+            let gate = b.data[ni * c + ci];
+            let base = (ni * c + ci) * spatial;
+            for i in 0..spatial {
+                out.data[base + i] *= gate;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling (B, C, H, W) -> (B, C, 1, 1).
+pub fn gap(a: &Tensor) -> Tensor {
+    let (bsz, c) = (a.shape[0], a.shape[1]);
+    let spatial = a.len() / (bsz * c);
+    let mut out = Tensor::zeros(&[bsz, c, 1, 1]);
+    for ni in 0..bsz {
+        for ci in 0..c {
+            let base = (ni * c + ci) * spatial;
+            let s: f32 = a.data[base..base + spatial].iter().sum();
+            out.data[ni * c + ci] = s / spatial as f32;
+        }
+    }
+    out
+}
+
+/// Nearest-neighbor 2x upsampling (NCHW).
+pub fn upsample2x(a: &Tensor) -> Tensor {
+    let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let mut out = Tensor::zeros(&[bsz, c, 2 * h, 2 * w]);
+    for ni in 0..bsz {
+        for ci in 0..c {
+            for y in 0..2 * h {
+                for xw in 0..2 * w {
+                    out.data[((ni * c + ci) * 2 * h + y) * 2 * w + xw] =
+                        a.data[((ni * c + ci) * h + y / 2) * w + xw / 2];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Channel concatenation of two NCHW tensors with equal spatial dims.
+pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    let (bsz, ca, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let cb = b.shape[1];
+    let mut out = Tensor::zeros(&[bsz, ca + cb, h, w]);
+    let sp = h * w;
+    for ni in 0..bsz {
+        let oa = ni * (ca + cb) * sp;
+        out.data[oa..oa + ca * sp].copy_from_slice(&a.data[ni * ca * sp..(ni + 1) * ca * sp]);
+        out.data[oa + ca * sp..oa + (ca + cb) * sp]
+            .copy_from_slice(&b.data[ni * cb * sp..(ni + 1) * cb * sp]);
+    }
+    out
+}
+
+/// LayerNorm over the last dimension `d` (eps 1e-6, matching the JAX side).
+pub fn layernorm(a: &Tensor, d: usize, gamma: &[f32], beta: &[f32]) -> Tensor {
+    let rows = a.len() / d;
+    let mut out = a.clone();
+    for r in 0..rows {
+        let row = &a.data[r * d..(r + 1) * d];
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = (var + 1e-6).sqrt().recip();
+        for i in 0..d {
+            out.data[r * d + i] = (row[i] - mean) * inv * gamma[i] + beta[i];
+        }
+    }
+    out
+}
+
+/// (B, C, H, W) -> (B, H*W, C) token layout.
+pub fn to_tokens(a: &Tensor) -> Tensor {
+    let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let t = h * w;
+    let mut out = Tensor::zeros(&[bsz, t, c]);
+    for ni in 0..bsz {
+        for ci in 0..c {
+            for p in 0..t {
+                out.data[(ni * t + p) * c + ci] = a.data[(ni * c + ci) * t + p];
+            }
+        }
+    }
+    out
+}
+
+/// Mean over the token dimension: (B, T, D) -> (B, D).
+pub fn tokmean(a: &Tensor) -> Tensor {
+    let (bsz, t, d) = (a.shape[0], a.shape[1], a.shape[2]);
+    let mut out = Tensor::zeros(&[bsz, d]);
+    for ni in 0..bsz {
+        for p in 0..t {
+            for i in 0..d {
+                out.data[ni * d + i] += a.data[(ni * t + p) * d + i];
+            }
+        }
+        for i in 0..d {
+            out.data[ni * d + i] /= t as f32;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// activation quant-dequant (aq nodes)
+// ---------------------------------------------------------------------------
+
+/// 256-entry dequantization LUT for a static u8 range: lut[q] = (q - zp) * s.
+pub fn aq_lut(scale: f32, zp: i32) -> [f32; 256] {
+    let mut lut = [0.0f32; 256];
+    for (q, e) in lut.iter_mut().enumerate() {
+        *e = (q as f32 - zp as f32) * scale;
+    }
+    lut
+}
+
+/// In-place static quant-dequant of a slice through the u8 grid: arithmetic
+/// quantization (rounding is input-dependent) + LUT dequantization. Value-
+/// identical to the interpreter's `aq` formula, one multiply cheaper.
+pub fn quant_dequant_slice(data: &mut [f32], scale: f32, zp: i32, round: RoundMode, lut: &[f32; 256]) {
+    let zpf = zp as f32;
+    for v in data.iter_mut() {
+        let q = (round.round(*v / scale) + zpf).clamp(0.0, 255.0) as usize;
+        *v = lut[q];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// attention core
+// ---------------------------------------------------------------------------
+
+/// Softmax attention scores + context over projected q/k/v rows
+/// ((bsz*t, d) each, `heads` heads). Shared by the interpreter and the plan
+/// executor so the two paths cannot drift (paper: softmax stays FP).
+pub fn attention_ctx(q: &[f32], k: &[f32], v: &[f32], bsz: usize, t: usize, d: usize, heads: usize) -> Vec<f32> {
+    let dh = d / heads;
+    let rows = bsz * t;
+    let mut ctxt = vec![0.0f32; rows * d];
+    let scale = 1.0 / (dh as f32).sqrt();
+    for b_i in 0..bsz {
+        for h_i in 0..heads {
+            for ti in 0..t {
+                let qoff = (b_i * t + ti) * d + h_i * dh;
+                // scores over all source tokens
+                let mut sc = vec![0.0f32; t];
+                let mut mx = f32::MIN;
+                for tj in 0..t {
+                    let koff = (b_i * t + tj) * d + h_i * dh;
+                    let mut s = 0.0f32;
+                    for e in 0..dh {
+                        s += q[qoff + e] * k[koff + e];
+                    }
+                    sc[tj] = s * scale;
+                    mx = mx.max(sc[tj]);
+                }
+                let mut denom = 0.0f32;
+                for s in sc.iter_mut() {
+                    *s = (*s - mx).exp();
+                    denom += *s;
+                }
+                let coff = (b_i * t + ti) * d + h_i * dh;
+                for tj in 0..t {
+                    let a = sc[tj] / denom;
+                    let voff = (b_i * t + tj) * d + h_i * dh;
+                    for e in 0..dh {
+                        ctxt[coff + e] += a * v[voff + e];
+                    }
+                }
+            }
+        }
+    }
+    ctxt
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::{QuantScheme, Tensor};
+    use crate::tensor::{act_scale_zp, QuantScheme, Tensor};
+    use crate::testutil::Rng;
 
     fn seq_tensor(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
@@ -432,5 +1131,106 @@ mod tests {
         for (a, b) in yf.iter().zip(yq.iter()) {
             assert!((a - b).abs() < 0.1, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn tiled_f32_gemm_bit_matches_reference() {
+        let mut rng = Rng::new(0x7E57);
+        // odd sizes exercise the 4-way remainder and the k tail
+        for (rows, cols, cout) in [(3, 70, 5), (17, 129, 9), (33, 64, 4)] {
+            let x = rng.normal_vec(rows * cols, 1.0);
+            let w = rng.normal_vec(cout * cols, 0.3);
+            let col = Im2Col { rows, cols, data: x.clone() };
+            let mut a = vec![0.0f32; rows * cout];
+            gemm_f32(&col, &w, cout, &mut a, cout, 0);
+            let mut b = vec![0.0f32; rows * cout];
+            gemm_f32_tiled(&x, rows, cols, &w, cout, None, None, &mut b, cout, 0);
+            assert_eq!(a, b, "tiled f32 gemm drifted at {rows}x{cols}x{cout}");
+        }
+    }
+
+    #[test]
+    fn tiled_linear_bit_matches_reference() {
+        let mut rng = Rng::new(0x11E4);
+        let (rows, din, dout) = (7, 37, 11);
+        let w = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.2));
+        let b = Tensor::new(vec![dout], rng.normal_vec(dout, 0.5));
+        let x = rng.normal_vec(rows * din, 1.0);
+        let a = linear_f32(&x, rows, din, &w, Some(&b));
+        let t = linear_f32_tiled(&x, rows, din, &w.data, dout, Some(&b.data), None);
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn fused_conv_epilogue_matches_separate_ops() {
+        let mut rng = Rng::new(0xF00D);
+        let x = Tensor::new(vec![2, 3, 7, 7], rng.normal_vec(2 * 3 * 49, 1.0));
+        let w = Tensor::new(vec![6, 3, 3, 3], rng.normal_vec(6 * 27, 0.2));
+        let b = Tensor::new(vec![6], rng.normal_vec(6, 0.3));
+        let base = conv2d_f32(&x, &w, Some(&b), 1, 1, 1);
+        let relu_after = base.map(|v| Act::Relu.apply(v));
+        let fused = conv2d_f32_fused(&x, &w, Some(&b), 1, 1, 1, Some(Act::Relu));
+        assert_eq!(relu_after.data, fused.data);
+
+        // integer path: epilogue (bias + act inside the requant) must equal
+        // the unfused kernel followed by the activation
+        let qw = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+        let (sx, zx) = act_scale_zp(-3.0, 3.0);
+        let yq = conv2d_i8(&x, &qw, Some(&b), 1, 1, 1, sx, zx, RoundMode::TiesEven);
+        let yq_relu = yq.map(|v| Act::Relu.apply(v));
+        let sxw = premul_scales(&qw.scales, qw.shape[0], sx);
+        let yq_fused =
+            conv2d_i8_fused(&x, &qw, Some(&b), 1, 1, 1, sx, zx, RoundMode::TiesEven, &sxw, Some(Act::Relu));
+        assert_eq!(yq_relu.data, yq_fused.data);
+    }
+
+    #[test]
+    fn maxpool_all_padding_window_is_zero() {
+        // k=1 s=2 p=1 on a 1x1 input: every window lands in padding. The seed
+        // returned f32::MIN for those outputs.
+        let x = Tensor::new(vec![1, 1, 1, 1], vec![-5.0]);
+        let y = pool(&x, 1, 2, 1, true);
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        for &v in &y.data {
+            assert_eq!(v, 0.0, "all-padding max window must be 0.0, got {v}");
+        }
+        // windows that do cover real pixels are unchanged
+        let x2 = Tensor::new(vec![1, 1, 2, 2], vec![-1.0, -2.0, -3.0, -4.0]);
+        let y2 = pool(&x2, 2, 1, 1, true);
+        assert_eq!(y2.data[0], -1.0); // top-left window sees only x[0,0]
+    }
+
+    #[test]
+    fn aq_lut_matches_arithmetic_dequant() {
+        let (s, z) = act_scale_zp(-1.3, 2.7);
+        let lut = aq_lut(s, z);
+        let mut rng = Rng::new(0xA0);
+        let mut data = rng.normal_vec(512, 1.5);
+        let expect: Vec<f32> = data
+            .iter()
+            .map(|&v| {
+                let q = (RoundMode::TiesEven.round(v / s) + z as f32).clamp(0.0, 255.0);
+                (q - z as f32) * s
+            })
+            .collect();
+        quant_dequant_slice(&mut data, s, z, RoundMode::TiesEven, &lut);
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn gemm_i8_wrapper_matches_precomputed_path() {
+        let mut rng = Rng::new(0x18);
+        let (rows, cols, cout) = (9, 33, 6);
+        let xq: Vec<u8> = (0..rows * cols).map(|_| rng.below(256) as u8).collect();
+        let wq: Vec<i8> = (0..cout * cols).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let scales = vec![0.013f32; 1]; // per-tensor
+        let (sx, zx) = (0.02f32, 117);
+        let mut a = vec![0.0f32; rows * cout];
+        gemm_i8(&xq, rows, cols, &wq, cout, &scales, sx, zx, None, &mut a, cout, 0);
+        let rowsum = row_sums_of(&wq, cout);
+        let sxw = premul_scales(&scales, cout, sx);
+        let mut b = vec![0.0f32; rows * cout];
+        gemm_i8_dispatch(&xq, rows, cols, &wq, cout, &rowsum, &sxw, zx, None, None, &mut b, cout, 0);
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,545 @@
+//! Execution-plan layer: a one-time compile step that lowers a backend-
+//! compiled model into a flat instruction list the engine can execute with
+//! zero per-run graph interpretation overhead.
+//!
+//! What the plan precomputes (vs the legacy interpreter in `engine::mod`):
+//!
+//! * **weight resolution** — every conv/linear/attention weight, bias and
+//!   QWeight is resolved once into an index into the plan's arenas; no
+//!   `format!`-built string keys or `HashMap` lookups on the hot path, and
+//!   Int8-weight/float-activation deployments dequantize each weight once
+//!   instead of once per node per run.
+//! * **quantization constants** — per-node input (scale, zero_point), the
+//!   premultiplied per-channel dequant scales `sw*sx`, and a 256-entry
+//!   dequant LUT per `aq` node are fixed at plan time, like a real INT8
+//!   compiler stack's requantization parameters.
+//! * **memory plan** — liveness-based buffer-slot assignment replaces the
+//!   per-run `HashMap<String, Tensor>` + consumer-count bookkeeping; the
+//!   executor runs on a flat `Vec<Tensor>` of reusable slots, and
+//!   single-consumer pass-through ops (flatten/reshape/act/aq) move their
+//!   input instead of cloning it.
+//!
+//! Kernels are the planned forms in [`ops`]: parallel tiled GEMM on both
+//! precision paths with the fused bias+activation epilogue. The int8 path is
+//! bit-exact with the interpreter (asserted by `tests/plan_exactness.rs`);
+//! the f32 path keeps the reference kernels' per-output accumulation order,
+//! so it matches bit-for-bit too.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::ops::{self, Act};
+use crate::engine::{lowp, ActMode, CompiledModel, WeightMode, BN_EPS};
+use crate::qir::Node;
+use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
+
+/// One attention projection with its pre-resolved weights.
+enum ProjW {
+    F32(usize),
+    I8 { w: usize, sx: f32, zx: i32, round: RoundMode, sxw: Vec<f32> },
+}
+
+struct AttnProj {
+    w: ProjW,
+    b: usize,
+}
+
+/// Lowered node: every reference is an arena index, every constant is baked.
+enum POp {
+    Input,
+    ConvF32 {
+        w: usize,
+        bias: Option<usize>,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        act: Option<Act>,
+    },
+    ConvI8 {
+        w: usize,
+        bias: Option<usize>,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        act: Option<Act>,
+        sx: f32,
+        zx: i32,
+        round: RoundMode,
+        sxw: Vec<f32>,
+    },
+    LinearF32 { w: usize, bias: Option<usize>, din: usize, dout: usize, act: Option<Act> },
+    LinearI8 {
+        w: usize,
+        bias: Option<usize>,
+        din: usize,
+        act: Option<Act>,
+        sx: f32,
+        zx: i32,
+        round: RoundMode,
+        sxw: Vec<f32>,
+    },
+    Bn { scale: Vec<f32>, shift: Vec<f32> },
+    Act(Act),
+    Add,
+    Mul,
+    Pool { k: usize, stride: usize, pad: usize, is_max: bool },
+    Gap,
+    Upsample2x,
+    Concat,
+    Flatten,
+    Reshape { shape: Vec<usize> },
+    LayerNorm { d: usize, gamma: usize, beta: usize },
+    ToTokens,
+    TokMean,
+    Attention { d: usize, heads: usize, proj: [AttnProj; 4] },
+    Aq { scale: f32, zp: i32, round: RoundMode, lut: Box<[f32; 256]> },
+    AqNoop,
+}
+
+struct PlannedNode {
+    name: String,
+    in_slots: Vec<usize>,
+    out_slot: usize,
+    /// Input 0's last consumer is this node: the executor may move the
+    /// tensor out of its slot instead of cloning (pass-through ops only).
+    move0: bool,
+    op: POp,
+}
+
+/// A compiled execution plan: flat instruction list + weight arenas +
+/// buffer-reuse memory plan. Built once per `CompiledModel`, executed per
+/// request.
+pub struct ExecPlan {
+    act_mode: ActMode,
+    nodes: Vec<PlannedNode>,
+    slot_count: usize,
+    output_slots: Vec<usize>,
+    tensors: Vec<Tensor>,
+    qweights: Vec<QWeight>,
+}
+
+impl ExecPlan {
+    /// Lower a compiled model. Fails early (at deploy time, not request
+    /// time) on missing params, ranges, or unknown ops.
+    pub fn compile(model: &CompiledModel) -> Result<ExecPlan> {
+        let graph = &model.graph;
+        let mut b = Builder { tensors: Vec::new(), qweights: Vec::new() };
+        let mut remaining: HashMap<String, usize> = graph.consumer_counts();
+        let mut slot_of: HashMap<String, usize> = HashMap::new();
+        let mut free: Vec<usize> = Vec::new();
+        let mut slot_count = 0usize;
+        let mut nodes = Vec::with_capacity(graph.nodes.len());
+        for n in &graph.nodes {
+            let in_slots: Vec<usize> = n
+                .inputs
+                .iter()
+                .map(|i| {
+                    slot_of
+                        .get(i)
+                        .copied()
+                        .with_context(|| format!("plan: node {} reads unplanned input {i}", n.name))
+                })
+                .collect::<Result<_>>()?;
+            let op = b.lower(model, n)?;
+            // allocate the output slot before releasing inputs, so an output
+            // never aliases a buffer the kernel still reads
+            let out_slot = free.pop().unwrap_or_else(|| {
+                slot_count += 1;
+                slot_count - 1
+            });
+            slot_of.insert(n.name.clone(), out_slot);
+            let mut move0 = false;
+            for (idx, i) in n.inputs.iter().enumerate() {
+                if let Some(c) = remaining.get_mut(i.as_str()) {
+                    *c -= 1;
+                    if *c == 0 && !graph.outputs.contains(i) {
+                        free.push(slot_of[i.as_str()]);
+                        if idx == 0 && n.inputs.len() == 1 {
+                            move0 = true;
+                        }
+                    }
+                }
+            }
+            nodes.push(PlannedNode { name: n.name.clone(), in_slots, out_slot, move0, op });
+        }
+        let output_slots: Vec<usize> = graph
+            .outputs
+            .iter()
+            .map(|o| {
+                slot_of.get(o.as_str()).copied().with_context(|| format!("plan: missing output {o}"))
+            })
+            .collect::<Result<_>>()?;
+        Ok(ExecPlan {
+            act_mode: model.cfg.act_mode,
+            nodes,
+            slot_count,
+            output_slots,
+            tensors: b.tensors,
+            qweights: b.qweights,
+        })
+    }
+
+    /// Number of activation buffer slots the memory plan uses (vs one live
+    /// tensor per node without reuse) — exposed for tests and diagnostics.
+    pub fn slot_count(&self) -> usize {
+        self.slot_count
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Run the plan on one input batch.
+    pub fn execute(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let mut slots: Vec<Tensor> = vec![Tensor::default(); self.slot_count];
+        for node in &self.nodes {
+            let out = self.eval(node, &mut slots, x)?;
+            slots[node.out_slot] = out;
+        }
+        // outputs are moved out of the (about to be dropped) slot vector;
+        // clone only if the same slot is listed again later
+        let mut outs = Vec::with_capacity(self.output_slots.len());
+        for (i, &s) in self.output_slots.iter().enumerate() {
+            if self.output_slots[i + 1..].contains(&s) {
+                outs.push(slots[s].clone());
+            } else {
+                outs.push(std::mem::take(&mut slots[s]));
+            }
+        }
+        Ok(outs)
+    }
+
+    fn narrow(&self, mut t: Tensor) -> Tensor {
+        match self.act_mode {
+            ActMode::Bf16 => lowp::bf16_slice(&mut t.data),
+            ActMode::F16 => lowp::f16_slice(&mut t.data),
+            _ => {}
+        }
+        t
+    }
+
+    /// Take (move) or clone input 0, per the liveness plan.
+    fn grab(node: &PlannedNode, slots: &mut [Tensor]) -> Tensor {
+        if node.move0 {
+            std::mem::take(&mut slots[node.in_slots[0]])
+        } else {
+            slots[node.in_slots[0]].clone()
+        }
+    }
+
+    fn eval(&self, node: &PlannedNode, slots: &mut [Tensor], x: &Tensor) -> Result<Tensor> {
+        let out = match &node.op {
+            POp::Input => x.clone(),
+            POp::ConvF32 { w, bias, stride, pad, groups, act } => {
+                let a = &slots[node.in_slots[0]];
+                let bias = bias.map(|i| &self.tensors[i]);
+                let t = ops::conv2d_f32_fused(a, &self.tensors[*w], bias, *stride, *pad, *groups, *act);
+                self.narrow(t)
+            }
+            POp::ConvI8 { w, bias, stride, pad, groups, act, sx, zx, round, sxw } => {
+                let a = &slots[node.in_slots[0]];
+                let bias = bias.map(|i| &self.tensors[i]);
+                let t = ops::conv2d_i8_fused(
+                    a, &self.qweights[*w], bias, *stride, *pad, *groups, *sx, *zx, *round, sxw, *act,
+                );
+                self.narrow(t)
+            }
+            POp::LinearF32 { w, bias, din, dout, act } => {
+                let a = &slots[node.in_slots[0]];
+                let rows = a.len() / din;
+                let mut oshape = a.shape.clone();
+                *oshape.last_mut().unwrap() = *dout;
+                let bias = bias.map(|i| self.tensors[i].data.as_slice());
+                let data = ops::linear_f32_tiled(&a.data, rows, *din, &self.tensors[*w].data, *dout, bias, *act);
+                self.narrow(Tensor::new(oshape, data))
+            }
+            POp::LinearI8 { w, bias, din, act, sx, zx, round, sxw } => {
+                let a = &slots[node.in_slots[0]];
+                let rows = a.len() / din;
+                let qw = &self.qweights[*w];
+                let mut oshape = a.shape.clone();
+                *oshape.last_mut().unwrap() = qw.shape[0];
+                let bias = bias.map(|i| self.tensors[i].data.as_slice());
+                let data =
+                    ops::linear_i8_fused(&a.data, rows, *din, qw, bias, *sx, *zx, *round, sxw, *act);
+                self.narrow(Tensor::new(oshape, data))
+            }
+            POp::Bn { scale, shift } => {
+                let a = &slots[node.in_slots[0]];
+                self.narrow(ops::bn_apply(a, scale, shift))
+            }
+            POp::Act(f) => {
+                let mut t = Self::grab(node, slots);
+                for v in t.data.iter_mut() {
+                    *v = f.apply(*v);
+                }
+                self.narrow(t)
+            }
+            POp::Add => {
+                let (a, b) = (&slots[node.in_slots[0]], &slots[node.in_slots[1]]);
+                if a.shape != b.shape {
+                    bail!("add shape mismatch at {}", node.name);
+                }
+                let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x + y).collect();
+                self.narrow(Tensor::new(a.shape.clone(), data))
+            }
+            POp::Mul => {
+                let (a, b) = (&slots[node.in_slots[0]], &slots[node.in_slots[1]]);
+                self.narrow(ops::mul_gate(a, b))
+            }
+            POp::Pool { k, stride, pad, is_max } => {
+                let a = &slots[node.in_slots[0]];
+                self.narrow(ops::pool(a, *k, *stride, *pad, *is_max))
+            }
+            POp::Gap => self.narrow(ops::gap(&slots[node.in_slots[0]])),
+            POp::Upsample2x => ops::upsample2x(&slots[node.in_slots[0]]),
+            POp::Concat => {
+                ops::concat_channels(&slots[node.in_slots[0]], &slots[node.in_slots[1]])
+            }
+            POp::Flatten => {
+                let bsz = slots[node.in_slots[0]].shape[0];
+                let t = Self::grab(node, slots);
+                let rest = t.len() / bsz;
+                t.reshaped(&[bsz, rest])
+            }
+            POp::Reshape { shape } => {
+                let bsz = slots[node.in_slots[0]].shape[0];
+                let t = Self::grab(node, slots);
+                let mut s = vec![bsz];
+                s.extend(shape.iter());
+                t.reshaped(&s)
+            }
+            POp::LayerNorm { d, gamma, beta } => {
+                let a = &slots[node.in_slots[0]];
+                let g = &self.tensors[*gamma];
+                let b = &self.tensors[*beta];
+                self.narrow(ops::layernorm(a, *d, &g.data, &b.data))
+            }
+            POp::ToTokens => ops::to_tokens(&slots[node.in_slots[0]]),
+            POp::TokMean => self.narrow(ops::tokmean(&slots[node.in_slots[0]])),
+            POp::Attention { d, heads, proj } => {
+                let xt = &slots[node.in_slots[0]];
+                let (bsz, t) = (xt.shape[0], xt.shape[1]);
+                let rows = bsz * t;
+                let d = *d;
+                let run_proj = |p: &AttnProj, input: &[f32]| -> Vec<f32> {
+                    let bias = &self.tensors[p.b];
+                    match &p.w {
+                        ProjW::F32(i) => ops::linear_f32_tiled(
+                            input, rows, d, &self.tensors[*i].data, d, Some(&bias.data), None,
+                        ),
+                        ProjW::I8 { w, sx, zx, round, sxw } => ops::linear_i8_fused(
+                            input, rows, d, &self.qweights[*w], Some(&bias.data), *sx, *zx, *round,
+                            sxw, None,
+                        ),
+                    }
+                };
+                let q = run_proj(&proj[0], &xt.data);
+                let k = run_proj(&proj[1], &xt.data);
+                let v = run_proj(&proj[2], &xt.data);
+                let ctxt = ops::attention_ctx(&q, &k, &v, bsz, t, d, *heads);
+                let out = run_proj(&proj[3], &ctxt);
+                self.narrow(Tensor::new(vec![bsz, t, d], out))
+            }
+            POp::Aq { scale, zp, round, lut } => {
+                // static requantization point through the 256-entry dequant LUT
+                let mut t = Self::grab(node, slots);
+                ops::quant_dequant_slice(&mut t.data, *scale, *zp, *round, lut);
+                t
+            }
+            POp::AqNoop => {
+                let t = Self::grab(node, slots);
+                self.narrow(t)
+            }
+        };
+        Ok(out)
+    }
+}
+
+/// Arena builder for plan compilation.
+struct Builder {
+    tensors: Vec<Tensor>,
+    qweights: Vec<QWeight>,
+}
+
+impl Builder {
+    fn add_t(&mut self, t: Tensor) -> usize {
+        self.tensors.push(t);
+        self.tensors.len() - 1
+    }
+
+    fn add_q(&mut self, q: QWeight) -> usize {
+        self.qweights.push(q);
+        self.qweights.len() - 1
+    }
+
+    fn param(&mut self, model: &CompiledModel, key: &str) -> Result<usize> {
+        let t = model.params.get(key).with_context(|| format!("plan: missing param {key}"))?.clone();
+        Ok(self.add_t(t))
+    }
+
+    fn attn_proj(
+        &mut self,
+        model: &CompiledModel,
+        n: &Node,
+        mat: &str,
+        bias: &str,
+        d: usize,
+        iq: Option<(f32, i32, RoundMode)>,
+    ) -> Result<AttnProj> {
+        let b = self.param(model, &format!("{}.{bias}", n.name))?;
+        let wkey = format!("{}.{mat}", n.name);
+        let w = match (model.cfg.weight_mode, iq, model.qweights.get(&wkey)) {
+            (WeightMode::Int8, Some((sx, zx, round)), Some(qw)) => {
+                let sxw = ops::premul_scales(&qw.scales, d, sx);
+                ProjW::I8 { w: self.add_q(qw.clone()), sx, zx, round, sxw }
+            }
+            _ => ProjW::F32(self.add_t(model.weight_tensor(&wkey)?)),
+        };
+        Ok(AttnProj { w, b })
+    }
+
+    fn lower(&mut self, model: &CompiledModel, n: &Node) -> Result<POp> {
+        Ok(match n.kind.as_str() {
+            "input" => POp::Input,
+            "conv2d" => {
+                let stride = n.attr_usize("stride")?;
+                let pad = n.attr_usize("pad")?;
+                let groups = n.attr_usize("groups")?;
+                let act = Act::from_attr(n)?;
+                let bias = if n.attr_bool("bias") {
+                    Some(
+                        self.param(model, &format!("{}.b", n.name))
+                            .with_context(|| format!("plan: conv {} bias", n.name))?,
+                    )
+                } else {
+                    None
+                };
+                let wkey = format!("{}.w", n.name);
+                match (model.cfg.weight_mode, model.int8_round(), model.qweights.get(&wkey)) {
+                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                        let (sx, zx) = model.input_qparams(&n.inputs[0])?;
+                        let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
+                        let qw = qw.clone();
+                        POp::ConvI8 {
+                            w: self.add_q(qw),
+                            bias,
+                            stride,
+                            pad,
+                            groups,
+                            act,
+                            sx,
+                            zx,
+                            round,
+                            sxw,
+                        }
+                    }
+                    _ => {
+                        let w = model.weight_tensor(&wkey)?;
+                        POp::ConvF32 { w: self.add_t(w), bias, stride, pad, groups, act }
+                    }
+                }
+            }
+            "linear" => {
+                let din = n.attr_usize("din")?;
+                let dout = n.attr_usize("dout")?;
+                let act = Act::from_attr(n)?;
+                // mirror the interpreter's leniency: bias attr without a
+                // stored bias tensor degrades to no bias
+                let bias = if n.attr_bool("bias") {
+                    model.params.get(&format!("{}.b", n.name)).cloned().map(|t| self.add_t(t))
+                } else {
+                    None
+                };
+                let wkey = format!("{}.w", n.name);
+                match (model.cfg.weight_mode, model.int8_round(), model.qweights.get(&wkey)) {
+                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                        let (sx, zx) = model.input_qparams(&n.inputs[0])?;
+                        let sxw = ops::premul_scales(&qw.scales, dout, sx);
+                        let qw = qw.clone();
+                        POp::LinearI8 { w: self.add_q(qw), bias, din, act, sx, zx, round, sxw }
+                    }
+                    _ => {
+                        let w = model.weight_tensor(&wkey)?;
+                        POp::LinearF32 { w: self.add_t(w), bias, din, dout, act }
+                    }
+                }
+            }
+            "bn" => {
+                let g = model
+                    .params
+                    .get(&format!("{}.gamma", n.name))
+                    .with_context(|| format!("plan: bn {} gamma", n.name))?;
+                let beta = model
+                    .params
+                    .get(&format!("{}.beta", n.name))
+                    .with_context(|| format!("plan: bn {} beta", n.name))?;
+                let mean = model
+                    .bn
+                    .get(&format!("{}.mean", n.name))
+                    .with_context(|| format!("plan: bn {} mean", n.name))?;
+                let var = model
+                    .bn
+                    .get(&format!("{}.var", n.name))
+                    .with_context(|| format!("plan: bn {} var", n.name))?;
+                let (scale, shift) =
+                    ops::bn_fold_params(&g.data, &beta.data, &mean.data, &var.data, BN_EPS);
+                POp::Bn { scale, shift }
+            }
+            kind @ ("relu" | "relu6" | "hswish" | "hsigmoid" | "sigmoid" | "silu" | "gelu") => {
+                POp::Act(Act::from_kind(kind).expect("covered by match"))
+            }
+            "add" => POp::Add,
+            "mul" => POp::Mul,
+            "maxpool" | "avgpool" => POp::Pool {
+                k: n.attr_usize("k")?,
+                stride: n.attr_usize("stride")?,
+                pad: n.attr_usize("pad")?,
+                is_max: n.kind == "maxpool",
+            },
+            "gap" => POp::Gap,
+            "upsample2x" => POp::Upsample2x,
+            "concat" => POp::Concat,
+            "flatten" => POp::Flatten,
+            "reshape" => POp::Reshape { shape: n.shape.clone() },
+            "layernorm" => POp::LayerNorm {
+                d: n.attr_usize("d")?,
+                gamma: self.param(model, &format!("{}.gamma", n.name))?,
+                beta: self.param(model, &format!("{}.beta", n.name))?,
+            },
+            "to_tokens" => POp::ToTokens,
+            "tokmean" => POp::TokMean,
+            "attention" => {
+                let d = n.attr_usize("d")?;
+                let heads = n.attr_usize("heads")?;
+                let iq = match (model.cfg.weight_mode, model.int8_round()) {
+                    (WeightMode::Int8, Some(round)) => {
+                        let (sx, zx) = model.input_qparams(&n.inputs[0])?;
+                        Some((sx, zx, round))
+                    }
+                    _ => None,
+                };
+                let proj = [
+                    self.attn_proj(model, n, "wq", "qb", d, iq)?,
+                    self.attn_proj(model, n, "wk", "kb", d, iq)?,
+                    self.attn_proj(model, n, "wv", "vb", d, iq)?,
+                    self.attn_proj(model, n, "wo", "ob", d, iq)?,
+                ];
+                POp::Attention { d, heads, proj }
+            }
+            "aq" => match model.int8_round() {
+                Some(round) => {
+                    let &(lo, hi) = model
+                        .act_ranges
+                        .get(&n.name)
+                        .with_context(|| format!("plan: no range for aq {}", n.name))?;
+                    let (s, z) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+                    POp::Aq { scale: s, zp: z, round, lut: Box::new(ops::aq_lut(s, z)) }
+                }
+                None => POp::AqNoop,
+            },
+            other => bail!("plan: unknown node kind {other:?}"),
+        })
+    }
+}

@@ -2,6 +2,10 @@
 //!
 //! * `fold_bn` — fold BatchNorm (running stats) into the preceding conv,
 //!   the universal first step of every NPU toolchain.
+//! * `fuse_conv_act` / `fuse_conv_bn_act` — tag a conv's sole-consumer
+//!   activation as an `act=` attribute so the engine runs it in the GEMM
+//!   epilogue (including the i8 requantization epilogue), exactly as real
+//!   INT8 compiler stacks lower conv→bn→activation.
 //! * `cross_layer_equalization` — rescale adjacent conv channel ranges
 //!   (Nagel et al.; the "Equalization" half of the paper's Table 3 baseline).
 
@@ -116,6 +120,73 @@ pub fn fold_bn(
     Ok((g, new_params, factors))
 }
 
+/// Activations the engine can run in a conv's GEMM epilogue (one definition
+/// with `engine::ops::Act`; `Act::from_kind` accepts exactly these).
+const FUSABLE_ACTS: &[&str] = &["relu", "relu6", "hswish", "hsigmoid", "sigmoid", "silu", "gelu"];
+
+/// Fuse every `conv2d -> activation` pair where the activation is the conv's
+/// sole consumer: the activation node is dropped, the conv is tagged with an
+/// `act=<kind>` attribute, and consumers are rewired to the conv. Numerics
+/// are unchanged (same scalar function, applied in the kernel epilogue);
+/// the node count — and with it the modelled per-op dispatch overhead —
+/// shrinks. Returns the rewritten graph and the number of fused pairs.
+pub fn fuse_conv_act(graph: &Graph) -> Result<(Graph, usize)> {
+    let counts = graph.consumer_counts();
+    // act node name -> conv node name, and conv -> act kind
+    let mut fused: BTreeMap<String, String> = BTreeMap::new();
+    let mut conv_act: BTreeMap<String, String> = BTreeMap::new();
+    for n in &graph.nodes {
+        if !FUSABLE_ACTS.contains(&n.kind.as_str()) {
+            continue;
+        }
+        let Some(prod) = graph.node(&n.inputs[0]) else { continue };
+        if prod.kind != "conv2d" || counts.get(&prod.name).copied().unwrap_or(0) != 1 {
+            continue;
+        }
+        if prod.attrs.contains_key("act") || conv_act.contains_key(&prod.name) {
+            continue;
+        }
+        fused.insert(n.name.clone(), prod.name.clone());
+        conv_act.insert(prod.name.clone(), n.kind.clone());
+    }
+    let mut nodes: Vec<Node> = Vec::new();
+    for n in &graph.nodes {
+        if fused.contains_key(&n.name) {
+            continue;
+        }
+        let mut n2 = n.clone();
+        if let Some(kind) = conv_act.get(&n2.name) {
+            n2.attrs.insert("act".into(), kind.clone());
+        }
+        for i in n2.inputs.iter_mut() {
+            if let Some(conv) = fused.get(i) {
+                *i = conv.clone();
+            }
+        }
+        nodes.push(n2);
+    }
+    let outputs = graph
+        .outputs
+        .iter()
+        .map(|o| fused.get(o).cloned().unwrap_or_else(|| o.clone()))
+        .collect();
+    let nf = fused.len();
+    Ok((rebuild(graph.name.clone(), nodes, outputs)?, nf))
+}
+
+/// The standard vendor lowering: BN fold, then conv+activation fusion.
+/// Returns the lowered graph, transformed params, the BN fold factors, and
+/// the number of fused activations.
+pub fn fuse_conv_bn_act(
+    graph: &Graph,
+    params: &BTreeMap<String, Tensor>,
+    bn: &BTreeMap<String, Tensor>,
+) -> Result<(Graph, BTreeMap<String, Tensor>, FoldFactors, usize)> {
+    let (g, p, factors) = fold_bn(graph, params, bn)?;
+    let (g2, fused) = fuse_conv_act(&g)?;
+    Ok((g2, p, factors, fused))
+}
+
 /// Cross-layer equalization on conv->act->conv chains (groups=1 both sides).
 /// Scales output channel c of conv1 by 1/s and input channel c of conv2 by s,
 /// s = sqrt(r1_c / r2_c), valid through ReLU-family activations and aq nodes.
@@ -128,6 +199,16 @@ pub fn cross_layer_equalization(
     for n in &graph.nodes {
         if n.kind != "conv2d" || n.attr_usize("groups").unwrap_or(1) != 1 {
             continue;
+        }
+        // only relu-family epilogues are eligible, matching the chain walk
+        // below: exact for relu (positively homogeneous); relu6 is the
+        // standard CLE approximation (Nagel et al. apply equalization to
+        // ReLU6 nets accepting that the clamp point moves) — anything else
+        // (sigmoid-family, gelu) would change the function outright
+        if let Some(a) = n.attrs.get("act") {
+            if a != "relu" && a != "relu6" {
+                continue;
+            }
         }
         // walk a single-consumer chain through relu/relu6/aq to the next conv
         let mut cur = n.name.clone();
@@ -249,6 +330,43 @@ mod tests {
         for (a, b) in y0[0].data.iter().zip(y1[0].data.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn conv_bn_act_fusion_preserves_fp32_outputs() {
+        // conv+bn+relu folded+fused graph must compute the same function as
+        // the unfused graph in FP32 (the fusion half is numerically exact;
+        // the BN fold carries the usual rearrangement tolerance)
+        let g = demo_graph();
+        let (params, bn) = demo_state();
+        let x = Tensor::new(vec![2, 2, 4, 4], (0..64).map(|i| (i as f32) * 0.07 - 2.0).collect());
+        let y0 = fp32_model(g.clone(), params.clone(), bn.clone()).run(&x).unwrap();
+        let (g2, p2, _facs, fused) = fuse_conv_bn_act(&g, &params, &bn).unwrap();
+        assert_eq!(fused, 1, "relu should fuse into the folded conv");
+        assert!(g2.node("b").is_none() && g2.node("r").is_none(), "bn and relu nodes must be gone");
+        let conv = g2.node("c").unwrap();
+        assert_eq!(conv.attrs.get("act").map(|s| s.as_str()), Some("relu"));
+        assert_eq!(g2.outputs, vec!["c".to_string()], "graph output rewired to the fused conv");
+        let y1 = fp32_model(g2, p2, BTreeMap::new()).run(&x).unwrap();
+        for (a, b) in y0[0].data.iter().zip(y1[0].data.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fusion_skips_multi_consumer_convs() {
+        // conv output feeds both relu and add: must NOT fuse
+        let g = Graph::parse(
+            "qir m v1\noutputs s\n\
+             node input image inputs=- shape=2,4,4\n\
+             node conv2d c inputs=image shape=2,4,4 bias=0 cin=2 cout=2 groups=1 kh=1 kw=1 pad=0 stride=1\n\
+             node relu r inputs=c shape=2,4,4\n\
+             node add s inputs=r,c shape=2,4,4\n",
+        )
+        .unwrap();
+        let (g2, fused) = fuse_conv_act(&g).unwrap();
+        assert_eq!(fused, 0);
+        assert!(g2.node("r").is_some());
     }
 
     #[test]

@@ -16,6 +16,13 @@ pub struct Tensor {
     pub data: Vec<f32>,
 }
 
+impl Default for Tensor {
+    /// Empty tensor — the vacant state of an execution-plan buffer slot.
+    fn default() -> Self {
+        Tensor { shape: vec![0], data: Vec::new() }
+    }
+}
+
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());

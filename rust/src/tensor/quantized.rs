@@ -50,9 +50,21 @@ pub struct QWeight {
     pub data: Vec<i8>,
     /// One scale per output channel (len == shape[0]) or a single scale.
     pub scales: Vec<f32>,
+    /// Per-output-channel sums of the i8 payload (len == shape[0]), fixed at
+    /// quantize time. This is the zero-point correction term of the integer
+    /// GEMM ( sum((xq-zx)*wq) = sum(xq*wq) - zx*rowsum_w ); precomputing it
+    /// here means no kernel ever re-walks the weights at run time.
+    pub row_sums: Vec<i32>,
 }
 
 impl QWeight {
+    /// Assemble a QWeight from raw parts, computing the row sums.
+    pub fn from_parts(shape: Vec<usize>, data: Vec<i8>, scales: Vec<f32>) -> QWeight {
+        let cout = if shape.is_empty() { 1 } else { shape[0] };
+        let row_sums = row_sums_of(&data, cout.max(1));
+        QWeight { shape, data, scales, row_sums }
+    }
+
     /// Quantize a float weight tensor (output channels on axis 0).
     pub fn quantize(w: &Tensor, scheme: QuantScheme, round: RoundMode) -> QWeight {
         let cout = if w.shape.is_empty() { 1 } else { w.shape[0] };
@@ -78,7 +90,7 @@ impl QWeight {
                 data[c * per + i] = q as i8;
             }
         }
-        QWeight { shape: w.shape.clone(), data, scales }
+        QWeight::from_parts(w.shape.clone(), data, scales)
     }
 
     /// Quantize with externally supplied scales (e.g. embedded QAT scales
@@ -94,7 +106,7 @@ impl QWeight {
                 data[c * per + i] = q as i8;
             }
         }
-        QWeight { shape: w.shape.clone(), data, scales: scales.to_vec() }
+        QWeight::from_parts(w.shape.clone(), data, scales.to_vec())
     }
 
     pub fn scale(&self, c: usize) -> f32 {
@@ -114,6 +126,17 @@ impl QWeight {
         }
         Tensor::new(self.shape.clone(), out)
     }
+}
+
+/// Per-output-channel i8 row sums (`cout` rows of `data.len()/cout` each).
+pub fn row_sums_of(data: &[i8], cout: usize) -> Vec<i32> {
+    if data.is_empty() {
+        return vec![0; cout];
+    }
+    let per = data.len() / cout;
+    (0..cout)
+        .map(|c| data[c * per..(c + 1) * per].iter().map(|&w| w as i32).sum())
+        .collect()
 }
 
 /// Quantized activation tensor: u8 payload + per-tensor (scale, zero point).
@@ -203,6 +226,19 @@ mod tests {
         assert_eq!(RoundMode::TiesEven.round(2.5), 2.0);
         assert_eq!(RoundMode::HalfAway.round(2.5), 3.0);
         assert_eq!(RoundMode::TiesEven.round(3.5), 4.0);
+    }
+
+    #[test]
+    fn row_sums_fixed_at_quantize_time() {
+        let w = t(&[2, 3], vec![0.5, -0.25, 0.1, 1.0, -1.0, 0.75]);
+        let q = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+        assert_eq!(q.row_sums.len(), 2);
+        for c in 0..2 {
+            let s: i32 = q.data[c * 3..(c + 1) * 3].iter().map(|&v| v as i32).sum();
+            assert_eq!(q.row_sums[c], s);
+        }
+        let q2 = QWeight::from_parts(q.shape.clone(), q.data.clone(), q.scales.clone());
+        assert_eq!(q2.row_sums, q.row_sums);
     }
 
     #[test]

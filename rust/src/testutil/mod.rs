@@ -1,6 +1,10 @@
-//! Test support: deterministic PRNG + a small property-testing harness
+//! Test support: deterministic PRNG, a small property-testing harness
 //! (the vendored crate set has no proptest; this covers the invariant-sweep
-//! use cases we need, with shrinking on failure for scalar cases).
+//! use cases we need, with shrinking on failure for scalar cases), and
+//! seeded synthetic models ([`synth`]) for engine tests/benches that must
+//! run without exported artifacts.
+
+pub mod synth;
 
 /// xorshift64* — deterministic, dependency-free PRNG.
 #[derive(Clone, Debug)]

@@ -1,0 +1,163 @@
+//! Synthetic deterministic models for engine tests and benches: a small
+//! ResNet-style conv net (residual add, maxpool padding, depthwise conv,
+//! SE gate, aq requant point) and a ViT-style transformer block
+//! (to_tokens, layernorm, attention, gelu MLP, tokmean). Weights are
+//! seeded, so two builds are bit-identical — these stand in for exported
+//! artifacts when `make artifacts` has not run (the planned-vs-interpreted
+//! exactness suite and the engine_hotpath bench both run on them).
+
+use std::collections::BTreeMap;
+
+use crate::qir::Graph;
+use crate::tensor::Tensor;
+use crate::testutil::Rng;
+
+pub struct SynthModel {
+    pub graph: Graph,
+    pub params: BTreeMap<String, Tensor>,
+    pub bn: BTreeMap<String, Tensor>,
+}
+
+fn normal_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), rng.normal_vec(n, std))
+}
+
+fn bn_state(
+    rng: &mut Rng,
+    params: &mut BTreeMap<String, Tensor>,
+    bn: &mut BTreeMap<String, Tensor>,
+    name: &str,
+    c: usize,
+) {
+    let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+    let beta: Vec<f32> = (0..c).map(|_| 0.1 * rng.normal()).collect();
+    let mean: Vec<f32> = (0..c).map(|_| 0.05 * rng.normal()).collect();
+    let var: Vec<f32> = (0..c).map(|_| 0.5 + rng.normal().abs() * 0.5).collect();
+    params.insert(format!("{name}.gamma"), Tensor::new(vec![c], gamma));
+    params.insert(format!("{name}.beta"), Tensor::new(vec![c], beta));
+    bn.insert(format!("{name}.mean"), Tensor::new(vec![c], mean));
+    bn.insert(format!("{name}.var"), Tensor::new(vec![c], var));
+}
+
+/// ResNet-style conv net on a `3 x hw x hw` image (`hw` divisible by 4)
+/// with `c` channels: conv+bn+relu stem, padded maxpool, residual block with
+/// an `aq` requant point, depthwise conv + hswish, an SE gate
+/// (gap→1x1 conv→hsigmoid→mul), avgpool, gap, linear head (10 classes).
+/// Tests use small widths; the engine_hotpath bench uses a wide variant so
+/// the GEMMs cross the parallel-dispatch threshold.
+pub fn resnet_like(hw: usize, c: usize) -> SynthModel {
+    assert!(hw >= 8 && hw % 4 == 0, "hw must be >= 8 and divisible by 4");
+    assert!(c >= 8, "c must be >= 8");
+    let h2 = hw / 2;
+    let h4 = h2 / 2;
+    let text = format!(
+        "qir synthres v1\noutputs head\n\
+         node input image inputs=- shape=3,{hw},{hw}\n\
+         node conv2d c1 inputs=image shape={c},{hw},{hw} bias=0 cin=3 cout={c} groups=1 kh=3 kw=3 pad=1 stride=1\n\
+         node bn b1 inputs=c1 shape={c},{hw},{hw} c={c}\n\
+         node relu r1 inputs=b1 shape={c},{hw},{hw}\n\
+         node maxpool mp inputs=r1 shape={c},{h2},{h2} k=3 stride=2 pad=1\n\
+         node conv2d c2 inputs=mp shape={c},{h2},{h2} bias=0 cin={c} cout={c} groups=1 kh=3 kw=3 pad=1 stride=1\n\
+         node bn b2 inputs=c2 shape={c},{h2},{h2} c={c}\n\
+         node relu r2 inputs=b2 shape={c},{h2},{h2}\n\
+         node aq q1 inputs=r2 shape={c},{h2},{h2}\n\
+         node conv2d c3 inputs=q1 shape={c},{h2},{h2} bias=1 cin={c} cout={c} groups=1 kh=3 kw=3 pad=1 stride=1\n\
+         node bn b3 inputs=c3 shape={c},{h2},{h2} c={c}\n\
+         node add a1 inputs=b3,mp shape={c},{h2},{h2}\n\
+         node relu r3 inputs=a1 shape={c},{h2},{h2}\n\
+         node conv2d cdw inputs=r3 shape={c},{h2},{h2} bias=0 cin={c} cout={c} groups={c} kh=3 kw=3 pad=1 stride=1\n\
+         node hswish hs inputs=cdw shape={c},{h2},{h2}\n\
+         node gap seg inputs=hs shape={c},1,1\n\
+         node conv2d sefc inputs=seg shape={c},1,1 bias=1 cin={c} cout={c} groups=1 kh=1 kw=1 pad=0 stride=1\n\
+         node hsigmoid seh inputs=sefc shape={c},1,1\n\
+         node mul sem inputs=hs,seh shape={c},{h2},{h2}\n\
+         node avgpool ap inputs=sem shape={c},{h4},{h4} k=2 stride=2 pad=0\n\
+         node gap g1 inputs=ap shape={c},1,1\n\
+         node flatten f1 inputs=g1 shape={c}\n\
+         node linear head inputs=f1 shape=10 bias=1 din={c} dout=10\n"
+    );
+    let graph = Graph::parse(&text).expect("synth resnet graph parses");
+    let mut rng = Rng::new(0x5EED_0001);
+    let mut params = BTreeMap::new();
+    let mut bn = BTreeMap::new();
+    params.insert("c1.w".into(), normal_t(&mut rng, &[c, 3, 3, 3], 0.15));
+    bn_state(&mut rng, &mut params, &mut bn, "b1", c);
+    params.insert("c2.w".into(), normal_t(&mut rng, &[c, c, 3, 3], 0.08));
+    bn_state(&mut rng, &mut params, &mut bn, "b2", c);
+    params.insert("c3.w".into(), normal_t(&mut rng, &[c, c, 3, 3], 0.08));
+    params.insert("c3.b".into(), normal_t(&mut rng, &[c], 0.05));
+    bn_state(&mut rng, &mut params, &mut bn, "b3", c);
+    params.insert("cdw.w".into(), normal_t(&mut rng, &[c, 1, 3, 3], 0.2));
+    params.insert("sefc.w".into(), normal_t(&mut rng, &[c, c, 1, 1], 0.15));
+    params.insert("sefc.b".into(), normal_t(&mut rng, &[c], 0.1));
+    params.insert("head.w".into(), normal_t(&mut rng, &[10, c], 0.2));
+    params.insert("head.b".into(), normal_t(&mut rng, &[10], 0.05));
+    SynthModel { graph, params, bn }
+}
+
+/// ViT-style block on a 3x8x8 image: patch-embed conv, to_tokens,
+/// pre-norm attention with residual, gelu MLP with residual, tokmean,
+/// linear head (10 classes).
+pub fn vit_like() -> SynthModel {
+    let d = 32usize;
+    let text = format!(
+        "qir synthvit v1\noutputs head\n\
+         node input image inputs=- shape=3,8,8\n\
+         node conv2d pe inputs=image shape={d},2,2 bias=1 cin=3 cout={d} groups=1 kh=4 kw=4 pad=0 stride=4\n\
+         node to_tokens tok inputs=pe shape=4,{d}\n\
+         node layernorm ln1 inputs=tok shape=4,{d} d={d}\n\
+         node attention att inputs=ln1 shape=4,{d} d={d} heads=4\n\
+         node add ra inputs=att,tok shape=4,{d}\n\
+         node layernorm ln2 inputs=ra shape=4,{d} d={d}\n\
+         node linear mlp inputs=ln2 shape=4,{d} bias=1 din={d} dout={d}\n\
+         node gelu gl inputs=mlp shape=4,{d}\n\
+         node add rb inputs=gl,ra shape=4,{d}\n\
+         node tokmean tm inputs=rb shape={d}\n\
+         node linear head inputs=tm shape=10 bias=1 din={d} dout=10\n"
+    );
+    let graph = Graph::parse(&text).expect("synth vit graph parses");
+    let mut rng = Rng::new(0x5EED_0002);
+    let mut params = BTreeMap::new();
+    params.insert("pe.w".into(), normal_t(&mut rng, &[d, 3, 4, 4], 0.12));
+    params.insert("pe.b".into(), normal_t(&mut rng, &[d], 0.05));
+    for ln in ["ln1", "ln2"] {
+        let gamma: Vec<f32> = (0..d).map(|_| 1.0 + 0.05 * rng.normal()).collect();
+        let beta: Vec<f32> = (0..d).map(|_| 0.05 * rng.normal()).collect();
+        params.insert(format!("{ln}.gamma"), Tensor::new(vec![d], gamma));
+        params.insert(format!("{ln}.beta"), Tensor::new(vec![d], beta));
+    }
+    for (mat, bias) in [("wq", "qb"), ("wk", "kb"), ("wv", "vb"), ("wo", "ob")] {
+        params.insert(format!("att.{mat}"), normal_t(&mut rng, &[d, d], 0.12));
+        params.insert(format!("att.{bias}"), normal_t(&mut rng, &[d], 0.02));
+    }
+    params.insert("mlp.w".into(), normal_t(&mut rng, &[d, d], 0.12));
+    params.insert("mlp.b".into(), normal_t(&mut rng, &[d], 0.02));
+    params.insert("head.w".into(), normal_t(&mut rng, &[10, d], 0.2));
+    params.insert("head.b".into(), normal_t(&mut rng, &[10], 0.05));
+    SynthModel { graph, params, bn: BTreeMap::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::fp32_model;
+
+    #[test]
+    fn synth_models_run_and_are_deterministic() {
+        let sm = resnet_like(16, 16);
+        let x = Tensor::new(vec![2, 3, 16, 16], Rng::new(7).normal_vec(2 * 3 * 256, 1.0));
+        let m = fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone());
+        let y = m.run(&x).unwrap();
+        assert_eq!(y[0].shape, vec![2, 10]);
+        let sm2 = resnet_like(16, 16);
+        assert_eq!(sm.params["c1.w"].data, sm2.params["c1.w"].data);
+
+        let sv = vit_like();
+        let xv = Tensor::new(vec![2, 3, 8, 8], Rng::new(9).normal_vec(2 * 3 * 64, 1.0));
+        let mv = fp32_model(sv.graph.clone(), sv.params.clone(), BTreeMap::new());
+        let yv = mv.run(&xv).unwrap();
+        assert_eq!(yv[0].shape, vec![2, 10]);
+        assert!(yv[0].data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,207 @@
+//! Regression: the plan-based executor must reproduce the legacy
+//! interpreter on every `ExecConfig` — F32/Bf16/F16/Int8 activations ×
+//! F32/Int8 weights — on a ResNet-style conv net and a ViT-style
+//! transformer graph. The int8 path is asserted BIT-EXACT (equality, not
+//! tolerance); the float paths keep the reference kernels' accumulation
+//! order and are asserted exact-within-1e-6 relative.
+
+use std::collections::{BTreeMap, HashMap};
+
+use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::calib::{calibrate, CalibMethod};
+use quant_trim::engine::{fp32_model, ActMode, CompiledModel, ExecConfig, WeightMode};
+use quant_trim::perfmodel::Precision;
+use quant_trim::qir::passes;
+use quant_trim::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
+use quant_trim::testutil::synth::{self, SynthModel};
+use quant_trim::testutil::Rng;
+
+/// Quantize every weight-bearing node of a graph.
+fn quantize_weights(
+    graph: &quant_trim::qir::Graph,
+    params: &BTreeMap<String, Tensor>,
+    scheme: QuantScheme,
+    round: RoundMode,
+) -> HashMap<String, QWeight> {
+    let mut q = HashMap::new();
+    for n in graph.weight_nodes() {
+        let keys: Vec<String> = match n.kind.as_str() {
+            "attention" => ["wq", "wk", "wv", "wo"].iter().map(|m| format!("{}.{m}", n.name)).collect(),
+            _ => vec![format!("{}.w", n.name)],
+        };
+        for key in keys {
+            if let Some(w) = params.get(&key) {
+                q.insert(key, QWeight::quantize(w, scheme, round));
+            }
+        }
+    }
+    q
+}
+
+/// Calibrated ranges for every node (MinMax over a couple of batches).
+fn ranges_for(
+    graph: &quant_trim::qir::Graph,
+    params: &BTreeMap<String, Tensor>,
+    batches: &[Tensor],
+) -> HashMap<String, (f32, f32)> {
+    let fp = fp32_model(graph.clone(), params.clone(), BTreeMap::new());
+    calibrate(&fp, batches, CalibMethod::MinMax).unwrap().ranges
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let scale = a.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+    a.iter().zip(b.iter()).fold(0.0f32, |m, (x, y)| m.max((x - y).abs())) / scale
+}
+
+/// Run the full ExecConfig matrix on one lowered graph and compare the
+/// planned executor against the interpreter.
+fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
+    // lower like a vendor backend: fold BN + fuse activations
+    let (graph, params, _factors, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let n: usize = input_shape.iter().product();
+    let mut rng = Rng::new(0xE8A7);
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(input_shape.to_vec(), rng.normal_vec(n, 1.0))).collect();
+    let ranges = ranges_for(&graph, &params, &batches);
+    let q_perchan = quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+    let q_pertensor = quantize_weights(&graph, &params, QuantScheme::PerTensorSym, RoundMode::HalfAway);
+    let x = Tensor::new(input_shape.to_vec(), rng.normal_vec(n, 1.0));
+
+    let act_modes = [
+        ActMode::F32,
+        ActMode::Bf16,
+        ActMode::F16,
+        ActMode::Int8 { round: RoundMode::TiesEven },
+    ];
+    for weight_mode in [WeightMode::F32, WeightMode::Int8] {
+        for act_mode in act_modes {
+            let cfg = ExecConfig { weight_mode, act_mode };
+            let model = CompiledModel::new(
+                graph.clone(),
+                params.clone(),
+                BTreeMap::new(),
+                q_perchan.clone(),
+                ranges.clone(),
+                cfg,
+            );
+            let interp = model.run_interpreted(&x).unwrap();
+            let planned = model.run(&x).unwrap();
+            assert_eq!(interp.len(), planned.len());
+            for (a, b) in interp.iter().zip(planned.iter()) {
+                assert_eq!(a.shape, b.shape, "{label} {cfg:?}: shape mismatch");
+                if weight_mode == WeightMode::Int8 && matches!(act_mode, ActMode::Int8 { .. }) {
+                    // the integer engine: bit-exact, asserted as equality
+                    assert_eq!(
+                        a.data, b.data,
+                        "{label} {cfg:?}: planned int8 executor must be bit-exact"
+                    );
+                } else {
+                    let err = max_rel_err(&a.data, &b.data);
+                    assert!(err <= 1e-6, "{label} {cfg:?}: plan drifted, rel err {err}");
+                }
+            }
+        }
+    }
+
+    // restrictive-NPU flavor: per-tensor weights + DSP rounding, int8 path
+    let cfg = ExecConfig {
+        weight_mode: WeightMode::Int8,
+        act_mode: ActMode::Int8 { round: RoundMode::HalfAway },
+    };
+    let model = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        q_pertensor,
+        ranges.clone(),
+        cfg,
+    );
+    let interp = model.run_interpreted(&x).unwrap();
+    let planned = model.run(&x).unwrap();
+    for (a, b) in interp.iter().zip(planned.iter()) {
+        assert_eq!(a.data, b.data, "{label}: per-tensor/half-away int8 must be bit-exact");
+    }
+}
+
+#[test]
+fn plan_matches_interpreter_resnet_style() {
+    check_matrix(&synth::resnet_like(16, 16), &[2, 3, 16, 16], "resnet-like");
+}
+
+#[test]
+fn plan_matches_interpreter_vit_style() {
+    check_matrix(&synth::vit_like(), &[2, 3, 8, 8], "vit-like");
+}
+
+#[test]
+fn plan_matches_interpreter_on_unfused_graph_with_bn() {
+    // the raw (un-lowered) graph still carries bn nodes and standalone
+    // activations: the plan must execute those identically too
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xBE);
+    let x = Tensor::new(vec![1, 3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+    let model = fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone());
+    let interp = model.run_interpreted(&x).unwrap();
+    let planned = model.run(&x).unwrap();
+    for (a, b) in interp.iter().zip(planned.iter()) {
+        assert_eq!(a.data, b.data, "fp32 unfused graph: plan must match interpreter exactly");
+    }
+}
+
+#[test]
+fn plan_reuses_buffers_and_moves_passthroughs() {
+    let sm = synth::resnet_like(16, 16);
+    let (graph, params, _f, fused) = passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    assert!(fused >= 3, "stem relu, dw hswish and SE hsigmoid should fuse, got {fused}");
+    let model = fp32_model(graph, params, BTreeMap::new());
+    let plan = model.plan().unwrap();
+    assert!(
+        plan.slot_count() < plan.node_count(),
+        "liveness plan should reuse buffers: {} slots for {} nodes",
+        plan.slot_count(),
+        plan.node_count()
+    );
+}
+
+#[test]
+fn backend_compiled_deployment_is_plan_backed_and_bit_exact() {
+    // end-to-end through a vendor backend: hardware_d INT8 on the synthetic
+    // checkpoint; the deployment's run() (planned) must equal the
+    // interpreter bit-for-bit
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xD0);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let qstate = BTreeMap::new();
+    let view = CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let be = backend_by_name("hardware_d").unwrap();
+    let dep = be
+        .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
+        .unwrap();
+    let x = Tensor::new(vec![1, 3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+    let planned = dep.model.run(&x).unwrap();
+    let interp = dep.model.run_interpreted(&x).unwrap();
+    assert_eq!(planned[0].data, interp[0].data, "deployed int8 plan must be bit-exact");
+    assert!(planned[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn unfusing_backend_still_matches() {
+    // rk3588 does not fuse activations: its deployments carry standalone
+    // act nodes; plan and interpreter must still agree exactly on int8
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xD1);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let qstate = BTreeMap::new();
+    let view = CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let be = backend_by_name("rk3588").unwrap();
+    let dep = be
+        .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
+        .unwrap();
+    // the activations were NOT fused away
+    assert!(dep.model.graph.node("r1").is_some(), "rk3588 keeps standalone activations");
+    let x = Tensor::new(vec![1, 3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+    assert_eq!(dep.model.run(&x).unwrap()[0].data, dep.model.run_interpreted(&x).unwrap()[0].data);
+}

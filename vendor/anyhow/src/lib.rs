@@ -1,0 +1,219 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The container builds fully offline, so the real crates.io `anyhow` cannot
+//! be fetched; this shim provides the surface the workspace actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait (on both `Result`
+//! and `Option`, including results that already carry an `anyhow::Error`),
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Error state is a flattened message chain (outermost context first), which
+//! is what every call site here formats with `{}` / `{:?}` anyway.
+
+use std::fmt::{self, Debug, Display};
+
+/// Drop-in stand-in for `anyhow::Error`: an owned message chain.
+///
+/// Deliberately does NOT implement `std::error::Error` — exactly like the
+/// real `anyhow::Error` — so the blanket `From<E: std::error::Error>` impl
+/// below does not overlap with the reflexive `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Attach outer context to this error.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // flatten the source chain into the message
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[doc(hidden)]
+pub mod private {
+    use super::Error;
+
+    /// Internal unification of "things that can become an `Error`": every
+    /// std error AND `Error` itself (the same trick the real anyhow uses so
+    /// `Context` works on `Result<T, anyhow::Error>` too). Public but
+    /// doc-hidden: it only exists as a bound for the `Context` impls.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::Error::msg(::std::format!($($arg)*)))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::core::result::Result::Err($crate::Error::msg(::std::format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let r: Result<()> = Err(io_err().into());
+        let r = r.context("loading file");
+        let msg = format!("{}", r.unwrap_err());
+        assert!(msg.starts_with("loading file"), "{msg}");
+        assert!(msg.contains("gone"), "{msg}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<u32> = Err(anyhow!("base {}", 7));
+        let msg = format!("{}", r.with_context(|| "outer").unwrap_err());
+        assert_eq!(msg, "outer: base 7");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero not allowed");
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0x61])?;
+            let n: usize = "12".parse()?;
+            Ok(format!("{s}{n}"))
+        }
+        assert_eq!(f().unwrap(), "a12");
+    }
+}
