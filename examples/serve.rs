@@ -1,23 +1,32 @@
-//! Serving demo: the batching inference server routing requests to a
-//! simulated NPU deployment (Rust integer engine on the request path —
+//! Serving demo: the concurrent batching server routing requests to
+//! simulated NPU deployments (Rust integer engine on the request path —
 //! no Python, no JAX). Reports measured latency percentiles, batch sizes,
-//! and throughput under open-loop load.
+//! throughput, and error/backpressure counts under open-loop load.
 //!
-//!   cargo run --release --example serve -- [--requests 256] [--backend hardware_d]
+//! Single-deployment:
+//!   cargo run --release --example serve -- [--requests 256] [--backend hardware_d] [--workers 2]
+//! Whole fleet (one server fronting every backend at its default precision,
+//! traffic round-robined across deployments):
+//!   cargo run --release --example serve -- --fleet [--workers 4]
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::backends::{
+    all_backends, backend_by_name, BackendSpec, CheckpointView, PtqOptions, RangeSource,
+};
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::experiment::artifacts_dir;
-use quant_trim::coordinator::server::{serve, BatchPolicy, EngineModel, Request};
+use quant_trim::coordinator::server::{
+    BatchPolicy, EngineModel, Server, ServerConfig, ServerDeployment, SubmitError,
+};
 use quant_trim::coordinator::TrainState;
 use quant_trim::data::{gen_cls_batch, ClsSpec};
 use quant_trim::perfmodel::Precision;
+use quant_trim::tensor::Tensor;
 
 fn arg(name: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
@@ -27,84 +36,149 @@ fn arg(name: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
+fn flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+fn compile_one(
+    be: &BackendSpec,
+    graph: &quant_trim::qir::Graph,
+    state: &TrainState,
+    calib: &[Tensor],
+    precision: Precision,
+) -> Result<ServerDeployment> {
+    let view = CheckpointView {
+        graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let dep = be.compile(view, precision, RangeSource::QatScales, calib, PtqOptions::default())?;
+    println!(
+        "  {:<16} @ {:?}: modelled {:.0} FPS @ {:.1} W ({} host-fallback ops)",
+        be.name, precision, dep.perf_b1.fps, dep.perf_b1.peak_power_w, dep.perf_b1.fallback_ops
+    );
+    Ok(ServerDeployment {
+        name: be.name.to_string(),
+        model: Arc::new(EngineModel::new(Arc::new(dep.model), 16)),
+    })
+}
+
 fn main() -> Result<()> {
     let n_requests: usize = arg("--requests", "256").parse()?;
     let backend = arg("--backend", "hardware_d");
+    let workers: usize = arg("--workers", "2").parse()?;
+    let fleet_mode = flag("--fleet");
     let dir = artifacts_dir()?;
 
-    // deploy a checkpoint on the chosen backend (trained if available)
+    // deploy a checkpoint (trained if available)
     let ck_path = ["resnet18.trained_qt.qtckpt", "resnet18.init.qtckpt"]
         .iter()
         .map(|f| dir.join(f))
         .find(|p| p.exists())
         .unwrap();
-    println!("deploying {} on {backend} (INT8)...", ck_path.display());
+    println!("deploying {}...", ck_path.display());
     let state = TrainState::from_checkpoint(&Checkpoint::load(&ck_path)?);
     let graph = quant_trim::qir::Graph::load(dir.join("resnet18.qir"))?;
-    let be = backend_by_name(&backend).expect("unknown backend");
     let task = ClsSpec::cifar100();
     let calib: Vec<_> = (0..4).map(|i| gen_cls_batch(task, 16, 0xCA11B + i).images).collect();
-    let view = CheckpointView {
-        graph: &graph,
-        params: &state.params,
-        bn: &state.bn,
-        qstate: &state.qstate,
-    };
-    let dep = be.compile(view, Precision::Int8, RangeSource::QatScales, &calib, PtqOptions::default())?;
-    println!(
-        "modelled on-device: {:.0} FPS @ {:.1} W ({} host-fallback ops)",
-        dep.perf_b1.fps, dep.perf_b1.peak_power_w, dep.perf_b1.fallback_ops
-    );
 
-    // spin up the router + worker
-    let model = EngineModel { model: Arc::new(Mutex::new(dep.model)), batch: 16 };
-    let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(4) };
-    let (tx, handle) = serve(Box::new(model), policy);
+    let mut deployments = Vec::new();
+    if fleet_mode {
+        // one server fronting every simulated NPU at its default precision
+        for be in all_backends() {
+            match compile_one(&be, &graph, &state, &calib, be.default_precision()) {
+                Ok(d) => deployments.push(d),
+                Err(e) => println!("  {:<16} skipped: {e}", be.name),
+            }
+        }
+    } else {
+        let be = backend_by_name(&backend).expect("unknown backend");
+        deployments.push(compile_one(&be, &graph, &state, &calib, Precision::Int8)?);
+    }
+    anyhow::ensure!(!deployments.is_empty(), "no deployment compiled");
+    let names: Vec<String> = deployments.iter().map(|d| d.name.clone()).collect();
 
-    // open-loop load: Poisson-ish arrivals
-    println!("sending {n_requests} requests...");
+    let server = Server::start(
+        deployments,
+        ServerConfig {
+            workers,
+            queue_depth: 512,
+            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(4) },
+        },
+    )?;
+
+    // open-loop load: Poisson-ish arrivals, round-robin across deployments
+    println!("sending {n_requests} requests across {} deployment(s)...", names.len());
     let data = gen_cls_batch(task, n_requests.min(256), 0x5E64E);
     let sz = 3 * 32 * 32;
     let mut replies = Vec::new();
     let mut rng = quant_trim::testutil::Rng::new(0x10AD);
+    let mut backpressured = 0usize;
     for i in 0..n_requests {
-        let (rtx, rrx) = mpsc::channel();
         let j = i % data.labels.len();
-        let image = quant_trim::tensor::Tensor::new(
-            vec![3, 32, 32],
-            data.images.data[j * sz..(j + 1) * sz].to_vec(),
-        );
-        tx.send(Request { image, reply: rtx, submitted: Instant::now() }).unwrap();
-        replies.push((data.labels[j], rrx));
+        let mut image =
+            Tensor::new(vec![3, 32, 32], data.images.data[j * sz..(j + 1) * sz].to_vec());
+        let name = &names[i % names.len()];
+        loop {
+            match server.submit_image(image, Some(name.as_str())) {
+                Ok(rx) => {
+                    replies.push((data.labels[j], rx));
+                    break;
+                }
+                Err(SubmitError::QueueFull(req)) => {
+                    // bounded queue: back off and retry instead of buffering
+                    backpressured += 1;
+                    image = req.image;
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                Err(SubmitError::ShutDown(_)) => anyhow::bail!("server shut down mid-load"),
+            }
+        }
         if rng.uniform() < 0.3 {
             std::thread::sleep(Duration::from_micros(rng.below(3000) as u64));
         }
     }
-    drop(tx);
 
     let mut correct = 0usize;
-    let mut batch_hist = std::collections::BTreeMap::new();
+    let mut failed = 0usize;
+    let mut batch_hist = BTreeMap::new();
+    let mut by_deployment: BTreeMap<String, usize> = BTreeMap::new();
     for (label, rrx) in replies {
         let resp = rrx.recv()?;
-        let pred = resp
-            .logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if pred == label as usize {
-            correct += 1;
+        *by_deployment.entry(resp.deployment.clone()).or_insert(0usize) += 1;
+        match resp.result {
+            Ok(logits) => {
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == label as usize {
+                    correct += 1;
+                }
+                *batch_hist.entry(resp.batch_size).or_insert(0usize) += 1;
+            }
+            Err(e) => {
+                failed += 1;
+                eprintln!("request failed on {}: {e}", resp.deployment);
+            }
         }
-        *batch_hist.entry(resp.batch_size).or_insert(0usize) += 1;
     }
-    let stats = handle.join().unwrap();
-    println!("\n=== serving stats (request path: Rust int8 engine only) ===");
-    println!("served          {}", stats.served);
+    let stats = server.shutdown();
+    println!("\n=== serving stats (request path: Rust engine only) ===");
+    println!("served          {} ({} error responses)", stats.served, stats.errors);
     println!("batches         {} (mean batch {:.2})", stats.batches, stats.mean_batch);
     println!("latency p50/p95 {:.2} / {:.2} ms", stats.p50_ms, stats.p95_ms);
-    println!("throughput      {:.1} req/s", stats.throughput_rps);
-    println!("on-device top-1 {:.2}%", correct as f64 / n_requests as f64 * 100.0);
+    println!("throughput      {:.1} req/s ({workers} workers)", stats.throughput_rps);
+    println!("backpressure    {backpressured} retries at submit");
+    println!(
+        "on-device top-1 {:.2}% ({} failed)",
+        correct as f64 / n_requests as f64 * 100.0,
+        failed
+    );
+    println!("per-deployment  {by_deployment:?}");
     println!("batch-size histogram: {batch_hist:?}");
     Ok(())
 }

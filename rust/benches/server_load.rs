@@ -1,0 +1,235 @@
+//! Serving-fabric load bench: sweeps workers × batch-policy × backend over
+//! the concurrent batching server and writes `BENCH_server.json`
+//! (throughput_rps, p50/p95 latency, mean batch occupancy per config, plus
+//! the headline 4-worker-vs-1-worker speedup).
+//!
+//! Deployments are the real int8 engine compiled per simulated backend, but
+//! **device-paced**: each batch holds its worker for at least the roofline
+//! perf model's device latency (with a floor), because the host CPU computes
+//! the exact logits faster than the edge NPUs it simulates — un-paced, this
+//! bench would measure host CPU speed instead of the serving fabric's
+//! scheduling across the fleet. Closed-loop load, no artifacts needed.
+//!
+//!   cargo bench --bench server_load
+
+use std::time::{Duration, Instant};
+
+use quant_trim::coordinator::experiment::compile_serving_fleet;
+use quant_trim::coordinator::server::{
+    BatchPolicy, Server, ServerConfig, ServerDeployment, ServerStats,
+};
+use quant_trim::perfmodel::Precision;
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::{synth, Rng};
+
+/// Minimum simulated device service time per batch (ms). Large enough that
+/// worker scaling, not host CPU contention, dominates the sweep.
+const FLOOR_MS: f64 = 5.0;
+
+struct Sweep {
+    backend: String,
+    workers: usize,
+    max_batch: usize,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    mean_batch: f64,
+    occupancy: f64,
+    served: usize,
+    errors: usize,
+    rejected: usize,
+}
+
+impl Sweep {
+    fn print(&self) {
+        println!(
+            "{:<22} workers {}  max_batch {}  ->  {:>8.1} rps   p50 {:>6.2} ms   p95 {:>6.2} ms   mean batch {:.2} ({:.0}% occupancy)",
+            self.backend,
+            self.workers,
+            self.max_batch,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.mean_batch,
+            self.occupancy * 100.0,
+        );
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"backend\": \"{}\", \"workers\": {}, \"max_batch\": {}, \"throughput_rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"mean_batch\": {:.2}, \"occupancy\": {:.3}, \"served\": {}, \"errors\": {}, \"rejected\": {}}}",
+            self.backend,
+            self.workers,
+            self.max_batch,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.mean_batch,
+            self.occupancy,
+            self.served,
+            self.errors,
+            self.rejected,
+        )
+    }
+}
+
+/// Closed-loop drive: `clients` threads, each submitting `per_client`
+/// requests round-robin across `names`, retrying on backpressure. Every
+/// request must come back with logits.
+fn drive(
+    fleet: Vec<ServerDeployment>,
+    names: &[&str],
+    workers: usize,
+    max_batch: usize,
+    clients: usize,
+    per_client: usize,
+) -> (f64, ServerStats) {
+    let server = Server::start(
+        fleet,
+        ServerConfig {
+            workers,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+        },
+    )
+    .expect("server start");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Rng::new(0x10AD + c as u64);
+                let img = Tensor::new(vec![3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+                for r in 0..per_client {
+                    let name = names[(c + r) % names.len()];
+                    let mut image = img.clone();
+                    loop {
+                        match server.submit_image(image, Some(name)) {
+                            Ok(rx) => {
+                                let resp = rx.recv().expect("every request gets a response");
+                                assert!(
+                                    resp.result.is_ok(),
+                                    "deployment {name} failed: {:?}",
+                                    resp.result
+                                );
+                                break;
+                            }
+                            Err(e) => {
+                                // bounded queue pushed back: retry shortly
+                                std::thread::sleep(Duration::from_micros(200));
+                                image = e.into_request().image;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    let total = clients * per_client;
+    assert_eq!(stats.served, total, "all {total} submitted requests must be served");
+    assert_eq!(stats.errors, 0);
+    (total as f64 / elapsed, stats)
+}
+
+fn int8_fleet(backend: &str, max_batch: usize) -> Vec<ServerDeployment> {
+    int8_fleet_of(&[backend], max_batch)
+}
+
+fn int8_fleet_of(backends: &[&str], max_batch: usize) -> Vec<ServerDeployment> {
+    let sm = synth::resnet_like(16, 8);
+    let mut rng = Rng::new(0xCA11B);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let specs: Vec<(&str, Option<Precision>)> =
+        backends.iter().map(|&b| (b, Some(Precision::Int8))).collect();
+    compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &specs,
+        &calib,
+        max_batch,
+        Some(Duration::from_secs_f64(FLOOR_MS / 1e3)),
+    )
+    .expect("fleet compile")
+}
+
+fn main() {
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("=== serving-fabric load bench (closed loop, device-paced int8 engine) ===");
+    println!("host cpus: {cpus}   pacing floor: {FLOOR_MS} ms/batch\n");
+
+    let backends = ["hardware_a", "hardware_d", "rk3588"];
+    let mut sweeps: Vec<Sweep> = Vec::new();
+    for backend in backends {
+        for max_batch in [1usize, 4] {
+            for workers in [1usize, 2, 4] {
+                let fleet = int8_fleet(backend, max_batch);
+                let (tp, stats) = drive(fleet, &[backend], workers, max_batch, 16, 13);
+                let sweep = Sweep {
+                    backend: backend.to_string(),
+                    workers,
+                    max_batch,
+                    throughput_rps: tp,
+                    p50_ms: stats.p50_ms,
+                    p95_ms: stats.p95_ms,
+                    mean_batch: stats.mean_batch,
+                    occupancy: stats.mean_batch / max_batch as f64,
+                    served: stats.served,
+                    errors: stats.errors,
+                    rejected: stats.rejected,
+                };
+                sweep.print();
+                sweeps.push(sweep);
+            }
+        }
+        println!();
+    }
+
+    // one server fronting the whole fleet: mixed traffic round-robins the
+    // three simulated NPUs through the multi-deployment router
+    let fleet = int8_fleet_of(&backends, 4);
+    let (tp, stats) = drive(fleet, &backends, 4, 4, 24, 12);
+    let fleet_sweep = Sweep {
+        backend: "fleet(a+d+rk3588)".to_string(),
+        workers: 4,
+        max_batch: 4,
+        throughput_rps: tp,
+        p50_ms: stats.p50_ms,
+        p95_ms: stats.p95_ms,
+        mean_batch: stats.mean_batch,
+        occupancy: stats.mean_batch / 4.0,
+        served: stats.served,
+        errors: stats.errors,
+        rejected: stats.rejected,
+    };
+    fleet_sweep.print();
+    sweeps.push(fleet_sweep);
+
+    // headline scaling: same deployment + policy, 4 workers vs 1
+    let tp_of = |workers: usize| {
+        sweeps
+            .iter()
+            .find(|s| s.backend == "hardware_a" && s.max_batch == 4 && s.workers == workers)
+            .map(|s| s.throughput_rps)
+            .unwrap_or(0.0)
+    };
+    let speedup = tp_of(4) / tp_of(1).max(1e-9);
+    println!("\nworkers speedup (hardware_a int8, max_batch 4): 4w vs 1w = {speedup:.2}x");
+    if speedup < 2.0 {
+        println!("WARNING: expected >= 2x scaling from 1 -> 4 workers");
+    }
+
+    let rows: Vec<String> = sweeps.iter().map(Sweep::json).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"server_load\",\n  \"model\": \"synthetic resnet-like 3x16x16, int8 engine, device-paced\",\n  \"host_cpus\": {cpus},\n  \"pacing_floor_ms\": {FLOOR_MS},\n  \"workers_speedup_4v1\": {speedup:.2},\n  \"sweeps\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+    );
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_server.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -253,20 +253,47 @@ impl BackendSpec {
     }
 }
 
+/// Input activation range from the calibration batches. Non-finite samples
+/// (NaN/±inf from a corrupt capture) are skipped — folding them in through
+/// `min`/`max` either poisons the scale or, when *every* sample is
+/// non-finite, used to return the degenerate `(f32::MAX, f32::MIN)` range.
+/// An empty (or all-non-finite) set falls back to the default `(-2.5, 2.5)`
+/// normalized-image range.
 fn input_range_of(batches: &[Tensor]) -> (f32, f32) {
-    let mut lo = -2.5f32;
-    let mut hi = 2.5f32;
-    if !batches.is_empty() {
-        lo = f32::MAX;
-        hi = f32::MIN;
-        for b in batches {
-            for &v in &b.data {
+    let mut lo = f32::MAX;
+    let mut hi = f32::MIN;
+    for b in batches {
+        for &v in &b.data {
+            if v.is_finite() {
                 lo = lo.min(v);
                 hi = hi.max(v);
             }
         }
     }
-    (lo, hi)
+    if lo > hi {
+        (-2.5, 2.5)
+    } else {
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_range_skips_non_finite_samples() {
+        let b = Tensor::new(vec![5], vec![f32::NAN, f32::INFINITY, -1.5, 3.0, f32::NEG_INFINITY]);
+        assert_eq!(input_range_of(&[b]), (-1.5, 3.0));
+    }
+
+    #[test]
+    fn input_range_degenerate_falls_back_to_default() {
+        // all-non-finite calibration used to yield (f32::MAX, f32::MIN)
+        let bad = Tensor::new(vec![2], vec![f32::NAN, f32::NEG_INFINITY]);
+        assert_eq!(input_range_of(&[bad]), (-2.5, 2.5));
+        assert_eq!(input_range_of(&[]), (-2.5, 2.5));
+    }
 }
 
 /// Run the fp32 model to collect this layer's input activations, then refine

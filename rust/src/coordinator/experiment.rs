@@ -4,11 +4,14 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::backends::{BackendSpec, CheckpointView, PtqOptions, RangeSource};
+use crate::backends::{backend_by_name, BackendSpec, CheckpointView, PtqOptions, RangeSource};
 use crate::ckpt::Checkpoint;
+use crate::coordinator::server::{EngineModel, ServerDeployment};
 use crate::coordinator::state::TrainState;
 use crate::coordinator::trainer::{EpochLog, TrainConfig, Trainer};
 use crate::data::{gen_cls_batch, gen_seg_batch, Batch, ClsSpec, SegSpec};
@@ -226,6 +229,54 @@ pub fn deploy_and_eval(
         fps_modelled: dep.perf_b1.fps,
         fallback_ops: dep.perf_b1.fallback_ops,
     })
+}
+
+/// One server fronting several simulated NPUs: compile the checkpoint on
+/// each named backend (at its default precision unless overridden) and wrap
+/// every deployment for the batching server, keyed by backend name.
+///
+/// With `service_floor` set, each deployment is paced per **actual** batch
+/// size: an n-request batch pays the roofline perf model's device latency at
+/// batch n (but at least `floor · n / max_batch`, so the floor scales with
+/// executed work too). The Rust engine computes exact logits faster than the
+/// edge NPUs it simulates, so un-paced serving sweeps would measure host CPU
+/// speed instead of the fleet's scheduling behaviour; `service_floor` is the
+/// minimum full-batch service time.
+pub fn compile_serving_fleet(
+    graph: &Graph,
+    params: &BTreeMap<String, Tensor>,
+    bn: &BTreeMap<String, Tensor>,
+    backends: &[(&str, Option<Precision>)],
+    calib: &[Tensor],
+    max_batch: usize,
+    service_floor: Option<Duration>,
+) -> Result<Vec<ServerDeployment>> {
+    let qstate: BTreeMap<String, Tensor> = BTreeMap::new();
+    let mut fleet = Vec::with_capacity(backends.len());
+    for &(name, precision) in backends {
+        let be = backend_by_name(name).with_context(|| format!("unknown backend {name:?}"))?;
+        let precision = precision.unwrap_or_else(|| be.default_precision());
+        let view = CheckpointView { graph, params, bn, qstate: &qstate };
+        let dep = be
+            .compile(view, precision, RangeSource::Calibration, calib, PtqOptions::default())
+            .with_context(|| format!("compiling serving deployment {name}"))?;
+        let model = Arc::new(dep.model);
+        let engine = match service_floor {
+            Some(floor) => {
+                let floors: Vec<Duration> = (1..=max_batch)
+                    .map(|n| {
+                        let modelled_s = be.perf(graph, precision, n).latency_ms / 1e3;
+                        let min_s = floor.as_secs_f64() * n as f64 / max_batch as f64;
+                        Duration::from_secs_f64(modelled_s.max(min_s))
+                    })
+                    .collect();
+                EngineModel::paced(model, max_batch, floors)
+            }
+            None => EngineModel::new(model, max_batch),
+        };
+        fleet.push(ServerDeployment { name: name.to_string(), model: Arc::new(engine) });
+    }
+    Ok(fleet)
 }
 
 /// Reference (FP32) metrics on the same eval set — the parenthetical columns.

@@ -8,6 +8,10 @@ pub mod state;
 pub mod trainer;
 
 pub use schedule::{cosine_lr, Curriculum};
+pub use server::{
+    BatchModel, BatchPolicy, EngineModel, Request, Response, Server, ServerConfig,
+    ServerDeployment, ServerStats, SubmitError,
+};
 pub use state::{CallExtras, TrainState};
 pub use trainer::{EpochLog, TrainConfig, Trainer};
 

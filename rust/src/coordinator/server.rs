@@ -1,33 +1,63 @@
-//! Batching inference server: the serving half of the coordinator.
+//! Concurrent batching inference server: the serving half of the coordinator.
 //!
-//! A router thread collects requests into dynamic batches (size- or
-//! deadline-triggered, vLLM-router style), a worker executes the compiled
-//! forward, responses fan back out over per-request channels. Built on std
+//! A router thread pulls requests off a **bounded** ingress queue (submit
+//! returns `QueueFull` instead of growing without bound), groups them into
+//! per-deployment dynamic batches (size- or deadline-triggered, vLLM-router
+//! style), and hands each batch to a pool of **N worker threads** over a
+//! bounded work queue. Workers share the compiled deployments lock-free —
+//! `CompiledModel` is frozen after planning and `Send + Sync` (asserted at
+//! compile time in `engine`), so an `Arc` is all the synchronisation the
+//! model needs. Batches execute at their **actual** size (a 1-request batch
+//! pays 1-request compute, not `max_batch` — the per-op-overhead effect the
+//! paper's Table 4 / Fig 3 quantify), and every accepted request receives
+//! exactly one [`Response`] — model errors come back as an error response
+//! instead of an abandoned reply channel.
+//!
+//! One server can front **several named deployments** (simulated NPUs at
+//! different precisions, built from `backends::all_backends()` compiles);
+//! the router maps each request to the deployment it names. Built on std
 //! threads + mpsc (no tokio in the vendored crate set); the request path is
 //! pure Rust + PJRT.
 
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{empirical_quantile, Tensor};
 
 /// One inference request: a single image (C, H, W) + reply channel.
 pub struct Request {
     pub image: Tensor,
+    /// Named deployment to route to; `None` = the server's default (first)
+    /// deployment.
+    pub deployment: Option<String>,
     pub reply: Sender<Response>,
     pub submitted: Instant,
 }
 
-/// Response: logits + timing breakdown.
+/// Response: logits (or the error that prevented them) + timing breakdown.
+/// Every request accepted by [`Server::submit`] receives exactly one.
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub logits: Vec<f32>,
+    /// Per-request logits on success, the model/routing error otherwise.
+    pub result: Result<Vec<f32>, String>,
+    /// Deployment that handled (or rejected) the request.
+    pub deployment: String,
     pub queue_ms: f64,
+    /// Actual executed batch size (0 for requests rejected by the router).
     pub batch_size: usize,
     pub total_ms: f64,
+}
+
+impl Response {
+    /// Logits, if the request succeeded.
+    pub fn logits(&self) -> Option<&[f32]> {
+        self.result.as_deref().ok()
+    }
 }
 
 /// Dynamic batcher policy.
@@ -46,15 +76,34 @@ impl Default for BatchPolicy {
 /// The model side of the server: anything that maps a batched image tensor
 /// (N, C, H, W) to logits (N, K). Implemented by PJRT executables and by the
 /// simulated backends.
-pub trait BatchModel: Send {
-    fn run_batch(&mut self, images: &Tensor) -> Result<Tensor>;
+///
+/// `run_batch` takes `&self`: implementations must be internally immutable
+/// (or synchronise internally) so the worker pool can share one instance
+/// lock-free via `Arc`. [`crate::engine::CompiledModel`] satisfies this by
+/// construction — frozen after planning, `Send + Sync`.
+pub trait BatchModel: Send + Sync {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor>;
     fn max_batch(&self) -> usize;
+
+    /// Per-request input shape (batch dim excluded), when statically known.
+    /// The router rejects mismatched requests up front so one bad request
+    /// cannot poison a whole batch.
+    fn input_shape(&self) -> Option<Vec<usize>> {
+        None
+    }
 }
 
-/// Server statistics.
+/// Server statistics, aggregated across workers at shutdown.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
+    /// Requests answered with logits.
     pub served: usize,
+    /// Requests answered with an error response (model failure, unknown
+    /// deployment, shape mismatch). `served + errors` = every request the
+    /// server accepted — none are dropped.
+    pub errors: usize,
+    /// Requests refused at `submit` with `QueueFull` (backpressure).
+    pub rejected: usize,
     pub batches: usize,
     pub mean_batch: f64,
     pub p50_ms: f64,
@@ -62,102 +111,692 @@ pub struct ServerStats {
     pub throughput_rps: f64,
 }
 
-/// Spawn the router+worker; returns the request sender and a join handle
-/// that yields stats once the sender is dropped.
-pub fn serve(
-    mut model: Box<dyn BatchModel>,
-    policy: BatchPolicy,
-) -> (Sender<Request>, std::thread::JoinHandle<ServerStats>) {
-    let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
-    let handle = std::thread::spawn(move || {
-        let mut latencies: Vec<f64> = Vec::new();
-        let mut served = 0usize;
-        let mut batches = 0usize;
-        let started = Instant::now();
-        let max_batch = policy.max_batch.min(model.max_batch());
+/// Nearest-rank (ceil) latency percentile, aligned with
+/// [`crate::tensor::empirical_quantile`] (x_(ceil(p·n))). The old private
+/// truncating-rank closure returned the *max* for p50 of 2 samples.
+pub fn latency_percentile(samples_ms: &[f64], p: f64) -> f64 {
+    if samples_ms.is_empty() {
+        return 0.0;
+    }
+    let as_f32: Vec<f32> = samples_ms.iter().map(|&v| v as f32).collect();
+    empirical_quantile(&as_f32, p) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Bounded MPMC queue: Mutex<VecDeque> + Condvar. Used for the ingress queue
+// (non-blocking try_push => backpressure to clients) and the router->worker
+// batch queue (blocking push => backpressure from busy workers up the pipe).
+// ---------------------------------------------------------------------------
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+enum PushRejected<T> {
+    Full(T),
+    Closed(T),
+}
+
+enum Popped<T> {
+    Item(T),
+    TimedOut,
+    Closed,
+}
+
+struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(cap: usize) -> Self {
+        BoundedQueue {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push; hands the value back on a full or closed queue.
+    fn try_push(&self, v: T) -> Result<(), PushRejected<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushRejected::Closed(v));
+        }
+        if st.items.len() >= self.cap {
+            return Err(PushRejected::Full(v));
+        }
+        st.items.push_back(v);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space. `Err(v)` only if the queue closed.
+    fn push(&self, v: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
         loop {
-            // block for the first request
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break, // all senders dropped: shut down
+            if st.closed {
+                return Err(v);
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(v);
+                drop(st);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop. `None` only once the queue is closed AND drained, so a
+    /// closed queue still delivers everything already accepted (graceful
+    /// shutdown needs exactly this).
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                drop(st);
+                self.cv.notify_all();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with a timeout (same closed-means-drained contract as `pop`).
+    fn pop_timeout(&self, dur: Duration) -> Popped<T> {
+        let deadline = Instant::now() + dur;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                drop(st);
+                self.cv.notify_all();
+                return Popped::Item(v);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// A named deployment behind the server: one compiled model (one simulated
+/// NPU at one precision).
+pub struct ServerDeployment {
+    pub name: String,
+    pub model: Arc<dyn BatchModel>,
+}
+
+impl ServerDeployment {
+    pub fn new(name: impl Into<String>, model: impl BatchModel + 'static) -> Self {
+        ServerDeployment { name: name.into(), model: Arc::new(model) }
+    }
+}
+
+/// Server sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Worker threads executing batches (shared across all deployments).
+    pub workers: usize,
+    /// Ingress queue capacity; beyond it `submit` returns `QueueFull`.
+    pub queue_depth: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { workers: 2, queue_depth: 256, policy: BatchPolicy::default() }
+    }
+}
+
+/// Why `submit` refused a request. Both variants hand the request back so
+/// the caller can retry (backpressure, not data loss).
+pub enum SubmitError {
+    /// Bounded ingress queue at capacity.
+    QueueFull(Request),
+    /// The server is shutting down.
+    ShutDown(Request),
+}
+
+impl SubmitError {
+    pub fn into_request(self) -> Request {
+        match self {
+            SubmitError::QueueFull(r) | SubmitError::ShutDown(r) => r,
+        }
+    }
+
+    pub fn is_queue_full(&self) -> bool {
+        matches!(self, SubmitError::QueueFull(_))
+    }
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SubmitError::QueueFull(_) => "SubmitError::QueueFull",
+            SubmitError::ShutDown(_) => "SubmitError::ShutDown",
+        })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SubmitError::QueueFull(_) => "server ingress queue full",
+            SubmitError::ShutDown(_) => "server shutting down",
+        })
+    }
+}
+
+struct DeployEntry {
+    model: Arc<dyn BatchModel>,
+    /// Effective batch bound: min(policy.max_batch, model.max_batch()).
+    max_batch: usize,
+    input_shape: Option<Vec<usize>>,
+}
+
+struct Deployments {
+    map: HashMap<String, DeployEntry>,
+}
+
+struct WorkBatch {
+    deployment: String,
+    requests: Vec<Request>,
+}
+
+/// Per-worker latency sample cap: beyond it the sample set is decimated 2:1
+/// and the record stride doubles, so a long-lived server keeps O(1) memory
+/// (an evenly-strided subsample still estimates p50/p95 faithfully) instead
+/// of one f64 per request served since startup.
+const LATENCY_SAMPLE_CAP: usize = 1 << 16;
+
+struct WorkerStats {
+    latencies_ms: Vec<f64>,
+    lat_stride: usize,
+    lat_seen: usize,
+    served: usize,
+    errors: usize,
+    batches: usize,
+    batched_requests: usize,
+}
+
+impl Default for WorkerStats {
+    fn default() -> Self {
+        WorkerStats {
+            latencies_ms: Vec::new(),
+            lat_stride: 1,
+            lat_seen: 0,
+            served: 0,
+            errors: 0,
+            batches: 0,
+            batched_requests: 0,
+        }
+    }
+}
+
+impl WorkerStats {
+    fn record_latency(&mut self, ms: f64) {
+        self.lat_seen += 1;
+        if self.lat_seen % self.lat_stride != 0 {
+            return;
+        }
+        if self.latencies_ms.len() >= LATENCY_SAMPLE_CAP {
+            let mut keep = false;
+            self.latencies_ms.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.lat_stride *= 2;
+        }
+        self.latencies_ms.push(ms);
+    }
+}
+
+/// The concurrent batching server. Start with [`Server::start`] (multiple
+/// deployments) or [`Server::single`], feed it with [`Server::submit`] /
+/// [`Server::submit_image`], stop with [`Server::shutdown`] — which drains
+/// everything already accepted before returning the aggregated stats.
+pub struct Server {
+    ingress: Arc<BoundedQueue<Request>>,
+    router: Option<std::thread::JoinHandle<usize>>,
+    workers: Vec<std::thread::JoinHandle<WorkerStats>>,
+    rejected: Arc<AtomicUsize>,
+    started: Instant,
+}
+
+impl Server {
+    /// Spawn the router + worker pool over a set of named deployments. The
+    /// first deployment is the default route for requests that name none.
+    pub fn start(deployments: Vec<ServerDeployment>, cfg: ServerConfig) -> Result<Server> {
+        ensure!(!deployments.is_empty(), "server needs at least one deployment");
+        ensure!(cfg.workers >= 1, "server needs at least one worker");
+        ensure!(cfg.policy.max_batch >= 1, "batch policy max_batch must be >= 1");
+        let default_name = deployments[0].name.clone();
+        let mut map = HashMap::new();
+        for d in deployments {
+            let ServerDeployment { name, model } = d;
+            ensure!(model.max_batch() >= 1, "deployment {name:?}: max_batch must be >= 1");
+            let entry = DeployEntry {
+                max_batch: cfg.policy.max_batch.min(model.max_batch()),
+                input_shape: model.input_shape(),
+                model,
             };
-            let mut batch = vec![first];
-            let deadline = Instant::now() + policy.max_wait;
-            // gather until full or deadline
-            while batch.len() < max_batch {
+            if map.insert(name.clone(), entry).is_some() {
+                bail!("duplicate deployment name {name:?}");
+            }
+        }
+        let deps = Arc::new(Deployments { map });
+        let ingress: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_depth));
+        // Small work queue: enough to keep every worker busy while the
+        // router batches the next wave, small enough that backpressure from
+        // slow workers reaches the ingress queue (and then the clients).
+        let work: Arc<BoundedQueue<WorkBatch>> = Arc::new(BoundedQueue::new((cfg.workers * 2).max(2)));
+
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let work = work.clone();
+                let deps = deps.clone();
+                std::thread::spawn(move || worker_loop(&work, &deps))
+            })
+            .collect();
+        let router = {
+            let ingress = ingress.clone();
+            std::thread::spawn(move || router_loop(&ingress, &work, &deps, cfg.policy, &default_name))
+        };
+        Ok(Server {
+            ingress,
+            router: Some(router),
+            workers,
+            rejected: Arc::new(AtomicUsize::new(0)),
+            started: Instant::now(),
+        })
+    }
+
+    /// Single-deployment convenience (the deployment is named `"default"`).
+    pub fn single(model: impl BatchModel + 'static, cfg: ServerConfig) -> Result<Server> {
+        Server::start(vec![ServerDeployment::new("default", model)], cfg)
+    }
+
+    /// Enqueue a request. Non-blocking: a full ingress queue surfaces as
+    /// `QueueFull` (with the request handed back) instead of unbounded
+    /// buffering — the caller decides whether to retry, shed, or block.
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        match self.ingress.try_push(req) {
+            Ok(()) => Ok(()),
+            Err(PushRejected::Full(r)) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull(r))
+            }
+            Err(PushRejected::Closed(r)) => Err(SubmitError::ShutDown(r)),
+        }
+    }
+
+    /// Submit one image and get the reply channel back.
+    pub fn submit_image(
+        &self,
+        image: Tensor,
+        deployment: Option<&str>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request {
+            image,
+            deployment: deployment.map(|s| s.to_string()),
+            reply: tx,
+            submitted: Instant::now(),
+        })?;
+        Ok(rx)
+    }
+
+    /// Current ingress queue depth (diagnostics / load shedding).
+    pub fn queue_len(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// Graceful shutdown: stop accepting, drain every accepted request
+    /// through the workers (partial batches included), then aggregate stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.ingress.close();
+        let router_errors = self
+            .router
+            .take()
+            .map(|h| h.join().expect("server router thread panicked"))
+            .unwrap_or(0);
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut stats = ServerStats { errors: router_errors, ..ServerStats::default() };
+        for h in std::mem::take(&mut self.workers) {
+            let ws = h.join().expect("server worker thread panicked");
+            latencies.extend(ws.latencies_ms);
+            stats.served += ws.served;
+            stats.errors += ws.errors;
+            stats.batches += ws.batches;
+            stats.mean_batch += ws.batched_requests as f64;
+        }
+        stats.rejected = self.rejected.load(Ordering::Relaxed);
+        stats.mean_batch =
+            if stats.batches == 0 { 0.0 } else { stats.mean_batch / stats.batches as f64 };
+        stats.p50_ms = latency_percentile(&latencies, 0.50);
+        stats.p95_ms = latency_percentile(&latencies, 0.95);
+        stats.throughput_rps =
+            stats.served as f64 / self.started.elapsed().as_secs_f64().max(1e-9);
+        stats
+    }
+}
+
+impl Drop for Server {
+    /// Dropping without `shutdown()` still closes the ingress so the router
+    /// and workers wind down instead of blocking forever.
+    fn drop(&mut self) {
+        self.ingress.close();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+struct PendingBatch {
+    requests: Vec<Request>,
+    deadline: Instant,
+}
+
+/// Reply immediately with a routing error (unknown deployment / bad shape).
+/// The reply channel is never abandoned — this is an error *response*.
+fn reject_request(req: Request, deployment: &str, msg: String) {
+    let now = Instant::now();
+    let ms = now.duration_since(req.submitted).as_secs_f64() * 1e3;
+    let _ = req.reply.send(Response {
+        result: Err(msg),
+        deployment: deployment.to_string(),
+        queue_ms: ms,
+        batch_size: 0,
+        total_ms: ms,
+    });
+}
+
+/// Route one request into its deployment's pending batch (flushing the batch
+/// when full). Returns 1 if the request was rejected with an error response.
+fn route_request(
+    req: Request,
+    pending: &mut HashMap<String, PendingBatch>,
+    deps: &Deployments,
+    work: &BoundedQueue<WorkBatch>,
+    policy: BatchPolicy,
+    default_name: &str,
+) -> usize {
+    let name = req.deployment.clone().unwrap_or_else(|| default_name.to_string());
+    let Some(dep) = deps.map.get(&name) else {
+        let known: Vec<&str> = deps.map.keys().map(|k| k.as_str()).collect();
+        reject_request(req, &name, format!("unknown deployment {name:?} (have {known:?})"));
+        return 1;
+    };
+    // shape screening: a statically declared input shape wins; otherwise a
+    // request must at least match the batch it would join
+    if let Some(expected) = &dep.input_shape {
+        if &req.image.shape != expected {
+            let msg = format!(
+                "deployment {name}: request shape {:?} != expected input shape {expected:?}",
+                req.image.shape
+            );
+            reject_request(req, &name, msg);
+            return 1;
+        }
+    } else if let Some(p) = pending.get(&name) {
+        if p.requests[0].image.shape != req.image.shape {
+            let msg = format!(
+                "deployment {name}: request shape {:?} does not match in-flight batch shape {:?}",
+                req.image.shape, p.requests[0].image.shape
+            );
+            reject_request(req, &name, msg);
+            return 1;
+        }
+    }
+    let entry = pending.entry(name.clone()).or_insert_with(|| PendingBatch {
+        requests: Vec::new(),
+        deadline: Instant::now() + policy.max_wait,
+    });
+    entry.requests.push(req);
+    if entry.requests.len() >= dep.max_batch {
+        let batch = pending.remove(&name).expect("pending batch just filled");
+        let _ = work.push(WorkBatch { deployment: name, requests: batch.requests });
+    }
+    0
+}
+
+fn router_loop(
+    ingress: &BoundedQueue<Request>,
+    work: &BoundedQueue<WorkBatch>,
+    deps: &Deployments,
+    policy: BatchPolicy,
+    default_name: &str,
+) -> usize {
+    let mut pending: HashMap<String, PendingBatch> = HashMap::new();
+    let mut rejected_invalid = 0usize;
+    loop {
+        let next_deadline = pending.values().map(|p| p.deadline).min();
+        let popped = match next_deadline {
+            Some(deadline) => {
                 let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
-                    Err(_) => break,
+                if deadline <= now {
+                    Popped::TimedOut
+                } else {
+                    ingress.pop_timeout(deadline - now)
                 }
             }
-            let exec_start = Instant::now();
-            let n = batch.len();
-            let (c, h, w) = {
-                let s = &batch[0].image.shape;
-                (s[0], s[1], s[2])
-            };
-            let mut images = Tensor::zeros(&[max_batch, c, h, w]);
-            for (i, r) in batch.iter().enumerate() {
-                let sz = c * h * w;
-                images.data[i * sz..(i + 1) * sz].copy_from_slice(&r.image.data);
+            None => match ingress.pop() {
+                Some(r) => Popped::Item(r),
+                None => Popped::Closed,
+            },
+        };
+        let mut closed = false;
+        match popped {
+            Popped::Item(req) => {
+                rejected_invalid +=
+                    route_request(req, &mut pending, deps, work, policy, default_name);
             }
-            let logits = match model.run_batch(&images) {
-                Ok(l) => l,
-                Err(_) => continue,
-            };
-            let k = logits.shape[1];
-            let done = Instant::now();
-            for (i, r) in batch.into_iter().enumerate() {
+            Popped::TimedOut => {}
+            Popped::Closed => closed = true,
+        }
+        // flush deadline-expired partial batches
+        let now = Instant::now();
+        let expired: Vec<String> = pending
+            .iter()
+            .filter(|(_, p)| p.deadline <= now)
+            .map(|(name, _)| name.clone())
+            .collect();
+        for name in expired {
+            if let Some(batch) = pending.remove(&name) {
+                let _ = work.push(WorkBatch { deployment: name, requests: batch.requests });
+            }
+        }
+        if closed {
+            break;
+        }
+    }
+    // graceful shutdown: the ingress is closed AND drained (pop's contract);
+    // flush every remaining partial batch so in-flight requests complete
+    for (name, batch) in pending.drain() {
+        let _ = work.push(WorkBatch { deployment: name, requests: batch.requests });
+    }
+    work.close();
+    rejected_invalid
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+fn worker_loop(work: &BoundedQueue<WorkBatch>, deps: &Deployments) -> WorkerStats {
+    let mut stats = WorkerStats::default();
+    while let Some(batch) = work.pop() {
+        match deps.map.get(&batch.deployment) {
+            Some(dep) => run_one_batch(dep.model.as_ref(), &batch.deployment, batch.requests, &mut stats),
+            None => {
+                // unreachable: the router only enqueues validated names
+                for req in batch.requests {
+                    stats.errors += 1;
+                    reject_request(req, &batch.deployment, "deployment vanished".to_string());
+                }
+            }
+        }
+    }
+    stats
+}
+
+fn run_one_batch(
+    model: &dyn BatchModel,
+    deployment: &str,
+    requests: Vec<Request>,
+    stats: &mut WorkerStats,
+) {
+    let n = requests.len();
+    let per_shape = requests[0].image.shape.clone();
+    let sz: usize = per_shape.iter().product();
+    // the batch tensor is exactly (n, ...): no zero-padding to max_batch,
+    // so a partial batch pays partial compute
+    let mut batch_shape = Vec::with_capacity(per_shape.len() + 1);
+    batch_shape.push(n);
+    batch_shape.extend_from_slice(&per_shape);
+    let mut images = Tensor::zeros(&batch_shape);
+    for (i, r) in requests.iter().enumerate() {
+        images.data[i * sz..(i + 1) * sz].copy_from_slice(&r.image.data);
+    }
+    let exec_start = Instant::now();
+    let result = model.run_batch(&images).and_then(|logits| {
+        ensure!(
+            !logits.shape.is_empty() && logits.shape[0] == n,
+            "deployment {deployment}: model returned logits {:?} for a batch of {n}",
+            logits.shape
+        );
+        Ok(logits)
+    });
+    let done = Instant::now();
+    stats.batches += 1;
+    stats.batched_requests += n;
+    match result {
+        Ok(logits) => {
+            let k = logits.data.len() / n;
+            for (i, r) in requests.into_iter().enumerate() {
                 let total_ms = done.duration_since(r.submitted).as_secs_f64() * 1e3;
-                latencies.push(total_ms);
+                stats.record_latency(total_ms);
+                stats.served += 1;
                 let _ = r.reply.send(Response {
-                    logits: logits.data[i * k..(i + 1) * k].to_vec(),
+                    result: Ok(logits.data[i * k..(i + 1) * k].to_vec()),
+                    deployment: deployment.to_string(),
                     queue_ms: exec_start.duration_since(r.submitted).as_secs_f64() * 1e3,
                     batch_size: n,
                     total_ms,
                 });
             }
-            served += n;
-            batches += 1;
         }
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if latencies.is_empty() {
-                return 0.0;
+        Err(e) => {
+            // the model failed: every request in the batch gets an error
+            // response — reply channels are never silently dropped
+            let msg = e.to_string();
+            for r in requests {
+                let total_ms = done.duration_since(r.submitted).as_secs_f64() * 1e3;
+                stats.errors += 1;
+                let _ = r.reply.send(Response {
+                    result: Err(msg.clone()),
+                    deployment: deployment.to_string(),
+                    queue_ms: exec_start.duration_since(r.submitted).as_secs_f64() * 1e3,
+                    batch_size: n,
+                    total_ms,
+                });
             }
-            latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)]
-        };
-        ServerStats {
-            served,
-            batches,
-            mean_batch: if batches == 0 { 0.0 } else { served as f64 / batches as f64 },
-            p50_ms: pct(0.50),
-            p95_ms: pct(0.95),
-            throughput_rps: served as f64 / started.elapsed().as_secs_f64().max(1e-9),
         }
-    });
-    (tx, handle)
+    }
 }
 
-/// A BatchModel over the Rust integer engine (simulated NPU deployment).
+// ---------------------------------------------------------------------------
+// Engine-backed deployment
+// ---------------------------------------------------------------------------
+
+/// A BatchModel over the Rust integer engine (one simulated NPU deployment).
+///
+/// Shares the compiled model lock-free: `CompiledModel::run` is `&self` over
+/// a `OnceLock`'d plan (the engine asserts `CompiledModel: Send + Sync` at
+/// compile time), so N workers run the same deployment concurrently with no
+/// mutex — the old `Arc<Mutex<CompiledModel>>` serialised the whole fleet.
 pub struct EngineModel {
-    pub model: Arc<Mutex<crate::engine::CompiledModel>>,
+    pub model: Arc<crate::engine::CompiledModel>,
     pub batch: usize,
+    /// Minimum wall-clock service time per batch, indexed by **actual**
+    /// batch size (entry `n-1` paces an n-request batch; the last entry is
+    /// reused beyond). Empty = unpaced. The engine computes exact logits
+    /// faster than the simulated NPU it stands in for, so serving
+    /// experiments pace each batch to the perf model's device latency —
+    /// otherwise a "fleet" bench measures host CPU speed. Pacing scales
+    /// with the executed size: a partial batch pays partial device time,
+    /// matching the actual-size execution contract.
+    pub service_floors: Vec<Duration>,
+}
+
+impl EngineModel {
+    pub fn new(model: Arc<crate::engine::CompiledModel>, batch: usize) -> Self {
+        EngineModel { model, batch, service_floors: Vec::new() }
+    }
+
+    /// Engine model paced to simulated device service times per batch size
+    /// (`floors[n-1]` for an n-request batch).
+    pub fn paced(
+        model: Arc<crate::engine::CompiledModel>,
+        batch: usize,
+        floors: Vec<Duration>,
+    ) -> Self {
+        EngineModel { model, batch, service_floors: floors }
+    }
 }
 
 impl BatchModel for EngineModel {
-    fn run_batch(&mut self, images: &Tensor) -> Result<Tensor> {
-        let m = self.model.lock().unwrap();
-        let outs = m.run(images)?;
-        Ok(outs.into_iter().next().unwrap())
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let mut outs = self.model.run(images)?;
+        ensure!(!outs.is_empty(), "engine model produced no outputs");
+        let out = outs.remove(0);
+        if !self.service_floors.is_empty() {
+            let n = images.shape.first().copied().unwrap_or(1).max(1);
+            let floor = self.service_floors[(n - 1).min(self.service_floors.len() - 1)];
+            let elapsed = t0.elapsed();
+            if elapsed < floor {
+                std::thread::sleep(floor - elapsed);
+            }
+        }
+        Ok(out)
     }
 
     fn max_batch(&self) -> usize {
         self.batch
+    }
+
+    fn input_shape(&self) -> Option<Vec<usize>> {
+        self.model.input_shape()
     }
 }
 
@@ -169,7 +808,7 @@ mod tests {
     struct Toy;
 
     impl BatchModel for Toy {
-        fn run_batch(&mut self, images: &Tensor) -> Result<Tensor> {
+        fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
             let n = images.shape[0];
             let sz: usize = images.shape[1..].iter().product();
             let mut out = Tensor::zeros(&[n, 2]);
@@ -185,43 +824,142 @@ mod tests {
         }
     }
 
+    fn recv_ok(rx: &Receiver<Response>) -> Response {
+        rx.recv_timeout(Duration::from_secs(10)).expect("response must arrive")
+    }
+
     #[test]
     fn serves_and_batches() {
-        let (tx, handle) =
-            serve(Box::new(Toy), BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) });
+        let server = Server::single(
+            Toy,
+            ServerConfig {
+                workers: 2,
+                queue_depth: 64,
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            },
+        )
+        .unwrap();
         let mut replies = Vec::new();
         for i in 0..16 {
-            let (rtx, rrx) = mpsc::channel();
             let img = Tensor::full(&[1, 2, 2], i as f32);
-            tx.send(Request { image: img, reply: rtx, submitted: Instant::now() }).unwrap();
-            replies.push((i, rrx));
+            let rx = server.submit_image(img, None).unwrap();
+            replies.push((i, rx));
         }
-        drop(tx);
-        for (i, rrx) in replies {
-            let resp = rrx.recv().unwrap();
-            assert_eq!(resp.logits[0], (i * 4) as f32);
-            assert_eq!(resp.logits[1], -(i as f32) * 4.0);
+        for (i, rx) in &replies {
+            let resp = recv_ok(rx);
+            let logits = resp.result.expect("toy model never fails");
+            assert_eq!(logits[0], (i * 4) as f32);
+            assert_eq!(logits[1], -(*i as f32) * 4.0);
+            assert_eq!(resp.deployment, "default");
         }
-        let stats = handle.join().unwrap();
+        let stats = server.shutdown();
         assert_eq!(stats.served, 16);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.rejected, 0);
         assert!(stats.batches <= 16);
         assert!(stats.mean_batch >= 1.0);
     }
 
     #[test]
     fn deadline_fires_on_partial_batch() {
-        let (tx, handle) =
-            serve(Box::new(Toy), BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Request {
-            image: Tensor::full(&[1, 2, 2], 1.0),
-            reply: rtx,
-            submitted: Instant::now(),
-        })
+        let server = Server::single(
+            Toy,
+            ServerConfig {
+                workers: 1,
+                queue_depth: 8,
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            },
+        )
         .unwrap();
-        let resp = rrx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let rx = server.submit_image(Tensor::full(&[1, 2, 2], 1.0), None).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(resp.batch_size, 1);
-        drop(tx);
-        handle.join().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_deployment_gets_error_response() {
+        let server = Server::single(Toy, ServerConfig::default()).unwrap();
+        let rx = server.submit_image(Tensor::full(&[1, 2, 2], 1.0), Some("no-such-npu")).unwrap();
+        let resp = recv_ok(&rx);
+        let err = resp.result.expect_err("unknown deployment must be an error response");
+        assert!(err.contains("unknown deployment"), "{err}");
+        let stats = server.shutdown();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.served, 0);
+    }
+
+    /// Always answers with a batch dimension of 1, whatever it was given —
+    /// the shape of bug the old zero-padded `max_batch` execution hid.
+    struct WrongBatchDim;
+
+    impl BatchModel for WrongBatchDim {
+        fn run_batch(&self, _images: &Tensor) -> Result<Tensor> {
+            Ok(Tensor::zeros(&[1, 2]))
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn wrong_batch_dimension_is_an_error_response() {
+        let server = Server::single(
+            WrongBatchDim,
+            ServerConfig {
+                workers: 1,
+                queue_depth: 8,
+                // max_batch 2 + generous deadline: the two requests below are
+                // guaranteed to execute as one batch of 2
+                policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(500) },
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> =
+            (0..2).map(|_| server.submit_image(Tensor::zeros(&[1, 2, 2]), None).unwrap()).collect();
+        for rx in &rxs {
+            let resp = recv_ok(rx);
+            let err = resp.result.expect_err("batch-dim mismatch must be an error response");
+            assert!(err.contains("returned logits"), "{err}");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.served, 0);
+    }
+
+    #[test]
+    fn stats_percentiles_use_ceil_rank() {
+        // the old truncating rank returned the max for p50 of 2 samples
+        assert_eq!(latency_percentile(&[1.0, 2.0], 0.50), 1.0);
+        assert_eq!(latency_percentile(&[1.0, 2.0], 0.95), 2.0);
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(latency_percentile(&ten, 0.50), 5.0);
+        assert_eq!(latency_percentile(&ten, 0.90), 9.0);
+        assert_eq!(latency_percentile(&ten, 0.95), 10.0);
+        assert_eq!(latency_percentile(&[], 0.50), 0.0);
+    }
+
+    #[test]
+    fn bounded_queue_closed_means_drained() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        q.try_push(1).map_err(|_| ()).unwrap();
+        q.try_push(2).map_err(|_| ()).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(3), Err(PushRejected::Closed(3))));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_full_backpressure() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.try_push(1).map_err(|_| ()).unwrap();
+        q.try_push(2).map_err(|_| ()).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushRejected::Full(3))));
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).map_err(|_| ()).unwrap();
+        assert_eq!(q.len(), 2);
+        q.close();
     }
 }

@@ -66,6 +66,11 @@ impl ExecConfig {
 /// mutating graph/params/qweights/act_ranges afterwards would leave `run()`
 /// answering from the stale plan while `run_interpreted()` sees the new
 /// state. Build a fresh `CompiledModel::new` instead of mutating in place.
+///
+/// **Thread-safety contract** (see engine/README.md): because execution is
+/// `&self` over owned data plus that `OnceLock`'d plan, a planned
+/// `CompiledModel` is `Send + Sync` — server workers share one deployment
+/// lock-free through a plain `Arc`, no mutex. Asserted at compile time below.
 pub struct CompiledModel {
     pub graph: Graph,
     /// Float parameters (post graph passes, e.g. BN-folded).
@@ -82,6 +87,16 @@ pub struct CompiledModel {
 }
 
 pub(crate) const BN_EPS: f32 = 1e-5;
+
+// Compile-time proof of the frozen-after-plan contract: every field of
+// `CompiledModel` (graph, params, qweights, ranges, `OnceLock<ExecPlan>`) is
+// owned data, so the whole deployment crosses threads and is shared `&self`
+// by the serving workers without locks. If a future change smuggles in a
+// non-Sync field (Rc, RefCell, raw pointer), this stops compiling.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<CompiledModel>();
+};
 
 impl CompiledModel {
     pub fn new(
@@ -110,6 +125,13 @@ impl CompiledModel {
     /// Run and return the graph outputs (plan-based executor).
     pub fn run(&self, x: &Tensor) -> Result<Vec<Tensor>> {
         self.plan()?.execute(x)
+    }
+
+    /// Per-sample input shape (batch dim excluded) declared by the graph's
+    /// input node — the serving router uses it to reject mis-shaped requests
+    /// before they can poison a batch.
+    pub fn input_shape(&self) -> Option<Vec<usize>> {
+        self.graph.nodes.iter().find(|n| n.kind == "input").map(|n| n.shape.clone())
     }
 
     /// Run through the legacy per-node interpreter (the reference

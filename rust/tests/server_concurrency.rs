@@ -1,0 +1,372 @@
+//! Serving-path integration tests: multi-worker bit-exactness on the int8
+//! path, error-response propagation (no reply channel is ever abandoned),
+//! bounded-queue backpressure, graceful shutdown draining, mixed-shape
+//! rejection, and multi-deployment routing — the contracts behind the
+//! paper's serving-side latency/throughput numbers.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::coordinator::experiment::compile_serving_fleet;
+use quant_trim::coordinator::server::{
+    BatchModel, BatchPolicy, EngineModel, Server, ServerConfig, ServerDeployment,
+};
+use quant_trim::engine::{fp32_model, CompiledModel};
+use quant_trim::perfmodel::Precision;
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::{synth, Rng};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A synthetic int8 NPU deployment (hardware_d toolchain, per-channel
+/// ties-even) on the seeded resnet-like graph — no artifacts needed.
+fn int8_deployment() -> Arc<CompiledModel> {
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xCAFE);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let qstate = BTreeMap::new();
+    let view =
+        CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let be = backend_by_name("hardware_d").unwrap();
+    let dep = be
+        .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
+        .expect("synthetic int8 compile");
+    Arc::new(dep.model)
+}
+
+/// Echoes each request's first pixel after an optional delay.
+struct SlowEcho {
+    delay: Duration,
+    batch: usize,
+}
+
+impl BatchModel for SlowEcho {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let n = images.shape[0];
+        let sz: usize = images.shape[1..].iter().product();
+        let mut out = Tensor::zeros(&[n, 1]);
+        for (i, o) in out.data.iter_mut().enumerate() {
+            *o = images.data[i * sz];
+        }
+        Ok(out)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+#[test]
+fn multi_worker_matches_single_worker_bit_exact_int8() {
+    let model = int8_deployment();
+    let images: Vec<Tensor> = {
+        let mut rng = Rng::new(0x1337);
+        (0..32).map(|_| Tensor::new(vec![3, 16, 16], rng.normal_vec(3 * 256, 1.0))).collect()
+    };
+    let run = |workers: usize| -> Vec<Vec<f32>> {
+        let server = Server::start(
+            vec![ServerDeployment {
+                name: "npu".into(),
+                model: Arc::new(EngineModel::new(model.clone(), 8)),
+            }],
+            ServerConfig {
+                workers,
+                queue_depth: 64,
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            },
+        )
+        .unwrap();
+        // concurrent clients: 4 threads x 8 requests each
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let server = &server;
+            let handles: Vec<_> = images
+                .chunks(8)
+                .map(|chunk| {
+                    s.spawn(move || {
+                        chunk
+                            .iter()
+                            .map(|im| {
+                                let rx = server.submit_image(im.clone(), Some("npu")).unwrap();
+                                rx.recv_timeout(RECV_TIMEOUT)
+                                    .expect("every request must be answered")
+                                    .result
+                                    .expect("int8 deployment must not fail")
+                            })
+                            .collect::<Vec<Vec<f32>>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 32);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.rejected, 0);
+        outs
+    };
+    let single = run(1);
+    let quad = run(4);
+    assert_eq!(single, quad, "int8 serving must be bit-exact across worker counts");
+}
+
+struct ExplodingNpu;
+
+impl BatchModel for ExplodingNpu {
+    fn run_batch(&self, _images: &Tensor) -> Result<Tensor> {
+        bail!("simulated NPU fault")
+    }
+    fn max_batch(&self) -> usize {
+        4
+    }
+}
+
+/// Regression: `server.rs` used to `continue` on model error, abandoning
+/// every reply channel in the batch (clients blocked on `recv()` forever).
+#[test]
+fn model_errors_propagate_to_every_client() {
+    let server = Server::single(
+        ExplodingNpu,
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..10)
+        .map(|i| server.submit_image(Tensor::full(&[1, 2, 2], i as f32), None).unwrap())
+        .collect();
+    for rx in &rxs {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("error responses must still arrive");
+        let err = resp.result.expect_err("model failure must surface as an error response");
+        assert!(err.contains("simulated NPU fault"), "{err}");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.errors, 10);
+    assert_eq!(stats.served, 0);
+}
+
+#[test]
+fn backpressure_rejects_at_bounded_queue() {
+    let server = Server::single(
+        SlowEcho { delay: Duration::from_millis(30), batch: 1 },
+        ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..40 {
+        match server.submit_image(Tensor::full(&[1, 2, 2], i as f32), None) {
+            Ok(rx) => accepted.push((i, rx)),
+            Err(e) => {
+                assert!(e.is_queue_full(), "only QueueFull expected while running");
+                let req = e.into_request();
+                assert_eq!(req.image.data[0], i as f32, "rejected request handed back intact");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(
+        rejected > 0,
+        "40 instant submissions against a depth-2 queue and a 30ms/batch worker must hit QueueFull"
+    );
+    for (i, rx) in &accepted {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("accepted requests are never dropped");
+        let logits = resp.result.expect("slow echo never fails");
+        assert_eq!(logits[0], *i as f32);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, accepted.len());
+    assert_eq!(stats.rejected, rejected);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let server = Server::single(
+        SlowEcho { delay: Duration::from_millis(20), batch: 2 },
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(5) },
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| server.submit_image(Tensor::full(&[1, 2, 2], i as f32), None).unwrap())
+        .collect();
+    // shut down immediately: everything already accepted must still be served
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 8);
+    assert_eq!(stats.errors, 0);
+    for (i, rx) in rxs.iter().enumerate() {
+        let resp = rx.try_recv().expect("shutdown() must drain every reply before returning");
+        let logits = resp.result.expect("slow echo never fails");
+        assert_eq!(logits[0], i as f32);
+    }
+}
+
+#[test]
+fn mixed_shape_rejected_by_declared_input_shape() {
+    let sm = synth::resnet_like(16, 16);
+    let model = Arc::new(fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone()));
+    let server = Server::start(
+        vec![ServerDeployment { name: "fp32".into(), model: Arc::new(EngineModel::new(model, 4)) }],
+        ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let bad = server.submit_image(Tensor::zeros(&[3, 8, 8]), None).unwrap();
+    let good = server.submit_image(Tensor::zeros(&[3, 16, 16]), None).unwrap();
+    let resp = bad.recv_timeout(RECV_TIMEOUT).unwrap();
+    let err = resp.result.expect_err("mis-shaped request must be rejected");
+    assert!(err.contains("expected input shape"), "{err}");
+    let resp = good.recv_timeout(RECV_TIMEOUT).unwrap();
+    assert!(resp.result.is_ok(), "well-shaped request must still serve");
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.errors, 1);
+}
+
+#[test]
+fn mixed_shape_rejected_against_in_flight_batch() {
+    // no declared input shape: the router falls back to screening against
+    // the batch the request would join
+    let server = Server::single(
+        SlowEcho { delay: Duration::ZERO, batch: 4 },
+        ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
+        },
+    )
+    .unwrap();
+    let a = server.submit_image(Tensor::full(&[1, 2, 2], 1.0), None).unwrap();
+    let b = server.submit_image(Tensor::full(&[2, 2, 2], 2.0), None).unwrap(); // wrong shape
+    let c = server.submit_image(Tensor::full(&[1, 2, 2], 3.0), None).unwrap();
+    let d = server.submit_image(Tensor::full(&[1, 2, 2], 4.0), None).unwrap();
+    let e = server.submit_image(Tensor::full(&[1, 2, 2], 5.0), None).unwrap();
+    let resp = b.recv_timeout(RECV_TIMEOUT).unwrap();
+    let err = resp.result.expect_err("mismatched shape must be rejected");
+    assert!(err.contains("batch shape"), "{err}");
+    for (rx, want) in [(&a, 1.0f32), (&c, 3.0), (&d, 4.0), (&e, 5.0)] {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert_eq!(resp.batch_size, 4, "the four matching requests form one full batch");
+        let logits = resp.result.expect("matching requests must serve");
+        assert_eq!(logits[0], want);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.errors, 1);
+}
+
+/// Scales each request's pixel sum by a per-deployment constant, so a
+/// response proves which deployment executed it.
+struct ScaleModel {
+    k: f32,
+}
+
+impl BatchModel for ScaleModel {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        let n = images.shape[0];
+        let sz: usize = images.shape[1..].iter().product();
+        let mut out = Tensor::zeros(&[n, 1]);
+        for (i, o) in out.data.iter_mut().enumerate() {
+            *o = self.k * images.data[i * sz..(i + 1) * sz].iter().sum::<f32>();
+        }
+        Ok(out)
+    }
+    fn max_batch(&self) -> usize {
+        4
+    }
+}
+
+#[test]
+fn router_maps_requests_to_named_deployments() {
+    let server = Server::start(
+        vec![
+            ServerDeployment::new("npu_x2", ScaleModel { k: 2.0 }),
+            ServerDeployment::new("npu_x10", ScaleModel { k: 10.0 }),
+        ],
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let mut expect = Vec::new();
+    for i in 0..12 {
+        let (name, k) = if i % 2 == 0 { ("npu_x2", 2.0f32) } else { ("npu_x10", 10.0f32) };
+        let rx = server.submit_image(Tensor::full(&[1, 2, 2], i as f32), Some(name)).unwrap();
+        expect.push((rx, name, k * 4.0 * i as f32));
+    }
+    for (rx, name, want) in expect {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        assert_eq!(resp.deployment, name);
+        let logits = resp.result.expect("scale model never fails");
+        assert_eq!(logits[0], want);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn serving_fleet_fronts_multiple_precisions() {
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xCA11B);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    // one server fronting two simulated NPUs at different precisions:
+    // hardware_a (strict W8/A8) and hardware_b (W8/ABF16 hybrid)
+    let fleet = compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &[("hardware_a", None), ("hardware_b", None)],
+        &calib,
+        4,
+        None,
+    )
+    .unwrap();
+    assert_eq!(fleet.len(), 2);
+    let server = Server::start(
+        fleet,
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let img = Tensor::new(vec![3, 16, 16], Rng::new(0xF00D).normal_vec(3 * 256, 1.0));
+    let a = server.submit_image(img.clone(), Some("hardware_a")).unwrap();
+    let b = server.submit_image(img.clone(), Some("hardware_b")).unwrap();
+    let ra = a.recv_timeout(RECV_TIMEOUT).unwrap();
+    let rb = b.recv_timeout(RECV_TIMEOUT).unwrap();
+    assert_eq!(ra.deployment, "hardware_a");
+    assert_eq!(rb.deployment, "hardware_b");
+    let la = ra.result.expect("int8 deployment must serve");
+    let lb = rb.result.expect("bf16 deployment must serve");
+    assert_eq!(la.len(), 10);
+    assert_eq!(lb.len(), 10);
+    assert!(la.iter().chain(lb.iter()).all(|v| v.is_finite()));
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.errors, 0);
+}
