@@ -1,24 +1,38 @@
 //! Cross-backend deployment matrix (paper Tables 1-3): deploy Quant-Trim and
 //! MAP checkpoints across the whole simulated fleet and every supported
-//! precision; report Top-1/Top-5/logit-MSE/Brier/ECE/SNR per cell, plus the
-//! Table 3 SNR comparison (QT calibration-only vs MAP + Equalization +
-//! AdaRound).
+//! precision — including the sub-byte INT4 weight path, requested on EVERY
+//! backend so the matrix shows both native W4/A8 cells and the
+//! fallback-to-INT8 cells of devices without int4 kernels; report
+//! Top-1/Top-5/logit-MSE/Brier/ECE/SNR per cell, plus the Table 3 SNR
+//! comparison (QT calibration-only vs MAP + Equalization + AdaRound).
 //!
 //! Uses checkpoints saved by `train_cifar` if present; otherwise trains a
 //! short run first.
 //!
 //!   cargo run --release --example deploy_matrix -- [--model resnet18] [--epochs 12]
+//!
+//! CI smoke mode (no artifacts, no PJRT, no training — synthetic seeded
+//! checkpoint, whole fleet × precision × bit-width in seconds, table written
+//! to DEPLOY_MATRIX.txt for artifact upload):
+//!
+//!   cargo run --release --example deploy_matrix -- --smoke
+
+use std::fmt::Write as _;
 
 use anyhow::Result;
 
-use quant_trim::backends::{all_backends, PtqOptions, RangeSource};
+use quant_trim::backends::{all_backends, BackendSpec, PtqOptions, RangeSource};
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::experiment::{
-    artifacts_dir, deploy_and_eval, train_with_validation, Task,
+    artifacts_dir, deploy_and_eval, synthetic_state, train_with_validation, Task,
 };
 use quant_trim::coordinator::{Curriculum, TrainConfig, TrainState};
-use quant_trim::data::ClsSpec;
+use quant_trim::data::{Batch, ClsSpec};
+use quant_trim::perfmodel::Precision;
+use quant_trim::qir::Graph;
 use quant_trim::runtime::Runtime;
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::synth;
 
 fn arg(name: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
@@ -28,7 +42,126 @@ fn arg(name: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
+fn flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+/// Precisions to request on a backend: everything it lists, plus an explicit
+/// INT4 request when it has no native int4 (to exercise the INT8 fallback
+/// row — the deployment matrix shows WHERE sub-byte support exists).
+fn requested_precisions(be: &BackendSpec) -> Vec<Precision> {
+    let mut precs = be.precisions.clone();
+    if !precs.contains(&Precision::Int4) && precs.contains(&Precision::Int8) {
+        precs.push(Precision::Int4);
+    }
+    precs
+}
+
+const HEADER_FMT: &str =
+    "backend            prec        method          Top-1  Top-5  logitMSE    Brier      ECE    SNRdB    estFPS   fb";
+
+/// One backend × precision × checkpoint row, appended to `table`.
+#[allow(clippy::too_many_arguments)]
+fn matrix_row(
+    table: &mut String,
+    be: &BackendSpec,
+    graph: &Graph,
+    state: &TrainState,
+    prec: Precision,
+    label: &str,
+    src: RangeSource,
+    calib: &[Tensor],
+    eval: &[Batch],
+) {
+    let res = deploy_and_eval(be, graph, state, prec, src, PtqOptions::default(), calib, eval);
+    let line = match res {
+        Ok(m) => format!(
+            "{:<18} {:<11} {:<11} {:>6.2} {:>6.2} {:>9.5} {:>8.5} {:>8.5} {:>8.2} {:>9.0} {:>4}",
+            be.name,
+            m.precision_label(),
+            label,
+            m.top1 * 100.0,
+            m.top5 * 100.0,
+            m.logit_mse,
+            m.brier,
+            m.ece,
+            m.snr_db,
+            m.fps_modelled,
+            m.fallback_ops
+        ),
+        Err(e) => format!("{:<18} {:<11} {:<11} unsupported: {e}", be.name, prec.label(), label),
+    };
+    println!("{line}");
+    let _ = writeln!(table, "{line}");
+}
+
+/// Artifact-free smoke run: the whole fleet on a synthetic seeded checkpoint.
+fn smoke() -> Result<()> {
+    let sm = synth::resnet_like(16, 16);
+    let state = synthetic_state(&sm);
+    let task = Task::Cls(ClsSpec { classes: 10, image: 16, outlier_p: 0.002 });
+    let eval: Vec<Batch> = (0..2).map(|i| task.batch(32, 0x5EED_0000 + i)).collect();
+    let calib: Vec<Tensor> = (0..2).map(|i| task.batch(8, 0xCA11B_00 + i).images).collect();
+
+    let mut table = String::new();
+    let _ = writeln!(
+        table,
+        "=== Deployment matrix (smoke): synthetic resnet-like 3x16x16, whole fleet x precision ==="
+    );
+    println!("{}", table.trim_end());
+    println!("{HEADER_FMT}");
+    let _ = writeln!(table, "{HEADER_FMT}");
+    for be in all_backends() {
+        for prec in requested_precisions(&be) {
+            matrix_row(
+                &mut table,
+                &be,
+                &sm.graph,
+                &state,
+                prec,
+                "synthetic",
+                RangeSource::Calibration,
+                &calib,
+                &eval,
+            );
+        }
+    }
+
+    // FP-to-low-bit gap at both weight bit-widths on a native-int4 part
+    let hd = all_backends().into_iter().find(|b| b.name == "hardware_d").unwrap();
+    let _ = writeln!(table, "\n=== INT8 vs INT4 gap on hardware_d (W8/A8 vs W4/A8) ===");
+    println!("\n=== INT8 vs INT4 gap on hardware_d (W8/A8 vs W4/A8) ===");
+    for prec in [Precision::Int8, Precision::Int4] {
+        let m = deploy_and_eval(
+            &hd,
+            &sm.graph,
+            &state,
+            prec,
+            RangeSource::Calibration,
+            PtqOptions::default(),
+            &calib,
+            &eval,
+        )?;
+        let line = format!(
+            "{:<6} SNR {:>7.2} dB   logitMSE {:>9.6}   modelled {:>6.0} FPS",
+            m.precision.label(),
+            m.snr_db,
+            m.logit_mse,
+            m.fps_modelled
+        );
+        println!("{line}");
+        let _ = writeln!(table, "{line}");
+    }
+
+    std::fs::write("DEPLOY_MATRIX.txt", &table)?;
+    println!("\nwrote DEPLOY_MATRIX.txt");
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    if flag("--smoke") {
+        return smoke();
+    }
     let model = arg("--model", "resnet18");
     let epochs: usize = arg("--epochs", "12").parse()?;
     let dir = artifacts_dir()?;
@@ -58,59 +191,29 @@ fn main() -> Result<()> {
     let qt_state = load_or_train(true)?;
     let map_state = load_or_train(false)?;
 
-    let graph = quant_trim::qir::Graph::load(dir.join(format!("{model}.qir")))?;
-    let eval: Vec<_> = (0..8).map(|i| task.batch(64, 0x5EED_0000 + i)).collect();
-    let calib: Vec<_> = (0..4).map(|i| task.batch(16, 0xCA11B_00 + i).images).collect();
+    let graph = Graph::load(dir.join(format!("{model}.qir")))?;
+    let eval: Vec<Batch> = (0..8).map(|i| task.batch(64, 0x5EED_0000 + i)).collect();
+    let calib: Vec<Tensor> = (0..4).map(|i| task.batch(16, 0xCA11B_00 + i).images).collect();
 
+    let mut table = String::new();
     println!(
-        "\n=== Deployment matrix: {} — every backend x precision x method ===",
+        "\n=== Deployment matrix: {} — every backend x precision (incl. INT4) x method ===",
         model
     );
-    println!(
-        "{:<18} {:<5} {:<11} {:>6} {:>6} {:>9} {:>8} {:>8} {:>8} {:>9} {:>4}",
-        "backend", "prec", "method", "Top-1", "Top-5", "logitMSE", "Brier", "ECE", "SNRdB", "estFPS", "fb"
-    );
+    println!("{HEADER_FMT}");
+    let _ = writeln!(table, "{HEADER_FMT}");
     for be in all_backends() {
-        for prec in be.precisions.clone() {
+        for prec in requested_precisions(&be) {
             for (label, state, src) in [
                 ("Quant-Trim", &qt_state, RangeSource::QatScales),
                 ("MAP", &map_state, RangeSource::Calibration),
             ] {
-                let res = deploy_and_eval(
-                    &be,
-                    &graph,
-                    state,
-                    prec,
-                    src,
-                    PtqOptions::default(),
-                    &calib,
-                    &eval,
-                );
-                match res {
-                    Ok(m) => println!(
-                        "{:<18} {:<5} {:<11} {:>6.2} {:>6.2} {:>9.5} {:>8.5} {:>8.5} {:>8.2} {:>9.0} {:>4}",
-                        be.name,
-                        prec.label(),
-                        label,
-                        m.top1 * 100.0,
-                        m.top5 * 100.0,
-                        m.logit_mse,
-                        m.brier,
-                        m.ece,
-                        m.snr_db,
-                        m.fps_modelled,
-                        m.fallback_ops
-                    ),
-                    Err(e) => println!(
-                        "{:<18} {:<5} {:<11} unsupported: {e}",
-                        be.name,
-                        prec.label(),
-                        label
-                    ),
-                }
+                matrix_row(&mut table, &be, &graph, state, prec, label, src, &calib, &eval);
             }
         }
     }
+    std::fs::write("DEPLOY_MATRIX.txt", &table)?;
+    println!("wrote DEPLOY_MATRIX.txt");
 
     // === Table 3: SNR on Hardware A ===
     // Quant-Trim, calibration only  vs  MAP + Equalization + AdaRound
@@ -120,7 +223,7 @@ fn main() -> Result<()> {
         &ha,
         &graph,
         &qt_state,
-        quant_trim::perfmodel::Precision::Int8,
+        Precision::Int8,
         RangeSource::Calibration, // calibration ONLY — no QAT scales, no extras
         PtqOptions::default(),
         &calib,
@@ -130,7 +233,7 @@ fn main() -> Result<()> {
         &ha,
         &graph,
         &map_state,
-        quant_trim::perfmodel::Precision::Int8,
+        Precision::Int8,
         RangeSource::Calibration,
         PtqOptions { equalization: true, adaround: true },
         &calib,

@@ -46,6 +46,7 @@ fn compile_one(
     state: &TrainState,
     calib: &[Tensor],
     precision: Precision,
+    name: &str,
 ) -> Result<ServerDeployment> {
     let view = CheckpointView {
         graph,
@@ -55,11 +56,11 @@ fn compile_one(
     };
     let dep = be.compile(view, precision, RangeSource::QatScales, calib, PtqOptions::default())?;
     println!(
-        "  {:<16} @ {:?}: modelled {:.0} FPS @ {:.1} W ({} host-fallback ops)",
-        be.name, precision, dep.perf_b1.fps, dep.perf_b1.peak_power_w, dep.perf_b1.fallback_ops
+        "  {:<21} @ {:?}: modelled {:.0} FPS @ {:.1} W ({} host-fallback ops)",
+        name, dep.precision, dep.perf_b1.fps, dep.perf_b1.peak_power_w, dep.perf_b1.fallback_ops
     );
     Ok(ServerDeployment {
-        name: be.name.to_string(),
+        name: name.to_string(),
         model: Arc::new(EngineModel::new(Arc::new(dep.model), 16)),
     })
 }
@@ -85,16 +86,25 @@ fn main() -> Result<()> {
 
     let mut deployments = Vec::new();
     if fleet_mode {
-        // one server fronting every simulated NPU at its default precision
+        // one server fronting every simulated NPU at its default precision,
+        // plus W4/A8 deployments of the parts with native int4 kernels —
+        // the router mixes int4 and int8 traffic in one fleet
         for be in all_backends() {
-            match compile_one(&be, &graph, &state, &calib, be.default_precision()) {
+            match compile_one(&be, &graph, &state, &calib, be.default_precision(), be.name) {
                 Ok(d) => deployments.push(d),
-                Err(e) => println!("  {:<16} skipped: {e}", be.name),
+                Err(e) => println!("  {:<21} skipped: {e}", be.name),
+            }
+            if be.supports_weight_bits(4) {
+                let name = format!("{}_int4", be.name);
+                match compile_one(&be, &graph, &state, &calib, Precision::Int4, &name) {
+                    Ok(d) => deployments.push(d),
+                    Err(e) => println!("  {:<21} skipped: {e}", name),
+                }
             }
         }
     } else {
         let be = backend_by_name(&backend).expect("unknown backend");
-        deployments.push(compile_one(&be, &graph, &state, &calib, Precision::Int8)?);
+        deployments.push(compile_one(&be, &graph, &state, &calib, Precision::Int8, be.name)?);
     }
     anyhow::ensure!(!deployments.is_empty(), "no deployment compiled");
     let names: Vec<String> = deployments.iter().map(|d| d.name.clone()).collect();

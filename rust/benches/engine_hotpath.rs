@@ -1,12 +1,13 @@
 //! Engine hot-path microbenchmarks (the §Perf L3 profile): integer GEMM,
-//! f32 GEMM (reference vs planned tiled), im2col, conv f32 vs i8, weight
-//! quantization, and the headline planned-executor-vs-interpreter model
-//! benchmark on a synthetic ResNet-style conv net (runs with no artifacts).
-//! Custom harness (testutil::bench): 20 warmup + 200 timed iterations,
-//! medians — the paper's protocol.
+//! f32 GEMM (reference vs planned tiled), im2col, conv f32 vs i8 vs packed
+//! i4, weight quantization, and the headline planned-executor-vs-interpreter
+//! model benchmark on a synthetic ResNet-style conv net (runs with no
+//! artifacts) at FP32, INT8 and INT4. Custom harness (testutil::bench):
+//! 20 warmup + 200 timed iterations, medians — the paper's protocol.
 //!
-//! Emits `BENCH_engine.json` (plan vs interpreter medians + speedups) for
-//! the perf trajectory.
+//! Emits `BENCH_engine.json` (plan vs interpreter medians + speedups,
+//! int4-vs-int8 rows) for the perf trajectory; CI gates regressions against
+//! `BENCH_baseline/engine.json` via `tools/bench_gate.rs`.
 //!
 //!   cargo bench --bench engine_hotpath
 
@@ -79,6 +80,12 @@ fn main() {
         std::hint::black_box(ops::conv2d_i8(&x, &qw, None, 1, 1, 1, 0.02, 128, RoundMode::TiesEven));
     })
     .print();
+    // packed int4 weights through the same entry point (nibble-unpacking GEMM)
+    let qw4 = QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4);
+    bench("conv2d_i4  8x32x16x16 -> 64", 5, 40, || {
+        std::hint::black_box(ops::conv2d_i8(&x, &qw4, None, 1, 1, 1, 0.02, 128, RoundMode::TiesEven));
+    })
+    .print();
 
     // weight + activation quantization
     let big = Tensor::new(vec![256, 1152], rng.normal_vec(256 * 1152, 0.1));
@@ -106,6 +113,8 @@ struct PlanReport {
     fp32_plan_us: f64,
     int8_interp_us: f64,
     int8_plan_us: f64,
+    int4_interp_us: f64,
+    int4_plan_us: f64,
 }
 
 fn plan_vs_interpreter() -> PlanReport {
@@ -165,23 +174,65 @@ fn plan_vs_interpreter() -> PlanReport {
     rp8.print();
     println!("    -> int8 speedup: {:.2}x", ri8.median_us / rp8.median_us);
 
+    // INT4 path (W4/A8, same ranges, packed-nibble weights)
+    let mut qweights4 = std::collections::HashMap::new();
+    for n in graph.weight_nodes() {
+        let key = format!("{}.w", n.name);
+        if let Some(w) = params.get(&key) {
+            qweights4.insert(
+                key,
+                QWeight::quantize_bits(w, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4),
+            );
+        }
+    }
+    let m4 = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        qweights4,
+        m8.act_ranges.clone(),
+        ExecConfig { weight_mode: WeightMode::Int4, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+    );
+    m4.plan().unwrap();
+    assert_eq!(
+        m4.run(&x).unwrap()[0].data,
+        m4.run_interpreted(&x).unwrap()[0].data,
+        "planned int4 executor must be bit-exact"
+    );
+    let ri4 = bench("resnet-like int4 interpreter b=1", 10, 120, || {
+        std::hint::black_box(m4.run_interpreted(&x).unwrap());
+    });
+    ri4.print();
+    let rp4 = bench("resnet-like int4 planned     b=1", 10, 120, || {
+        std::hint::black_box(m4.run(&x).unwrap());
+    });
+    rp4.print();
+    println!("    -> int4 speedup: {:.2}x", ri4.median_us / rp4.median_us);
+    println!("    -> int4 vs int8 (planned): {:.2}x", rp8.median_us / rp4.median_us);
+
     PlanReport {
         fp32_interp_us: ri.median_us,
         fp32_plan_us: rp.median_us,
         int8_interp_us: ri8.median_us,
         int8_plan_us: rp8.median_us,
+        int4_interp_us: ri4.median_us,
+        int4_plan_us: rp4.median_us,
     }
 }
 
 fn write_bench_json(r: &PlanReport) {
     let json = format!(
-        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2}\n}}\n",
+        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2}\n}}\n",
         r.fp32_interp_us,
         r.fp32_plan_us,
         r.fp32_interp_us / r.fp32_plan_us,
         r.int8_interp_us,
         r.int8_plan_us,
         r.int8_interp_us / r.int8_plan_us,
+        r.int4_interp_us,
+        r.int4_plan_us,
+        r.int4_interp_us / r.int4_plan_us,
+        r.int8_plan_us / r.int4_plan_us,
     );
     let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
     match std::fs::write(&path, &json) {

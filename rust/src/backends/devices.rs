@@ -31,6 +31,7 @@ fn hardware_a() -> BackendSpec {
             name: "Hardware A",
             form_factor: "M.2 2280 (B/M)",
             link: "PCIe Gen3 x2",
+            tops_int4: 52.0,
             tops_int8: 26.0,
             tflops_bf16: 0.0,
             tflops_fp16: 0.0,
@@ -47,7 +48,8 @@ fn hardware_a() -> BackendSpec {
             op_overhead_us: 6.0,
             fallback_ms: 2.5,
         },
-        precisions: vec![Precision::Int8],
+        precisions: vec![Precision::Int8, Precision::Int4],
+        weight_bits: &[8, 4],
         weight_scheme: QuantScheme::PerTensorSym,
         round: RoundMode::HalfAway,
         calib: CalibMethod::Percentile(0.999),
@@ -68,6 +70,7 @@ fn hardware_b() -> BackendSpec {
             name: "Hardware B",
             form_factor: "M.2 module (4 chips)",
             link: "PCIe Gen3 x4 / USB3",
+            tops_int4: 0.0,
             tops_int8: 24.0,
             tflops_bf16: 6.0,
             tflops_fp16: 0.0,
@@ -82,6 +85,7 @@ fn hardware_b() -> BackendSpec {
             fallback_ms: 2.0,
         },
         precisions: vec![Precision::Bf16, Precision::Int8],
+        weight_bits: &[8],
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::MinMax,
@@ -102,6 +106,7 @@ fn hardware_c() -> BackendSpec {
             name: "Hardware C",
             form_factor: "Full SoC",
             link: "unified DRAM",
+            tops_int4: 0.0,
             tops_int8: 6.0,
             tflops_bf16: 0.0,
             tflops_fp16: 1.5,
@@ -116,6 +121,7 @@ fn hardware_c() -> BackendSpec {
             fallback_ms: 0.4, // same memory space: cheap fallback
         },
         precisions: vec![Precision::Int8, Precision::Fp16],
+        weight_bits: &[8],
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -137,6 +143,7 @@ fn hardware_d() -> BackendSpec {
             name: "Hardware D",
             form_factor: "Low-profile PCIe",
             link: "PCIe Gen3 x8",
+            tops_int4: 120.0,
             tops_int8: 60.0,
             tflops_bf16: 30.0,
             tflops_fp16: 0.0,
@@ -150,7 +157,8 @@ fn hardware_d() -> BackendSpec {
             op_overhead_us: 5.0,
             fallback_ms: 1.5,
         },
-        precisions: vec![Precision::Int8, Precision::Bf16],
+        precisions: vec![Precision::Int8, Precision::Bf16, Precision::Int4],
+        weight_bits: &[8, 4],
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Mse,
@@ -171,6 +179,7 @@ fn jetson_orin_nano() -> BackendSpec {
             name: "Jetson Orin Nano 8GB",
             form_factor: "SoC (SOM)",
             link: "unified LPDDR5",
+            tops_int4: 0.0,
             tops_int8: 20.0,
             tflops_bf16: 0.0,
             tflops_fp16: 5.0, // dense (vendor quotes 10 with 2:4 sparsity)
@@ -185,6 +194,7 @@ fn jetson_orin_nano() -> BackendSpec {
             fallback_ms: 0.2,
         },
         precisions: vec![Precision::Int8, Precision::Fp16, Precision::Fp32],
+        weight_bits: &[8],
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -204,6 +214,7 @@ fn jetson_agx_orin() -> BackendSpec {
             name: "Jetson AGX Orin",
             form_factor: "SoC (SOM)",
             link: "unified LPDDR5",
+            tops_int4: 275.0,
             tops_int8: 137.0,
             tflops_bf16: 0.0,
             tflops_fp16: 42.0,
@@ -217,7 +228,8 @@ fn jetson_agx_orin() -> BackendSpec {
             op_overhead_us: 10.0,
             fallback_ms: 0.2,
         },
-        precisions: vec![Precision::Int8, Precision::Fp16, Precision::Fp32],
+        precisions: vec![Precision::Int8, Precision::Fp16, Precision::Fp32, Precision::Int4],
+        weight_bits: &[8, 4],
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -238,6 +250,7 @@ fn rk3588() -> BackendSpec {
             name: "RK3588 (RKNN)",
             form_factor: "Full SoC",
             link: "unified LPDDR4x",
+            tops_int4: 0.0,
             tops_int8: 6.0,
             tflops_bf16: 0.0,
             tflops_fp16: 1.0,
@@ -252,6 +265,7 @@ fn rk3588() -> BackendSpec {
             fallback_ms: 0.5,
         },
         precisions: vec![Precision::Int8, Precision::Fp16],
+        weight_bits: &[8],
         weight_scheme: QuantScheme::PerTensorSym,
         round: RoundMode::HalfAway,
         calib: CalibMethod::MinMax,
@@ -273,6 +287,7 @@ fn rtx3090() -> BackendSpec {
             name: "RTX 3090",
             form_factor: "Desktop GPU",
             link: "PCIe Gen4 x16",
+            tops_int4: 568.0,
             tops_int8: 284.0,
             tflops_bf16: 71.0,
             tflops_fp16: 71.0,
@@ -286,7 +301,8 @@ fn rtx3090() -> BackendSpec {
             op_overhead_us: 8.0,
             fallback_ms: 0.1,
         },
-        precisions: vec![Precision::Fp16, Precision::Fp32, Precision::Int8],
+        precisions: vec![Precision::Fp16, Precision::Fp32, Precision::Int8, Precision::Int4],
+        weight_bits: &[8, 4],
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -341,6 +357,24 @@ mod tests {
             }
         }
         assert!(backend_by_name("rtx3090").unwrap().device.peak_w >= 150.0);
+    }
+
+    #[test]
+    fn int4_capability_is_a_fleet_axis() {
+        // sub-byte kernels are a capability, not a given: part of the fleet
+        // has native INT4 MAC arrays, the rest must fall back to INT8
+        for be in all_backends() {
+            let has4 = be.supports_weight_bits(4);
+            assert_eq!(has4, be.precisions.contains(&Precision::Int4), "{}", be.name);
+            assert_eq!(has4, be.device.tops_int4 > 0.0, "{}", be.name);
+            assert!(be.supports_weight_bits(8), "{}: every backend has i8", be.name);
+            // default precision is never the sub-byte one
+            assert_ne!(be.default_precision(), Precision::Int4, "{}", be.name);
+        }
+        assert!(backend_by_name("hardware_a").unwrap().supports_weight_bits(4));
+        assert!(backend_by_name("hardware_d").unwrap().supports_weight_bits(4));
+        assert!(!backend_by_name("rk3588").unwrap().supports_weight_bits(4));
+        assert!(!backend_by_name("hardware_b").unwrap().supports_weight_bits(4));
     }
 
     #[test]

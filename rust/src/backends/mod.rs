@@ -40,6 +40,12 @@ pub struct BackendSpec {
     pub device: perfmodel::DeviceSpec,
     /// Precisions this toolchain can compile for (first = default).
     pub precisions: Vec<Precision>,
+    /// Weight bit-widths this toolchain has kernels for. Every backend has
+    /// 8; only parts with native sub-byte MAC arrays list 4. Requesting an
+    /// INT4 deployment on a backend without 4 falls back to INT8 (the
+    /// TruncQuant observation: sub-byte support is exactly where backends
+    /// diverge, so it is modelled per backend, never assumed).
+    pub weight_bits: &'static [u8],
     pub weight_scheme: QuantScheme,
     pub round: RoundMode,
     pub calib: CalibMethod,
@@ -78,14 +84,30 @@ pub struct PtqOptions {
 /// A compiled deployment: the executable model + modelled edge metrics.
 pub struct Deployment {
     pub model: CompiledModel,
+    /// Precision the deployment actually runs at (the *effective* one —
+    /// differs from `requested` when the backend lacked sub-byte kernels).
     pub precision: Precision,
+    /// Precision the caller asked for.
+    pub requested: Precision,
     pub backend: &'static str,
     pub perf_b1: PerfReport,
+}
+
+impl Deployment {
+    /// True when an INT4 request was compiled at INT8 for lack of kernels.
+    pub fn fell_back(&self) -> bool {
+        self.requested != self.precision
+    }
 }
 
 impl BackendSpec {
     pub fn default_precision(&self) -> Precision {
         self.precisions[0]
+    }
+
+    /// Whether this toolchain ships kernels for a weight bit-width.
+    pub fn supports_weight_bits(&self, bits: u8) -> bool {
+        self.weight_bits.contains(&bits)
     }
 
     /// Compile the checkpoint for this backend at the given precision.
@@ -100,6 +122,15 @@ impl BackendSpec {
         calib_batches: &[Tensor],
         ptq: PtqOptions,
     ) -> Result<Deployment> {
+        let requested = precision;
+        // sub-byte fallback: a backend without int4 kernels deploys the
+        // requested graph at INT8 instead of refusing it outright (the
+        // deployment records both precisions so matrices can show the gap)
+        let precision = if precision == Precision::Int4 && !self.supports_weight_bits(4) {
+            Precision::Int8
+        } else {
+            precision
+        };
         if !self.precisions.contains(&precision) {
             bail!("backend {} does not support {:?}", self.name, precision);
         }
@@ -118,11 +149,13 @@ impl BackendSpec {
         }
 
         let (weight_mode, act_mode) = match precision {
+            Precision::Int4 => (WeightMode::Int4, ActMode::Int8 { round: self.round }), // W4/A8
             Precision::Int8 => (WeightMode::Int8, ActMode::Int8 { round: self.round }),
             Precision::Bf16 => (WeightMode::Int8, ActMode::Bf16), // W8/ABF16 hybrid
             Precision::Fp16 => (WeightMode::F32, ActMode::F16),
             Precision::Fp32 => (WeightMode::F32, ActMode::F32),
         };
+        let wbits = weight_mode.weight_bits();
 
         // 3. activation ranges (INT8 only)
         let mut calibration = Calibration::default();
@@ -150,9 +183,9 @@ impl BackendSpec {
             calib::propagate_ranges(&graph, &mut calibration, input_range);
         }
 
-        // 4. weight quantization
+        // 4. weight quantization (at the mode's bit-width: i8 or packed i4)
         let mut qweights = std::collections::HashMap::new();
-        if weight_mode == WeightMode::Int8 {
+        if weight_mode.is_integer() {
             for n in graph.weight_nodes() {
                 let keys: Vec<String> = match n.kind.as_str() {
                     "attention" => ["wq", "wk", "wv", "wo"]
@@ -186,7 +219,9 @@ impl BackendSpec {
                                         let f = facs
                                             .map(|fv| fv[c.min(fv.len() - 1)])
                                             .unwrap_or(1.0);
-                                        crate::tensor::weight_scale(v * f)
+                                        // same |w| statistic, landed on the
+                                        // deployment's grid (127 or 7 steps)
+                                        crate::tensor::weight_scale_bits(v * f, wbits)
                                     })
                                     .collect();
                                 let scales = match self.weight_scheme {
@@ -195,15 +230,17 @@ impl BackendSpec {
                                         vec![scales.iter().fold(0.0f32, |a, &b| a.max(b))]
                                     }
                                 };
-                                QWeight::quantize_with_scales(w, &scales, self.round)
+                                QWeight::quantize_with_scales_bits(w, &scales, self.round, wbits)
                             }
-                            None => QWeight::quantize(w, self.weight_scheme, self.round),
+                            None => QWeight::quantize_bits(w, self.weight_scheme, self.round, wbits),
                         }
                     } else {
-                        QWeight::quantize(w, self.weight_scheme, self.round)
+                        QWeight::quantize_bits(w, self.weight_scheme, self.round, wbits)
                     };
                     // 5. optional AdaRound refinement on calibration data
-                    if ptq.adaround && !calib_batches.is_empty() && n.kind != "attention" {
+                    // (i8 only: the greedy rounding search walks the i8 grid)
+                    if ptq.adaround && wbits == 8 && !calib_batches.is_empty() && n.kind != "attention"
+                    {
                         qw = adaround_refine(&graph, &params, &n.name, w, qw, calib_batches)?;
                     }
                     qweights.insert(key, qw);
@@ -234,7 +271,7 @@ impl BackendSpec {
             self.runtime_boost,
             &|kind| unsupported.contains(&kind),
         );
-        Ok(Deployment { model, precision, backend: self.name, perf_b1 })
+        Ok(Deployment { model, precision, requested, backend: self.name, perf_b1 })
     }
 
     pub fn perf(&self, graph: &Graph, precision: Precision, batch: usize) -> PerfReport {

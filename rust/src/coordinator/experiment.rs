@@ -169,7 +169,11 @@ pub fn train_with_validation<'rt>(
 #[derive(Clone, Debug)]
 pub struct DeployMetrics {
     pub backend: &'static str,
+    /// Effective deployment precision (INT4 requests on backends without
+    /// sub-byte kernels compile — and report — as INT8).
     pub precision: Precision,
+    /// Precision the experiment asked for.
+    pub requested: Precision,
     pub top1: f64,
     pub top5: f64,
     pub logit_mse: f64,
@@ -178,6 +182,17 @@ pub struct DeployMetrics {
     pub snr_db: f64,
     pub fps_modelled: f64,
     pub fallback_ops: usize,
+}
+
+impl DeployMetrics {
+    /// "INT4" / "INT8" / … or "INT4→INT8" when the backend fell back.
+    pub fn precision_label(&self) -> String {
+        if self.requested == self.precision {
+            self.precision.label().to_string()
+        } else {
+            format!("{}→{}", self.requested.label(), self.precision.label())
+        }
+    }
 }
 
 /// Deploy a trained checkpoint on one backend and evaluate against the FP32
@@ -219,7 +234,8 @@ pub fn deploy_and_eval(
     let (top1, top5) = metrics::topk_accuracy(&dev, &labels);
     Ok(DeployMetrics {
         backend: backend.name,
-        precision,
+        precision: dep.precision,
+        requested: precision,
         top1,
         top5,
         logit_mse: metrics::logit_mse(&dev, &refl),
@@ -233,7 +249,10 @@ pub fn deploy_and_eval(
 
 /// One server fronting several simulated NPUs: compile the checkpoint on
 /// each named backend (at its default precision unless overridden) and wrap
-/// every deployment for the batching server, keyed by backend name.
+/// every deployment for the batching server, keyed by backend name. A
+/// backend listed more than once (e.g. `hardware_d` at INT8 *and* INT4 —
+/// a mixed-bit-width fleet) gets `@PREC`-suffixed deployment names so the
+/// router can address each precision separately.
 ///
 /// With `service_floor` set, each deployment is paced per **actual** batch
 /// size: an n-request batch pays the roofline perf model's device latency at
@@ -260,12 +279,26 @@ pub fn compile_serving_fleet(
         let dep = be
             .compile(view, precision, RangeSource::Calibration, calib, PtqOptions::default())
             .with_context(|| format!("compiling serving deployment {name}"))?;
+        // suffix with the REQUESTED precision: unique per spec entry even
+        // when an INT4 request falls back to INT8 (labelling with the
+        // effective precision would collide with the backend's INT8 entry
+        // and the server would refuse the duplicate name)
+        let duplicated = backends.iter().filter(|(n, _)| *n == name).count() > 1;
+        let dep_name = if duplicated {
+            format!("{name}@{}", precision.label())
+        } else {
+            name.to_string()
+        };
+        // pace at the precision the deployment actually runs at (an INT4
+        // request on a backend without int4 kernels executes — and must be
+        // paced — as INT8)
+        let effective = dep.precision;
         let model = Arc::new(dep.model);
         let engine = match service_floor {
             Some(floor) => {
                 let floors: Vec<Duration> = (1..=max_batch)
                     .map(|n| {
-                        let modelled_s = be.perf(graph, precision, n).latency_ms / 1e3;
+                        let modelled_s = be.perf(graph, effective, n).latency_ms / 1e3;
                         let min_s = floor.as_secs_f64() * n as f64 / max_batch as f64;
                         Duration::from_secs_f64(modelled_s.max(min_s))
                     })
@@ -274,9 +307,20 @@ pub fn compile_serving_fleet(
             }
             None => EngineModel::new(model, max_batch),
         };
-        fleet.push(ServerDeployment { name: name.to_string(), model: Arc::new(engine) });
+        fleet.push(ServerDeployment { name: dep_name, model: Arc::new(engine) });
     }
     Ok(fleet)
+}
+
+/// A `TrainState` wrapping a synthetic seeded model (testutil::synth):
+/// lets the deployment-matrix machinery run with no exported artifacts, no
+/// PJRT runtime and no training — the CI smoke path.
+pub fn synthetic_state(sm: &crate::testutil::synth::SynthModel) -> TrainState {
+    TrainState {
+        params: sm.params.clone(),
+        bn: sm.bn.clone(),
+        ..TrainState::default()
+    }
 }
 
 /// Reference (FP32) metrics on the same eval set — the parenthetical columns.

@@ -3,7 +3,8 @@
 //!
 //! Precision model (matches how real NPU toolchains behave at tensor
 //! granularity):
-//! * weights: f32, or pre-quantized i8 (per-channel or per-tensor symmetric)
+//! * weights: f32, or pre-quantized i8 / nibble-packed i4 (per-channel or
+//!   per-tensor symmetric)
 //! * activations: f32, bf16/f16 round-trips at op boundaries, or asymmetric
 //!   u8 with *static* per-node ranges fixed at compile time (calibration or
 //!   embedded QAT scales) — "STATIC (no runtime dyn)" in paper Table 4.
@@ -36,6 +37,25 @@ use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
 pub enum WeightMode {
     F32,
     Int8,
+    /// Packed sub-byte weights (two nibbles per byte, `QWeight::bits == 4`).
+    Int4,
+}
+
+impl WeightMode {
+    /// Integer weight path (pre-quantized `QWeight` payloads, int GEMM).
+    #[inline]
+    pub fn is_integer(self) -> bool {
+        matches!(self, WeightMode::Int8 | WeightMode::Int4)
+    }
+
+    /// Bit-width the backend must quantize `QWeight`s at for this mode.
+    #[inline]
+    pub fn weight_bits(self) -> u8 {
+        match self {
+            WeightMode::Int4 => 4,
+            _ => 8,
+        }
+    }
 }
 
 /// Activation precision chosen by a backend compiler.
@@ -179,7 +199,7 @@ impl CompiledModel {
     }
 
     pub(crate) fn weight_tensor(&self, key: &str) -> Result<Tensor> {
-        if self.cfg.weight_mode == WeightMode::Int8 {
+        if self.cfg.weight_mode.is_integer() {
             if let Some(qw) = self.qweights.get(key) {
                 return Ok(qw.dequantize());
             }
@@ -233,7 +253,7 @@ impl CompiledModel {
                 };
                 let wkey = format!("{}.w", n.name);
                 let mut t = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
-                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                    (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let (sx, zx) = self.input_qparams(&n.inputs[0])?;
                         ops::conv2d_i8(a, qw, bias, stride, pad, groups, sx, zx, round)
                     }
@@ -261,7 +281,7 @@ impl CompiledModel {
                 let mut oshape = a.shape.clone();
                 *oshape.last_mut().unwrap() = dout;
                 let data = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
-                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                    (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let (sx, zx) = self.input_qparams(&n.inputs[0])?;
                         ops::linear_i8(&a.data, rows, din, qw, bias, sx, zx, round)
                     }
@@ -368,7 +388,7 @@ impl CompiledModel {
             let wkey = format!("{}.{mat}", n.name);
             let b = &self.params[&format!("{}.{bias}", n.name)];
             match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
-                (WeightMode::Int8, Some(round), Some(qw)) => {
+                (wm, Some(round), Some(qw)) if wm.is_integer() => {
                     let (sx, zx) = self.input_qparams(&n.inputs[0])?;
                     Ok(ops::linear_i8(input, rows, d, qw, Some(b), sx, zx, round))
                 }

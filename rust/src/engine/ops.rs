@@ -22,13 +22,20 @@
 //!   identical to the reference kernels, so planned f32 results are
 //!   bit-identical too, and the i8 path is bit-exact by construction
 //!   (i32 accumulation is order-independent).
+//!
+//! Sub-byte weights: when a `QWeight` carries a 4-bit payload
+//! (`qw.bits == 4`, two nibbles per byte per output channel), the integer
+//! conv/linear entry points dispatch to [`gemm_i4_dispatch`], which unpacks
+//! nibbles in-register inside the same parallel register-blocked driver and
+//! reuses the zero-point/bias/activation requantization epilogue — so the
+//! int4 path inherits the i8 path's bit-exactness argument unchanged.
 
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{Context, Result};
 
 use crate::qir::Node;
-use crate::tensor::quantized::row_sums_of;
+use crate::tensor::quantized::{packed_row_bytes, row_sums_of};
 use crate::tensor::{QWeight, RoundMode, Tensor};
 
 /// Activation functions a vendor compiler fuses into the GEMM epilogue of
@@ -401,6 +408,122 @@ pub(crate) fn gemm_i8_dispatch(
     });
 }
 
+/// Sign-extend the low nibble of a packed int4 byte to i32.
+#[inline(always)]
+fn nib_lo(b: i8) -> i32 {
+    ((b << 4) >> 4) as i32
+}
+
+/// Sign-extend the high nibble of a packed int4 byte to i32.
+#[inline(always)]
+fn nib_hi(b: i8) -> i32 {
+    (b >> 4) as i32
+}
+
+/// Planned int4 GEMM: same shape contract as [`gemm_i8_dispatch`] but `wq`
+/// is the per-row nibble-packed payload (`cols.div_ceil(2)` bytes per
+/// output channel, see `tensor::pack_int4`). Nibbles are unpacked
+/// in-register inside the same row-chunk parallel / 4-way register-blocked
+/// driver, and the zero-point + bias + activation requantization epilogue
+/// is shared verbatim — i32 accumulation keeps the path bit-exact between
+/// the planned and interpreted executors regardless of chunking.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_i4_dispatch(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let work = rows as u64 * cols as u64 * cout_g as u64;
+    par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
+        gemm_i4_rows(
+            &xq[r0 * cols..(r0 + nr) * cols],
+            nr, cols, wq, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride, o0,
+        );
+    });
+}
+
+/// Serial row-range kernel behind the int4 GEMM: mirrors [`gemm_i8_rows`]
+/// with the k loop walking packed bytes (two MACs per byte, odd tail
+/// handled on the low nibble only).
+#[allow(clippy::too_many_arguments)]
+fn gemm_i4_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let bpr = packed_row_bytes(cols);
+    let pairs = cols / 2;
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let w0 = &wq[o * bpr..(o + 1) * bpr];
+            let w1 = &wq[(o + 1) * bpr..(o + 2) * bpr];
+            let w2 = &wq[(o + 2) * bpr..(o + 3) * bpr];
+            let w3 = &wq[(o + 3) * bpr..(o + 4) * bpr];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for kb in 0..pairs {
+                let x0 = xrow[2 * kb] as i32;
+                let x1 = xrow[2 * kb + 1] as i32;
+                a0 += x0 * nib_lo(w0[kb]) + x1 * nib_hi(w0[kb]);
+                a1 += x0 * nib_lo(w1[kb]) + x1 * nib_hi(w1[kb]);
+                a2 += x0 * nib_lo(w2[kb]) + x1 * nib_hi(w2[kb]);
+                a3 += x0 * nib_lo(w3[kb]) + x1 * nib_hi(w3[kb]);
+            }
+            if cols % 2 == 1 {
+                let x0 = xrow[cols - 1] as i32;
+                a0 += x0 * nib_lo(w0[bpr - 1]);
+                a1 += x0 * nib_lo(w1[bpr - 1]);
+                a2 += x0 * nib_lo(w2[bpr - 1]);
+                a3 += x0 * nib_lo(w3[bpr - 1]);
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wq[o * bpr..(o + 1) * bpr];
+            let mut acc = 0i32;
+            for kb in 0..pairs {
+                acc += xrow[2 * kb] as i32 * nib_lo(wrow[kb])
+                    + xrow[2 * kb + 1] as i32 * nib_hi(wrow[kb]);
+            }
+            if cols % 2 == 1 {
+                acc += xrow[cols - 1] as i32 * nib_lo(wrow[bpr - 1]);
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
 /// Serial row-range kernel behind the integer GEMM.
 #[allow(clippy::too_many_arguments)]
 fn gemm_i8_rows(
@@ -599,7 +722,6 @@ fn conv2d_i8_inner(
     for g in 0..groups {
         let col = im2col_group(x, g, groups, kh, kw, stride, pad, ho, wo);
         let xq = quantize_cols(&col, sx, zx, round);
-        let wslice = &qw.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
         let rowsum = &qw.row_sums[g * cout_g..(g + 1) * cout_g];
         let sxw_g = &sxw[g * cout_g..(g + 1) * cout_g];
         let bslice = if bias_in_epilogue {
@@ -607,10 +729,21 @@ fn conv2d_i8_inner(
         } else {
             None
         };
-        gemm_i8_dispatch(
-            &xq, col.rows, col.cols, wslice, cout_g, rowsum, sxw_g, zx, bslice, act, &mut out_mat,
-            cout, g * cout_g,
-        );
+        if qw.bits == 4 {
+            // packed rows: packed_row_bytes(cols) bytes per output channel
+            let bpr = packed_row_bytes(col.cols);
+            let wslice = &qw.data[g * cout_g * bpr..(g + 1) * cout_g * bpr];
+            gemm_i4_dispatch(
+                &xq, col.rows, col.cols, wslice, cout_g, rowsum, sxw_g, zx, bslice, act,
+                &mut out_mat, cout, g * cout_g,
+            );
+        } else {
+            let wslice = &qw.data[g * cout_g * col.cols..(g + 1) * cout_g * col.cols];
+            gemm_i8_dispatch(
+                &xq, col.rows, col.cols, wslice, cout_g, rowsum, sxw_g, zx, bslice, act,
+                &mut out_mat, cout, g * cout_g,
+            );
+        }
     }
     out_mat_to_nchw(&out_mat, n, cout, ho, wo, if bias_in_epilogue { None } else { bias })
 }
@@ -765,7 +898,11 @@ fn linear_i8_inner(
     let dout = qw.shape[0];
     let xq = quantize_slice(x, sx, zx, round);
     let mut out = vec![0.0f32; rows * dout];
-    gemm_i8_dispatch(&xq, rows, din, &qw.data, dout, &qw.row_sums, sxw, zx, bias, act, &mut out, dout, 0);
+    if qw.bits == 4 {
+        gemm_i4_dispatch(&xq, rows, din, &qw.data, dout, &qw.row_sums, sxw, zx, bias, act, &mut out, dout, 0);
+    } else {
+        gemm_i8_dispatch(&xq, rows, din, &qw.data, dout, &qw.row_sums, sxw, zx, bias, act, &mut out, dout, 0);
+    }
     out
 }
 
@@ -1215,6 +1352,67 @@ mod tests {
             .collect();
         quant_dequant_slice(&mut data, s, z, RoundMode::TiesEven, &lut);
         assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn int4_conv_bit_matches_unpacked_int8_values() {
+        // A 4-bit packed QWeight and an 8-bit QWeight holding the SAME
+        // nibble values (same scales, same row sums) must produce bitwise
+        // identical conv outputs: the packed kernel only changes how the
+        // weights are stored, never the arithmetic.
+        let mut rng = Rng::new(0x14B);
+        // odd channel count and odd im2col width exercise the nibble tail
+        let x = Tensor::new(vec![2, 3, 7, 7], rng.normal_vec(2 * 3 * 49, 1.0));
+        let w = Tensor::new(vec![5, 3, 3, 3], rng.normal_vec(5 * 27, 0.2));
+        let q4 = QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4);
+        assert_eq!(q4.bits, 4);
+        let q8_twin = QWeight::from_parts(q4.shape.clone(), q4.unpacked_data(), q4.scales.clone());
+        assert_eq!(q4.row_sums, q8_twin.row_sums);
+        let (sx, zx) = act_scale_zp(-3.0, 3.0);
+        let y4 = conv2d_i8(&x, &q4, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+        let y8 = conv2d_i8(&x, &q8_twin, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+        assert_eq!(y4.data, y8.data, "packed int4 conv drifted from its unpacked twin");
+
+        // fused epilogue on the int4 path == unfused + activation after
+        let b = Tensor::new(vec![5], rng.normal_vec(5, 0.3));
+        let base = conv2d_i8(&x, &q4, Some(&b), 1, 1, 1, sx, zx, RoundMode::TiesEven);
+        let relu_after = base.map(|v| Act::Relu.apply(v));
+        let sxw = premul_scales(&q4.scales, q4.shape[0], sx);
+        let fused =
+            conv2d_i8_fused(&x, &q4, Some(&b), 1, 1, 1, sx, zx, RoundMode::TiesEven, &sxw, Some(Act::Relu));
+        assert_eq!(relu_after.data, fused.data);
+    }
+
+    #[test]
+    fn int4_linear_bit_matches_unpacked_int8_values() {
+        let mut rng = Rng::new(0x14C);
+        // odd din exercises the packed-row tail nibble
+        let (rows, din, dout) = (6, 37, 9);
+        let w = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.2));
+        let x = rng.normal_vec(rows * din, 1.0);
+        let q4 = QWeight::quantize_bits(&w, QuantScheme::PerTensorSym, RoundMode::HalfAway, 4);
+        let q8_twin = QWeight::from_parts(q4.shape.clone(), q4.unpacked_data(), q4.scales.clone());
+        let (sx, zx) = act_scale_zp(-2.0, 2.5);
+        let y4 = linear_i8(&x, rows, din, &q4, None, sx, zx, RoundMode::HalfAway);
+        let y8 = linear_i8(&x, rows, din, &q8_twin, None, sx, zx, RoundMode::HalfAway);
+        assert_eq!(y4, y8, "packed int4 linear drifted from its unpacked twin");
+    }
+
+    #[test]
+    fn int4_conv_tracks_f32_within_coarser_noise() {
+        // the 16-level grid is coarser than int8 but must stay a faithful
+        // approximation on a well-scaled layer
+        let x = seq_tensor(&[1, 3, 6, 6]).map(|v| v * 2.0 + 0.5);
+        let w = seq_tensor(&[4, 3, 3, 3]).map(|v| v * 0.3);
+        let yf = conv2d_f32(&x, &w, None, 1, 1, 1);
+        let qw = QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4);
+        let (lo, hi) = x.data.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let (sx, zx) = crate::tensor::act_scale_zp(lo, hi);
+        let yq = conv2d_i8(&x, &qw, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+        let scale = yf.abs_max();
+        for (a, b) in yf.data.iter().zip(yq.data.iter()) {
+            assert!((a - b).abs() < scale * 0.25, "int4 conv drifted: {a} vs {b}");
+        }
     }
 
     #[test]

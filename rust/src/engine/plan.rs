@@ -20,17 +20,21 @@
 //!   input instead of cloning it.
 //!
 //! Kernels are the planned forms in [`ops`]: parallel tiled GEMM on both
-//! precision paths with the fused bias+activation epilogue. The int8 path is
-//! bit-exact with the interpreter (asserted by `tests/plan_exactness.rs`);
-//! the f32 path keeps the reference kernels' per-output accumulation order,
-//! so it matches bit-for-bit too.
+//! precision paths with the fused bias+activation epilogue. The integer
+//! ops (`ConvI8`/`LinearI8`/`ProjW::I8`) carry whatever bit-width the
+//! backend quantized at — the kernels dispatch on `QWeight::bits`, so
+//! `WeightMode::Int4` deployments run the nibble-packed int4 GEMM through
+//! the same plan structure. The int8 and int4 paths are bit-exact with the
+//! interpreter (asserted by `tests/plan_exactness.rs`); the f32 path keeps
+//! the reference kernels' per-output accumulation order, so it matches
+//! bit-for-bit too.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
 use crate::engine::ops::{self, Act};
-use crate::engine::{lowp, ActMode, CompiledModel, WeightMode, BN_EPS};
+use crate::engine::{lowp, ActMode, CompiledModel, BN_EPS};
 use crate::qir::Node;
 use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
 
@@ -391,7 +395,7 @@ impl Builder {
         let b = self.param(model, &format!("{}.{bias}", n.name))?;
         let wkey = format!("{}.{mat}", n.name);
         let w = match (model.cfg.weight_mode, iq, model.qweights.get(&wkey)) {
-            (WeightMode::Int8, Some((sx, zx, round)), Some(qw)) => {
+            (wm, Some((sx, zx, round)), Some(qw)) if wm.is_integer() => {
                 let sxw = ops::premul_scales(&qw.scales, d, sx);
                 ProjW::I8 { w: self.add_q(qw.clone()), sx, zx, round, sxw }
             }
@@ -418,7 +422,7 @@ impl Builder {
                 };
                 let wkey = format!("{}.w", n.name);
                 match (model.cfg.weight_mode, model.int8_round(), model.qweights.get(&wkey)) {
-                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                    (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let (sx, zx) = model.input_qparams(&n.inputs[0])?;
                         let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
                         let qw = qw.clone();
@@ -454,7 +458,7 @@ impl Builder {
                 };
                 let wkey = format!("{}.w", n.name);
                 match (model.cfg.weight_mode, model.int8_round(), model.qweights.get(&wkey)) {
-                    (WeightMode::Int8, Some(round), Some(qw)) => {
+                    (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let (sx, zx) = model.input_qparams(&n.inputs[0])?;
                         let sxw = ops::premul_scales(&qw.scales, dout, sx);
                         let qw = qw.clone();
@@ -514,7 +518,7 @@ impl Builder {
                 let d = n.attr_usize("d")?;
                 let heads = n.attr_usize("heads")?;
                 let iq = match (model.cfg.weight_mode, model.int8_round()) {
-                    (WeightMode::Int8, Some(round)) => {
+                    (wm, Some(round)) if wm.is_integer() => {
                         let (sx, zx) = model.input_qparams(&n.inputs[0])?;
                         Some((sx, zx, round))
                     }

@@ -197,6 +197,32 @@ impl Graph {
     pub fn node_out_bytes(&self, n: &Node) -> u64 {
         4 * n.shape.iter().product::<usize>() as u64
     }
+
+    /// Weight elements a node streams per pass (0 for weightless ops).
+    /// The perf model multiplies this by the deployment's bytes-per-weight —
+    /// the term sub-byte (INT4) packing halves.
+    pub fn node_weight_elems(&self, n: &Node) -> u64 {
+        match n.kind.as_str() {
+            "conv2d" => {
+                let cout = n.attr_usize("cout").unwrap_or(n.shape[0]);
+                let cin = n.attr_usize("cin").unwrap_or(1);
+                let g = n.attr_usize("groups").unwrap_or(1);
+                let kh = n.attr_usize("kh").unwrap_or(1);
+                let kw = n.attr_usize("kw").unwrap_or(1);
+                (cout * (cin / g.max(1)) * kh * kw) as u64
+            }
+            "linear" => {
+                let din = n.attr_usize("din").unwrap_or(1);
+                let dout = n.attr_usize("dout").unwrap_or(1);
+                (din * dout) as u64
+            }
+            "attention" => {
+                let d = n.attr_usize("d").unwrap_or(1);
+                (4 * d * d) as u64
+            }
+            _ => 0,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -7,7 +7,10 @@
 
 pub mod quantized;
 
-pub use quantized::{act_scale_zp, weight_scale, QActTensor, QWeight, QuantScheme, RoundMode};
+pub use quantized::{
+    act_scale_zp, pack_int4, packed_row_bytes, unpack_int4, weight_qrange, weight_scale,
+    weight_scale_bits, QActTensor, QWeight, QuantScheme, RoundMode,
+};
 
 /// Dense float32 tensor, row-major.
 #[derive(Clone, Debug, PartialEq)]

@@ -5,13 +5,77 @@
 //! round ties-to-even, symmetric i8 weights, asymmetric u8 activations,
 //! int32 accumulation. Bit-exactness against the Pallas kernels is asserted
 //! by the integration tests over the exported `device_forward` HLO.
+//!
+//! Weights support two bit-widths (paper abstract: "symmetric/asymmetric,
+//! per-tensor/per-channel, INT8/INT4"):
+//! * 8-bit: one i8 per element, grid [-128, 127].
+//! * 4-bit: two's-complement nibbles on the grid [-8, 7], packed two per
+//!   byte **per weight row** (output channel) — rows never share a byte, so
+//!   group/channel slicing stays contiguous and odd row lengths pad the
+//!   final high nibble with 0. `pack_int4`/`unpack_int4` are the round-trip
+//!   pair; the int4 GEMM unpacks nibbles in-register (engine/ops.rs).
 
 use crate::tensor::Tensor;
 
 pub const QMAX_W: f32 = 127.0;
 pub const QMIN_W: f32 = -128.0;
+/// 4-bit symmetric weight grid: two's-complement nibbles in [-8, 7].
+pub const QMAX_W4: f32 = 7.0;
+pub const QMIN_W4: f32 = -8.0;
 pub const QMAX_A: f32 = 255.0;
 pub const EPS: f32 = 1e-6;
+
+/// (qmin, qmax) of the symmetric signed weight grid at a bit-width.
+#[inline]
+pub fn weight_qrange(bits: u8) -> (f32, f32) {
+    match bits {
+        4 => (QMIN_W4, QMAX_W4),
+        _ => (QMIN_W, QMAX_W),
+    }
+}
+
+/// Packed bytes per weight row of `per` sub-byte elements.
+#[inline]
+pub fn packed_row_bytes(per: usize) -> usize {
+    per.div_ceil(2)
+}
+
+/// Pack rows of int4 values (each in [-8, 7], stored in i8) into
+/// two-nibbles-per-byte form. Rows are packed independently: every row of
+/// `per` nibbles occupies `per.div_ceil(2)` bytes, so odd `per` pads the
+/// last high nibble with 0 and row slicing stays byte-aligned.
+pub fn pack_int4(vals: &[i8], per: usize) -> Vec<i8> {
+    if per == 0 {
+        return Vec::new();
+    }
+    let rows = vals.len() / per;
+    let bpr = packed_row_bytes(per);
+    let mut out = vec![0i8; rows * bpr];
+    for r in 0..rows {
+        let row = &vals[r * per..(r + 1) * per];
+        for (j, b) in out[r * bpr..(r + 1) * bpr].iter_mut().enumerate() {
+            let lo = row[2 * j] as u8 & 0x0F;
+            let hi = if 2 * j + 1 < per { (row[2 * j + 1] as u8 & 0x0F) << 4 } else { 0 };
+            *b = (lo | hi) as i8;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_int4`]: expand packed rows back to one i8 per nibble
+/// (sign-extended to [-8, 7]).
+pub fn unpack_int4(packed: &[i8], rows: usize, per: usize) -> Vec<i8> {
+    let bpr = packed_row_bytes(per);
+    let mut out = vec![0i8; rows * per];
+    for r in 0..rows {
+        let row = &packed[r * bpr..(r + 1) * bpr];
+        for j in 0..per {
+            let b = row[j / 2];
+            out[r * per + j] = if j % 2 == 0 { (b << 4) >> 4 } else { b >> 4 };
+        }
+    }
+    out
+}
 
 /// How a backend rounds when quantizing. Vendor compilers differ; this is one
 /// of the opaque degrees of freedom the paper's method is robust to.
@@ -42,31 +106,54 @@ pub enum QuantScheme {
     PerTensorSym,
 }
 
-/// Quantized weight matrix/filter: i8 payload + per-channel (or singleton)
-/// scales along output channels.
+/// Quantized weight matrix/filter: integer payload + per-channel (or
+/// singleton) scales along output channels. `bits` selects the storage:
+/// 8-bit keeps one i8 per element; 4-bit packs two sign-extended nibbles
+/// per byte, per row (see module docs).
 #[derive(Clone, Debug)]
 pub struct QWeight {
     pub shape: Vec<usize>,
+    /// i8 payload (bits == 8) or per-row nibble-packed payload (bits == 4).
     pub data: Vec<i8>,
     /// One scale per output channel (len == shape[0]) or a single scale.
     pub scales: Vec<f32>,
-    /// Per-output-channel sums of the i8 payload (len == shape[0]), fixed at
-    /// quantize time. This is the zero-point correction term of the integer
-    /// GEMM ( sum((xq-zx)*wq) = sum(xq*wq) - zx*rowsum_w ); precomputing it
-    /// here means no kernel ever re-walks the weights at run time.
+    /// Per-output-channel sums of the integer payload (len == shape[0]),
+    /// fixed at quantize time. This is the zero-point correction term of the
+    /// integer GEMM ( sum((xq-zx)*wq) = sum(xq*wq) - zx*rowsum_w );
+    /// precomputing it here means no kernel ever re-walks (or re-unpacks)
+    /// the weights at run time.
     pub row_sums: Vec<i32>,
+    /// Weight bit-width: 8 (i8) or 4 (packed nibbles).
+    pub bits: u8,
 }
 
 impl QWeight {
-    /// Assemble a QWeight from raw parts, computing the row sums.
+    /// Assemble an 8-bit QWeight from raw parts, computing the row sums.
     pub fn from_parts(shape: Vec<usize>, data: Vec<i8>, scales: Vec<f32>) -> QWeight {
-        let cout = if shape.is_empty() { 1 } else { shape[0] };
-        let row_sums = row_sums_of(&data, cout.max(1));
-        QWeight { shape, data, scales, row_sums }
+        QWeight::from_parts_bits(shape, data, scales, 8)
     }
 
-    /// Quantize a float weight tensor (output channels on axis 0).
+    /// Assemble from raw *unpacked* parts at a bit-width: `data` carries one
+    /// value per element regardless of `bits`; 4-bit payloads are packed
+    /// here after the row sums are taken.
+    pub fn from_parts_bits(shape: Vec<usize>, data: Vec<i8>, scales: Vec<f32>, bits: u8) -> QWeight {
+        debug_assert!(bits == 8 || bits == 4, "unsupported weight bit-width {bits}");
+        let cout = if shape.is_empty() { 1 } else { shape[0] };
+        let cout = cout.max(1);
+        let row_sums = row_sums_of(&data, cout);
+        let data = if bits == 4 { pack_int4(&data, data.len() / cout) } else { data };
+        QWeight { shape, data, scales, row_sums, bits }
+    }
+
+    /// Quantize a float weight tensor (output channels on axis 0) to i8.
     pub fn quantize(w: &Tensor, scheme: QuantScheme, round: RoundMode) -> QWeight {
+        QWeight::quantize_bits(w, scheme, round, 8)
+    }
+
+    /// Quantize at a bit-width (8 or 4). The 4-bit grid is symmetric
+    /// [-8, 7] with scale = absmax / 7, mirroring the i8 convention.
+    pub fn quantize_bits(w: &Tensor, scheme: QuantScheme, round: RoundMode, bits: u8) -> QWeight {
+        let (qmin, qmax) = weight_qrange(bits);
         let cout = if w.shape.is_empty() { 1 } else { w.shape[0] };
         let per = w.data.len() / cout.max(1);
         let scales: Vec<f32> = match scheme {
@@ -75,53 +162,91 @@ impl QWeight {
                     let s = w.data[c * per..(c + 1) * per]
                         .iter()
                         .fold(0.0f32, |m, &v| m.max(v.abs()));
-                    s.max(EPS) / QMAX_W
+                    s.max(EPS) / qmax
                 })
                 .collect(),
             QuantScheme::PerTensorSym => {
-                vec![w.abs_max().max(EPS) / QMAX_W]
+                vec![w.abs_max().max(EPS) / qmax]
             }
         };
         let mut data = vec![0i8; w.data.len()];
         for c in 0..cout {
             let s = scales[c.min(scales.len() - 1)];
             for i in 0..per {
-                let q = round.round(w.data[c * per + i] / s).clamp(QMIN_W, QMAX_W);
+                let q = round.round(w.data[c * per + i] / s).clamp(qmin, qmax);
                 data[c * per + i] = q as i8;
             }
         }
-        QWeight::from_parts(w.shape.clone(), data, scales)
+        QWeight::from_parts_bits(w.shape.clone(), data, scales, bits)
     }
 
     /// Quantize with externally supplied scales (e.g. embedded QAT scales
     /// from the Quant-Trim checkpoint's qstate).
     pub fn quantize_with_scales(w: &Tensor, scales: &[f32], round: RoundMode) -> QWeight {
+        QWeight::quantize_with_scales_bits(w, scales, round, 8)
+    }
+
+    /// Quantize with supplied scales at a bit-width.
+    pub fn quantize_with_scales_bits(
+        w: &Tensor,
+        scales: &[f32],
+        round: RoundMode,
+        bits: u8,
+    ) -> QWeight {
+        let (qmin, qmax) = weight_qrange(bits);
         let cout = if w.shape.is_empty() { 1 } else { w.shape[0] };
         let per = w.data.len() / cout.max(1);
         let mut data = vec![0i8; w.data.len()];
         for c in 0..cout {
             let s = scales[c.min(scales.len() - 1)].max(EPS);
             for i in 0..per {
-                let q = round.round(w.data[c * per + i] / s).clamp(QMIN_W, QMAX_W);
+                let q = round.round(w.data[c * per + i] / s).clamp(qmin, qmax);
                 data[c * per + i] = q as i8;
             }
         }
-        QWeight::from_parts(w.shape.clone(), data, scales.to_vec())
+        QWeight::from_parts_bits(w.shape.clone(), data, scales.to_vec(), bits)
     }
 
     pub fn scale(&self, c: usize) -> f32 {
         self.scales[c.min(self.scales.len() - 1)]
     }
 
+    /// Number of output channels (rows) of the payload.
+    pub fn cout(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[0].max(1)
+        }
+    }
+
+    /// Elements per output channel (nibbles, not bytes, for 4-bit payloads).
+    pub fn per_row(&self) -> usize {
+        let n: usize = self.shape.iter().product();
+        n.max(1) / self.cout()
+    }
+
+    /// One integer value per element, whatever the storage: unpacks 4-bit
+    /// payloads, copies 8-bit ones. Reference/fallback paths only — the hot
+    /// kernels unpack nibbles in-register instead.
+    pub fn unpacked_data(&self) -> Vec<i8> {
+        if self.bits == 4 {
+            unpack_int4(&self.data, self.cout(), self.per_row())
+        } else {
+            self.data.clone()
+        }
+    }
+
     /// Dequantize back to float (for fallback/mixed-precision paths).
     pub fn dequantize(&self) -> Tensor {
-        let cout = if self.shape.is_empty() { 1 } else { self.shape[0] };
-        let per = self.data.len() / cout.max(1);
-        let mut out = vec![0.0f32; self.data.len()];
+        let cout = self.cout();
+        let per = self.per_row();
+        let vals = self.unpacked_data();
+        let mut out = vec![0.0f32; vals.len()];
         for c in 0..cout {
             let s = self.scale(c);
             for i in 0..per {
-                out[c * per + i] = self.data[c * per + i] as f32 * s;
+                out[c * per + i] = vals[c * per + i] as f32 * s;
             }
         }
         Tensor::new(self.shape.clone(), out)
@@ -171,8 +296,26 @@ impl QActTensor {
 }
 
 /// Activation scale/zero-point from a calibrated range — mirrors
-/// `ref.act_scale_zp`.
+/// `ref.act_scale_zp` for well-formed ranges.
+///
+/// A degenerate range (constant activation: `lo == hi`, or an inverted
+/// pair) is widened to span zero: `[min(lo, 0), max(hi, 0)]`. The old
+/// behaviour (still what the Python reference does) collapsed to an
+/// EPS-wide grid, so a constant tensor at 5.0 got scale ≈ 4e-9 and a
+/// clamped zero-point — the constant dequantized to ~1e-6 instead of 5.0.
+/// With the widened range the constant sits on the grid exactly (q = 0 or
+/// 255) and zero stays representable.
+///
+/// Non-degenerate ranges are passed through untouched — callers that need
+/// zero in range (the engine does, for the zero-point factorization)
+/// pre-widen with `lo.min(0.0)` themselves; changing that here would
+/// silently shift every calibrated deployment's grid.
 pub fn act_scale_zp(lo: f32, hi: f32) -> (f32, i32) {
+    let (lo, hi) = if hi - lo < EPS {
+        (lo.min(0.0), hi.max(0.0).max(lo + EPS))
+    } else {
+        (lo, hi)
+    };
     let scale = (hi - lo).max(EPS) / QMAX_A;
     let zp = (-lo / scale).round_ties_even().clamp(0.0, QMAX_A) as i32;
     (scale, zp)
@@ -181,6 +324,13 @@ pub fn act_scale_zp(lo: f32, hi: f32) -> (f32, i32) {
 /// Weight scale from the |w| quantile EMA — mirrors `ref.weight_scale`.
 pub fn weight_scale(m: f32) -> f32 {
     m.max(EPS) / QMAX_W
+}
+
+/// Bit-width-aware variant of [`weight_scale`]: the same |w| statistic
+/// lands on the [-8, 7] grid when a backend deploys 4-bit weights.
+pub fn weight_scale_bits(m: f32, bits: u8) -> f32 {
+    let (_, qmax) = weight_qrange(bits);
+    m.max(EPS) / qmax
 }
 
 #[cfg(test)]
@@ -210,6 +360,58 @@ mod tests {
         let q = QWeight::quantize(&w, QuantScheme::PerTensorSym, RoundMode::TiesEven);
         assert_eq!(q.scales.len(), 1);
         assert!((q.scales[0] - 4.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn int4_pack_unpack_roundtrip_even_and_odd() {
+        for per in [1usize, 2, 3, 7, 8, 15] {
+            let rows = 3;
+            let vals: Vec<i8> =
+                (0..rows * per).map(|i| ((i * 5 + 3) % 16) as i8 - 8).collect();
+            let packed = pack_int4(&vals, per);
+            assert_eq!(packed.len(), rows * packed_row_bytes(per));
+            assert_eq!(unpack_int4(&packed, rows, per), vals, "per={per}");
+        }
+    }
+
+    #[test]
+    fn int4_all_nibble_patterns_sign_extend() {
+        // every (lo, hi) nibble pair survives a pack/unpack round trip
+        for lo in -8i8..=7 {
+            for hi in -8i8..=7 {
+                let packed = pack_int4(&[lo, hi], 2);
+                assert_eq!(packed.len(), 1);
+                assert_eq!(unpack_int4(&packed, 1, 2), vec![lo, hi]);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_quantize_uses_seven_step_grid() {
+        let w = t(&[2, 2], vec![0.1, -0.2, 2.0, -4.0]);
+        let q = QWeight::quantize_bits(&w, QuantScheme::PerTensorSym, RoundMode::TiesEven, 4);
+        assert_eq!(q.bits, 4);
+        assert!((q.scales[0] - 4.0 / 7.0).abs() < 1e-7);
+        // packed storage: 2 nibbles per row -> 1 byte per row
+        assert_eq!(q.data.len(), 2);
+        let vals = q.unpacked_data();
+        assert!(vals.iter().all(|&v| (-8..=7).contains(&(v as i32))));
+        // roundtrip bounded by half a step
+        let d = q.dequantize();
+        for (a, b) in w.data.iter().zip(d.data.iter()) {
+            assert!((a - b).abs() <= q.scales[0] / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn int4_row_sums_match_unpacked_payload() {
+        let w = t(&[3, 5], (0..15).map(|i| (i as f32) * 0.3 - 2.0).collect());
+        let q = QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4);
+        let vals = q.unpacked_data();
+        for c in 0..3 {
+            let s: i32 = vals[c * 5..(c + 1) * 5].iter().map(|&v| v as i32).sum();
+            assert_eq!(q.row_sums[c], s);
+        }
     }
 
     #[test]
@@ -247,5 +449,29 @@ mod tests {
         let (s, z) = act_scale_zp(-1.0, 2.0);
         assert!((s - 3.0 / 255.0).abs() < 1e-8);
         assert_eq!(z, 85);
+    }
+
+    #[test]
+    fn degenerate_range_keeps_constant_representable() {
+        // lo == hi > 0: widen to [0, hi] — the constant lands on q = 255
+        let (s, z) = act_scale_zp(5.0, 5.0);
+        assert!(s > 1e-3, "scale collapsed: {s}");
+        assert_eq!(z, 0);
+        let x = t(&[2], vec![5.0, 5.0]);
+        let q = QActTensor::quantize(&x, 5.0, 5.0, RoundMode::TiesEven);
+        let d = q.dequantize();
+        for &v in &d.data {
+            assert!((v - 5.0).abs() < 1e-4, "constant 5.0 dequantized to {v}");
+        }
+
+        // lo == hi < 0: widen to [lo, 0] — the constant lands on q = 0
+        let q = QActTensor::quantize(&t(&[1], vec![-3.0]), -3.0, -3.0, RoundMode::TiesEven);
+        assert!((q.dequantize().data[0] + 3.0).abs() < 1e-4);
+
+        // lo == hi == 0: scale stays positive and zero maps to zero exactly
+        let (s0, z0) = act_scale_zp(0.0, 0.0);
+        assert!(s0 > 0.0 && (0..=255).contains(&z0));
+        let q = QActTensor::quantize(&t(&[1], vec![0.0]), 0.0, 0.0, RoundMode::TiesEven);
+        assert_eq!(q.dequantize().data[0], 0.0);
     }
 }

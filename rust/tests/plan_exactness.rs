@@ -1,9 +1,10 @@
 //! Regression: the plan-based executor must reproduce the legacy
 //! interpreter on every `ExecConfig` — F32/Bf16/F16/Int8 activations ×
-//! F32/Int8 weights — on a ResNet-style conv net and a ViT-style
-//! transformer graph. The int8 path is asserted BIT-EXACT (equality, not
-//! tolerance); the float paths keep the reference kernels' accumulation
-//! order and are asserted exact-within-1e-6 relative.
+//! F32/Int8/Int4 weights — on a ResNet-style conv net and a ViT-style
+//! transformer graph. The integer paths (i8 and nibble-packed i4) are
+//! asserted BIT-EXACT (equality, not tolerance); the float paths keep the
+//! reference kernels' accumulation order and are asserted
+//! exact-within-1e-6 relative.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -16,12 +17,13 @@ use quant_trim::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
 use quant_trim::testutil::synth::{self, SynthModel};
 use quant_trim::testutil::Rng;
 
-/// Quantize every weight-bearing node of a graph.
+/// Quantize every weight-bearing node of a graph at a weight bit-width.
 fn quantize_weights(
     graph: &quant_trim::qir::Graph,
     params: &BTreeMap<String, Tensor>,
     scheme: QuantScheme,
     round: RoundMode,
+    bits: u8,
 ) -> HashMap<String, QWeight> {
     let mut q = HashMap::new();
     for n in graph.weight_nodes() {
@@ -31,7 +33,7 @@ fn quantize_weights(
         };
         for key in keys {
             if let Some(w) = params.get(&key) {
-                q.insert(key, QWeight::quantize(w, scheme, round));
+                q.insert(key, QWeight::quantize_bits(w, scheme, round, bits));
             }
         }
     }
@@ -64,8 +66,8 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
     let batches: Vec<Tensor> =
         (0..2).map(|_| Tensor::new(input_shape.to_vec(), rng.normal_vec(n, 1.0))).collect();
     let ranges = ranges_for(&graph, &params, &batches);
-    let q_perchan = quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven);
-    let q_pertensor = quantize_weights(&graph, &params, QuantScheme::PerTensorSym, RoundMode::HalfAway);
+    let q_perchan = quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven, 8);
+    let q4_perchan = quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4);
     let x = Tensor::new(input_shape.to_vec(), rng.normal_vec(n, 1.0));
 
     let act_modes = [
@@ -74,14 +76,17 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
         ActMode::F16,
         ActMode::Int8 { round: RoundMode::TiesEven },
     ];
-    for weight_mode in [WeightMode::F32, WeightMode::Int8] {
+    for weight_mode in [WeightMode::F32, WeightMode::Int8, WeightMode::Int4] {
+        // the qweights a backend would ship for this mode: 4-bit packed
+        // payloads under Int4, i8 otherwise
+        let qweights = if weight_mode == WeightMode::Int4 { &q4_perchan } else { &q_perchan };
         for act_mode in act_modes {
             let cfg = ExecConfig { weight_mode, act_mode };
             let model = CompiledModel::new(
                 graph.clone(),
                 params.clone(),
                 BTreeMap::new(),
-                q_perchan.clone(),
+                qweights.clone(),
                 ranges.clone(),
                 cfg,
             );
@@ -90,11 +95,11 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
             assert_eq!(interp.len(), planned.len());
             for (a, b) in interp.iter().zip(planned.iter()) {
                 assert_eq!(a.shape, b.shape, "{label} {cfg:?}: shape mismatch");
-                if weight_mode == WeightMode::Int8 && matches!(act_mode, ActMode::Int8 { .. }) {
+                if weight_mode.is_integer() && matches!(act_mode, ActMode::Int8 { .. }) {
                     // the integer engine: bit-exact, asserted as equality
                     assert_eq!(
                         a.data, b.data,
-                        "{label} {cfg:?}: planned int8 executor must be bit-exact"
+                        "{label} {cfg:?}: planned integer executor must be bit-exact"
                     );
                 } else {
                     let err = max_rel_err(&a.data, &b.data);
@@ -104,23 +109,32 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
         }
     }
 
-    // restrictive-NPU flavor: per-tensor weights + DSP rounding, int8 path
-    let cfg = ExecConfig {
-        weight_mode: WeightMode::Int8,
-        act_mode: ActMode::Int8 { round: RoundMode::HalfAway },
-    };
-    let model = CompiledModel::new(
-        graph.clone(),
-        params.clone(),
-        BTreeMap::new(),
-        q_pertensor,
-        ranges.clone(),
-        cfg,
-    );
-    let interp = model.run_interpreted(&x).unwrap();
-    let planned = model.run(&x).unwrap();
-    for (a, b) in interp.iter().zip(planned.iter()) {
-        assert_eq!(a.data, b.data, "{label}: per-tensor/half-away int8 must be bit-exact");
+    // restrictive-NPU flavor: per-tensor weights + DSP rounding, integer
+    // path at both weight bit-widths
+    for bits in [8u8, 4] {
+        let q_pertensor =
+            quantize_weights(&graph, &params, QuantScheme::PerTensorSym, RoundMode::HalfAway, bits);
+        let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
+        let cfg = ExecConfig {
+            weight_mode,
+            act_mode: ActMode::Int8 { round: RoundMode::HalfAway },
+        };
+        let model = CompiledModel::new(
+            graph.clone(),
+            params.clone(),
+            BTreeMap::new(),
+            q_pertensor,
+            ranges.clone(),
+            cfg,
+        );
+        let interp = model.run_interpreted(&x).unwrap();
+        let planned = model.run(&x).unwrap();
+        for (a, b) in interp.iter().zip(planned.iter()) {
+            assert_eq!(
+                a.data, b.data,
+                "{label}: per-tensor/half-away int{bits} must be bit-exact"
+            );
+        }
     }
 }
 
@@ -184,6 +198,65 @@ fn backend_compiled_deployment_is_plan_backed_and_bit_exact() {
     let interp = dep.model.run_interpreted(&x).unwrap();
     assert_eq!(planned[0].data, interp[0].data, "deployed int8 plan must be bit-exact");
     assert!(planned[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn backend_compiled_int4_deployment_is_bit_exact_and_engages_the_4bit_grid() {
+    // hardware_d has native int4 kernels: a Precision::Int4 request must
+    // produce a genuine W4/A8 deployment (no fallback), bit-exact between
+    // plan and interpreter, with logits that differ from the W8/A8
+    // deployment of the same checkpoint (the coarser grid is really in use)
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xD4);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let qstate = BTreeMap::new();
+    let be = backend_by_name("hardware_d").unwrap();
+    let compile_at = |p: Precision| {
+        let view =
+            CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+        be.compile(view, p, RangeSource::Calibration, &calib, PtqOptions::default()).unwrap()
+    };
+    let dep4 = compile_at(Precision::Int4);
+    assert_eq!(dep4.precision, Precision::Int4);
+    assert!(!dep4.fell_back());
+    assert!(dep4.model.qweights.values().all(|q| q.bits == 4), "int4 deployment ships packed weights");
+    let x = Tensor::new(vec![1, 3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+    let planned = dep4.model.run(&x).unwrap();
+    let interp = dep4.model.run_interpreted(&x).unwrap();
+    assert_eq!(planned[0].data, interp[0].data, "deployed int4 plan must be bit-exact");
+    assert!(planned[0].data.iter().all(|v| v.is_finite()));
+
+    let dep8 = compile_at(Precision::Int8);
+    let y8 = dep8.model.run(&x).unwrap();
+    assert_ne!(planned[0].data, y8.first().unwrap().data, "int4 grid must actually differ from int8");
+}
+
+#[test]
+fn int4_request_falls_back_to_int8_without_subbyte_kernels() {
+    // rk3588 has no int4 MAC arrays: the request compiles, but as the INT8
+    // engine — and says so on the deployment
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xD5);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let qstate = BTreeMap::new();
+    let be = backend_by_name("rk3588").unwrap();
+    let view = CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let dep = be
+        .compile(view, Precision::Int4, RangeSource::Calibration, &calib, PtqOptions::default())
+        .unwrap();
+    assert_eq!(dep.requested, Precision::Int4);
+    assert_eq!(dep.precision, Precision::Int8);
+    assert!(dep.fell_back());
+    assert!(dep.model.qweights.values().all(|q| q.bits == 8), "fallback ships plain i8 weights");
+    let x = Tensor::new(vec![1, 3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+    // the fallback deployment IS the int8 deployment, bit for bit
+    let view = CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let dep8 = be
+        .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
+        .unwrap();
+    assert_eq!(dep.model.run(&x).unwrap()[0].data, dep8.model.run(&x).unwrap()[0].data);
 }
 
 #[test]

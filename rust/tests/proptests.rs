@@ -8,8 +8,8 @@ use quant_trim::engine::{fp32_model, lowp, ops};
 use quant_trim::metrics;
 use quant_trim::qir::Graph;
 use quant_trim::tensor::{
-    act_scale_zp, empirical_quantile, subsample, QActTensor, QWeight, QuantScheme, RoundMode,
-    Tensor,
+    act_scale_zp, empirical_quantile, pack_int4, packed_row_bytes, subsample, unpack_int4,
+    QActTensor, QWeight, QuantScheme, RoundMode, Tensor,
 };
 use quant_trim::testutil::{prop_check, Rng};
 
@@ -30,6 +30,96 @@ fn prop_quantize_dequantize_error_bounded() {
             let d = q.dequantize();
             let s = q.scales[0];
             data.iter().zip(d.data.iter()).all(|(a, b)| (a - b).abs() <= s / 2.0 + 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_int4_pack_unpack_roundtrip() {
+    // any nibble matrix — odd and even row lengths, including the
+    // single-column degenerate — survives packing losslessly, at half (or
+    // ceil-half) the bytes
+    prop_check(
+        "int4-pack-roundtrip",
+        300,
+        |r| {
+            let rows = 1 + r.below(8);
+            let per = 1 + r.below(33);
+            let vals: Vec<i8> = (0..rows * per).map(|_| r.below(16) as i8 - 8).collect();
+            (rows, per, vals)
+        },
+        |(rows, per, vals)| {
+            let packed = pack_int4(vals, *per);
+            packed.len() == rows * packed_row_bytes(*per)
+                && unpack_int4(&packed, *rows, *per) == *vals
+        },
+    );
+}
+
+#[test]
+fn prop_int4_quantize_dequantize_error_bounded() {
+    // |x - dq(q4(x))| <= s/2 on the 16-level grid, any scheme
+    prop_check(
+        "int4-qdq-bounded",
+        200,
+        |r| {
+            let n = 1 + r.below(64);
+            let scale = r.range(0.01, 2.0);
+            (r.normal_vec(n, scale), scale)
+        },
+        |(data, _)| {
+            let t = Tensor::new(vec![1, data.len()], data.clone());
+            let q = QWeight::quantize_bits(&t, QuantScheme::PerTensorSym, RoundMode::TiesEven, 4);
+            let d = q.dequantize();
+            let s = q.scales[0];
+            data.iter().zip(d.data.iter()).all(|(a, b)| (a - b).abs() <= s / 2.0 + 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_int4_conv_bit_matches_unpacked_twin() {
+    // the packed int4 conv path must equal, bitwise, the i8 path run on the
+    // same nibble values — storage format must never change arithmetic
+    prop_check(
+        "int4-conv-exact",
+        25,
+        |r| {
+            let c = 1 + r.below(4);
+            let hw = 4 + r.below(5);
+            let co = 1 + r.below(6);
+            let x = Tensor::new(vec![1, c, hw, hw], r.normal_vec(c * hw * hw, 1.0));
+            let w = Tensor::new(vec![co, c, 3, 3], r.normal_vec(co * c * 9, 0.2));
+            (x, w)
+        },
+        |(x, w)| {
+            let q4 = QWeight::quantize_bits(w, QuantScheme::PerChannelSym, RoundMode::TiesEven, 4);
+            let twin = QWeight::from_parts(q4.shape.clone(), q4.unpacked_data(), q4.scales.clone());
+            let (sx, zx) = act_scale_zp(-3.0, 3.0);
+            let y4 = ops::conv2d_i8(x, &q4, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+            let y8 = ops::conv2d_i8(x, &twin, None, 1, 1, 1, sx, zx, RoundMode::TiesEven);
+            y4.data == y8.data
+        },
+    );
+}
+
+#[test]
+fn prop_degenerate_act_range_stays_representable() {
+    // lo == hi (constant activation) must yield a positive scale, an
+    // in-grid zero point, and a constant that round-trips through the grid
+    prop_check(
+        "degenerate-range",
+        300,
+        |r| r.range(-6.0, 6.0),
+        |&v| {
+            let (s, z) = act_scale_zp(v, v);
+            if !(s > 0.0 && s.is_finite() && (0..=255).contains(&z)) {
+                return false;
+            }
+            let t = Tensor::new(vec![1], vec![v]);
+            let d = QActTensor::quantize(&t, v, v, RoundMode::TiesEven).dequantize();
+            // one grid step of slack: the widened range spans [min(v,0), max(v,0)]
+            (d.data[0] - v).abs() <= s + 1e-6
         },
     );
 }

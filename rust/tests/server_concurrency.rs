@@ -370,3 +370,48 @@ fn serving_fleet_fronts_multiple_precisions() {
     assert_eq!(stats.served, 2);
     assert_eq!(stats.errors, 0);
 }
+
+#[test]
+fn serving_fleet_mixes_int4_and_int8_bit_widths() {
+    // the same physical backend listed at both weight bit-widths: the fleet
+    // compiler disambiguates the deployment names with @PREC suffixes and
+    // the router serves each grid independently
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xCA114);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let fleet = compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &[("hardware_d", Some(Precision::Int8)), ("hardware_d", Some(Precision::Int4))],
+        &calib,
+        4,
+        None,
+    )
+    .unwrap();
+    let names: Vec<&str> = fleet.iter().map(|d| d.name.as_str()).collect();
+    assert_eq!(names, vec!["hardware_d@INT8", "hardware_d@INT4"]);
+    let server = Server::start(
+        fleet,
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let img = Tensor::new(vec![3, 16, 16], Rng::new(0xF00E).normal_vec(3 * 256, 1.0));
+    let r8 = server.submit_image(img.clone(), Some("hardware_d@INT8")).unwrap();
+    let r4 = server.submit_image(img.clone(), Some("hardware_d@INT4")).unwrap();
+    let l8 = r8.recv_timeout(RECV_TIMEOUT).unwrap().result.expect("int8 serves");
+    let l4 = r4.recv_timeout(RECV_TIMEOUT).unwrap().result.expect("int4 serves");
+    assert_eq!(l8.len(), 10);
+    assert_eq!(l4.len(), 10);
+    assert!(l8.iter().chain(l4.iter()).all(|v| v.is_finite()));
+    // the two grids really differ — int4 traffic is not silently int8
+    assert_ne!(l8, l4, "int4 deployment must answer from the 16-level weight grid");
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.errors, 0);
+}

@@ -1,0 +1,140 @@
+//! CI bench regression gate: compares a bench JSON emitted by
+//! `cargo bench --bench engine_hotpath` (BENCH_engine.json) against the
+//! committed baseline in `BENCH_baseline/` and fails if the planned
+//! executor's throughput regressed beyond tolerance.
+//!
+//! Gated metrics are the `*_speedup` ratios (planned-executor throughput
+//! relative to the interpreter, measured in the SAME run) — machine-
+//! independent, so a committed baseline is meaningful across CI runners.
+//! Raw `_us` medians are printed for context but not gated: absolute
+//! microseconds on shared runners are noise.
+//!
+//!   cargo run --release --bin bench_gate -- BENCH_baseline/engine.json BENCH_engine.json
+//!   cargo run --release --bin bench_gate -- <baseline> <current> --tolerance 0.15
+//!
+//! Exit codes: 0 pass, 1 regression, 2 usage/parse error.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+/// Minimal flat-JSON number extraction: every `"key": <number>` pair. The
+/// bench emitters write flat objects; no vendored JSON crate is available
+/// (offline build), and this stays robust to added keys.
+fn parse_numbers(src: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let bytes = src.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        let Some(end) = src[i + 1..].find('"').map(|e| i + 1 + e) else { break };
+        let key = &src[i + 1..end];
+        let mut j = end + 1;
+        while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] != b':' {
+            i = end + 1;
+            continue;
+        }
+        j += 1;
+        while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+            j += 1;
+        }
+        let start = j;
+        while j < bytes.len() && matches!(bytes[j], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+            j += 1;
+        }
+        if j > start {
+            if let Ok(v) = src[start..j].parse::<f64>() {
+                out.insert(key.to_string(), v);
+            }
+        }
+        i = j.max(end + 1);
+    }
+    out
+}
+
+fn load(path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let nums = parse_numbers(&src);
+    if nums.is_empty() {
+        return Err(format!("{path}: no numeric fields found"));
+    }
+    Ok(nums)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    let mut tolerance = 0.15f64;
+    let mut paths: Vec<&str> = Vec::new();
+    let mut i = 1;
+    while i < args.len() {
+        if args[i] == "--tolerance" {
+            match args.get(i + 1).and_then(|v| v.parse::<f64>().ok()) {
+                Some(t) if (0.0..1.0).contains(&t) => tolerance = t,
+                _ => {
+                    eprintln!("bench_gate: --tolerance needs a value in [0, 1)");
+                    return ExitCode::from(2);
+                }
+            }
+            i += 2;
+        } else {
+            paths.push(&args[i]);
+            i += 1;
+        }
+    }
+    if paths.len() != 2 {
+        eprintln!("usage: bench_gate <baseline.json> <current.json> [--tolerance 0.15]");
+        return ExitCode::from(2);
+    }
+    let (baseline_path, current_path) = (paths[0], paths[1]);
+    let (baseline, current) = match (load(baseline_path), load(current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (b, c) => {
+            for e in [b.err(), c.err()].into_iter().flatten() {
+                eprintln!("bench_gate: {e}");
+            }
+            return ExitCode::from(2);
+        }
+    };
+
+    println!("bench gate: {current_path} vs {baseline_path} (tolerance {:.0}%)", tolerance * 100.0);
+    let mut gated = 0usize;
+    let mut failures = 0usize;
+    for (key, &base) in &baseline {
+        let Some(&cur) = current.get(key) else {
+            if key.ends_with("_speedup") {
+                eprintln!("  FAIL {key}: present in baseline, missing from current run");
+                failures += 1;
+            }
+            continue;
+        };
+        if key.ends_with("_speedup") {
+            gated += 1;
+            let floor = base * (1.0 - tolerance);
+            let ok = cur >= floor;
+            println!(
+                "  {} {key}: {cur:.2} vs baseline {base:.2} (floor {floor:.2})",
+                if ok { "ok  " } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        } else if key.ends_with("_us") {
+            println!("  info {key}: {cur:.1} us (baseline machine: {base:.1} us, not gated)");
+        }
+    }
+    if gated == 0 {
+        eprintln!("bench_gate: baseline has no *_speedup metrics to gate");
+        return ExitCode::from(2);
+    }
+    if failures > 0 {
+        eprintln!("bench_gate: {failures} metric(s) regressed >{:.0}%", tolerance * 100.0);
+        return ExitCode::from(1);
+    }
+    println!("bench_gate: all {gated} gated metric(s) within tolerance");
+    ExitCode::SUCCESS
+}
