@@ -2,7 +2,10 @@
 //! MAP checkpoints across the whole simulated fleet and every supported
 //! precision — including the sub-byte INT4 weight path, requested on EVERY
 //! backend so the matrix shows both native W4/A8 cells and the
-//! fallback-to-INT8 cells of devices without int4 kernels; report
+//! fallback-to-INT8 cells of devices without int4 kernels, and including the
+//! paper's **static-vs-dynamic activation scaling** axis at the integer
+//! precisions (dynamic requested on every backend too; parts without runtime
+//! range support print the `dyn→static` fallback cell); report
 //! Top-1/Top-5/logit-MSE/Brier/ECE/SNR per cell, plus the Table 3 SNR
 //! comparison (QT calibration-only vs MAP + Equalization + AdaRound).
 //!
@@ -24,11 +27,12 @@ use anyhow::Result;
 use quant_trim::backends::{all_backends, BackendSpec, PtqOptions, RangeSource};
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::experiment::{
-    artifacts_dir, deploy_and_eval, synthetic_state, train_with_validation, Task,
+    artifacts_dir, deploy_and_eval, deploy_and_eval_scaled, synthetic_state,
+    train_with_validation, Task,
 };
 use quant_trim::coordinator::{Curriculum, TrainConfig, TrainState};
 use quant_trim::data::{Batch, ClsSpec};
-use quant_trim::perfmodel::Precision;
+use quant_trim::perfmodel::{ActScaling, Precision};
 use quant_trim::qir::Graph;
 use quant_trim::runtime::Runtime;
 use quant_trim::tensor::Tensor;
@@ -57,10 +61,22 @@ fn requested_precisions(be: &BackendSpec) -> Vec<Precision> {
     precs
 }
 
-const HEADER_FMT: &str =
-    "backend            prec        method          Top-1  Top-5  logitMSE    Brier      ECE    SNRdB    estFPS   fb";
+/// Activation-scaling modes to request at a precision: integer deployments
+/// get the full static-vs-dynamic comparison (dynamic is requested on EVERY
+/// backend — parts without runtime range support show the fallback-to-static
+/// cell, exactly like the INT4→INT8 column); float-activation deployments
+/// have no requantization points, so only static is meaningful.
+fn requested_scalings(prec: Precision) -> Vec<ActScaling> {
+    match prec {
+        Precision::Int8 | Precision::Int4 => vec![ActScaling::Static, ActScaling::Dynamic],
+        _ => vec![ActScaling::Static],
+    }
+}
 
-/// One backend × precision × checkpoint row, appended to `table`.
+const HEADER_FMT: &str =
+    "backend            prec        act         method          Top-1  Top-5  logitMSE    Brier      ECE    SNRdB    estFPS   fb";
+
+/// One backend × precision × scaling × checkpoint row, appended to `table`.
 #[allow(clippy::too_many_arguments)]
 fn matrix_row(
     table: &mut String,
@@ -68,17 +84,29 @@ fn matrix_row(
     graph: &Graph,
     state: &TrainState,
     prec: Precision,
+    scaling: ActScaling,
     label: &str,
     src: RangeSource,
     calib: &[Tensor],
     eval: &[Batch],
 ) {
-    let res = deploy_and_eval(be, graph, state, prec, src, PtqOptions::default(), calib, eval);
+    let res = deploy_and_eval_scaled(
+        be,
+        graph,
+        state,
+        prec,
+        scaling,
+        src,
+        PtqOptions::default(),
+        calib,
+        eval,
+    );
     let line = match res {
         Ok(m) => format!(
-            "{:<18} {:<11} {:<11} {:>6.2} {:>6.2} {:>9.5} {:>8.5} {:>8.5} {:>8.2} {:>9.0} {:>4}",
+            "{:<18} {:<11} {:<11} {:<11} {:>6.2} {:>6.2} {:>9.5} {:>8.5} {:>8.5} {:>8.2} {:>9.0} {:>4}",
             be.name,
             m.precision_label(),
+            m.scaling_label(),
             label,
             m.top1 * 100.0,
             m.top5 * 100.0,
@@ -89,7 +117,13 @@ fn matrix_row(
             m.fps_modelled,
             m.fallback_ops
         ),
-        Err(e) => format!("{:<18} {:<11} {:<11} unsupported: {e}", be.name, prec.label(), label),
+        Err(e) => format!(
+            "{:<18} {:<11} {:<11} {:<11} unsupported: {e}",
+            be.name,
+            prec.label(),
+            scaling.label(),
+            label
+        ),
     };
     println!("{line}");
     let _ = writeln!(table, "{line}");
@@ -113,22 +147,54 @@ fn smoke() -> Result<()> {
     let _ = writeln!(table, "{HEADER_FMT}");
     for be in all_backends() {
         for prec in requested_precisions(&be) {
-            matrix_row(
-                &mut table,
-                &be,
-                &sm.graph,
-                &state,
-                prec,
-                "synthetic",
-                RangeSource::Calibration,
-                &calib,
-                &eval,
-            );
+            for scaling in requested_scalings(prec) {
+                matrix_row(
+                    &mut table,
+                    &be,
+                    &sm.graph,
+                    &state,
+                    prec,
+                    scaling,
+                    "synthetic",
+                    RangeSource::Calibration,
+                    &calib,
+                    &eval,
+                );
+            }
         }
     }
 
-    // FP-to-low-bit gap at both weight bit-widths on a native-int4 part
+    // paper Table 4/5 shape: static vs dynamic activation scaling at INT8 on
+    // a native-dynamic part — dynamic needs no calibration, costs modelled FPS
     let hd = all_backends().into_iter().find(|b| b.name == "hardware_d").unwrap();
+    let _ = writeln!(table, "\n=== static vs dynamic activation scaling on hardware_d (INT8) ===");
+    println!("\n=== static vs dynamic activation scaling on hardware_d (INT8) ===");
+    for scaling in [ActScaling::Static, ActScaling::Dynamic] {
+        // dynamic is deployed calibration-free: zero calibration batches
+        let cal: &[Tensor] = if scaling == ActScaling::Dynamic { &[] } else { &calib };
+        let m = deploy_and_eval_scaled(
+            &hd,
+            &sm.graph,
+            &state,
+            Precision::Int8,
+            scaling,
+            RangeSource::Calibration,
+            PtqOptions::default(),
+            cal,
+            &eval,
+        )?;
+        let line = format!(
+            "{:<8} SNR {:>7.2} dB   logitMSE {:>9.6}   modelled {:>6.0} FPS",
+            m.scaling_label(),
+            m.snr_db,
+            m.logit_mse,
+            m.fps_modelled
+        );
+        println!("{line}");
+        let _ = writeln!(table, "{line}");
+    }
+
+    // FP-to-low-bit gap at both weight bit-widths on the same part
     let _ = writeln!(table, "\n=== INT8 vs INT4 gap on hardware_d (W8/A8 vs W4/A8) ===");
     println!("\n=== INT8 vs INT4 gap on hardware_d (W8/A8 vs W4/A8) ===");
     for prec in [Precision::Int8, Precision::Int4] {
@@ -204,11 +270,15 @@ fn main() -> Result<()> {
     let _ = writeln!(table, "{HEADER_FMT}");
     for be in all_backends() {
         for prec in requested_precisions(&be) {
-            for (label, state, src) in [
-                ("Quant-Trim", &qt_state, RangeSource::QatScales),
-                ("MAP", &map_state, RangeSource::Calibration),
-            ] {
-                matrix_row(&mut table, &be, &graph, state, prec, label, src, &calib, &eval);
+            for scaling in requested_scalings(prec) {
+                for (label, state, src) in [
+                    ("Quant-Trim", &qt_state, RangeSource::QatScales),
+                    ("MAP", &map_state, RangeSource::Calibration),
+                ] {
+                    matrix_row(
+                        &mut table, &be, &graph, state, prec, scaling, label, src, &calib, &eval,
+                    );
+                }
             }
         }
     }

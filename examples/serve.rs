@@ -6,7 +6,9 @@
 //! Single-deployment:
 //!   cargo run --release --example serve -- [--requests 256] [--backend hardware_d] [--workers 2]
 //! Whole fleet (one server fronting every backend at its default precision,
-//! traffic round-robined across deployments):
+//! plus `*_int4` deployments where sub-byte kernels exist and
+//! calibration-free `*_dyn` dynamic-scaling deployments where the runtime
+//! supports live-batch ranges; traffic round-robined across deployments):
 //!   cargo run --release --example serve -- --fleet [--workers 4]
 
 use std::collections::BTreeMap;
@@ -25,7 +27,7 @@ use quant_trim::coordinator::server::{
 };
 use quant_trim::coordinator::TrainState;
 use quant_trim::data::{gen_cls_batch, ClsSpec};
-use quant_trim::perfmodel::Precision;
+use quant_trim::perfmodel::{ActScaling, Precision};
 use quant_trim::tensor::Tensor;
 
 fn arg(name: &str, default: &str) -> String {
@@ -40,12 +42,14 @@ fn flag(name: &str) -> bool {
     std::env::args().any(|a| a == name)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn compile_one(
     be: &BackendSpec,
     graph: &quant_trim::qir::Graph,
     state: &TrainState,
     calib: &[Tensor],
     precision: Precision,
+    scaling: ActScaling,
     name: &str,
 ) -> Result<ServerDeployment> {
     let view = CheckpointView {
@@ -54,10 +58,16 @@ fn compile_one(
         bn: &state.bn,
         qstate: &state.qstate,
     };
-    let dep = be.compile(view, precision, RangeSource::QatScales, calib, PtqOptions::default())?;
+    let dep =
+        be.compile_scaled(view, precision, scaling, RangeSource::QatScales, calib, PtqOptions::default())?;
     println!(
-        "  {:<21} @ {:?}: modelled {:.0} FPS @ {:.1} W ({} host-fallback ops)",
-        name, dep.precision, dep.perf_b1.fps, dep.perf_b1.peak_power_w, dep.perf_b1.fallback_ops
+        "  {:<21} @ {:?}/{}: modelled {:.0} FPS @ {:.1} W ({} host-fallback ops)",
+        name,
+        dep.precision,
+        dep.act_scaling.label(),
+        dep.perf_b1.fps,
+        dep.perf_b1.peak_power_w,
+        dep.perf_b1.fallback_ops
     );
     Ok(ServerDeployment {
         name: name.to_string(),
@@ -87,16 +97,28 @@ fn main() -> Result<()> {
     let mut deployments = Vec::new();
     if fleet_mode {
         // one server fronting every simulated NPU at its default precision,
-        // plus W4/A8 deployments of the parts with native int4 kernels —
-        // the router mixes int4 and int8 traffic in one fleet
+        // plus W4/A8 deployments of the parts with native int4 kernels and
+        // dynamic-scaling deployments of the parts whose runtime can range
+        // per batch — the router mixes int4/int8 and static/dynamic traffic
+        // in one fleet
         for be in all_backends() {
-            match compile_one(&be, &graph, &state, &calib, be.default_precision(), be.name) {
+            let st = ActScaling::Static;
+            match compile_one(&be, &graph, &state, &calib, be.default_precision(), st, be.name) {
                 Ok(d) => deployments.push(d),
                 Err(e) => println!("  {:<21} skipped: {e}", be.name),
             }
             if be.supports_weight_bits(4) {
                 let name = format!("{}_int4", be.name);
-                match compile_one(&be, &graph, &state, &calib, Precision::Int4, &name) {
+                match compile_one(&be, &graph, &state, &calib, Precision::Int4, st, &name) {
+                    Ok(d) => deployments.push(d),
+                    Err(e) => println!("  {:<21} skipped: {e}", name),
+                }
+            }
+            if be.supports_dynamic_act && be.precisions.contains(&Precision::Int8) {
+                // calibration-free INT8: live-batch ranges, no calib set
+                let name = format!("{}_dyn", be.name);
+                match compile_one(&be, &graph, &state, &[], Precision::Int8, ActScaling::Dynamic, &name)
+                {
                     Ok(d) => deployments.push(d),
                     Err(e) => println!("  {:<21} skipped: {e}", name),
                 }
@@ -104,7 +126,8 @@ fn main() -> Result<()> {
         }
     } else {
         let be = backend_by_name(&backend).expect("unknown backend");
-        deployments.push(compile_one(&be, &graph, &state, &calib, Precision::Int8, be.name)?);
+        deployments
+            .push(compile_one(&be, &graph, &state, &calib, Precision::Int8, ActScaling::Static, be.name)?);
     }
     anyhow::ensure!(!deployments.is_empty(), "no deployment compiled");
     let names: Vec<String> = deployments.iter().map(|d| d.name.clone()).collect();

@@ -2,12 +2,14 @@
 //! f32 GEMM (reference vs planned tiled), im2col, conv f32 vs i8 vs packed
 //! i4, weight quantization, and the headline planned-executor-vs-interpreter
 //! model benchmark on a synthetic ResNet-style conv net (runs with no
-//! artifacts) at FP32, INT8 and INT4. Custom harness (testutil::bench):
+//! artifacts) at FP32, INT8, INT4 and dynamic-scaled INT8 (live-batch
+//! ranges, calibration-free). Custom harness (testutil::bench):
 //! 20 warmup + 200 timed iterations, medians — the paper's protocol.
 //!
 //! Emits `BENCH_engine.json` (plan vs interpreter medians + speedups,
-//! int4-vs-int8 rows) for the perf trajectory; CI gates regressions against
-//! `BENCH_baseline/engine.json` via `tools/bench_gate.rs`.
+//! int4-vs-int8 and dyn-vs-static rows) for the perf trajectory; CI gates
+//! regressions against `BENCH_baseline/engine.json` via
+//! `tools/bench_gate.rs`.
 //!
 //!   cargo bench --bench engine_hotpath
 
@@ -115,6 +117,8 @@ struct PlanReport {
     int8_plan_us: f64,
     int4_interp_us: f64,
     int4_plan_us: f64,
+    dyn_interp_us: f64,
+    dyn_plan_us: f64,
 }
 
 fn plan_vs_interpreter() -> PlanReport {
@@ -153,7 +157,7 @@ fn plan_vs_interpreter() -> PlanReport {
         graph.clone(),
         params.clone(),
         BTreeMap::new(),
-        qweights,
+        qweights.clone(),
         ranges,
         ExecConfig { weight_mode: WeightMode::Int8, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
     );
@@ -210,6 +214,36 @@ fn plan_vs_interpreter() -> PlanReport {
     println!("    -> int4 speedup: {:.2}x", ri4.median_us / rp4.median_us);
     println!("    -> int4 vs int8 (planned): {:.2}x", rp8.median_us / rp4.median_us);
 
+    // DYNAMIC activation scaling (W8/A8-dyn): same i8 weights, NO ranges —
+    // every quantization point scans the live batch (ops::dyn_qparams)
+    let mdyn = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        qweights,
+        std::collections::HashMap::new(), // calibration-free
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::DynInt8 { round: RoundMode::TiesEven },
+        },
+    );
+    mdyn.plan().unwrap();
+    assert_eq!(
+        mdyn.run(&x).unwrap()[0].data,
+        mdyn.run_interpreted(&x).unwrap()[0].data,
+        "planned dynamic int8 executor must be bit-exact"
+    );
+    let rid = bench("resnet-like dyn8 interpreter b=1", 10, 120, || {
+        std::hint::black_box(mdyn.run_interpreted(&x).unwrap());
+    });
+    rid.print();
+    let rpd = bench("resnet-like dyn8 planned     b=1", 10, 120, || {
+        std::hint::black_box(mdyn.run(&x).unwrap());
+    });
+    rpd.print();
+    println!("    -> dyn8 speedup: {:.2}x", rid.median_us / rpd.median_us);
+    println!("    -> dyn vs static int8 (planned): {:.2}x", rp8.median_us / rpd.median_us);
+
     PlanReport {
         fp32_interp_us: ri.median_us,
         fp32_plan_us: rp.median_us,
@@ -217,12 +251,14 @@ fn plan_vs_interpreter() -> PlanReport {
         int8_plan_us: rp8.median_us,
         int4_interp_us: ri4.median_us,
         int4_plan_us: rp4.median_us,
+        dyn_interp_us: rid.median_us,
+        dyn_plan_us: rpd.median_us,
     }
 }
 
 fn write_bench_json(r: &PlanReport) {
     let json = format!(
-        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2}\n}}\n",
+        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2},\n  \"dyn_interp_us\": {:.1},\n  \"dyn_plan_us\": {:.1},\n  \"dyn_speedup\": {:.2},\n  \"dyn_vs_static_planned\": {:.2}\n}}\n",
         r.fp32_interp_us,
         r.fp32_plan_us,
         r.fp32_interp_us / r.fp32_plan_us,
@@ -233,6 +269,10 @@ fn write_bench_json(r: &PlanReport) {
         r.int4_plan_us,
         r.int4_interp_us / r.int4_plan_us,
         r.int8_plan_us / r.int4_plan_us,
+        r.dyn_interp_us,
+        r.dyn_plan_us,
+        r.dyn_interp_us / r.dyn_plan_us,
+        r.int8_plan_us / r.dyn_plan_us,
     );
     let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
     match std::fs::write(&path, &json) {

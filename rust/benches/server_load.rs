@@ -18,7 +18,7 @@ use quant_trim::coordinator::experiment::compile_serving_fleet;
 use quant_trim::coordinator::server::{
     BatchPolicy, Server, ServerConfig, ServerDeployment, ServerStats,
 };
-use quant_trim::perfmodel::Precision;
+use quant_trim::perfmodel::{ActScaling, Precision};
 use quant_trim::tensor::Tensor;
 use quant_trim::testutil::{synth, Rng};
 
@@ -142,8 +142,8 @@ fn int8_fleet_of(backends: &[&str], max_batch: usize) -> Vec<ServerDeployment> {
     let mut rng = Rng::new(0xCA11B);
     let calib: Vec<Tensor> =
         (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
-    let specs: Vec<(&str, Option<Precision>)> =
-        backends.iter().map(|&b| (b, Some(Precision::Int8))).collect();
+    let specs: Vec<(&str, Option<Precision>, ActScaling)> =
+        backends.iter().map(|&b| (b, Some(Precision::Int8), ActScaling::Static)).collect();
     compile_serving_fleet(
         &sm.graph,
         &sm.params,

@@ -50,6 +50,7 @@ fn hardware_a() -> BackendSpec {
         },
         precisions: vec![Precision::Int8, Precision::Int4],
         weight_bits: &[8, 4],
+        supports_dynamic_act: false,
         weight_scheme: QuantScheme::PerTensorSym,
         round: RoundMode::HalfAway,
         calib: CalibMethod::Percentile(0.999),
@@ -86,6 +87,7 @@ fn hardware_b() -> BackendSpec {
         },
         precisions: vec![Precision::Bf16, Precision::Int8],
         weight_bits: &[8],
+        supports_dynamic_act: false,
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::MinMax,
@@ -122,6 +124,7 @@ fn hardware_c() -> BackendSpec {
         },
         precisions: vec![Precision::Int8, Precision::Fp16],
         weight_bits: &[8],
+        supports_dynamic_act: false,
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -159,6 +162,7 @@ fn hardware_d() -> BackendSpec {
         },
         precisions: vec![Precision::Int8, Precision::Bf16, Precision::Int4],
         weight_bits: &[8, 4],
+        supports_dynamic_act: true,
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Mse,
@@ -171,7 +175,9 @@ fn hardware_d() -> BackendSpec {
 }
 
 /// Jetson Orin Nano 8GB: SoC GPU, TensorRT FP32/FP16/INT8 (entropy calib),
-/// per-channel, dynamic-friendly but we deploy static engines.
+/// per-channel. TensorRT-class runtime: can recompute activation ranges per
+/// batch, so dynamic-scaling deployments are native (at the modelled
+/// per-node range-scan cost).
 fn jetson_orin_nano() -> BackendSpec {
     BackendSpec {
         name: "jetson_orin_nano",
@@ -195,6 +201,7 @@ fn jetson_orin_nano() -> BackendSpec {
         },
         precisions: vec![Precision::Int8, Precision::Fp16, Precision::Fp32],
         weight_bits: &[8],
+        supports_dynamic_act: true,
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -230,6 +237,7 @@ fn jetson_agx_orin() -> BackendSpec {
         },
         precisions: vec![Precision::Int8, Precision::Fp16, Precision::Fp32, Precision::Int4],
         weight_bits: &[8, 4],
+        supports_dynamic_act: true,
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -266,6 +274,7 @@ fn rk3588() -> BackendSpec {
         },
         precisions: vec![Precision::Int8, Precision::Fp16],
         weight_bits: &[8],
+        supports_dynamic_act: false,
         weight_scheme: QuantScheme::PerTensorSym,
         round: RoundMode::HalfAway,
         calib: CalibMethod::MinMax,
@@ -303,6 +312,7 @@ fn rtx3090() -> BackendSpec {
         },
         precisions: vec![Precision::Fp16, Precision::Fp32, Precision::Int8, Precision::Int4],
         weight_bits: &[8, 4],
+        supports_dynamic_act: true,
         weight_scheme: QuantScheme::PerChannelSym,
         round: RoundMode::TiesEven,
         calib: CalibMethod::Entropy,
@@ -375,6 +385,25 @@ mod tests {
         assert!(backend_by_name("hardware_d").unwrap().supports_weight_bits(4));
         assert!(!backend_by_name("rk3588").unwrap().supports_weight_bits(4));
         assert!(!backend_by_name("hardware_b").unwrap().supports_weight_bits(4));
+    }
+
+    #[test]
+    fn dynamic_act_scaling_is_a_fleet_axis() {
+        // runtime range recomputation is a capability, not a given: the
+        // TensorRT-class runtimes and the mature PCIe NPU support it, the
+        // strict-static compilers do not (paper Table 4's static/dynamic
+        // "Act. scaling @ inference" column)
+        for name in ["jetson_orin_nano", "jetson_agx_orin", "rtx3090", "hardware_d"] {
+            assert!(backend_by_name(name).unwrap().supports_dynamic_act, "{name}");
+        }
+        for name in ["hardware_a", "hardware_b", "hardware_c", "rk3588"] {
+            assert!(!backend_by_name(name).unwrap().supports_dynamic_act, "{name}");
+        }
+        // both capability classes exist in the fleet — the deploy matrix's
+        // static-vs-dynamic column always shows native AND fallback cells
+        let fleet = all_backends();
+        assert!(fleet.iter().any(|b| b.supports_dynamic_act));
+        assert!(fleet.iter().any(|b| !b.supports_dynamic_act));
     }
 
     #[test]

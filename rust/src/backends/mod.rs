@@ -9,6 +9,7 @@
 //! bit-exact integer engine, the latency/power consequences with the
 //! roofline perf model.
 
+/// The simulated device fleet (paper Tables 4-6 specs).
 pub mod devices;
 
 use std::collections::BTreeMap;
@@ -17,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::calib::{self, CalibMethod, Calibration};
 use crate::engine::{ActMode, CompiledModel, ExecConfig, WeightMode};
-use crate::perfmodel::{self, PerfReport, Precision};
+use crate::perfmodel::{self, ActScaling, PerfReport, Precision};
 use crate::qir::{passes, Graph};
 use crate::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
 
@@ -36,7 +37,9 @@ pub enum RangeSource {
 /// One vendor toolchain's fixed choices.
 #[derive(Clone, Debug)]
 pub struct BackendSpec {
+    /// Stable backend name (e.g. "hardware_a", "rk3588").
     pub name: &'static str,
+    /// Device capability sheet behind the roofline perf model.
     pub device: perfmodel::DeviceSpec,
     /// Precisions this toolchain can compile for (first = default).
     pub precisions: Vec<Precision>,
@@ -46,8 +49,17 @@ pub struct BackendSpec {
     /// TruncQuant observation: sub-byte support is exactly where backends
     /// diverge, so it is modelled per backend, never assumed).
     pub weight_bits: &'static [u8],
+    /// Whether the runtime can recompute activation ranges from the live
+    /// batch ("dynamic activation scaling", paper Table 4). Like sub-byte
+    /// kernels this is a capability, not a given: strict-static compilers
+    /// bake every range at compile time, and a dynamic request on them
+    /// falls back to static (recorded on the `Deployment`).
+    pub supports_dynamic_act: bool,
+    /// Weight quantization granularity (per-channel vs per-tensor).
     pub weight_scheme: QuantScheme,
+    /// Rounding mode of the toolchain's quantizers.
     pub round: RoundMode,
+    /// Range-estimation observer the compiler runs over calibration data.
     pub calib: CalibMethod,
     /// Whether the compiler can consume embedded QAT scales.
     pub accepts_qat_scales: bool,
@@ -67,8 +79,11 @@ pub struct BackendSpec {
 
 /// Inputs to a backend compile: the hardware-neutral checkpoint contents.
 pub struct CheckpointView<'a> {
+    /// Hardware-neutral QIR graph.
     pub graph: &'a Graph,
+    /// Float parameters keyed like the graph's weight nodes.
     pub params: &'a BTreeMap<String, Tensor>,
+    /// BatchNorm running statistics (folded away during compile).
     pub bn: &'a BTreeMap<String, Tensor>,
     /// Quant-Trim QAT statistics (empty for MAP checkpoints).
     pub qstate: &'a BTreeMap<String, Tensor>,
@@ -77,19 +92,31 @@ pub struct CheckpointView<'a> {
 /// Extra PTQ tricks a deployment may enable (Table 3 baseline).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PtqOptions {
+    /// Cross-layer equalization before weight quantization.
     pub equalization: bool,
+    /// AdaRound-style rounding refinement on calibration data (i8 only).
     pub adaround: bool,
 }
 
 /// A compiled deployment: the executable model + modelled edge metrics.
 pub struct Deployment {
+    /// The backend-compiled, plan-backed executable model.
     pub model: CompiledModel,
     /// Precision the deployment actually runs at (the *effective* one —
     /// differs from `requested` when the backend lacked sub-byte kernels).
     pub precision: Precision,
     /// Precision the caller asked for.
     pub requested: Precision,
+    /// Activation scaling the deployment actually runs (`Dynamic` only when
+    /// the backend supports it *and* the precision has integer activations;
+    /// float-activation deployments always record `Static` — there are no
+    /// requantization points to scale).
+    pub act_scaling: ActScaling,
+    /// Activation scaling the caller asked for.
+    pub requested_scaling: ActScaling,
+    /// Name of the vendor backend that compiled this deployment.
     pub backend: &'static str,
+    /// Modelled batch-1 latency/power/energy on the simulated device.
     pub perf_b1: PerfReport,
 }
 
@@ -98,9 +125,17 @@ impl Deployment {
     pub fn fell_back(&self) -> bool {
         self.requested != self.precision
     }
+
+    /// True when a dynamic-scaling request compiled with static compile-time
+    /// ranges (backend without runtime range support, or a float-activation
+    /// precision with nothing to rescale).
+    pub fn scaling_fell_back(&self) -> bool {
+        self.requested_scaling != self.act_scaling
+    }
 }
 
 impl BackendSpec {
+    /// The precision this toolchain deploys when none is requested.
     pub fn default_precision(&self) -> Precision {
         self.precisions[0]
     }
@@ -110,7 +145,8 @@ impl BackendSpec {
         self.weight_bits.contains(&bits)
     }
 
-    /// Compile the checkpoint for this backend at the given precision.
+    /// Compile the checkpoint for this backend at the given precision, with
+    /// static activation scaling.
     ///
     /// `calib_batches` may be empty only if the backend doesn't require
     /// calibration (BF16/FP16 paths, or QAT-scale consumption).
@@ -122,7 +158,29 @@ impl BackendSpec {
         calib_batches: &[Tensor],
         ptq: PtqOptions,
     ) -> Result<Deployment> {
+        self.compile_scaled(ckpt, precision, ActScaling::Static, range_source, calib_batches, ptq)
+    }
+
+    /// [`Self::compile`] with the activation-scaling axis exposed.
+    ///
+    /// Requesting [`ActScaling::Dynamic`] on a backend with
+    /// `supports_dynamic_act` and an integer-activation precision compiles a
+    /// **calibration-free** deployment (`ActMode::DynInt8`): no calibration
+    /// run, no range propagation, empty `act_ranges` — ranges come from the
+    /// live batch at serve time. On any other backend/precision combination
+    /// the request falls back to static scaling (recorded on the
+    /// `Deployment`, like the INT4→INT8 weight fallback).
+    pub fn compile_scaled(
+        &self,
+        ckpt: CheckpointView<'_>,
+        precision: Precision,
+        scaling: ActScaling,
+        range_source: RangeSource,
+        calib_batches: &[Tensor],
+        ptq: PtqOptions,
+    ) -> Result<Deployment> {
         let requested = precision;
+        let requested_scaling = scaling;
         // sub-byte fallback: a backend without int4 kernels deploys the
         // requested graph at INT8 instead of refusing it outright (the
         // deployment records both precisions so matrices can show the gap)
@@ -148,16 +206,30 @@ impl BackendSpec {
             passes::cross_layer_equalization(&graph, &mut params);
         }
 
-        let (weight_mode, act_mode) = match precision {
+        let (weight_mode, mut act_mode) = match precision {
             Precision::Int4 => (WeightMode::Int4, ActMode::Int8 { round: self.round }), // W4/A8
             Precision::Int8 => (WeightMode::Int8, ActMode::Int8 { round: self.round }),
             Precision::Bf16 => (WeightMode::Int8, ActMode::Bf16), // W8/ABF16 hybrid
             Precision::Fp16 => (WeightMode::F32, ActMode::F16),
             Precision::Fp32 => (WeightMode::F32, ActMode::F32),
         };
+        // dynamic activation scaling: a capability, like sub-byte kernels —
+        // honoured only when the runtime can recompute ranges per batch AND
+        // the precision has integer activations; otherwise fall back to
+        // static compile-time scaling (recorded on the Deployment)
+        let act_scaling = match act_mode {
+            ActMode::Int8 { round }
+                if scaling == ActScaling::Dynamic && self.supports_dynamic_act =>
+            {
+                act_mode = ActMode::DynInt8 { round };
+                ActScaling::Dynamic
+            }
+            _ => ActScaling::Static,
+        };
         let wbits = weight_mode.weight_bits();
 
-        // 3. activation ranges (INT8 only)
+        // 3. activation ranges (static INT8 only — a dynamic deployment
+        //    computes ranges from the live batch and needs no calibration)
         let mut calibration = Calibration::default();
         if matches!(act_mode, ActMode::Int8 { .. }) {
             let use_qat =
@@ -263,22 +335,51 @@ impl BackendSpec {
             .plan()
             .with_context(|| format!("backend {}: execution plan lowering failed", self.name))?;
         let unsupported = self.unsupported;
-        let perf_b1 = perfmodel::estimate(
+        let perf_b1 = perfmodel::estimate_scaled(
             &model.graph,
             &self.device,
             precision,
+            act_scaling,
             1,
             self.runtime_boost,
             &|kind| unsupported.contains(&kind),
         );
-        Ok(Deployment { model, precision, requested, backend: self.name, perf_b1 })
+        Ok(Deployment {
+            model,
+            precision,
+            requested,
+            act_scaling,
+            requested_scaling,
+            backend: self.name,
+            perf_b1,
+        })
     }
 
+    /// Modelled perf of this backend's compiled runtime at a precision and
+    /// batch size (static activation scaling).
     pub fn perf(&self, graph: &Graph, precision: Precision, batch: usize) -> PerfReport {
+        self.perf_scaled(graph, precision, ActScaling::Static, batch)
+    }
+
+    /// [`Self::perf`] with the activation-scaling axis exposed (dynamic
+    /// deployments pay the per-node range-scan overhead).
+    pub fn perf_scaled(
+        &self,
+        graph: &Graph,
+        precision: Precision,
+        scaling: ActScaling,
+        batch: usize,
+    ) -> PerfReport {
         let unsupported = self.unsupported;
-        perfmodel::estimate(graph, &self.device, precision, batch, self.runtime_boost, &|k| {
-            unsupported.contains(&k)
-        })
+        perfmodel::estimate_scaled(
+            graph,
+            &self.device,
+            precision,
+            scaling,
+            batch,
+            self.runtime_boost,
+            &|k| unsupported.contains(&k),
+        )
     }
 
     /// Perf with naive kernel dispatch (the "CUDA" unfilled markers in Fig 3).

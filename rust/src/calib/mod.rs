@@ -20,11 +20,20 @@ use crate::engine::CompiledModel;
 use crate::tensor::{empirical_quantile, Tensor};
 use crate::testutil::Rng;
 
+/// Range-estimation observer a vendor toolchain runs over the calibration
+/// set (one per compiler style — see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CalibMethod {
+    /// Exact observed min/max (RKNN-style; cheapest, outlier-fragile).
     MinMax,
+    /// Clip at the p / 1-p empirical quantiles of the sample (Hailo-style),
+    /// clamped to the observed range.
     Percentile(f64),
+    /// KL-divergence threshold search over an amplitude histogram
+    /// (TensorRT-style).
     Entropy,
+    /// Grid search for the clip minimizing u8 quant-dequant MSE
+    /// (compiler-provided static scaling, Hardware D style).
     Mse,
 }
 
@@ -45,6 +54,11 @@ impl NodeStats {
 
     fn update(&mut self, t: &Tensor, rng: &mut Rng) {
         for &v in &t.data {
+            // NaN/inf samples (corrupt capture frames) must not poison the
+            // range or land in the reservoir the observers derive clips from
+            if !v.is_finite() {
+                continue;
+            }
             self.lo = self.lo.min(v);
             self.hi = self.hi.max(v);
             self.seen += 1;
@@ -64,6 +78,7 @@ impl NodeStats {
 /// Result of calibration: static (lo, hi) per node output.
 #[derive(Clone, Debug, Default)]
 pub struct Calibration {
+    /// Derived clip range per node name, consumed as `CompiledModel::act_ranges`.
     pub ranges: HashMap<String, (f32, f32)>,
 }
 
@@ -99,7 +114,11 @@ fn derive_range(s: &NodeStats, method: CalibMethod) -> (f32, f32) {
         CalibMethod::Percentile(p) => {
             let lo = empirical_quantile(&s.reservoir, 1.0 - p);
             let hi = empirical_quantile(&s.reservoir, p);
-            (lo.min(s.lo.max(lo)), hi)
+            // clamp the clip range to the OBSERVED range: the reservoir is a
+            // subsample, and the previous expression `lo.min(s.lo.max(lo))`
+            // always evaluated to `lo` — a no-op that never applied the
+            // observed bounds on either side
+            (lo.max(s.lo), hi.min(s.hi))
         }
         CalibMethod::Entropy => entropy_range(s),
         CalibMethod::Mse => mse_range(s),
@@ -318,6 +337,67 @@ mod tests {
         let (lo, hi) = derive_range(&s, CalibMethod::Entropy);
         assert!(hi > 1.0 && hi < 6.0, "hi {hi}");
         assert!(lo < -1.0 && lo > -6.0, "lo {lo}");
+    }
+
+    #[test]
+    fn percentile_clip_clamps_to_observed_range() {
+        // regression for the no-op clamp `(lo.min(s.lo.max(lo)), hi)`: with
+        // observed bounds tighter than the reservoir (the streaming-stats
+        // contract a future observer may rely on), the clip range must be
+        // clamped into [s.lo, s.hi] on BOTH sides
+        let mut s = stats_from(&[-10.0, -9.0, -8.0, 8.0, 9.0, 10.0]);
+        s.lo = -5.0;
+        s.hi = 5.0;
+        let (lo, hi) = derive_range(&s, CalibMethod::Percentile(0.999));
+        assert!(lo >= -5.0, "lo {lo} escaped the observed range");
+        assert!(hi <= 5.0, "hi {hi} escaped the observed range");
+    }
+
+    #[test]
+    fn percentile_near_half_and_one_stay_ordered() {
+        let mut rng = Rng::new(21);
+        let vals: Vec<f32> = (0..5_000).map(|_| rng.normal()).collect();
+        let s = stats_from(&vals);
+        // p = 1.0 degenerates to the full observed range (== MinMax here)
+        assert_eq!(derive_range(&s, CalibMethod::Percentile(1.0)), (s.lo, s.hi));
+        // p -> 0.5 collapses toward the median: still ordered and finite
+        for p in [0.5, 0.501, 0.55] {
+            let (lo, hi) = derive_range(&s, CalibMethod::Percentile(p));
+            assert!(lo <= hi, "p={p}: ({lo}, {hi}) out of order");
+            assert!(lo.is_finite() && hi.is_finite());
+        }
+    }
+
+    #[test]
+    fn non_finite_samples_never_poison_the_range() {
+        // NaN/inf capture glitches are skipped by the observer; a batch with
+        // SOME finite data calibrates from that data alone
+        let s = stats_from(&[f32::NAN, -1.0, f32::INFINITY, 2.0, f32::NEG_INFINITY]);
+        assert_eq!((s.lo, s.hi), (-1.0, 2.0));
+        assert_eq!(s.reservoir.len(), 2);
+        for m in [CalibMethod::MinMax, CalibMethod::Percentile(0.999), CalibMethod::Mse] {
+            let (lo, hi) = derive_range(&s, m);
+            assert!(lo.is_finite() && hi.is_finite() && lo <= hi, "{m:?}: ({lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn nan_only_and_empty_batches_fall_back_to_default_range() {
+        // an all-NaN batch leaves the reservoir empty -> default (0, 1) grid
+        let s = stats_from(&[f32::NAN, f32::NAN]);
+        for m in [CalibMethod::MinMax, CalibMethod::Percentile(0.999), CalibMethod::Entropy, CalibMethod::Mse] {
+            assert_eq!(derive_range(&s, m), (0.0, 1.0), "{m:?}");
+        }
+        // zero calibration batches: calibrate() observes nothing at all
+        let g = crate::qir::Graph::parse(
+            "qir p v1\noutputs r\n\
+             node input image inputs=- shape=1,2,2\n\
+             node relu r inputs=image shape=1,2,2\n",
+        )
+        .unwrap();
+        let model = crate::engine::fp32_model(g, Default::default(), Default::default());
+        let c = calibrate(&model, &[], CalibMethod::MinMax).unwrap();
+        assert!(c.ranges.is_empty());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::coordinator::trainer::{EpochLog, TrainConfig, Trainer};
 use crate::data::{gen_cls_batch, gen_seg_batch, Batch, ClsSpec, SegSpec};
 use crate::engine::fp32_model;
 use crate::metrics;
-use crate::perfmodel::Precision;
+use crate::perfmodel::{ActScaling, Precision};
 use crate::qir::Graph;
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
@@ -168,19 +168,33 @@ pub fn train_with_validation<'rt>(
 /// On-device metric row for Tables 1-2 (and the SNR of Table 3).
 #[derive(Clone, Debug)]
 pub struct DeployMetrics {
+    /// Vendor backend that compiled the deployment.
     pub backend: &'static str,
     /// Effective deployment precision (INT4 requests on backends without
     /// sub-byte kernels compile — and report — as INT8).
     pub precision: Precision,
     /// Precision the experiment asked for.
     pub requested: Precision,
+    /// Effective activation scaling (dynamic requests on backends without
+    /// runtime range support compile — and report — as static).
+    pub act_scaling: ActScaling,
+    /// Activation scaling the experiment asked for.
+    pub requested_scaling: ActScaling,
+    /// Top-1 accuracy on the eval batches.
     pub top1: f64,
+    /// Top-5 accuracy on the eval batches.
     pub top5: f64,
+    /// MSE between device and FP32-reference logits.
     pub logit_mse: f64,
+    /// Brier score of the device softmax.
     pub brier: f64,
+    /// Expected calibration error (15 bins).
     pub ece: f64,
+    /// Output SNR of the device logits vs the FP32 reference.
     pub snr_db: f64,
+    /// Modelled batch-1 throughput on the simulated device.
     pub fps_modelled: f64,
+    /// Number of graph ops that fell back to the host.
     pub fallback_ops: usize,
 }
 
@@ -193,10 +207,21 @@ impl DeployMetrics {
             format!("{}→{}", self.requested.label(), self.precision.label())
         }
     }
+
+    /// "static" / "dynamic", or "dyn→static" when a dynamic-scaling request
+    /// fell back to compile-time ranges.
+    pub fn scaling_label(&self) -> String {
+        if self.requested_scaling == self.act_scaling {
+            self.act_scaling.label().to_string()
+        } else {
+            "dyn→static".to_string()
+        }
+    }
 }
 
 /// Deploy a trained checkpoint on one backend and evaluate against the FP32
 /// reference logits (the "ONNX FP32" parenthetical values in Tables 1-2).
+/// Static activation scaling; see [`deploy_and_eval_scaled`].
 #[allow(clippy::too_many_arguments)]
 pub fn deploy_and_eval(
     backend: &BackendSpec,
@@ -208,11 +233,38 @@ pub fn deploy_and_eval(
     calib: &[Tensor],
     eval_batches: &[Batch],
 ) -> Result<DeployMetrics> {
+    deploy_and_eval_scaled(
+        backend,
+        graph,
+        state,
+        precision,
+        ActScaling::Static,
+        range_source,
+        ptq,
+        calib,
+        eval_batches,
+    )
+}
+
+/// [`deploy_and_eval`] with the activation-scaling axis exposed — the
+/// machinery behind the paper's static-vs-dynamic comparison columns.
+#[allow(clippy::too_many_arguments)]
+pub fn deploy_and_eval_scaled(
+    backend: &BackendSpec,
+    graph: &Graph,
+    state: &TrainState,
+    precision: Precision,
+    scaling: ActScaling,
+    range_source: RangeSource,
+    ptq: PtqOptions,
+    calib: &[Tensor],
+    eval_batches: &[Batch],
+) -> Result<DeployMetrics> {
     let params: BTreeMap<String, Tensor> = state.params.clone();
     let bn: BTreeMap<String, Tensor> = state.bn.clone();
     let qstate: BTreeMap<String, Tensor> = state.qstate.clone();
     let view = CheckpointView { graph, params: &params, bn: &bn, qstate: &qstate };
-    let dep = backend.compile(view, precision, range_source, calib, ptq)?;
+    let dep = backend.compile_scaled(view, precision, scaling, range_source, calib, ptq)?;
 
     // FP32 reference on the same eval set
     let reference = fp32_model(graph.clone(), params.clone(), bn.clone());
@@ -236,6 +288,8 @@ pub fn deploy_and_eval(
         backend: backend.name,
         precision: dep.precision,
         requested: precision,
+        act_scaling: dep.act_scaling,
+        requested_scaling: scaling,
         top1,
         top5,
         logit_mse: metrics::logit_mse(&dev, &refl),
@@ -248,11 +302,13 @@ pub fn deploy_and_eval(
 }
 
 /// One server fronting several simulated NPUs: compile the checkpoint on
-/// each named backend (at its default precision unless overridden) and wrap
-/// every deployment for the batching server, keyed by backend name. A
-/// backend listed more than once (e.g. `hardware_d` at INT8 *and* INT4 —
-/// a mixed-bit-width fleet) gets `@PREC`-suffixed deployment names so the
-/// router can address each precision separately.
+/// each named backend (at its default precision unless overridden, with
+/// static or dynamic activation scaling per entry) and wrap every deployment
+/// for the batching server, keyed by backend name. A backend listed more
+/// than once (e.g. `hardware_d` at INT8 *and* INT4, or at static *and*
+/// dynamic scaling — a mixed fleet) gets `@PREC`-suffixed deployment names
+/// (plus `@dyn` for dynamic-scaling entries) so the router can address each
+/// variant separately.
 ///
 /// With `service_floor` set, each deployment is paced per **actual** batch
 /// size: an n-request batch pays the roofline perf model's device latency at
@@ -265,40 +321,43 @@ pub fn compile_serving_fleet(
     graph: &Graph,
     params: &BTreeMap<String, Tensor>,
     bn: &BTreeMap<String, Tensor>,
-    backends: &[(&str, Option<Precision>)],
+    backends: &[(&str, Option<Precision>, ActScaling)],
     calib: &[Tensor],
     max_batch: usize,
     service_floor: Option<Duration>,
 ) -> Result<Vec<ServerDeployment>> {
     let qstate: BTreeMap<String, Tensor> = BTreeMap::new();
     let mut fleet = Vec::with_capacity(backends.len());
-    for &(name, precision) in backends {
+    for &(name, precision, scaling) in backends {
         let be = backend_by_name(name).with_context(|| format!("unknown backend {name:?}"))?;
         let precision = precision.unwrap_or_else(|| be.default_precision());
         let view = CheckpointView { graph, params, bn, qstate: &qstate };
         let dep = be
-            .compile(view, precision, RangeSource::Calibration, calib, PtqOptions::default())
+            .compile_scaled(view, precision, scaling, RangeSource::Calibration, calib, PtqOptions::default())
             .with_context(|| format!("compiling serving deployment {name}"))?;
-        // suffix with the REQUESTED precision: unique per spec entry even
-        // when an INT4 request falls back to INT8 (labelling with the
-        // effective precision would collide with the backend's INT8 entry
+        // suffix with the REQUESTED precision/scaling: unique per spec entry
+        // even when an INT4 or dynamic request falls back (labelling with
+        // the effective values would collide with the backend's plain entry
         // and the server would refuse the duplicate name)
-        let duplicated = backends.iter().filter(|(n, _)| *n == name).count() > 1;
+        let duplicated = backends.iter().filter(|(n, _, _)| *n == name).count() > 1;
         let dep_name = if duplicated {
-            format!("{name}@{}", precision.label())
+            let dyn_suffix = if scaling == ActScaling::Dynamic { "@dyn" } else { "" };
+            format!("{name}@{}{dyn_suffix}", precision.label())
         } else {
             name.to_string()
         };
-        // pace at the precision the deployment actually runs at (an INT4
-        // request on a backend without int4 kernels executes — and must be
-        // paced — as INT8)
+        // pace at the precision AND scaling the deployment actually runs at
+        // (a fallback executes — and must be paced — as what it fell back to,
+        // and a dynamic deployment pays the modelled range-scan overhead)
         let effective = dep.precision;
+        let effective_scaling = dep.act_scaling;
         let model = Arc::new(dep.model);
         let engine = match service_floor {
             Some(floor) => {
                 let floors: Vec<Duration> = (1..=max_batch)
                     .map(|n| {
-                        let modelled_s = be.perf(graph, effective, n).latency_ms / 1e3;
+                        let modelled_s =
+                            be.perf_scaled(graph, effective, effective_scaling, n).latency_ms / 1e3;
                         let min_s = floor.as_secs_f64() * n as f64 / max_batch as f64;
                         Duration::from_secs_f64(modelled_s.max(min_s))
                     })

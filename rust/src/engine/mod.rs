@@ -6,8 +6,11 @@
 //! * weights: f32, or pre-quantized i8 / nibble-packed i4 (per-channel or
 //!   per-tensor symmetric)
 //! * activations: f32, bf16/f16 round-trips at op boundaries, or asymmetric
-//!   u8 with *static* per-node ranges fixed at compile time (calibration or
-//!   embedded QAT scales) — "STATIC (no runtime dyn)" in paper Table 4.
+//!   u8 — either with *static* per-node ranges fixed at compile time
+//!   (calibration or embedded QAT scales; "STATIC (no runtime dyn)" in paper
+//!   Table 4), or with *dynamic* per-tensor ranges computed from the live
+//!   batch at every quantization point ([`ActMode::DynInt8`] — the
+//!   calibration-free "dynamic" column of the same table).
 //! * integer compute paths accumulate in i32 (ops.rs); softmax / layernorm /
 //!   SE gates stay in float, as on real NPUs.
 //!
@@ -20,8 +23,11 @@
 //!   `run_interpreted()` (the reference the plan is regression-tested
 //!   against, bit-exact on the int8 path).
 
+/// bf16/f16 round-trip narrowing for the low-precision activation modes.
 pub mod lowp;
+/// Compute kernels: f32 reference paths + bit-exact integer GEMMs.
 pub mod ops;
+/// The execution-plan compiler and executor (the hot path behind `run`).
 pub mod plan;
 
 use std::collections::{BTreeMap, HashMap};
@@ -61,20 +67,56 @@ impl WeightMode {
 /// Activation precision chosen by a backend compiler.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ActMode {
+    /// Full-precision f32 activations.
     F32,
+    /// bfloat16 round-trips at op boundaries.
     Bf16,
+    /// IEEE half-precision round-trips at op boundaries.
     F16,
     /// Static asymmetric u8 with compile-time ranges.
     Int8 { round: RoundMode },
+    /// Dynamic asymmetric u8: per-tensor (lo, hi) computed from the *actual
+    /// batch* at every quantization point at run time — needs no calibration
+    /// dataset and no `act_ranges` ("dynamic activation scaling" in paper
+    /// Table 4). Costs a fused range scan per node (`ops::dyn_qparams`),
+    /// modelled in `perfmodel` as the per-node dynamic-scaling overhead.
+    DynInt8 { round: RoundMode },
 }
 
+impl ActMode {
+    /// Integer (u8) activation path, static or dynamic.
+    #[inline]
+    pub fn is_integer(self) -> bool {
+        matches!(self, ActMode::Int8 { .. } | ActMode::DynInt8 { .. })
+    }
+
+    /// Rounding mode of the integer activation grid, if any.
+    #[inline]
+    pub fn round(self) -> Option<RoundMode> {
+        match self {
+            ActMode::Int8 { round } | ActMode::DynInt8 { round } => Some(round),
+            _ => None,
+        }
+    }
+
+    /// True when activation ranges are computed from the live batch.
+    #[inline]
+    pub fn is_dynamic(self) -> bool {
+        matches!(self, ActMode::DynInt8 { .. })
+    }
+}
+
+/// The (weight precision, activation precision) pair a backend compiled at.
 #[derive(Clone, Copy, Debug)]
 pub struct ExecConfig {
+    /// Weight storage/compute mode.
     pub weight_mode: WeightMode,
+    /// Activation precision and scaling mode.
     pub act_mode: ActMode,
 }
 
 impl ExecConfig {
+    /// Full-precision reference configuration (the "ONNX FP32" analogue).
     pub const FP32: ExecConfig = ExecConfig { weight_mode: WeightMode::F32, act_mode: ActMode::F32 };
 }
 
@@ -92,6 +134,7 @@ impl ExecConfig {
 /// `CompiledModel` is `Send + Sync` — server workers share one deployment
 /// lock-free through a plain `Arc`, no mutex. Asserted at compile time below.
 pub struct CompiledModel {
+    /// The backend-lowered QIR graph (BN folded, activations maybe fused).
     pub graph: Graph,
     /// Float parameters (post graph passes, e.g. BN-folded).
     pub params: BTreeMap<String, Tensor>,
@@ -100,7 +143,10 @@ pub struct CompiledModel {
     /// Pre-quantized weights keyed by param key (e.g. "s0.b0.c1.w").
     pub qweights: HashMap<String, QWeight>,
     /// Static per-node output ranges (lo, hi) from calibration / QAT scales.
+    /// Empty — and never read — under [`ActMode::DynInt8`], where ranges are
+    /// recomputed from the live batch at every quantization point.
     pub act_ranges: HashMap<String, (f32, f32)>,
+    /// Precision configuration the backend compiled this model at.
     pub cfg: ExecConfig,
     /// Lazily compiled execution plan (the hot path behind `run`).
     exec_plan: OnceLock<plan::ExecPlan>,
@@ -119,6 +165,8 @@ const _: () = {
 };
 
 impl CompiledModel {
+    /// Assemble a compiled model from its backend-produced parts. The
+    /// execution plan is lowered lazily (or eagerly by `plan()`).
     pub fn new(
         graph: Graph,
         params: BTreeMap<String, Tensor>,
@@ -191,11 +239,20 @@ impl CompiledModel {
         Ok(act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6)))
     }
 
-    pub(crate) fn int8_round(&self) -> Option<RoundMode> {
-        match self.cfg.act_mode {
-            ActMode::Int8 { round } => Some(round),
-            _ => None,
+    /// Input quantization parameters for a compute node: from the producer's
+    /// static range under [`ActMode::Int8`], or computed on the spot from the
+    /// live input data under [`ActMode::DynInt8`].
+    pub(crate) fn act_qparams(&self, producer: &str, data: &[f32]) -> Result<(f32, i32)> {
+        if self.cfg.act_mode.is_dynamic() {
+            return Ok(ops::dyn_qparams(data));
         }
+        self.input_qparams(producer)
+    }
+
+    /// Rounding mode of the integer activation grid (static or dynamic),
+    /// `None` on the float activation paths.
+    pub(crate) fn int_round(&self) -> Option<RoundMode> {
+        self.cfg.act_mode.round()
     }
 
     pub(crate) fn weight_tensor(&self, key: &str) -> Result<Tensor> {
@@ -252,9 +309,9 @@ impl CompiledModel {
                     None
                 };
                 let wkey = format!("{}.w", n.name);
-                let mut t = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+                let mut t = match (self.cfg.weight_mode, self.int_round(), self.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
-                        let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                        let (sx, zx) = self.act_qparams(&n.inputs[0], &a.data)?;
                         ops::conv2d_i8(a, qw, bias, stride, pad, groups, sx, zx, round)
                     }
                     _ => {
@@ -280,9 +337,9 @@ impl CompiledModel {
                 let dout = n.attr_usize("dout")?;
                 let mut oshape = a.shape.clone();
                 *oshape.last_mut().unwrap() = dout;
-                let data = match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+                let data = match (self.cfg.weight_mode, self.int_round(), self.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
-                        let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                        let (sx, zx) = self.act_qparams(&n.inputs[0], &a.data)?;
                         ops::linear_i8(&a.data, rows, din, qw, bias, sx, zx, round)
                     }
                     _ => {
@@ -356,10 +413,11 @@ impl CompiledModel {
             "to_tokens" => ops::to_tokens(get(0)?),
             "tokmean" => self.narrow(ops::tokmean(get(0)?)),
             "aq" => {
-                // integer requantization point: quant-dequant at static range
+                // integer requantization point: quant-dequant at the static
+                // range, or at the tensor's own live range when dynamic
                 let a = get(0)?;
-                match self.int8_round() {
-                    Some(round) => {
+                match self.cfg.act_mode {
+                    ActMode::Int8 { round } => {
                         let &(lo, hi) = self
                             .act_ranges
                             .get(&n.name)
@@ -370,7 +428,12 @@ impl CompiledModel {
                             (q - z as f32) * s
                         })
                     }
-                    None => self.narrow(a.clone()),
+                    ActMode::DynInt8 { round } => {
+                        let mut t = a.clone();
+                        ops::quant_dequant_dyn(&mut t.data, round);
+                        t
+                    }
+                    _ => self.narrow(a.clone()),
                 }
             }
             other => bail!("engine: unknown node kind {other:?}"),
@@ -387,9 +450,11 @@ impl CompiledModel {
         let proj = |input: &[f32], mat: &str, bias: &str| -> Result<Vec<f32>> {
             let wkey = format!("{}.{mat}", n.name);
             let b = &self.params[&format!("{}.{bias}", n.name)];
-            match (self.cfg.weight_mode, self.int8_round(), self.qweights.get(&wkey)) {
+            match (self.cfg.weight_mode, self.int_round(), self.qweights.get(&wkey)) {
                 (wm, Some(round), Some(qw)) if wm.is_integer() => {
-                    let (sx, zx) = self.input_qparams(&n.inputs[0])?;
+                    // static: block-input range as proxy for every projection;
+                    // dynamic: each projection ranges its own live input
+                    let (sx, zx) = self.act_qparams(&n.inputs[0], input)?;
                     Ok(ops::linear_i8(input, rows, d, qw, Some(b), sx, zx, round))
                 }
                 _ => {

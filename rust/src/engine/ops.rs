@@ -36,7 +36,7 @@ use anyhow::{Context, Result};
 
 use crate::qir::Node;
 use crate::tensor::quantized::{packed_row_bytes, row_sums_of};
-use crate::tensor::{QWeight, RoundMode, Tensor};
+use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
 
 /// Activation functions a vendor compiler fuses into the GEMM epilogue of
 /// the preceding conv/linear (and that the engine runs as standalone nodes
@@ -78,6 +78,8 @@ impl Act {
         }
     }
 
+    /// Apply the activation to one value (shared by epilogues and
+    /// standalone activation nodes).
     #[inline]
     pub fn apply(self, v: f32) -> f32 {
         match self {
@@ -106,11 +108,15 @@ fn apply_act(v: f32, act: Option<Act>) -> f32 {
 /// im2col for NCHW input: output rows = N*Ho*Wo, cols = (Cin/g)*kh*kw,
 /// one matrix per group.
 pub struct Im2Col {
+    /// N*Ho*Wo output positions.
     pub rows: usize,
+    /// (Cin/groups)*kh*kw patch elements per position.
     pub cols: usize,
+    /// Row-major (rows, cols) patch matrix.
     pub data: Vec<f32>,
 }
 
+/// Lower one convolution group of an NCHW input to its im2col patch matrix.
 #[allow(clippy::too_many_arguments)]
 pub fn im2col_group(
     x: &Tensor,
@@ -1139,6 +1145,51 @@ pub fn quant_dequant_slice(data: &mut [f32], scale: f32, zp: i32, round: RoundMo
 }
 
 // ---------------------------------------------------------------------------
+// dynamic activation scaling (ActMode::DynInt8)
+// ---------------------------------------------------------------------------
+
+/// Per-tensor dynamic quantization parameters from the *live* activation
+/// data (`ActMode::DynInt8`): a single min/max scan over the batch feeding
+/// the same [`act_scale_zp`] grid construction the static path uses —
+/// so a dynamic deployment needs no calibration dataset and no `act_ranges`
+/// at all. Non-finite samples are skipped (one NaN frame must not poison
+/// the scale); an empty or all-non-finite tensor degrades to the unit grid
+/// around zero. Both executors call this exact function, which is what
+/// keeps the dynamic path bit-exact between plan and interpreter.
+pub fn dyn_qparams(data: &[f32]) -> (f32, i32) {
+    let mut lo = f32::MAX;
+    let mut hi = f32::MIN;
+    for &v in data {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if lo > hi {
+        lo = 0.0;
+        hi = 1.0;
+    }
+    // same widening as the static path: the grid must represent zero, and a
+    // degenerate (constant) tensor still gets a positive scale
+    act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6))
+}
+
+/// Fused dynamic requantization for `aq` nodes: the range scan and the
+/// in-place u8 quant-dequant run back to back in one kernel call — the
+/// runtime-ranged analogue of [`quant_dequant_slice`], with no extra tensor
+/// materialized between the scan and the requant. Returns the
+/// (scale, zero_point) it used (surfaced for tests and diagnostics).
+pub fn quant_dequant_dyn(data: &mut [f32], round: RoundMode) -> (f32, i32) {
+    let (s, z) = dyn_qparams(data);
+    let zpf = z as f32;
+    for v in data.iter_mut() {
+        let q = (round.round(*v / s) + zpf).clamp(0.0, 255.0);
+        *v = (q - zpf) * s;
+    }
+    (s, z)
+}
+
+// ---------------------------------------------------------------------------
 // attention core
 // ---------------------------------------------------------------------------
 
@@ -1413,6 +1464,51 @@ mod tests {
         for (a, b) in yf.data.iter().zip(yq.data.iter()) {
             assert!((a - b).abs() < scale * 0.25, "int4 conv drifted: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn dyn_qparams_matches_static_grid_on_true_range() {
+        // when the static range IS the tensor's own min/max, dynamic and
+        // static quantization must land on the identical grid
+        let mut rng = Rng::new(0xD7);
+        let data = rng.normal_vec(512, 1.3);
+        let (lo, hi) = data.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let expect = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+        assert_eq!(dyn_qparams(&data), expect);
+    }
+
+    #[test]
+    fn dyn_qparams_skips_non_finite_and_survives_degenerate_input() {
+        // a NaN/inf sample must not poison the scale
+        let (s, z) = dyn_qparams(&[f32::NAN, -1.5, f32::INFINITY, 3.0]);
+        assert_eq!((s, z), act_scale_zp(-1.5, 3.0));
+        // empty / all-non-finite: fall back to the unit grid, never NaN
+        for data in [&[][..], &[f32::NAN, f32::NEG_INFINITY][..]] {
+            let (s, z) = dyn_qparams(data);
+            assert!(s > 0.0 && s.is_finite() && (0..=255).contains(&z));
+        }
+        // constant tensor: positive scale, value survives the round trip
+        let mut c = vec![5.0f32; 16];
+        let (s, _) = quant_dequant_dyn(&mut c, RoundMode::TiesEven);
+        assert!(s > 0.0);
+        for &v in &c {
+            assert!((v - 5.0).abs() <= s, "constant 5.0 drifted to {v}");
+        }
+    }
+
+    #[test]
+    fn quant_dequant_dyn_equals_static_at_observed_range() {
+        let mut rng = Rng::new(0xD8);
+        let data = rng.normal_vec(256, 0.8);
+        let (lo, hi) = data.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+        let (s, z) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+        let lut = aq_lut(s, z);
+        let mut st = data.clone();
+        quant_dequant_slice(&mut st, s, z, RoundMode::TiesEven, &lut);
+        let mut dy = data.clone();
+        let used = quant_dequant_dyn(&mut dy, RoundMode::TiesEven);
+        assert_eq!(used, (s, z));
+        assert_eq!(st, dy, "dynamic requant must reuse the static arithmetic");
     }
 
     #[test]

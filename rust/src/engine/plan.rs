@@ -12,7 +12,13 @@
 //! * **quantization constants** — per-node input (scale, zero_point), the
 //!   premultiplied per-channel dequant scales `sw*sx`, and a 256-entry
 //!   dequant LUT per `aq` node are fixed at plan time, like a real INT8
-//!   compiler stack's requantization parameters.
+//!   compiler stack's requantization parameters. Under dynamic activation
+//!   scaling ([`ActMode::DynInt8`]) those constants cannot exist at plan
+//!   time: the lowered op carries an `IQuant::Dynamic` marker instead and
+//!   the executor derives (scale, zero_point) from the live input with one
+//!   fused signed min/max scan (`ops::dyn_qparams`) before dispatching the
+//!   same requantizing GEMM — no calibration, no `act_ranges`, no second
+//!   pass over the activation data.
 //! * **memory plan** — liveness-based buffer-slot assignment replaces the
 //!   per-run `HashMap<String, Tensor>` + consumer-count bookkeeping; the
 //!   executor runs on a flat `Vec<Tensor>` of reusable slots, and
@@ -38,10 +44,21 @@ use crate::engine::{lowp, ActMode, CompiledModel, BN_EPS};
 use crate::qir::Node;
 use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
 
+/// Input-quantization constants of one integer op: fixed at plan time from
+/// the producer's static range (`ActMode::Int8`), or recomputed from the
+/// live input tensor on every run (`ActMode::DynInt8` — one fused signed
+/// min/max scan via [`ops::dyn_qparams`], then the same requantizing
+/// GEMM epilogue; only the tiny per-channel `sw*sx` premultiply is redone,
+/// never a second pass over the activation data).
+enum IQuant {
+    Static { sx: f32, zx: i32, sxw: Vec<f32> },
+    Dynamic,
+}
+
 /// One attention projection with its pre-resolved weights.
 enum ProjW {
     F32(usize),
-    I8 { w: usize, sx: f32, zx: i32, round: RoundMode, sxw: Vec<f32> },
+    I8 { w: usize, round: RoundMode, iq: IQuant },
 }
 
 struct AttnProj {
@@ -67,10 +84,8 @@ enum POp {
         pad: usize,
         groups: usize,
         act: Option<Act>,
-        sx: f32,
-        zx: i32,
         round: RoundMode,
-        sxw: Vec<f32>,
+        iq: IQuant,
     },
     LinearF32 { w: usize, bias: Option<usize>, din: usize, dout: usize, act: Option<Act> },
     LinearI8 {
@@ -78,10 +93,8 @@ enum POp {
         bias: Option<usize>,
         din: usize,
         act: Option<Act>,
-        sx: f32,
-        zx: i32,
         round: RoundMode,
-        sxw: Vec<f32>,
+        iq: IQuant,
     },
     Bn { scale: Vec<f32>, shift: Vec<f32> },
     Act(Act),
@@ -98,6 +111,8 @@ enum POp {
     TokMean,
     Attention { d: usize, heads: usize, proj: [AttnProj; 4] },
     Aq { scale: f32, zp: i32, round: RoundMode, lut: Box<[f32; 256]> },
+    /// Dynamic requantization point: range scan + requant fused per run.
+    AqDyn { round: RoundMode },
     AqNoop,
 }
 
@@ -190,6 +205,7 @@ impl ExecPlan {
         self.slot_count
     }
 
+    /// Number of lowered instructions (== graph nodes) in the plan.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
@@ -241,12 +257,22 @@ impl ExecPlan {
                 let t = ops::conv2d_f32_fused(a, &self.tensors[*w], bias, *stride, *pad, *groups, *act);
                 self.narrow(t)
             }
-            POp::ConvI8 { w, bias, stride, pad, groups, act, sx, zx, round, sxw } => {
+            POp::ConvI8 { w, bias, stride, pad, groups, act, round, iq } => {
                 let a = &slots[node.in_slots[0]];
+                let qw = &self.qweights[*w];
                 let bias = bias.map(|i| &self.tensors[i]);
-                let t = ops::conv2d_i8_fused(
-                    a, &self.qweights[*w], bias, *stride, *pad, *groups, *sx, *zx, *round, sxw, *act,
-                );
+                let t = match iq {
+                    IQuant::Static { sx, zx, sxw } => ops::conv2d_i8_fused(
+                        a, qw, bias, *stride, *pad, *groups, *sx, *zx, *round, sxw, *act,
+                    ),
+                    IQuant::Dynamic => {
+                        let (sx, zx) = ops::dyn_qparams(&a.data);
+                        let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
+                        ops::conv2d_i8_fused(
+                            a, qw, bias, *stride, *pad, *groups, sx, zx, *round, &sxw, *act,
+                        )
+                    }
+                };
                 self.narrow(t)
             }
             POp::LinearF32 { w, bias, din, dout, act } => {
@@ -258,15 +284,23 @@ impl ExecPlan {
                 let data = ops::linear_f32_tiled(&a.data, rows, *din, &self.tensors[*w].data, *dout, bias, *act);
                 self.narrow(Tensor::new(oshape, data))
             }
-            POp::LinearI8 { w, bias, din, act, sx, zx, round, sxw } => {
+            POp::LinearI8 { w, bias, din, act, round, iq } => {
                 let a = &slots[node.in_slots[0]];
                 let rows = a.len() / din;
                 let qw = &self.qweights[*w];
                 let mut oshape = a.shape.clone();
                 *oshape.last_mut().unwrap() = qw.shape[0];
                 let bias = bias.map(|i| self.tensors[i].data.as_slice());
-                let data =
-                    ops::linear_i8_fused(&a.data, rows, *din, qw, bias, *sx, *zx, *round, sxw, *act);
+                let data = match iq {
+                    IQuant::Static { sx, zx, sxw } => ops::linear_i8_fused(
+                        &a.data, rows, *din, qw, bias, *sx, *zx, *round, sxw, *act,
+                    ),
+                    IQuant::Dynamic => {
+                        let (sx, zx) = ops::dyn_qparams(&a.data);
+                        let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
+                        ops::linear_i8_fused(&a.data, rows, *din, qw, bias, sx, zx, *round, &sxw, *act)
+                    }
+                };
                 self.narrow(Tensor::new(oshape, data))
             }
             POp::Bn { scale, shift } => {
@@ -333,10 +367,23 @@ impl ExecPlan {
                         ProjW::F32(i) => ops::linear_f32_tiled(
                             input, rows, d, &self.tensors[*i].data, d, Some(&bias.data), None,
                         ),
-                        ProjW::I8 { w, sx, zx, round, sxw } => ops::linear_i8_fused(
-                            input, rows, d, &self.qweights[*w], Some(&bias.data), *sx, *zx, *round,
-                            sxw, None,
-                        ),
+                        ProjW::I8 { w, round, iq } => {
+                            let qw = &self.qweights[*w];
+                            match iq {
+                                IQuant::Static { sx, zx, sxw } => ops::linear_i8_fused(
+                                    input, rows, d, qw, Some(&bias.data), *sx, *zx, *round, sxw,
+                                    None,
+                                ),
+                                IQuant::Dynamic => {
+                                    let (sx, zx) = ops::dyn_qparams(input);
+                                    let sxw = ops::premul_scales(&qw.scales, d, sx);
+                                    ops::linear_i8_fused(
+                                        input, rows, d, qw, Some(&bias.data), sx, zx, *round, &sxw,
+                                        None,
+                                    )
+                                }
+                            }
+                        }
                     }
                 };
                 let q = run_proj(&proj[0], &xt.data);
@@ -350,6 +397,13 @@ impl ExecPlan {
                 // static requantization point through the 256-entry dequant LUT
                 let mut t = Self::grab(node, slots);
                 ops::quant_dequant_slice(&mut t.data, *scale, *zp, *round, lut);
+                t
+            }
+            POp::AqDyn { round } => {
+                // dynamic requantization point: fused range scan + in-place
+                // requant at the tensor's own live range
+                let mut t = Self::grab(node, slots);
+                ops::quant_dequant_dyn(&mut t.data, *round);
                 t
             }
             POp::AqNoop => {
@@ -383,6 +437,22 @@ impl Builder {
         Ok(self.add_t(t))
     }
 
+    /// Input-quantization constants for an integer op reading `producer`:
+    /// plan-time constants on the static path, a `Dynamic` marker when the
+    /// model recomputes ranges from the live batch.
+    fn iquant(
+        model: &CompiledModel,
+        producer: &str,
+        scales: &[f32],
+        cout: usize,
+    ) -> Result<IQuant> {
+        if model.cfg.act_mode.is_dynamic() {
+            return Ok(IQuant::Dynamic);
+        }
+        let (sx, zx) = model.input_qparams(producer)?;
+        Ok(IQuant::Static { sx, zx, sxw: ops::premul_scales(scales, cout, sx) })
+    }
+
     fn attn_proj(
         &mut self,
         model: &CompiledModel,
@@ -390,14 +460,14 @@ impl Builder {
         mat: &str,
         bias: &str,
         d: usize,
-        iq: Option<(f32, i32, RoundMode)>,
+        round: Option<RoundMode>,
     ) -> Result<AttnProj> {
         let b = self.param(model, &format!("{}.{bias}", n.name))?;
         let wkey = format!("{}.{mat}", n.name);
-        let w = match (model.cfg.weight_mode, iq, model.qweights.get(&wkey)) {
-            (wm, Some((sx, zx, round)), Some(qw)) if wm.is_integer() => {
-                let sxw = ops::premul_scales(&qw.scales, d, sx);
-                ProjW::I8 { w: self.add_q(qw.clone()), sx, zx, round, sxw }
+        let w = match (model.cfg.weight_mode, round, model.qweights.get(&wkey)) {
+            (wm, Some(round), Some(qw)) if wm.is_integer() => {
+                let iq = Self::iquant(model, &n.inputs[0], &qw.scales, d)?;
+                ProjW::I8 { w: self.add_q(qw.clone()), round, iq }
             }
             _ => ProjW::F32(self.add_t(model.weight_tensor(&wkey)?)),
         };
@@ -421,23 +491,11 @@ impl Builder {
                     None
                 };
                 let wkey = format!("{}.w", n.name);
-                match (model.cfg.weight_mode, model.int8_round(), model.qweights.get(&wkey)) {
+                match (model.cfg.weight_mode, model.int_round(), model.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
-                        let (sx, zx) = model.input_qparams(&n.inputs[0])?;
-                        let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
+                        let iq = Self::iquant(model, &n.inputs[0], &qw.scales, qw.shape[0])?;
                         let qw = qw.clone();
-                        POp::ConvI8 {
-                            w: self.add_q(qw),
-                            bias,
-                            stride,
-                            pad,
-                            groups,
-                            act,
-                            sx,
-                            zx,
-                            round,
-                            sxw,
-                        }
+                        POp::ConvI8 { w: self.add_q(qw), bias, stride, pad, groups, act, round, iq }
                     }
                     _ => {
                         let w = model.weight_tensor(&wkey)?;
@@ -457,12 +515,11 @@ impl Builder {
                     None
                 };
                 let wkey = format!("{}.w", n.name);
-                match (model.cfg.weight_mode, model.int8_round(), model.qweights.get(&wkey)) {
+                match (model.cfg.weight_mode, model.int_round(), model.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
-                        let (sx, zx) = model.input_qparams(&n.inputs[0])?;
-                        let sxw = ops::premul_scales(&qw.scales, dout, sx);
+                        let iq = Self::iquant(model, &n.inputs[0], &qw.scales, dout)?;
                         let qw = qw.clone();
-                        POp::LinearI8 { w: self.add_q(qw), bias, din, act, sx, zx, round, sxw }
+                        POp::LinearI8 { w: self.add_q(qw), bias, din, act, round, iq }
                     }
                     _ => {
                         let w = model.weight_tensor(&wkey)?;
@@ -517,23 +574,20 @@ impl Builder {
             "attention" => {
                 let d = n.attr_usize("d")?;
                 let heads = n.attr_usize("heads")?;
-                let iq = match (model.cfg.weight_mode, model.int8_round()) {
-                    (wm, Some(round)) if wm.is_integer() => {
-                        let (sx, zx) = model.input_qparams(&n.inputs[0])?;
-                        Some((sx, zx, round))
-                    }
+                let round = match (model.cfg.weight_mode, model.int_round()) {
+                    (wm, Some(round)) if wm.is_integer() => Some(round),
                     _ => None,
                 };
                 let proj = [
-                    self.attn_proj(model, n, "wq", "qb", d, iq)?,
-                    self.attn_proj(model, n, "wk", "kb", d, iq)?,
-                    self.attn_proj(model, n, "wv", "vb", d, iq)?,
-                    self.attn_proj(model, n, "wo", "ob", d, iq)?,
+                    self.attn_proj(model, n, "wq", "qb", d, round)?,
+                    self.attn_proj(model, n, "wk", "kb", d, round)?,
+                    self.attn_proj(model, n, "wv", "vb", d, round)?,
+                    self.attn_proj(model, n, "wo", "ob", d, round)?,
                 ];
                 POp::Attention { d, heads, proj }
             }
-            "aq" => match model.int8_round() {
-                Some(round) => {
+            "aq" => match model.cfg.act_mode {
+                ActMode::Int8 { round } => {
                     let &(lo, hi) = model
                         .act_ranges
                         .get(&n.name)
@@ -541,7 +595,8 @@ impl Builder {
                     let (s, z) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
                     POp::Aq { scale: s, zp: z, round, lut: Box::new(ops::aq_lut(s, z)) }
                 }
-                None => POp::AqNoop,
+                ActMode::DynInt8 { round } => POp::AqDyn { round },
+                _ => POp::AqNoop,
             },
             other => bail!("plan: unknown node kind {other:?}"),
         })

@@ -9,6 +9,31 @@
 
 use crate::qir::Graph;
 
+/// How activation ranges are obtained at inference time (paper Table 4
+/// "Act. scaling @ inference") — an axis of the perf model because on-the-fly
+/// range computation has its own per-node cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ActScaling {
+    /// Compile-time ranges (calibration or embedded QAT scales) baked into
+    /// the deployment; zero runtime overhead.
+    #[default]
+    Static,
+    /// Per-tensor (lo, hi) recomputed from the live batch at every
+    /// quantization point; costs an extra activation read (the range scan)
+    /// plus a reduction/sync per node on integer deployments.
+    Dynamic,
+}
+
+impl ActScaling {
+    /// Human-readable cell label ("static" / "dynamic").
+    pub fn label(self) -> &'static str {
+        match self {
+            ActScaling::Static => "static",
+            ActScaling::Dynamic => "dynamic",
+        }
+    }
+}
+
 /// Numeric precision of a compiled deployment.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {
@@ -111,7 +136,9 @@ pub struct PerfReport {
     pub fallback_ops: usize,
 }
 
-/// Estimate one inference (batch elements amortize per-op overhead).
+/// Estimate one inference (batch elements amortize per-op overhead) under
+/// static activation scaling. See [`estimate_scaled`] for the dynamic-scaling
+/// variant.
 ///
 /// `runtime_boost`: TensorRT-style compiled runtimes fuse + autotune,
 /// modelled as a multiplier (>1) on sustained efficiency; naive CUDA-kernel
@@ -124,7 +151,29 @@ pub fn estimate(
     runtime_boost: f64,
     unsupported: &dyn Fn(&str) -> bool,
 ) -> PerfReport {
+    estimate_scaled(graph, dev, prec, ActScaling::Static, batch, runtime_boost, unsupported)
+}
+
+/// [`estimate`] with the activation-scaling axis exposed. Under
+/// [`ActScaling::Dynamic`] on an integer deployment, every on-device node
+/// pays a **dynamic-scaling overhead term**: the range reduction re-reads
+/// the node's output activation at memory bandwidth, and the reduced
+/// (lo, hi) must be synchronized with the requantization stage before it can
+/// start — modelled as half an op dispatch. Float-activation precisions have
+/// no requantization points, so the term is zero there.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_scaled(
+    graph: &Graph,
+    dev: &DeviceSpec,
+    prec: Precision,
+    scaling: ActScaling,
+    batch: usize,
+    runtime_boost: f64,
+    unsupported: &dyn Fn(&str) -> bool,
+) -> PerfReport {
     let peak = dev.peak_ops(prec).max(1e9);
+    let dynamic_act =
+        scaling == ActScaling::Dynamic && matches!(prec, Precision::Int4 | Precision::Int8);
     let eff = (dev.efficiency * runtime_boost).min(0.95);
     let mut compute_s = 0.0f64;
     let mut busy_s = 0.0f64;
@@ -150,6 +199,14 @@ pub fn estimate(
         compute_s += ct;
         // compiled runtimes (TensorRT) fuse ops: fewer launches -> less overhead
         busy_s += ct.max(mt) + dev.op_overhead_us / runtime_boost / 1e6;
+        if dynamic_act {
+            // per-node dynamic-scaling overhead: re-read the output
+            // activation for the range scan + half a dispatch to sync the
+            // reduced (lo, hi) into the requantization stage
+            let act_bytes = graph.node_out_bytes(n) as f64 / 4.0 * bytes_per * batch as f64;
+            busy_s += act_bytes / (dev.mem_bw_gbs * 1e9)
+                + 0.5 * dev.op_overhead_us / runtime_boost / 1e6;
+        }
     }
     // add-in cards: PCIe in/out per inference (inputs ship at the deployment
     // precision — INT8 engines take quantized u8 frames from the host)
@@ -254,6 +311,39 @@ mod tests {
         let mut no4 = dev();
         no4.tops_int4 = 0.0;
         assert!(!no4.supports(Precision::Int4));
+    }
+
+    #[test]
+    fn dynamic_scaling_costs_latency_on_integer_deployments() {
+        let g = toy_graph();
+        let d = dev();
+        for p in [Precision::Int8, Precision::Int4] {
+            let st = estimate_scaled(&g, &d, p, ActScaling::Static, 1, 1.0, &|_| false);
+            let dy = estimate_scaled(&g, &d, p, ActScaling::Dynamic, 1, 1.0, &|_| false);
+            assert!(
+                dy.latency_ms > st.latency_ms,
+                "{p:?}: dynamic must pay the range-scan term ({} vs {})",
+                dy.latency_ms,
+                st.latency_ms
+            );
+            assert!(dy.energy_mj_per_inf >= st.energy_mj_per_inf);
+        }
+        // static path through estimate() is the estimate_scaled(Static) path
+        let st = estimate(&g, &d, Precision::Int8, 1, 1.0, &|_| false);
+        let st2 = estimate_scaled(&g, &d, Precision::Int8, ActScaling::Static, 1, 1.0, &|_| false);
+        assert_eq!(st.latency_ms, st2.latency_ms);
+    }
+
+    #[test]
+    fn dynamic_scaling_is_free_on_float_deployments() {
+        // no integer requantization points -> no range scans to pay for
+        let g = toy_graph();
+        let d = dev();
+        for p in [Precision::Fp16, Precision::Fp32] {
+            let st = estimate_scaled(&g, &d, p, ActScaling::Static, 1, 1.0, &|_| false);
+            let dy = estimate_scaled(&g, &d, p, ActScaling::Dynamic, 1, 1.0, &|_| false);
+            assert_eq!(st.latency_ms, dy.latency_ms, "{p:?}");
+        }
     }
 
     #[test]

@@ -10,10 +10,11 @@ use quant_trim::coordinator::{CallExtras, TrainState};
 use quant_trim::data::{gen_cls_batch, ClsSpec};
 use quant_trim::engine::fp32_model;
 use quant_trim::metrics::snr_db;
-use quant_trim::perfmodel::Precision;
+use quant_trim::perfmodel::{ActScaling, Precision};
 use quant_trim::qir::Graph;
 use quant_trim::runtime::{Manifest, Runtime};
 use quant_trim::tensor::Tensor;
+use quant_trim::testutil::{synth, Rng};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -227,6 +228,86 @@ fn engine_int8_agrees_with_pallas_device_forward() {
         }
     }
     assert!(agree * 10 >= bsz * 7, "argmax agreement too low: {agree}/{bsz}");
+}
+
+#[test]
+fn dynamic_scaling_deployment_is_calibration_free() {
+    // jetson_agx_orin normally DEMANDS a calibration dataset for INT8 —
+    // a dynamic-scaling request removes that dependence entirely: it
+    // compiles with ZERO calibration batches and serves from live ranges
+    let sm = synth::resnet_like(16, 16);
+    let qstate = Default::default();
+    let be = backend_by_name("jetson_agx_orin").unwrap();
+    assert!(be.needs_calib_for_int && be.supports_dynamic_act);
+    let view = CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let err = be.compile(view, Precision::Int8, RangeSource::Calibration, &[], PtqOptions::default());
+    assert!(err.is_err(), "static INT8 without calibration must be refused");
+    let view = CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let dep = be
+        .compile_scaled(
+            view,
+            Precision::Int8,
+            ActScaling::Dynamic,
+            RangeSource::Calibration,
+            &[],
+            PtqOptions::default(),
+        )
+        .expect("dynamic INT8 compiles with no calibration data at all");
+    assert_eq!(dep.act_scaling, ActScaling::Dynamic);
+    assert!(!dep.scaling_fell_back());
+    assert!(dep.model.act_ranges.is_empty(), "dynamic deployment ships no static ranges");
+    let x = Tensor::new(vec![1, 3, 16, 16], Rng::new(0xDCA).normal_vec(3 * 256, 1.0));
+    let planned = dep.model.run(&x).unwrap();
+    let interp = dep.model.run_interpreted(&x).unwrap();
+    assert_eq!(planned[0].data, interp[0].data, "deployed dynamic int8 plan must be bit-exact");
+    assert!(planned[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn dynamic_request_falls_back_to_static_on_strict_backends() {
+    // hardware_a bakes every range at compile time: a dynamic request
+    // compiles, but as the static engine — and says so on the deployment
+    // (mirroring the INT4→INT8 weight fallback)
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xDCB);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let qstate = Default::default();
+    let be = backend_by_name("hardware_a").unwrap();
+    assert!(!be.supports_dynamic_act);
+    let compile_at = |scaling: ActScaling| {
+        let view =
+            CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+        be.compile_scaled(
+            view,
+            Precision::Int8,
+            scaling,
+            RangeSource::Calibration,
+            &calib,
+            PtqOptions::default(),
+        )
+        .unwrap()
+    };
+    let dep = compile_at(ActScaling::Dynamic);
+    assert_eq!(dep.requested_scaling, ActScaling::Dynamic);
+    assert_eq!(dep.act_scaling, ActScaling::Static);
+    assert!(dep.scaling_fell_back());
+    assert!(!dep.model.act_ranges.is_empty(), "fallback ships calibrated static ranges");
+    // the fallback deployment IS the static deployment, bit for bit
+    let dep_static = compile_at(ActScaling::Static);
+    let x = Tensor::new(vec![1, 3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+    assert_eq!(dep.model.run(&x).unwrap()[0].data, dep_static.model.run(&x).unwrap()[0].data);
+}
+
+#[test]
+fn dynamic_scaling_costs_modelled_latency() {
+    // the perf model charges the per-node range-scan term: a dynamic
+    // deployment of the same graph must model slower than its static twin
+    let sm = synth::resnet_like(16, 16);
+    let be = backend_by_name("hardware_d").unwrap();
+    let st = be.perf_scaled(&sm.graph, Precision::Int8, ActScaling::Static, 1);
+    let dy = be.perf_scaled(&sm.graph, Precision::Int8, ActScaling::Dynamic, 1);
+    assert!(dy.latency_ms > st.latency_ms, "{} vs {}", dy.latency_ms, st.latency_ms);
 }
 
 #[test]

@@ -1,10 +1,12 @@
 //! Regression: the plan-based executor must reproduce the legacy
-//! interpreter on every `ExecConfig` — F32/Bf16/F16/Int8 activations ×
-//! F32/Int8/Int4 weights — on a ResNet-style conv net and a ViT-style
-//! transformer graph. The integer paths (i8 and nibble-packed i4) are
-//! asserted BIT-EXACT (equality, not tolerance); the float paths keep the
-//! reference kernels' accumulation order and are asserted
-//! exact-within-1e-6 relative.
+//! interpreter on every `ExecConfig` — F32/Bf16/F16/Int8/DynInt8
+//! activations × F32/Int8/Int4 weights — on a ResNet-style conv net and a
+//! ViT-style transformer graph. The integer paths (i8 and nibble-packed i4,
+//! static and dynamic activation scaling) are asserted BIT-EXACT (equality,
+//! not tolerance); the float paths keep the reference kernels' accumulation
+//! order and are asserted exact-within-1e-6 relative. DynInt8 models are
+//! built with EMPTY `act_ranges` — the dynamic path must need no
+//! calibration at all.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -75,6 +77,7 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
         ActMode::Bf16,
         ActMode::F16,
         ActMode::Int8 { round: RoundMode::TiesEven },
+        ActMode::DynInt8 { round: RoundMode::TiesEven },
     ];
     for weight_mode in [WeightMode::F32, WeightMode::Int8, WeightMode::Int4] {
         // the qweights a backend would ship for this mode: 4-bit packed
@@ -82,12 +85,15 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
         let qweights = if weight_mode == WeightMode::Int4 { &q4_perchan } else { &q_perchan };
         for act_mode in act_modes {
             let cfg = ExecConfig { weight_mode, act_mode };
+            // dynamic scaling is calibration-free by contract: build those
+            // models with NO act_ranges at all
+            let cfg_ranges = if act_mode.is_dynamic() { HashMap::new() } else { ranges.clone() };
             let model = CompiledModel::new(
                 graph.clone(),
                 params.clone(),
                 BTreeMap::new(),
                 qweights.clone(),
-                ranges.clone(),
+                cfg_ranges,
                 cfg,
             );
             let interp = model.run_interpreted(&x).unwrap();
@@ -95,8 +101,9 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
             assert_eq!(interp.len(), planned.len());
             for (a, b) in interp.iter().zip(planned.iter()) {
                 assert_eq!(a.shape, b.shape, "{label} {cfg:?}: shape mismatch");
-                if weight_mode.is_integer() && matches!(act_mode, ActMode::Int8 { .. }) {
-                    // the integer engine: bit-exact, asserted as equality
+                if weight_mode.is_integer() && act_mode.is_integer() {
+                    // the integer engine (static or dynamic activation
+                    // scaling): bit-exact, asserted as equality
                     assert_eq!(
                         a.data, b.data,
                         "{label} {cfg:?}: planned integer executor must be bit-exact"
@@ -110,30 +117,38 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
     }
 
     // restrictive-NPU flavor: per-tensor weights + DSP rounding, integer
-    // path at both weight bit-widths
+    // path at both weight bit-widths, static AND dynamic scaling
     for bits in [8u8, 4] {
-        let q_pertensor =
-            quantize_weights(&graph, &params, QuantScheme::PerTensorSym, RoundMode::HalfAway, bits);
-        let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
-        let cfg = ExecConfig {
-            weight_mode,
-            act_mode: ActMode::Int8 { round: RoundMode::HalfAway },
-        };
-        let model = CompiledModel::new(
-            graph.clone(),
-            params.clone(),
-            BTreeMap::new(),
-            q_pertensor,
-            ranges.clone(),
-            cfg,
-        );
-        let interp = model.run_interpreted(&x).unwrap();
-        let planned = model.run(&x).unwrap();
-        for (a, b) in interp.iter().zip(planned.iter()) {
-            assert_eq!(
-                a.data, b.data,
-                "{label}: per-tensor/half-away int{bits} must be bit-exact"
+        for act_mode in [
+            ActMode::Int8 { round: RoundMode::HalfAway },
+            ActMode::DynInt8 { round: RoundMode::HalfAway },
+        ] {
+            let q_pertensor = quantize_weights(
+                &graph,
+                &params,
+                QuantScheme::PerTensorSym,
+                RoundMode::HalfAway,
+                bits,
             );
+            let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
+            let cfg = ExecConfig { weight_mode, act_mode };
+            let cfg_ranges = if act_mode.is_dynamic() { HashMap::new() } else { ranges.clone() };
+            let model = CompiledModel::new(
+                graph.clone(),
+                params.clone(),
+                BTreeMap::new(),
+                q_pertensor,
+                cfg_ranges,
+                cfg,
+            );
+            let interp = model.run_interpreted(&x).unwrap();
+            let planned = model.run(&x).unwrap();
+            for (a, b) in interp.iter().zip(planned.iter()) {
+                assert_eq!(
+                    a.data, b.data,
+                    "{label}: per-tensor/half-away int{bits} {act_mode:?} must be bit-exact"
+                );
+            }
         }
     }
 }
@@ -257,6 +272,55 @@ fn int4_request_falls_back_to_int8_without_subbyte_kernels() {
         .compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())
         .unwrap();
     assert_eq!(dep.model.run(&x).unwrap()[0].data, dep8.model.run(&x).unwrap()[0].data);
+}
+
+#[test]
+fn dyn_int8_runs_bit_exact_without_any_act_ranges() {
+    // the acceptance contract of the dynamic path: no act_ranges, no
+    // calibration — and still bit-exact between plan and interpreter, with
+    // logits that really come from live ranges (≠ the calibrated grid)
+    let sm = synth::resnet_like(16, 16);
+    let (graph, params, _f, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let mut rng = Rng::new(0xDA11);
+    let x = Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0));
+    let qweights =
+        quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven, 8);
+    let dyn_model = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        qweights.clone(),
+        HashMap::new(), // calibration-free
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::DynInt8 { round: RoundMode::TiesEven },
+        },
+    );
+    let planned = dyn_model.run(&x).unwrap();
+    let interp = dyn_model.run_interpreted(&x).unwrap();
+    assert_eq!(planned[0].data, interp[0].data, "dynamic int8 plan must be bit-exact");
+    assert!(planned[0].data.iter().all(|v| v.is_finite()));
+
+    // same weights under STATIC calibrated ranges: a different grid
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let static_model = CompiledModel::new(
+        graph,
+        params,
+        BTreeMap::new(),
+        qweights,
+        ranges_for(&dyn_model.graph, &dyn_model.params, &batches),
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+        },
+    );
+    let y_static = static_model.run(&x).unwrap();
+    assert_ne!(
+        planned[0].data, y_static[0].data,
+        "dynamic ranges must actually differ from the calibrated static grid"
+    );
 }
 
 #[test]

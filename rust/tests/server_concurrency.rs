@@ -15,7 +15,7 @@ use quant_trim::coordinator::server::{
     BatchModel, BatchPolicy, EngineModel, Server, ServerConfig, ServerDeployment,
 };
 use quant_trim::engine::{fp32_model, CompiledModel};
-use quant_trim::perfmodel::Precision;
+use quant_trim::perfmodel::{ActScaling, Precision};
 use quant_trim::tensor::Tensor;
 use quant_trim::testutil::{synth, Rng};
 
@@ -338,7 +338,7 @@ fn serving_fleet_fronts_multiple_precisions() {
         &sm.graph,
         &sm.params,
         &sm.bn,
-        &[("hardware_a", None), ("hardware_b", None)],
+        &[("hardware_a", None, ActScaling::Static), ("hardware_b", None, ActScaling::Static)],
         &calib,
         4,
         None,
@@ -384,7 +384,10 @@ fn serving_fleet_mixes_int4_and_int8_bit_widths() {
         &sm.graph,
         &sm.params,
         &sm.bn,
-        &[("hardware_d", Some(Precision::Int8)), ("hardware_d", Some(Precision::Int4))],
+        &[
+            ("hardware_d", Some(Precision::Int8), ActScaling::Static),
+            ("hardware_d", Some(Precision::Int4), ActScaling::Static),
+        ],
         &calib,
         4,
         None,
@@ -411,6 +414,54 @@ fn serving_fleet_mixes_int4_and_int8_bit_widths() {
     assert!(l8.iter().chain(l4.iter()).all(|v| v.is_finite()));
     // the two grids really differ — int4 traffic is not silently int8
     assert_ne!(l8, l4, "int4 deployment must answer from the 16-level weight grid");
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn serving_fleet_mixes_static_and_dynamic_scaling() {
+    // the same physical backend deployed with compile-time AND live-batch
+    // activation ranges behind one router: the fleet compiler suffixes the
+    // dynamic entry with @dyn and both variants serve the same traffic
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xCA115);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let fleet = compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &[
+            ("hardware_d", Some(Precision::Int8), ActScaling::Static),
+            ("hardware_d", Some(Precision::Int8), ActScaling::Dynamic),
+        ],
+        &calib,
+        4,
+        None,
+    )
+    .unwrap();
+    let names: Vec<&str> = fleet.iter().map(|d| d.name.as_str()).collect();
+    assert_eq!(names, vec!["hardware_d@INT8", "hardware_d@INT8@dyn"]);
+    let server = Server::start(
+        fleet,
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let img = Tensor::new(vec![3, 16, 16], Rng::new(0xF00F).normal_vec(3 * 256, 1.0));
+    let rs = server.submit_image(img.clone(), Some("hardware_d@INT8")).unwrap();
+    let rd = server.submit_image(img.clone(), Some("hardware_d@INT8@dyn")).unwrap();
+    let ls = rs.recv_timeout(RECV_TIMEOUT).unwrap().result.expect("static serves");
+    let ld = rd.recv_timeout(RECV_TIMEOUT).unwrap().result.expect("dynamic serves");
+    assert_eq!(ls.len(), 10);
+    assert_eq!(ld.len(), 10);
+    assert!(ls.iter().chain(ld.iter()).all(|v| v.is_finite()));
+    // live-batch ranges really differ from the calibrated ones
+    assert_ne!(ls, ld, "dynamic deployment must answer from live-batch ranges");
     let stats = server.shutdown();
     assert_eq!(stats.served, 2);
     assert_eq!(stats.errors, 0);
