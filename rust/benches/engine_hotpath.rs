@@ -7,8 +7,10 @@
 //! 20 warmup + 200 timed iterations, medians — the paper's protocol.
 //!
 //! Emits `BENCH_engine.json` (plan vs interpreter medians + speedups,
-//! int4-vs-int8 and dyn-vs-static rows) for the perf trajectory; CI gates
-//! regressions against `BENCH_baseline/engine.json` via
+//! int4-vs-int8, dyn-vs-static, and warm-vs-cold `ExecScratch` rows with
+//! the `steady_state_speedup` of the zero-allocation arena+pool executor
+//! over PR-4-style allocate-per-call execution) for the perf trajectory;
+//! CI gates regressions against `BENCH_baseline/engine.json` via
 //! `tools/bench_gate.rs`.
 //!
 //!   cargo bench --bench engine_hotpath
@@ -20,7 +22,7 @@ use quant_trim::calib::{calibrate, CalibMethod};
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::TrainState;
 use quant_trim::data::{gen_cls_batch, ClsSpec};
-use quant_trim::engine::{fp32_model, ops, ActMode, CompiledModel, ExecConfig, WeightMode};
+use quant_trim::engine::{fp32_model, ops, ActMode, CompiledModel, ExecConfig, ExecScratch, WeightMode};
 use quant_trim::perfmodel::Precision;
 use quant_trim::qir::passes;
 use quant_trim::tensor::{QuantScheme, QWeight, RoundMode, Tensor};
@@ -119,6 +121,10 @@ struct PlanReport {
     int4_plan_us: f64,
     dyn_interp_us: f64,
     dyn_plan_us: f64,
+    /// Fresh-`ExecScratch`-per-call planned run (PR-4 allocate-per-call).
+    int8_plan_cold_us: f64,
+    /// Reused-`ExecScratch` planned run (zero-allocation steady state).
+    int8_plan_warm_us: f64,
 }
 
 fn plan_vs_interpreter() -> PlanReport {
@@ -244,7 +250,27 @@ fn plan_vs_interpreter() -> PlanReport {
     println!("    -> dyn8 speedup: {:.2}x", rid.median_us / rpd.median_us);
     println!("    -> dyn vs static int8 (planned): {:.2}x", rp8.median_us / rpd.median_us);
 
+    // STEADY STATE: warm (caller-owned ExecScratch reused across runs —
+    // zero allocations, persistent pool) vs cold (a fresh scratch every
+    // call, i.e. the PR-4 allocate-per-call behaviour on today's kernels)
+    let plan8 = m8.plan().unwrap();
+    let mut scratch = ExecScratch::new();
+    plan8.execute_with(&x, &mut scratch).unwrap(); // warmup sizes the arena
+    let rcold = bench("resnet-like int8 planned cold-scratch b=1", 10, 120, || {
+        let mut fresh = ExecScratch::new();
+        std::hint::black_box(plan8.execute_with(&x, &mut fresh).unwrap());
+    });
+    rcold.print();
+    let rwarm = bench("resnet-like int8 planned warm-scratch b=1", 10, 120, || {
+        std::hint::black_box(plan8.execute_with(&x, &mut scratch).unwrap());
+    });
+    rwarm.print();
+    let ss = rcold.median_us / rwarm.median_us;
+    println!("    -> steady-state speedup (warm arena vs allocate-per-call): {ss:.2}x");
+
     PlanReport {
+        int8_plan_cold_us: rcold.median_us,
+        int8_plan_warm_us: rwarm.median_us,
         fp32_interp_us: ri.median_us,
         fp32_plan_us: rp.median_us,
         int8_interp_us: ri8.median_us,
@@ -258,7 +284,7 @@ fn plan_vs_interpreter() -> PlanReport {
 
 fn write_bench_json(r: &PlanReport) {
     let json = format!(
-        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2},\n  \"dyn_interp_us\": {:.1},\n  \"dyn_plan_us\": {:.1},\n  \"dyn_speedup\": {:.2},\n  \"dyn_vs_static_planned\": {:.2}\n}}\n",
+        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2},\n  \"dyn_interp_us\": {:.1},\n  \"dyn_plan_us\": {:.1},\n  \"dyn_speedup\": {:.2},\n  \"dyn_vs_static_planned\": {:.2},\n  \"int8_plan_cold_us\": {:.1},\n  \"int8_plan_warm_us\": {:.1},\n  \"steady_state_speedup\": {:.2}\n}}\n",
         r.fp32_interp_us,
         r.fp32_plan_us,
         r.fp32_interp_us / r.fp32_plan_us,
@@ -273,6 +299,9 @@ fn write_bench_json(r: &PlanReport) {
         r.dyn_plan_us,
         r.dyn_interp_us / r.dyn_plan_us,
         r.int8_plan_us / r.dyn_plan_us,
+        r.int8_plan_cold_us,
+        r.int8_plan_warm_us,
+        r.int8_plan_cold_us / r.int8_plan_warm_us,
     );
     let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
     match std::fs::write(&path, &json) {

@@ -398,6 +398,13 @@ impl Server {
         ensure!(!deployments.is_empty(), "server needs at least one deployment");
         ensure!(cfg.workers >= 1, "server needs at least one worker");
         ensure!(cfg.policy.max_batch >= 1, "batch policy max_batch must be >= 1");
+        // Warm the engine's persistent kernel pool before traffic arrives:
+        // all N batch workers submit row-chunk GEMM work to this ONE shared
+        // team (sized once from available_parallelism) instead of each
+        // spawning transient per-call thread sets — N workers no longer
+        // oversubscribe the host N×8, and the first request doesn't pay
+        // worker spawns.
+        crate::engine::pool::global();
         let default_name = deployments[0].name.clone();
         let mut map = HashMap::new();
         for d in deployments {
@@ -744,6 +751,9 @@ fn run_one_batch(
 /// a `OnceLock`'d plan (the engine asserts `CompiledModel: Send + Sync` at
 /// compile time), so N workers run the same deployment concurrently with no
 /// mutex — the old `Arc<Mutex<CompiledModel>>` serialised the whole fleet.
+/// Steady-state execution is allocation-free per worker: `run` reuses a
+/// per-thread `ExecScratch` arena, and parallel GEMM chunks go to the
+/// process-wide persistent `engine::pool` shared by every worker.
 pub struct EngineModel {
     pub model: Arc<crate::engine::CompiledModel>,
     pub batch: usize,

@@ -29,11 +29,17 @@ pub mod lowp;
 pub mod ops;
 /// The execution-plan compiler and executor (the hot path behind `run`).
 pub mod plan;
+/// Persistent shared worker pool behind the parallel kernels (no per-call
+/// thread spawns; one team serves every executor thread in the process).
+pub mod pool;
 
+use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
+
+pub use plan::ExecScratch;
 
 use crate::qir::{Graph, Node};
 use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
@@ -154,6 +160,14 @@ pub struct CompiledModel {
 
 pub(crate) const BN_EPS: f32 = 1e-5;
 
+thread_local! {
+    /// Per-thread reusable executor scratch behind [`CompiledModel::run`]:
+    /// each executor thread (serving worker, bench loop, test) warms one
+    /// arena and then reruns allocation-free, whatever mix of deployments
+    /// it serves (buffers grow to the high-water mark across models).
+    static RUN_SCRATCH: RefCell<plan::ExecScratch> = RefCell::new(plan::ExecScratch::new());
+}
+
 // Compile-time proof of the frozen-after-plan contract: every field of
 // `CompiledModel` (graph, params, qweights, ranges, `OnceLock<ExecPlan>`) is
 // owned data, so the whole deployment crosses threads and is shared `&self`
@@ -190,9 +204,25 @@ impl CompiledModel {
         Ok(self.exec_plan.get_or_init(|| p))
     }
 
-    /// Run and return the graph outputs (plan-based executor).
+    /// Run and return the graph outputs (plan-based executor). Executes
+    /// against a per-thread reusable [`ExecScratch`], so repeated calls
+    /// from the same thread (a serving worker, a bench loop) hit the
+    /// allocator only for the returned output clones; use [`Self::run_with`]
+    /// with a caller-owned scratch for the fully zero-allocation form.
     pub fn run(&self, x: &Tensor) -> Result<Vec<Tensor>> {
-        self.plan()?.execute(x)
+        RUN_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let outs = self.plan()?.execute_with(x, &mut scratch)?;
+            Ok(outs.to_vec())
+        })
+    }
+
+    /// Run against a caller-owned reusable [`ExecScratch`]: the
+    /// zero-allocation steady-state entry point. The returned outputs
+    /// borrow the scratch and are valid until its next run. See the
+    /// scratch's docs for the ownership/reuse contract.
+    pub fn run_with<'s>(&self, x: &Tensor, scratch: &'s mut ExecScratch) -> Result<&'s [Tensor]> {
+        self.plan()?.execute_with(x, scratch)
     }
 
     /// Per-sample input shape (batch dim excluded) declared by the graph's

@@ -13,15 +13,20 @@
 //!   `conv2d_i8`, `linear_i8`) — the serial, unfused forms the legacy
 //!   interpreter executes. They are the ground truth the plan executor is
 //!   regression-tested against.
-//! * **planned kernels** (`*_tiled`, `*_fused`) — the forms the execution
-//!   plan dispatches: row-chunk scoped-thread parallelism via
-//!   [`par_row_chunks`], 4-way output-channel register blocking on BOTH
-//!   precision paths, and a bias+activation epilogue so fused
-//!   conv→bn→activation graphs finish inside the GEMM (including the i8
-//!   requantization epilogue). Per-output accumulation order is kept
-//!   identical to the reference kernels, so planned f32 results are
-//!   bit-identical too, and the i8 path is bit-exact by construction
-//!   (i32 accumulation is order-independent).
+//! * **planned kernels** (`*_packed`, plus the `*_tiled`/`*_fused`
+//!   row-major forms kept for benches and regression tests) — the forms
+//!   the execution plan dispatches: row-chunk parallelism on the
+//!   persistent shared worker pool via [`par_row_chunks`] (no per-call
+//!   thread spawns), 4-way output-channel register blocking on BOTH
+//!   precision paths over plan-time prepacked panel-major weights
+//!   ([`PackedF32`]/[`PackedQW`]), caller-owned scratch buffers for every
+//!   intermediate (`*_into` — zero allocations once warm), and a
+//!   bias+activation epilogue so fused conv→bn→activation graphs finish
+//!   inside the GEMM (including the i8 requantization epilogue).
+//!   Per-output accumulation order is kept identical to the reference
+//!   kernels, so planned f32 results are bit-identical too, and the i8
+//!   path is bit-exact by construction (i32 accumulation is
+//!   order-independent).
 //!
 //! Sub-byte weights: when a `QWeight` carries a 4-bit payload
 //! (`qw.bits == 4`, two nibbles per byte per output channel), the integer
@@ -34,6 +39,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::engine::pool;
 use crate::qir::Node;
 use crate::tensor::quantized::{packed_row_bytes, row_sums_of};
 use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
@@ -129,12 +135,35 @@ pub fn im2col_group(
     ho: usize,
     wo: usize,
 ) -> Im2Col {
+    let mut data = Vec::new();
+    let (rows, cols) = im2col_group_into(x, group, groups, kh, kw, stride, pad, ho, wo, &mut data);
+    Im2Col { rows, cols, data }
+}
+
+/// [`im2col_group`] into a caller-owned buffer (cleared and zero-filled to
+/// `rows * cols`; allocation-free once the buffer's capacity suffices).
+/// Returns `(rows, cols)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_group_into(
+    x: &Tensor,
+    group: usize,
+    groups: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
     let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let cg = c / groups;
     let c0 = group * cg;
     let rows = n * ho * wo;
     let cols = cg * kh * kw;
-    let mut data = vec![0.0f32; rows * cols];
+    out.clear();
+    out.resize(rows * cols, 0.0);
+    let data = out.as_mut_slice();
     for ni in 0..n {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -160,22 +189,33 @@ pub fn im2col_group(
             }
         }
     }
-    Im2Col { rows, cols, data }
+    (rows, cols)
 }
 
 // ---------------------------------------------------------------------------
 // shared parallel driver
 // ---------------------------------------------------------------------------
 
-/// Work (in MACs) below which spawning threads costs more than it saves,
+/// Work (in MACs) below which parallel dispatch costs more than it saves,
 /// and the minimum row count worth splitting (§Perf iteration 3).
 const PAR_WORK_MIN: u64 = 4_000_000;
 const PAR_ROWS_MIN: usize = 8;
 
+/// Disjoint-chunk base pointer handed to pool workers; `Sync` is sound
+/// because every chunk index is claimed exactly once and chunk row ranges
+/// never overlap.
+struct OutBase(*mut f32);
+
+unsafe impl Sync for OutBase {}
+
 /// Shared row-chunk parallel driver behind every planned GEMM: splits the
 /// output matrix into contiguous disjoint row ranges and runs
-/// `kern(first_row, n_rows, out_chunk)` on scoped threads when the problem is
-/// large enough to amortize the spawns. Small problems run inline.
+/// `kern(first_row, n_rows, out_chunk)` on the persistent worker pool
+/// ([`pool::global`] — long-lived parked workers, no per-call thread
+/// spawns) when the problem is large enough to amortize the dispatch.
+/// Small problems run inline. Chunk boundaries depend only on (rows, pool
+/// parallelism) and every output element is accumulated independently, so
+/// results are bit-identical at any worker count.
 pub(crate) fn par_row_chunks<F>(rows: usize, out: &mut [f32], out_stride: usize, work: u64, kern: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -185,20 +225,26 @@ where
         kern(0, rows, out);
         return;
     }
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
-    let chunk = rows.div_ceil(threads);
-    let kern = &kern;
-    std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = out;
-        let mut r0 = 0usize;
-        while r0 < rows {
-            let take = chunk.min(rows - r0);
-            let (mine, tail) = rest.split_at_mut(take * out_stride);
-            rest = tail;
-            let start = r0;
-            scope.spawn(move || kern(start, take, mine));
-            r0 += take;
+    pool::with_current(|p| {
+        let threads = p.parallelism();
+        if threads <= 1 {
+            kern(0, rows, out);
+            return;
         }
+        let chunk = rows.div_ceil(threads);
+        let n_chunks = rows.div_ceil(chunk);
+        let base = OutBase(out.as_mut_ptr());
+        let kern = &kern;
+        p.run(n_chunks, &move |i| {
+            let r0 = i * chunk;
+            let take = chunk.min(rows - r0);
+            // SAFETY: chunk i is claimed exactly once (atomic cursor) and
+            // [r0, r0+take) row ranges are pairwise disjoint.
+            let mine = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r0 * out_stride), take * out_stride)
+            };
+            kern(r0, take, mine);
+        });
     });
 }
 
@@ -351,9 +397,16 @@ pub fn quantize_cols(col: &Im2Col, scale: f32, zp: i32, round: RoundMode) -> Vec
 /// Quantize a raw f32 slice to u8 (asymmetric per-tensor) — the single
 /// definition of the activation quantization arithmetic.
 pub fn quantize_slice(x: &[f32], scale: f32, zp: i32, round: RoundMode) -> Vec<u8> {
-    x.iter()
-        .map(|&v| (round.round(v / scale) + zp as f32).clamp(0.0, 255.0) as u8)
-        .collect()
+    let mut out = Vec::new();
+    quantize_slice_into(x, scale, zp, round, &mut out);
+    out
+}
+
+/// [`quantize_slice`] into a caller-owned buffer (allocation-free once the
+/// buffer's capacity suffices — the planned executor's steady-state form).
+pub fn quantize_slice_into(x: &[f32], scale: f32, zp: i32, round: RoundMode, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| (round.round(v / scale) + zp as f32).clamp(0.0, 255.0) as u8));
 }
 
 /// Premultiplied per-output-channel dequantization scales: sw[c] * sx,
@@ -361,7 +414,16 @@ pub fn quantize_slice(x: &[f32], scale: f32, zp: i32, round: RoundMode) -> Vec<u
 /// per-tensor. Resolving this once per call (or once per plan) hoists the
 /// per-element `w_scales[oo.min(len-1)]` branch out of the GEMM output loop.
 pub fn premul_scales(w_scales: &[f32], cout: usize, sx: f32) -> Vec<f32> {
-    (0..cout).map(|c| w_scales[c.min(w_scales.len() - 1)] * sx).collect()
+    let mut out = Vec::new();
+    premul_scales_into(w_scales, cout, sx, &mut out);
+    out
+}
+
+/// [`premul_scales`] into a caller-owned buffer — what the dynamic
+/// activation-scaling path uses per run to stay allocation-free.
+pub fn premul_scales_into(w_scales: &[f32], cout: usize, sx: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend((0..cout).map(|c| w_scales[c.min(w_scales.len() - 1)] * sx));
 }
 
 /// Integer GEMM with zero-point factorization (compatibility entry point:
@@ -590,12 +652,628 @@ fn gemm_i8_rows(
 }
 
 // ---------------------------------------------------------------------------
+// prepacked panel weights (plan-time layout transformation)
+//
+// The planned GEMMs read weights in 4-output-channel register blocks, but
+// row-major storage makes each block walk 4 strided rows. At plan time the
+// executor repacks every weight ONCE into cache-blocked panel-major form
+// matched to that blocking: full panels of 4 output rows are interleaved
+// k-major ([k][j] — one contiguous stream the inner loop walks linearly),
+// remainder rows stay row-major after the panels, and convolution groups
+// are packed independently so group slicing stays contiguous. Per-output
+// accumulation order is untouched — only the addressing changes — so the
+// packed kernels are bit-identical to their row-major twins (asserted in
+// the tests below), and the 4-bit path unpacks nibbles per *panel byte
+// group* (4 adjacent bytes = one k-step of the whole panel) instead of
+// walking 4 separate packed rows.
+// ---------------------------------------------------------------------------
+
+/// Interleave full 4-row panels ([k][j]) and append remainder rows
+/// row-major. `row_bytes` is the stored row length (elements for f32/i8,
+/// packed bytes for i4 — byte-level interleave keeps each byte's nibble
+/// pair intact).
+fn pack_panel_rows<T: Copy>(rows: &[T], cout_g: usize, row_bytes: usize, out: &mut Vec<T>) {
+    let mut o = 0;
+    while o + 4 <= cout_g {
+        for k in 0..row_bytes {
+            for j in 0..4 {
+                out.push(rows[(o + j) * row_bytes + k]);
+            }
+        }
+        o += 4;
+    }
+    while o < cout_g {
+        out.extend_from_slice(&rows[o * row_bytes..(o + 1) * row_bytes]);
+        o += 1;
+    }
+}
+
+/// An f32 weight matrix/filter repacked panel-major at plan time (see the
+/// section docs). Shape is the original tensor shape (OIHW for conv,
+/// (dout, din) for linear); `groups` partitions the output channels.
+pub struct PackedF32 {
+    /// Original weight tensor shape.
+    pub shape: Vec<usize>,
+    /// Convolution groups (1 for linear / attention projections).
+    pub groups: usize,
+    /// Output channels per group.
+    pub cout_g: usize,
+    /// Reduction length (elements per output row).
+    pub cols: usize,
+    /// `groups * cout_g * cols` values: per group, full panels interleaved
+    /// [k][j] followed by remainder rows row-major.
+    pub data: Vec<f32>,
+}
+
+impl PackedF32 {
+    /// Repack a row-major weight tensor (output channels on axis 0).
+    pub fn pack(w: &Tensor, groups: usize) -> PackedF32 {
+        let cout = if w.shape.is_empty() { 1 } else { w.shape[0].max(1) };
+        let cout_g = cout / groups.max(1);
+        let cols = w.data.len() / cout;
+        let mut data = Vec::with_capacity(w.data.len());
+        for g in 0..groups {
+            pack_panel_rows(
+                &w.data[g * cout_g * cols..(g + 1) * cout_g * cols],
+                cout_g,
+                cols,
+                &mut data,
+            );
+        }
+        PackedF32 { shape: w.shape.clone(), groups, cout_g, cols, data }
+    }
+
+    /// Total output channels across all groups.
+    pub fn cout(&self) -> usize {
+        self.groups * self.cout_g
+    }
+
+    /// Panel-major payload of one convolution group.
+    pub fn group(&self, g: usize) -> &[f32] {
+        &self.data[g * self.cout_g * self.cols..(g + 1) * self.cout_g * self.cols]
+    }
+}
+
+/// A quantized weight repacked panel-major at plan time: the integer
+/// payload in panel order (i8 values, or nibble-packed i4 bytes — the
+/// interleave is byte-level, so a panel's 4 adjacent bytes carry one
+/// two-nibble k-step for each of the 4 output channels), with the scales
+/// and quantize-time row sums carried over from the source [`QWeight`].
+pub struct PackedQW {
+    /// Original weight tensor shape.
+    pub shape: Vec<usize>,
+    /// Convolution groups (1 for linear / attention projections).
+    pub groups: usize,
+    /// Output channels per group.
+    pub cout_g: usize,
+    /// Reduction length in ELEMENTS (nibbles for 4-bit payloads).
+    pub cols: usize,
+    /// Weight bit-width: 8 or 4.
+    pub bits: u8,
+    /// Panel-major integer payload, per group.
+    pub data: Vec<i8>,
+    /// Per-output-channel (or singleton) dequant scales.
+    pub scales: Vec<f32>,
+    /// Per-output-channel payload sums (zero-point correction term).
+    pub row_sums: Vec<i32>,
+}
+
+impl PackedQW {
+    /// Repack a quantized weight (either bit-width) for the panel kernels.
+    pub fn pack(qw: &QWeight, groups: usize) -> PackedQW {
+        let cout = qw.cout();
+        let cout_g = cout / groups.max(1);
+        let cols = qw.per_row();
+        let row_bytes = if qw.bits == 4 { packed_row_bytes(cols) } else { cols };
+        let mut data = Vec::with_capacity(qw.data.len());
+        for g in 0..groups {
+            pack_panel_rows(
+                &qw.data[g * cout_g * row_bytes..(g + 1) * cout_g * row_bytes],
+                cout_g,
+                row_bytes,
+                &mut data,
+            );
+        }
+        PackedQW {
+            shape: qw.shape.clone(),
+            groups,
+            cout_g,
+            cols,
+            bits: qw.bits,
+            data,
+            scales: qw.scales.clone(),
+            row_sums: qw.row_sums.clone(),
+        }
+    }
+
+    /// Total output channels across all groups.
+    pub fn cout(&self) -> usize {
+        self.groups * self.cout_g
+    }
+
+    /// Stored bytes per output row (packed bytes for 4-bit payloads).
+    fn row_bytes(&self) -> usize {
+        if self.bits == 4 {
+            packed_row_bytes(self.cols)
+        } else {
+            self.cols
+        }
+    }
+
+    /// Panel-major payload of one convolution group.
+    pub fn group(&self, g: usize) -> &[i8] {
+        let rb = self.row_bytes();
+        &self.data[g * self.cout_g * rb..(g + 1) * self.cout_g * rb]
+    }
+}
+
+/// Serial row-range kernel over panel-major f32 weights. Identical
+/// per-output accumulation order (64-wide k blocks) to [`gemm_f32_rows`] —
+/// only the weight addressing changes — so outputs are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_panel_rows(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    wp: &[f32],
+    cout_g: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    const BK: usize = 64;
+    for r in 0..rows {
+        let xrow = &x[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            // full panel: one linear [k][4] stream for 4 accumulators
+            let pan = &wp[o * cols..(o + 4) * cols];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut k = 0;
+            while k + BK <= cols {
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for i in k..k + BK {
+                    let xv = xrow[i];
+                    let wb = &pan[i * 4..i * 4 + 4];
+                    s0 += xv * wb[0];
+                    s1 += xv * wb[1];
+                    s2 += xv * wb[2];
+                    s3 += xv * wb[3];
+                }
+                a0 += s0;
+                a1 += s1;
+                a2 += s2;
+                a3 += s3;
+                k += BK;
+            }
+            for i in k..cols {
+                let xv = xrow[i];
+                let wb = &pan[i * 4..i * 4 + 4];
+                a0 += xv * wb[0];
+                a1 += xv * wb[1];
+                a2 += xv * wb[2];
+                a3 += xv * wb[3];
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[o0 + oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            // remainder rows are stored row-major at offset o*cols
+            let wrow = &wp[o * cols..(o + 1) * cols];
+            let mut acc = 0.0f32;
+            let mut k = 0;
+            while k + BK <= cols {
+                let mut s = 0.0f32;
+                for i in k..k + BK {
+                    s += xrow[i] * wrow[i];
+                }
+                acc += s;
+                k += BK;
+            }
+            for i in k..cols {
+                acc += xrow[i] * wrow[i];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o0 + o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}
+
+/// Serial row-range kernel over panel-major f32 weights with PLAIN
+/// (unblocked-k) accumulation, mirroring [`linear_f32`] / `linear_f32_rows`
+/// bit-for-bit per output — the linear / attention-projection form.
+#[allow(clippy::too_many_arguments)]
+fn linear_f32_panel_rows(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    wp: &[f32],
+    dout: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut o = 0;
+        while o + 4 <= dout {
+            let pan = &wp[o * din..(o + 4) * din];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for k in 0..din {
+                let xv = xrow[k];
+                let wb = &pan[k * 4..k * 4 + 4];
+                a0 += xv * wb[0];
+                a1 += xv * wb[1];
+                a2 += xv * wb[2];
+                a3 += xv * wb[3];
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < dout {
+            let wrow = &wp[o * din..(o + 1) * din];
+            let mut acc = 0.0f32;
+            for k in 0..din {
+                acc += xrow[k] * wrow[k];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}
+
+/// Serial row-range kernel over panel-major i8 weights (bit-exact with
+/// [`gemm_i8_rows`] — i32 accumulation is order-independent anyway).
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_panel_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wp: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let pan = &wp[o * cols..(o + 4) * cols];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for k in 0..cols {
+                let x = xrow[k] as i32;
+                let wb = &pan[k * 4..k * 4 + 4];
+                a0 += x * wb[0] as i32;
+                a1 += x * wb[1] as i32;
+                a2 += x * wb[2] as i32;
+                a3 += x * wb[3] as i32;
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wp[o * cols..(o + 1) * cols];
+            let mut acc = 0i32;
+            for k in 0..cols {
+                acc += xrow[k] as i32 * wrow[k] as i32;
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
+/// Serial row-range kernel over panel-major nibble-packed i4 weights: each
+/// k-step of a full panel is 4 adjacent bytes (one per output channel),
+/// unpacked together — per-panel nibble unpacking instead of walking 4
+/// separate packed rows. Bit-exact with [`gemm_i4_rows`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_i4_panel_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wp: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let bpr = packed_row_bytes(cols);
+    let pairs = cols / 2;
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let pan = &wp[o * bpr..(o + 4) * bpr];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for kb in 0..pairs {
+                let x0 = xrow[2 * kb] as i32;
+                let x1 = xrow[2 * kb + 1] as i32;
+                let wb = &pan[kb * 4..kb * 4 + 4];
+                a0 += x0 * nib_lo(wb[0]) + x1 * nib_hi(wb[0]);
+                a1 += x0 * nib_lo(wb[1]) + x1 * nib_hi(wb[1]);
+                a2 += x0 * nib_lo(wb[2]) + x1 * nib_hi(wb[2]);
+                a3 += x0 * nib_lo(wb[3]) + x1 * nib_hi(wb[3]);
+            }
+            if cols % 2 == 1 {
+                let x0 = xrow[cols - 1] as i32;
+                let wb = &pan[(bpr - 1) * 4..(bpr - 1) * 4 + 4];
+                a0 += x0 * nib_lo(wb[0]);
+                a1 += x0 * nib_lo(wb[1]);
+                a2 += x0 * nib_lo(wb[2]);
+                a3 += x0 * nib_lo(wb[3]);
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            // remainder rows: original packed-row layout at offset o*bpr
+            let wrow = &wp[o * bpr..(o + 1) * bpr];
+            let mut acc = 0i32;
+            for kb in 0..pairs {
+                acc += xrow[2 * kb] as i32 * nib_lo(wrow[kb])
+                    + xrow[2 * kb + 1] as i32 * nib_hi(wrow[kb]);
+            }
+            if cols % 2 == 1 {
+                acc += xrow[cols - 1] as i32 * nib_lo(wrow[bpr - 1]);
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
+/// Row-chunk parallel f32 GEMM over one group's panel-major payload
+/// (64-wide k blocking — the convolution form).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_f32_packed(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    wp: &[f32],
+    cout_g: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let work = rows as u64 * cols as u64 * cout_g as u64;
+    par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
+        gemm_f32_panel_rows(
+            &x[r0 * cols..(r0 + nr) * cols],
+            nr, cols, wp, cout_g, bias, act, chunk, out_stride, o0,
+        );
+    });
+}
+
+/// Row-chunk parallel integer GEMM over one group's panel-major payload,
+/// dispatching on the stored bit-width.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_int_packed(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wp: &[i8],
+    bits: u8,
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let work = rows as u64 * cols as u64 * cout_g as u64;
+    par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
+        let xr = &xq[r0 * cols..(r0 + nr) * cols];
+        if bits == 4 {
+            gemm_i4_panel_rows(
+                xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride, o0,
+            );
+        } else {
+            gemm_i8_panel_rows(
+                xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride, o0,
+            );
+        }
+    });
+}
+
+/// Planned f32 convolution over prepacked panel weights, writing every
+/// intermediate into caller-owned scratch (`col` patch matrix, `mat` GEMM
+/// output) and the result into `out` — allocation-free once warm. The
+/// bias + activation epilogue runs inside the GEMM, like
+/// [`conv2d_f32_fused`]; numerics are bit-identical to it.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_packed(
+    x: &Tensor,
+    wp: &PackedF32,
+    bias: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    act: Option<Act>,
+    col: &mut Vec<f32>,
+    mat: &mut Vec<f32>,
+    out: &mut Tensor,
+) {
+    let n = x.shape[0];
+    let (cout, kh, kw) = (wp.cout(), wp.shape[2], wp.shape[3]);
+    let (ho, wo) = conv_out_dims(x, kh, kw, stride, pad);
+    let cout_g = wp.cout_g;
+    mat.resize(n * ho * wo * cout, 0.0);
+    for g in 0..wp.groups {
+        let (rows, cols) = im2col_group_into(x, g, wp.groups, kh, kw, stride, pad, ho, wo, col);
+        let bslice = bias.map(|b| &b[g * cout_g..(g + 1) * cout_g]);
+        gemm_f32_packed(
+            col.as_slice(), rows, cols, wp.group(g), cout_g, bslice, act, mat, cout, g * cout_g,
+        );
+    }
+    out_mat_to_nchw_into(mat.as_slice(), n, cout, ho, wo, out);
+}
+
+/// Planned integer convolution over prepacked panel weights (i8 or
+/// nibble-packed i4), scratch-buffered like [`conv2d_f32_packed`]:
+/// `col` patch matrix, `xq` quantized activations, `mat` GEMM output.
+/// Bias + activation run in the requantization epilogue. Bit-exact with
+/// [`conv2d_i8_fused`] on the same weights.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int_packed(
+    x: &Tensor,
+    pw: &PackedQW,
+    bias: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+    sxw: &[f32],
+    act: Option<Act>,
+    col: &mut Vec<f32>,
+    xq: &mut Vec<u8>,
+    mat: &mut Vec<f32>,
+    out: &mut Tensor,
+) {
+    let n = x.shape[0];
+    let (cout, kh, kw) = (pw.cout(), pw.shape[2], pw.shape[3]);
+    let (ho, wo) = conv_out_dims(x, kh, kw, stride, pad);
+    let cout_g = pw.cout_g;
+    mat.resize(n * ho * wo * cout, 0.0);
+    for g in 0..pw.groups {
+        let (rows, cols) = im2col_group_into(x, g, pw.groups, kh, kw, stride, pad, ho, wo, col);
+        quantize_slice_into(col.as_slice(), sx, zx, round, xq);
+        let rowsum = &pw.row_sums[g * cout_g..(g + 1) * cout_g];
+        let sxw_g = &sxw[g * cout_g..(g + 1) * cout_g];
+        let bslice = bias.map(|b| &b[g * cout_g..(g + 1) * cout_g]);
+        gemm_int_packed(
+            xq.as_slice(), rows, cols, pw.group(g), pw.bits, cout_g, rowsum, sxw_g, zx, bslice,
+            act, mat, cout, g * cout_g,
+        );
+    }
+    out_mat_to_nchw_into(mat.as_slice(), n, cout, ho, wo, out);
+}
+
+/// Planned f32 linear over prepacked panel weights, writing into a
+/// caller-sized `out` slice (`rows * dout`). Plain accumulation, matching
+/// [`linear_f32`] bit-for-bit per output.
+pub fn linear_f32_packed(
+    x: &[f32],
+    rows: usize,
+    wp: &PackedF32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+) {
+    let (din, dout) = (wp.cols, wp.cout_g);
+    let work = rows as u64 * din as u64 * dout as u64;
+    par_row_chunks(rows, out, dout, work, |r0, nr, chunk| {
+        let xr = &x[r0 * din..(r0 + nr) * din];
+        linear_f32_panel_rows(xr, nr, din, &wp.data, dout, bias, act, chunk);
+    });
+}
+
+/// Planned integer linear over prepacked panel weights: quantizes the
+/// input into the caller's `xq` scratch and runs the panel GEMM with the
+/// requantization epilogue into `out` (`rows * dout`, caller-sized).
+/// Bit-exact with [`linear_i8_fused`] on the same weights.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_int_packed(
+    x: &[f32],
+    rows: usize,
+    pw: &PackedQW,
+    bias: Option<&[f32]>,
+    sx: f32,
+    zx: i32,
+    round: RoundMode,
+    sxw: &[f32],
+    act: Option<Act>,
+    xq: &mut Vec<u8>,
+    out: &mut [f32],
+) {
+    let (din, dout) = (pw.cols, pw.cout());
+    quantize_slice_into(x, sx, zx, round, xq);
+    gemm_int_packed(
+        xq.as_slice(), rows, din, &pw.data, pw.bits, dout, &pw.row_sums, sxw, zx, bias, act, out,
+        dout, 0,
+    );
+}
+
+// ---------------------------------------------------------------------------
 // convolution
 // ---------------------------------------------------------------------------
 
 fn conv_out_dims(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> (usize, usize) {
     let (h, w) = (x.shape[2], x.shape[3]);
     ((h + 2 * pad - kh) / stride + 1, (w + 2 * pad - kw) / stride + 1)
+}
+
+/// (N*Ho*Wo, Cout) row-major matrix -> caller-owned NCHW tensor (every
+/// element overwritten; allocation-free once the tensor's capacity
+/// suffices). Bias is always fused into the GEMM epilogue on this path.
+fn out_mat_to_nchw_into(mat: &[f32], n: usize, cout: usize, ho: usize, wo: usize, out: &mut Tensor) {
+    out.reset_for_overwrite(&[n, cout, ho, wo]);
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let r = (ni * ho + oy) * wo + ox;
+                for o in 0..cout {
+                    out.data[((ni * cout + o) * ho + oy) * wo + ox] = mat[r * cout + o];
+                }
+            }
+        }
+    }
 }
 
 /// (N*Ho*Wo, Cout) row-major matrix -> NCHW tensor, adding `bias` per output
@@ -920,10 +1598,17 @@ fn linear_i8_inner(
 /// yields 0.0 (the padding value), matching every framework's semantics —
 /// the seed returned f32::MIN there.
 pub fn pool(a: &Tensor, k: usize, stride: usize, pad: usize, is_max: bool) -> Tensor {
+    let mut out = Tensor::default();
+    pool_into(a, k, stride, pad, is_max, &mut out);
+    out
+}
+
+/// [`pool`] into a caller-owned tensor (allocation-free once warm).
+pub fn pool_into(a: &Tensor, k: usize, stride: usize, pad: usize, is_max: bool, out: &mut Tensor) {
     let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
     let ho = (h + 2 * pad - k) / stride + 1;
     let wo = (w + 2 * pad - k) / stride + 1;
-    let mut out = Tensor::zeros(&[n, c, ho, wo]);
+    out.reset_for_overwrite(&[n, c, ho, wo]);
     for ni in 0..n {
         for ci in 0..c {
             let xc = &a.data[(ni * c + ci) * h * w..(ni * c + ci + 1) * h * w];
@@ -961,7 +1646,6 @@ pub fn pool(a: &Tensor, k: usize, stride: usize, pad: usize, is_max: bool) -> Te
             }
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -989,9 +1673,16 @@ pub fn bn_fold_params(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32], ep
 
 /// Apply per-channel affine (BN) over NCHW-like data.
 pub fn bn_apply(a: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
+    let mut out = Tensor::default();
+    bn_apply_into(a, scale, shift, &mut out);
+    out
+}
+
+/// [`bn_apply`] into a caller-owned tensor (allocation-free once warm).
+pub fn bn_apply_into(a: &Tensor, scale: &[f32], shift: &[f32], out: &mut Tensor) {
     let c = scale.len();
     let spatial = a.len() / (a.shape[0] * c);
-    let mut out = a.clone();
+    out.reset_for_overwrite(&a.shape);
     for ni in 0..a.shape[0] {
         for ci in 0..c {
             let base = (ni * c + ci) * spatial;
@@ -1000,19 +1691,59 @@ pub fn bn_apply(a: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
             }
         }
     }
-    out
+}
+
+/// Elementwise sum into a caller-owned tensor (shapes must match — the
+/// executors check before calling). `out[i] = a[i] + b[i]`.
+pub fn add_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    out.reset_for_overwrite(&a.shape);
+    for (o, (&x, &y)) in out.data.iter_mut().zip(a.data.iter().zip(b.data.iter())) {
+        *o = x + y;
+    }
 }
 
 /// Elementwise product, broadcasting a (B, C, 1, 1) gate over (B, C, H, W)
 /// when shapes differ (SE block).
 pub fn mul_gate(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::default();
+    mul_gate_into(a, b, &mut out);
+    out
+}
+
+/// [`mul_gate`] into a caller-owned tensor (allocation-free once warm).
+pub fn mul_gate_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
+    out.reset_for_overwrite(&a.shape);
     if a.shape == b.shape {
-        let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x * y).collect();
-        return Tensor::new(a.shape.clone(), data);
+        for (o, (&x, &y)) in out.data.iter_mut().zip(a.data.iter().zip(b.data.iter())) {
+            *o = x * y;
+        }
+        return;
     }
     let (bsz, c) = (a.shape[0], a.shape[1]);
     let spatial = a.len() / (bsz * c);
-    let mut out = a.clone();
+    for ni in 0..bsz {
+        for ci in 0..c {
+            let gate = b.data[ni * c + ci];
+            let base = (ni * c + ci) * spatial;
+            for i in 0..spatial {
+                out.data[base + i] = a.data[base + i] * gate;
+            }
+        }
+    }
+}
+
+/// In-place form of [`mul_gate`]: `out` already holds the left operand
+/// (moved there by the liveness plan); applies the (possibly broadcast)
+/// gate without a copy. Same arithmetic, same result bits.
+pub fn mul_gate_assign(out: &mut Tensor, b: &Tensor) {
+    if out.shape == b.shape {
+        for (o, &y) in out.data.iter_mut().zip(b.data.iter()) {
+            *o *= y;
+        }
+        return;
+    }
+    let (bsz, c) = (out.shape[0], out.shape[1]);
+    let spatial = out.len() / (bsz * c);
     for ni in 0..bsz {
         for ci in 0..c {
             let gate = b.data[ni * c + ci];
@@ -1022,14 +1753,20 @@ pub fn mul_gate(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Global average pooling (B, C, H, W) -> (B, C, 1, 1).
 pub fn gap(a: &Tensor) -> Tensor {
+    let mut out = Tensor::default();
+    gap_into(a, &mut out);
+    out
+}
+
+/// [`gap`] into a caller-owned tensor (allocation-free once warm).
+pub fn gap_into(a: &Tensor, out: &mut Tensor) {
     let (bsz, c) = (a.shape[0], a.shape[1]);
     let spatial = a.len() / (bsz * c);
-    let mut out = Tensor::zeros(&[bsz, c, 1, 1]);
+    out.reset_for_overwrite(&[bsz, c, 1, 1]);
     for ni in 0..bsz {
         for ci in 0..c {
             let base = (ni * c + ci) * spatial;
@@ -1037,13 +1774,19 @@ pub fn gap(a: &Tensor) -> Tensor {
             out.data[ni * c + ci] = s / spatial as f32;
         }
     }
-    out
 }
 
 /// Nearest-neighbor 2x upsampling (NCHW).
 pub fn upsample2x(a: &Tensor) -> Tensor {
+    let mut out = Tensor::default();
+    upsample2x_into(a, &mut out);
+    out
+}
+
+/// [`upsample2x`] into a caller-owned tensor (allocation-free once warm).
+pub fn upsample2x_into(a: &Tensor, out: &mut Tensor) {
     let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
-    let mut out = Tensor::zeros(&[bsz, c, 2 * h, 2 * w]);
+    out.reset_for_overwrite(&[bsz, c, 2 * h, 2 * w]);
     for ni in 0..bsz {
         for ci in 0..c {
             for y in 0..2 * h {
@@ -1054,14 +1797,20 @@ pub fn upsample2x(a: &Tensor) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Channel concatenation of two NCHW tensors with equal spatial dims.
 pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::default();
+    concat_channels_into(a, b, &mut out);
+    out
+}
+
+/// [`concat_channels`] into a caller-owned tensor (allocation-free once warm).
+pub fn concat_channels_into(a: &Tensor, b: &Tensor, out: &mut Tensor) {
     let (bsz, ca, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
     let cb = b.shape[1];
-    let mut out = Tensor::zeros(&[bsz, ca + cb, h, w]);
+    out.reset_for_overwrite(&[bsz, ca + cb, h, w]);
     let sp = h * w;
     for ni in 0..bsz {
         let oa = ni * (ca + cb) * sp;
@@ -1069,13 +1818,19 @@ pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
         out.data[oa + ca * sp..oa + (ca + cb) * sp]
             .copy_from_slice(&b.data[ni * cb * sp..(ni + 1) * cb * sp]);
     }
-    out
 }
 
 /// LayerNorm over the last dimension `d` (eps 1e-6, matching the JAX side).
 pub fn layernorm(a: &Tensor, d: usize, gamma: &[f32], beta: &[f32]) -> Tensor {
+    let mut out = Tensor::default();
+    layernorm_into(a, d, gamma, beta, &mut out);
+    out
+}
+
+/// [`layernorm`] into a caller-owned tensor (allocation-free once warm).
+pub fn layernorm_into(a: &Tensor, d: usize, gamma: &[f32], beta: &[f32], out: &mut Tensor) {
     let rows = a.len() / d;
-    let mut out = a.clone();
+    out.reset_for_overwrite(&a.shape);
     for r in 0..rows {
         let row = &a.data[r * d..(r + 1) * d];
         let mean = row.iter().sum::<f32>() / d as f32;
@@ -1085,14 +1840,20 @@ pub fn layernorm(a: &Tensor, d: usize, gamma: &[f32], beta: &[f32]) -> Tensor {
             out.data[r * d + i] = (row[i] - mean) * inv * gamma[i] + beta[i];
         }
     }
-    out
 }
 
 /// (B, C, H, W) -> (B, H*W, C) token layout.
 pub fn to_tokens(a: &Tensor) -> Tensor {
+    let mut out = Tensor::default();
+    to_tokens_into(a, &mut out);
+    out
+}
+
+/// [`to_tokens`] into a caller-owned tensor (allocation-free once warm).
+pub fn to_tokens_into(a: &Tensor, out: &mut Tensor) {
     let (bsz, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
     let t = h * w;
-    let mut out = Tensor::zeros(&[bsz, t, c]);
+    out.reset_for_overwrite(&[bsz, t, c]);
     for ni in 0..bsz {
         for ci in 0..c {
             for p in 0..t {
@@ -1100,13 +1861,20 @@ pub fn to_tokens(a: &Tensor) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Mean over the token dimension: (B, T, D) -> (B, D).
 pub fn tokmean(a: &Tensor) -> Tensor {
+    let mut out = Tensor::default();
+    tokmean_into(a, &mut out);
+    out
+}
+
+/// [`tokmean`] into a caller-owned tensor (allocation-free once warm).
+pub fn tokmean_into(a: &Tensor, out: &mut Tensor) {
     let (bsz, t, d) = (a.shape[0], a.shape[1], a.shape[2]);
-    let mut out = Tensor::zeros(&[bsz, d]);
+    // accumulates: start from zeros
+    out.reset_zeroed(&[bsz, d]);
     for ni in 0..bsz {
         for p in 0..t {
             for i in 0..d {
@@ -1117,7 +1885,6 @@ pub fn tokmean(a: &Tensor) -> Tensor {
             out.data[ni * d + i] /= t as f32;
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -1197,16 +1964,41 @@ pub fn quant_dequant_dyn(data: &mut [f32], round: RoundMode) -> (f32, i32) {
 /// ((bsz*t, d) each, `heads` heads). Shared by the interpreter and the plan
 /// executor so the two paths cannot drift (paper: softmax stays FP).
 pub fn attention_ctx(q: &[f32], k: &[f32], v: &[f32], bsz: usize, t: usize, d: usize, heads: usize) -> Vec<f32> {
+    let mut ctxt = Vec::new();
+    let mut sc = Vec::new();
+    attention_ctx_into(q, k, v, bsz, t, d, heads, &mut ctxt, &mut sc);
+    ctxt
+}
+
+/// [`attention_ctx`] into caller-owned buffers: `ctxt` receives the
+/// (bsz*t, d) context rows, `sc` is the per-query score scratch (len t,
+/// fully rewritten per query — reuse keeps the hot path allocation-free).
+/// Same accumulation order as the allocating form, bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_ctx_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bsz: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    ctxt: &mut Vec<f32>,
+    sc: &mut Vec<f32>,
+) {
     let dh = d / heads;
     let rows = bsz * t;
-    let mut ctxt = vec![0.0f32; rows * d];
+    ctxt.clear();
+    ctxt.resize(rows * d, 0.0);
+    sc.resize(t, 0.0);
+    let ctxt = ctxt.as_mut_slice();
+    let sc = sc.as_mut_slice();
     let scale = 1.0 / (dh as f32).sqrt();
     for b_i in 0..bsz {
         for h_i in 0..heads {
             for ti in 0..t {
                 let qoff = (b_i * t + ti) * d + h_i * dh;
-                // scores over all source tokens
-                let mut sc = vec![0.0f32; t];
+                // scores over all source tokens (sc fully rewritten)
                 let mut mx = f32::MIN;
                 for tj in 0..t {
                     let koff = (b_i * t + tj) * d + h_i * dh;
@@ -1233,7 +2025,6 @@ pub fn attention_ctx(q: &[f32], k: &[f32], v: &[f32], bsz: usize, t: usize, d: u
             }
         }
     }
-    ctxt
 }
 
 #[cfg(test)]
@@ -1509,6 +2300,104 @@ mod tests {
         let used = quant_dequant_dyn(&mut dy, RoundMode::TiesEven);
         assert_eq!(used, (s, z));
         assert_eq!(st, dy, "dynamic requant must reuse the static arithmetic");
+    }
+
+    #[test]
+    fn packed_f32_conv_and_linear_bit_match_row_major() {
+        let mut rng = Rng::new(0x9A11);
+        // odd cout exercises the remainder-row path after full panels
+        let x = Tensor::new(vec![2, 3, 7, 7], rng.normal_vec(2 * 3 * 49, 1.0));
+        let w = Tensor::new(vec![6, 3, 3, 3], rng.normal_vec(6 * 27, 0.2));
+        let b = Tensor::new(vec![6], rng.normal_vec(6, 0.3));
+        let reference = conv2d_f32_fused(&x, &w, Some(&b), 1, 1, 1, Some(Act::Relu));
+        let wp = PackedF32::pack(&w, 1);
+        let (mut col, mut mat, mut out) = (Vec::new(), Vec::new(), Tensor::default());
+        conv2d_f32_packed(
+            &x, &wp, Some(&b.data), 1, 1, Some(Act::Relu), &mut col, &mut mat, &mut out,
+        );
+        assert_eq!(out.shape, reference.shape);
+        assert_eq!(out.data, reference.data, "packed f32 conv drifted from row-major");
+
+        // depthwise: cout_g == 1, every group is a remainder row
+        let wd = Tensor::new(vec![3, 1, 3, 3], rng.normal_vec(27, 0.2));
+        let refd = conv2d_f32_fused(&x, &wd, None, 1, 1, 3, None);
+        let wpd = PackedF32::pack(&wd, 3);
+        conv2d_f32_packed(&x, &wpd, None, 1, 1, None, &mut col, &mut mat, &mut out);
+        assert_eq!(out.data, refd.data, "packed depthwise conv drifted");
+
+        // linear: odd dout, plain accumulation must match linear_f32
+        let (rows, din, dout) = (5, 37, 11);
+        let wl = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.2));
+        let bl = Tensor::new(vec![dout], rng.normal_vec(dout, 0.5));
+        let xl = rng.normal_vec(rows * din, 1.0);
+        let refl = linear_f32(&xl, rows, din, &wl, Some(&bl));
+        let wpl = PackedF32::pack(&wl, 1);
+        let mut outl = vec![0.0f32; rows * dout];
+        linear_f32_packed(&xl, rows, &wpl, Some(&bl.data), None, &mut outl);
+        assert_eq!(outl, refl, "packed f32 linear drifted from reference");
+    }
+
+    #[test]
+    fn packed_int_conv_and_linear_bit_match_row_major() {
+        let mut rng = Rng::new(0x9A12);
+        let x = Tensor::new(vec![2, 3, 7, 7], rng.normal_vec(2 * 3 * 49, 1.0));
+        // odd cout (panel tail) and odd im2col width (nibble tail)
+        let w = Tensor::new(vec![5, 3, 3, 3], rng.normal_vec(5 * 27, 0.2));
+        let b = Tensor::new(vec![5], rng.normal_vec(5, 0.3));
+        let (sx, zx) = act_scale_zp(-3.0, 3.0);
+        let (mut col, mut xq, mut mat, mut out) =
+            (Vec::new(), Vec::new(), Vec::new(), Tensor::default());
+        for bits in [8u8, 4] {
+            let qw =
+                QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits);
+            let sxw = premul_scales(&qw.scales, qw.shape[0], sx);
+            let reference = conv2d_i8_fused(
+                &x, &qw, Some(&b), 1, 1, 1, sx, zx, RoundMode::TiesEven, &sxw, Some(Act::Relu),
+            );
+            let pw = PackedQW::pack(&qw, 1);
+            assert_eq!(pw.bits, bits);
+            conv2d_int_packed(
+                &x, &pw, Some(&b.data), 1, 1, sx, zx, RoundMode::TiesEven, &sxw, Some(Act::Relu),
+                &mut col, &mut xq, &mut mat, &mut out,
+            );
+            assert_eq!(out.shape, reference.shape);
+            assert_eq!(out.data, reference.data, "packed int{bits} conv drifted from row-major");
+
+            // linear with odd din (tail nibble) and odd dout (panel tail)
+            let (rows, din, dout) = (6, 37, 9);
+            let wl = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.2));
+            let ql =
+                QWeight::quantize_bits(&wl, QuantScheme::PerTensorSym, RoundMode::HalfAway, bits);
+            let xl = rng.normal_vec(rows * din, 1.0);
+            let sxwl = premul_scales(&ql.scales, dout, sx);
+            let refl =
+                linear_i8_fused(&xl, rows, din, &ql, None, sx, zx, RoundMode::HalfAway, &sxwl, None);
+            let pl = PackedQW::pack(&ql, 1);
+            let mut outl = vec![0.0f32; rows * dout];
+            linear_int_packed(
+                &xl, rows, &pl, None, sx, zx, RoundMode::HalfAway, &sxwl, None, &mut xq, &mut outl,
+            );
+            assert_eq!(outl, refl, "packed int{bits} linear drifted from row-major");
+        }
+    }
+
+    #[test]
+    fn into_kernels_reuse_buffers_without_reallocating() {
+        let mut rng = Rng::new(0x9A13);
+        let x = Tensor::new(vec![1, 4, 8, 8], rng.normal_vec(4 * 64, 1.0));
+        let w = Tensor::new(vec![8, 4, 3, 3], rng.normal_vec(8 * 36, 0.2));
+        let wp = PackedF32::pack(&w, 1);
+        let (mut col, mut mat, mut out) = (Vec::new(), Vec::new(), Tensor::default());
+        conv2d_f32_packed(&x, &wp, None, 1, 1, None, &mut col, &mut mat, &mut out);
+        let caps = (col.capacity(), mat.capacity(), out.data.capacity());
+        let first = out.data.clone();
+        conv2d_f32_packed(&x, &wp, None, 1, 1, None, &mut col, &mut mat, &mut out);
+        assert_eq!(out.data, first, "warm rerun changed the result");
+        assert_eq!(
+            (col.capacity(), mat.capacity(), out.data.capacity()),
+            caps,
+            "warm rerun grew a scratch buffer"
+        );
     }
 
     #[test]

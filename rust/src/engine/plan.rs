@@ -1,39 +1,46 @@
 //! Execution-plan layer: a one-time compile step that lowers a backend-
 //! compiled model into a flat instruction list the engine can execute with
-//! zero per-run graph interpretation overhead.
+//! zero per-run graph interpretation overhead — and, since the
+//! steady-state rework, zero per-run heap allocations and zero thread
+//! spawns.
 //!
 //! What the plan precomputes (vs the legacy interpreter in `engine::mod`):
 //!
-//! * **weight resolution** — every conv/linear/attention weight, bias and
-//!   QWeight is resolved once into an index into the plan's arenas; no
-//!   `format!`-built string keys or `HashMap` lookups on the hot path, and
-//!   Int8-weight/float-activation deployments dequantize each weight once
-//!   instead of once per node per run.
+//! * **weight resolution + prepacking** — every conv/linear/attention
+//!   weight is resolved once into an index into the plan's arenas AND
+//!   repacked once into the cache-blocked panel-major layout the 4-way
+//!   register-blocked GEMMs read linearly ([`ops::PackedF32`] /
+//!   [`ops::PackedQW`] — the ahead-of-time layout transformation a vendor
+//!   compiler performs). i4 payloads stay nibble-packed but panel-ordered,
+//!   so the kernel unpacks one panel byte-group per k-step instead of
+//!   walking four strided packed rows.
 //! * **quantization constants** — per-node input (scale, zero_point), the
 //!   premultiplied per-channel dequant scales `sw*sx`, and a 256-entry
-//!   dequant LUT per `aq` node are fixed at plan time, like a real INT8
-//!   compiler stack's requantization parameters. Under dynamic activation
-//!   scaling ([`ActMode::DynInt8`]) those constants cannot exist at plan
-//!   time: the lowered op carries an `IQuant::Dynamic` marker instead and
-//!   the executor derives (scale, zero_point) from the live input with one
-//!   fused signed min/max scan (`ops::dyn_qparams`) before dispatching the
-//!   same requantizing GEMM — no calibration, no `act_ranges`, no second
-//!   pass over the activation data.
-//! * **memory plan** — liveness-based buffer-slot assignment replaces the
-//!   per-run `HashMap<String, Tensor>` + consumer-count bookkeeping; the
-//!   executor runs on a flat `Vec<Tensor>` of reusable slots, and
-//!   single-consumer pass-through ops (flatten/reshape/act/aq) move their
-//!   input instead of cloning it.
+//!   dequant LUT per `aq` node are fixed at plan time. Under dynamic
+//!   activation scaling ([`ActMode::DynInt8`]) those constants cannot
+//!   exist at plan time: the lowered op carries an `IQuant::Dynamic`
+//!   marker and the executor derives (scale, zero_point) from the live
+//!   input with one fused scan (`ops::dyn_qparams`), premultiplying into a
+//!   scratch buffer — still allocation-free.
+//! * **memory plan** — liveness-based buffer-slot assignment upgraded from
+//!   slot *reuse* to slot *preallocation*: `compile` infers each slot's
+//!   maximum per-sample element count (and each conv's im2col / GEMM /
+//!   quantized-activation scratch high-water marks) from the graph shapes,
+//!   and `execute_with` runs against a caller-owned reusable
+//!   [`ExecScratch`] sized from those bounds — after the first (warmup)
+//!   run at a batch size, repeated inferences touch the allocator ZERO
+//!   times (asserted by `tests/steady_state.rs` with a counting global
+//!   allocator). The liveness pass marks *every* last-use input (not just
+//!   a single-input node's), so pass-through ops swap buffers instead of
+//!   copying and residual-add / SE-gate joins accumulate in place.
 //!
-//! Kernels are the planned forms in [`ops`]: parallel tiled GEMM on both
-//! precision paths with the fused bias+activation epilogue. The integer
-//! ops (`ConvI8`/`LinearI8`/`ProjW::I8`) carry whatever bit-width the
-//! backend quantized at — the kernels dispatch on `QWeight::bits`, so
-//! `WeightMode::Int4` deployments run the nibble-packed int4 GEMM through
-//! the same plan structure. The int8 and int4 paths are bit-exact with the
-//! interpreter (asserted by `tests/plan_exactness.rs`); the f32 path keeps
-//! the reference kernels' per-output accumulation order, so it matches
-//! bit-for-bit too.
+//! Kernels are the packed planned forms in [`ops`]: row-chunk parallel on
+//! the persistent shared worker pool (`engine::pool`) with fused
+//! bias+activation epilogues. Per-output accumulation order matches the
+//! reference kernels, so the f32 path is bit-identical and the integer
+//! paths (i8 and nibble-packed i4, static and dynamic scaling) are
+//! bit-exact with the interpreter — asserted by `tests/plan_exactness.rs`
+//! across the full ExecConfig matrix.
 
 use std::collections::HashMap;
 
@@ -41,8 +48,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::engine::ops::{self, Act};
 use crate::engine::{lowp, ActMode, CompiledModel, BN_EPS};
-use crate::qir::Node;
-use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
+use crate::qir::{Graph, Node};
+use crate::tensor::{act_scale_zp, RoundMode, Tensor};
 
 /// Input-quantization constants of one integer op: fixed at plan time from
 /// the producer's static range (`ActMode::Int8`), or recomputed from the
@@ -55,7 +62,7 @@ enum IQuant {
     Dynamic,
 }
 
-/// One attention projection with its pre-resolved weights.
+/// One attention projection with its pre-resolved (and prepacked) weights.
 enum ProjW {
     F32(usize),
     I8 { w: usize, round: RoundMode, iq: IQuant },
@@ -74,7 +81,6 @@ enum POp {
         bias: Option<usize>,
         stride: usize,
         pad: usize,
-        groups: usize,
         act: Option<Act>,
     },
     ConvI8 {
@@ -82,20 +88,12 @@ enum POp {
         bias: Option<usize>,
         stride: usize,
         pad: usize,
-        groups: usize,
         act: Option<Act>,
         round: RoundMode,
         iq: IQuant,
     },
-    LinearF32 { w: usize, bias: Option<usize>, din: usize, dout: usize, act: Option<Act> },
-    LinearI8 {
-        w: usize,
-        bias: Option<usize>,
-        din: usize,
-        act: Option<Act>,
-        round: RoundMode,
-        iq: IQuant,
-    },
+    LinearF32 { w: usize, bias: Option<usize>, act: Option<Act> },
+    LinearI8 { w: usize, bias: Option<usize>, act: Option<Act>, round: RoundMode, iq: IQuant },
     Bn { scale: Vec<f32>, shift: Vec<f32> },
     Act(Act),
     Add,
@@ -120,22 +118,134 @@ struct PlannedNode {
     name: String,
     in_slots: Vec<usize>,
     out_slot: usize,
-    /// Input 0's last consumer is this node: the executor may move the
-    /// tensor out of its slot instead of cloning (pass-through ops only).
-    move0: bool,
+    /// Per-input liveness: `in_last[i]` means this node is the last
+    /// consumer of input i (and it is not a graph output), so the executor
+    /// may take its buffer — pass-through ops swap it into the output
+    /// slot, add/mul joins accumulate into it in place. This generalizes
+    /// the old single-input-only `move0` flag to every input of every
+    /// node, which is what removes the copies on residual-add joins.
+    in_last: Vec<bool>,
     op: POp,
 }
 
-/// A compiled execution plan: flat instruction list + weight arenas +
-/// buffer-reuse memory plan. Built once per `CompiledModel`, executed per
-/// request.
+/// Plan-time scratch high-water marks, inferred from the graph's declared
+/// per-sample shapes. All fields are per batch element except `sc` and
+/// `sxw` (batch-independent). `execute_with` multiplies by the live batch
+/// size and `reserve`s the caller's [`ExecScratch`] accordingly, so even
+/// the first run at a batch size allocates each buffer at most once, at
+/// its final size.
+#[derive(Default)]
+struct ScratchSizes {
+    slot_elems: Vec<usize>,
+    col: usize,
+    mat: usize,
+    xq: usize,
+    qkv: usize,
+    sc: usize,
+    sxw: usize,
+    /// Maximum tensor rank (incl. batch dim) any slot ever holds — shape
+    /// `Vec`s are reserved to this so buffer swaps can never force a shape
+    /// reallocation in a warm run.
+    max_rank: usize,
+}
+
+/// Caller-owned reusable executor memory: the activation slot arena plus
+/// every kernel scratch buffer a planned run touches (im2col patch matrix,
+/// GEMM output matrix, quantized-activation bytes, dynamic-scaling
+/// premultiplies, attention q/k/v/context/score buffers, output copies).
+///
+/// Ownership contract: create one per executor thread (`ExecScratch::new`
+/// or `Default`), hand it to every `run_with`/`execute_with` call, and
+/// never share it concurrently (it is exclusive scratch — `&mut`). The
+/// returned output slice borrows the scratch and is valid until the next
+/// run. One scratch may serve many models and batch sizes; buffers grow to
+/// the high-water mark and are then reused, so after the first (warmup)
+/// run of a given shape the executor performs ZERO heap allocations.
+#[derive(Default)]
+pub struct ExecScratch {
+    slots: Vec<Tensor>,
+    outputs: Vec<Tensor>,
+    col: Vec<f32>,
+    mat: Vec<f32>,
+    xq: Vec<u8>,
+    sxw: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctxt: Vec<f32>,
+    sc: Vec<f32>,
+}
+
+impl ExecScratch {
+    /// Empty scratch; buffers are sized by the first run (see
+    /// [`ExecPlan::execute_with`]).
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+}
+
+/// A compiled execution plan: flat instruction list + prepacked weight
+/// arenas + preallocating memory plan. Built once per `CompiledModel`,
+/// executed per request against a reusable [`ExecScratch`].
 pub struct ExecPlan {
     act_mode: ActMode,
     nodes: Vec<PlannedNode>,
     slot_count: usize,
     output_slots: Vec<usize>,
     tensors: Vec<Tensor>,
-    qweights: Vec<QWeight>,
+    fpanels: Vec<ops::PackedF32>,
+    qpanels: Vec<ops::PackedQW>,
+    sizes: ScratchSizes,
+}
+
+/// Grow a buffer's capacity to `want` elements without touching its
+/// contents (no-op — and allocation-free — once warm).
+fn reserve_to<T>(v: &mut Vec<T>, want: usize) {
+    if v.capacity() < want {
+        v.reserve(want - v.len());
+    }
+}
+
+/// Disjoint slot borrows: input `i` shared, output `o` exclusive.
+fn in_out1(slots: &mut [Tensor], i: usize, o: usize) -> (&Tensor, &mut Tensor) {
+    assert!(i < slots.len() && o < slots.len() && i != o, "memory plan aliased slots {i}/{o}");
+    // SAFETY: bounds and i != o checked above, so the borrows are disjoint.
+    unsafe {
+        let base = slots.as_mut_ptr();
+        (&*base.add(i), &mut *base.add(o))
+    }
+}
+
+/// Disjoint slot borrows: inputs `i0`/`i1` shared (may alias each other),
+/// output `o` exclusive.
+fn in2_out(
+    slots: &mut [Tensor],
+    i0: usize,
+    i1: usize,
+    o: usize,
+) -> (&Tensor, &Tensor, &mut Tensor) {
+    assert!(
+        i0 < slots.len() && i1 < slots.len() && o < slots.len() && i0 != o && i1 != o,
+        "memory plan aliased slots {i0}/{i1}/{o}"
+    );
+    // SAFETY: o differs from both inputs (checked), and the two input
+    // borrows are shared, so aliasing i0 == i1 is fine.
+    unsafe {
+        let base = slots.as_mut_ptr();
+        (&*base.add(i0), &*base.add(i1), &mut *base.add(o))
+    }
+}
+
+/// Move (buffer-swap) or copy input 0 into the output slot, per the
+/// liveness plan — the pass-through entry step (act/aq/flatten/reshape).
+fn pass_through(node: &PlannedNode, slots: &mut [Tensor]) {
+    let (i, o) = (node.in_slots[0], node.out_slot);
+    if node.in_last[0] {
+        slots.swap(i, o);
+    } else {
+        let (a, out) = in_out1(slots, i, o);
+        out.copy_from(a);
+    }
 }
 
 impl ExecPlan {
@@ -143,7 +253,7 @@ impl ExecPlan {
     /// time) on missing params, ranges, or unknown ops.
     pub fn compile(model: &CompiledModel) -> Result<ExecPlan> {
         let graph = &model.graph;
-        let mut b = Builder { tensors: Vec::new(), qweights: Vec::new() };
+        let mut b = Builder { tensors: Vec::new(), fpanels: Vec::new(), qpanels: Vec::new() };
         let mut remaining: HashMap<String, usize> = graph.consumer_counts();
         let mut slot_of: HashMap<String, usize> = HashMap::new();
         let mut free: Vec<usize> = Vec::new();
@@ -168,19 +278,17 @@ impl ExecPlan {
                 slot_count - 1
             });
             slot_of.insert(n.name.clone(), out_slot);
-            let mut move0 = false;
+            let mut in_last = vec![false; n.inputs.len()];
             for (idx, i) in n.inputs.iter().enumerate() {
                 if let Some(c) = remaining.get_mut(i.as_str()) {
                     *c -= 1;
                     if *c == 0 && !graph.outputs.contains(i) {
                         free.push(slot_of[i.as_str()]);
-                        if idx == 0 && n.inputs.len() == 1 {
-                            move0 = true;
-                        }
+                        in_last[idx] = true;
                     }
                 }
             }
-            nodes.push(PlannedNode { name: n.name.clone(), in_slots, out_slot, move0, op });
+            nodes.push(PlannedNode { name: n.name.clone(), in_slots, out_slot, in_last, op });
         }
         let output_slots: Vec<usize> = graph
             .outputs
@@ -189,14 +297,18 @@ impl ExecPlan {
                 slot_of.get(o.as_str()).copied().with_context(|| format!("plan: missing output {o}"))
             })
             .collect::<Result<_>>()?;
-        Ok(ExecPlan {
+        let mut plan = ExecPlan {
             act_mode: model.cfg.act_mode,
             nodes,
             slot_count,
             output_slots,
             tensors: b.tensors,
-            qweights: b.qweights,
-        })
+            fpanels: b.fpanels,
+            qpanels: b.qpanels,
+            sizes: ScratchSizes::default(),
+        };
+        plan.sizes = plan.infer_sizes(graph);
+        Ok(plan)
     }
 
     /// Number of activation buffer slots the memory plan uses (vs one live
@@ -210,215 +322,442 @@ impl ExecPlan {
         self.nodes.len()
     }
 
-    /// Run the plan on one input batch.
-    pub fn execute(&self, x: &Tensor) -> Result<Vec<Tensor>> {
-        let mut slots: Vec<Tensor> = vec![Tensor::default(); self.slot_count];
-        for node in &self.nodes {
-            let out = self.eval(node, &mut slots, x)?;
-            slots[node.out_slot] = out;
-        }
-        // outputs are moved out of the (about to be dropped) slot vector;
-        // clone only if the same slot is listed again later
-        let mut outs = Vec::with_capacity(self.output_slots.len());
-        for (i, &s) in self.output_slots.iter().enumerate() {
-            if self.output_slots[i + 1..].contains(&s) {
-                outs.push(slots[s].clone());
-            } else {
-                outs.push(std::mem::take(&mut slots[s]));
+    /// Per-sample scratch high-water marks from the graph's declared
+    /// shapes (the plan-time half of slot preallocation).
+    fn infer_sizes(&self, graph: &Graph) -> ScratchSizes {
+        let mut sz = ScratchSizes { slot_elems: vec![0; self.slot_count], ..Default::default() };
+        for (n, pn) in graph.nodes.iter().zip(self.nodes.iter()) {
+            let elems: usize = n.shape.iter().product::<usize>().max(1);
+            sz.max_rank = sz.max_rank.max(n.shape.len() + 1);
+            let se = &mut sz.slot_elems[pn.out_slot];
+            *se = (*se).max(elems);
+            match &pn.op {
+                POp::ConvF32 { w, .. } => {
+                    let wp = &self.fpanels[*w];
+                    let rows = n.shape[1] * n.shape[2];
+                    sz.col = sz.col.max(rows * wp.cols);
+                    sz.mat = sz.mat.max(rows * wp.cout());
+                }
+                POp::ConvI8 { w, .. } => {
+                    let pw = &self.qpanels[*w];
+                    let rows = n.shape[1] * n.shape[2];
+                    sz.col = sz.col.max(rows * pw.cols);
+                    sz.mat = sz.mat.max(rows * pw.cout());
+                    sz.xq = sz.xq.max(rows * pw.cols);
+                    sz.sxw = sz.sxw.max(pw.cout());
+                }
+                POp::LinearI8 { w, .. } => {
+                    let pw = &self.qpanels[*w];
+                    let rows = elems / pw.cout().max(1);
+                    sz.xq = sz.xq.max(rows.max(1) * pw.cols);
+                    sz.sxw = sz.sxw.max(pw.cout());
+                }
+                POp::Attention { d, proj, .. } => {
+                    let t = n.shape.first().copied().unwrap_or(1);
+                    sz.qkv = sz.qkv.max(t * *d);
+                    sz.sc = sz.sc.max(t);
+                    if proj.iter().any(|p| matches!(p.w, ProjW::I8 { .. })) {
+                        sz.xq = sz.xq.max(t * *d);
+                        sz.sxw = sz.sxw.max(*d);
+                    }
+                }
+                _ => {}
             }
         }
-        Ok(outs)
+        // Buffer swaps (pass-through moves, in-place add/mul joins) permute
+        // slot buffers across indices at run time. Union every slot pair a
+        // run may swap and level each equivalence class to its max
+        // requirement: with equal per-class reservations, any permutation
+        // leaves per-index capacities invariant — otherwise the SECOND run
+        // would find a small buffer parked in a big slot and reallocate,
+        // breaking the zero-allocation contract.
+        let mut parent: Vec<usize> = (0..self.slot_count).collect();
+        fn root(parent: &mut [usize], mut i: usize) -> usize {
+            while parent[i] != i {
+                parent[i] = parent[parent[i]];
+                i = parent[i];
+            }
+            i
+        }
+        let union = |parent: &mut Vec<usize>, a: usize, b: usize| {
+            let (ra, rb) = (root(parent, a), root(parent, b));
+            if ra != rb {
+                parent[ra] = rb;
+            }
+        };
+        for pn in &self.nodes {
+            match &pn.op {
+                POp::Act(_)
+                | POp::Aq { .. }
+                | POp::AqDyn { .. }
+                | POp::AqNoop
+                | POp::Flatten
+                | POp::Reshape { .. } => {
+                    if pn.in_last[0] {
+                        union(&mut parent, pn.in_slots[0], pn.out_slot);
+                    }
+                }
+                POp::Add => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 != i1 && pn.in_last[0] {
+                        union(&mut parent, i0, pn.out_slot);
+                    } else if i0 != i1 && pn.in_last[1] {
+                        union(&mut parent, i1, pn.out_slot);
+                    }
+                }
+                POp::Mul => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 != i1 && pn.in_last[0] {
+                        union(&mut parent, i0, pn.out_slot);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut class_max = vec![0usize; self.slot_count];
+        for i in 0..self.slot_count {
+            let r = root(&mut parent, i);
+            class_max[r] = class_max[r].max(sz.slot_elems[i]);
+        }
+        for i in 0..self.slot_count {
+            let r = root(&mut parent, i);
+            sz.slot_elems[i] = class_max[r];
+        }
+        sz
     }
 
-    fn narrow(&self, mut t: Tensor) -> Tensor {
+    /// Size the caller's scratch for this plan at a batch size. Pure
+    /// capacity reservations — contents untouched, and a no-op (zero
+    /// allocations) once the scratch has warmed up.
+    fn reserve(&self, s: &mut ExecScratch, batch: usize) {
+        // grow-only: a scratch alternating between plans must never drop a
+        // warmed buffer (extra trailing slots are simply left idle)
+        if s.slots.len() < self.slot_count {
+            s.slots.resize_with(self.slot_count, Tensor::default);
+        }
+        for (slot, &e) in s.slots.iter_mut().zip(self.sizes.slot_elems.iter()) {
+            reserve_to(&mut slot.data, e * batch);
+            reserve_to(&mut slot.shape, self.sizes.max_rank);
+        }
+        reserve_to(&mut s.col, self.sizes.col * batch);
+        reserve_to(&mut s.mat, self.sizes.mat * batch);
+        reserve_to(&mut s.xq, self.sizes.xq * batch);
+        reserve_to(&mut s.sxw, self.sizes.sxw);
+        let qkv = self.sizes.qkv * batch;
+        reserve_to(&mut s.q, qkv);
+        reserve_to(&mut s.k, qkv);
+        reserve_to(&mut s.v, qkv);
+        reserve_to(&mut s.ctxt, qkv);
+        reserve_to(&mut s.sc, self.sizes.sc);
+        if s.outputs.len() < self.output_slots.len() {
+            s.outputs.resize_with(self.output_slots.len(), Tensor::default);
+        }
+        for (o, &sl) in s.outputs.iter_mut().zip(self.output_slots.iter()) {
+            reserve_to(&mut o.data, self.sizes.slot_elems[sl] * batch);
+            reserve_to(&mut o.shape, self.sizes.max_rank);
+        }
+    }
+
+    /// Run the plan on one input batch with a fresh scratch (convenience /
+    /// compatibility form — allocates; the hot path is [`execute_with`]).
+    ///
+    /// [`execute_with`]: ExecPlan::execute_with
+    pub fn execute(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let mut scratch = ExecScratch::default();
+        self.execute_with(x, &mut scratch)?;
+        Ok(std::mem::take(&mut scratch.outputs))
+    }
+
+    /// Run the plan on one input batch against a caller-owned reusable
+    /// [`ExecScratch`]. The returned outputs borrow the scratch (valid
+    /// until its next run). After the scratch's first run at a given batch
+    /// size this path performs zero heap allocations and zero thread
+    /// spawns (row-chunk work goes to the persistent `engine::pool`).
+    pub fn execute_with<'s>(
+        &self,
+        x: &Tensor,
+        scratch: &'s mut ExecScratch,
+    ) -> Result<&'s [Tensor]> {
+        let batch = x.shape.first().copied().unwrap_or(1).max(1);
+        self.reserve(scratch, batch);
+        for node in &self.nodes {
+            self.eval(node, scratch, x)?;
+        }
+        // outputs are COPIED out of the persistent slot arena (the arena
+        // must survive for reuse), which also retires the old per-call
+        // O(n^2) duplicate-output-slot scan: a slot listed twice in
+        // `output_slots` is simply copied twice.
+        for (k, &sl) in self.output_slots.iter().enumerate() {
+            let dst = &mut scratch.outputs[k];
+            dst.copy_from(&scratch.slots[sl]);
+        }
+        // slice, not the whole Vec: a grow-only scratch shared with a plan
+        // that had MORE outputs still has that plan's extras parked after
+        // ours
+        Ok(&scratch.outputs[..self.output_slots.len()])
+    }
+
+    fn narrow_mut(&self, t: &mut Tensor) {
         match self.act_mode {
             ActMode::Bf16 => lowp::bf16_slice(&mut t.data),
             ActMode::F16 => lowp::f16_slice(&mut t.data),
             _ => {}
         }
-        t
     }
 
-    /// Take (move) or clone input 0, per the liveness plan.
-    fn grab(node: &PlannedNode, slots: &mut [Tensor]) -> Tensor {
-        if node.move0 {
-            std::mem::take(&mut slots[node.in_slots[0]])
-        } else {
-            slots[node.in_slots[0]].clone()
+    /// One attention projection into a caller-sized buffer (`rows * d`).
+    #[allow(clippy::too_many_arguments)]
+    fn run_proj(
+        &self,
+        p: &AttnProj,
+        input: &[f32],
+        rows: usize,
+        d: usize,
+        out: &mut Vec<f32>,
+        xq: &mut Vec<u8>,
+        sxw_buf: &mut Vec<f32>,
+    ) {
+        out.resize(rows * d, 0.0);
+        let bias = &self.tensors[p.b];
+        match &p.w {
+            ProjW::F32(i) => {
+                ops::linear_f32_packed(input, rows, &self.fpanels[*i], Some(&bias.data), None, out);
+            }
+            ProjW::I8 { w, round, iq } => {
+                let pw = &self.qpanels[*w];
+                match iq {
+                    IQuant::Static { sx, zx, sxw } => ops::linear_int_packed(
+                        input, rows, pw, Some(&bias.data), *sx, *zx, *round, sxw, None, xq, out,
+                    ),
+                    IQuant::Dynamic => {
+                        let (sx, zx) = ops::dyn_qparams(input);
+                        ops::premul_scales_into(&pw.scales, pw.cout(), sx, sxw_buf);
+                        ops::linear_int_packed(
+                            input, rows, pw, Some(&bias.data), sx, zx, *round, sxw_buf.as_slice(),
+                            None, xq, out,
+                        );
+                    }
+                }
+            }
         }
     }
 
-    fn eval(&self, node: &PlannedNode, slots: &mut [Tensor], x: &Tensor) -> Result<Tensor> {
-        let out = match &node.op {
-            POp::Input => x.clone(),
-            POp::ConvF32 { w, bias, stride, pad, groups, act } => {
-                let a = &slots[node.in_slots[0]];
-                let bias = bias.map(|i| &self.tensors[i]);
-                let t = ops::conv2d_f32_fused(a, &self.tensors[*w], bias, *stride, *pad, *groups, *act);
-                self.narrow(t)
+    /// Execute one lowered node into its output slot. Every write lands in
+    /// scratch-owned memory; no path allocates once the scratch is warm.
+    fn eval(&self, node: &PlannedNode, s: &mut ExecScratch, x: &Tensor) -> Result<()> {
+        let o = node.out_slot;
+        match &node.op {
+            POp::Input => {
+                s.slots[o].copy_from(x);
             }
-            POp::ConvI8 { w, bias, stride, pad, groups, act, round, iq } => {
-                let a = &slots[node.in_slots[0]];
-                let qw = &self.qweights[*w];
-                let bias = bias.map(|i| &self.tensors[i]);
-                let t = match iq {
-                    IQuant::Static { sx, zx, sxw } => ops::conv2d_i8_fused(
-                        a, qw, bias, *stride, *pad, *groups, *sx, *zx, *round, sxw, *act,
+            POp::ConvF32 { w, bias, stride, pad, act } => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                let bias = bias.map(|i| self.tensors[i].data.as_slice());
+                ops::conv2d_f32_packed(
+                    a, &self.fpanels[*w], bias, *stride, *pad, *act, &mut s.col, &mut s.mat, out,
+                );
+                self.narrow_mut(out);
+            }
+            POp::ConvI8 { w, bias, stride, pad, act, round, iq } => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                let pw = &self.qpanels[*w];
+                let bias = bias.map(|i| self.tensors[i].data.as_slice());
+                match iq {
+                    IQuant::Static { sx, zx, sxw } => ops::conv2d_int_packed(
+                        a, pw, bias, *stride, *pad, *sx, *zx, *round, sxw, *act, &mut s.col,
+                        &mut s.xq, &mut s.mat, out,
                     ),
                     IQuant::Dynamic => {
                         let (sx, zx) = ops::dyn_qparams(&a.data);
-                        let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
-                        ops::conv2d_i8_fused(
-                            a, qw, bias, *stride, *pad, *groups, sx, zx, *round, &sxw, *act,
-                        )
+                        ops::premul_scales_into(&pw.scales, pw.cout(), sx, &mut s.sxw);
+                        ops::conv2d_int_packed(
+                            a, pw, bias, *stride, *pad, sx, zx, *round, &s.sxw, *act, &mut s.col,
+                            &mut s.xq, &mut s.mat, out,
+                        );
                     }
-                };
-                self.narrow(t)
+                }
+                self.narrow_mut(out);
             }
-            POp::LinearF32 { w, bias, din, dout, act } => {
-                let a = &slots[node.in_slots[0]];
+            POp::LinearF32 { w, bias, act } => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                let wp = &self.fpanels[*w];
+                let (din, dout) = (wp.cols, wp.cout());
                 let rows = a.len() / din;
-                let mut oshape = a.shape.clone();
-                *oshape.last_mut().unwrap() = *dout;
+                out.shape.clear();
+                out.shape.extend_from_slice(&a.shape);
+                *out.shape.last_mut().expect("linear output has a shape") = dout;
+                out.data.resize(rows * dout, 0.0);
                 let bias = bias.map(|i| self.tensors[i].data.as_slice());
-                let data = ops::linear_f32_tiled(&a.data, rows, *din, &self.tensors[*w].data, *dout, bias, *act);
-                self.narrow(Tensor::new(oshape, data))
+                ops::linear_f32_packed(&a.data, rows, wp, bias, *act, &mut out.data);
+                self.narrow_mut(out);
             }
-            POp::LinearI8 { w, bias, din, act, round, iq } => {
-                let a = &slots[node.in_slots[0]];
+            POp::LinearI8 { w, bias, act, round, iq } => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                let pw = &self.qpanels[*w];
+                let (din, dout) = (pw.cols, pw.cout());
                 let rows = a.len() / din;
-                let qw = &self.qweights[*w];
-                let mut oshape = a.shape.clone();
-                *oshape.last_mut().unwrap() = qw.shape[0];
+                out.shape.clear();
+                out.shape.extend_from_slice(&a.shape);
+                *out.shape.last_mut().expect("linear output has a shape") = dout;
+                out.data.resize(rows * dout, 0.0);
                 let bias = bias.map(|i| self.tensors[i].data.as_slice());
-                let data = match iq {
-                    IQuant::Static { sx, zx, sxw } => ops::linear_i8_fused(
-                        &a.data, rows, *din, qw, bias, *sx, *zx, *round, sxw, *act,
+                match iq {
+                    IQuant::Static { sx, zx, sxw } => ops::linear_int_packed(
+                        &a.data, rows, pw, bias, *sx, *zx, *round, sxw, *act, &mut s.xq,
+                        &mut out.data,
                     ),
                     IQuant::Dynamic => {
                         let (sx, zx) = ops::dyn_qparams(&a.data);
-                        let sxw = ops::premul_scales(&qw.scales, qw.shape[0], sx);
-                        ops::linear_i8_fused(&a.data, rows, *din, qw, bias, sx, zx, *round, &sxw, *act)
+                        ops::premul_scales_into(&pw.scales, dout, sx, &mut s.sxw);
+                        ops::linear_int_packed(
+                            &a.data, rows, pw, bias, sx, zx, *round, &s.sxw, *act, &mut s.xq,
+                            &mut out.data,
+                        );
                     }
-                };
-                self.narrow(Tensor::new(oshape, data))
+                }
+                self.narrow_mut(out);
             }
             POp::Bn { scale, shift } => {
-                let a = &slots[node.in_slots[0]];
-                self.narrow(ops::bn_apply(a, scale, shift))
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                ops::bn_apply_into(a, scale, shift, out);
+                self.narrow_mut(out);
             }
             POp::Act(f) => {
-                let mut t = Self::grab(node, slots);
-                for v in t.data.iter_mut() {
+                pass_through(node, &mut s.slots);
+                let out = &mut s.slots[o];
+                for v in out.data.iter_mut() {
                     *v = f.apply(*v);
                 }
-                self.narrow(t)
+                self.narrow_mut(out);
             }
             POp::Add => {
-                let (a, b) = (&slots[node.in_slots[0]], &slots[node.in_slots[1]]);
-                if a.shape != b.shape {
+                let (i0, i1) = (node.in_slots[0], node.in_slots[1]);
+                if s.slots[i0].shape != s.slots[i1].shape {
                     bail!("add shape mismatch at {}", node.name);
                 }
-                let data = a.data.iter().zip(b.data.iter()).map(|(x, y)| x + y).collect();
-                self.narrow(Tensor::new(a.shape.clone(), data))
+                if i0 != i1 && node.in_last[0] {
+                    // take the left operand's buffer and accumulate in place
+                    s.slots.swap(i0, o);
+                    let (b, out) = in_out1(&mut s.slots, i1, o);
+                    for (v, &y) in out.data.iter_mut().zip(b.data.iter()) {
+                        *v += y;
+                    }
+                } else if i0 != i1 && node.in_last[1] {
+                    s.slots.swap(i1, o);
+                    let (a, out) = in_out1(&mut s.slots, i0, o);
+                    for (v, &y) in out.data.iter_mut().zip(a.data.iter()) {
+                        *v += y;
+                    }
+                } else {
+                    let (a, b, out) = in2_out(&mut s.slots, i0, i1, o);
+                    ops::add_into(a, b, out);
+                }
+                self.narrow_mut(&mut s.slots[o]);
             }
             POp::Mul => {
-                let (a, b) = (&slots[node.in_slots[0]], &slots[node.in_slots[1]]);
-                self.narrow(ops::mul_gate(a, b))
+                let (i0, i1) = (node.in_slots[0], node.in_slots[1]);
+                if i0 != i1 && node.in_last[0] {
+                    // take the gated operand's buffer, apply the gate in place
+                    s.slots.swap(i0, o);
+                    let (b, out) = in_out1(&mut s.slots, i1, o);
+                    ops::mul_gate_assign(out, b);
+                } else {
+                    let (a, b, out) = in2_out(&mut s.slots, i0, i1, o);
+                    ops::mul_gate_into(a, b, out);
+                }
+                self.narrow_mut(&mut s.slots[o]);
             }
             POp::Pool { k, stride, pad, is_max } => {
-                let a = &slots[node.in_slots[0]];
-                self.narrow(ops::pool(a, *k, *stride, *pad, *is_max))
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                ops::pool_into(a, *k, *stride, *pad, *is_max, out);
+                self.narrow_mut(out);
             }
-            POp::Gap => self.narrow(ops::gap(&slots[node.in_slots[0]])),
-            POp::Upsample2x => ops::upsample2x(&slots[node.in_slots[0]]),
+            POp::Gap => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                ops::gap_into(a, out);
+                self.narrow_mut(out);
+            }
+            POp::Upsample2x => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                ops::upsample2x_into(a, out);
+            }
             POp::Concat => {
-                ops::concat_channels(&slots[node.in_slots[0]], &slots[node.in_slots[1]])
+                let (a, b, out) = in2_out(&mut s.slots, node.in_slots[0], node.in_slots[1], o);
+                ops::concat_channels_into(a, b, out);
             }
             POp::Flatten => {
-                let bsz = slots[node.in_slots[0]].shape[0];
-                let t = Self::grab(node, slots);
-                let rest = t.len() / bsz;
-                t.reshaped(&[bsz, rest])
+                let bsz = s.slots[node.in_slots[0]].shape[0];
+                pass_through(node, &mut s.slots);
+                let out = &mut s.slots[o];
+                let rest = out.len() / bsz;
+                out.shape.clear();
+                out.shape.extend_from_slice(&[bsz, rest]);
             }
             POp::Reshape { shape } => {
-                let bsz = slots[node.in_slots[0]].shape[0];
-                let t = Self::grab(node, slots);
-                let mut s = vec![bsz];
-                s.extend(shape.iter());
-                t.reshaped(&s)
+                let bsz = s.slots[node.in_slots[0]].shape[0];
+                pass_through(node, &mut s.slots);
+                let out = &mut s.slots[o];
+                out.shape.clear();
+                out.shape.push(bsz);
+                out.shape.extend_from_slice(shape);
+                debug_assert_eq!(out.shape.iter().product::<usize>(), out.len());
             }
             POp::LayerNorm { d, gamma, beta } => {
-                let a = &slots[node.in_slots[0]];
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
                 let g = &self.tensors[*gamma];
                 let b = &self.tensors[*beta];
-                self.narrow(ops::layernorm(a, *d, &g.data, &b.data))
+                ops::layernorm_into(a, *d, &g.data, &b.data, out);
+                self.narrow_mut(out);
             }
-            POp::ToTokens => ops::to_tokens(&slots[node.in_slots[0]]),
-            POp::TokMean => self.narrow(ops::tokmean(&slots[node.in_slots[0]])),
+            POp::ToTokens => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                ops::to_tokens_into(a, out);
+            }
+            POp::TokMean => {
+                let (a, out) = in_out1(&mut s.slots, node.in_slots[0], o);
+                ops::tokmean_into(a, out);
+                self.narrow_mut(out);
+            }
             POp::Attention { d, heads, proj } => {
-                let xt = &slots[node.in_slots[0]];
+                let (xt, out) = in_out1(&mut s.slots, node.in_slots[0], o);
                 let (bsz, t) = (xt.shape[0], xt.shape[1]);
                 let rows = bsz * t;
                 let d = *d;
-                let run_proj = |p: &AttnProj, input: &[f32]| -> Vec<f32> {
-                    let bias = &self.tensors[p.b];
-                    match &p.w {
-                        ProjW::F32(i) => ops::linear_f32_tiled(
-                            input, rows, d, &self.tensors[*i].data, d, Some(&bias.data), None,
-                        ),
-                        ProjW::I8 { w, round, iq } => {
-                            let qw = &self.qweights[*w];
-                            match iq {
-                                IQuant::Static { sx, zx, sxw } => ops::linear_i8_fused(
-                                    input, rows, d, qw, Some(&bias.data), *sx, *zx, *round, sxw,
-                                    None,
-                                ),
-                                IQuant::Dynamic => {
-                                    let (sx, zx) = ops::dyn_qparams(input);
-                                    let sxw = ops::premul_scales(&qw.scales, d, sx);
-                                    ops::linear_i8_fused(
-                                        input, rows, d, qw, Some(&bias.data), sx, zx, *round, &sxw,
-                                        None,
-                                    )
-                                }
-                            }
-                        }
-                    }
-                };
-                let q = run_proj(&proj[0], &xt.data);
-                let k = run_proj(&proj[1], &xt.data);
-                let v = run_proj(&proj[2], &xt.data);
-                let ctxt = ops::attention_ctx(&q, &k, &v, bsz, t, d, *heads);
-                let out = run_proj(&proj[3], &ctxt);
-                self.narrow(Tensor::new(vec![bsz, t, d], out))
+                self.run_proj(&proj[0], &xt.data, rows, d, &mut s.q, &mut s.xq, &mut s.sxw);
+                self.run_proj(&proj[1], &xt.data, rows, d, &mut s.k, &mut s.xq, &mut s.sxw);
+                self.run_proj(&proj[2], &xt.data, rows, d, &mut s.v, &mut s.xq, &mut s.sxw);
+                ops::attention_ctx_into(
+                    &s.q, &s.k, &s.v, bsz, t, d, *heads, &mut s.ctxt, &mut s.sc,
+                );
+                out.reset_for_overwrite(&[bsz, t, d]);
+                self.run_proj(&proj[3], &s.ctxt, rows, d, &mut out.data, &mut s.xq, &mut s.sxw);
+                self.narrow_mut(out);
             }
             POp::Aq { scale, zp, round, lut } => {
                 // static requantization point through the 256-entry dequant LUT
-                let mut t = Self::grab(node, slots);
-                ops::quant_dequant_slice(&mut t.data, *scale, *zp, *round, lut);
-                t
+                pass_through(node, &mut s.slots);
+                ops::quant_dequant_slice(&mut s.slots[o].data, *scale, *zp, *round, lut);
             }
             POp::AqDyn { round } => {
                 // dynamic requantization point: fused range scan + in-place
                 // requant at the tensor's own live range
-                let mut t = Self::grab(node, slots);
-                ops::quant_dequant_dyn(&mut t.data, *round);
-                t
+                pass_through(node, &mut s.slots);
+                ops::quant_dequant_dyn(&mut s.slots[o].data, *round);
             }
             POp::AqNoop => {
-                let t = Self::grab(node, slots);
-                self.narrow(t)
+                pass_through(node, &mut s.slots);
+                self.narrow_mut(&mut s.slots[o]);
             }
-        };
-        Ok(out)
+        }
+        Ok(())
     }
 }
 
 /// Arena builder for plan compilation.
 struct Builder {
     tensors: Vec<Tensor>,
-    qweights: Vec<QWeight>,
+    fpanels: Vec<ops::PackedF32>,
+    qpanels: Vec<ops::PackedQW>,
 }
 
 impl Builder {
@@ -427,9 +766,14 @@ impl Builder {
         self.tensors.len() - 1
     }
 
-    fn add_q(&mut self, q: QWeight) -> usize {
-        self.qweights.push(q);
-        self.qweights.len() - 1
+    fn add_fp(&mut self, p: ops::PackedF32) -> usize {
+        self.fpanels.push(p);
+        self.fpanels.len() - 1
+    }
+
+    fn add_qp(&mut self, p: ops::PackedQW) -> usize {
+        self.qpanels.push(p);
+        self.qpanels.len() - 1
     }
 
     fn param(&mut self, model: &CompiledModel, key: &str) -> Result<usize> {
@@ -467,9 +811,9 @@ impl Builder {
         let w = match (model.cfg.weight_mode, round, model.qweights.get(&wkey)) {
             (wm, Some(round), Some(qw)) if wm.is_integer() => {
                 let iq = Self::iquant(model, &n.inputs[0], &qw.scales, d)?;
-                ProjW::I8 { w: self.add_q(qw.clone()), round, iq }
+                ProjW::I8 { w: self.add_qp(ops::PackedQW::pack(qw, 1)), round, iq }
             }
-            _ => ProjW::F32(self.add_t(model.weight_tensor(&wkey)?)),
+            _ => ProjW::F32(self.add_fp(ops::PackedF32::pack(&model.weight_tensor(&wkey)?, 1))),
         };
         Ok(AttnProj { w, b })
     }
@@ -494,18 +838,17 @@ impl Builder {
                 match (model.cfg.weight_mode, model.int_round(), model.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let iq = Self::iquant(model, &n.inputs[0], &qw.scales, qw.shape[0])?;
-                        let qw = qw.clone();
-                        POp::ConvI8 { w: self.add_q(qw), bias, stride, pad, groups, act, round, iq }
+                        let w = self.add_qp(ops::PackedQW::pack(qw, groups));
+                        POp::ConvI8 { w, bias, stride, pad, act, round, iq }
                     }
                     _ => {
                         let w = model.weight_tensor(&wkey)?;
-                        POp::ConvF32 { w: self.add_t(w), bias, stride, pad, groups, act }
+                        let w = self.add_fp(ops::PackedF32::pack(&w, groups));
+                        POp::ConvF32 { w, bias, stride, pad, act }
                     }
                 }
             }
             "linear" => {
-                let din = n.attr_usize("din")?;
-                let dout = n.attr_usize("dout")?;
                 let act = Act::from_attr(n)?;
                 // mirror the interpreter's leniency: bias attr without a
                 // stored bias tensor degrades to no bias
@@ -517,13 +860,15 @@ impl Builder {
                 let wkey = format!("{}.w", n.name);
                 match (model.cfg.weight_mode, model.int_round(), model.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
+                        let dout = n.attr_usize("dout")?;
                         let iq = Self::iquant(model, &n.inputs[0], &qw.scales, dout)?;
-                        let qw = qw.clone();
-                        POp::LinearI8 { w: self.add_q(qw), bias, din, act, round, iq }
+                        let w = self.add_qp(ops::PackedQW::pack(qw, 1));
+                        POp::LinearI8 { w, bias, act, round, iq }
                     }
                     _ => {
                         let w = model.weight_tensor(&wkey)?;
-                        POp::LinearF32 { w: self.add_t(w), bias, din, dout, act }
+                        let w = self.add_fp(ops::PackedF32::pack(&w, 1));
+                        POp::LinearF32 { w, bias, act }
                     }
                 }
             }

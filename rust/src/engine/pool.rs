@@ -1,0 +1,332 @@
+//! Persistent worker pool for the engine's parallel kernels.
+//!
+//! PR-1's `par_row_chunks` parallelised every large GEMM with
+//! `std::thread::scope` — one thread *spawn* per row chunk per kernel call,
+//! thousands of spawns per second under serving load, and N server workers
+//! each spawning their own 8-thread team (N×8 transient threads on an
+//! 8-core host). A vendor NPU runtime keeps one long-lived worker team; so
+//! does this module:
+//!
+//! * **One shared pool per process** ([`global`]), sized once from
+//!   `available_parallelism` (capped at 8, matching the old per-call
+//!   sizing). Every executor thread — the coordinator's N serving workers
+//!   included — submits row-chunk work to the *same* team instead of
+//!   oversubscribing the host.
+//! * **Workers park on a condvar** between kernels; a submission wakes
+//!   them, an atomic cursor hands out chunk indices, and the submitting
+//!   thread participates in its own task (so a 1-thread pool degrades to
+//!   plain inline execution and the pool never deadlocks on itself).
+//! * **Zero allocations per submission**: the task descriptor lives on the
+//!   submitter's stack, the queue slot is a pre-reserved `Vec` entry, and
+//!   completion is signalled through the pool's own mutex + condvar — the
+//!   steady-state allocation contract of the planned executor
+//!   (`tests/steady_state.rs`) covers the parallel path too.
+//!
+//! Determinism: chunking is a pure function of (rows, pool parallelism) and
+//! every output element is accumulated independently, so results are
+//! bit-identical at any worker count — asserted by the pool-determinism
+//! test at 1, 2 and 8 workers.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One in-flight parallel-for, owned by the submitting thread's stack frame.
+/// Lives in the pool queue only between `run`'s push and retire; `visitors`
+/// (guarded by the pool mutex) keeps it pinned while any worker still holds
+/// a reference.
+struct Task {
+    /// The chunk closure. Lifetime-erased: `run` guarantees it outlives
+    /// every access by not returning until `visitors` drains to zero.
+    func: &'static (dyn Fn(usize) + Sync),
+    chunks: usize,
+    /// Next unclaimed chunk index (may overshoot `chunks` by one per visitor).
+    cursor: AtomicUsize,
+    /// Workers currently inside this task. Mutated only under the pool
+    /// mutex; the submitter frees the task only after observing zero.
+    visitors: Cell<usize>,
+    /// A chunk closure panicked on some thread; `run` re-panics on the
+    /// submitter so the failure is not silently swallowed.
+    panicked: AtomicBool,
+}
+
+/// Queue entry: a raw pointer to a submitter-stack `Task`. Sendness is
+/// asserted manually — the visitor protocol above keeps the pointee alive
+/// for as long as any thread dereferences it.
+struct TaskPtr(*const Task);
+
+unsafe impl Send for TaskPtr {}
+
+struct PoolState {
+    queue: Vec<TaskPtr>,
+    shutdown: bool,
+}
+
+/// Long-lived pool internals shared between the handle and its workers.
+struct Inner {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers when work arrives (or at shutdown).
+    work_cv: Condvar,
+    /// Wakes submitters waiting for their task's visitors to drain.
+    done_cv: Condvar,
+}
+
+/// A persistent team of parked worker threads executing chunked parallel
+/// kernels. See the module docs for the lifecycle; almost all code should
+/// use the process-wide [`global`] pool rather than constructing one.
+pub struct ThreadPool {
+    inner: Arc<Inner>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Build a pool with `threads` total execution lanes: `threads - 1`
+    /// parked workers plus the submitting thread itself. `threads <= 1`
+    /// spawns nothing and `run` executes inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(PoolState { queue: Vec::with_capacity(16), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("engine-pool-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn engine pool worker")
+            })
+            .collect();
+        ThreadPool { inner, threads, handles }
+    }
+
+    /// Total execution lanes (parked workers + the submitting thread).
+    pub fn parallelism(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(0..chunks)` across the pool, returning when every chunk
+    /// has finished. The submitting thread claims chunks too, so progress
+    /// never depends on a worker being free. Allocation-free in steady
+    /// state. Panics (after completing the task) if any chunk panicked.
+    pub fn run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if self.threads <= 1 || chunks == 1 {
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the 'static is a lie told only to the queue — `run` does
+        // not return until the retire loop below has observed zero visitors
+        // under the pool mutex, after which no thread touches `task` again.
+        let func: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let task = Task {
+            func,
+            chunks,
+            cursor: AtomicUsize::new(0),
+            visitors: Cell::new(0),
+            panicked: AtomicBool::new(false),
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.queue.push(TaskPtr(&task as *const Task));
+        }
+        self.inner.work_cv.notify_all();
+        run_chunks(&task);
+        // Retire: unpublish the task, then wait for in-flight visitors. The
+        // mutex hand-off also makes every worker's chunk writes visible.
+        {
+            let ptr = &task as *const Task;
+            let mut st = self.inner.state.lock().unwrap();
+            st.queue.retain(|p| p.0 != ptr);
+            while task.visitors.get() > 0 {
+                st = self.inner.done_cv.wait(st).unwrap();
+            }
+            drop(st);
+        }
+        if task.panicked.load(Ordering::Relaxed) {
+            panic!("engine pool: a parallel kernel chunk panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute chunks until the task's cursor is exhausted.
+fn run_chunks(task: &Task) {
+    loop {
+        let i = task.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= task.chunks {
+            return;
+        }
+        let f = task.func;
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+            task.panicked.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let front = st.queue.first().map(|p| p.0);
+        match front {
+            Some(ptr) => {
+                // SAFETY: the task is in the queue, so its submitter is
+                // still blocked in `run`; registering as a visitor (under
+                // the lock) pins it until we deregister below.
+                let task = unsafe { &*ptr };
+                task.visitors.set(task.visitors.get() + 1);
+                drop(st);
+                run_chunks(task);
+                st = inner.state.lock().unwrap();
+                // the cursor is exhausted: unpublish so siblings stop
+                // visiting, then deregister and wake the submitter
+                st.queue.retain(|p| p.0 != ptr);
+                task.visitors.set(task.visitors.get() - 1);
+                if task.visitors.get() == 0 {
+                    inner.done_cv.notify_all();
+                }
+            }
+            None => {
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+/// Pool sizing: one lane per available core, capped at 8 (same cap the
+/// per-call spawning driver used — beyond it the row chunks get too small
+/// for the graphs this engine serves).
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+}
+
+/// The process-wide shared pool. Created (and its workers spawned) on first
+/// use; every executor thread in the process — including all of the
+/// serving coordinator's workers — submits to this one team.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+thread_local! {
+    /// Per-thread pool override installed by [`with_pool`] (tests and
+    /// diagnostics); null means "use the global pool".
+    static OVERRIDE: Cell<*const ThreadPool> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Run `f` with `pool` substituted for the global pool on THIS thread —
+/// the hook the determinism tests use to execute one model at several
+/// worker counts. The override applies to kernels dispatched from the
+/// calling thread only and is restored (panic-safe) on exit.
+pub fn with_pool<R>(pool: &ThreadPool, f: impl FnOnce() -> R) -> R {
+    struct Reset(*const ThreadPool);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|c| c.replace(pool as *const ThreadPool));
+    let _reset = Reset(prev);
+    f()
+}
+
+/// Hand the calling thread's effective pool (override or global) to `f`.
+pub(crate) fn with_current<R>(f: impl FnOnce(&ThreadPool) -> R) -> R {
+    let p = OVERRIDE.with(|c| c.get());
+    if p.is_null() {
+        f(global())
+    } else {
+        // SAFETY: a non-null override is installed only by `with_pool`,
+        // whose pool reference outlives the closure it runs.
+        f(unsafe { &*p })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn executes_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} ran a wrong number of times");
+        }
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.parallelism(), 1);
+        let seen = Mutex::new(Vec::new());
+        pool.run(5, &|i| seen.lock().unwrap().push(i));
+        // a 1-lane pool executes on the submitter, in order
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_team() {
+        let pool = std::sync::Arc::new(ThreadPool::new(4));
+        let total = AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let total = &total;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        pool.run(16, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 16);
+    }
+
+    #[test]
+    fn with_pool_overrides_and_restores() {
+        let small = ThreadPool::new(2);
+        with_current(|p| assert!(std::ptr::eq(p, global())));
+        with_pool(&small, || {
+            with_current(|p| assert!(std::ptr::eq(p, &small)));
+        });
+        with_current(|p| assert!(std::ptr::eq(p, global())));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(3);
+        pool.run(8, &|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -99,6 +99,37 @@ impl Tensor {
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
         Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
     }
+
+    /// Reshape in place to `shape`, reusing both allocations, with every
+    /// element reset to 0.0. Heap-traffic-free once the capacities suffice —
+    /// the execution plan's steady-state buffer discipline. Use when the
+    /// writer *accumulates* into the tensor.
+    pub fn reset_zeroed(&mut self, shape: &[usize]) {
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        let n: usize = shape.iter().product();
+        self.data.clear();
+        self.data.resize(n, 0.0);
+    }
+
+    /// Reshape in place to `shape`, reusing both allocations, WITHOUT
+    /// clearing element values (stale data may remain): only for writers
+    /// that overwrite every element. Heap-traffic-free once warm.
+    pub fn reset_for_overwrite(&mut self, shape: &[usize]) {
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        let n: usize = shape.iter().product();
+        self.data.resize(n, 0.0);
+    }
+
+    /// Copy `src`'s shape and data into self, reusing allocations
+    /// (heap-traffic-free once warm) — the plan executor's clone-substitute.
+    pub fn copy_from(&mut self, src: &Tensor) {
+        self.shape.clear();
+        self.shape.extend_from_slice(&src.shape);
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
 }
 
 /// Paper-definition empirical quantile x_(ceil(p*n)) — matches
@@ -151,5 +182,22 @@ mod tests {
     fn reshape_roundtrip() {
         let t = Tensor::zeros(&[2, 3, 4]).reshaped(&[6, 4]);
         assert_eq!(t.shape, vec![6, 4]);
+    }
+
+    #[test]
+    fn reset_helpers_reuse_capacity() {
+        let mut t = Tensor::full(&[4, 4], 7.0);
+        let cap = t.data.capacity();
+        t.reset_zeroed(&[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert!(t.data.iter().all(|&v| v == 0.0));
+        assert_eq!(t.data.capacity(), cap, "shrinking reset must keep the allocation");
+        t.reset_for_overwrite(&[4, 2]);
+        assert_eq!((t.shape.as_slice(), t.len()), (&[4usize, 2][..], 8));
+        let src = Tensor::full(&[2, 2], 1.5);
+        t.copy_from(&src);
+        assert_eq!(t.shape, src.shape);
+        assert_eq!(t.data, src.data);
+        assert_eq!(t.data.capacity(), cap, "copy_from must reuse the allocation");
     }
 }

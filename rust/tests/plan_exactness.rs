@@ -12,7 +12,7 @@ use std::collections::{BTreeMap, HashMap};
 
 use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
 use quant_trim::calib::{calibrate, CalibMethod};
-use quant_trim::engine::{fp32_model, ActMode, CompiledModel, ExecConfig, WeightMode};
+use quant_trim::engine::{fp32_model, ActMode, CompiledModel, ExecConfig, ExecScratch, WeightMode};
 use quant_trim::perfmodel::Precision;
 use quant_trim::qir::passes;
 use quant_trim::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
@@ -321,6 +321,48 @@ fn dyn_int8_runs_bit_exact_without_any_act_ranges() {
         planned[0].data, y_static[0].data,
         "dynamic ranges must actually differ from the calibrated static grid"
     );
+}
+
+#[test]
+fn scratch_reuse_across_runs_batches_and_models_is_bit_exact() {
+    // ONE ExecScratch serves: repeated runs, changing batch sizes (grow,
+    // shrink, regrow), and a different deployment (int4) — every planned
+    // result must still equal the interpreter bit for bit; arena reuse
+    // must never leak state between inferences
+    let sm = synth::resnet_like(16, 16);
+    let (graph, params, _f, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let mut rng = Rng::new(0x5C8A);
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let ranges = ranges_for(&graph, &params, &batches);
+    let model_at = |bits: u8| {
+        let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
+        CompiledModel::new(
+            graph.clone(),
+            params.clone(),
+            BTreeMap::new(),
+            quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits),
+            ranges.clone(),
+            ExecConfig { weight_mode, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+        )
+    };
+    let m8 = model_at(8);
+    let m4 = model_at(4);
+    let mut scratch = ExecScratch::new();
+    for &bsz in &[2usize, 1, 3, 2] {
+        let x = Tensor::new(vec![bsz, 3, 16, 16], rng.normal_vec(bsz * 3 * 256, 1.0));
+        for m in [&m8, &m4] {
+            let interp = m.run_interpreted(&x).unwrap();
+            let planned = m.run_with(&x, &mut scratch).unwrap();
+            assert_eq!(planned.len(), interp.len());
+            assert_eq!(planned[0].shape, interp[0].shape, "b={bsz}");
+            assert_eq!(
+                planned[0].data, interp[0].data,
+                "scratch reuse broke bit-exactness at b={bsz}"
+            );
+        }
+    }
 }
 
 #[test]

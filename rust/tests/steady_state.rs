@@ -1,0 +1,160 @@
+//! Steady-state contracts of the planned executor:
+//!
+//! 1. **Zero heap allocations** in a warm `run_with` — a counting global
+//!    allocator (thread-local event counter, so pool-worker allocations on
+//!    other threads don't pollute the measurement… and they must not
+//!    allocate either, but that is the pool's own contract) asserts that
+//!    the SECOND run of a planned int8 synthetic ResNet touches the
+//!    allocator exactly zero times on the executing thread.
+//! 2. **Pool determinism** — the same planned model produces bit-identical
+//!    logits on worker pools of 1, 2 and 8 lanes (chunking never changes
+//!    per-output accumulation order).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::{BTreeMap, HashMap};
+
+use quant_trim::engine::pool::{self, ThreadPool};
+use quant_trim::engine::{ActMode, CompiledModel, ExecConfig, ExecScratch, WeightMode};
+use quant_trim::qir::passes;
+use quant_trim::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
+use quant_trim::testutil::synth;
+use quant_trim::testutil::Rng;
+
+thread_local! {
+    static ALLOC_EVENTS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Counts alloc/realloc events on the calling thread, then defers to the
+/// system allocator. Deallocations are free to happen (a dealloc returns
+/// memory; it cannot grow a warm run's footprint) but allocations and
+/// reallocations are the regression being gated.
+struct CountingAlloc;
+
+fn bump() {
+    // try_with: the allocator runs during TLS teardown too, when the
+    // counter may already be destroyed — those events are not ours to count
+    let _ = ALLOC_EVENTS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> usize {
+    ALLOC_EVENTS.with(|c| c.get())
+}
+
+/// Planned int8 deployment of the wide synthetic ResNet (the bench model —
+/// its GEMMs cross the parallel-dispatch threshold, so the persistent pool
+/// path is exercised, not just the inline one).
+fn int8_model() -> (CompiledModel, Tensor) {
+    let sm = synth::resnet_like(32, 64);
+    let (graph, params, _f, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let mut rng = Rng::new(0x57EAD);
+    let x = Tensor::new(vec![2, 3, 32, 32], rng.normal_vec(2 * 3 * 32 * 32, 1.0));
+    let fp = quant_trim::engine::fp32_model(graph.clone(), params.clone(), BTreeMap::new());
+    let batches: Vec<Tensor> = (0..2)
+        .map(|_| Tensor::new(vec![2, 3, 32, 32], rng.normal_vec(2 * 3 * 32 * 32, 1.0)))
+        .collect();
+    let ranges =
+        quant_trim::calib::calibrate(&fp, &batches, quant_trim::calib::CalibMethod::MinMax)
+            .unwrap()
+            .ranges;
+    let mut qweights = HashMap::new();
+    for n in graph.weight_nodes() {
+        let key = format!("{}.w", n.name);
+        if let Some(w) = params.get(&key) {
+            qweights.insert(
+                key,
+                QWeight::quantize(w, QuantScheme::PerChannelSym, RoundMode::TiesEven),
+            );
+        }
+    }
+    let model = CompiledModel::new(
+        graph,
+        params,
+        BTreeMap::new(),
+        qweights,
+        ranges,
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+        },
+    );
+    (model, x)
+}
+
+#[test]
+fn warm_planned_run_makes_zero_heap_allocations() {
+    let (model, x) = int8_model();
+    model.plan().unwrap(); // compile outside the measured region
+    let mut scratch = ExecScratch::new();
+    // warmup: sizes the slot arena, im2col/xq/mat scratch, output copies,
+    // and spins up the global pool (worker spawn + queue reservation)
+    let warm = model.run_with(&x, &mut scratch).unwrap()[0].data.clone();
+
+    let before = alloc_events();
+    let outs = model.run_with(&x, &mut scratch).unwrap();
+    let after = alloc_events();
+    assert_eq!(outs[0].data, warm, "warm rerun changed the logits");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state planned run must not touch the allocator (got {} events)",
+        after - before
+    );
+}
+
+#[test]
+fn warm_runs_stay_allocation_free_across_repeats() {
+    // ten consecutive warm runs: not a single allocation between them —
+    // the arena really is at its high-water mark, not just lucky once
+    let (model, x) = int8_model();
+    let mut scratch = ExecScratch::new();
+    model.run_with(&x, &mut scratch).unwrap();
+    let before = alloc_events();
+    for _ in 0..10 {
+        model.run_with(&x, &mut scratch).unwrap();
+    }
+    assert_eq!(alloc_events() - before, 0, "a repeat run allocated");
+}
+
+#[test]
+fn pool_size_does_not_change_planned_results() {
+    let (model, x) = int8_model();
+    let reference = model.run_interpreted(&x).unwrap();
+    for threads in [1usize, 2, 8] {
+        let p = ThreadPool::new(threads);
+        let mut scratch = ExecScratch::new();
+        let outs = pool::with_pool(&p, || {
+            model.run_with(&x, &mut scratch).map(|o| o.to_vec())
+        })
+        .unwrap();
+        assert_eq!(
+            outs[0].data, reference[0].data,
+            "planned int8 logits drifted at pool size {threads}"
+        );
+    }
+}
