@@ -23,7 +23,8 @@ use quant_trim::backends::{
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::experiment::artifacts_dir;
 use quant_trim::coordinator::server::{
-    BatchPolicy, EngineModel, Server, ServerConfig, ServerDeployment, SubmitError,
+    BatchPolicy, EngineModel, Outcome, Priority, Server, ServerConfig, ServerDeployment,
+    SubmitError,
 };
 use quant_trim::coordinator::TrainState;
 use quant_trim::data::{gen_cls_batch, ClsSpec};
@@ -72,11 +73,15 @@ fn compile_one(
     Ok(ServerDeployment {
         name: name.to_string(),
         model: Arc::new(EngineModel::new(Arc::new(dep.model), 16)),
+        fallbacks: Vec::new(),
     })
 }
 
 fn main() -> Result<()> {
     let n_requests: usize = arg("--requests", "256").parse()?;
+    // optional per-request SLO deadline in ms (0 = no deadlines)
+    let slo_ms: u64 = arg("--slo-ms", "0").parse()?;
+    let slo = (slo_ms > 0).then(|| Duration::from_millis(slo_ms));
     let backend = arg("--backend", "hardware_d");
     let workers: usize = arg("--workers", "2").parse()?;
     let fleet_mode = flag("--fleet");
@@ -137,7 +142,12 @@ fn main() -> Result<()> {
         ServerConfig {
             workers,
             queue_depth: 512,
-            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(4) },
+            policy: BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_millis(4),
+                slo_margin: slo.map(|_| Duration::from_millis(1)),
+            },
+            ..ServerConfig::default()
         },
     )?;
 
@@ -154,7 +164,9 @@ fn main() -> Result<()> {
             Tensor::new(vec![3, 32, 32], data.images.data[j * sz..(j + 1) * sz].to_vec());
         let name = &names[i % names.len()];
         loop {
-            match server.submit_image(image, Some(name.as_str())) {
+            let deadline = slo.map(|d| std::time::Instant::now() + d);
+            match server.submit_image_with(image, Some(name.as_str()), deadline, Priority::Normal)
+            {
                 Ok(rx) => {
                     replies.push((data.labels[j], rx));
                     break;
@@ -165,6 +177,7 @@ fn main() -> Result<()> {
                     image = req.image;
                     std::thread::sleep(Duration::from_micros(500));
                 }
+                Err(SubmitError::Shed(_)) => unreachable!("no shed watermark configured"),
                 Err(SubmitError::ShutDown(_)) => anyhow::bail!("server shut down mid-load"),
             }
         }
@@ -195,7 +208,9 @@ fn main() -> Result<()> {
             }
             Err(e) => {
                 failed += 1;
-                eprintln!("request failed on {}: {e}", resp.deployment);
+                if resp.outcome != Outcome::Expired {
+                    eprintln!("request failed on {}: {e}", resp.deployment);
+                }
             }
         }
     }
@@ -203,9 +218,22 @@ fn main() -> Result<()> {
     println!("\n=== serving stats (request path: Rust engine only) ===");
     println!("served          {} ({} error responses)", stats.served, stats.errors);
     println!("batches         {} (mean batch {:.2})", stats.batches, stats.mean_batch);
-    println!("latency p50/p95 {:.2} / {:.2} ms", stats.p50_ms, stats.p95_ms);
+    println!(
+        "latency p50/p95/p99 {:.2} / {:.2} / {:.2} ms",
+        stats.p50_ms, stats.p95_ms, stats.p99_ms
+    );
     println!("throughput      {:.1} req/s ({workers} workers)", stats.throughput_rps);
     println!("backpressure    {backpressured} retries at submit");
+    println!(
+        "robustness      shed {} | expired {} | retried {} | degraded {} | breaker trips {}",
+        stats.shed, stats.expired, stats.retried, stats.degraded, stats.breaker_trips
+    );
+    println!(
+        "containment     worker panics {} | workers restarted {} | SLO violation rate {:.4}",
+        stats.worker_panics,
+        stats.workers_restarted,
+        stats.slo_violation_rate()
+    );
     println!(
         "on-device top-1 {:.2}% ({} failed)",
         correct as f64 / n_requests as f64 * 100.0,

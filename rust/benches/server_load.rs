@@ -1,7 +1,10 @@
 //! Serving-fabric load bench: sweeps workers × batch-policy × backend over
 //! the concurrent batching server and writes `BENCH_server.json`
 //! (throughput_rps, p50/p95 latency, mean batch occupancy per config, plus
-//! the headline 4-worker-vs-1-worker speedup).
+//! the headline 4-worker-vs-1-worker speedup), then runs the **chaos
+//! scenario suite** — burst / diurnal / brownout / panic-storm traffic with
+//! seeded fault injection — emitting p50/p95/p99, SLO-violation rate and
+//! shed/retry/breaker/restart counters per scenario.
 //!
 //! Deployments are the real int8 engine compiled per simulated backend, but
 //! **device-paced**: each batch holds its worker for at least the roofline
@@ -10,13 +13,19 @@
 //! bench would measure host CPU speed instead of the serving fabric's
 //! scheduling across the fleet. Closed-loop load, no artifacts needed.
 //!
-//!   cargo bench --bench server_load
+//!   cargo bench --bench server_load                # sweeps + chaos suite
+//!   cargo bench --bench server_load -- --chaos-only  # scenario suite only,
+//!                                                  # writes BENCH_chaos.json
+//!                                                  # (the CI chaos-smoke job)
 
+use std::num::NonZeroUsize;
 use std::time::{Duration, Instant};
 
 use quant_trim::coordinator::experiment::compile_serving_fleet;
+use quant_trim::coordinator::faults::{Brownout, BrownoutMode, FaultPlan, FaultyModel};
 use quant_trim::coordinator::server::{
-    BatchPolicy, Server, ServerConfig, ServerDeployment, ServerStats,
+    BatchPolicy, BreakerPolicy, Priority, Server, ServerConfig, ServerDeployment, ServerStats,
+    SubmitError,
 };
 use quant_trim::perfmodel::{ActScaling, Precision};
 use quant_trim::tensor::Tensor;
@@ -25,6 +34,10 @@ use quant_trim::testutil::{synth, Rng};
 /// Minimum simulated device service time per batch (ms). Large enough that
 /// worker scaling, not host CPU contention, dominates the sweep.
 const FLOOR_MS: f64 = 5.0;
+
+/// Fault seed for the chaos scenarios: fixed so the injected schedule —
+/// and therefore the scenario counters — replays run to run.
+const CHAOS_SEED: u64 = 0xC4A0_5EED;
 
 struct Sweep {
     backend: String,
@@ -89,7 +102,12 @@ fn drive(
         ServerConfig {
             workers,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .expect("server start");
@@ -156,8 +174,296 @@ fn int8_fleet_of(backends: &[&str], max_batch: usize) -> Vec<ServerDeployment> {
     .expect("fleet compile")
 }
 
+/// hardware_d at INT8 + INT4 behind one router; `compile_serving_fleet`
+/// wires the INT4 sibling as the INT8 entry's breaker fallback.
+fn int8_with_int4_sibling(max_batch: usize) -> Vec<ServerDeployment> {
+    let sm = synth::resnet_like(16, 8);
+    let mut rng = Rng::new(0xCA11B);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &[
+            ("hardware_d", Some(Precision::Int8), ActScaling::Static),
+            ("hardware_d", Some(Precision::Int4), ActScaling::Static),
+        ],
+        &calib,
+        max_batch,
+        Some(Duration::from_secs_f64(FLOOR_MS / 1e3)),
+    )
+    .expect("sibling fleet compile")
+}
+
+// ---------------------------------------------------------------------------
+// Chaos scenario suite
+// ---------------------------------------------------------------------------
+
+struct ScenarioResult {
+    name: &'static str,
+    throughput_rps: f64,
+    stats: ServerStats,
+}
+
+impl ScenarioResult {
+    fn print(&self) {
+        let s = &self.stats;
+        println!(
+            "{:<12} {:>7.1} rps  p50/p95/p99 {:>6.2}/{:>6.2}/{:>6.2} ms  viol {:.4}",
+            self.name,
+            self.throughput_rps,
+            s.p50_ms,
+            s.p95_ms,
+            s.p99_ms,
+            s.slo_violation_rate(),
+        );
+        println!(
+            "             served {} errors {} expired {} shed {} retried {} degraded {} breaker_trips {} panics {} restarts {}",
+            s.served,
+            s.errors,
+            s.expired,
+            s.shed,
+            s.retried,
+            s.degraded,
+            s.breaker_trips,
+            s.worker_panics,
+            s.workers_restarted,
+        );
+    }
+
+    fn json(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "    {{\"scenario\": \"{}\", \"throughput_rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"violation_rate\": {:.4}, \"served\": {}, \"errors\": {}, \"expired\": {}, \"shed\": {}, \"retried\": {}, \"degraded\": {}, \"breaker_trips\": {}, \"worker_panics\": {}, \"workers_restarted\": {}}}",
+            self.name,
+            self.throughput_rps,
+            s.p50_ms,
+            s.p95_ms,
+            s.p99_ms,
+            s.slo_violation_rate(),
+            s.served,
+            s.errors,
+            s.expired,
+            s.shed,
+            s.retried,
+            s.degraded,
+            s.breaker_trips,
+            s.worker_panics,
+            s.workers_restarted,
+        )
+    }
+
+    /// Top-level gated keys (unique per scenario: the gate's flat JSON
+    /// parser would merge duplicate keys across scenario rows).
+    fn gate_keys(&self) -> String {
+        format!(
+            "  \"chaos_{0}_p95_ms\": {1:.3},\n  \"chaos_{0}_violation_rate\": {2:.4},",
+            self.name,
+            self.stats.p95_ms,
+            self.stats.slo_violation_rate(),
+        )
+    }
+}
+
+fn chaos_config(workers: usize, shed_watermark: Option<usize>) -> ServerConfig {
+    ServerConfig {
+        workers,
+        queue_depth: 64,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            // SLO lane: flush pending batches 5 ms ahead of the most urgent
+            // request deadline
+            slo_margin: Some(Duration::from_millis(5)),
+        },
+        breaker: BreakerPolicy { trip_after: 5, cooldown: Duration::from_millis(100) },
+        shed_watermark,
+        ..ServerConfig::default()
+    }
+}
+
+/// Open-loop scenario drive: each client submits its whole schedule (with a
+/// per-request arrival gap), then collects every reply. Faulted deployments
+/// may answer with errors — the invariant exercised here is that every
+/// accepted request is answered at all.
+fn chaos_drive(
+    fleet: Vec<ServerDeployment>,
+    names: &[&str],
+    cfg: ServerConfig,
+    clients: usize,
+    per_client: usize,
+    deadline: Option<Duration>,
+    low_prio_every: usize,
+    gap: impl Fn(usize, usize) -> Duration + Sync,
+) -> (f64, ServerStats) {
+    let server = Server::start(fleet, cfg).expect("server start");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            let gap = &gap;
+            s.spawn(move || {
+                let mut rng = Rng::new(CHAOS_SEED + c as u64);
+                let img = Tensor::new(vec![3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+                let mut rxs = Vec::with_capacity(per_client);
+                for r in 0..per_client {
+                    let name = names[(c + r) % names.len()];
+                    let pri = if low_prio_every > 0 && r % low_prio_every == 0 {
+                        Priority::Low
+                    } else {
+                        Priority::Normal
+                    };
+                    let dl = deadline.map(|d| Instant::now() + d);
+                    let mut image = img.clone();
+                    loop {
+                        match server.submit_image_with(image, Some(name), dl, pri) {
+                            Ok(rx) => {
+                                rxs.push(rx);
+                                break;
+                            }
+                            Err(SubmitError::Shed(_)) => break, // admission control shed it
+                            Err(e) => {
+                                std::thread::sleep(Duration::from_micros(200));
+                                image = e.into_request().image;
+                            }
+                        }
+                    }
+                    let g = gap(c, r);
+                    if !g.is_zero() {
+                        std::thread::sleep(g);
+                    }
+                }
+                for rx in rxs {
+                    // served, failed, or expired — but always answered
+                    rx.recv().expect("every accepted request gets a response");
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    (stats.served as f64 / elapsed.max(1e-9), stats)
+}
+
+fn run_chaos_suite() -> Vec<ScenarioResult> {
+    let deadline = Some(Duration::from_millis(400));
+    let mut out = Vec::new();
+
+    // burst: 20 ms quiet gaps between 8-request bursts, healthy backend —
+    // baseline for the SLO machinery itself (violation rate should be ~0)
+    let (tp, stats) = chaos_drive(
+        int8_fleet("hardware_d", 4),
+        &["hardware_d"],
+        chaos_config(2, None),
+        8,
+        24,
+        deadline,
+        0,
+        |_c, r| if r % 8 == 7 { Duration::from_millis(20) } else { Duration::ZERO },
+    );
+    out.push(ScenarioResult { name: "burst", throughput_rps: tp, stats });
+
+    // diurnal: alternating high/low arrival-rate phases with admission
+    // control — low-priority traffic is shed when the peak phase floods the
+    // queue past the watermark
+    let (tp, stats) = chaos_drive(
+        int8_fleet("hardware_d", 4),
+        &["hardware_d"],
+        chaos_config(2, Some(16)),
+        12,
+        24,
+        deadline,
+        3,
+        |_c, r| {
+            if (r / 6) % 2 == 0 {
+                Duration::ZERO // peak phase
+            } else {
+                Duration::from_millis(8) // trough phase
+            }
+        },
+    );
+    out.push(ScenarioResult { name: "diurnal", throughput_rps: tp, stats });
+
+    // brownout: the INT8 deployment fails transiently for a sustained window
+    // (seeded) while its INT4 sibling stays healthy — retries + breaker
+    // degrade traffic to INT4 and revert after the window
+    let plan = FaultPlan {
+        seed: CHAOS_SEED,
+        brownout: Some(Brownout { from_call: 8, calls: 40, mode: BrownoutMode::Fail }),
+        ..FaultPlan::default()
+    };
+    let fleet: Vec<ServerDeployment> = int8_with_int4_sibling(4)
+        .into_iter()
+        .map(|d| if d.name == "hardware_d@INT8" { FaultyModel::wrap(d, plan) } else { d })
+        .collect();
+    let (tp, stats) = chaos_drive(
+        fleet,
+        &["hardware_d@INT8"],
+        chaos_config(2, None),
+        8,
+        24,
+        deadline,
+        0,
+        |_c, _r| Duration::from_millis(1),
+    );
+    out.push(ScenarioResult { name: "brownout", throughput_rps: tp, stats });
+
+    // panic storm: every 9th model call panics (plus a sprinkle of seeded
+    // transient errors) — workers contain and recycle; every request is
+    // still answered
+    let plan = FaultPlan {
+        seed: CHAOS_SEED,
+        transient_prob: 0.05,
+        panic_every: NonZeroUsize::new(9),
+        ..FaultPlan::default()
+    };
+    let fleet: Vec<ServerDeployment> =
+        int8_fleet("hardware_d", 4).into_iter().map(|d| FaultyModel::wrap(d, plan)).collect();
+    let (tp, stats) = chaos_drive(
+        fleet,
+        &["hardware_d"],
+        chaos_config(2, None),
+        8,
+        24,
+        deadline,
+        0,
+        |_c, _r| Duration::from_millis(1),
+    );
+    out.push(ScenarioResult { name: "panic_storm", throughput_rps: tp, stats });
+
+    out
+}
+
+fn write_json(path: &std::path::Path, json: &str) {
+    match std::fs::write(path, json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
+    let chaos_only = std::env::args().any(|a| a == "--chaos-only");
     let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let manifest = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+
+    if chaos_only {
+        println!("=== chaos scenario suite (seed {CHAOS_SEED:#x}, device-paced int8 engine) ===\n");
+        let scenarios = run_chaos_suite();
+        for sc in &scenarios {
+            sc.print();
+        }
+        let gates: Vec<String> = scenarios.iter().map(ScenarioResult::gate_keys).collect();
+        let rows: Vec<String> = scenarios.iter().map(ScenarioResult::json).collect();
+        let json = format!(
+            "{{\n  \"bench\": \"server_load --chaos-only\",\n  \"host_cpus\": {cpus},\n  \"fault_seed\": {CHAOS_SEED},\n{}\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+            gates.join("\n"),
+            rows.join(",\n"),
+        );
+        write_json(&manifest.join("BENCH_chaos.json"), &json);
+        return;
+    }
+
     println!("=== serving-fabric load bench (closed loop, device-paced int8 engine) ===");
     println!("host cpus: {cpus}   pacing floor: {FLOOR_MS} ms/batch\n");
 
@@ -222,14 +528,20 @@ fn main() {
         println!("WARNING: expected >= 2x scaling from 1 -> 4 workers");
     }
 
-    let rows: Vec<String> = sweeps.iter().map(Sweep::json).collect();
-    let json = format!(
-        "{{\n  \"bench\": \"server_load\",\n  \"model\": \"synthetic resnet-like 3x16x16, int8 engine, device-paced\",\n  \"host_cpus\": {cpus},\n  \"pacing_floor_ms\": {FLOOR_MS},\n  \"workers_speedup_4v1\": {speedup:.2},\n  \"sweeps\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n"),
-    );
-    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_server.json");
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    println!("\n=== chaos scenario suite (seed {CHAOS_SEED:#x}) ===\n");
+    let scenarios = run_chaos_suite();
+    for sc in &scenarios {
+        sc.print();
     }
+
+    let gates: Vec<String> = scenarios.iter().map(ScenarioResult::gate_keys).collect();
+    let rows: Vec<String> = sweeps.iter().map(Sweep::json).collect();
+    let chaos_rows: Vec<String> = scenarios.iter().map(ScenarioResult::json).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"server_load\",\n  \"model\": \"synthetic resnet-like 3x16x16, int8 engine, device-paced\",\n  \"host_cpus\": {cpus},\n  \"pacing_floor_ms\": {FLOOR_MS},\n  \"fault_seed\": {CHAOS_SEED},\n  \"workers_speedup_4v1\": {speedup:.2},\n{}\n  \"sweeps\": [\n{}\n  ],\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+        gates.join("\n"),
+        rows.join(",\n"),
+        chaos_rows.join(",\n"),
+    );
+    write_json(&manifest.join("BENCH_server.json"), &json);
 }

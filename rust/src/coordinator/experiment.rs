@@ -328,6 +328,9 @@ pub fn compile_serving_fleet(
 ) -> Result<Vec<ServerDeployment>> {
     let qstate: BTreeMap<String, Tensor> = BTreeMap::new();
     let mut fleet = Vec::with_capacity(backends.len());
+    // (backend name, effective precision, effective scaling) per deployment,
+    // kept parallel to `fleet` for the fallback wiring below
+    let mut spec = Vec::with_capacity(backends.len());
     for &(name, precision, scaling) in backends {
         let be = backend_by_name(name).with_context(|| format!("unknown backend {name:?}"))?;
         let precision = precision.unwrap_or_else(|| be.default_precision());
@@ -366,7 +369,28 @@ pub fn compile_serving_fleet(
             }
             None => EngineModel::new(model, max_batch),
         };
-        fleet.push(ServerDeployment { name: dep_name, model: Arc::new(engine) });
+        spec.push((name, effective, effective_scaling));
+        fleet.push(ServerDeployment {
+            name: dep_name,
+            model: Arc::new(engine),
+            fallbacks: Vec::new(),
+        });
+    }
+    // Graceful-degradation wiring: each deployment's fallbacks are its
+    // same-backend siblings, preferring the precision-shedding targets the
+    // breaker should degrade to — INT4 first, then dynamic-scaling variants,
+    // then anything else on that backend. A single-entry backend gets no
+    // fallbacks (breaker-open traffic fails fast instead).
+    for i in 0..fleet.len() {
+        let mut sibs: Vec<usize> =
+            (0..fleet.len()).filter(|&j| j != i && spec[j].0 == spec[i].0).collect();
+        sibs.sort_by_key(|&j| {
+            let int4_rank = usize::from(spec[j].1 != Precision::Int4);
+            let dyn_rank = usize::from(spec[j].2 != ActScaling::Dynamic);
+            (int4_rank, dyn_rank, j)
+        });
+        let names: Vec<String> = sibs.into_iter().map(|j| fleet[j].name.clone()).collect();
+        fleet[i].fallbacks = names;
     }
     Ok(fleet)
 }

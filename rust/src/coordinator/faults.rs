@@ -1,0 +1,266 @@
+//! Deterministic fault injection for the serving tier (chaos harness).
+//!
+//! [`FaultyModel`] wraps any [`BatchModel`] and injects the failure modes
+//! the paper's deployment story has to survive — vendor-backend latency
+//! spikes, transient inference errors, hard worker panics, and sustained
+//! backend brownout — on **reproducible schedules**: every decision is a
+//! pure function of `(FaultPlan::seed, call index)` via a splitmix64-style
+//! hash, so a fixed seed replays the exact same fault sequence. That makes
+//! SLO-violation rates, breaker trips, and retry counts deterministic and
+//! assertable in tests (`rust/tests/server_faults.rs`) and comparable run
+//! to run in the `server_load` chaos scenarios.
+//!
+//! Injection order per call (first match wins): scheduled panic, brownout
+//! window, seeded transient error, seeded latency spike, then delegation to
+//! the wrapped model. Injected transient errors carry
+//! [`TRANSIENT_MARKER`](crate::coordinator::server::TRANSIENT_MARKER), so
+//! the server's retry/breaker machinery treats them exactly like a flaky
+//! real backend.
+
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::server::{transient_error, BatchModel, ServerDeployment};
+use crate::tensor::Tensor;
+
+/// What a brownout window does to each call inside it.
+#[derive(Clone, Copy, Debug)]
+pub enum BrownoutMode {
+    /// Every call in the window fails with a transient error (hard
+    /// brownout: the backend answers, but uselessly).
+    Fail,
+    /// Every call in the window is slowed by this much before delegating
+    /// (soft brownout: the backend limps).
+    Slow(Duration),
+}
+
+/// A sustained degradation window: calls `[from_call, from_call + calls)`
+/// (0-based call index on the wrapped model) misbehave per `mode`.
+#[derive(Clone, Copy, Debug)]
+pub struct Brownout {
+    pub from_call: usize,
+    pub calls: usize,
+    pub mode: BrownoutMode,
+}
+
+impl Brownout {
+    fn covers(&self, call: usize) -> bool {
+        call >= self.from_call && call < self.from_call + self.calls
+    }
+}
+
+/// Seeded fault schedule. `Default` injects nothing — start from it and turn
+/// on only the failure modes a scenario needs.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Seed for the per-call hash; same seed = same fault sequence.
+    pub seed: u64,
+    /// Probability in [0, 1] that a call sleeps `spike` before delegating.
+    pub spike_prob: f64,
+    /// Injected latency spike duration.
+    pub spike: Duration,
+    /// Probability in [0, 1] that a call fails with a transient error.
+    pub transient_prob: f64,
+    /// Panic on every n-th call (1-based: `panic_every = 3` panics calls
+    /// 2, 5, 8, ... by 0-based index). Exercises worker containment.
+    pub panic_every: Option<NonZeroUsize>,
+    /// Optional sustained brownout window.
+    pub brownout: Option<Brownout>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            spike_prob: 0.0,
+            spike: Duration::from_millis(5),
+            transient_prob: 0.0,
+            panic_every: None,
+            brownout: None,
+        }
+    }
+}
+
+/// splitmix64 finalizer: avalanches `seed ^ salted-call-index` into 64
+/// well-mixed bits (same mixer the engine's test RNG uses).
+fn mix(seed: u64, call: u64, salt: u64) -> u64 {
+    let mut z = seed ^ call.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(salt);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic uniform in [0, 1) from (seed, call, salt).
+fn unit(seed: u64, call: u64, salt: u64) -> f64 {
+    (mix(seed, call, salt) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+const SALT_TRANSIENT: u64 = 0x7261_6e73;
+const SALT_SPIKE: u64 = 0x7370_696b;
+
+/// A [`BatchModel`] that replays a [`FaultPlan`] on top of a real model.
+/// Call indices are assigned atomically, so the schedule stays deterministic
+/// per-model even with several workers running batches concurrently (which
+/// *batch* hits fault k can still race; single-worker setups are fully
+/// deterministic end to end).
+pub struct FaultyModel {
+    inner: Arc<dyn BatchModel>,
+    plan: FaultPlan,
+    calls: AtomicUsize,
+}
+
+impl FaultyModel {
+    pub fn new(inner: Arc<dyn BatchModel>, plan: FaultPlan) -> Self {
+        FaultyModel { inner, plan, calls: AtomicUsize::new(0) }
+    }
+
+    /// Wrap a deployment's model in this fault plan, preserving its name and
+    /// fallback wiring — drop-in chaos for a compiled fleet.
+    pub fn wrap(dep: ServerDeployment, plan: FaultPlan) -> ServerDeployment {
+        ServerDeployment {
+            name: dep.name,
+            model: Arc::new(FaultyModel::new(dep.model, plan)),
+            fallbacks: dep.fallbacks,
+        }
+    }
+
+    /// Calls observed so far (including ones that panicked or failed).
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl BatchModel for FaultyModel {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let plan = &self.plan;
+        if let Some(n) = plan.panic_every {
+            if (call + 1) % n.get() == 0 {
+                panic!("injected fault: model panic on call {call}");
+            }
+        }
+        if let Some(b) = &plan.brownout {
+            if b.covers(call) {
+                match b.mode {
+                    BrownoutMode::Fail => {
+                        return Err(transient_error(format!("injected brownout on call {call}")))
+                    }
+                    BrownoutMode::Slow(d) => std::thread::sleep(d),
+                }
+            }
+        }
+        if plan.transient_prob > 0.0
+            && unit(plan.seed, call as u64, SALT_TRANSIENT) < plan.transient_prob
+        {
+            return Err(transient_error(format!("injected transient error on call {call}")));
+        }
+        if plan.spike_prob > 0.0 && unit(plan.seed, call as u64, SALT_SPIKE) < plan.spike_prob {
+            std::thread::sleep(plan.spike);
+        }
+        self.inner.run_batch(images)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn input_shape(&self) -> Option<Vec<usize>> {
+        self.inner.input_shape()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::is_transient;
+
+    struct Echo;
+    impl BatchModel for Echo {
+        fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+            Ok(images.clone())
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+    }
+
+    fn img() -> Tensor {
+        Tensor::full(&[1, 2], 1.0)
+    }
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let m = FaultyModel::new(Arc::new(Echo), FaultPlan::default());
+        for _ in 0..64 {
+            assert!(m.run_batch(&img()).is_ok());
+        }
+        assert_eq!(m.calls(), 64);
+    }
+
+    #[test]
+    fn transient_schedule_is_seed_deterministic() {
+        let plan = FaultPlan { seed: 42, transient_prob: 0.3, ..FaultPlan::default() };
+        let runs: Vec<Vec<bool>> = (0..2)
+            .map(|_| {
+                let m = FaultyModel::new(Arc::new(Echo), plan);
+                (0..200).map(|_| m.run_batch(&img()).is_err()).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "same seed must replay the same fault sequence");
+        let fails = runs[0].iter().filter(|&&f| f).count();
+        assert!((30..=90).contains(&fails), "p=0.3 over 200 calls, got {fails}");
+        // a different seed gives a different schedule
+        let other = FaultyModel::new(
+            Arc::new(Echo),
+            FaultPlan { seed: 43, transient_prob: 0.3, ..FaultPlan::default() },
+        );
+        let seq: Vec<bool> = (0..200).map(|_| other.run_batch(&img()).is_err()).collect();
+        assert_ne!(seq, runs[0], "different seed must reshuffle the schedule");
+    }
+
+    #[test]
+    fn injected_errors_are_transient() {
+        let m = FaultyModel::new(
+            Arc::new(Echo),
+            FaultPlan { transient_prob: 1.0, ..FaultPlan::default() },
+        );
+        let err = m.run_batch(&img()).unwrap_err();
+        assert!(is_transient(&err), "{err}");
+    }
+
+    #[test]
+    fn panic_every_n_panics_on_schedule() {
+        let m = Arc::new(FaultyModel::new(
+            Arc::new(Echo),
+            FaultPlan { panic_every: NonZeroUsize::new(3), ..FaultPlan::default() },
+        ));
+        for call in 0..9 {
+            let m2 = m.clone();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                m2.run_batch(&img()).is_ok()
+            }));
+            if (call + 1) % 3 == 0 {
+                assert!(out.is_err(), "call {call} must panic");
+            } else {
+                assert!(out.unwrap(), "call {call} must succeed");
+            }
+        }
+    }
+
+    #[test]
+    fn brownout_window_fails_then_recovers() {
+        let m = FaultyModel::new(
+            Arc::new(Echo),
+            FaultPlan {
+                brownout: Some(Brownout { from_call: 2, calls: 3, mode: BrownoutMode::Fail }),
+                ..FaultPlan::default()
+            },
+        );
+        let results: Vec<bool> = (0..8).map(|_| m.run_batch(&img()).is_ok()).collect();
+        assert_eq!(results, vec![true, true, false, false, false, true, true, true]);
+    }
+}

@@ -2,15 +2,18 @@
 //! the AOT train-step executable, reverse-pruning triggers, checkpointing),
 //! evaluation, and the batching inference server.
 
+pub mod faults;
 pub mod schedule;
 pub mod server;
 pub mod state;
 pub mod trainer;
 
+pub use faults::{Brownout, BrownoutMode, FaultPlan, FaultyModel};
 pub use schedule::{cosine_lr, Curriculum};
 pub use server::{
-    BatchModel, BatchPolicy, EngineModel, Request, Response, Server, ServerConfig,
-    ServerDeployment, ServerStats, SubmitError,
+    is_transient, latency_percentile, transient_error, BatchModel, BatchPolicy, BreakerPolicy,
+    EngineModel, Outcome, Priority, Request, Response, RetryPolicy, Server, ServerConfig,
+    ServerDeployment, ServerStats, SubmitError, TRANSIENT_MARKER,
 };
 pub use state::{CallExtras, TrainState};
 pub use trainer::{EpochLog, TrainConfig, Trainer};

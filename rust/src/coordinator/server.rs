@@ -18,6 +18,47 @@
 //! the router maps each request to the deployment it names. Built on std
 //! threads + mpsc (no tokio in the vendored crate set); the request path is
 //! pure Rust + PJRT.
+//!
+//! # Failure semantics
+//!
+//! The request lifecycle is fault-tolerant end to end; callers may rely on:
+//!
+//! * **Every accepted request gets exactly one [`Response`]** — served,
+//!   failed, or expired ([`Outcome`]). Reply channels are never abandoned,
+//!   including on model errors, model panics, breaker rejections, router
+//!   death, and shutdown.
+//! * **Deadlines** ([`Request::deadline`]) are enforced *before* execution:
+//!   an expired request is shed with [`Outcome::Expired`] (no model compute
+//!   is spent on it) at routing time and again at the worker just before the
+//!   batch runs. With [`BatchPolicy::slo_margin`] set, a pending batch is
+//!   flushed early when its most urgent request comes within the margin of
+//!   its deadline (the SLO lane).
+//! * **Admission control**: when [`ServerConfig::shed_watermark`] is set and
+//!   the ingress queue is at/above it, [`Priority::Low`] requests are shed
+//!   at `submit` with [`SubmitError::Shed`] (handed back, never enqueued).
+//! * **Transient model errors** (messages carrying [`TRANSIENT_MARKER`],
+//!   e.g. from [`crate::coordinator::faults`]) are retried with capped
+//!   exponential backoff per [`RetryPolicy`], preferring a healthy fallback
+//!   sibling ([`ServerDeployment::fallbacks`]) over the failing deployment.
+//! * **Panic containment**: a panicking `run_batch` (including parallel
+//!   kernel-chunk panics re-raised by `engine::pool`) is caught; the batch
+//!   gets error responses, the panic is counted in
+//!   [`ServerStats::worker_panics`], and the worker thread is *recycled* —
+//!   it replies, then replaces itself with a fresh thread
+//!   ([`ServerStats::workers_restarted`]) in case the panic poisoned
+//!   thread-local state. `shutdown()` completes with accurate stats either
+//!   way: counters live in shared atomics, not in thread-join results.
+//! * **Circuit breaker + graceful precision degradation**: per-deployment,
+//!   [`BreakerPolicy::trip_after`] consecutive batch failures trip the
+//!   breaker open ([`ServerStats::breaker_trips`]); while open, traffic is
+//!   routed to the first healthy fallback sibling — typically the same
+//!   checkpoint at INT4 or with dynamic scaling (see
+//!   `experiment::compile_serving_fleet`, which wires these automatically).
+//!   Degraded responses carry [`Response::degraded`] and name the sibling in
+//!   [`Response::deployment`]; a static-scaling sibling answers bit-exactly
+//!   what a directly-deployed copy would. After
+//!   [`BreakerPolicy::cooldown`] the breaker half-opens, probes the primary,
+//!   and closes again on success (degradation reverses itself).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -25,9 +66,38 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::tensor::{empirical_quantile, Tensor};
+
+/// Marker that classifies a model error as *transient* (retryable): the
+/// retry loop re-runs batches whose error message contains it, everything
+/// else fails fast. [`transient_error`] builds conforming errors; the fault
+/// injector ([`crate::coordinator::faults`]) uses it for injected flakes and
+/// brownouts. (String-based because the vendored `anyhow` shim carries a
+/// flattened message chain, not a downcastable payload.)
+pub const TRANSIENT_MARKER: &str = "(transient)";
+
+/// Build a retryable model error (see [`TRANSIENT_MARKER`]).
+pub fn transient_error(msg: impl std::fmt::Display) -> anyhow::Error {
+    anyhow!("{TRANSIENT_MARKER} {msg}")
+}
+
+/// Does this error self-classify as transient/retryable?
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.to_string().contains(TRANSIENT_MARKER)
+}
+
+/// Request priority for admission control: when the ingress queue crosses
+/// [`ServerConfig::shed_watermark`], `Low` requests are shed at `submit`
+/// while `Normal`/`High` traffic still queues (until the queue is full).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
 
 /// One inference request: a single image (C, H, W) + reply channel.
 pub struct Request {
@@ -37,6 +107,37 @@ pub struct Request {
     pub deployment: Option<String>,
     pub reply: Sender<Response>,
     pub submitted: Instant,
+    /// SLO deadline: past it the request is shed *before* execution with an
+    /// [`Outcome::Expired`] response. `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// Admission-control lane (see [`Priority`]).
+    pub priority: Priority,
+}
+
+impl Request {
+    /// A deadline-free, normal-priority request (the pre-SLO default).
+    pub fn new(image: Tensor, deployment: Option<String>, reply: Sender<Response>) -> Request {
+        Request {
+            image,
+            deployment,
+            reply,
+            submitted: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+        }
+    }
+}
+
+/// How a request left the server (every accepted request leaves exactly one
+/// way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Answered with logits.
+    Served,
+    /// Answered with a model/routing error.
+    Failed,
+    /// Deadline passed before execution; shed without spending model compute.
+    Expired,
 }
 
 /// Response: logits (or the error that prevented them) + timing breakdown.
@@ -45,8 +146,16 @@ pub struct Request {
 pub struct Response {
     /// Per-request logits on success, the model/routing error otherwise.
     pub result: Result<Vec<f32>, String>,
-    /// Deployment that handled (or rejected) the request.
+    /// Terminal state of the request (served / failed / expired).
+    pub outcome: Outcome,
+    /// Deployment that handled (or rejected) the request. Under breaker
+    /// degradation this is the *fallback sibling* that actually executed.
     pub deployment: String,
+    /// The request was served by a fallback sibling (breaker-open rerouting
+    /// or a retry that switched deployments), not the deployment it named.
+    pub degraded: bool,
+    /// Batch re-executions this request's batch needed before this response.
+    pub retries: u32,
     pub queue_ms: f64,
     /// Actual executed batch size (0 for requests rejected by the router).
     pub batch_size: usize,
@@ -65,11 +174,125 @@ impl Response {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// SLO lane: flush a pending batch early when the most urgent request in
+    /// it comes within this margin of its [`Request::deadline`] (instead of
+    /// waiting out `max_wait` and executing past the deadline). `None` =
+    /// deadline-agnostic flush.
+    pub slo_margin: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), slo_margin: None }
+    }
+}
+
+/// Retry policy for transient model errors (see [`TRANSIENT_MARKER`]):
+/// capped exponential backoff, preferring a healthy fallback sibling.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Maximum batch re-executions after the first failed attempt.
+    pub max_retries: u32,
+    /// Backoff before retry k (1-based) is `base_backoff * 2^(k-1)`, capped.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            base_backoff: Duration::from_micros(500),
+            max_backoff: Duration::from_millis(20),
+        }
+    }
+}
+
+impl RetryPolicy {
+    fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self.base_backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(16));
+        exp.min(self.max_backoff)
+    }
+}
+
+/// Per-deployment circuit-breaker policy: `trip_after` *consecutive* batch
+/// failures (errors, panics) open the breaker; while open the router sends
+/// the deployment's traffic to its fallback siblings. After `cooldown` the
+/// breaker half-opens and probes the primary — success closes it again.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerPolicy {
+    pub trip_after: u32,
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy { trip_after: 5, cooldown: Duration::from_millis(250) }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum BreakerState {
+    Closed { fails: u32 },
+    Open { until: Instant },
+    HalfOpen,
+}
+
+/// Consecutive-failure circuit breaker (interior mutability: the router
+/// consults it while workers record outcomes).
+struct Breaker {
+    policy: BreakerPolicy,
+    state: Mutex<BreakerState>,
+}
+
+impl Breaker {
+    fn new(policy: BreakerPolicy) -> Breaker {
+        Breaker { policy, state: Mutex::new(BreakerState::Closed { fails: 0 }) }
+    }
+
+    /// May traffic be routed to this deployment right now? An open breaker
+    /// whose cooldown elapsed transitions to half-open and admits a probe.
+    fn allows(&self, now: Instant) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match *st {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if now >= until {
+                    *st = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a batch outcome. Returns `true` iff this record tripped the
+    /// breaker open (closed->open on the threshold, or a failed half-open
+    /// probe re-opening it).
+    fn record(&self, ok: bool, now: Instant) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if ok {
+            *st = BreakerState::Closed { fails: 0 };
+            return false;
+        }
+        match *st {
+            BreakerState::Closed { fails } => {
+                let fails = fails + 1;
+                if fails >= self.policy.trip_after {
+                    *st = BreakerState::Open { until: now + self.policy.cooldown };
+                    true
+                } else {
+                    *st = BreakerState::Closed { fails };
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                *st = BreakerState::Open { until: now + self.policy.cooldown };
+                true
+            }
+            BreakerState::Open { .. } => false,
+        }
     }
 }
 
@@ -93,22 +316,63 @@ pub trait BatchModel: Send + Sync {
     }
 }
 
-/// Server statistics, aggregated across workers at shutdown.
+/// Server statistics, aggregated at shutdown. Counters live in shared
+/// atomics while the server runs, so nothing is lost when a worker thread
+/// panics and is replaced. Invariant: `served + errors + expired` = every
+/// request the server accepted — none go unanswered.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     /// Requests answered with logits.
     pub served: usize,
     /// Requests answered with an error response (model failure, unknown
-    /// deployment, shape mismatch). `served + errors` = every request the
-    /// server accepted — none are dropped.
+    /// deployment, shape mismatch, exhausted retries, contained panic).
     pub errors: usize,
+    /// Requests shed with [`Outcome::Expired`] before execution.
+    pub expired: usize,
     /// Requests refused at `submit` with `QueueFull` (backpressure).
     pub rejected: usize,
+    /// Low-priority requests shed at `submit` by admission control
+    /// ([`ServerConfig::shed_watermark`]).
+    pub shed: usize,
+    /// Requests answered only after >= 1 batch retry.
+    pub retried: usize,
+    /// Requests served by a fallback sibling instead of the deployment they
+    /// named (breaker-open rerouting or retry switching).
+    pub degraded: usize,
+    /// Circuit-breaker open transitions across all deployments.
+    pub breaker_trips: usize,
+    /// Model panics caught and converted to error responses.
+    pub worker_panics: usize,
+    /// Worker threads recycled after a contained panic.
+    pub workers_restarted: usize,
+    /// Router thread panics survived (requests drained with errors).
+    pub router_panics: usize,
+    /// Served responses that finished past their request deadline.
+    pub slo_misses: usize,
     pub batches: usize,
     pub mean_batch: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
     pub throughput_rps: f64,
+}
+
+impl ServerStats {
+    /// Every request the server accepted (each got exactly one response).
+    pub fn accepted(&self) -> usize {
+        self.served + self.errors + self.expired
+    }
+
+    /// Fraction of accepted requests that missed their SLO: expired before
+    /// execution, or served past their deadline. 0 when nothing was accepted.
+    pub fn slo_violation_rate(&self) -> f64 {
+        let n = self.accepted();
+        if n == 0 {
+            0.0
+        } else {
+            (self.expired + self.slo_misses) as f64 / n as f64
+        }
+    }
 }
 
 /// Nearest-rank (ceil) latency percentile, aligned with
@@ -133,25 +397,25 @@ struct QueueState<T> {
     closed: bool,
 }
 
-enum PushRejected<T> {
+pub(crate) enum PushRejected<T> {
     Full(T),
     Closed(T),
 }
 
-enum Popped<T> {
+pub(crate) enum Popped<T> {
     Item(T),
     TimedOut,
     Closed,
 }
 
-struct BoundedQueue<T> {
+pub(crate) struct BoundedQueue<T> {
     cap: usize,
     state: Mutex<QueueState<T>>,
     cv: Condvar,
 }
 
 impl<T> BoundedQueue<T> {
-    fn new(cap: usize) -> Self {
+    pub(crate) fn new(cap: usize) -> Self {
         BoundedQueue {
             cap: cap.max(1),
             state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
@@ -160,7 +424,7 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Non-blocking push; hands the value back on a full or closed queue.
-    fn try_push(&self, v: T) -> Result<(), PushRejected<T>> {
+    pub(crate) fn try_push(&self, v: T) -> Result<(), PushRejected<T>> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             return Err(PushRejected::Closed(v));
@@ -175,7 +439,7 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Blocking push: waits for space. `Err(v)` only if the queue closed.
-    fn push(&self, v: T) -> Result<(), T> {
+    pub(crate) fn push(&self, v: T) -> Result<(), T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
@@ -194,7 +458,7 @@ impl<T> BoundedQueue<T> {
     /// Blocking pop. `None` only once the queue is closed AND drained, so a
     /// closed queue still delivers everything already accepted (graceful
     /// shutdown needs exactly this).
-    fn pop(&self) -> Option<T> {
+    pub(crate) fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(v) = st.items.pop_front() {
@@ -210,7 +474,7 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Pop with a timeout (same closed-means-drained contract as `pop`).
-    fn pop_timeout(&self, dur: Duration) -> Popped<T> {
+    pub(crate) fn pop_timeout(&self, dur: Duration) -> Popped<T> {
         let deadline = Instant::now() + dur;
         let mut st = self.state.lock().unwrap();
         loop {
@@ -231,14 +495,14 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    fn close(&self) {
+    pub(crate) fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         drop(st);
         self.cv.notify_all();
     }
 
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.state.lock().unwrap().items.len()
     }
 }
@@ -252,35 +516,65 @@ impl<T> BoundedQueue<T> {
 pub struct ServerDeployment {
     pub name: String,
     pub model: Arc<dyn BatchModel>,
+    /// Sibling deployments (by name) able to serve this deployment's
+    /// traffic when it fails — retry targets and breaker-open fallbacks, in
+    /// preference order. `experiment::compile_serving_fleet` wires these to
+    /// the same backend's INT4 / dynamic-scaling variants automatically.
+    pub fallbacks: Vec<String>,
 }
 
 impl ServerDeployment {
     pub fn new(name: impl Into<String>, model: impl BatchModel + 'static) -> Self {
-        ServerDeployment { name: name.into(), model: Arc::new(model) }
+        ServerDeployment { name: name.into(), model: Arc::new(model), fallbacks: Vec::new() }
+    }
+
+    /// Builder: set the fallback siblings (preference order).
+    pub fn with_fallbacks(mut self, fallbacks: Vec<String>) -> Self {
+        self.fallbacks = fallbacks;
+        self
     }
 }
 
 /// Server sizing knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Worker threads executing batches (shared across all deployments).
     pub workers: usize,
     /// Ingress queue capacity; beyond it `submit` returns `QueueFull`.
     pub queue_depth: usize,
     pub policy: BatchPolicy,
+    /// Retry policy for transient model errors.
+    pub retry: RetryPolicy,
+    /// Per-deployment circuit-breaker policy.
+    pub breaker: BreakerPolicy,
+    /// Admission-control watermark: at/above this ingress depth, `Low`
+    /// priority submissions are shed with [`SubmitError::Shed`]. `None`
+    /// disables shedding (only `QueueFull` pushes back).
+    pub shed_watermark: Option<usize>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { workers: 2, queue_depth: 256, policy: BatchPolicy::default() }
+        ServerConfig {
+            workers: 2,
+            queue_depth: 256,
+            policy: BatchPolicy::default(),
+            retry: RetryPolicy::default(),
+            breaker: BreakerPolicy::default(),
+            shed_watermark: None,
+        }
     }
 }
 
-/// Why `submit` refused a request. Both variants hand the request back so
-/// the caller can retry (backpressure, not data loss).
+/// Why `submit` refused a request. Every variant hands the request back so
+/// the caller can retry, downgrade, or drop it (backpressure, not data
+/// loss).
 pub enum SubmitError {
     /// Bounded ingress queue at capacity.
     QueueFull(Request),
+    /// Low-priority request shed by admission control (queue depth crossed
+    /// [`ServerConfig::shed_watermark`]).
+    Shed(Request),
     /// The server is shutting down.
     ShutDown(Request),
 }
@@ -288,12 +582,16 @@ pub enum SubmitError {
 impl SubmitError {
     pub fn into_request(self) -> Request {
         match self {
-            SubmitError::QueueFull(r) | SubmitError::ShutDown(r) => r,
+            SubmitError::QueueFull(r) | SubmitError::Shed(r) | SubmitError::ShutDown(r) => r,
         }
     }
 
     pub fn is_queue_full(&self) -> bool {
         matches!(self, SubmitError::QueueFull(_))
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, SubmitError::Shed(_))
     }
 }
 
@@ -301,6 +599,7 @@ impl std::fmt::Debug for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
             SubmitError::QueueFull(_) => "SubmitError::QueueFull",
+            SubmitError::Shed(_) => "SubmitError::Shed",
             SubmitError::ShutDown(_) => "SubmitError::ShutDown",
         })
     }
@@ -310,6 +609,7 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
             SubmitError::QueueFull(_) => "server ingress queue full",
+            SubmitError::Shed(_) => "low-priority request shed under overload",
             SubmitError::ShutDown(_) => "server shutting down",
         })
     }
@@ -320,6 +620,8 @@ struct DeployEntry {
     /// Effective batch bound: min(policy.max_batch, model.max_batch()).
     max_batch: usize,
     input_shape: Option<Vec<usize>>,
+    breaker: Breaker,
+    fallbacks: Vec<String>,
 }
 
 struct Deployments {
@@ -327,55 +629,72 @@ struct Deployments {
 }
 
 struct WorkBatch {
+    /// Deployment that will *execute* the batch (under breaker degradation,
+    /// a fallback sibling of the one the requests named).
     deployment: String,
     requests: Vec<Request>,
 }
 
-/// Per-worker latency sample cap: beyond it the sample set is decimated 2:1
-/// and the record stride doubles, so a long-lived server keeps O(1) memory
-/// (an evenly-strided subsample still estimates p50/p95 faithfully) instead
+/// Latency sample cap: beyond it the sample set is decimated 2:1 and the
+/// record stride doubles, so a long-lived server keeps O(1) memory (an
+/// evenly-strided subsample still estimates p50/p95/p99 faithfully) instead
 /// of one f64 per request served since startup.
 const LATENCY_SAMPLE_CAP: usize = 1 << 16;
 
-struct WorkerStats {
-    latencies_ms: Vec<f64>,
-    lat_stride: usize,
-    lat_seen: usize,
-    served: usize,
-    errors: usize,
-    batches: usize,
-    batched_requests: usize,
+#[derive(Default)]
+struct LatencyReservoir {
+    samples_ms: Vec<f64>,
+    stride: usize,
+    seen: usize,
 }
 
-impl Default for WorkerStats {
-    fn default() -> Self {
-        WorkerStats {
-            latencies_ms: Vec::new(),
-            lat_stride: 1,
-            lat_seen: 0,
-            served: 0,
-            errors: 0,
-            batches: 0,
-            batched_requests: 0,
+impl LatencyReservoir {
+    fn record(&mut self, ms: f64) {
+        if self.stride == 0 {
+            self.stride = 1;
         }
-    }
-}
-
-impl WorkerStats {
-    fn record_latency(&mut self, ms: f64) {
-        self.lat_seen += 1;
-        if self.lat_seen % self.lat_stride != 0 {
+        self.seen += 1;
+        if self.seen % self.stride != 0 {
             return;
         }
-        if self.latencies_ms.len() >= LATENCY_SAMPLE_CAP {
+        if self.samples_ms.len() >= LATENCY_SAMPLE_CAP {
             let mut keep = false;
-            self.latencies_ms.retain(|_| {
+            self.samples_ms.retain(|_| {
                 keep = !keep;
                 keep
             });
-            self.lat_stride *= 2;
+            self.stride *= 2;
         }
-        self.latencies_ms.push(ms);
+        self.samples_ms.push(ms);
+    }
+}
+
+/// Live counters shared by the router, every worker (including respawned
+/// ones), and `submit`. Shared atomics — not per-thread state returned
+/// through `join()` — so a panicking worker can never take its drained
+/// stats down with it.
+#[derive(Default)]
+struct SharedStats {
+    served: AtomicUsize,
+    errors: AtomicUsize,
+    expired: AtomicUsize,
+    rejected: AtomicUsize,
+    shed: AtomicUsize,
+    retried: AtomicUsize,
+    degraded: AtomicUsize,
+    breaker_trips: AtomicUsize,
+    worker_panics: AtomicUsize,
+    workers_restarted: AtomicUsize,
+    router_panics: AtomicUsize,
+    slo_misses: AtomicUsize,
+    batches: AtomicUsize,
+    batched_requests: AtomicUsize,
+    latencies: Mutex<LatencyReservoir>,
+}
+
+impl SharedStats {
+    fn bump(&self, c: &AtomicUsize) {
+        c.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -385,9 +704,13 @@ impl WorkerStats {
 /// everything already accepted before returning the aggregated stats.
 pub struct Server {
     ingress: Arc<BoundedQueue<Request>>,
-    router: Option<std::thread::JoinHandle<usize>>,
-    workers: Vec<std::thread::JoinHandle<WorkerStats>>,
-    rejected: Arc<AtomicUsize>,
+    router: Option<std::thread::JoinHandle<()>>,
+    /// Live worker threads. A worker that recycles itself after a contained
+    /// panic registers its replacement here before exiting, so `shutdown`
+    /// always joins the current generation (loop-until-empty).
+    workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    stats: Arc<SharedStats>,
+    shed_watermark: Option<usize>,
     started: Instant,
 }
 
@@ -406,13 +729,22 @@ impl Server {
         // worker spawns.
         crate::engine::pool::global();
         let default_name = deployments[0].name.clone();
+        let names: Vec<String> = deployments.iter().map(|d| d.name.clone()).collect();
         let mut map = HashMap::new();
         for d in deployments {
-            let ServerDeployment { name, model } = d;
+            let ServerDeployment { name, model, fallbacks } = d;
             ensure!(model.max_batch() >= 1, "deployment {name:?}: max_batch must be >= 1");
+            for f in &fallbacks {
+                ensure!(
+                    names.contains(f) && f != &name,
+                    "deployment {name:?}: fallback {f:?} is not another deployment of this server"
+                );
+            }
             let entry = DeployEntry {
                 max_batch: cfg.policy.max_batch.min(model.max_batch()),
                 input_shape: model.input_shape(),
+                breaker: Breaker::new(cfg.breaker),
+                fallbacks,
                 model,
             };
             if map.insert(name.clone(), entry).is_some() {
@@ -420,28 +752,86 @@ impl Server {
             }
         }
         let deps = Arc::new(Deployments { map });
+        let stats = Arc::new(SharedStats::default());
         let ingress: Arc<BoundedQueue<Request>> = Arc::new(BoundedQueue::new(cfg.queue_depth));
         // Small work queue: enough to keep every worker busy while the
         // router batches the next wave, small enough that backpressure from
         // slow workers reaches the ingress queue (and then the clients).
-        let work: Arc<BoundedQueue<WorkBatch>> = Arc::new(BoundedQueue::new((cfg.workers * 2).max(2)));
+        let work: Arc<BoundedQueue<WorkBatch>> =
+            Arc::new(BoundedQueue::new((cfg.workers * 2).max(2)));
 
-        let workers = (0..cfg.workers)
-            .map(|_| {
-                let work = work.clone();
-                let deps = deps.clone();
-                std::thread::spawn(move || worker_loop(&work, &deps))
-            })
-            .collect();
+        let registry: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::with_capacity(cfg.workers)));
+        let ctx = WorkerCtx {
+            work: work.clone(),
+            deps: deps.clone(),
+            stats: stats.clone(),
+            registry: registry.clone(),
+            retry: cfg.retry,
+            default_name: Arc::new(default_name.clone()),
+        };
+        {
+            let mut reg = registry.lock().unwrap();
+            for i in 0..cfg.workers {
+                let ctx = ctx.clone();
+                let h = std::thread::Builder::new()
+                    .name(format!("server-worker-{i}"))
+                    .spawn(move || worker_main(ctx))
+                    .expect("spawn server worker");
+                reg.push(h);
+            }
+        }
         let router = {
             let ingress = ingress.clone();
-            std::thread::spawn(move || router_loop(&ingress, &work, &deps, cfg.policy, &default_name))
+            let work = work.clone();
+            let stats = stats.clone();
+            let policy = cfg.policy;
+            std::thread::Builder::new()
+                .name("server-router".into())
+                .spawn(move || {
+                    // `pending` lives OUTSIDE the containment boundary so a
+                    // router panic cannot drop in-flight reply channels
+                    let mut pending: HashMap<String, PendingBatch> = HashMap::new();
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        router_loop(
+                            &ingress,
+                            &work,
+                            &deps,
+                            policy,
+                            &default_name,
+                            &stats,
+                            &mut pending,
+                        )
+                    }));
+                    if run.is_err() {
+                        // Contain a router panic: stop accepting, answer
+                        // everything pending or queued with an error response
+                        // (reply channels must never be abandoned), and let
+                        // the workers drain what was already batched.
+                        stats.bump(&stats.router_panics);
+                        ingress.close();
+                        for (_, batch) in pending.drain() {
+                            for req in batch.requests {
+                                stats.bump(&stats.errors);
+                                reject_request(req, "router", "router thread panicked".to_string());
+                            }
+                        }
+                        while let Some(req) = ingress.pop() {
+                            stats.bump(&stats.errors);
+                            reject_request(req, "router", "router thread panicked".to_string());
+                        }
+                    }
+                    // idempotent: the normal router path already closed it
+                    work.close();
+                })
+                .expect("spawn server router")
         };
         Ok(Server {
             ingress,
             router: Some(router),
-            workers,
-            rejected: Arc::new(AtomicUsize::new(0)),
+            workers: registry,
+            stats,
+            shed_watermark: cfg.shed_watermark,
             started: Instant::now(),
         })
     }
@@ -452,13 +842,20 @@ impl Server {
     }
 
     /// Enqueue a request. Non-blocking: a full ingress queue surfaces as
-    /// `QueueFull` (with the request handed back) instead of unbounded
+    /// `QueueFull`, and a low-priority request over the shed watermark as
+    /// `Shed` (each with the request handed back) instead of unbounded
     /// buffering — the caller decides whether to retry, shed, or block.
     pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        if let Some(w) = self.shed_watermark {
+            if req.priority == Priority::Low && self.ingress.len() >= w {
+                self.stats.bump(&self.stats.shed);
+                return Err(SubmitError::Shed(req));
+            }
+        }
         match self.ingress.try_push(req) {
             Ok(()) => Ok(()),
             Err(PushRejected::Full(r)) => {
-                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.stats.bump(&self.stats.rejected);
                 Err(SubmitError::QueueFull(r))
             }
             Err(PushRejected::Closed(r)) => Err(SubmitError::ShutDown(r)),
@@ -471,12 +868,27 @@ impl Server {
         image: Tensor,
         deployment: Option<&str>,
     ) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_image_with(image, deployment, None, Priority::Normal)
+    }
+
+    /// [`Server::submit_image`] with the SLO knobs exposed: an absolute
+    /// deadline (expired requests are shed before execution) and a priority
+    /// lane for admission control.
+    pub fn submit_image_with(
+        &self,
+        image: Tensor,
+        deployment: Option<&str>,
+        deadline: Option<Instant>,
+        priority: Priority,
+    ) -> Result<Receiver<Response>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         self.submit(Request {
             image,
             deployment: deployment.map(|s| s.to_string()),
             reply: tx,
             submitted: Instant::now(),
+            deadline,
+            priority,
         })?;
         Ok(rx)
     }
@@ -488,28 +900,67 @@ impl Server {
 
     /// Graceful shutdown: stop accepting, drain every accepted request
     /// through the workers (partial batches included), then aggregate stats.
+    ///
+    /// Panic-tolerant: a panicked router or worker thread is *recorded*
+    /// (`router_panics` / `worker_panics`), not propagated — the stats of
+    /// every healthy thread survive because counters live in shared atomics,
+    /// not in join results.
     pub fn shutdown(mut self) -> ServerStats {
         self.ingress.close();
-        let router_errors = self
-            .router
-            .take()
-            .map(|h| h.join().expect("server router thread panicked"))
-            .unwrap_or(0);
-        let mut latencies: Vec<f64> = Vec::new();
-        let mut stats = ServerStats { errors: router_errors, ..ServerStats::default() };
-        for h in std::mem::take(&mut self.workers) {
-            let ws = h.join().expect("server worker thread panicked");
-            latencies.extend(ws.latencies_ms);
-            stats.served += ws.served;
-            stats.errors += ws.errors;
-            stats.batches += ws.batches;
-            stats.mean_batch += ws.batched_requests as f64;
+        if let Some(h) = self.router.take() {
+            if h.join().is_err() {
+                // double panic in the router containment itself; count it
+                self.stats.bump(&self.stats.router_panics);
+            }
         }
-        stats.rejected = self.rejected.load(Ordering::Relaxed);
-        stats.mean_batch =
-            if stats.batches == 0 { 0.0 } else { stats.mean_batch / stats.batches as f64 };
+        // Join the worker generation(s): a worker that recycles itself
+        // registers its replacement before exiting, so looping until the
+        // registry is empty observes every live thread.
+        loop {
+            let handle = self.workers.lock().unwrap().pop();
+            match handle {
+                Some(h) => {
+                    if h.join().is_err() {
+                        // escaped the containment in worker_main; count it —
+                        // its served/error counts are already in the shared
+                        // atomics, nothing is lost
+                        self.stats.bump(&self.stats.worker_panics);
+                    }
+                }
+                None => break,
+            }
+        }
+        let s = &self.stats;
+        let ld = Ordering::Relaxed;
+        let latencies = {
+            let r = s.latencies.lock().unwrap();
+            r.samples_ms.clone()
+        };
+        let batches = s.batches.load(ld);
+        let mut stats = ServerStats {
+            served: s.served.load(ld),
+            errors: s.errors.load(ld),
+            expired: s.expired.load(ld),
+            rejected: s.rejected.load(ld),
+            shed: s.shed.load(ld),
+            retried: s.retried.load(ld),
+            degraded: s.degraded.load(ld),
+            breaker_trips: s.breaker_trips.load(ld),
+            worker_panics: s.worker_panics.load(ld),
+            workers_restarted: s.workers_restarted.load(ld),
+            router_panics: s.router_panics.load(ld),
+            slo_misses: s.slo_misses.load(ld),
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                s.batched_requests.load(ld) as f64 / batches as f64
+            },
+            ..ServerStats::default()
+        };
         stats.p50_ms = latency_percentile(&latencies, 0.50);
         stats.p95_ms = latency_percentile(&latencies, 0.95);
+        stats.p99_ms = latency_percentile(&latencies, 0.99);
         stats.throughput_rps =
             stats.served as f64 / self.started.elapsed().as_secs_f64().max(1e-9);
         stats
@@ -533,22 +984,44 @@ struct PendingBatch {
     deadline: Instant,
 }
 
-/// Reply immediately with a routing error (unknown deployment / bad shape).
-/// The reply channel is never abandoned — this is an error *response*.
+/// Reply immediately with a routing error (unknown deployment / bad shape /
+/// breaker open with no healthy fallback). The reply channel is never
+/// abandoned — this is an error *response*.
 fn reject_request(req: Request, deployment: &str, msg: String) {
     let now = Instant::now();
     let ms = now.duration_since(req.submitted).as_secs_f64() * 1e3;
     let _ = req.reply.send(Response {
         result: Err(msg),
+        outcome: Outcome::Failed,
         deployment: deployment.to_string(),
+        degraded: false,
+        retries: 0,
         queue_ms: ms,
         batch_size: 0,
         total_ms: ms,
     });
 }
 
-/// Route one request into its deployment's pending batch (flushing the batch
-/// when full). Returns 1 if the request was rejected with an error response.
+/// Shed a deadline-expired request before execution ([`Outcome::Expired`]).
+fn expire_request(req: Request, deployment: &str, stats: &SharedStats) {
+    stats.bump(&stats.expired);
+    let now = Instant::now();
+    let ms = now.duration_since(req.submitted).as_secs_f64() * 1e3;
+    let _ = req.reply.send(Response {
+        result: Err("deadline expired before execution".to_string()),
+        outcome: Outcome::Expired,
+        deployment: deployment.to_string(),
+        degraded: false,
+        retries: 0,
+        queue_ms: ms,
+        batch_size: 0,
+        total_ms: ms,
+    });
+}
+
+/// Route one request into a deployment's pending batch (flushing the batch
+/// when full). Deadline-expired requests are shed here; a tripped breaker
+/// reroutes to the first healthy fallback sibling (graceful degradation).
 fn route_request(
     req: Request,
     pending: &mut HashMap<String, PendingBatch>,
@@ -556,12 +1029,45 @@ fn route_request(
     work: &BoundedQueue<WorkBatch>,
     policy: BatchPolicy,
     default_name: &str,
-) -> usize {
-    let name = req.deployment.clone().unwrap_or_else(|| default_name.to_string());
-    let Some(dep) = deps.map.get(&name) else {
+    stats: &SharedStats,
+) {
+    let requested = req.deployment.clone().unwrap_or_else(|| default_name.to_string());
+    let Some(primary) = deps.map.get(&requested) else {
         let known: Vec<&str> = deps.map.keys().map(|k| k.as_str()).collect();
-        reject_request(req, &name, format!("unknown deployment {name:?} (have {known:?})"));
-        return 1;
+        stats.bump(&stats.errors);
+        let msg = format!("unknown deployment {requested:?} (have {known:?})");
+        reject_request(req, &requested, msg);
+        return;
+    };
+    let now = Instant::now();
+    // SLO shedding: don't spend queue space or compute on a request that is
+    // already past its deadline
+    if req.deadline.is_some_and(|d| now >= d) {
+        expire_request(req, &requested, stats);
+        return;
+    }
+    // Breaker-aware target selection: an open breaker reroutes to the first
+    // healthy fallback sibling (degraded-precision serving). With no healthy
+    // fallback, fail fast — protecting the browning-out backend is the point.
+    let (name, dep) = if primary.breaker.allows(now) {
+        (requested.clone(), primary)
+    } else {
+        match primary
+            .fallbacks
+            .iter()
+            .find_map(|f| deps.map.get(f).filter(|d| d.breaker.allows(now)).map(|d| (f.clone(), d)))
+        {
+            Some(t) => t,
+            None => {
+                stats.bump(&stats.errors);
+                reject_request(
+                    req,
+                    &requested,
+                    format!("circuit breaker open for {requested:?} and no healthy fallback"),
+                );
+                return;
+            }
+        }
     };
     // shape screening: a statically declared input shape wins; otherwise a
     // request must at least match the batch it would join
@@ -571,8 +1077,9 @@ fn route_request(
                 "deployment {name}: request shape {:?} != expected input shape {expected:?}",
                 req.image.shape
             );
+            stats.bump(&stats.errors);
             reject_request(req, &name, msg);
-            return 1;
+            return;
         }
     } else if let Some(p) = pending.get(&name) {
         if p.requests[0].image.shape != req.image.shape {
@@ -580,31 +1087,38 @@ fn route_request(
                 "deployment {name}: request shape {:?} does not match in-flight batch shape {:?}",
                 req.image.shape, p.requests[0].image.shape
             );
+            stats.bump(&stats.errors);
             reject_request(req, &name, msg);
-            return 1;
+            return;
         }
     }
     let entry = pending.entry(name.clone()).or_insert_with(|| PendingBatch {
         requests: Vec::new(),
-        deadline: Instant::now() + policy.max_wait,
+        deadline: now + policy.max_wait,
     });
+    // SLO lane: a deadline-carrying request pulls the batch flush forward so
+    // it ships `slo_margin` before the most urgent deadline in the batch
+    if let (Some(margin), Some(dl)) = (policy.slo_margin, req.deadline) {
+        let target = dl.checked_sub(margin).unwrap_or(now).max(now);
+        entry.deadline = entry.deadline.min(target);
+    }
     entry.requests.push(req);
     if entry.requests.len() >= dep.max_batch {
         let batch = pending.remove(&name).expect("pending batch just filled");
         let _ = work.push(WorkBatch { deployment: name, requests: batch.requests });
     }
-    0
 }
 
+#[allow(clippy::too_many_arguments)]
 fn router_loop(
     ingress: &BoundedQueue<Request>,
     work: &BoundedQueue<WorkBatch>,
     deps: &Deployments,
     policy: BatchPolicy,
     default_name: &str,
-) -> usize {
-    let mut pending: HashMap<String, PendingBatch> = HashMap::new();
-    let mut rejected_invalid = 0usize;
+    stats: &SharedStats,
+    pending: &mut HashMap<String, PendingBatch>,
+) {
     loop {
         let next_deadline = pending.values().map(|p| p.deadline).min();
         let popped = match next_deadline {
@@ -624,13 +1138,12 @@ fn router_loop(
         let mut closed = false;
         match popped {
             Popped::Item(req) => {
-                rejected_invalid +=
-                    route_request(req, &mut pending, deps, work, policy, default_name);
+                route_request(req, pending, deps, work, policy, default_name, stats);
             }
             Popped::TimedOut => {}
             Popped::Closed => closed = true,
         }
-        // flush deadline-expired partial batches
+        // flush deadline-expired partial batches (max_wait or SLO lane)
         let now = Instant::now();
         let expired: Vec<String> = pending
             .iter()
@@ -652,38 +1165,88 @@ fn router_loop(
         let _ = work.push(WorkBatch { deployment: name, requests: batch.requests });
     }
     work.close();
-    rejected_invalid
 }
 
 // ---------------------------------------------------------------------------
-// Workers
+// Workers (supervised: a contained panic recycles the thread)
 // ---------------------------------------------------------------------------
 
-fn worker_loop(work: &BoundedQueue<WorkBatch>, deps: &Deployments) -> WorkerStats {
-    let mut stats = WorkerStats::default();
-    while let Some(batch) = work.pop() {
-        match deps.map.get(&batch.deployment) {
-            Some(dep) => run_one_batch(dep.model.as_ref(), &batch.deployment, batch.requests, &mut stats),
-            None => {
-                // unreachable: the router only enqueues validated names
-                for req in batch.requests {
-                    stats.errors += 1;
-                    reject_request(req, &batch.deployment, "deployment vanished".to_string());
-                }
-            }
+/// Everything a worker thread needs — clonable so a worker can spawn its own
+/// replacement after containing a model panic.
+#[derive(Clone)]
+struct WorkerCtx {
+    work: Arc<BoundedQueue<WorkBatch>>,
+    deps: Arc<Deployments>,
+    stats: Arc<SharedStats>,
+    registry: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    retry: RetryPolicy,
+    default_name: Arc<String>,
+}
+
+#[derive(PartialEq, Eq)]
+enum BatchExit {
+    Clean,
+    /// The model panicked under this batch. The batch was still answered
+    /// (error responses), but the thread recycles itself — the panic may
+    /// have poisoned thread-local state (scratch arenas, allocator caches).
+    Panicked,
+}
+
+fn worker_main(ctx: WorkerCtx) {
+    while let Some(batch) = ctx.work.pop() {
+        if run_one_batch(&ctx, batch) == BatchExit::Panicked {
+            ctx.stats.bump(&ctx.stats.workers_restarted);
+            let replacement = ctx.clone();
+            let h = std::thread::Builder::new()
+                .name("server-worker-respawn".into())
+                .spawn(move || worker_main(replacement))
+                .expect("respawn server worker");
+            // register before exiting: shutdown's join loop must observe the
+            // replacement no later than this thread's own exit
+            ctx.registry.lock().unwrap().push(h);
+            return;
         }
     }
-    stats
 }
 
-fn run_one_batch(
-    model: &dyn BatchModel,
-    deployment: &str,
-    requests: Vec<Request>,
-    stats: &mut WorkerStats,
-) {
-    let n = requests.len();
-    let per_shape = requests[0].image.shape.clone();
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Execute one batch with deadline shedding, retries, breaker accounting and
+/// panic containment. Every request in the batch is answered on every path.
+fn run_one_batch(ctx: &WorkerCtx, batch: WorkBatch) -> BatchExit {
+    let WorkBatch { deployment: batch_name, requests } = batch;
+    let stats = &*ctx.stats;
+    let Some(first_entry) = ctx.deps.map.get(&batch_name) else {
+        // unreachable: the router only enqueues validated names
+        for req in requests {
+            stats.bump(&stats.errors);
+            reject_request(req, &batch_name, "deployment vanished".to_string());
+        }
+        return BatchExit::Clean;
+    };
+    // shed expired requests one final time, right before execution
+    let now = Instant::now();
+    let mut live: Vec<Request> = Vec::with_capacity(requests.len());
+    for req in requests {
+        if req.deadline.is_some_and(|d| now >= d) {
+            expire_request(req, &batch_name, stats);
+        } else {
+            live.push(req);
+        }
+    }
+    if live.is_empty() {
+        return BatchExit::Clean;
+    }
+    let n = live.len();
+    let per_shape = live[0].image.shape.clone();
     let sz: usize = per_shape.iter().product();
     // the batch tensor is exactly (n, ...): no zero-padding to max_batch,
     // so a partial batch pays partial compute
@@ -691,53 +1254,160 @@ fn run_one_batch(
     batch_shape.push(n);
     batch_shape.extend_from_slice(&per_shape);
     let mut images = Tensor::zeros(&batch_shape);
-    for (i, r) in requests.iter().enumerate() {
+    for (i, r) in live.iter().enumerate() {
         images.data[i * sz..(i + 1) * sz].copy_from_slice(&r.image.data);
     }
-    let exec_start = Instant::now();
-    let result = model.run_batch(&images).and_then(|logits| {
-        ensure!(
-            !logits.shape.is_empty() && logits.shape[0] == n,
-            "deployment {deployment}: model returned logits {:?} for a batch of {n}",
-            logits.shape
-        );
-        Ok(logits)
-    });
-    let done = Instant::now();
-    stats.batches += 1;
-    stats.batched_requests += n;
-    match result {
-        Ok(logits) => {
-            let k = logits.data.len() / n;
-            for (i, r) in requests.into_iter().enumerate() {
-                let total_ms = done.duration_since(r.submitted).as_secs_f64() * 1e3;
-                stats.record_latency(total_ms);
-                stats.served += 1;
-                let _ = r.reply.send(Response {
-                    result: Ok(logits.data[i * k..(i + 1) * k].to_vec()),
-                    deployment: deployment.to_string(),
-                    queue_ms: exec_start.duration_since(r.submitted).as_secs_f64() * 1e3,
-                    batch_size: n,
-                    total_ms,
+    let mut serving_name = batch_name;
+    let mut serving = first_entry;
+    let mut attempt: u32 = 0;
+    loop {
+        let exec_start = Instant::now();
+        // Containment boundary: a panicking model (or a kernel-chunk panic
+        // re-raised by engine::pool) becomes an error response, not a dead
+        // worker with abandoned reply channels.
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serving.model.run_batch(&images)
+        }));
+        let done = Instant::now();
+        match run {
+            Ok(result) => {
+                let result = result.and_then(|logits| {
+                    ensure!(
+                        !logits.shape.is_empty() && logits.shape[0] == n,
+                        "deployment {serving_name}: model returned logits {:?} for a batch of {n}",
+                        logits.shape
+                    );
+                    Ok(logits)
                 });
+                match result {
+                    Ok(logits) => {
+                        serving.breaker.record(true, done);
+                        reply_batch(
+                            ctx,
+                            &serving_name,
+                            live,
+                            Ok(logits),
+                            exec_start,
+                            done,
+                            attempt,
+                            n,
+                        );
+                        return BatchExit::Clean;
+                    }
+                    Err(e) => {
+                        if serving.breaker.record(false, done) {
+                            stats.bump(&stats.breaker_trips);
+                        }
+                        if is_transient(&e) && attempt < ctx.retry.max_retries {
+                            attempt += 1;
+                            std::thread::sleep(ctx.retry.backoff(attempt));
+                            // prefer a healthy replica/sibling over hammering
+                            // the deployment that just failed
+                            if let Some((name, dep)) = pick_fallback(ctx, &serving_name) {
+                                serving_name = name;
+                                serving = dep;
+                            }
+                            continue;
+                        }
+                        reply_batch(
+                            ctx,
+                            &serving_name,
+                            live,
+                            Err(e.to_string()),
+                            exec_start,
+                            done,
+                            attempt,
+                            n,
+                        );
+                        return BatchExit::Clean;
+                    }
+                }
+            }
+            Err(payload) => {
+                let msg = panic_message(payload);
+                if serving.breaker.record(false, done) {
+                    stats.bump(&stats.breaker_trips);
+                }
+                stats.bump(&stats.worker_panics);
+                reply_batch(
+                    ctx,
+                    &serving_name,
+                    live,
+                    Err(format!("worker panic contained: {msg}")),
+                    exec_start,
+                    done,
+                    attempt,
+                    n,
+                );
+                return BatchExit::Panicked;
             }
         }
-        Err(e) => {
-            // the model failed: every request in the batch gets an error
-            // response — reply channels are never silently dropped
-            let msg = e.to_string();
-            for r in requests {
-                let total_ms = done.duration_since(r.submitted).as_secs_f64() * 1e3;
-                stats.errors += 1;
-                let _ = r.reply.send(Response {
-                    result: Err(msg.clone()),
-                    deployment: deployment.to_string(),
-                    queue_ms: exec_start.duration_since(r.submitted).as_secs_f64() * 1e3,
-                    batch_size: n,
-                    total_ms,
-                });
+    }
+}
+
+/// First fallback sibling of `current` whose breaker admits traffic.
+fn pick_fallback<'d>(ctx: &'d WorkerCtx, current: &str) -> Option<(String, &'d DeployEntry)> {
+    let entry = ctx.deps.map.get(current)?;
+    let now = Instant::now();
+    entry
+        .fallbacks
+        .iter()
+        .filter(|f| f.as_str() != current)
+        .find_map(|f| ctx.deps.map.get(f).filter(|d| d.breaker.allows(now)).map(|d| (f.clone(), d)))
+}
+
+/// Answer every request in an executed batch (success or failure), updating
+/// the shared counters: served/errors, retried, degraded, SLO misses.
+#[allow(clippy::too_many_arguments)]
+fn reply_batch(
+    ctx: &WorkerCtx,
+    serving_name: &str,
+    requests: Vec<Request>,
+    result: Result<Tensor, String>,
+    exec_start: Instant,
+    done: Instant,
+    retries: u32,
+    n: usize,
+) {
+    let stats = &*ctx.stats;
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.batched_requests.fetch_add(n, Ordering::Relaxed);
+    let k = result.as_ref().map(|l| l.data.len() / n).unwrap_or(0);
+    for (i, r) in requests.into_iter().enumerate() {
+        let requested = r.deployment.as_deref().unwrap_or(&ctx.default_name);
+        let degraded = requested != serving_name;
+        let total_ms = done.duration_since(r.submitted).as_secs_f64() * 1e3;
+        let queue_ms = exec_start.duration_since(r.submitted).as_secs_f64() * 1e3;
+        let (per_req, outcome) = match &result {
+            Ok(logits) => (Ok(logits.data[i * k..(i + 1) * k].to_vec()), Outcome::Served),
+            Err(msg) => (Err(msg.clone()), Outcome::Failed),
+        };
+        match outcome {
+            Outcome::Served => {
+                stats.bump(&stats.served);
+                stats.latencies.lock().unwrap().record(total_ms);
+                if r.deadline.is_some_and(|d| done > d) {
+                    stats.bump(&stats.slo_misses);
+                }
             }
+            _ => stats.bump(&stats.errors),
         }
+        if retries > 0 {
+            stats.bump(&stats.retried);
+        }
+        if degraded {
+            stats.bump(&stats.degraded);
+        }
+        let _ = r.reply.send(Response {
+            result: per_req,
+            outcome,
+            deployment: serving_name.to_string(),
+            degraded,
+            retries,
+            queue_ms,
+            batch_size: n,
+            total_ms,
+        });
     }
 }
 
@@ -845,7 +1515,12 @@ mod tests {
             ServerConfig {
                 workers: 2,
                 queue_depth: 64,
-                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(2),
+                    slo_margin: None,
+                },
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -861,11 +1536,15 @@ mod tests {
             assert_eq!(logits[0], (i * 4) as f32);
             assert_eq!(logits[1], -(*i as f32) * 4.0);
             assert_eq!(resp.deployment, "default");
+            assert_eq!(resp.outcome, Outcome::Served);
+            assert!(!resp.degraded);
         }
         let stats = server.shutdown();
         assert_eq!(stats.served, 16);
         assert_eq!(stats.errors, 0);
         assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.expired, 0);
+        assert_eq!(stats.worker_panics, 0);
         assert!(stats.batches <= 16);
         assert!(stats.mean_batch >= 1.0);
     }
@@ -877,7 +1556,12 @@ mod tests {
             ServerConfig {
                 workers: 1,
                 queue_depth: 8,
-                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    slo_margin: None,
+                },
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -894,9 +1578,113 @@ mod tests {
         let resp = recv_ok(&rx);
         let err = resp.result.expect_err("unknown deployment must be an error response");
         assert!(err.contains("unknown deployment"), "{err}");
+        assert_eq!(resp.outcome, Outcome::Failed);
         let stats = server.shutdown();
         assert_eq!(stats.errors, 1);
         assert_eq!(stats.served, 0);
+    }
+
+    #[test]
+    fn expired_request_is_shed_before_execution() {
+        let server = Server::single(Toy, ServerConfig::default()).unwrap();
+        let past = Instant::now() - Duration::from_millis(5);
+        let rx = server
+            .submit_image_with(Tensor::full(&[1, 2, 2], 1.0), None, Some(past), Priority::Normal)
+            .unwrap();
+        let resp = recv_ok(&rx);
+        assert_eq!(resp.outcome, Outcome::Expired);
+        assert_eq!(resp.batch_size, 0, "expired requests must not reach execution");
+        assert!(resp.result.is_err());
+        let stats = server.shutdown();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.accepted(), 1);
+        assert_eq!(stats.slo_violation_rate(), 1.0);
+    }
+
+    #[test]
+    fn slo_margin_flushes_batch_before_deadline() {
+        // max_wait is far longer than the deadline: only the SLO lane can
+        // ship this partial batch in time
+        let server = Server::single(
+            Toy,
+            ServerConfig {
+                workers: 1,
+                queue_depth: 8,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_secs(30),
+                    slo_margin: Some(Duration::from_millis(40)),
+                },
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_millis(80);
+        let rx = server
+            .submit_image_with(
+                Tensor::full(&[1, 2, 2], 2.0),
+                None,
+                Some(deadline),
+                Priority::Normal,
+            )
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(2)).expect("SLO lane must flush early");
+        assert_eq!(resp.outcome, Outcome::Served);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.slo_misses, 0, "flushed within the SLO margin");
+    }
+
+    #[test]
+    fn low_priority_shed_at_watermark() {
+        // worker is slow, queue fills: low-priority submissions over the
+        // watermark come back as Shed (not QueueFull), high priority queues
+        struct Stall;
+        impl BatchModel for Stall {
+            fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok(Tensor::zeros(&[images.shape[0], 1]))
+            }
+            fn max_batch(&self) -> usize {
+                1
+            }
+        }
+        let server = Server::single(
+            Stall,
+            ServerConfig {
+                workers: 1,
+                queue_depth: 64,
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                    slo_margin: None,
+                },
+                shed_watermark: Some(2),
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut shed = 0usize;
+        let mut accepted = Vec::new();
+        for i in 0..24 {
+            let pri = if i % 2 == 0 { Priority::Low } else { Priority::High };
+            match server.submit_image_with(Tensor::full(&[1, 2, 2], i as f32), None, None, pri) {
+                Ok(rx) => accepted.push(rx),
+                Err(e) => {
+                    assert!(e.is_shed(), "only admission-control sheds expected: {e}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "low-priority traffic over the watermark must be shed");
+        for rx in &accepted {
+            recv_ok(rx);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, shed);
+        assert_eq!(stats.served, accepted.len());
     }
 
     /// Always answers with a batch dimension of 1, whatever it was given —
@@ -921,7 +1709,12 @@ mod tests {
                 queue_depth: 8,
                 // max_batch 2 + generous deadline: the two requests below are
                 // guaranteed to execute as one batch of 2
-                policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(500) },
+                policy: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(500),
+                    slo_margin: None,
+                },
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -971,5 +1764,107 @@ mod tests {
         q.try_push(3).map_err(|_| ()).unwrap();
         assert_eq!(q.len(), 2);
         q.close();
+    }
+
+    #[test]
+    fn bounded_queue_pop_timeout_contract() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Popped::TimedOut));
+        assert!(t0.elapsed() >= Duration::from_millis(5), "timeout must actually wait");
+        q.try_push(7).map_err(|_| ()).unwrap();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Popped::Item(7)));
+        q.try_push(8).map_err(|_| ()).unwrap();
+        q.close();
+        // closed-means-drained: buffered items still come out, then Closed
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Popped::Item(8)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Popped::Closed));
+    }
+
+    #[test]
+    fn bounded_queue_pop_timeout_under_racing_pushers() {
+        // the router's exact loop shape: one consumer popping with short
+        // timeouts while several producers push in bursts with gaps longer
+        // than the timeout — every item must arrive exactly once, with
+        // TimedOut wakeups in the gaps and Closed only after the drain
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(64));
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let (mut got, mut timeouts) = (Vec::new(), 0usize);
+                loop {
+                    match q.pop_timeout(Duration::from_millis(1)) {
+                        Popped::Item(v) => got.push(v),
+                        Popped::TimedOut => timeouts += 1,
+                        Popped::Closed => break,
+                    }
+                }
+                (got, timeouts)
+            })
+        };
+        std::thread::scope(|s| {
+            for p in 0..4u32 {
+                let q = &q;
+                s.spawn(move || {
+                    for i in 0..50u32 {
+                        if i % 8 == 0 {
+                            std::thread::sleep(Duration::from_millis(3));
+                        }
+                        q.push(p * 100 + i).map_err(|_| ()).unwrap();
+                    }
+                });
+            }
+        });
+        q.close();
+        let (mut got, timeouts) = consumer.join().unwrap();
+        got.sort_unstable();
+        let mut want: Vec<u32> = (0..4).flat_map(|p| (0..50).map(move |i| p * 100 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "every pushed item pops exactly once");
+        assert!(timeouts > 0, "1 ms pops against 3 ms production gaps must time out");
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_closes() {
+        let b = Breaker::new(BreakerPolicy { trip_after: 3, cooldown: Duration::from_millis(10) });
+        let t0 = Instant::now();
+        assert!(b.allows(t0));
+        assert!(!b.record(false, t0));
+        assert!(!b.record(false, t0));
+        assert!(b.record(false, t0), "third consecutive failure must trip");
+        assert!(!b.allows(t0), "open breaker rejects before cooldown");
+        let later = t0 + Duration::from_millis(11);
+        assert!(b.allows(later), "cooldown elapsed: half-open probe admitted");
+        assert!(!b.record(true, later), "a successful probe is not a trip");
+        assert!(b.allows(later + Duration::from_millis(1)), "probe success closed the breaker");
+        // failed probe re-opens
+        b.record(false, later);
+        b.record(false, later);
+        b.record(false, later);
+        assert!(!b.allows(later));
+        let again = later + Duration::from_millis(11);
+        assert!(b.allows(again));
+        assert!(b.record(false, again), "failed half-open probe re-trips");
+        assert!(!b.allows(again));
+    }
+
+    #[test]
+    fn transient_marker_classifies() {
+        assert!(is_transient(&transient_error("backend flake")));
+        assert!(!is_transient(&anyhow!("shape mismatch")));
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_exponential() {
+        let r = RetryPolicy {
+            max_retries: 8,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(5),
+        };
+        assert_eq!(r.backoff(1), Duration::from_millis(1));
+        assert_eq!(r.backoff(2), Duration::from_millis(2));
+        assert_eq!(r.backoff(3), Duration::from_millis(4));
+        assert_eq!(r.backoff(4), Duration::from_millis(5), "capped at max_backoff");
+        assert_eq!(r.backoff(30), Duration::from_millis(5));
     }
 }

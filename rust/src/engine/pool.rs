@@ -80,6 +80,22 @@ pub struct ThreadPool {
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// At least one chunk of a parallel kernel panicked. The panic was contained
+/// on the worker that hit it (the rest of the task still completed), and the
+/// pool itself stays healthy — callers that can degrade gracefully (the
+/// serving tier's supervised workers) use [`ThreadPool::try_run`] and turn
+/// this into an error response instead of a dead thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPanicked;
+
+impl std::fmt::Display for ChunkPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("engine pool: a parallel kernel chunk panicked")
+    }
+}
+
+impl std::error::Error for ChunkPanicked {}
+
 impl ThreadPool {
     /// Build a pool with `threads` total execution lanes: `threads - 1`
     /// parked workers plus the submitting thread itself. `threads <= 1`
@@ -111,16 +127,33 @@ impl ThreadPool {
     /// Execute `f(0..chunks)` across the pool, returning when every chunk
     /// has finished. The submitting thread claims chunks too, so progress
     /// never depends on a worker being free. Allocation-free in steady
-    /// state. Panics (after completing the task) if any chunk panicked.
+    /// state. Panics (after completing the task) if any chunk panicked —
+    /// use [`ThreadPool::try_run`] to observe that as a `Result` instead.
     pub fn run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if let Err(e) = self.try_run(chunks, f) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`ThreadPool::run`] with the panic containment *exposed*: every chunk
+    /// still executes (a panicking chunk never takes its siblings or the
+    /// pool down), but a chunk panic surfaces as `Err(ChunkPanicked)` on the
+    /// submitter rather than a re-raised panic. This is what lets a serving
+    /// worker convert a poisoned kernel into an error response and keep its
+    /// thread.
+    pub fn try_run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Result<(), ChunkPanicked> {
         if chunks == 0 {
-            return;
+            return Ok(());
         }
         if self.threads <= 1 || chunks == 1 {
+            // inline path: identical containment contract to the pooled path
+            let mut panicked = false;
             for i in 0..chunks {
-                f(i);
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_err() {
+                    panicked = true;
+                }
             }
-            return;
+            return if panicked { Err(ChunkPanicked) } else { Ok(()) };
         }
         // SAFETY: the 'static is a lie told only to the queue — `run` does
         // not return until the retire loop below has observed zero visitors
@@ -153,7 +186,9 @@ impl ThreadPool {
             drop(st);
         }
         if task.panicked.load(Ordering::Relaxed) {
-            panic!("engine pool: a parallel kernel chunk panicked");
+            Err(ChunkPanicked)
+        } else {
+            Ok(())
         }
     }
 }
@@ -328,5 +363,41 @@ mod tests {
         let pool = ThreadPool::new(3);
         pool.run(8, &|_| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn try_run_surfaces_chunk_panic_without_killing_pool() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU32> = (0..32).map(|_| AtomicU32::new(0)).collect();
+        let res = pool.try_run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            if i == 7 {
+                panic!("injected chunk panic");
+            }
+        });
+        assert_eq!(res, Err(ChunkPanicked));
+        // containment, not abandonment: every sibling chunk still ran
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} did not run exactly once");
+        }
+        // the pool stays serviceable after a contained panic
+        assert_eq!(pool.try_run(16, &|_| {}), Ok(()));
+    }
+
+    #[test]
+    fn try_run_inline_path_matches_pooled_contract() {
+        let pool = ThreadPool::new(1);
+        let hits: Vec<AtomicU32> = (0..5).map(|_| AtomicU32::new(0)).collect();
+        let res = pool.try_run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            if i == 1 {
+                panic!("injected chunk panic");
+            }
+        });
+        assert_eq!(res, Err(ChunkPanicked));
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+        assert_eq!(pool.try_run(3, &|_| {}), Ok(()));
     }
 }

@@ -75,11 +75,17 @@ fn multi_worker_matches_single_worker_bit_exact_int8() {
             vec![ServerDeployment {
                 name: "npu".into(),
                 model: Arc::new(EngineModel::new(model.clone(), 8)),
+                fallbacks: Vec::new(),
             }],
             ServerConfig {
                 workers,
                 queue_depth: 64,
-                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(2),
+                    slo_margin: None,
+                },
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -136,7 +142,12 @@ fn model_errors_propagate_to_every_client() {
         ServerConfig {
             workers: 2,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -160,7 +171,12 @@ fn backpressure_rejects_at_bounded_queue() {
         ServerConfig {
             workers: 1,
             queue_depth: 2,
-            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -199,7 +215,12 @@ fn graceful_shutdown_drains_in_flight_requests() {
         ServerConfig {
             workers: 2,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(5) },
+            policy: BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(5),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -222,11 +243,20 @@ fn mixed_shape_rejected_by_declared_input_shape() {
     let sm = synth::resnet_like(16, 16);
     let model = Arc::new(fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone()));
     let server = Server::start(
-        vec![ServerDeployment { name: "fp32".into(), model: Arc::new(EngineModel::new(model, 4)) }],
+        vec![ServerDeployment {
+            name: "fp32".into(),
+            model: Arc::new(EngineModel::new(model, 4)),
+            fallbacks: Vec::new(),
+        }],
         ServerConfig {
             workers: 1,
             queue_depth: 16,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -251,7 +281,12 @@ fn mixed_shape_rejected_against_in_flight_batch() {
         ServerConfig {
             workers: 1,
             queue_depth: 16,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_secs(10),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -305,7 +340,12 @@ fn router_maps_requests_to_named_deployments() {
         ServerConfig {
             workers: 2,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -350,7 +390,12 @@ fn serving_fleet_fronts_multiple_precisions() {
         ServerConfig {
             workers: 2,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -400,7 +445,12 @@ fn serving_fleet_mixes_int4_and_int8_bit_widths() {
         ServerConfig {
             workers: 2,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -448,7 +498,12 @@ fn serving_fleet_mixes_static_and_dynamic_scaling() {
         ServerConfig {
             workers: 2,
             queue_depth: 64,
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
         },
     )
     .unwrap();

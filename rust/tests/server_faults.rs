@@ -1,0 +1,459 @@
+//! Fault-injection integration tests for the serving path: with injected
+//! worker panics, transient errors, and a sustained backend brownout the
+//! server must (a) never leave a submitted request without a response,
+//! (b) complete `shutdown()` with accurate stats, (c) trip the circuit
+//! breaker and serve degraded traffic bit-exact with a directly-deployed
+//! INT4 sibling, and (d) report a deterministic SLO-violation rate for a
+//! fixed fault seed. These are the robustness contracts behind the chaos
+//! scenarios in `benches/server_load.rs`.
+
+use std::collections::BTreeMap;
+use std::num::NonZeroUsize;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use quant_trim::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::coordinator::experiment::compile_serving_fleet;
+use quant_trim::coordinator::server::{
+    BatchModel, BatchPolicy, BreakerPolicy, Outcome, Priority, RetryPolicy, Server, ServerConfig,
+    ServerDeployment, ServerStats,
+};
+use quant_trim::coordinator::{Brownout, BrownoutMode, FaultPlan, FaultyModel};
+use quant_trim::engine::CompiledModel;
+use quant_trim::perfmodel::{ActScaling, Precision};
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::{synth, Rng};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Echoes each request's first pixel (identifies which request a response
+/// answered, whatever the batch composition).
+struct FirstPixel;
+
+impl BatchModel for FirstPixel {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        let n = images.shape[0];
+        let sz: usize = images.shape[1..].iter().product();
+        let mut out = Tensor::zeros(&[n, 1]);
+        for (i, o) in out.data.iter_mut().enumerate() {
+            *o = images.data[i * sz];
+        }
+        Ok(out)
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+/// An INT8 + INT4 `hardware_d` fleet (fallbacks wired INT8 -> INT4 by the
+/// fleet compiler) plus the SAME INT4 compile done directly — the oracle for
+/// the bit-exact degraded-serving check.
+fn int8_int4_fleet() -> (Vec<ServerDeployment>, Arc<CompiledModel>) {
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xFA17);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let fleet = compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &[
+            ("hardware_d", Some(Precision::Int8), ActScaling::Static),
+            ("hardware_d", Some(Precision::Int4), ActScaling::Static),
+        ],
+        &calib,
+        4,
+        None,
+    )
+    .unwrap();
+    assert_eq!(fleet[0].name, "hardware_d@INT8");
+    assert_eq!(fleet[0].fallbacks, vec!["hardware_d@INT4".to_string()]);
+    let qstate = BTreeMap::new();
+    let view =
+        CheckpointView { graph: &sm.graph, params: &sm.params, bn: &sm.bn, qstate: &qstate };
+    let direct = backend_by_name("hardware_d")
+        .unwrap()
+        .compile_scaled(
+            view,
+            Precision::Int4,
+            ActScaling::Static,
+            RangeSource::Calibration,
+            &calib,
+            PtqOptions::default(),
+        )
+        .expect("direct int4 sibling compile");
+    (fleet, Arc::new(direct.model))
+}
+
+/// Run one image through a compiled model exactly the way the server's
+/// worker does for a batch of one.
+fn direct_logits(model: &CompiledModel, img: &Tensor) -> Vec<f32> {
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(&img.shape);
+    let batch = Tensor::new(shape, img.data.clone());
+    let mut outs = model.run(&batch).expect("direct sibling run");
+    outs.remove(0).data
+}
+
+/// (a)+(b): a panic storm (every 3rd model call panics) loses no request and
+/// no stats — panicked batches are answered with error responses, each
+/// panicked worker recycles itself, and `shutdown()` joins the respawned
+/// generation cleanly.
+#[test]
+fn panic_storm_answers_every_request_and_recycles_workers() {
+    let plan = FaultPlan { panic_every: NonZeroUsize::new(3), ..FaultPlan::default() };
+    let server = Server::start(
+        vec![ServerDeployment::new("primary", FaultyModel::new(Arc::new(FirstPixel), plan))],
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            // panics are spaced failures, not a browning-out backend: keep
+            // the breaker out of this test
+            breaker: BreakerPolicy { trip_after: 10_000, cooldown: Duration::from_secs(60) },
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..30)
+        .map(|i| (i, server.submit_image(Tensor::full(&[1, 2], i as f32), None).unwrap()))
+        .collect();
+    let (mut ok, mut contained) = (0usize, 0usize);
+    for (i, rx) in &rxs {
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("no request may go unanswered");
+        match resp.result {
+            Ok(logits) => {
+                assert_eq!(logits[0], *i as f32);
+                assert_eq!(resp.outcome, Outcome::Served);
+                ok += 1;
+            }
+            Err(msg) => {
+                assert!(msg.contains("worker panic contained"), "{msg}");
+                assert!(msg.contains("injected fault"), "{msg}");
+                assert_eq!(resp.outcome, Outcome::Failed);
+                contained += 1;
+            }
+        }
+    }
+    // 30 single-request batches, panic on every 3rd call: exactly 10 panics
+    assert_eq!((ok, contained), (20, 10));
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 20);
+    assert_eq!(stats.errors, 10);
+    assert_eq!(stats.worker_panics, 10);
+    assert_eq!(stats.workers_restarted, 10, "every contained panic recycles the worker");
+    assert_eq!(stats.router_panics, 0);
+    assert_eq!(stats.accepted(), 30);
+}
+
+/// Transient errors are retried against the replica; once the primary trips
+/// its breaker, traffic routes to the replica without burning retries.
+#[test]
+fn transient_errors_retry_to_replica_then_breaker_reroutes() {
+    let plan = FaultPlan { transient_prob: 1.0, seed: 7, ..FaultPlan::default() };
+    let flaky = ServerDeployment {
+        name: "flaky".into(),
+        model: Arc::new(FaultyModel::new(Arc::new(FirstPixel), plan)),
+        fallbacks: vec!["replica".into()],
+    };
+    let replica = ServerDeployment::new("replica", FirstPixel);
+    let server = Server::start(
+        vec![flaky, replica],
+        ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            breaker: BreakerPolicy { trip_after: 5, cooldown: Duration::from_secs(60) },
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    // sequential submits (single worker): the breaker state each request
+    // sees is exactly the previous request's outcome
+    for i in 0..12u32 {
+        let rx = server.submit_image(Tensor::full(&[1, 2], i as f32), Some("flaky")).unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("answered despite the flaky primary");
+        assert_eq!(resp.outcome, Outcome::Served);
+        assert_eq!(resp.deployment, "replica");
+        assert!(resp.degraded, "requested flaky, served by replica");
+        assert_eq!(resp.result.expect("replica never fails")[0], i as f32);
+        if i < 5 {
+            assert_eq!(resp.retries, 1, "request {i}: one failed attempt on the primary");
+        } else {
+            assert_eq!(resp.retries, 0, "request {i}: breaker-open reroute, no retry burned");
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.retried, 5);
+    assert_eq!(stats.degraded, 12);
+    assert_eq!(stats.breaker_trips, 1);
+}
+
+/// (c): a sustained brownout on the INT8 deployment trips its breaker and
+/// the server serves the traffic degraded to the INT4 sibling — bit-exact
+/// with the same checkpoint compiled to INT4 directly.
+#[test]
+fn brownout_degrades_to_int4_bit_exact_with_direct_sibling() {
+    let (mut fleet, direct_int4) = int8_int4_fleet();
+    let plan = FaultPlan {
+        brownout: Some(Brownout { from_call: 0, calls: usize::MAX / 2, mode: BrownoutMode::Fail }),
+        ..FaultPlan::default()
+    };
+    let primary = fleet.remove(0);
+    fleet.insert(0, FaultyModel::wrap(primary, plan));
+    let server = Server::start(
+        fleet,
+        ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            retry: RetryPolicy { max_retries: 1, ..RetryPolicy::default() },
+            breaker: BreakerPolicy { trip_after: 3, cooldown: Duration::from_secs(60) },
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xB17E);
+    let images: Vec<Tensor> =
+        (0..10).map(|_| Tensor::new(vec![3, 16, 16], rng.normal_vec(3 * 256, 1.0))).collect();
+    for img in &images {
+        let rx = server.submit_image(img.clone(), Some("hardware_d@INT8")).unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("brownout traffic must still be served");
+        assert_eq!(resp.outcome, Outcome::Served);
+        assert_eq!(resp.deployment, "hardware_d@INT4");
+        assert!(resp.degraded);
+        let logits = resp.result.expect("degraded traffic serves from the INT4 sibling");
+        assert_eq!(
+            logits,
+            direct_logits(&direct_int4, img),
+            "degraded responses must be bit-exact with a directly-deployed INT4 sibling"
+        );
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 10);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.degraded, 10);
+    assert_eq!(stats.breaker_trips, 1);
+    assert_eq!(stats.retried, 3, "only the pre-trip requests burn a retry");
+    assert_eq!(stats.worker_panics, 0);
+}
+
+/// The breaker reverses: when the brownout window ends, a half-open probe
+/// succeeds and traffic returns to the (un-degraded) INT8 deployment.
+#[test]
+fn breaker_half_open_reverts_to_primary_after_brownout() {
+    let (mut fleet, _direct_int4) = int8_int4_fleet();
+    let plan = FaultPlan {
+        brownout: Some(Brownout { from_call: 0, calls: 5, mode: BrownoutMode::Fail }),
+        ..FaultPlan::default()
+    };
+    let primary = fleet.remove(0);
+    fleet.insert(0, FaultyModel::wrap(primary, plan));
+    let cooldown = Duration::from_millis(50);
+    let server = Server::start(
+        fleet,
+        ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            retry: RetryPolicy { max_retries: 1, ..RetryPolicy::default() },
+            breaker: BreakerPolicy { trip_after: 3, cooldown },
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let img = Tensor::new(vec![3, 16, 16], Rng::new(0xB17F).normal_vec(3 * 256, 1.0));
+    let ask = |tag: &str| {
+        let rx = server.submit_image(img.clone(), Some("hardware_d@INT8")).unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap_or_else(|_| panic!("no answer: {tag}"));
+        assert_eq!(resp.outcome, Outcome::Served, "{tag}");
+        resp
+    };
+    // brownout calls 0..5: three failures trip the breaker (all served
+    // degraded via INT4)...
+    for i in 0..3 {
+        let resp = ask("pre-trip");
+        assert!(resp.degraded, "request {i} must degrade during the brownout");
+    }
+    // ...two half-open probes still land inside the window and re-open...
+    for i in 0..2 {
+        std::thread::sleep(cooldown + Duration::from_millis(50));
+        let resp = ask("failed probe");
+        assert!(resp.degraded, "probe {i} lands in the brownout window: still degraded");
+    }
+    // ...the next probe lands past the window: the breaker closes and
+    // traffic reverts to the primary, un-degraded
+    std::thread::sleep(cooldown + Duration::from_millis(50));
+    let resp = ask("recovered");
+    assert_eq!(resp.deployment, "hardware_d@INT8");
+    assert!(!resp.degraded, "recovered primary must serve its own traffic again");
+    let resp = ask("steady state");
+    assert!(!resp.degraded, "the closed breaker stays closed on success");
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 7);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.degraded, 5);
+    assert_eq!(stats.breaker_trips, 3, "initial trip + two failed half-open probes");
+}
+
+/// One seeded chaos pass: a brownout plus seed-scheduled transient errors
+/// against a no-retry server, with every 4th request submitted past its
+/// deadline. Deterministic by construction (single worker, sequential
+/// submits, call index == request index).
+fn seeded_chaos_run(seed: u64) -> ServerStats {
+    let plan = FaultPlan {
+        seed,
+        transient_prob: 0.4,
+        brownout: Some(Brownout { from_call: 0, calls: 4, mode: BrownoutMode::Fail }),
+        ..FaultPlan::default()
+    };
+    let server = Server::start(
+        vec![ServerDeployment::new("npu", FaultyModel::new(Arc::new(FirstPixel), plan))],
+        ServerConfig {
+            workers: 1,
+            queue_depth: 64,
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            retry: RetryPolicy { max_retries: 0, ..RetryPolicy::default() },
+            breaker: BreakerPolicy { trip_after: 10_000, cooldown: Duration::from_secs(60) },
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    for i in 0..24 {
+        // a deadline equal to the submit instant has always expired by the
+        // time the router sees it: the expired subset is exact, not racy
+        let deadline = (i % 4 == 3).then(Instant::now);
+        let rx = server
+            .submit_image_with(
+                Tensor::full(&[1, 2], i as f32),
+                Some("npu"),
+                deadline,
+                Priority::Normal,
+            )
+            .unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).expect("every chaos request is answered");
+        if i % 4 == 3 {
+            assert_eq!(resp.outcome, Outcome::Expired);
+        }
+    }
+    server.shutdown()
+}
+
+/// (d): the SLO-violation rate (and every robustness counter) of a seeded
+/// fault scenario replays exactly.
+#[test]
+fn seeded_fault_plan_yields_deterministic_violation_rate() {
+    let a = seeded_chaos_run(0xD5EED);
+    let b = seeded_chaos_run(0xD5EED);
+    for (name, x, y) in [
+        ("served", a.served, b.served),
+        ("errors", a.errors, b.errors),
+        ("expired", a.expired, b.expired),
+        ("retried", a.retried, b.retried),
+        ("degraded", a.degraded, b.degraded),
+        ("breaker_trips", a.breaker_trips, b.breaker_trips),
+        ("slo_misses", a.slo_misses, b.slo_misses),
+        ("worker_panics", a.worker_panics, b.worker_panics),
+    ] {
+        assert_eq!(x, y, "{name} must replay exactly for a fixed fault seed");
+    }
+    assert_eq!(a.expired, 6, "every 4th of 24 requests was submitted expired");
+    assert_eq!(a.accepted(), 24);
+    assert!(a.errors >= 4, "the 4-call brownout window alone fails 4 requests");
+    assert_eq!(a.served + a.errors, 18);
+    assert_eq!(a.slo_violation_rate(), 0.25);
+    assert_eq!(a.slo_violation_rate(), b.slo_violation_rate());
+}
+
+/// Satellite: deadline-triggered partial-batch flush under racing
+/// submitters. `max_wait` is effectively infinite, so only the SLO lane
+/// (deadline - margin) can ship these batches; 37 requests cannot partition
+/// into full batches of 8, so at least one flush must be partial.
+#[test]
+fn slo_lane_flushes_partial_batches_under_racing_submitters() {
+    let server = Server::start(
+        vec![ServerDeployment::new("npu", FirstPixel)],
+        ServerConfig {
+            workers: 2,
+            queue_depth: 256,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(600),
+                slo_margin: Some(Duration::from_millis(9995)),
+            },
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let counts = [10usize, 9, 9, 9];
+    let mut partial_flush = false;
+    let mut served = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = counts
+            .iter()
+            .enumerate()
+            .map(|(t, &cnt)| {
+                let server = &server;
+                s.spawn(move || {
+                    (0..cnt)
+                        .map(|i| {
+                            std::thread::sleep(Duration::from_micros(500));
+                            let val = (t * 100 + i) as f32;
+                            // flush target = deadline - margin ~ 5ms out
+                            let deadline = Instant::now() + Duration::from_secs(10);
+                            let rx = server
+                                .submit_image_with(
+                                    Tensor::full(&[1, 2], val),
+                                    None,
+                                    Some(deadline),
+                                    Priority::Normal,
+                                )
+                                .unwrap();
+                            (val, rx)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (val, rx) in h.join().unwrap() {
+                let resp = rx.recv_timeout(RECV_TIMEOUT).expect("SLO lane must flush batches");
+                assert_eq!(resp.outcome, Outcome::Served);
+                assert_eq!(resp.result.expect("echo never fails")[0], val);
+                assert!((1..=8).contains(&resp.batch_size));
+                partial_flush |= resp.batch_size < 8;
+                served += 1;
+            }
+        }
+    });
+    assert_eq!(served, 37);
+    assert!(partial_flush, "37 requests cannot partition into full 8-batches");
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 37);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.expired, 0);
+    assert_eq!(stats.slo_misses, 0, "10s deadlines with ~5ms flushes never miss");
+}

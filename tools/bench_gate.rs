@@ -1,13 +1,24 @@
 //! CI bench regression gate: compares a bench JSON emitted by
-//! `cargo bench --bench engine_hotpath` (BENCH_engine.json) against the
-//! committed baseline in `BENCH_baseline/` and fails if the planned
-//! executor's throughput regressed beyond tolerance.
+//! `cargo bench` (BENCH_engine.json, BENCH_server.json, BENCH_chaos.json)
+//! against the committed baseline in `BENCH_baseline/` and fails on
+//! regressions beyond tolerance.
 //!
-//! Gated metrics are the `*_speedup` ratios (planned-executor throughput
-//! relative to the interpreter, measured in the SAME run) — machine-
-//! independent, so a committed baseline is meaningful across CI runners.
-//! Raw `_us` medians are printed for context but not gated: absolute
-//! microseconds on shared runners are noise.
+//! Gated metrics, selected by key suffix:
+//! * `*_speedup` — floor-gated: `cur >= base * (1 - tol)`. Ratios of two
+//!   measurements from the SAME run (planned vs interpreter, 4w vs 1w) —
+//!   machine-independent, so a committed baseline is meaningful across CI
+//!   runners.
+//! * `*_p95_ms` — ceiling-gated: `cur <= base * (1 + tol)`. Tail latency of
+//!   the device-paced serving scenarios; pacing (not host speed) dominates,
+//!   so gate with a generous tolerance.
+//! * `*_violation_rate` — ceiling-gated: `cur <= base * (1 + tol) + 0.02`.
+//!   The absolute slack keeps a near-zero baseline gateable (a pure ratio
+//!   ceiling on 0.0 would reject ANY violation).
+//!
+//! A gated key present in the baseline but missing from the current run is
+//! a failure (a silently-dropped metric must not pass the gate). Raw `_us`
+//! medians are printed for context but not gated: absolute microseconds on
+//! shared runners are noise.
 //!
 //!   cargo run --release --bin bench_gate -- BENCH_baseline/engine.json BENCH_engine.json
 //!   cargo run --release --bin bench_gate -- <baseline> <current> --tolerance 0.15
@@ -102,11 +113,14 @@ fn main() -> ExitCode {
     };
 
     println!("bench gate: {current_path} vs {baseline_path} (tolerance {:.0}%)", tolerance * 100.0);
+    let is_gated = |key: &str| {
+        key.ends_with("_speedup") || key.ends_with("_p95_ms") || key.ends_with("_violation_rate")
+    };
     let mut gated = 0usize;
     let mut failures = 0usize;
     for (key, &base) in &baseline {
         let Some(&cur) = current.get(key) else {
-            if key.ends_with("_speedup") {
+            if is_gated(key) {
                 eprintln!("  FAIL {key}: present in baseline, missing from current run");
                 failures += 1;
             }
@@ -123,12 +137,35 @@ fn main() -> ExitCode {
             if !ok {
                 failures += 1;
             }
+        } else if key.ends_with("_p95_ms") {
+            gated += 1;
+            let ceiling = base * (1.0 + tolerance);
+            let ok = cur <= ceiling;
+            println!(
+                "  {} {key}: {cur:.2} vs baseline {base:.2} (ceiling {ceiling:.2})",
+                if ok { "ok  " } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        } else if key.ends_with("_violation_rate") {
+            gated += 1;
+            // absolute slack so a near-zero baseline stays gateable
+            let ceiling = base * (1.0 + tolerance) + 0.02;
+            let ok = cur <= ceiling;
+            println!(
+                "  {} {key}: {cur:.4} vs baseline {base:.4} (ceiling {ceiling:.4})",
+                if ok { "ok  " } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
         } else if key.ends_with("_us") {
             println!("  info {key}: {cur:.1} us (baseline machine: {base:.1} us, not gated)");
         }
     }
     if gated == 0 {
-        eprintln!("bench_gate: baseline has no *_speedup metrics to gate");
+        eprintln!("bench_gate: baseline has no gated metrics (*_speedup, *_p95_ms, *_violation_rate)");
         return ExitCode::from(2);
     }
     if failures > 0 {
