@@ -17,6 +17,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::calib::{self, CalibMethod, Calibration};
+use crate::engine::verify::AuditReport;
 use crate::engine::{ActMode, CompiledModel, ExecConfig, WeightMode};
 use crate::perfmodel::{self, ActScaling, PerfReport, Precision};
 use crate::qir::{passes, Graph};
@@ -121,6 +122,15 @@ pub struct Deployment {
 }
 
 impl Deployment {
+    /// Run the static plan auditor (`engine::verify`) over this compiled
+    /// deployment: plan liveness/aliasing replay, qparam sanity, and
+    /// interval / accumulator-overflow analysis at this deployment's actual
+    /// precision and scaling. `input` is the worst-case (lo, hi) input
+    /// range; `None` uses the default normalized-image interval.
+    pub fn audit(&self, input: Option<(f32, f32)>) -> Result<AuditReport> {
+        self.model.audit(input)
+    }
+
     /// True when an INT4 request was compiled at INT8 for lack of kernels.
     pub fn fell_back(&self) -> bool {
         self.requested != self.precision
@@ -379,6 +389,30 @@ impl BackendSpec {
             batch,
             self.runtime_boost,
             &|k| unsupported.contains(&k),
+        )
+    }
+
+    /// [`Self::perf_scaled`] with the static auditor's flagged layers paying
+    /// the headroom mitigation term (`perfmodel::estimate_audited`). Pass
+    /// `AuditReport::flagged_nodes` membership as `flagged`.
+    pub fn perf_audited(
+        &self,
+        graph: &Graph,
+        precision: Precision,
+        scaling: ActScaling,
+        batch: usize,
+        flagged: &dyn Fn(&str) -> bool,
+    ) -> PerfReport {
+        let unsupported = self.unsupported;
+        perfmodel::estimate_audited(
+            graph,
+            &self.device,
+            precision,
+            scaling,
+            batch,
+            self.runtime_boost,
+            &|k| unsupported.contains(&k),
+            flagged,
         )
     }
 

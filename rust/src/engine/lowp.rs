@@ -5,6 +5,21 @@
 //! payloads through the narrow format at op boundaries — the same numerics a
 //! real mixed-precision pipeline exhibits at tensor granularity.
 
+/// Worst-case relative rounding error of one bf16 round-trip (8 mantissa
+/// bits incl. the implicit one → half-ulp ≤ 2⁻⁸·|x|). The static analyzer
+/// (`engine::verify`) widens propagated intervals by this per op under
+/// [`ActMode::Bf16`]; `tests` below assert the bound empirically.
+///
+/// [`ActMode::Bf16`]: crate::engine::ActMode::Bf16
+pub const BF16_REL_STEP: f64 = 1.0 / 256.0;
+/// Worst-case relative rounding error of one f16 round-trip (11 mantissa
+/// bits → half-ulp ≤ 2⁻¹⁰·|x| with margin).
+pub const F16_REL_STEP: f64 = 1.0 / 1024.0;
+/// Largest finite IEEE binary16 value: [`f32_to_f16`] maps anything that
+/// rounds past this to ±∞, which is what the analyzer's overflow threshold
+/// models.
+pub const F16_MAX_FINITE: f64 = 65504.0;
+
 /// Round f32 -> bf16 -> f32 (round-to-nearest-even on the dropped mantissa).
 #[inline]
 pub fn bf16(x: f32) -> f32 {

@@ -32,6 +32,9 @@ pub mod plan;
 /// Persistent shared worker pool behind the parallel kernels (no per-call
 /// thread spawns; one team serves every executor thread in the process).
 pub mod pool;
+/// Static plan auditor: interval/overflow analysis, symbolic plan replay
+/// (liveness + aliasing + scratch bounds), and qparam sanity checks.
+pub mod verify;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};

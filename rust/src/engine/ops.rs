@@ -206,6 +206,10 @@ const PAR_ROWS_MIN: usize = 8;
 /// never overlap.
 struct OutBase(*mut f32);
 
+// SAFETY: workers only ever materialize pairwise-disjoint `&mut` chunks from
+// this pointer (each chunk index is claimed exactly once by the pool's atomic
+// cursor and row ranges never overlap), so sharing the base across threads
+// cannot create aliasing mutable access.
 unsafe impl Sync for OutBase {}
 
 /// Shared row-chunk parallel driver behind every planned GEMM: splits the
@@ -691,6 +695,7 @@ fn pack_panel_rows<T: Copy>(rows: &[T], cout_g: usize, row_bytes: usize, out: &m
 /// An f32 weight matrix/filter repacked panel-major at plan time (see the
 /// section docs). Shape is the original tensor shape (OIHW for conv,
 /// (dout, din) for linear); `groups` partitions the output channels.
+#[derive(Clone)]
 pub struct PackedF32 {
     /// Original weight tensor shape.
     pub shape: Vec<usize>,
@@ -739,6 +744,7 @@ impl PackedF32 {
 /// interleave is byte-level, so a panel's 4 adjacent bytes carry one
 /// two-nibble k-step for each of the 4 output channels), with the scales
 /// and quantize-time row sums carried over from the source [`QWeight`].
+#[derive(Clone)]
 pub struct PackedQW {
     /// Original weight tensor shape.
     pub shape: Vec<usize>,

@@ -57,24 +57,28 @@ use crate::tensor::{act_scale_zp, RoundMode, Tensor};
 /// min/max scan via [`ops::dyn_qparams`], then the same requantizing
 /// GEMM epilogue; only the tiny per-channel `sw*sx` premultiply is redone,
 /// never a second pass over the activation data).
-enum IQuant {
+#[derive(Clone)]
+pub(crate) enum IQuant {
     Static { sx: f32, zx: i32, sxw: Vec<f32> },
     Dynamic,
 }
 
 /// One attention projection with its pre-resolved (and prepacked) weights.
-enum ProjW {
+#[derive(Clone)]
+pub(crate) enum ProjW {
     F32(usize),
     I8 { w: usize, round: RoundMode, iq: IQuant },
 }
 
-struct AttnProj {
-    w: ProjW,
-    b: usize,
+#[derive(Clone)]
+pub(crate) struct AttnProj {
+    pub(crate) w: ProjW,
+    pub(crate) b: usize,
 }
 
 /// Lowered node: every reference is an arena index, every constant is baked.
-enum POp {
+#[derive(Clone)]
+pub(crate) enum POp {
     Input,
     ConvF32 {
         w: usize,
@@ -114,18 +118,19 @@ enum POp {
     AqNoop,
 }
 
-struct PlannedNode {
-    name: String,
-    in_slots: Vec<usize>,
-    out_slot: usize,
+#[derive(Clone)]
+pub(crate) struct PlannedNode {
+    pub(crate) name: String,
+    pub(crate) in_slots: Vec<usize>,
+    pub(crate) out_slot: usize,
     /// Per-input liveness: `in_last[i]` means this node is the last
     /// consumer of input i (and it is not a graph output), so the executor
     /// may take its buffer — pass-through ops swap it into the output
     /// slot, add/mul joins accumulate into it in place. This generalizes
     /// the old single-input-only `move0` flag to every input of every
     /// node, which is what removes the copies on residual-add joins.
-    in_last: Vec<bool>,
-    op: POp,
+    pub(crate) in_last: Vec<bool>,
+    pub(crate) op: POp,
 }
 
 /// Plan-time scratch high-water marks, inferred from the graph's declared
@@ -134,19 +139,19 @@ struct PlannedNode {
 /// size and `reserve`s the caller's [`ExecScratch`] accordingly, so even
 /// the first run at a batch size allocates each buffer at most once, at
 /// its final size.
-#[derive(Default)]
-struct ScratchSizes {
-    slot_elems: Vec<usize>,
-    col: usize,
-    mat: usize,
-    xq: usize,
-    qkv: usize,
-    sc: usize,
-    sxw: usize,
+#[derive(Clone, Default)]
+pub(crate) struct ScratchSizes {
+    pub(crate) slot_elems: Vec<usize>,
+    pub(crate) col: usize,
+    pub(crate) mat: usize,
+    pub(crate) xq: usize,
+    pub(crate) qkv: usize,
+    pub(crate) sc: usize,
+    pub(crate) sxw: usize,
     /// Maximum tensor rank (incl. batch dim) any slot ever holds — shape
     /// `Vec`s are reserved to this so buffer swaps can never force a shape
     /// reallocation in a warm run.
-    max_rank: usize,
+    pub(crate) max_rank: usize,
 }
 
 /// Caller-owned reusable executor memory: the activation slot arena plus
@@ -187,15 +192,16 @@ impl ExecScratch {
 /// A compiled execution plan: flat instruction list + prepacked weight
 /// arenas + preallocating memory plan. Built once per `CompiledModel`,
 /// executed per request against a reusable [`ExecScratch`].
+#[derive(Clone)]
 pub struct ExecPlan {
-    act_mode: ActMode,
-    nodes: Vec<PlannedNode>,
-    slot_count: usize,
-    output_slots: Vec<usize>,
-    tensors: Vec<Tensor>,
-    fpanels: Vec<ops::PackedF32>,
-    qpanels: Vec<ops::PackedQW>,
-    sizes: ScratchSizes,
+    pub(crate) act_mode: ActMode,
+    pub(crate) nodes: Vec<PlannedNode>,
+    pub(crate) slot_count: usize,
+    pub(crate) output_slots: Vec<usize>,
+    pub(crate) tensors: Vec<Tensor>,
+    pub(crate) fpanels: Vec<ops::PackedF32>,
+    pub(crate) qpanels: Vec<ops::PackedQW>,
+    pub(crate) sizes: ScratchSizes,
 }
 
 /// Grow a buffer's capacity to `want` elements without touching its
@@ -308,6 +314,20 @@ impl ExecPlan {
             sizes: ScratchSizes::default(),
         };
         plan.sizes = plan.infer_sizes(graph);
+        // Debug builds self-audit every freshly compiled plan: the symbolic
+        // replay verifier (engine::verify) re-derives liveness, aliasing and
+        // scratch bounds independently and rejects the plan outright on any
+        // ERROR finding, so a planner bug can never reach an executor in
+        // tests. Release builds skip this (plans are verified out-of-band by
+        // `plan_audit` and the CI audit job).
+        #[cfg(debug_assertions)]
+        {
+            use crate::engine::verify::Severity;
+            let findings = plan.verify(graph);
+            if let Some(f) = findings.iter().find(|f| f.severity == Severity::Error) {
+                bail!("plan verifier rejected fresh plan: {f}");
+            }
+        }
         Ok(plan)
     }
 

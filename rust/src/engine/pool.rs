@@ -55,6 +55,11 @@ struct Task {
 /// for as long as any thread dereferences it.
 struct TaskPtr(*const Task);
 
+// SAFETY: the pointee is a stack-pinned `Task` the submitter keeps alive
+// until every worker has left it (visitor count observed at zero under the
+// pool mutex), so moving the pointer to another thread never outlives or
+// races the pointee; all shared fields it reaches are atomics or
+// mutex-guarded.
 unsafe impl Send for TaskPtr {}
 
 struct PoolState {

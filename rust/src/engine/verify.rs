@@ -1,0 +1,1234 @@
+//! Static plan auditor: compile-time proofs about a deployment, reported
+//! as typed [`Finding`]s instead of runtime surprises.
+//!
+//! Three analyses (see engine/README.md "Static guarantees"):
+//!
+//! 1. **Interval / overflow analysis** (`qir::analysis` + [`CompiledModel::audit`]):
+//!    propagates worst-case value bounds through every node using the
+//!    deployment's actual qparams, dequantized weight payloads and weight
+//!    bit-width, proving per layer that no i8×i8→i32 accumulator can
+//!    overflow at the graph's real K dimensions — and flagging
+//!    requant-saturation and outlier-driven scale-inflation risk.
+//! 2. **Plan liveness/aliasing verification** ([`ExecPlan::verify`]): a
+//!    symbolic replay of the compiled instruction list that independently
+//!    re-derives liveness and rejects read-after-overwrite, illegal buffer
+//!    swaps, uncovered output slots and `ExecScratch` high-water-mark
+//!    underestimates. Debug builds run it on every fresh plan
+//!    (`ExecPlan::compile`); release deployments are audited out-of-band by
+//!    `plan_audit` and the CI `audit` job.
+//! 3. **Qparam sanity** ([`CompiledModel::verify`]): finite positive
+//!    scales, in-range zero points, non-degenerate calibrated ranges,
+//!    finite parameter payloads, payload/row-sum consistency.
+//!
+//! The [`Sabotage`] API deliberately corrupts a cloned plan (or qparam set)
+//! one violation class at a time, so tests and CI can prove the verifier
+//! actually catches each class — a verifier only trusted as far as its
+//! negative tests.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::plan::{ExecPlan, POp, ProjW};
+use crate::engine::{lowp, ActMode, CompiledModel};
+use crate::qir::analysis::{
+    acc_bounds, headroom_bits, propagate, AccBounds, AffineRows, AttnCtx, InputQuant, Interval,
+    NodeCtx, NodeReport, PropagateCfg, QuantGrid,
+};
+use crate::qir::Graph;
+use crate::tensor::quantized::{row_sums_of, EPS};
+use crate::tensor::{act_scale_zp, QWeight, Tensor};
+
+// ---------------------------------------------------------------------------
+// findings
+// ---------------------------------------------------------------------------
+
+/// Severity of a [`Finding`]. `Error` means the deployment is unsound (a
+/// wrong-result or overflow path is reachable) — the CI audit job and the
+/// debug-build compile hook fail on any of these. `Warning` marks elevated
+/// numerical risk worth a human look; `Info` is context for the report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "INFO",
+            Severity::Warning => "WARN",
+            Severity::Error => "ERROR",
+        })
+    }
+}
+
+/// Plan/graph structure is corrupted beyond what the replay can interpret.
+pub const PLAN_GRAPH_MISMATCH: &str = "PLAN_GRAPH_MISMATCH";
+/// A slot / arena index points outside the plan's allocation.
+pub const PLAN_SLOT_RANGE: &str = "PLAN_SLOT_RANGE";
+/// A node reads a slot that no longer (or never did) hold its input value.
+pub const PLAN_STALE_READ: &str = "PLAN_STALE_READ";
+/// A kernel's output slot aliases one of its still-read input slots.
+pub const PLAN_ALIAS: &str = "PLAN_ALIAS";
+/// `in_last` claims a last use that liveness analysis refutes (the buffer
+/// would be stolen while another consumer still needs it).
+pub const PLAN_BAD_LIVENESS: &str = "PLAN_BAD_LIVENESS";
+/// A graph output slot does not hold that output's value after the run.
+pub const PLAN_OUTPUT_UNCOVERED: &str = "PLAN_OUTPUT_UNCOVERED";
+/// A scratch high-water mark is below what execution can actually touch.
+pub const PLAN_SCRATCH_UNDER: &str = "PLAN_SCRATCH_UNDER";
+/// Swap-connected slots have unequal reservations (breaks the warm-run
+/// zero-allocation contract, not correctness).
+pub const PLAN_LEVELING: &str = "PLAN_LEVELING";
+/// A weight scale is non-finite, non-positive, or the payload metadata is
+/// inconsistent.
+pub const QP_WEIGHT_SCALE: &str = "QP_WEIGHT_SCALE";
+/// Quantized payload row sums disagree with the stored payload.
+pub const QP_PAYLOAD: &str = "QP_PAYLOAD";
+/// A calibrated activation range is non-finite, inverted, or degenerate.
+pub const QP_RANGE: &str = "QP_RANGE";
+/// A derived activation scale is non-finite or non-positive.
+pub const QP_SCALE: &str = "QP_SCALE";
+/// A derived zero point is outside the u8 grid.
+pub const QP_ZP: &str = "QP_ZP";
+/// A float parameter tensor carries NaN/inf values.
+pub const NONFINITE_PARAM: &str = "NONFINITE_PARAM";
+/// An i32 accumulator bound reaches the overflow region (or has under one
+/// bit of headroom).
+pub const ACC_OVERFLOW: &str = "ACC_OVERFLOW";
+/// The worst-case value range at a quantization point spills past the
+/// static grid (requant saturation risk — the paper's clipping section).
+pub const SAT_CLIP: &str = "SAT_CLIP";
+/// Per-channel weight scales are wildly imbalanced (outlier-driven scale
+/// inflation: the largest channel dictates the grid of the rest).
+pub const SCALE_INFLATION: &str = "SCALE_INFLATION";
+/// The propagated bound overflows f16 storage to ±∞.
+pub const F16_OVERFLOW: &str = "F16_OVERFLOW";
+
+/// One result of a static analysis pass.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub severity: Severity,
+    /// Stable machine-readable code (one of the module's `pub const`s).
+    pub code: &'static str,
+    /// Graph node (or param key) the finding is anchored to.
+    pub node: String,
+    pub message: String,
+}
+
+impl Finding {
+    fn new(severity: Severity, code: &'static str, node: &str, message: String) -> Finding {
+        Finding { severity, code, node: node.to_string(), message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {} at {}: {}", self.severity, self.code, self.node, self.message)
+    }
+}
+
+/// True when any finding in the slice is an [`Severity::Error`].
+pub fn has_errors(findings: &[Finding]) -> bool {
+    findings.iter().any(|f| f.severity == Severity::Error)
+}
+
+// ---------------------------------------------------------------------------
+// plan replay verifier
+// ---------------------------------------------------------------------------
+
+/// What a slot currently holds during the symbolic replay: nothing yet, or
+/// the value produced by plan node `i`. Buffer swaps move contents between
+/// slots exactly as `eval` does, so "the value of node i" tracks the
+/// physical buffer wherever the plan parks it.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Content {
+    Empty,
+    Val(usize),
+}
+
+impl ExecPlan {
+    /// Symbolically replay the instruction list against `graph` and return
+    /// every liveness / aliasing / scratch-sizing violation. Independent of
+    /// `compile`'s own bookkeeping: liveness is re-derived from graph
+    /// consumer counts and scratch bounds from declared shapes, so a
+    /// planner regression (or a corrupted plan) is caught even though both
+    /// sides started from the same graph. Panic-free on corrupted plans —
+    /// every structural precondition failure is itself a finding.
+    pub fn verify(&self, graph: &Graph) -> Vec<Finding> {
+        let mut fs = Vec::new();
+        if self.nodes.len() != graph.nodes.len()
+            || self.nodes.iter().zip(graph.nodes.iter()).any(|(p, g)| p.name != g.name)
+            || self.output_slots.len() != graph.outputs.len()
+        {
+            fs.push(Finding::new(
+                Severity::Error,
+                PLAN_GRAPH_MISMATCH,
+                &graph.name,
+                format!(
+                    "plan has {} nodes / {} outputs, graph has {} / {} (or names diverge)",
+                    self.nodes.len(),
+                    self.output_slots.len(),
+                    graph.nodes.len(),
+                    graph.outputs.len()
+                ),
+            ));
+            return fs;
+        }
+        for pn in &self.nodes {
+            let arity_ok = pn.in_last.len() == pn.in_slots.len();
+            if !arity_ok
+                || pn.out_slot >= self.slot_count
+                || pn.in_slots.iter().any(|&s| s >= self.slot_count)
+            {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_SLOT_RANGE,
+                    &pn.name,
+                    format!(
+                        "slots {:?} -> {} outside 0..{} (or liveness arity mismatch)",
+                        pn.in_slots, pn.out_slot, self.slot_count
+                    ),
+                ));
+                return fs;
+            }
+        }
+        if let Some(&s) = self.output_slots.iter().find(|&&s| s >= self.slot_count) {
+            fs.push(Finding::new(
+                Severity::Error,
+                PLAN_SLOT_RANGE,
+                &graph.name,
+                format!("output slot {s} outside 0..{}", self.slot_count),
+            ));
+            return fs;
+        }
+        self.replay(graph, &mut fs);
+        self.check_sizes(graph, &mut fs);
+        fs
+    }
+
+    /// The number of inputs `eval` reads for this op (used to reject plans
+    /// whose in_slots arity can't satisfy the kernel).
+    fn op_arity(op: &POp) -> usize {
+        match op {
+            POp::Input => 0,
+            POp::Add | POp::Mul | POp::Concat => 2,
+            _ => 1,
+        }
+    }
+
+    fn replay(&self, graph: &Graph, fs: &mut Vec<Finding>) {
+        let idx_of: HashMap<&str, usize> =
+            graph.nodes.iter().enumerate().map(|(i, n)| (n.name.as_str(), i)).collect();
+        let mut remaining = graph.consumer_counts();
+        let mut content = vec![Content::Empty; self.slot_count];
+        let describe = |c: Content| -> String {
+            match c {
+                Content::Empty => "uninitialized memory".to_string(),
+                Content::Val(i) => format!("value of {}", graph.nodes[i].name),
+            }
+        };
+        for (idx, (pn, n)) in self.nodes.iter().zip(graph.nodes.iter()).enumerate() {
+            if pn.in_slots.len() < Self::op_arity(&pn.op) {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_SLOT_RANGE,
+                    &pn.name,
+                    format!(
+                        "op needs {} inputs, plan wires {}",
+                        Self::op_arity(&pn.op),
+                        pn.in_slots.len()
+                    ),
+                ));
+                return;
+            }
+            // 1. every read must find the producer's live value in the slot
+            for (j, &s) in pn.in_slots.iter().enumerate() {
+                let Some(producer) = n.inputs.get(j) else { continue };
+                let want = idx_of.get(producer.as_str()).copied();
+                if want.map(Content::Val) != Some(content[s]) {
+                    fs.push(Finding::new(
+                        Severity::Error,
+                        PLAN_STALE_READ,
+                        &pn.name,
+                        format!(
+                            "input {j} expects the value of {producer} in slot {s}, found {}",
+                            describe(content[s])
+                        ),
+                    ));
+                }
+            }
+            // 2. in_last soundness, re-derived from graph consumer counts
+            for (j, inp) in n.inputs.iter().enumerate() {
+                let mut truly_last = false;
+                if let Some(c) = remaining.get_mut(inp.as_str()) {
+                    *c -= 1;
+                    truly_last = *c == 0 && !graph.outputs.contains(inp);
+                }
+                let Some(&claimed) = pn.in_last.get(j) else { continue };
+                if claimed && !truly_last {
+                    fs.push(Finding::new(
+                        Severity::Error,
+                        PLAN_BAD_LIVENESS,
+                        &pn.name,
+                        format!(
+                            "claims last use of {inp} (input {j}) but it is still \
+                             consumed later or is a graph output"
+                        ),
+                    ));
+                } else if !claimed && truly_last {
+                    fs.push(Finding::new(
+                        Severity::Info,
+                        PLAN_BAD_LIVENESS,
+                        &pn.name,
+                        format!("misses a move opportunity on dead input {inp} (copy instead)"),
+                    ));
+                }
+            }
+            // 3. mirror eval()'s exact buffer-swap / disjoint-borrow paths
+            let o = pn.out_slot;
+            let mut alias = |slot: usize, role: &str| {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_ALIAS,
+                    &pn.name,
+                    format!("output slot {o} aliases {role} input slot {slot}"),
+                ));
+            };
+            match &pn.op {
+                POp::Input => {}
+                POp::Act(_)
+                | POp::Aq { .. }
+                | POp::AqDyn { .. }
+                | POp::AqNoop
+                | POp::Flatten
+                | POp::Reshape { .. } => {
+                    let i = pn.in_slots[0];
+                    if pn.in_last[0] {
+                        content.swap(i, o);
+                    } else if i == o {
+                        alias(i, "pass-through");
+                    }
+                }
+                POp::Add => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 != i1 && pn.in_last[0] {
+                        content.swap(i0, o);
+                        if i1 == o {
+                            alias(i1, "accumulate");
+                        }
+                    } else if i0 != i1 && pn.in_last[1] {
+                        content.swap(i1, o);
+                        if i0 == o {
+                            alias(i0, "accumulate");
+                        }
+                    } else {
+                        if i0 == o {
+                            alias(i0, "left");
+                        }
+                        if i1 == o {
+                            alias(i1, "right");
+                        }
+                    }
+                }
+                POp::Mul => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 != i1 && pn.in_last[0] {
+                        content.swap(i0, o);
+                        if i1 == o {
+                            alias(i1, "gate");
+                        }
+                    } else {
+                        if i0 == o {
+                            alias(i0, "gated");
+                        }
+                        if i1 == o {
+                            alias(i1, "gate");
+                        }
+                    }
+                }
+                POp::Concat => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 == o {
+                        alias(i0, "left");
+                    }
+                    if i1 == o {
+                        alias(i1, "right");
+                    }
+                }
+                // every remaining op reads input 0 through in_out1
+                _ => {
+                    if pn.in_slots[0] == o {
+                        alias(pn.in_slots[0], "kernel");
+                    }
+                }
+            }
+            content[o] = Content::Val(idx);
+        }
+        // 4. each graph output's value must sit in its advertised slot
+        for (k, (&s, oname)) in self.output_slots.iter().zip(graph.outputs.iter()).enumerate() {
+            let want = idx_of.get(oname.as_str()).copied().map(Content::Val);
+            if want != Some(content[s]) {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_OUTPUT_UNCOVERED,
+                    oname,
+                    format!(
+                        "output {k} expects its value in slot {s}, found {}",
+                        describe(content[s])
+                    ),
+                ));
+            }
+        }
+    }
+
+    /// Recompute every scratch high-water mark from the graph's declared
+    /// shapes (the same quantities `infer_sizes` derives, re-derived here so
+    /// a corrupted or under-maintained `ScratchSizes` is caught) and check
+    /// the plan's reservations cover them.
+    fn check_sizes(&self, graph: &Graph, fs: &mut Vec<Finding>) {
+        if self.sizes.slot_elems.len() < self.slot_count {
+            fs.push(Finding::new(
+                Severity::Error,
+                PLAN_SCRATCH_UNDER,
+                &graph.name,
+                format!(
+                    "slot_elems covers {} of {} slots",
+                    self.sizes.slot_elems.len(),
+                    self.slot_count
+                ),
+            ));
+            return;
+        }
+        let mut req = vec![0usize; self.slot_count];
+        let (mut col, mut mat, mut xq, mut qkv, mut sc, mut sxw) = (0usize, 0, 0, 0, 0, 0);
+        let mut max_rank = 0usize;
+        let dim = |n: &crate::qir::Node, i: usize| n.shape.get(i).copied().unwrap_or(1);
+        for (n, pn) in graph.nodes.iter().zip(self.nodes.iter()) {
+            let elems: usize = n.shape.iter().product::<usize>().max(1);
+            max_rank = max_rank.max(n.shape.len() + 1);
+            req[pn.out_slot] = req[pn.out_slot].max(elems);
+            match &pn.op {
+                POp::ConvF32 { w, .. } => {
+                    let Some(wp) = self.fpanels.get(*w) else {
+                        fs.push(Finding::new(
+                            Severity::Error,
+                            PLAN_SLOT_RANGE,
+                            &pn.name,
+                            format!("f32 panel index {w} out of range"),
+                        ));
+                        continue;
+                    };
+                    let rows = dim(n, 1) * dim(n, 2);
+                    col = col.max(rows * wp.cols);
+                    mat = mat.max(rows * wp.cout());
+                }
+                POp::ConvI8 { w, .. } => {
+                    let Some(pw) = self.qpanels.get(*w) else {
+                        fs.push(Finding::new(
+                            Severity::Error,
+                            PLAN_SLOT_RANGE,
+                            &pn.name,
+                            format!("quantized panel index {w} out of range"),
+                        ));
+                        continue;
+                    };
+                    let rows = dim(n, 1) * dim(n, 2);
+                    col = col.max(rows * pw.cols);
+                    mat = mat.max(rows * pw.cout());
+                    xq = xq.max(rows * pw.cols);
+                    sxw = sxw.max(pw.cout());
+                }
+                POp::LinearI8 { w, .. } => {
+                    let Some(pw) = self.qpanels.get(*w) else {
+                        fs.push(Finding::new(
+                            Severity::Error,
+                            PLAN_SLOT_RANGE,
+                            &pn.name,
+                            format!("quantized panel index {w} out of range"),
+                        ));
+                        continue;
+                    };
+                    let rows = elems / pw.cout().max(1);
+                    xq = xq.max(rows.max(1) * pw.cols);
+                    sxw = sxw.max(pw.cout());
+                }
+                POp::Attention { d, proj, .. } => {
+                    let t = n.shape.first().copied().unwrap_or(1);
+                    qkv = qkv.max(t * *d);
+                    sc = sc.max(t);
+                    if proj.iter().any(|p| matches!(p.w, ProjW::I8 { .. })) {
+                        xq = xq.max(t * *d);
+                        sxw = sxw.max(*d);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // level per-slot requirements across run-time buffer swaps, exactly
+        // as `infer_sizes` does: after any permutation of a swap class, each
+        // member slot must still cover the class maximum
+        let mut parent: Vec<usize> = (0..self.slot_count).collect();
+        fn root(parent: &mut [usize], mut i: usize) -> usize {
+            while parent[i] != i {
+                parent[i] = parent[parent[i]];
+                i = parent[i];
+            }
+            i
+        }
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for pn in &self.nodes {
+            match &pn.op {
+                POp::Act(_)
+                | POp::Aq { .. }
+                | POp::AqDyn { .. }
+                | POp::AqNoop
+                | POp::Flatten
+                | POp::Reshape { .. } => {
+                    if pn.in_last[0] {
+                        edges.push((pn.in_slots[0], pn.out_slot));
+                    }
+                }
+                POp::Add => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 != i1 && pn.in_last[0] {
+                        edges.push((i0, pn.out_slot));
+                    } else if i0 != i1 && pn.in_last[1] {
+                        edges.push((i1, pn.out_slot));
+                    }
+                }
+                POp::Mul => {
+                    let (i0, i1) = (pn.in_slots[0], pn.in_slots[1]);
+                    if i0 != i1 && pn.in_last[0] {
+                        edges.push((i0, pn.out_slot));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &(a, b) in &edges {
+            let (ra, rb) = (root(&mut parent, a), root(&mut parent, b));
+            if ra != rb {
+                parent[ra] = rb;
+            }
+        }
+        let mut class_max = vec![0usize; self.slot_count];
+        for i in 0..self.slot_count {
+            let r = root(&mut parent, i);
+            class_max[r] = class_max[r].max(req[i]);
+        }
+        for i in 0..self.slot_count {
+            let need = class_max[root(&mut parent, i)];
+            if self.sizes.slot_elems[i] < need {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_SCRATCH_UNDER,
+                    &graph.name,
+                    format!(
+                        "slot {i} reserves {} elems/sample, execution can park {need}",
+                        self.sizes.slot_elems[i]
+                    ),
+                ));
+            }
+        }
+        for &(a, b) in &edges {
+            if self.sizes.slot_elems[a] != self.sizes.slot_elems[b] {
+                fs.push(Finding::new(
+                    Severity::Warning,
+                    PLAN_LEVELING,
+                    &graph.name,
+                    format!(
+                        "swap-connected slots {a}/{b} reserve {} vs {} elems — a warm \
+                         run can reallocate after the swap",
+                        self.sizes.slot_elems[a], self.sizes.slot_elems[b]
+                    ),
+                ));
+            }
+        }
+        for (name, need, have) in [
+            ("col", col, self.sizes.col),
+            ("mat", mat, self.sizes.mat),
+            ("xq", xq, self.sizes.xq),
+            ("qkv", qkv, self.sizes.qkv),
+            ("sc", sc, self.sizes.sc),
+            ("sxw", sxw, self.sizes.sxw),
+            ("max_rank", max_rank, self.sizes.max_rank),
+        ] {
+            if have < need {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_SCRATCH_UNDER,
+                    &graph.name,
+                    format!("{name} high-water mark {have} below required {need}"),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// qparam sanity
+// ---------------------------------------------------------------------------
+
+/// Sanity-check every quantization parameter and float payload of a
+/// deployment. Standalone over the raw maps so the [`Sabotage`] API can
+/// feed corrupted copies without mutating a live model.
+pub(crate) fn qparam_findings(
+    qweights: &HashMap<String, QWeight>,
+    act_ranges: &HashMap<String, (f32, f32)>,
+    params: &BTreeMap<String, Tensor>,
+    bn: &BTreeMap<String, Tensor>,
+) -> Vec<Finding> {
+    let mut fs = Vec::new();
+    let mut wkeys: Vec<&String> = qweights.keys().collect();
+    wkeys.sort();
+    for key in wkeys {
+        let qw = &qweights[key];
+        if qw.bits != 8 && qw.bits != 4 {
+            fs.push(Finding::new(
+                Severity::Error,
+                QP_WEIGHT_SCALE,
+                key,
+                format!("unsupported weight bit-width {}", qw.bits),
+            ));
+        }
+        if let Some((c, &s)) =
+            qw.scales.iter().enumerate().find(|(_, s)| !s.is_finite() || **s <= 0.0)
+        {
+            fs.push(Finding::new(
+                Severity::Error,
+                QP_WEIGHT_SCALE,
+                key,
+                format!("channel {c} scale {s} is not a finite positive number"),
+            ));
+        }
+        let sums = row_sums_of(&qw.unpacked_data(), qw.cout());
+        if sums != qw.row_sums {
+            fs.push(Finding::new(
+                Severity::Error,
+                QP_PAYLOAD,
+                key,
+                "stored row sums disagree with the payload (zero-point correction \
+                 would silently corrupt results)"
+                    .to_string(),
+            ));
+        }
+    }
+    let mut rkeys: Vec<&String> = act_ranges.keys().collect();
+    rkeys.sort();
+    for key in rkeys {
+        let (lo, hi) = act_ranges[key];
+        if !lo.is_finite() || !hi.is_finite() || lo > hi {
+            fs.push(Finding::new(
+                Severity::Error,
+                QP_RANGE,
+                key,
+                format!("calibrated range ({lo}, {hi}) is non-finite or inverted"),
+            ));
+            continue;
+        }
+        if hi - lo < EPS {
+            fs.push(Finding::new(
+                Severity::Info,
+                QP_RANGE,
+                key,
+                format!("degenerate range ({lo}, {hi}) — widened to span zero at plan time"),
+            ));
+        }
+        let (s, z) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+        if !s.is_finite() || s <= 0.0 {
+            fs.push(Finding::new(
+                Severity::Error,
+                QP_SCALE,
+                key,
+                format!("derived activation scale {s} is not a finite positive number"),
+            ));
+        }
+        if !(0..=255).contains(&z) {
+            fs.push(Finding::new(
+                Severity::Error,
+                QP_ZP,
+                key,
+                format!("derived zero point {z} outside the u8 grid"),
+            ));
+        }
+    }
+    for (label, map) in [("param", params), ("bn", bn)] {
+        for (key, t) in map.iter() {
+            let bad = t.data.iter().filter(|v| !v.is_finite()).count();
+            if bad > 0 {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    NONFINITE_PARAM,
+                    key,
+                    format!("{label} tensor carries {bad} non-finite of {} values", t.data.len()),
+                ));
+            }
+        }
+    }
+    fs
+}
+
+// ---------------------------------------------------------------------------
+// interval audit over a compiled model
+// ---------------------------------------------------------------------------
+
+/// One integer GEMM layer's accumulator audit row (the per-layer
+/// saturation-risk table of `AUDIT.txt`).
+#[derive(Clone, Debug)]
+pub struct LayerAudit {
+    /// Graph node name (attention layers contribute one row per projection).
+    pub node: String,
+    /// `conv2d` / `linear` / `attention.wq` … label for the table.
+    pub kind: String,
+    /// Weight bit-width of the payload (8 or 4).
+    pub bits: u8,
+    /// Reduction length (actual K dimension of the GEMM).
+    pub k: usize,
+    /// Worst-case i32 accumulator bounds from the actual payload.
+    pub acc: AccBounds,
+    /// `log2(i32::MAX / max_abs)` — bits of headroom before overflow.
+    pub headroom_bits: f64,
+    /// Worst-case requant clipping excess at this node (0 = saturation-free).
+    pub clip: f64,
+    /// max/median per-channel weight scale (1.0 when per-tensor or < 4 ch).
+    pub scale_ratio: f64,
+}
+
+/// Full static audit of one deployment: findings from all three analyses,
+/// the per-layer accumulator table, and the raw per-node intervals.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    pub layers: Vec<LayerAudit>,
+    pub reports: BTreeMap<String, NodeReport>,
+}
+
+impl AuditReport {
+    pub fn has_errors(&self) -> bool {
+        has_errors(&self.findings)
+    }
+
+    /// Node names flagged as numerical risks (Warning-or-worse overflow,
+    /// saturation, or scale-inflation findings) — the set the perf model's
+    /// `estimate_audited` charges the headroom mitigation term to.
+    pub fn flagged_nodes(&self) -> std::collections::BTreeSet<String> {
+        self.findings
+            .iter()
+            .filter(|f| {
+                f.severity >= Severity::Warning
+                    && matches!(f.code, ACC_OVERFLOW | SAT_CLIP | SCALE_INFLATION)
+            })
+            .map(|f| f.node.clone())
+            .collect()
+    }
+}
+
+impl CompiledModel {
+    /// Run the plan replay verifier and qparam sanity checks. (In debug
+    /// builds `plan()` itself already refuses to return a plan with ERROR
+    /// findings, so this surfaces them as `Err` there; release builds get
+    /// the findings list.)
+    pub fn verify(&self) -> Result<Vec<Finding>> {
+        let mut fs = qparam_findings(&self.qweights, &self.act_ranges, &self.params, &self.bn);
+        fs.extend(self.plan()?.verify(&self.graph));
+        Ok(fs)
+    }
+
+    /// Full static audit: plan verification, qparam sanity, and interval /
+    /// accumulator-overflow analysis. `input` is the worst-case (lo, hi)
+    /// range of the input tensor (e.g. the eval set's observed range);
+    /// `None` uses the default normalized-image interval.
+    pub fn audit(&self, input: Option<(f32, f32)>) -> Result<AuditReport> {
+        let mut findings = self.verify()?;
+        let (ctx, mut layers) = self.analysis_ctx()?;
+        let mut cfg = PropagateCfg::default();
+        if let Some((lo, hi)) = input {
+            let (lo, hi) = (lo.min(hi) as f64, hi.max(lo) as f64);
+            cfg.input = Interval::new(lo, hi);
+        }
+        match self.cfg.act_mode {
+            ActMode::Bf16 => cfg.narrow_rel = lowp::BF16_REL_STEP,
+            ActMode::F16 => {
+                cfg.narrow_rel = lowp::F16_REL_STEP;
+                cfg.inf_threshold = Some(lowp::F16_MAX_FINITE);
+            }
+            _ => {}
+        }
+        let reports = propagate(&self.graph, &ctx, &cfg)?;
+        for la in &mut layers {
+            la.clip = reports.get(&la.node).map(|r| r.clip).unwrap_or(0.0);
+            if la.acc.max_abs > i32::MAX as i64 {
+                findings.push(Finding::new(
+                    Severity::Error,
+                    ACC_OVERFLOW,
+                    &la.node,
+                    format!(
+                        "{} K={} int{}: worst-case |acc| {} exceeds i32::MAX",
+                        la.kind, la.k, la.bits, la.acc.max_abs
+                    ),
+                ));
+            } else if la.headroom_bits < 1.0 {
+                findings.push(Finding::new(
+                    Severity::Warning,
+                    ACC_OVERFLOW,
+                    &la.node,
+                    format!(
+                        "{} K={} int{}: only {:.2} bits of accumulator headroom",
+                        la.kind, la.k, la.bits, la.headroom_bits
+                    ),
+                ));
+            }
+            if la.scale_ratio > 8.0 {
+                findings.push(Finding::new(
+                    Severity::Warning,
+                    SCALE_INFLATION,
+                    &la.node,
+                    format!(
+                        "{}: max/median per-channel weight scale {:.1}× — outlier \
+                         channels inflate the shared input grid",
+                        la.kind, la.scale_ratio
+                    ),
+                ));
+            }
+        }
+        for (name, r) in &reports {
+            if r.clip > 0.25 {
+                findings.push(Finding::new(
+                    Severity::Warning,
+                    SAT_CLIP,
+                    name,
+                    format!(
+                        "worst-case range spills {:.0}% of the grid span past the \
+                         static requant grid",
+                        r.clip * 100.0
+                    ),
+                ));
+            } else if r.clip > 0.02 {
+                findings.push(Finding::new(
+                    Severity::Info,
+                    SAT_CLIP,
+                    name,
+                    format!("worst-case range spills {:.1}% past the requant grid", r.clip * 100.0),
+                ));
+            }
+            if matches!(self.cfg.act_mode, ActMode::F16) && !r.out.is_finite() {
+                findings.push(Finding::new(
+                    Severity::Warning,
+                    F16_OVERFLOW,
+                    name,
+                    "worst-case value bound overflows f16 storage to ±inf".to_string(),
+                ));
+            }
+        }
+        Ok(AuditReport { findings, layers, reports })
+    }
+
+    /// True when this deployment runs its conv/linear/attention GEMMs on
+    /// the integer path (pre-quantized payload + integer activation grid).
+    fn integer_gemm(&self, wkey: &str) -> bool {
+        self.cfg.weight_mode.is_integer()
+            && self.int_round().is_some()
+            && self.qweights.contains_key(wkey)
+    }
+
+    /// Input quantization the analysis should model in front of a GEMM
+    /// reading `producer`, mirroring the engine's own dispatch.
+    fn analysis_in_quant(&self, producer: &str) -> Result<InputQuant> {
+        if self.cfg.act_mode.is_dynamic() {
+            return Ok(InputQuant::Dynamic);
+        }
+        let (s, z) = self.input_qparams(producer)?;
+        Ok(InputQuant::Static(QuantGrid::new(s, z)))
+    }
+
+    /// Weight summary for the analysis: on the integer path the *payload's
+    /// dequantization* (what the kernel actually multiplies by), the float
+    /// param otherwise — same resolution order as `weight_tensor`.
+    fn analysis_affine(&self, wkey: &str, rows: usize, bias: Option<&[f32]>) -> Result<AffineRows> {
+        let w = self.weight_tensor(wkey)?;
+        Ok(AffineRows::from_weights(&w.data, rows, bias))
+    }
+
+    /// Accumulator audit row for one integer GEMM.
+    fn layer_audit(
+        &self,
+        node: &str,
+        kind: &str,
+        qw: &QWeight,
+        producer: &str,
+    ) -> Result<LayerAudit> {
+        let vals = qw.unpacked_data();
+        let cout = qw.cout();
+        let per = qw.per_row();
+        let mut pos = vec![0i64; cout];
+        let mut neg = vec![0i64; cout];
+        for (r, row) in vals.chunks_exact(per.max(1)).enumerate().take(cout) {
+            for &v in row {
+                if v > 0 {
+                    pos[r] += v as i64;
+                } else {
+                    neg[r] += v as i64;
+                }
+            }
+        }
+        let row_sums: Vec<i64> = qw.row_sums.iter().map(|&v| v as i64).collect();
+        let (zx_lo, zx_hi) = if self.cfg.act_mode.is_dynamic() {
+            (0i64, 255i64)
+        } else {
+            let (_, z) = self.input_qparams(producer)?;
+            (z as i64, z as i64)
+        };
+        let acc = acc_bounds(&pos, &neg, &row_sums, zx_lo, zx_hi);
+        let scale_ratio = if qw.scales.len() >= 4 {
+            let mut s = qw.scales.clone();
+            s.sort_by(f32::total_cmp);
+            let med = s[s.len() / 2];
+            if med > 0.0 {
+                (s[s.len() - 1] / med) as f64
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            1.0
+        };
+        Ok(LayerAudit {
+            node: node.to_string(),
+            kind: kind.to_string(),
+            bits: qw.bits,
+            k: per,
+            acc,
+            headroom_bits: headroom_bits(acc),
+            clip: 0.0,
+            scale_ratio,
+        })
+    }
+
+    /// Build the per-node analysis contexts (and the integer-GEMM layer
+    /// table) from this deployment's actual weights and qparams.
+    fn analysis_ctx(&self) -> Result<(BTreeMap<String, NodeCtx>, Vec<LayerAudit>)> {
+        let mut ctx: BTreeMap<String, NodeCtx> = BTreeMap::new();
+        let mut layers = Vec::new();
+        for n in &self.graph.nodes {
+            match n.kind.as_str() {
+                "conv2d" | "linear" => {
+                    let wkey = format!("{}.w", n.name);
+                    let bias_t = if n.attr_bool("bias") {
+                        self.params.get(&format!("{}.b", n.name))
+                    } else {
+                        None
+                    };
+                    let bias = bias_t.map(|t| t.data.as_slice());
+                    let rows = if n.kind == "conv2d" {
+                        n.attr_usize("cout")?
+                    } else {
+                        n.attr_usize("dout")?
+                    };
+                    let mut nc = NodeCtx {
+                        affine: Some(self.analysis_affine(&wkey, rows, bias)?),
+                        ..Default::default()
+                    };
+                    if self.integer_gemm(&wkey) {
+                        nc.in_quant = self.analysis_in_quant(&n.inputs[0])?;
+                        let qw = &self.qweights[&wkey];
+                        layers.push(self.layer_audit(&n.name, &n.kind, qw, &n.inputs[0])?);
+                    }
+                    ctx.insert(n.name.clone(), nc);
+                }
+                "bn" => {
+                    let get = |suffix: &str, map: &BTreeMap<String, Tensor>| -> Result<Tensor> {
+                        map.get(&format!("{}.{suffix}", n.name))
+                            .cloned()
+                            .with_context(|| format!("audit: bn {} missing {suffix}", n.name))
+                    };
+                    let (g, b) = (get("gamma", &self.params)?, get("beta", &self.params)?);
+                    let (mean, var) = (get("mean", &self.bn)?, get("var", &self.bn)?);
+                    let folded = crate::engine::ops::bn_fold_params(
+                        &g.data,
+                        &b.data,
+                        &mean.data,
+                        &var.data,
+                        crate::engine::BN_EPS,
+                    );
+                    ctx.insert(n.name.clone(), NodeCtx { bn: Some(folded), ..Default::default() });
+                }
+                "layernorm" => {
+                    let g = self
+                        .params
+                        .get(&format!("{}.gamma", n.name))
+                        .with_context(|| format!("audit: ln {} missing gamma", n.name))?;
+                    let b = self
+                        .params
+                        .get(&format!("{}.beta", n.name))
+                        .with_context(|| format!("audit: ln {} missing beta", n.name))?;
+                    let ln = Some((g.data.clone(), b.data.clone()));
+                    ctx.insert(n.name.clone(), NodeCtx { ln, ..Default::default() });
+                }
+                "attention" => {
+                    let d = n.attr_usize("d")?;
+                    let bias = |suffix: &str| {
+                        self.params.get(&format!("{}.{suffix}", n.name)).map(|t| t.data.clone())
+                    };
+                    let (vb, ob) = (bias("vb"), bias("ob"));
+                    let vkey = format!("{}.wv", n.name);
+                    let okey = format!("{}.wo", n.name);
+                    let v = self.analysis_affine(&vkey, d, vb.as_deref())?;
+                    let o = self.analysis_affine(&okey, d, ob.as_deref())?;
+                    let mut at = AttnCtx { v, o, ..Default::default() };
+                    // the engine quantizes all four projection inputs (and
+                    // the context) against the *block input* grid
+                    for mat in ["wq", "wk", "wv", "wo"] {
+                        let wkey = format!("{}.{mat}", n.name);
+                        if self.integer_gemm(&wkey) {
+                            let iq = self.analysis_in_quant(&n.inputs[0])?;
+                            if mat == "wo" {
+                                at.o_quant = iq;
+                            } else if mat == "wv" {
+                                at.in_quant = iq;
+                            }
+                            let qw = &self.qweights[&wkey];
+                            layers.push(self.layer_audit(
+                                &n.name,
+                                &format!("attention.{mat}"),
+                                qw,
+                                &n.inputs[0],
+                            )?);
+                        }
+                    }
+                    ctx.insert(n.name.clone(), NodeCtx { attn: Some(at), ..Default::default() });
+                }
+                "aq" => match self.cfg.act_mode {
+                    ActMode::Int8 { .. } => {
+                        let &(lo, hi) = self
+                            .act_ranges
+                            .get(&n.name)
+                            .with_context(|| format!("audit: no range for aq {}", n.name))?;
+                        let (s, z) = act_scale_zp(lo.min(0.0), hi.max(lo + 1e-6));
+                        ctx.insert(
+                            n.name.clone(),
+                            NodeCtx { quant: Some(QuantGrid::new(s, z)), ..Default::default() },
+                        );
+                    }
+                    ActMode::DynInt8 { .. } => {
+                        ctx.insert(
+                            n.name.clone(),
+                            NodeCtx { dyn_quant: true, ..Default::default() },
+                        );
+                    }
+                    _ => {}
+                },
+                _ => {}
+            }
+        }
+        Ok((ctx, layers))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sabotage: negative-test corruption of a cloned plan
+// ---------------------------------------------------------------------------
+
+/// One class of plan/qparam corruption the verifier must catch. Used by the
+/// negative tests and by `plan_audit --sabotage` (the CI audit job asserts
+/// a nonzero exit on every class).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sabotage {
+    /// Point a kernel's output slot at its own input slot.
+    AliasInputOutput,
+    /// Rewire an input read to a slot that never holds the value.
+    StaleRead,
+    /// Advertise the wrong slot as a graph output.
+    UncoveredOutput,
+    /// Understate a scratch high-water mark.
+    ScratchUnderestimate,
+    /// Claim a last-use (buffer steal) liveness refutes.
+    BogusSwap,
+    /// Corrupt quantization parameters (NaN range, zero weight scale).
+    BadQparam,
+}
+
+impl Sabotage {
+    pub const ALL: [Sabotage; 6] = [
+        Sabotage::AliasInputOutput,
+        Sabotage::StaleRead,
+        Sabotage::UncoveredOutput,
+        Sabotage::ScratchUnderestimate,
+        Sabotage::BogusSwap,
+        Sabotage::BadQparam,
+    ];
+
+    /// CLI name (`plan_audit --sabotage <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Sabotage::AliasInputOutput => "alias",
+            Sabotage::StaleRead => "stale-read",
+            Sabotage::UncoveredOutput => "uncovered-output",
+            Sabotage::ScratchUnderestimate => "scratch-under",
+            Sabotage::BogusSwap => "bogus-swap",
+            Sabotage::BadQparam => "bad-qparam",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Sabotage> {
+        Sabotage::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// The finding code this corruption must surface (at ERROR severity).
+    pub fn expected_code(self) -> &'static str {
+        match self {
+            Sabotage::AliasInputOutput => PLAN_ALIAS,
+            Sabotage::StaleRead => PLAN_STALE_READ,
+            Sabotage::UncoveredOutput => PLAN_OUTPUT_UNCOVERED,
+            Sabotage::ScratchUnderestimate => PLAN_SCRATCH_UNDER,
+            Sabotage::BogusSwap => PLAN_BAD_LIVENESS,
+            Sabotage::BadQparam => QP_RANGE,
+        }
+    }
+}
+
+impl CompiledModel {
+    /// Clone this deployment's plan (or qparam set), corrupt it with one
+    /// [`Sabotage`] class, and return what the verifier reports. The caller
+    /// asserts `expected_code()` shows up at ERROR severity — proving the
+    /// verifier catches that violation class on this very model.
+    pub fn verify_sabotaged(&self, s: Sabotage) -> Result<Vec<Finding>> {
+        if s == Sabotage::BadQparam {
+            let mut qws = self.qweights.clone();
+            let mut ranges = self.act_ranges.clone();
+            ranges.insert("__sabotaged_aq".to_string(), (f32::NAN, 1.0));
+            if let Some(qw) = qws.values_mut().next() {
+                if let Some(s0) = qw.scales.first_mut() {
+                    *s0 = 0.0;
+                }
+            }
+            return Ok(qparam_findings(&qws, &ranges, &self.params, &self.bn));
+        }
+        let mut plan = self.plan()?.clone();
+        if plan.slot_count < 2 {
+            bail!("sabotage needs a plan with at least 2 slots");
+        }
+        match s {
+            Sabotage::AliasInputOutput => {
+                let victim = plan
+                    .nodes
+                    .iter_mut()
+                    .find(|pn| {
+                        !pn.in_slots.is_empty()
+                            && !matches!(
+                                pn.op,
+                                POp::Input
+                                    | POp::Act(_)
+                                    | POp::Aq { .. }
+                                    | POp::AqDyn { .. }
+                                    | POp::AqNoop
+                                    | POp::Flatten
+                                    | POp::Reshape { .. }
+                                    | POp::Add
+                                    | POp::Mul
+                            )
+                    })
+                    .context("sabotage: no aliasing-sensitive node in plan")?;
+                victim.out_slot = victim.in_slots[0];
+            }
+            Sabotage::StaleRead => {
+                let slots = plan.slot_count;
+                let victim = plan
+                    .nodes
+                    .iter_mut()
+                    .find(|pn| !pn.in_slots.is_empty())
+                    .context("sabotage: no reading node in plan")?;
+                victim.in_slots[0] = (victim.in_slots[0] + 1) % slots;
+            }
+            Sabotage::UncoveredOutput => {
+                let slots = plan.slot_count;
+                let o = plan.output_slots.first_mut().context("sabotage: plan has no outputs")?;
+                *o = (*o + 1) % slots;
+            }
+            Sabotage::ScratchUnderestimate => {
+                let slot = plan.nodes.last().context("sabotage: empty plan")?.out_slot;
+                plan.sizes.slot_elems[slot] = 0;
+            }
+            Sabotage::BogusSwap => {
+                let victim = plan
+                    .nodes
+                    .iter_mut()
+                    .flat_map(|pn| pn.in_last.iter_mut())
+                    .find(|last| !**last)
+                    .context("sabotage: every input is already a last use")?;
+                *victim = true;
+            }
+            Sabotage::BadQparam => unreachable!("handled above"),
+        }
+        Ok(plan.verify(&self.graph))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_prints() {
+        assert!(Severity::Error > Severity::Warning && Severity::Warning > Severity::Info);
+        let f = Finding::new(Severity::Error, PLAN_ALIAS, "c1", "output aliases input".into());
+        let s = format!("{f}");
+        assert!(s.contains("ERROR") && s.contains("PLAN_ALIAS") && s.contains("c1"));
+        assert!(has_errors(&[f]));
+        assert!(!has_errors(&[Finding::new(
+            Severity::Info,
+            SAT_CLIP,
+            "q1",
+            "minor".into()
+        )]));
+    }
+
+    #[test]
+    fn sabotage_names_round_trip() {
+        for s in Sabotage::ALL {
+            assert_eq!(Sabotage::parse(s.name()), Some(s), "{s:?}");
+            assert!(!s.expected_code().is_empty());
+        }
+        assert_eq!(Sabotage::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn qparam_sanity_flags_each_corruption() {
+        use crate::tensor::Tensor;
+        let mut qws: HashMap<String, QWeight> = HashMap::new();
+        let w = Tensor::new(vec![2, 3], vec![0.5, -0.25, 0.1, 1.0, -1.0, 0.75]);
+        let good = QWeight::quantize(
+            &w,
+            crate::tensor::QuantScheme::PerChannelSym,
+            crate::tensor::RoundMode::TiesEven,
+        );
+        qws.insert("good.w".into(), good.clone());
+        let mut ranges: HashMap<String, (f32, f32)> = HashMap::new();
+        ranges.insert("ok".into(), (-1.0, 2.0));
+        let clean = qparam_findings(&qws, &ranges, &BTreeMap::new(), &BTreeMap::new());
+        assert!(!has_errors(&clean), "{clean:?}");
+
+        let mut bad = good.clone();
+        bad.scales[0] = f32::NAN;
+        qws.insert("bad.w".into(), bad);
+        let mut skewed = good;
+        skewed.row_sums[0] += 1;
+        qws.insert("skewed.w".into(), skewed);
+        ranges.insert("nan".into(), (f32::NAN, 1.0));
+        ranges.insert("inverted".into(), (2.0, -1.0));
+        let mut params = BTreeMap::new();
+        params.insert("p.w".to_string(), Tensor::new(vec![2], vec![1.0, f32::INFINITY]));
+        let fs = qparam_findings(&qws, &ranges, &params, &BTreeMap::new());
+        let codes: Vec<&str> = fs
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .map(|f| f.code)
+            .collect();
+        assert!(codes.contains(&QP_WEIGHT_SCALE), "{fs:?}");
+        assert!(codes.contains(&QP_PAYLOAD), "{fs:?}");
+        assert!(codes.contains(&QP_RANGE), "{fs:?}");
+        assert!(codes.contains(&NONFINITE_PARAM), "{fs:?}");
+    }
+}

@@ -14,6 +14,11 @@
 //! Python never runs on the request path: after `make artifacts` the binary
 //! and all examples are self-contained.
 
+// Every unsafe operation must sit in its own `unsafe` block with a
+// `// SAFETY:` obligation (clippy::undocumented_unsafe_blocks enforces the
+// comments in CI's lint job; the audit gate greps both).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod backends;
 pub mod calib;
 pub mod ckpt;

@@ -171,9 +171,33 @@ pub fn estimate_scaled(
     runtime_boost: f64,
     unsupported: &dyn Fn(&str) -> bool,
 ) -> PerfReport {
+    estimate_audited(graph, dev, prec, scaling, batch, runtime_boost, unsupported, &|_| false)
+}
+
+/// [`estimate_scaled`] with the static auditor's findings folded in:
+/// `flagged` receives each node *name* and returns true for layers the plan
+/// auditor marked as saturation / accumulator-headroom risks
+/// (`engine::verify` — low headroom, requant clipping, scale inflation).
+/// A flagged integer layer pays a **headroom mitigation term**: the runtime
+/// splits its accumulation (or inserts an extra rescale pass) to keep the
+/// i32 accumulator in range, modelled like the dynamic-scaling term as one
+/// extra output-activation pass at memory bandwidth plus half an op
+/// dispatch for the rescale stage. Float deployments have no integer
+/// accumulators, so the term is zero there.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_audited(
+    graph: &Graph,
+    dev: &DeviceSpec,
+    prec: Precision,
+    scaling: ActScaling,
+    batch: usize,
+    runtime_boost: f64,
+    unsupported: &dyn Fn(&str) -> bool,
+    flagged: &dyn Fn(&str) -> bool,
+) -> PerfReport {
     let peak = dev.peak_ops(prec).max(1e9);
-    let dynamic_act =
-        scaling == ActScaling::Dynamic && matches!(prec, Precision::Int4 | Precision::Int8);
+    let integer_prec = matches!(prec, Precision::Int4 | Precision::Int8);
+    let dynamic_act = scaling == ActScaling::Dynamic && integer_prec;
     let eff = (dev.efficiency * runtime_boost).min(0.95);
     let mut compute_s = 0.0f64;
     let mut busy_s = 0.0f64;
@@ -203,6 +227,14 @@ pub fn estimate_scaled(
             // per-node dynamic-scaling overhead: re-read the output
             // activation for the range scan + half a dispatch to sync the
             // reduced (lo, hi) into the requantization stage
+            let act_bytes = graph.node_out_bytes(n) as f64 / 4.0 * bytes_per * batch as f64;
+            busy_s += act_bytes / (dev.mem_bw_gbs * 1e9)
+                + 0.5 * dev.op_overhead_us / runtime_boost / 1e6;
+        }
+        if integer_prec && flagged(&n.name) {
+            // headroom mitigation for auditor-flagged layers: one extra
+            // pass over the layer output (split accumulation / rescale)
+            // plus half a dispatch for the inserted stage
             let act_bytes = graph.node_out_bytes(n) as f64 / 4.0 * bytes_per * batch as f64;
             busy_s += act_bytes / (dev.mem_bw_gbs * 1e9)
                 + 0.5 * dev.op_overhead_us / runtime_boost / 1e6;
@@ -344,6 +376,56 @@ mod tests {
             let dy = estimate_scaled(&g, &d, p, ActScaling::Dynamic, 1, 1.0, &|_| false);
             assert_eq!(st.latency_ms, dy.latency_ms, "{p:?}");
         }
+    }
+
+    #[test]
+    fn audited_headroom_term_costs_latency_only_when_flagged() {
+        let g = toy_graph();
+        let d = dev();
+        for p in [Precision::Int8, Precision::Int4] {
+            let clean = estimate_scaled(&g, &d, p, ActScaling::Static, 1, 1.0, &|_| false);
+            let none = estimate_audited(
+                &g,
+                &d,
+                p,
+                ActScaling::Static,
+                1,
+                1.0,
+                &|_| false,
+                &|_| false,
+            );
+            assert_eq!(clean.latency_ms, none.latency_ms, "{p:?}: no flags == estimate_scaled");
+            let flagged = estimate_audited(
+                &g,
+                &d,
+                p,
+                ActScaling::Static,
+                1,
+                1.0,
+                &|_| false,
+                &|name| name == "c1",
+            );
+            assert!(
+                flagged.latency_ms > none.latency_ms,
+                "{p:?}: flagged layer must pay the mitigation term ({} vs {})",
+                flagged.latency_ms,
+                none.latency_ms
+            );
+        }
+        // float deployments carry no integer accumulators -> term is free
+        let clean =
+            estimate_scaled(&g, &d, Precision::Fp16, ActScaling::Static, 1, 1.0, &|_| false);
+        let flagged = estimate_audited(
+            &g,
+            &d,
+            Precision::Fp16,
+            ActScaling::Static,
+            1,
+            1.0,
+            &|_| false,
+            &|_| true,
+        );
+        assert_eq!(clean.latency_ms, flagged.latency_ms);
     }
 
     #[test]

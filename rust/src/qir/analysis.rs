@@ -1,0 +1,712 @@
+//! Static interval (worst-case range) analysis over QIR graphs.
+//!
+//! Pure math layer of the plan auditor (`engine::verify`): everything here
+//! works on plain slices and attrs — no engine types — so the same transfer
+//! functions serve the compiled integer engine, the interpreter, and tests.
+//! The contract is **soundness, not tightness**: every transfer returns an
+//! interval that contains all values the corresponding kernel can produce
+//! (including quantization error, saturation, and f32 round-off slop), at
+//! the cost of some conservatism. `engine::verify` layers the
+//! engine-specific context (dequantized weights, qparams, narrowing mode)
+//! on top and turns the propagated intervals into findings.
+//!
+//! The one genuinely load-bearing result: combined with the per-row integer
+//! payload sums in [`acc_bounds`], the propagated intervals *prove* that no
+//! i8×i8→i32 accumulator in a deployment can overflow — per layer, at the
+//! graph's actual K dimensions, for both 8- and 4-bit weight grids.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::Graph;
+
+/// Relative widening applied after every op for f32 summation round-off.
+/// A K-term f32 dot product carries relative error ~K·2⁻²⁴; 1e-4 covers
+/// K up to ~1000 with two orders of magnitude to spare.
+pub const SUM_REL: f64 = 1e-4;
+/// Absolute widening floor (covers denormal flushing and ±0 slop).
+pub const ABS_SLOP: f64 = 1e-6;
+
+/// A closed interval of f64 values (±∞ endpoints allowed).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn new(lo: f64, hi: f64) -> Interval {
+        debug_assert!(!(lo > hi), "inverted interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    pub fn point(v: f64) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    /// The whole real line — the sound answer when nothing tighter holds.
+    pub fn full() -> Interval {
+        Interval { lo: f64::NEG_INFINITY, hi: f64::INFINITY }
+    }
+
+    pub fn hull(self, o: Interval) -> Interval {
+        Interval { lo: self.lo.min(o.lo), hi: self.hi.max(o.hi) }
+    }
+
+    /// Hull with a single point (e.g. the implicit 0 of a padded pool).
+    pub fn with(self, v: f64) -> Interval {
+        Interval { lo: self.lo.min(v), hi: self.hi.max(v) }
+    }
+
+    pub fn add(self, o: Interval) -> Interval {
+        Interval { lo: self.lo + o.lo, hi: self.hi + o.hi }
+    }
+
+    /// Interval product. A NaN corner (0·∞) degrades to the full line —
+    /// conservative, never unsound.
+    pub fn mul(self, o: Interval) -> Interval {
+        let ps = [self.lo * o.lo, self.lo * o.hi, self.hi * o.lo, self.hi * o.hi];
+        if ps.iter().any(|p| p.is_nan()) {
+            return Interval::full();
+        }
+        Interval {
+            lo: ps.iter().fold(f64::INFINITY, |a, &b| a.min(b)),
+            hi: ps.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b)),
+        }
+    }
+
+    /// Largest magnitude in the interval.
+    pub fn amax(self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Widen both endpoints outward by `rel · amax + abs`.
+    pub fn widen(self, rel: f64, abs: f64) -> Interval {
+        let m = self.amax();
+        let pad = if m.is_finite() { rel * m + abs } else { abs };
+        Interval { lo: self.lo - pad, hi: self.hi + pad }
+    }
+
+    pub fn contains(self, v: f64) -> bool {
+        v >= self.lo && v <= self.hi
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.lo.is_finite() && self.hi.is_finite()
+    }
+}
+
+/// An asymmetric u8 activation grid: representable dequantized values are
+/// `(q - zp) · scale` for `q ∈ [0, 255]`.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantGrid {
+    pub scale: f64,
+    pub zp: i32,
+}
+
+impl QuantGrid {
+    pub fn new(scale: f32, zp: i32) -> QuantGrid {
+        QuantGrid { scale: scale as f64, zp }
+    }
+
+    /// Smallest representable value, `(0 - zp) · scale`.
+    pub fn lo(&self) -> f64 {
+        -(self.zp as f64) * self.scale
+    }
+
+    /// Largest representable value, `(255 - zp) · scale`.
+    pub fn hi(&self) -> f64 {
+        (255.0 - self.zp as f64) * self.scale
+    }
+
+    /// Sound transfer of quantize-then-dequantize: the map is monotone with
+    /// |x̂ − x| ≤ scale/2 inside the grid, and saturates to the grid edges
+    /// outside it — so endpoint images (widened a half step, clamped to the
+    /// grid hull) bound every output.
+    pub fn quantize(&self, x: Interval) -> Interval {
+        let half = self.scale * 0.5 * (1.0 + 1e-3) + 1e-9;
+        let (glo, ghi) = (self.lo(), self.hi());
+        Interval::new((x.lo - half).clamp(glo, ghi), (x.hi + half).clamp(glo, ghi))
+    }
+
+    /// Fraction of the incoming range that saturates: how far `x` spills
+    /// past the grid hull, relative to the grid span. 0.0 = no clipping
+    /// possible; 0.5 = the worst-case input overshoots by half a grid span.
+    pub fn clip_excess(&self, x: Interval) -> f64 {
+        let span = (self.hi() - self.lo()).max(1e-12);
+        let over = (x.hi - self.hi()).max(0.0);
+        let under = (self.lo() - x.lo).max(0.0);
+        (over.max(under) / span).max(0.0)
+    }
+}
+
+/// Sound transfer of *dynamic* per-tensor quant-dequant (`dyn_qparams` +
+/// requant): the runtime widens the live range to span zero and uses step
+/// `s = (hi_w − lo_w)/255`, so with the live range contained in `x` the
+/// error is at most one worst-case step (half for value rounding, half for
+/// zero-point rounding).
+pub fn dyn_quantize(x: Interval) -> Interval {
+    let lo_w = x.lo.min(0.0);
+    let hi_w = x.hi.max(x.lo + 1e-6).max(0.0);
+    let s_max = ((hi_w - lo_w) / 255.0).max(1e-6 / 255.0);
+    let pad = s_max * (1.0 + 1e-3) + 1e-9;
+    Interval::new(x.lo - pad, x.hi + pad)
+}
+
+/// Per-output-row affine summary of a weight matrix: positive-coefficient
+/// sum, negative-coefficient sum, and bias per row. Gives the *exact*
+/// per-row extreme of `Σ w·x + b` over a scalar input interval (the affine
+/// image of a box is attained at a corner, picked by coefficient sign).
+#[derive(Clone, Debug, Default)]
+pub struct AffineRows {
+    pub pos: Vec<f64>,
+    pub neg: Vec<f64>,
+    pub bias: Vec<f64>,
+}
+
+impl AffineRows {
+    /// Summarize a row-major `(rows, k)` weight matrix. Grouped conv
+    /// weights flatten to exactly this layout (each output channel's row
+    /// spans only its own group), so callers pass conv weights unchanged.
+    pub fn from_weights(w: &[f32], rows: usize, bias: Option<&[f32]>) -> AffineRows {
+        let rows = rows.max(1);
+        let per = w.len() / rows;
+        let mut pos = vec![0.0f64; rows];
+        let mut neg = vec![0.0f64; rows];
+        for r in 0..rows {
+            for &v in &w[r * per..(r + 1) * per] {
+                let v = v as f64;
+                if v > 0.0 {
+                    pos[r] += v;
+                } else {
+                    neg[r] += v;
+                }
+            }
+        }
+        let bias = match bias {
+            Some(b) => b.iter().map(|&v| v as f64).collect(),
+            None => Vec::new(),
+        };
+        AffineRows { pos, neg, bias }
+    }
+
+    fn bias_at(&self, r: usize) -> f64 {
+        self.bias.get(r).copied().unwrap_or(0.0)
+    }
+
+    /// Interval of `Σ_j w_rj x_j + b_r` over all rows, for `x_j ∈ x`.
+    pub fn apply(&self, x: Interval) -> Interval {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for r in 0..self.pos.len() {
+            let b = self.bias_at(r);
+            lo = lo.min(self.pos[r] * x.lo + self.neg[r] * x.hi + b);
+            hi = hi.max(self.pos[r] * x.hi + self.neg[r] * x.lo + b);
+        }
+        if lo > hi {
+            return Interval::point(0.0);
+        }
+        Interval::new(lo, hi)
+    }
+
+    /// Upper bound on `Σ|w||x| + |b|` over rows — the magnitude the f32
+    /// round-off widening is relative to.
+    pub fn mag(&self, x: Interval) -> f64 {
+        let m = x.amax();
+        (0..self.pos.len())
+            .map(|r| (self.pos[r] - self.neg[r]) * m + self.bias_at(r).abs())
+            .fold(0.0f64, f64::max)
+    }
+}
+
+/// Interval image of an activation by QIR kind name. Monotone activations
+/// map endpoints; the valley-shaped ones (hswish/silu/gelu) are unimodal,
+/// so endpoints plus a padded global minimum cover every interior point.
+/// Returns `None` for kinds that are not activations.
+pub fn act_interval(kind: &str, x: Interval) -> Option<Interval> {
+    let f: fn(f64) -> f64 = match kind {
+        "relu" => |v| v.max(0.0),
+        "relu6" => |v| v.clamp(0.0, 6.0),
+        "hsigmoid" => |v| (v + 3.0).clamp(0.0, 6.0) / 6.0,
+        "sigmoid" => |v| 1.0 / (1.0 + (-v).exp()),
+        "hswish" => |v| v * (v + 3.0).clamp(0.0, 6.0) / 6.0,
+        "silu" => |v| v / (1.0 + (-v).exp()),
+        "gelu" => |v| {
+            let c = (2.0f64 / std::f64::consts::PI).sqrt();
+            0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+        },
+        _ => return None,
+    };
+    let (a, b) = (f(x.lo), f(x.hi));
+    let mut lo = a.min(b);
+    let mut hi = a.max(b);
+    // Valley functions: if the interval reaches any negative input, union
+    // in the (slightly padded) global minimum; the true minima are
+    // hswish −0.375 @ −1.5, silu ≈ −0.27846 @ −1.2784, gelu ≈ −0.1700.
+    let min_pad = match kind {
+        "hswish" => Some(-0.3755),
+        "silu" => Some(-0.2790),
+        "gelu" => Some(-0.1705),
+        _ => None,
+    };
+    if let Some(m) = min_pad {
+        if x.lo < 0.0 {
+            lo = lo.min(m);
+        }
+    }
+    Some(Interval::new(lo, hi))
+}
+
+/// Interval of a layernorm output, **independent of the input**: for a
+/// population-variance layernorm over `d` elements the z-score obeys
+/// `|z| ≤ √(d−1)` (extremal when one element carries all the deviation;
+/// the variance-floor `eps` only shrinks it), so the output is bounded by
+/// the per-channel affine `γ_c z + β_c`.
+pub fn layernorm_interval(d: usize, gamma: &[f32], beta: &[f32]) -> Interval {
+    let d = d.max(1) as f64;
+    let zb = (d - 1.0).sqrt();
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let n = gamma.len().max(beta.len()).max(1);
+    for c in 0..n {
+        let g = gamma.get(c).copied().unwrap_or(1.0).abs() as f64;
+        let b = beta.get(c).copied().unwrap_or(0.0) as f64;
+        lo = lo.min(-g * zb + b);
+        hi = hi.max(g * zb + b);
+    }
+    Interval::new(lo, hi)
+}
+
+/// Worst-case i32 accumulator bounds of a requantizing u8×i8 GEMM row
+/// sweep. `pos`/`neg` are the per-row sums of positive / negative integer
+/// weight payload values, `row_sums` the full per-row payload sums (the
+/// zero-point correction term), and `zx ∈ [zx_lo, zx_hi]` the activation
+/// zero point. Activations are u8 ∈ [0, 255] after clamping, so:
+///
+/// * raw accumulator: `acc_r ∈ [255·neg_r, 255·pos_r]` — and every partial
+///   sum too, because prefix sums of same-signed term groups are monotone;
+/// * corrected value: `acc_r − zx·row_sum_r`;
+/// * `max_abs` covers every i32 intermediate (raw acc, correction term,
+///   corrected result) — the quantity that must stay below `i32::MAX`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccBounds {
+    pub lo: i64,
+    pub hi: i64,
+    pub max_abs: i64,
+}
+
+pub fn acc_bounds(pos: &[i64], neg: &[i64], row_sums: &[i64], zx_lo: i64, zx_hi: i64) -> AccBounds {
+    let mut out = AccBounds::default();
+    for r in 0..pos.len() {
+        let (acc_lo, acc_hi) = (255 * neg[r], 255 * pos[r]);
+        let rs = row_sums.get(r).copied().unwrap_or(0);
+        let (c0, c1) = (zx_lo * rs, zx_hi * rs);
+        let (corr_lo, corr_hi) = (c0.min(c1), c0.max(c1));
+        let lo = acc_lo - corr_hi;
+        let hi = acc_hi - corr_lo;
+        out.lo = out.lo.min(lo);
+        out.hi = out.hi.max(hi);
+        for v in [acc_lo, acc_hi, corr_lo, corr_hi, lo, hi] {
+            out.max_abs = out.max_abs.max(v.abs());
+        }
+    }
+    out
+}
+
+/// [`acc_bounds`] when only the grid is known (no payload): every weight at
+/// the largest magnitude the bit-width allows, every activation at 255.
+pub fn acc_bounds_grid(k: usize, weight_bits: u8) -> AccBounds {
+    let wmax: i64 = if weight_bits == 4 { 8 } else { 128 };
+    let k = k as i64;
+    AccBounds { lo: -2 * 255 * wmax * k, hi: 2 * 255 * wmax * k, max_abs: 2 * 255 * wmax * k }
+}
+
+/// Accumulator headroom in bits: `log2(i32::MAX / max_abs)`. Negative
+/// means a provable overflow is reachable.
+pub fn headroom_bits(b: AccBounds) -> f64 {
+    (i32::MAX as f64 / b.max_abs.max(1) as f64).log2()
+}
+
+/// How a compute node's input is quantized before its integer GEMM.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum InputQuant {
+    /// Float kernel — input used as-is.
+    #[default]
+    None,
+    /// Static asymmetric grid from the producer's calibrated range.
+    Static(QuantGrid),
+    /// Per-tensor dynamic quantization from the live batch.
+    Dynamic,
+}
+
+impl InputQuant {
+    fn apply(&self, x: Interval) -> Interval {
+        match self {
+            InputQuant::None => x,
+            InputQuant::Static(g) => g.quantize(x),
+            InputQuant::Dynamic => dyn_quantize(x),
+        }
+    }
+
+    fn clip(&self, x: Interval) -> f64 {
+        match self {
+            InputQuant::Static(g) => g.clip_excess(x),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Value-analysis context of an attention node: the v/o projections drive
+/// the output bound (softmax rows are convex combinations of v rows, so
+/// q/k only pick the weights); `o_quant` is the output projection's input
+/// quantization — on static integer deployments that grid comes from the
+/// *block input* range (the engine's proxy), which is exactly where
+/// requant saturation risk concentrates.
+#[derive(Clone, Debug, Default)]
+pub struct AttnCtx {
+    pub v: AffineRows,
+    pub o: AffineRows,
+    pub in_quant: InputQuant,
+    pub o_quant: InputQuant,
+}
+
+/// Per-node analysis context supplied by the caller (`engine::verify`
+/// builds it from a `CompiledModel`; tests build it by hand). Everything
+/// defaults to "no extra semantics" so shape-only nodes need no entry.
+#[derive(Clone, Debug, Default)]
+pub struct NodeCtx {
+    /// conv2d / linear weight summary (dequantized under integer modes).
+    pub affine: Option<AffineRows>,
+    /// Input quantization in front of this node's integer GEMM.
+    pub in_quant: InputQuant,
+    /// Folded batchnorm (scale, shift) per channel.
+    pub bn: Option<(Vec<f32>, Vec<f32>)>,
+    /// Layernorm (gamma, beta).
+    pub ln: Option<(Vec<f32>, Vec<f32>)>,
+    /// Attention projections.
+    pub attn: Option<AttnCtx>,
+    /// Static requantization grid of an `aq` node.
+    pub quant: Option<QuantGrid>,
+    /// `aq` node running dynamic per-tensor requantization.
+    pub dyn_quant: bool,
+}
+
+/// Global propagation knobs (activation storage narrowing, round-off).
+#[derive(Clone, Copy, Debug)]
+pub struct PropagateCfg {
+    /// Interval of the graph input tensor.
+    pub input: Interval,
+    /// Per-node relative widening for narrowed activation storage
+    /// (bf16: 2⁻⁸; f16: 2⁻¹⁰; 0.0 for f32/int8 paths).
+    pub narrow_rel: f64,
+    /// Values at or above this magnitude overflow the storage format to
+    /// ±∞ (f16: 65504); `None` = no finite overflow threshold.
+    pub inf_threshold: Option<f64>,
+    /// Relative f32 round-off widening applied after every op.
+    pub sum_rel: f64,
+}
+
+impl Default for PropagateCfg {
+    fn default() -> PropagateCfg {
+        PropagateCfg {
+            input: Interval::new(-2.5, 2.5),
+            narrow_rel: 0.0,
+            inf_threshold: None,
+            sum_rel: SUM_REL,
+        }
+    }
+}
+
+/// Result of propagating one node.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeReport {
+    /// Sound bound on every element this node can output.
+    pub out: Interval,
+    /// Worst-case static-grid clipping excess at this node's quantization
+    /// point(s) (see [`QuantGrid::clip_excess`]); 0.0 = saturation-free.
+    pub clip: f64,
+}
+
+/// Propagate worst-case value intervals through a graph in topological
+/// order. Returns a per-node [`NodeReport`]; fails on unknown node kinds
+/// or missing producers (a malformed graph, not an analysis result).
+pub fn propagate(
+    graph: &Graph,
+    ctx: &BTreeMap<String, NodeCtx>,
+    cfg: &PropagateCfg,
+) -> Result<BTreeMap<String, NodeReport>> {
+    let default_ctx = NodeCtx::default();
+    let mut out: BTreeMap<String, NodeReport> = BTreeMap::new();
+    for n in &graph.nodes {
+        let nc = ctx.get(&n.name).unwrap_or(&default_ctx);
+        let get = |i: usize| -> Result<Interval> {
+            let name = n
+                .inputs
+                .get(i)
+                .with_context(|| format!("analysis: node {} missing input {i}", n.name))?;
+            Ok(out
+                .get(name)
+                .with_context(|| format!("analysis: node {} reads unanalyzed {name}", n.name))?
+                .out)
+        };
+        let mut clip = 0.0f64;
+        let mut iv = match n.kind.as_str() {
+            "input" => cfg.input,
+            "conv2d" | "linear" => {
+                let x = get(0)?;
+                clip = nc.in_quant.clip(x);
+                let xq = nc.in_quant.apply(x);
+                let aff = nc
+                    .affine
+                    .as_ref()
+                    .with_context(|| format!("analysis: no weight summary for {}", n.name))?;
+                let y = aff.apply(xq).widen(0.0, cfg.sum_rel * aff.mag(xq));
+                match n.attrs.get("act") {
+                    Some(kind) => act_interval(kind, y)
+                        .with_context(|| format!("analysis: unknown fused act at {}", n.name))?,
+                    None => y,
+                }
+            }
+            "bn" => {
+                let x = get(0)?;
+                let (scale, shift) = nc
+                    .bn
+                    .as_ref()
+                    .with_context(|| format!("analysis: no bn fold for {}", n.name))?;
+                let mut lo = f64::INFINITY;
+                let mut hi = f64::NEG_INFINITY;
+                for c in 0..scale.len().max(1) {
+                    let s = scale.get(c).copied().unwrap_or(1.0) as f64;
+                    let b = shift.get(c).copied().unwrap_or(0.0) as f64;
+                    let y = x.mul(Interval::point(s)).add(Interval::point(b));
+                    lo = lo.min(y.lo);
+                    hi = hi.max(y.hi);
+                }
+                Interval::new(lo, hi)
+            }
+            "relu" | "relu6" | "hswish" | "hsigmoid" | "sigmoid" | "silu" | "gelu" => {
+                act_interval(&n.kind, get(0)?).expect("covered by match")
+            }
+            "add" => get(0)?.add(get(1)?),
+            "mul" => get(0)?.mul(get(1)?),
+            "maxpool" | "avgpool" => {
+                let x = get(0)?;
+                // padded windows mix in implicit zeros (maxpool: an
+                // all-padding window outputs 0; avgpool: the divisor counts
+                // padding), so the hull must include 0 when pad > 0
+                if n.attr_usize("pad")? > 0 {
+                    x.with(0.0)
+                } else {
+                    x
+                }
+            }
+            // convex combinations / element shuffles stay within the hull
+            "gap" | "tokmean" => get(0)?,
+            "upsample2x" | "flatten" | "reshape" | "to_tokens" => get(0)?,
+            "concat" => get(0)?.hull(get(1)?),
+            "layernorm" => {
+                let (g, b) = nc
+                    .ln
+                    .as_ref()
+                    .with_context(|| format!("analysis: no ln params for {}", n.name))?;
+                get(0)?; // producer must exist even though the bound ignores it
+                layernorm_interval(n.attr_usize("d")?, g, b)
+            }
+            "attention" => {
+                let x = get(0)?;
+                let at = nc
+                    .attn
+                    .as_ref()
+                    .with_context(|| format!("analysis: no attention ctx for {}", n.name))?;
+                clip = at.in_quant.clip(x);
+                let v_in = at.in_quant.apply(x);
+                let v = at.v.apply(v_in).widen(0.0, cfg.sum_rel * at.v.mag(v_in));
+                // softmax context rows are convex combinations of v rows
+                // (weights ≥ 0, summing to 1 up to round-off)
+                let ctxt = v.widen(cfg.sum_rel, ABS_SLOP);
+                clip = clip.max(at.o_quant.clip(ctxt));
+                let o_in = at.o_quant.apply(ctxt);
+                at.o.apply(o_in).widen(0.0, cfg.sum_rel * at.o.mag(o_in))
+            }
+            "aq" => {
+                let x = get(0)?;
+                if let Some(g) = &nc.quant {
+                    clip = g.clip_excess(x);
+                    g.quantize(x)
+                } else if nc.dyn_quant {
+                    dyn_quantize(x)
+                } else {
+                    x
+                }
+            }
+            other => bail!("analysis: unknown node kind {other:?}"),
+        };
+        if n.kind != "input" {
+            iv = iv.widen(cfg.sum_rel + cfg.narrow_rel, ABS_SLOP);
+            if let Some(t) = cfg.inf_threshold {
+                if iv.hi >= t {
+                    iv.hi = f64::INFINITY;
+                }
+                if iv.lo <= -t {
+                    iv.lo = f64::NEG_INFINITY;
+                }
+            }
+        }
+        out.insert(n.name.clone(), NodeReport { out: iv, clip });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(lo: f64, hi: f64) -> Interval {
+        Interval::new(lo, hi)
+    }
+
+    #[test]
+    fn interval_mul_covers_sign_corners() {
+        let a = iv(-2.0, 3.0).mul(iv(-1.0, 4.0));
+        assert_eq!(a, iv(-8.0, 12.0));
+        assert_eq!(iv(0.0, 0.0).mul(Interval::full()), Interval::full());
+    }
+
+    #[test]
+    fn quant_grid_transfer_bounds_the_lut() {
+        // scale 0.1, zp 50: grid spans [-5.0, 20.5]
+        let g = QuantGrid::new(0.1, 50);
+        let q = g.quantize(iv(-100.0, 100.0));
+        assert!(q.lo >= g.lo() - 1e-9 && q.hi <= g.hi() + 1e-9);
+        assert!(g.clip_excess(iv(-100.0, 100.0)) > 1.0);
+        assert_eq!(g.clip_excess(iv(-1.0, 1.0)), 0.0);
+        // every representable value round-trips inside the transfer
+        for q8 in [0i32, 1, 128, 255] {
+            let v = (q8 - 50) as f64 * 0.1;
+            assert!(g.quantize(iv(v, v)).contains(v));
+        }
+    }
+
+    #[test]
+    fn dyn_quantize_is_one_step_wide() {
+        let x = iv(-1.0, 3.0);
+        let q = dyn_quantize(x);
+        let step = 4.0 / 255.0;
+        assert!(q.lo <= x.lo && q.lo >= x.lo - 2.0 * step);
+        assert!(q.hi >= x.hi && q.hi <= x.hi + 2.0 * step);
+    }
+
+    #[test]
+    fn affine_rows_exact_on_known_matrix() {
+        // rows: [1, -2], [3, 4]; bias [10, -10]; x in [-1, 2]
+        let a = AffineRows::from_weights(&[1.0, -2.0, 3.0, 4.0], 2, Some(&[10.0, -10.0]));
+        let y = a.apply(iv(-1.0, 2.0));
+        // row0: [1*(-1) + (-2)*2, 1*2 + (-2)*(-1)] + 10 = [5, 14]
+        // row1: [7*(-1), 7*2] - 10 = [-17, 4]
+        assert_eq!(y, iv(-17.0, 14.0));
+        assert!(a.mag(iv(-1.0, 2.0)) >= 7.0 * 2.0 + 10.0);
+    }
+
+    #[test]
+    fn act_transfers_contain_dense_samples() {
+        for kind in ["relu", "relu6", "hswish", "hsigmoid", "sigmoid", "silu", "gelu"] {
+            for (lo, hi) in [(-6.0, 6.0), (-2.0, -0.5), (-0.3, 0.4), (1.0, 9.0), (-9.0, -3.5)] {
+                let y = act_interval(kind, iv(lo, hi)).unwrap();
+                let mut v = lo;
+                while v <= hi {
+                    let f = match kind {
+                        "relu" => v.max(0.0),
+                        "relu6" => v.clamp(0.0, 6.0),
+                        "hswish" => v * (v + 3.0).clamp(0.0, 6.0) / 6.0,
+                        "hsigmoid" => (v + 3.0).clamp(0.0, 6.0) / 6.0,
+                        "sigmoid" => 1.0 / (1.0 + (-v).exp()),
+                        "silu" => v / (1.0 + (-v).exp()),
+                        "gelu" => {
+                            let c = (2.0f64 / std::f64::consts::PI).sqrt();
+                            0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+                        }
+                        _ => unreachable!(),
+                    };
+                    assert!(
+                        y.contains(f) || (f - y.lo).abs() < 1e-9 || (f - y.hi).abs() < 1e-9,
+                        "{kind}: f({v}) = {f} outside {y:?}"
+                    );
+                    v += 0.01;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_bound_contains_extremal_vector() {
+        // d=4, one element carries all deviation: z = sqrt(d-1) = sqrt(3)
+        let d = 4usize;
+        let x = [10.0f64, 0.0, 0.0, 0.0];
+        let mean = x.iter().sum::<f64>() / d as f64;
+        let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / d as f64;
+        let zmax = x.iter().map(|v| (v - mean) / var.sqrt()).fold(0.0f64, |a, b| a.max(b.abs()));
+        let b = layernorm_interval(d, &[2.0, 1.0], &[0.5, -0.5]);
+        assert!(b.hi >= 2.0 * zmax + 0.5 - 1e-9, "{b:?} vs zmax {zmax}");
+        assert!(b.lo <= -2.0 * zmax - 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn acc_bounds_match_brute_force_row() {
+        // one row of weights: [3, -5, 7], zx in [0, 255]
+        let w = [3i64, -5, 7];
+        let pos: i64 = w.iter().filter(|&&v| v > 0).sum();
+        let neg: i64 = w.iter().filter(|&&v| v < 0).sum();
+        let rs: i64 = w.iter().sum();
+        let b = acc_bounds(&[pos], &[neg], &[rs], 0, 255);
+        // brute force over a coarse lattice of xq values
+        for x0 in [0i64, 100, 255] {
+            for x1 in [0i64, 100, 255] {
+                for x2 in [0i64, 100, 255] {
+                    for zx in [0i64, 128, 255] {
+                        let acc = 3 * x0 - 5 * x1 + 7 * x2;
+                        let corr = acc - zx * rs;
+                        assert!(corr >= b.lo && corr <= b.hi, "{corr} outside {b:?}");
+                        assert!(acc.abs() <= b.max_abs && corr.abs() <= b.max_abs);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_bound_dominates_payload_bound() {
+        let g8 = acc_bounds_grid(100, 8);
+        let g4 = acc_bounds_grid(100, 4);
+        assert!(g8.max_abs > g4.max_abs);
+        assert!(headroom_bits(g8) > 0.0, "K=100 must be overflow-free at int8");
+        // payload bounds can never exceed the grid worst case
+        let b = acc_bounds(&[128 * 100], &[-128 * 100], &[0], 0, 255);
+        assert!(b.max_abs <= g8.max_abs);
+    }
+
+    #[test]
+    fn propagate_toy_graph_is_sane() {
+        let g = Graph::parse(
+            "qir t v1\noutputs r1\n\
+             node input image inputs=- shape=1,4,4\n\
+             node conv2d c1 inputs=image shape=2,4,4 bias=0 cin=1 cout=2 groups=1 kh=1 kw=1 pad=0 stride=1\n\
+             node relu r1 inputs=c1 shape=2,4,4\n",
+        )
+        .unwrap();
+        let mut ctx = BTreeMap::new();
+        ctx.insert(
+            "c1".to_string(),
+            NodeCtx {
+                affine: Some(AffineRows::from_weights(&[2.0, -1.0], 2, None)),
+                ..Default::default()
+            },
+        );
+        let cfg = PropagateCfg { input: Interval::new(-1.0, 1.0), ..Default::default() };
+        let r = propagate(&g, &ctx, &cfg).unwrap();
+        let c1 = r["c1"].out;
+        assert!(c1.lo <= -2.0 && c1.hi >= 2.0 && c1.hi < 2.1, "{c1:?}");
+        let r1 = r["r1"].out;
+        assert!(r1.lo <= 0.0 && r1.lo > -0.01 && r1.hi >= 2.0, "{r1:?}");
+    }
+}

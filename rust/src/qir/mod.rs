@@ -3,6 +3,7 @@
 //! (rust/src/backends) consume — a standard, ONNX-like op set with no custom
 //! operators, exactly as the paper exports to its NPU toolchains.
 
+pub mod analysis;
 pub mod passes;
 
 use std::collections::{BTreeMap, HashMap};

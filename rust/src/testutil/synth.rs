@@ -138,6 +138,84 @@ pub fn vit_like() -> SynthModel {
     SynthModel { graph, params, bn: BTreeMap::new() }
 }
 
+/// Seeded random small CNN for property tests: a conv+bn+act stem, then
+/// 1-3 blocks that independently draw kernel size, activation kind, an
+/// optional `aq` requant point, an optional residual add, and an optional
+/// 2x pool downsample, ending in gap → flatten → linear head. Every op kind
+/// drawn here is covered by the planner and the interval analysis, so the
+/// soundness suite can sweep many topologies without hand-writing graphs.
+/// Deterministic in `seed`.
+pub fn random_cnn(seed: u64) -> SynthModel {
+    use std::fmt::Write as _;
+
+    let mut rng = Rng::new(seed ^ 0x5EED_0003);
+    let mut hw = 8 + 4 * rng.below(2); // 8 or 12
+    let c = 8 + 8 * rng.below(2); // 8 or 16
+    let acts = ["relu", "relu6", "hswish", "silu", "gelu"];
+    let depth = 1 + rng.below(3);
+
+    let mut text = String::from("qir synthrand v1\noutputs head\n");
+    let mut params = BTreeMap::new();
+    let mut bn = BTreeMap::new();
+    let _ = writeln!(text, "node input image inputs=- shape=3,{hw},{hw}");
+    let _ = writeln!(
+        text,
+        "node conv2d c0 inputs=image shape={c},{hw},{hw} bias=0 cin=3 cout={c} groups=1 \
+         kh=3 kw=3 pad=1 stride=1"
+    );
+    params.insert("c0.w".into(), normal_t(&mut rng, &[c, 3, 3, 3], 0.15));
+    let _ = writeln!(text, "node bn b0 inputs=c0 shape={c},{hw},{hw} c={c}");
+    bn_state(&mut rng, &mut params, &mut bn, "b0", c);
+    let _ = writeln!(text, "node relu r0 inputs=b0 shape={c},{hw},{hw}");
+    let mut cur = "r0".to_string();
+
+    for i in 0..depth {
+        let block_in = cur.clone();
+        if rng.below(2) == 0 {
+            let _ = writeln!(text, "node aq q{i} inputs={cur} shape={c},{hw},{hw}");
+            cur = format!("q{i}");
+        }
+        let (kh, pad) = if rng.below(2) == 0 { (3, 1) } else { (1, 0) };
+        let bias = rng.below(2);
+        let _ = writeln!(
+            text,
+            "node conv2d c{n} inputs={cur} shape={c},{hw},{hw} bias={bias} cin={c} cout={c} \
+             groups=1 kh={kh} kw={kh} pad={pad} stride=1",
+            n = i + 1
+        );
+        params.insert(format!("c{}.w", i + 1), normal_t(&mut rng, &[c, c, kh, kh], 0.08));
+        if bias == 1 {
+            params.insert(format!("c{}.b", i + 1), normal_t(&mut rng, &[c], 0.05));
+        }
+        let _ = writeln!(text, "node bn b{n} inputs=c{n} shape={c},{hw},{hw} c={c}", n = i + 1);
+        bn_state(&mut rng, &mut params, &mut bn, &format!("b{}", i + 1), c);
+        let act = acts[rng.below(acts.len())];
+        let _ = writeln!(text, "node {act} a{i} inputs=b{n} shape={c},{hw},{hw}", n = i + 1);
+        cur = format!("a{i}");
+        if rng.below(2) == 0 {
+            let _ = writeln!(text, "node add res{i} inputs={cur},{block_in} shape={c},{hw},{hw}");
+            cur = format!("res{i}");
+        }
+        if hw >= 8 && rng.below(2) == 0 {
+            let kind = if rng.below(2) == 0 { "maxpool" } else { "avgpool" };
+            hw /= 2;
+            let _ = writeln!(
+                text,
+                "node {kind} p{i} inputs={cur} shape={c},{hw},{hw} k=2 stride=2 pad=0"
+            );
+            cur = format!("p{i}");
+        }
+    }
+    let _ = writeln!(text, "node gap g1 inputs={cur} shape={c},1,1");
+    let _ = writeln!(text, "node flatten f1 inputs=g1 shape={c}");
+    let _ = writeln!(text, "node linear head inputs=f1 shape=10 bias=1 din={c} dout=10");
+    params.insert("head.w".into(), normal_t(&mut rng, &[10, c], 0.2));
+    params.insert("head.b".into(), normal_t(&mut rng, &[10], 0.05));
+
+    let graph = Graph::parse(&text).expect("synth random graph parses");
+    SynthModel { graph, params, bn }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +237,21 @@ mod tests {
         let yv = mv.run(&xv).unwrap();
         assert_eq!(yv[0].shape, vec![2, 10]);
         assert!(yv[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn random_cnn_parses_runs_and_is_deterministic() {
+        for seed in 0u64..6 {
+            let sm = random_cnn(seed);
+            let hw = sm.graph.nodes[0].shape[1];
+            let x = Tensor::new(vec![2, 3, hw, hw], Rng::new(11).normal_vec(2 * 3 * hw * hw, 1.0));
+            let m = fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone());
+            let y = m.run(&x).unwrap();
+            assert_eq!(y[0].shape, vec![2, 10], "seed {seed}");
+            assert!(y[0].data.iter().all(|v| v.is_finite()), "seed {seed}");
+            let sm2 = random_cnn(seed);
+            assert_eq!(sm.params["c0.w"].data, sm2.params["c0.w"].data, "seed {seed}");
+            assert_eq!(sm.graph.nodes.len(), sm2.graph.nodes.len(), "seed {seed}");
+        }
     }
 }

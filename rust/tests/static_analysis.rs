@@ -1,0 +1,286 @@
+//! Soundness suite for the static plan auditor (`engine::verify` +
+//! `qir::analysis`).
+//!
+//! The auditor's contract is that its propagated intervals are *sound*:
+//! every value the runtime can produce lies inside the predicted per-node
+//! bound, and every i32 accumulator of an integer GEMM lies inside the
+//! predicted accumulator bound. This suite checks that contract
+//! empirically across the full `ExecConfig` matrix — F32/Bf16/F16/Int8/
+//! DynInt8 activations × F32/Int8/Int4 weights — on the fixed synthetic
+//! graphs AND on seeded random CNN topologies, then checks the negative
+//! direction: every `Sabotage` corruption class must raise its expected
+//! finding code at ERROR severity.
+
+use std::collections::{BTreeMap, HashMap};
+
+use quant_trim::calib::{calibrate, CalibMethod};
+use quant_trim::engine::ops::quantize_slice;
+use quant_trim::engine::verify::{has_errors, Sabotage, Severity};
+use quant_trim::engine::{fp32_model, ActMode, CompiledModel, ExecConfig, WeightMode};
+use quant_trim::qir::passes;
+use quant_trim::tensor::{act_scale_zp, QWeight, QuantScheme, RoundMode, Tensor};
+use quant_trim::testutil::synth::{self, SynthModel};
+use quant_trim::testutil::Rng;
+
+/// Quantize every weight-bearing node of a graph at a weight bit-width
+/// (same shipping set a backend would build).
+fn quantize_weights(
+    graph: &quant_trim::qir::Graph,
+    params: &BTreeMap<String, Tensor>,
+    bits: u8,
+) -> HashMap<String, QWeight> {
+    let (scheme, round) = (QuantScheme::PerChannelSym, RoundMode::TiesEven);
+    let mut q = HashMap::new();
+    for n in graph.weight_nodes() {
+        let keys: Vec<String> = match n.kind.as_str() {
+            "attention" => {
+                ["wq", "wk", "wv", "wo"].iter().map(|m| format!("{}.{m}", n.name)).collect()
+            }
+            _ => vec![format!("{}.w", n.name)],
+        };
+        for key in keys {
+            if let Some(w) = params.get(&key) {
+                q.insert(key, QWeight::quantize_bits(w, scheme, round, bits));
+            }
+        }
+    }
+    q
+}
+
+/// Calibrated MinMax ranges for every node.
+fn ranges_for(
+    graph: &quant_trim::qir::Graph,
+    params: &BTreeMap<String, Tensor>,
+    batches: &[Tensor],
+) -> HashMap<String, (f32, f32)> {
+    let fp = fp32_model(graph.clone(), params.clone(), BTreeMap::new());
+    calibrate(&fp, batches, CalibMethod::MinMax).unwrap().ranges
+}
+
+fn minmax(data: &[f32]) -> (f32, f32) {
+    let mut lo = f32::MAX;
+    let mut hi = f32::MIN;
+    for &v in data {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    (lo, hi)
+}
+
+/// Audit a lowered graph at every ExecConfig and assert the propagated
+/// interval of every node contains every value the interpreter observes.
+fn check_soundness(sm: &SynthModel, label: &str, seed: u64) {
+    let (graph, params, _factors, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let in_shape =
+        graph.nodes.iter().find(|n| n.kind == "input").expect("graph has input").shape.clone();
+    let full: Vec<usize> = std::iter::once(2).chain(in_shape.iter().copied()).collect();
+    let n: usize = full.iter().product();
+    let mut rng = Rng::new(seed);
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(full.clone(), rng.normal_vec(n, 1.0))).collect();
+    let ranges = ranges_for(&graph, &params, &batches);
+    let q8 = quantize_weights(&graph, &params, 8);
+    let q4 = quantize_weights(&graph, &params, 4);
+    let x = Tensor::new(full, rng.normal_vec(n, 1.0));
+    let (lo, hi) = minmax(&x.data);
+
+    let act_modes = [
+        ActMode::F32,
+        ActMode::Bf16,
+        ActMode::F16,
+        ActMode::Int8 { round: RoundMode::TiesEven },
+        ActMode::DynInt8 { round: RoundMode::TiesEven },
+    ];
+    for weight_mode in [WeightMode::F32, WeightMode::Int8, WeightMode::Int4] {
+        let qweights = if weight_mode == WeightMode::Int4 { &q4 } else { &q8 };
+        for act_mode in act_modes {
+            let cfg = ExecConfig { weight_mode, act_mode };
+            // the dynamic path is calibration-free by contract
+            let cfg_ranges = if act_mode.is_dynamic() { HashMap::new() } else { ranges.clone() };
+            let model = CompiledModel::new(
+                graph.clone(),
+                params.clone(),
+                BTreeMap::new(),
+                qweights.clone(),
+                cfg_ranges,
+                cfg,
+            );
+            let report = model.audit(Some((lo, hi))).unwrap();
+            let errs: Vec<_> =
+                report.findings.iter().filter(|f| f.severity == Severity::Error).collect();
+            assert!(errs.is_empty(), "{label} {cfg:?}: seed graph must audit clean, got {errs:?}");
+
+            let mut checked = 0usize;
+            model
+                .run_observe(&x, &mut |name, t| {
+                    let r = report
+                        .reports
+                        .get(name)
+                        .unwrap_or_else(|| panic!("{label} {cfg:?}: no report for node {name}"));
+                    for &v in &t.data {
+                        if v.is_nan() {
+                            // NaN can only arise downstream of a predicted
+                            // storage-format overflow (±∞ bound)
+                            assert!(
+                                !r.out.is_finite(),
+                                "{label} {cfg:?} {name}: NaN under a finite bound {:?}",
+                                r.out
+                            );
+                            continue;
+                        }
+                        assert!(
+                            r.out.contains(v as f64),
+                            "{label} {cfg:?} {name}: observed {v} outside predicted {:?}",
+                            r.out
+                        );
+                        checked += 1;
+                    }
+                })
+                .unwrap();
+            assert!(checked > 0, "{label} {cfg:?}: observer saw no values");
+        }
+    }
+}
+
+#[test]
+fn interval_analysis_is_sound_on_resnet_style() {
+    check_soundness(&synth::resnet_like(16, 16), "resnet-like", 0x50D_0001);
+}
+
+#[test]
+fn interval_analysis_is_sound_on_vit_style() {
+    check_soundness(&synth::vit_like(), "vit-like", 0x50D_0002);
+}
+
+#[test]
+fn interval_analysis_is_sound_on_random_topologies() {
+    for seed in 1u64..=4 {
+        let sm = synth::random_cnn(seed);
+        check_soundness(&sm, &format!("random-cnn-{seed}"), 0x50D_1000 + seed);
+    }
+}
+
+#[test]
+fn predicted_accumulator_bounds_contain_runtime_accumulators() {
+    // Recompute the i32 accumulators of the head linear GEMM exactly as the
+    // engine does (same grid, same rounding, same payload) and assert every
+    // one — raw and zero-point-corrected — lies inside the audited bounds,
+    // at both weight bit-widths.
+    for (label, sm) in
+        [("resnet-like", synth::resnet_like(16, 16)), ("random-cnn", synth::random_cnn(0xACC))]
+    {
+        let (graph, params, _f, _fused) =
+            passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+        let in_shape = graph.nodes.iter().find(|n| n.kind == "input").unwrap().shape.clone();
+        let full: Vec<usize> = std::iter::once(2).chain(in_shape.iter().copied()).collect();
+        let n: usize = full.iter().product();
+        let mut rng = Rng::new(0xACC_5EED);
+        let batches: Vec<Tensor> =
+            (0..2).map(|_| Tensor::new(full.clone(), rng.normal_vec(n, 1.0))).collect();
+        let ranges = ranges_for(&graph, &params, &batches);
+        let x = Tensor::new(full, rng.normal_vec(n, 1.0));
+        let (lo, hi) = minmax(&x.data);
+
+        let head = graph.nodes.iter().find(|g| g.kind == "linear").expect("head linear");
+        let producer = head.inputs[0].clone();
+        for bits in [8u8, 4] {
+            let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
+            let model = CompiledModel::new(
+                graph.clone(),
+                params.clone(),
+                BTreeMap::new(),
+                quantize_weights(&graph, &params, bits),
+                ranges.clone(),
+                ExecConfig { weight_mode, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+            );
+            let report = model.audit(Some((lo, hi))).unwrap();
+            let la = report
+                .layers
+                .iter()
+                .find(|l| l.node == head.name)
+                .expect("head linear must be audited as an integer GEMM");
+            assert_eq!(la.bits, bits);
+
+            let mut x_in: Option<Vec<f32>> = None;
+            model
+                .run_observe(&x, &mut |name, t| {
+                    if name == producer {
+                        x_in = Some(t.data.clone());
+                    }
+                })
+                .unwrap();
+            let x_in = x_in.expect("producer observed");
+
+            // the engine's static input grid: producer range, zero-spanning
+            let &(rlo, rhi) = ranges.get(&producer).expect("producer calibrated");
+            let (s, z) = act_scale_zp(rlo.min(0.0), rhi.max(rlo + 1e-6));
+            let xq = quantize_slice(&x_in, s, z, RoundMode::TiesEven);
+
+            let qw = &model.qweights[&format!("{}.w", head.name)];
+            let wq = qw.unpacked_data();
+            let dout = qw.shape[0];
+            let k = wq.len() / dout;
+            assert_eq!(la.k, k, "{label}: audited K must match the GEMM K");
+            let rows = xq.len() / k;
+            assert!(rows > 0);
+            for r in 0..rows {
+                let xrow = &xq[r * k..(r + 1) * k];
+                for c in 0..dout {
+                    let wrow = &wq[c * k..(c + 1) * k];
+                    let acc: i64 =
+                        wrow.iter().zip(xrow).map(|(&w, &u)| w as i64 * u as i64).sum();
+                    let corrected = acc - z as i64 * qw.row_sums[c] as i64;
+                    assert!(
+                        corrected >= la.acc.lo && corrected <= la.acc.hi,
+                        "{label} int{bits}: accumulator {corrected} outside [{}, {}]",
+                        la.acc.lo,
+                        la.acc.hi
+                    );
+                    assert!(
+                        acc.abs() <= la.acc.max_abs && corrected.abs() <= la.acc.max_abs,
+                        "{label} int{bits}: |acc| exceeds audited max_abs {}",
+                        la.acc.max_abs
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn verifier_catches_every_injected_corruption() {
+    // The negative direction: a clean deployment audits clean, and each
+    // sabotage class raises exactly its expected finding code at ERROR.
+    let sm = synth::resnet_like(16, 16);
+    let (graph, params, _f, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let mut rng = Rng::new(0x5AB0);
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let model = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        quantize_weights(&graph, &params, 8),
+        ranges_for(&graph, &params, &batches),
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+        },
+    );
+    assert!(!has_errors(&model.verify().unwrap()), "clean deployment must verify clean");
+    for s in Sabotage::ALL {
+        let findings = model.verify_sabotaged(s).unwrap();
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.severity == Severity::Error && f.code == s.expected_code()),
+            "sabotage {:?} must raise {} at ERROR severity, got: {findings:?}",
+            s.name(),
+            s.expected_code()
+        );
+    }
+}

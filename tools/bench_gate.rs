@@ -54,6 +54,29 @@ fn parse_numbers(src: &str) -> BTreeMap<String, f64> {
         while j < bytes.len() && (bytes[j] as char).is_whitespace() {
             j += 1;
         }
+        // Non-finite tokens (Rust's {} / serde-style bare NaN / inf):
+        // captured as non-finite f64 so the gate can REJECT a poisoned
+        // metric instead of treating it as absent.
+        let rest = &src[j..];
+        let (neg, body) = match rest.strip_prefix('-') {
+            Some(r) => (true, r),
+            None => (false, rest),
+        };
+        let lower = body.get(..8).unwrap_or(body).to_ascii_lowercase();
+        let nonfinite = if lower.starts_with("nan") {
+            Some((3usize, f64::NAN))
+        } else if lower.starts_with("infinity") {
+            Some((8, f64::INFINITY))
+        } else if lower.starts_with("inf") {
+            Some((3, f64::INFINITY))
+        } else {
+            None
+        };
+        if let Some((len, v)) = nonfinite {
+            out.insert(key.to_string(), if neg { -v } else { v });
+            i = j + len + usize::from(neg);
+            continue;
+        }
         let start = j;
         while j < bytes.len() && matches!(bytes[j], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
             j += 1;
@@ -126,6 +149,15 @@ fn main() -> ExitCode {
             }
             continue;
         };
+        if is_gated(key) && !(base.is_finite() && cur.is_finite()) {
+            // a NaN/inf in a gated metric means the bench itself is broken
+            gated += 1;
+            eprintln!(
+                "  FAIL {key}: non-finite value (current {cur}, baseline {base}) in a gated metric"
+            );
+            failures += 1;
+            continue;
+        }
         if key.ends_with("_speedup") {
             gated += 1;
             let floor = base * (1.0 - tolerance);
@@ -174,4 +206,36 @@ fn main() -> ExitCode {
     }
     println!("bench_gate: all {gated} gated metric(s) within tolerance");
     ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_numbers;
+
+    #[test]
+    fn parses_flat_numeric_pairs() {
+        let m = parse_numbers(r#"{"a_speedup": 2.5, "b_us": 104.0, "c": -3e2}"#);
+        assert_eq!(m["a_speedup"], 2.5);
+        assert_eq!(m["b_us"], 104.0);
+        assert_eq!(m["c"], -300.0);
+    }
+
+    #[test]
+    fn parses_non_finite_tokens_as_non_finite_values() {
+        let m = parse_numbers(
+            r#"{"a_speedup": NaN, "b_p95_ms": -inf, "c": Infinity, "d": -NaN, "e": 1.5}"#,
+        );
+        assert!(m["a_speedup"].is_nan());
+        assert_eq!(m["b_p95_ms"], f64::NEG_INFINITY);
+        assert_eq!(m["c"], f64::INFINITY);
+        assert!(m["d"].is_nan());
+        assert_eq!(m["e"], 1.5);
+    }
+
+    #[test]
+    fn string_values_are_still_skipped() {
+        let m = parse_numbers(r#"{"name": "engine", "x_speedup": 2.0}"#);
+        assert!(!m.contains_key("name"));
+        assert_eq!(m["x_speedup"], 2.0);
+    }
 }

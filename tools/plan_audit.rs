@@ -1,0 +1,271 @@
+//! Static deployment auditor CLI (`engine::verify` over the deploy matrix).
+//!
+//! Smoke mode — audit every backend × integer precision × activation-scaling
+//! cell of the simulated fleet on the synthetic seeded checkpoints, prove
+//! i32-accumulator non-overflow and clean plan liveness per cell, and write
+//! the per-layer saturation-risk table to `AUDIT.txt` (uploaded as a CI
+//! artifact). Exits 1 when any cell carries an ERROR finding:
+//!
+//!   cargo run --release --bin plan_audit -- --smoke
+//!
+//! Sabotage mode — deliberately corrupt a cloned plan one violation class at
+//! a time and check the verifier catches each one. Exits 2 (nonzero) when
+//! every class is caught, 0 when the verifier MISSED a corruption — so CI's
+//! negative step can assert `! plan_audit --sabotage all`:
+//!
+//!   cargo run --release --bin plan_audit -- --sabotage all
+//!   cargo run --release --bin plan_audit -- --sabotage stale-read
+
+use std::fmt::Write as _;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use quant_trim::backends::{all_backends, BackendSpec, CheckpointView, PtqOptions, RangeSource};
+use quant_trim::coordinator::experiment::synthetic_state;
+use quant_trim::engine::verify::{Sabotage, Severity};
+use quant_trim::perfmodel::{ActScaling, Precision};
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::synth::{self, SynthModel};
+use quant_trim::testutil::Rng;
+
+fn flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Worst-case (lo, hi) over the calibration tensors — the audit's input
+/// interval, mirroring how the backends derive the input range.
+fn input_range(batches: &[Tensor]) -> (f32, f32) {
+    let mut lo = f32::MAX;
+    let mut hi = f32::MIN;
+    for b in batches {
+        for &v in &b.data {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    if lo > hi {
+        (-2.5, 2.5)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Seeded stand-in calibration tensors for a `3 x hw x hw` input.
+fn calib_batches(hw: usize, seed: u64) -> Vec<Tensor> {
+    (0..2)
+        .map(|i| {
+            let n = 8 * 3 * hw * hw;
+            Tensor::new(vec![8, 3, hw, hw], Rng::new(seed + i).normal_vec(n, 1.0))
+        })
+        .collect()
+}
+
+/// Risk bucket for the saturation table: HIGH = proven-dangerous bounds
+/// (overflow region or >25% requant clipping), MED = elevated (visible
+/// clipping or outlier-inflated scales), LOW = comfortably in range.
+fn risk_label(headroom_bits: f64, clip: f64, scale_ratio: f64) -> &'static str {
+    if clip > 0.25 || headroom_bits < 1.0 {
+        "HIGH"
+    } else if clip > 0.05 || scale_ratio > 8.0 {
+        "MED"
+    } else {
+        "LOW"
+    }
+}
+
+/// Audit one compiled cell and append its verdict + layer table to `out`.
+/// Returns the number of ERROR findings in the cell.
+#[allow(clippy::too_many_arguments)]
+fn audit_cell(
+    out: &mut String,
+    be: &BackendSpec,
+    model_label: &str,
+    sm: &SynthModel,
+    prec: Precision,
+    scaling: ActScaling,
+    calib: &[Tensor],
+) -> Result<usize> {
+    let state = synthetic_state(sm);
+    let view = CheckpointView {
+        graph: &sm.graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let dep = be
+        .compile_scaled(view, prec, scaling, RangeSource::Calibration, calib, PtqOptions::default())
+        .with_context(|| {
+            format!("{}: compiling {model_label} at {:?}/{:?}", be.name, prec, scaling)
+        })?;
+    let report = dep.audit(Some(input_range(calib)))?;
+    let errors = report.findings.iter().filter(|f| f.severity == Severity::Error).count();
+    let warns = report.findings.iter().filter(|f| f.severity == Severity::Warning).count();
+
+    let flagged = report.flagged_nodes();
+    let audited =
+        be.perf_audited(&dep.model.graph, dep.precision, dep.act_scaling, 1, &|n| {
+            flagged.contains(n)
+        });
+
+    let verdict = if errors > 0 { "FAIL" } else { "ok" };
+    let _ = writeln!(
+        out,
+        "\n--- {model_label} on {:<14} req {:>4}/{:<7} eff {:>4}/{:<7} [{verdict}] \
+         errors={errors} warnings={warns} fps={:.0} fps_audited={:.0}",
+        be.name,
+        prec.label(),
+        scaling.label(),
+        dep.precision.label(),
+        dep.act_scaling.label(),
+        dep.perf_b1.fps,
+        audited.fps,
+    );
+    let _ = writeln!(
+        out,
+        "{:<14} {:<13} {:>4} {:>5} {:>13} {:>13} {:>9} {:>7} {:>7}  {}",
+        "layer", "kind", "bits", "K", "acc_lo", "acc_hi", "headroom", "clip%", "scaleX", "risk"
+    );
+    for la in &report.layers {
+        let _ = writeln!(
+            out,
+            "{:<14} {:<13} {:>4} {:>5} {:>13} {:>13} {:>8.2}b {:>6.1}% {:>7.2}  {}",
+            la.node,
+            la.kind,
+            la.bits,
+            la.k,
+            la.acc.lo,
+            la.acc.hi,
+            la.headroom_bits,
+            la.clip * 100.0,
+            la.scale_ratio,
+            risk_label(la.headroom_bits, la.clip, la.scale_ratio),
+        );
+    }
+    if report.layers.is_empty() {
+        let _ = writeln!(out, "(no integer GEMM layers at this precision/scaling)");
+    }
+    for f in &report.findings {
+        if f.severity >= Severity::Warning {
+            let _ = writeln!(out, "  {f}");
+        }
+    }
+    Ok(errors)
+}
+
+fn smoke() -> Result<ExitCode> {
+    let models: Vec<(&str, SynthModel, Vec<Tensor>)> = vec![
+        ("resnet-like", synth::resnet_like(16, 16), calib_batches(16, 0xCA11B_01)),
+        ("vit-like", synth::vit_like(), calib_batches(8, 0xCA11B_02)),
+    ];
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "=== Static plan audit (smoke): backend x {{INT8, INT4}} x {{static, dynamic}} ===\n\
+         Each cell: plan liveness/aliasing replay, qparam sanity, and interval analysis\n\
+         proving the i32 accumulator of every integer GEMM stays in range for the\n\
+         actual K dims and weight payloads. headroom = log2(i32::MAX / worst |acc|)."
+    );
+    let mut cells = 0usize;
+    let mut failed = 0usize;
+    for (label, sm, calib) in &models {
+        for be in all_backends() {
+            for prec in [Precision::Int8, Precision::Int4] {
+                for scaling in [ActScaling::Static, ActScaling::Dynamic] {
+                    cells += 1;
+                    let errors = audit_cell(&mut out, &be, label, sm, prec, scaling, calib)?;
+                    if errors > 0 {
+                        failed += 1;
+                    }
+                }
+            }
+        }
+    }
+    let _ = writeln!(
+        out,
+        "\n=== audit summary: {cells} deploy-matrix cells, {failed} with ERROR findings ==="
+    );
+    if failed == 0 {
+        let _ = writeln!(
+            out,
+            "every cell proves i32-accumulator non-overflow and clean plan liveness"
+        );
+    }
+    print!("{out}");
+    std::fs::write("AUDIT.txt", &out)?;
+    println!("wrote AUDIT.txt");
+    Ok(if failed > 0 { ExitCode::from(1) } else { ExitCode::SUCCESS })
+}
+
+/// Corrupt a cloned plan per violation class and report whether the
+/// verifier catches each one. Exit 2 = all caught (the expected outcome,
+/// nonzero so CI's negative step sees a failing command); exit 0 = at least
+/// one corruption slipped through.
+fn sabotage(which: &str) -> Result<ExitCode> {
+    let classes: Vec<Sabotage> = if which == "all" {
+        Sabotage::ALL.to_vec()
+    } else {
+        vec![Sabotage::parse(which)
+            .with_context(|| format!("unknown sabotage class {which:?} (try: all, alias, \
+                                      stale-read, uncovered-output, scratch-under, bogus-swap, \
+                                      bad-qparam)"))?]
+    };
+    let sm = synth::resnet_like(16, 16);
+    let state = synthetic_state(&sm);
+    let calib = calib_batches(16, 0xCA11B_03);
+    let be = all_backends()
+        .into_iter()
+        .find(|b| b.precisions.contains(&Precision::Int8))
+        .context("no INT8-capable backend in the fleet")?;
+    let view = CheckpointView {
+        graph: &sm.graph,
+        params: &state.params,
+        bn: &state.bn,
+        qstate: &state.qstate,
+    };
+    let dep =
+        be.compile(view, Precision::Int8, RangeSource::Calibration, &calib, PtqOptions::default())?;
+
+    let mut missed = 0usize;
+    for c in classes {
+        let findings = dep.model.verify_sabotaged(c)?;
+        let caught = findings
+            .iter()
+            .any(|f| f.severity == Severity::Error && f.code == c.expected_code());
+        println!(
+            "sabotage {:<18} expected {:<22} -> {}",
+            c.name(),
+            c.expected_code(),
+            if caught { "caught" } else { "MISSED" }
+        );
+        if !caught {
+            for f in &findings {
+                println!("    {f}");
+            }
+            missed += 1;
+        }
+    }
+    if missed > 0 {
+        println!("verifier MISSED {missed} corruption class(es)");
+        return Ok(ExitCode::SUCCESS);
+    }
+    println!("verifier caught every injected corruption (exiting nonzero to prove it)");
+    Ok(ExitCode::from(2))
+}
+
+fn main() -> Result<ExitCode> {
+    if let Some(which) = arg("--sabotage") {
+        return sabotage(&which);
+    }
+    if flag("--smoke") {
+        return smoke();
+    }
+    bail!("usage: plan_audit --smoke | plan_audit --sabotage <class|all>");
+}
