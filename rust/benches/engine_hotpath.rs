@@ -7,11 +7,13 @@
 //! 20 warmup + 200 timed iterations, medians — the paper's protocol.
 //!
 //! Emits `BENCH_engine.json` (plan vs interpreter medians + speedups,
-//! int4-vs-int8, dyn-vs-static, and warm-vs-cold `ExecScratch` rows with
+//! int4-vs-int8, dyn-vs-static, warm-vs-cold `ExecScratch` rows with
 //! the `steady_state_speedup` of the zero-allocation arena+pool executor
-//! over PR-4-style allocate-per-call execution) for the perf trajectory;
-//! CI gates regressions against `BENCH_baseline/engine.json` via
-//! `tools/bench_gate.rs`.
+//! over PR-4-style allocate-per-call execution, and the kernel-tier rows:
+//! the detected `kernel_tier`, the planned-int8 `simd_speedup` over a
+//! scalar-forced twin, and the kernel-level `simd_gemm_speedup`) for the
+//! perf trajectory; CI gates regressions against
+//! `BENCH_baseline/engine.json` via `tools/bench_gate.rs`.
 //!
 //!   cargo bench --bench engine_hotpath
 
@@ -22,7 +24,9 @@ use quant_trim::calib::{calibrate, CalibMethod};
 use quant_trim::ckpt::Checkpoint;
 use quant_trim::coordinator::TrainState;
 use quant_trim::data::{gen_cls_batch, ClsSpec};
-use quant_trim::engine::{fp32_model, ops, ActMode, CompiledModel, ExecConfig, ExecScratch, WeightMode};
+use quant_trim::engine::{
+    fp32_model, ops, ActMode, CompiledModel, ExecConfig, ExecScratch, KernelTier, WeightMode,
+};
 use quant_trim::perfmodel::Precision;
 use quant_trim::qir::passes;
 use quant_trim::tensor::{QuantScheme, QWeight, RoundMode, Tensor};
@@ -98,10 +102,14 @@ fn main() {
     })
     .print();
 
+    // kernel-tier comparison on the packed int8 linear kernel (scalar tier
+    // vs the tier the plan would pick on this machine)
+    let (simd_gemm_scalar_us, simd_gemm_simd_us) = simd_gemm_bench(&mut rng);
+
     // ---- headline: planned executor vs legacy interpreter on a synthetic
     // ResNet-style conv net (3x32x32), both precision paths -------------
     let report = plan_vs_interpreter();
-    write_bench_json(&report);
+    write_bench_json(&report, simd_gemm_scalar_us, simd_gemm_simd_us);
 
     // end-to-end engine inference on real artifacts when present
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -112,11 +120,62 @@ fn main() {
     }
 }
 
+/// Kernel-level tier comparison: the packed int8 linear GEMM at the resnet
+/// stage-2 GEMM shape, weights packed once for the scalar tier and once for
+/// the tier `ExecPlan::compile` would pick here. Outputs are asserted
+/// bit-identical before timing; the ratio is the `simd_gemm_speedup` row.
+fn simd_gemm_bench(rng: &mut Rng) -> (f64, f64) {
+    fn run(
+        x: &[f32],
+        rows: usize,
+        p: &ops::PackedQW,
+        sxw: &[f32],
+        xq: &mut Vec<u8>,
+        out: &mut [f32],
+    ) {
+        let round = RoundMode::TiesEven;
+        ops::linear_int_packed(x, rows, p, None, 0.02, 128, round, sxw, None, xq, out);
+    }
+
+    let (rows, din, dout) = (1024usize, 288usize, 64usize);
+    let tier = KernelTier::detect();
+    let w = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.1));
+    let qw = QWeight::quantize(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven);
+    let ps = ops::PackedQW::pack_for(&qw, 1, KernelTier::Scalar);
+    let pv = ops::PackedQW::pack_for(&qw, 1, tier);
+    let x: Vec<f32> = rng.normal_vec(rows * din, 1.0);
+    let sxw: Vec<f32> = qw.scales.iter().map(|&s| 0.02 * s).collect();
+    let mut xq = Vec::new();
+    let mut out_s = vec![0.0f32; rows * dout];
+    let mut out_v = vec![0.0f32; rows * dout];
+    run(&x, rows, &ps, &sxw, &mut xq, &mut out_s);
+    run(&x, rows, &pv, &sxw, &mut xq, &mut out_v);
+    assert_eq!(out_s, out_v, "kernel tiers must produce bit-identical outputs");
+    let rs = bench("linear_i8 packed scalar tier 1024x288x64", 20, 200, || {
+        run(&x, rows, &ps, &sxw, &mut xq, &mut out_s);
+    });
+    rs.print();
+    let rv = bench(&format!("linear_i8 packed {} tier 1024x288x64", tier.label()), 20, 200, || {
+        run(&x, rows, &pv, &sxw, &mut xq, &mut out_v);
+    });
+    rv.print();
+    println!(
+        "    -> simd gemm speedup ({} vs scalar): {:.2}x",
+        tier.label(),
+        rs.median_us / rv.median_us
+    );
+    (rs.median_us, rv.median_us)
+}
+
 struct PlanReport {
+    /// Label of the tier the plan resolved on this machine.
+    kernel_tier: &'static str,
     fp32_interp_us: f64,
     fp32_plan_us: f64,
     int8_interp_us: f64,
     int8_plan_us: f64,
+    /// Same int8 deployment forced onto the scalar tier via `ExecConfig`.
+    int8_plan_scalar_us: f64,
     int4_interp_us: f64,
     int4_plan_us: f64,
     dyn_interp_us: f64,
@@ -165,9 +224,14 @@ fn plan_vs_interpreter() -> PlanReport {
         BTreeMap::new(),
         qweights.clone(),
         ranges,
-        ExecConfig { weight_mode: WeightMode::Int8, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
+        },
     );
-    m8.plan().unwrap();
+    let tier = m8.plan().unwrap().kernel_tier();
+    println!("plan resolved kernel tier: {}", tier.label());
     // sanity: the planned int8 executor is bit-exact vs the interpreter
     assert_eq!(
         m8.run(&x).unwrap()[0].data,
@@ -183,6 +247,36 @@ fn plan_vs_interpreter() -> PlanReport {
     });
     rp8.print();
     println!("    -> int8 speedup: {:.2}x", ri8.median_us / rp8.median_us);
+
+    // the same int8 deployment forced onto the scalar tier: the ratio is
+    // the model-level SIMD dispatch win (`simd_speedup`, gated in CI)
+    let m8s = CompiledModel::new(
+        graph.clone(),
+        params.clone(),
+        BTreeMap::new(),
+        qweights.clone(),
+        m8.act_ranges.clone(),
+        ExecConfig {
+            weight_mode: WeightMode::Int8,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier: Some(KernelTier::Scalar),
+        },
+    );
+    m8s.plan().unwrap();
+    assert_eq!(
+        m8s.run(&x).unwrap()[0].data,
+        m8.run(&x).unwrap()[0].data,
+        "scalar-tier planned int8 must be bit-identical to the detected tier"
+    );
+    let rp8s = bench("resnet-like int8 planned scalar-tier", 10, 120, || {
+        std::hint::black_box(m8s.run(&x).unwrap());
+    });
+    rp8s.print();
+    println!(
+        "    -> simd speedup ({} vs scalar, planned int8): {:.2}x",
+        tier.label(),
+        rp8s.median_us / rp8.median_us
+    );
 
     // INT4 path (W4/A8, same ranges, packed-nibble weights)
     let mut qweights4 = std::collections::HashMap::new();
@@ -201,7 +295,11 @@ fn plan_vs_interpreter() -> PlanReport {
         BTreeMap::new(),
         qweights4,
         m8.act_ranges.clone(),
-        ExecConfig { weight_mode: WeightMode::Int4, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+        ExecConfig {
+            weight_mode: WeightMode::Int4,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
+        },
     );
     m4.plan().unwrap();
     assert_eq!(
@@ -231,6 +329,7 @@ fn plan_vs_interpreter() -> PlanReport {
         ExecConfig {
             weight_mode: WeightMode::Int8,
             act_mode: ActMode::DynInt8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
         },
     );
     mdyn.plan().unwrap();
@@ -269,12 +368,14 @@ fn plan_vs_interpreter() -> PlanReport {
     println!("    -> steady-state speedup (warm arena vs allocate-per-call): {ss:.2}x");
 
     PlanReport {
+        kernel_tier: tier.label(),
         int8_plan_cold_us: rcold.median_us,
         int8_plan_warm_us: rwarm.median_us,
         fp32_interp_us: ri.median_us,
         fp32_plan_us: rp.median_us,
         int8_interp_us: ri8.median_us,
         int8_plan_us: rp8.median_us,
+        int8_plan_scalar_us: rp8s.median_us,
         int4_interp_us: ri4.median_us,
         int4_plan_us: rp4.median_us,
         dyn_interp_us: rid.median_us,
@@ -282,15 +383,21 @@ fn plan_vs_interpreter() -> PlanReport {
     }
 }
 
-fn write_bench_json(r: &PlanReport) {
+fn write_bench_json(r: &PlanReport, gemm_scalar_us: f64, gemm_simd_us: f64) {
     let json = format!(
-        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2},\n  \"dyn_interp_us\": {:.1},\n  \"dyn_plan_us\": {:.1},\n  \"dyn_speedup\": {:.2},\n  \"dyn_vs_static_planned\": {:.2},\n  \"int8_plan_cold_us\": {:.1},\n  \"int8_plan_warm_us\": {:.1},\n  \"steady_state_speedup\": {:.2}\n}}\n",
+        "{{\n  \"bench\": \"engine_hotpath/plan_vs_interpreter\",\n  \"model\": \"synthetic resnet-like 3x32x32, b=1\",\n  \"kernel_tier\": \"{}\",\n  \"fp32_interp_us\": {:.1},\n  \"fp32_plan_us\": {:.1},\n  \"fp32_speedup\": {:.2},\n  \"int8_interp_us\": {:.1},\n  \"int8_plan_us\": {:.1},\n  \"int8_speedup\": {:.2},\n  \"int8_plan_scalar_us\": {:.1},\n  \"simd_speedup\": {:.2},\n  \"simd_gemm_scalar_us\": {:.1},\n  \"simd_gemm_simd_us\": {:.1},\n  \"simd_gemm_speedup\": {:.2},\n  \"int4_interp_us\": {:.1},\n  \"int4_plan_us\": {:.1},\n  \"int4_speedup\": {:.2},\n  \"int4_vs_int8_planned\": {:.2},\n  \"dyn_interp_us\": {:.1},\n  \"dyn_plan_us\": {:.1},\n  \"dyn_speedup\": {:.2},\n  \"dyn_vs_static_planned\": {:.2},\n  \"int8_plan_cold_us\": {:.1},\n  \"int8_plan_warm_us\": {:.1},\n  \"steady_state_speedup\": {:.2}\n}}\n",
+        r.kernel_tier,
         r.fp32_interp_us,
         r.fp32_plan_us,
         r.fp32_interp_us / r.fp32_plan_us,
         r.int8_interp_us,
         r.int8_plan_us,
         r.int8_interp_us / r.int8_plan_us,
+        r.int8_plan_scalar_us,
+        r.int8_plan_scalar_us / r.int8_plan_us,
+        gemm_scalar_us,
+        gemm_simd_us,
+        gemm_scalar_us / gemm_simd_us,
         r.int4_interp_us,
         r.int4_plan_us,
         r.int4_interp_us / r.int4_plan_us,

@@ -336,7 +336,7 @@ impl BackendSpec {
             BTreeMap::new(),
             qweights,
             calibration.ranges,
-            ExecConfig { weight_mode, act_mode },
+            ExecConfig { weight_mode, act_mode, kernel_tier: None },
         );
         // Backends emit planned models: lowering the execution plan here
         // surfaces missing ranges/params at deploy time and lets the first

@@ -32,6 +32,9 @@ pub mod plan;
 /// Persistent shared worker pool behind the parallel kernels (no per-call
 /// thread spawns; one team serves every executor thread in the process).
 pub mod pool;
+/// Kernel tiers: plan-time CPU-feature detection and the AVX2/NEON SIMD
+/// inner kernels behind the planned GEMMs (scalar fallback always kept).
+pub mod simd;
 /// Static plan auditor: interval/overflow analysis, symbolic plan replay
 /// (liveness + aliasing + scratch bounds), and qparam sanity checks.
 pub mod verify;
@@ -43,6 +46,7 @@ use std::sync::OnceLock;
 use anyhow::{bail, Context, Result};
 
 pub use plan::ExecScratch;
+pub use simd::KernelTier;
 
 use crate::qir::{Graph, Node};
 use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
@@ -122,11 +126,20 @@ pub struct ExecConfig {
     pub weight_mode: WeightMode,
     /// Activation precision and scaling mode.
     pub act_mode: ActMode,
+    /// Inner-kernel tier override for the execution plan: `None`
+    /// auto-detects the best tier this machine supports at plan time
+    /// ([`KernelTier::resolve`]); `Some(tier)` requests a specific tier
+    /// (degraded to scalar if the host cannot run it). The
+    /// `PALLAS_FORCE_SCALAR` environment variable overrides both. All
+    /// tiers are bit-identical, so this never changes results — only
+    /// speed.
+    pub kernel_tier: Option<KernelTier>,
 }
 
 impl ExecConfig {
     /// Full-precision reference configuration (the "ONNX FP32" analogue).
-    pub const FP32: ExecConfig = ExecConfig { weight_mode: WeightMode::F32, act_mode: ActMode::F32 };
+    pub const FP32: ExecConfig =
+        ExecConfig { weight_mode: WeightMode::F32, act_mode: ActMode::F32, kernel_tier: None };
 }
 
 /// A backend-compiled model: transformed graph + prepared weights + static

@@ -34,12 +34,20 @@
 //! nibbles in-register inside the same parallel register-blocked driver and
 //! reuses the zero-point/bias/activation requantization epilogue — so the
 //! int4 path inherits the i8 path's bit-exactness argument unchanged.
+//!
+//! On top of the planned kernels sits the kernel-tier dispatch
+//! (`engine::simd`): the plan resolves a [`KernelTier`] once at compile
+//! time, the prepacked weights record which tier they were packed for, and
+//! `gemm_f32_packed` / `gemm_int_packed` branch to the AVX2/NEON inner
+//! kernels or the scalar panel kernels below — all tiers bit-identical by
+//! the contract documented in `engine::simd`.
 
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{Context, Result};
 
 use crate::engine::pool;
+use crate::engine::simd::{self, KernelTier};
 use crate::qir::Node;
 use crate::tensor::quantized::{packed_row_bytes, row_sums_of};
 use crate::tensor::{act_scale_zp, QWeight, RoundMode, Tensor};
@@ -104,7 +112,7 @@ impl Act {
 }
 
 #[inline]
-fn apply_act(v: f32, act: Option<Act>) -> f32 {
+pub(crate) fn apply_act(v: f32, act: Option<Act>) -> f32 {
     match act {
         Some(a) => a.apply(v),
         None => v,
@@ -482,13 +490,13 @@ pub(crate) fn gemm_i8_dispatch(
 
 /// Sign-extend the low nibble of a packed int4 byte to i32.
 #[inline(always)]
-fn nib_lo(b: i8) -> i32 {
+pub(crate) fn nib_lo(b: i8) -> i32 {
     ((b << 4) >> 4) as i32
 }
 
 /// Sign-extend the high nibble of a packed int4 byte to i32.
 #[inline(always)]
-fn nib_hi(b: i8) -> i32 {
+pub(crate) fn nib_hi(b: i8) -> i32 {
     (b >> 4) as i32
 }
 
@@ -670,6 +678,13 @@ fn gemm_i8_rows(
 // the tests below), and the 4-bit path unpacks nibbles per *panel byte
 // group* (4 adjacent bytes = one k-step of the whole panel) instead of
 // walking 4 separate packed rows.
+//
+// The interleave above describes the SCALAR tier. SIMD tiers
+// (engine::simd) keep the integer payload row-major instead — their
+// 16-wide widening dot products read each output channel's row as one
+// contiguous stream — while float panels are interleaved on every tier
+// (the SIMD float kernels vectorize across the 4 panel lanes). The layout
+// is chosen once in pack_for() from the plan's resolved KernelTier.
 // ---------------------------------------------------------------------------
 
 /// Interleave full 4-row panels ([k][j]) and append remainder rows
@@ -708,11 +723,22 @@ pub struct PackedF32 {
     /// `groups * cout_g * cols` values: per group, full panels interleaved
     /// [k][j] followed by remainder rows row-major.
     pub data: Vec<f32>,
+    /// Kernel tier the panels were packed for. Float panels share one
+    /// layout across tiers (SIMD float kernels vectorize across the 4
+    /// panel lanes), so the tier only selects the dispatched kernel.
+    pub tier: KernelTier,
 }
 
 impl PackedF32 {
-    /// Repack a row-major weight tensor (output channels on axis 0).
+    /// Repack a row-major weight tensor (output channels on axis 0) for
+    /// the scalar tier.
     pub fn pack(w: &Tensor, groups: usize) -> PackedF32 {
+        PackedF32::pack_for(w, groups, KernelTier::Scalar)
+    }
+
+    /// Repack a row-major weight tensor (output channels on axis 0) for a
+    /// resolved kernel tier.
+    pub fn pack_for(w: &Tensor, groups: usize, tier: KernelTier) -> PackedF32 {
         let cout = if w.shape.is_empty() { 1 } else { w.shape[0].max(1) };
         let cout_g = cout / groups.max(1);
         let cols = w.data.len() / cout;
@@ -725,7 +751,7 @@ impl PackedF32 {
                 &mut data,
             );
         }
-        PackedF32 { shape: w.shape.clone(), groups, cout_g, cols, data }
+        PackedF32 { shape: w.shape.clone(), groups, cout_g, cols, data, tier }
     }
 
     /// Total output channels across all groups.
@@ -762,24 +788,42 @@ pub struct PackedQW {
     pub scales: Vec<f32>,
     /// Per-output-channel payload sums (zero-point correction term).
     pub row_sums: Vec<i32>,
+    /// Kernel tier the payload was packed for: `[k][4]` panel interleave
+    /// on the scalar tier, row-major on SIMD tiers (their dot-product
+    /// loops read each output channel's row as one contiguous stream).
+    pub tier: KernelTier,
 }
 
 impl PackedQW {
-    /// Repack a quantized weight (either bit-width) for the panel kernels.
+    /// Repack a quantized weight (either bit-width) for the scalar-tier
+    /// panel kernels.
     pub fn pack(qw: &QWeight, groups: usize) -> PackedQW {
+        PackedQW::pack_for(qw, groups, KernelTier::Scalar)
+    }
+
+    /// Repack a quantized weight (either bit-width) for a resolved kernel
+    /// tier. The scalar tier interleaves full 4-row panels; SIMD tiers
+    /// keep the payload row-major (group slices stay contiguous either
+    /// way, so [`PackedQW::group`] is layout-agnostic).
+    pub fn pack_for(qw: &QWeight, groups: usize, tier: KernelTier) -> PackedQW {
         let cout = qw.cout();
         let cout_g = cout / groups.max(1);
         let cols = qw.per_row();
-        let row_bytes = if qw.bits == 4 { packed_row_bytes(cols) } else { cols };
-        let mut data = Vec::with_capacity(qw.data.len());
-        for g in 0..groups {
-            pack_panel_rows(
-                &qw.data[g * cout_g * row_bytes..(g + 1) * cout_g * row_bytes],
-                cout_g,
-                row_bytes,
-                &mut data,
-            );
-        }
+        let data = if tier.interleaved_int_panels() {
+            let row_bytes = if qw.bits == 4 { packed_row_bytes(cols) } else { cols };
+            let mut data = Vec::with_capacity(qw.data.len());
+            for g in 0..groups {
+                pack_panel_rows(
+                    &qw.data[g * cout_g * row_bytes..(g + 1) * cout_g * row_bytes],
+                    cout_g,
+                    row_bytes,
+                    &mut data,
+                );
+            }
+            data
+        } else {
+            qw.data.clone()
+        };
         PackedQW {
             shape: qw.shape.clone(),
             groups,
@@ -789,6 +833,7 @@ impl PackedQW {
             data,
             scales: qw.scales.clone(),
             row_sums: qw.row_sums.clone(),
+            tier,
         }
     }
 
@@ -1081,7 +1126,10 @@ fn gemm_i4_panel_rows(
 }
 
 /// Row-chunk parallel f32 GEMM over one group's panel-major payload
-/// (64-wide k blocking — the convolution form).
+/// (64-wide k blocking — the convolution form), dispatching on the tier
+/// the panels were packed for. All tiers are bit-identical: the SIMD
+/// float kernels vectorize across the 4 panel lanes, replaying the scalar
+/// per-output accumulation order exactly.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_f32_packed(
     x: &[f32],
@@ -1094,18 +1142,40 @@ pub(crate) fn gemm_f32_packed(
     out: &mut [f32],
     out_stride: usize,
     o0: usize,
+    tier: KernelTier,
 ) {
     let work = rows as u64 * cols as u64 * cout_g as u64;
     par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
-        gemm_f32_panel_rows(
-            &x[r0 * cols..(r0 + nr) * cols],
-            nr, cols, wp, cout_g, bias, act, chunk, out_stride, o0,
-        );
+        let xr = &x[r0 * cols..(r0 + nr) * cols];
+        match tier {
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => {
+                // SAFETY: the plan resolves Avx2 only when
+                // is_x86_feature_detected!("avx2") held on this machine
+                // (KernelTier::resolve), so the callee's target-feature
+                // contract is met.
+                unsafe {
+                    simd::avx2::gemm_f32_panel_rows(
+                        xr, nr, cols, wp, cout_g, bias, act, chunk, out_stride, o0,
+                    )
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => simd::neon::gemm_f32_panel_rows(
+                xr, nr, cols, wp, cout_g, bias, act, chunk, out_stride, o0,
+            ),
+            _ => gemm_f32_panel_rows(
+                xr, nr, cols, wp, cout_g, bias, act, chunk, out_stride, o0,
+            ),
+        }
     });
 }
 
-/// Row-chunk parallel integer GEMM over one group's panel-major payload,
-/// dispatching on the stored bit-width.
+/// Row-chunk parallel integer GEMM over one group's prepacked payload,
+/// dispatching on the stored bit-width and the tier the payload was
+/// packed for (scalar: `[k][4]` panel interleave; SIMD: row-major). i32
+/// accumulation is order-independent, so every tier is bit-exact with the
+/// interpreter's reference kernels.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_int_packed(
     xq: &[u8],
@@ -1122,18 +1192,77 @@ pub(crate) fn gemm_int_packed(
     out: &mut [f32],
     out_stride: usize,
     o0: usize,
+    tier: KernelTier,
 ) {
     let work = rows as u64 * cols as u64 * cout_g as u64;
     par_row_chunks(rows, out, out_stride, work, |r0, nr, chunk| {
         let xr = &xq[r0 * cols..(r0 + nr) * cols];
-        if bits == 4 {
-            gemm_i4_panel_rows(
-                xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride, o0,
-            );
-        } else {
-            gemm_i8_panel_rows(
-                xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride, o0,
-            );
+        match tier {
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => {
+                // SAFETY: the plan resolves Avx2 only when
+                // is_x86_feature_detected!("avx2") held on this machine
+                // (KernelTier::resolve), so the callees' target-feature
+                // contract is met; the payload was packed row-major for
+                // this tier.
+                unsafe {
+                    if bits == 4 {
+                        simd::avx2::gemm_i4_rows(
+                            xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk,
+                            out_stride, o0,
+                        )
+                    } else {
+                        simd::avx2::gemm_i8_rows(
+                            xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk,
+                            out_stride, o0,
+                        )
+                    }
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => {
+                if bits == 4 {
+                    simd::neon::gemm_i4_rows(
+                        xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride,
+                        o0,
+                    )
+                } else {
+                    simd::neon::gemm_i8_rows(
+                        xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride,
+                        o0,
+                    )
+                }
+            }
+            _ if tier.interleaved_int_panels() => {
+                if bits == 4 {
+                    gemm_i4_panel_rows(
+                        xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride,
+                        o0,
+                    )
+                } else {
+                    gemm_i8_panel_rows(
+                        xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride,
+                        o0,
+                    )
+                }
+            }
+            // A SIMD tier this target cannot execute (possible only if a
+            // plan crossed machines, which the verifier rejects): the
+            // payload is row-major, so the scalar row-major kernels are
+            // still correct.
+            _ => {
+                if bits == 4 {
+                    gemm_i4_rows(
+                        xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride,
+                        o0,
+                    )
+                } else {
+                    gemm_i8_rows(
+                        xr, nr, cols, wp, cout_g, rowsum, sxw, zx, bias, act, chunk, out_stride,
+                        o0,
+                    )
+                }
+            }
         }
     });
 }
@@ -1165,6 +1294,7 @@ pub fn conv2d_f32_packed(
         let bslice = bias.map(|b| &b[g * cout_g..(g + 1) * cout_g]);
         gemm_f32_packed(
             col.as_slice(), rows, cols, wp.group(g), cout_g, bslice, act, mat, cout, g * cout_g,
+            wp.tier,
         );
     }
     out_mat_to_nchw_into(mat.as_slice(), n, cout, ho, wo, out);
@@ -1205,7 +1335,7 @@ pub fn conv2d_int_packed(
         let bslice = bias.map(|b| &b[g * cout_g..(g + 1) * cout_g]);
         gemm_int_packed(
             xq.as_slice(), rows, cols, pw.group(g), pw.bits, cout_g, rowsum, sxw_g, zx, bslice,
-            act, mat, cout, g * cout_g,
+            act, mat, cout, g * cout_g, pw.tier,
         );
     }
     out_mat_to_nchw_into(mat.as_slice(), n, cout, ho, wo, out);
@@ -1226,7 +1356,23 @@ pub fn linear_f32_packed(
     let work = rows as u64 * din as u64 * dout as u64;
     par_row_chunks(rows, out, dout, work, |r0, nr, chunk| {
         let xr = &x[r0 * din..(r0 + nr) * din];
-        linear_f32_panel_rows(xr, nr, din, &wp.data, dout, bias, act, chunk);
+        match wp.tier {
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => {
+                // SAFETY: the plan resolves Avx2 only when
+                // is_x86_feature_detected!("avx2") held on this machine
+                // (KernelTier::resolve), so the callee's target-feature
+                // contract is met.
+                unsafe {
+                    simd::avx2::linear_f32_panel_rows(xr, nr, din, &wp.data, dout, bias, act, chunk)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => {
+                simd::neon::linear_f32_panel_rows(xr, nr, din, &wp.data, dout, bias, act, chunk)
+            }
+            _ => linear_f32_panel_rows(xr, nr, din, &wp.data, dout, bias, act, chunk),
+        }
     });
 }
 
@@ -1252,7 +1398,7 @@ pub fn linear_int_packed(
     quantize_slice_into(x, sx, zx, round, xq);
     gemm_int_packed(
         xq.as_slice(), rows, din, &pw.data, pw.bits, dout, &pw.row_sums, sxw, zx, bias, act, out,
-        dout, 0,
+        dout, 0, pw.tier,
     );
 }
 
@@ -2404,6 +2550,111 @@ mod tests {
             caps,
             "warm rerun grew a scratch buffer"
         );
+    }
+
+    #[test]
+    fn pack_for_simd_tiers_stores_row_major_int_payload() {
+        // SIMD tiers must keep the integer payload row-major (identity
+        // pack); the scalar tier interleaves panels. pack_for itself is
+        // layout-only, so this holds on every host architecture.
+        let mut rng = Rng::new(0x9A14);
+        let w = Tensor::new(vec![6, 8], rng.normal_vec(48, 0.2));
+        for bits in [8u8, 4] {
+            let qw =
+                QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits);
+            for tier in [KernelTier::Avx2, KernelTier::Neon] {
+                let p = PackedQW::pack_for(&qw, 1, tier);
+                assert_eq!(p.tier, tier);
+                assert_eq!(p.data, qw.data, "int{bits} {tier:?} payload must be row-major");
+            }
+            let ps = PackedQW::pack_for(&qw, 1, KernelTier::Scalar);
+            assert_ne!(ps.data, qw.data, "int{bits} scalar payload must be panel-interleaved");
+        }
+        // float panels share one layout across tiers
+        let fs = PackedF32::pack_for(&w, 1, KernelTier::Scalar);
+        let fv = PackedF32::pack_for(&w, 1, KernelTier::Avx2);
+        assert_eq!(fs.data, fv.data, "f32 panel layout must be tier-independent");
+    }
+
+    #[test]
+    fn simd_tier_bit_matches_scalar_tier_on_packed_kernels() {
+        // When this machine has a SIMD tier, every packed entry point must
+        // produce bit-identical outputs on it vs the scalar tier. (On a
+        // scalar-only host — or under PALLAS_FORCE_SCALAR — both packs
+        // resolve identically and the test is vacuous but still runs.)
+        let tier = KernelTier::detect();
+        let mut rng = Rng::new(0x9A15);
+        let x = Tensor::new(vec![2, 3, 7, 7], rng.normal_vec(2 * 3 * 49, 1.0));
+        // odd cout (panel/row tail) and odd im2col width (nibble tail)
+        let w = Tensor::new(vec![5, 3, 3, 3], rng.normal_vec(5 * 27, 0.2));
+        let b = Tensor::new(vec![5], rng.normal_vec(5, 0.3));
+        let (sx, zx) = act_scale_zp(-3.0, 3.0);
+        let (mut col, mut xq, mut mat) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut out_s, mut out_v) = (Tensor::default(), Tensor::default());
+        for bits in [8u8, 4] {
+            let qw =
+                QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits);
+            let sxw = premul_scales(&qw.scales, qw.shape[0], sx);
+            let ps = PackedQW::pack_for(&qw, 1, KernelTier::Scalar);
+            let pv = PackedQW::pack_for(&qw, 1, tier);
+            conv2d_int_packed(
+                &x, &ps, Some(&b.data), 1, 1, sx, zx, RoundMode::TiesEven, &sxw, Some(Act::Relu),
+                &mut col, &mut xq, &mut mat, &mut out_s,
+            );
+            conv2d_int_packed(
+                &x, &pv, Some(&b.data), 1, 1, sx, zx, RoundMode::TiesEven, &sxw, Some(Act::Relu),
+                &mut col, &mut xq, &mut mat, &mut out_v,
+            );
+            assert_eq!(
+                out_s.data, out_v.data,
+                "int{bits} conv: {tier:?} tier drifted from scalar tier"
+            );
+
+            // linear with odd din (tail nibble / k % 16 != 0) and odd dout
+            let (rows, din, dout) = (6, 37, 9);
+            let wl = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.2));
+            let ql =
+                QWeight::quantize_bits(&wl, QuantScheme::PerTensorSym, RoundMode::HalfAway, bits);
+            let xl = rng.normal_vec(rows * din, 1.0);
+            let sxwl = premul_scales(&ql.scales, dout, sx);
+            let ls = PackedQW::pack_for(&ql, 1, KernelTier::Scalar);
+            let lv = PackedQW::pack_for(&ql, 1, tier);
+            let (mut outl_s, mut outl_v) = (vec![0.0f32; rows * dout], vec![0.0f32; rows * dout]);
+            linear_int_packed(
+                &xl, rows, &ls, None, sx, zx, RoundMode::HalfAway, &sxwl, None, &mut xq,
+                &mut outl_s,
+            );
+            linear_int_packed(
+                &xl, rows, &lv, None, sx, zx, RoundMode::HalfAway, &sxwl, None, &mut xq,
+                &mut outl_v,
+            );
+            assert_eq!(
+                outl_s, outl_v,
+                "int{bits} linear: {tier:?} tier drifted from scalar tier"
+            );
+        }
+
+        // float path: lane-wise panel vectorization must replay the scalar
+        // accumulation order exactly
+        let fs = PackedF32::pack_for(&w, 1, KernelTier::Scalar);
+        let fv = PackedF32::pack_for(&w, 1, tier);
+        conv2d_f32_packed(
+            &x, &fs, Some(&b.data), 1, 1, Some(Act::Relu), &mut col, &mut mat, &mut out_s,
+        );
+        conv2d_f32_packed(
+            &x, &fv, Some(&b.data), 1, 1, Some(Act::Relu), &mut col, &mut mat, &mut out_v,
+        );
+        assert_eq!(out_s.data, out_v.data, "f32 conv: {tier:?} tier drifted from scalar tier");
+
+        let (rows, din, dout) = (5, 67, 11);
+        let wl = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.2));
+        let xl = rng.normal_vec(rows * din, 1.0);
+        let ls = PackedF32::pack_for(&wl, 1, KernelTier::Scalar);
+        let lv = PackedF32::pack_for(&wl, 1, tier);
+        let (mut outl_s, mut outl_v) = (vec![0.0f32; rows * dout], vec![0.0f32; rows * dout]);
+        linear_f32_packed(&xl, rows, &ls, None, None, &mut outl_s);
+        linear_f32_packed(&xl, rows, &lv, None, None, &mut outl_v);
+        assert_eq!(outl_s, outl_v, "f32 linear: {tier:?} tier drifted from scalar tier");
     }
 
     #[test]

@@ -41,12 +41,19 @@
 //! paths (i8 and nibble-packed i4, static and dynamic scaling) are
 //! bit-exact with the interpreter — asserted by `tests/plan_exactness.rs`
 //! across the full ExecConfig matrix.
+//!
+//! `compile` also resolves the inner-kernel [`KernelTier`] exactly once
+//! (runtime CPU-feature detection, overridable via
+//! `ExecConfig::kernel_tier` or the `PALLAS_FORCE_SCALAR` environment
+//! variable) and packs every panel for that tier; the bit-exactness
+//! contract above holds on every tier (see `engine::simd`).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
 use crate::engine::ops::{self, Act};
+use crate::engine::simd::KernelTier;
 use crate::engine::{lowp, ActMode, CompiledModel, BN_EPS};
 use crate::qir::{Graph, Node};
 use crate::tensor::{act_scale_zp, RoundMode, Tensor};
@@ -202,6 +209,9 @@ pub struct ExecPlan {
     pub(crate) fpanels: Vec<ops::PackedF32>,
     pub(crate) qpanels: Vec<ops::PackedQW>,
     pub(crate) sizes: ScratchSizes,
+    /// Inner-kernel tier resolved once at compile time; every prepacked
+    /// panel is packed for (and dispatched to) exactly this tier.
+    pub(crate) tier: KernelTier,
 }
 
 /// Grow a buffer's capacity to `want` elements without touching its
@@ -259,7 +269,11 @@ impl ExecPlan {
     /// time) on missing params, ranges, or unknown ops.
     pub fn compile(model: &CompiledModel) -> Result<ExecPlan> {
         let graph = &model.graph;
-        let mut b = Builder { tensors: Vec::new(), fpanels: Vec::new(), qpanels: Vec::new() };
+        // one plan-time CPU-feature probe: every panel is packed for this
+        // tier and dispatch afterwards is a branch on the stored enum
+        let tier = KernelTier::resolve(model.cfg.kernel_tier);
+        let mut b =
+            Builder { tensors: Vec::new(), fpanels: Vec::new(), qpanels: Vec::new(), tier };
         let mut remaining: HashMap<String, usize> = graph.consumer_counts();
         let mut slot_of: HashMap<String, usize> = HashMap::new();
         let mut free: Vec<usize> = Vec::new();
@@ -312,6 +326,7 @@ impl ExecPlan {
             fpanels: b.fpanels,
             qpanels: b.qpanels,
             sizes: ScratchSizes::default(),
+            tier,
         };
         plan.sizes = plan.infer_sizes(graph);
         // Debug builds self-audit every freshly compiled plan: the symbolic
@@ -340,6 +355,12 @@ impl ExecPlan {
     /// Number of lowered instructions (== graph nodes) in the plan.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Inner-kernel tier this plan was compiled for (fixed at compile
+    /// time; see [`KernelTier::resolve`] for the detection/override rules).
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Per-sample scratch high-water marks from the graph's declared
@@ -778,6 +799,8 @@ struct Builder {
     tensors: Vec<Tensor>,
     fpanels: Vec<ops::PackedF32>,
     qpanels: Vec<ops::PackedQW>,
+    /// Resolved kernel tier every panel is packed for.
+    tier: KernelTier,
 }
 
 impl Builder {
@@ -831,9 +854,13 @@ impl Builder {
         let w = match (model.cfg.weight_mode, round, model.qweights.get(&wkey)) {
             (wm, Some(round), Some(qw)) if wm.is_integer() => {
                 let iq = Self::iquant(model, &n.inputs[0], &qw.scales, d)?;
-                ProjW::I8 { w: self.add_qp(ops::PackedQW::pack(qw, 1)), round, iq }
+                let w = self.add_qp(ops::PackedQW::pack_for(qw, 1, self.tier));
+                ProjW::I8 { w, round, iq }
             }
-            _ => ProjW::F32(self.add_fp(ops::PackedF32::pack(&model.weight_tensor(&wkey)?, 1))),
+            _ => {
+                let w = ops::PackedF32::pack_for(&model.weight_tensor(&wkey)?, 1, self.tier);
+                ProjW::F32(self.add_fp(w))
+            }
         };
         Ok(AttnProj { w, b })
     }
@@ -858,12 +885,12 @@ impl Builder {
                 match (model.cfg.weight_mode, model.int_round(), model.qweights.get(&wkey)) {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let iq = Self::iquant(model, &n.inputs[0], &qw.scales, qw.shape[0])?;
-                        let w = self.add_qp(ops::PackedQW::pack(qw, groups));
+                        let w = self.add_qp(ops::PackedQW::pack_for(qw, groups, self.tier));
                         POp::ConvI8 { w, bias, stride, pad, act, round, iq }
                     }
                     _ => {
                         let w = model.weight_tensor(&wkey)?;
-                        let w = self.add_fp(ops::PackedF32::pack(&w, groups));
+                        let w = self.add_fp(ops::PackedF32::pack_for(&w, groups, self.tier));
                         POp::ConvF32 { w, bias, stride, pad, act }
                     }
                 }
@@ -882,12 +909,12 @@ impl Builder {
                     (wm, Some(round), Some(qw)) if wm.is_integer() => {
                         let dout = n.attr_usize("dout")?;
                         let iq = Self::iquant(model, &n.inputs[0], &qw.scales, dout)?;
-                        let w = self.add_qp(ops::PackedQW::pack(qw, 1));
+                        let w = self.add_qp(ops::PackedQW::pack_for(qw, 1, self.tier));
                         POp::LinearI8 { w, bias, act, round, iq }
                     }
                     _ => {
                         let w = model.weight_tensor(&wkey)?;
-                        let w = self.add_fp(ops::PackedF32::pack(&w, 1));
+                        let w = self.add_fp(ops::PackedF32::pack_for(&w, 1, self.tier));
                         POp::LinearF32 { w, bias, act }
                     }
                 }

@@ -1,0 +1,420 @@
+//! AVX2 inner kernels (x86_64). See the module docs in [`super`] for the
+//! tier contract; the short version:
+//!
+//! * integer kernels read ROW-MAJOR weights (no `[k][4]` interleave — each
+//!   output channel's payload is one contiguous byte stream) and widen
+//!   u8→i16 / i8→i16 before `_mm256_madd_epi16`, which is exact: a pair
+//!   product is at most `255·128`, so the i16-pair dot sum fits i32 with
+//!   no saturation (the `maddubs` shortcut saturates at i16 and is
+//!   deliberately NOT used). i32 accumulation is order-independent, so
+//!   outputs are bit-identical to the scalar kernels.
+//! * float kernels read the same `[k][4]`-interleaved panels as the scalar
+//!   tier and vectorize ACROSS the panel: the four accumulator lanes are
+//!   the scalar kernel's `a0..a3`, updated with separate mul and add
+//!   intrinsics (never contracted to FMA), so each lane replays the scalar
+//!   per-output accumulation order bit-for-bit.
+//!
+//! Every function carries `#[target_feature(enable = "avx2")]`; callers
+//! guarantee AVX2 support (the tier is only resolved on machines where
+//! `is_x86_feature_detected!("avx2")` holds). Only the pointer-based
+//! loads/stores are `unsafe` — value intrinsics are safe inside the
+//! feature context.
+
+use std::arch::x86_64::*;
+
+use crate::engine::ops::{apply_act, nib_hi, nib_lo, Act};
+use crate::tensor::quantized::packed_row_bytes;
+
+/// Horizontal sum of the eight i32 lanes.
+#[target_feature(enable = "avx2")]
+fn hsum_epi32(v: __m256i) -> i32 {
+    let mut lanes = [0i32; 8];
+    // SAFETY: `lanes` is 32 writable bytes; the unaligned store has no
+    // alignment requirement.
+    unsafe { _mm256_storeu_si256(lanes.as_mut_ptr().cast(), v) };
+    lanes.iter().sum()
+}
+
+/// Unpack 8 nibble-packed int4 bytes (low half of `v`) into 16
+/// sign-extended i8 values in k order: byte `b` carries `k = 2b` in its
+/// low nibble and `k = 2b + 1` in its high nibble.
+#[target_feature(enable = "avx2")]
+fn unpack_nibbles16(v: __m128i) -> __m128i {
+    let low = _mm_set1_epi8(0x0f);
+    let eight = _mm_set1_epi8(8);
+    let lo = _mm_and_si128(v, low);
+    // per-byte high nibble via the 16-bit shifter; the cross-byte bleed is
+    // masked off
+    let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), low);
+    // 4-bit sign extension: (n ^ 8) - 8 maps 0..=15 to -8..=7
+    let lo = _mm_sub_epi8(_mm_xor_si128(lo, eight), eight);
+    let hi = _mm_sub_epi8(_mm_xor_si128(hi, eight), eight);
+    _mm_unpacklo_epi8(lo, hi)
+}
+
+/// Row-range AVX2 kernel over row-major i8 weights: bit-identical to the
+/// scalar kernels (shared requantization epilogue, order-independent i32
+/// accumulation), 16 k-steps per vector iteration, 4-way output-channel
+/// register blocking sharing one widened activation vector.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) fn gemm_i8_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let kb = cols - cols % 16;
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let w0 = &wq[o * cols..(o + 1) * cols];
+            let w1 = &wq[(o + 1) * cols..(o + 2) * cols];
+            let w2 = &wq[(o + 2) * cols..(o + 3) * cols];
+            let w3 = &wq[(o + 3) * cols..(o + 4) * cols];
+            let mut v0 = _mm256_setzero_si256();
+            let mut v1 = _mm256_setzero_si256();
+            let mut v2 = _mm256_setzero_si256();
+            let mut v3 = _mm256_setzero_si256();
+            let mut k = 0;
+            while k + 16 <= cols {
+                // SAFETY: k + 16 <= cols and each of the five row slices
+                // holds `cols` bytes, so every 16-byte unaligned load is in
+                // bounds.
+                let (xv, wv0, wv1, wv2, wv3) = unsafe {
+                    (
+                        _mm_loadu_si128(xrow.as_ptr().add(k).cast()),
+                        _mm_loadu_si128(w0.as_ptr().add(k).cast()),
+                        _mm_loadu_si128(w1.as_ptr().add(k).cast()),
+                        _mm_loadu_si128(w2.as_ptr().add(k).cast()),
+                        _mm_loadu_si128(w3.as_ptr().add(k).cast()),
+                    )
+                };
+                let x16 = _mm256_cvtepu8_epi16(xv);
+                v0 = _mm256_add_epi32(v0, _mm256_madd_epi16(x16, _mm256_cvtepi8_epi16(wv0)));
+                v1 = _mm256_add_epi32(v1, _mm256_madd_epi16(x16, _mm256_cvtepi8_epi16(wv1)));
+                v2 = _mm256_add_epi32(v2, _mm256_madd_epi16(x16, _mm256_cvtepi8_epi16(wv2)));
+                v3 = _mm256_add_epi32(v3, _mm256_madd_epi16(x16, _mm256_cvtepi8_epi16(wv3)));
+                k += 16;
+            }
+            let mut a0 = hsum_epi32(v0);
+            let mut a1 = hsum_epi32(v1);
+            let mut a2 = hsum_epi32(v2);
+            let mut a3 = hsum_epi32(v3);
+            for i in kb..cols {
+                let x = xrow[i] as i32;
+                a0 += x * w0[i] as i32;
+                a1 += x * w1[i] as i32;
+                a2 += x * w2[i] as i32;
+                a3 += x * w3[i] as i32;
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wq[o * cols..(o + 1) * cols];
+            let mut v = _mm256_setzero_si256();
+            let mut k = 0;
+            while k + 16 <= cols {
+                // SAFETY: k + 16 <= cols; xrow and wrow both hold `cols`
+                // bytes, so both 16-byte unaligned loads are in bounds.
+                let (xv, wv) = unsafe {
+                    (
+                        _mm_loadu_si128(xrow.as_ptr().add(k).cast()),
+                        _mm_loadu_si128(wrow.as_ptr().add(k).cast()),
+                    )
+                };
+                let prod = _mm256_madd_epi16(_mm256_cvtepu8_epi16(xv), _mm256_cvtepi8_epi16(wv));
+                v = _mm256_add_epi32(v, prod);
+                k += 16;
+            }
+            let mut acc = hsum_epi32(v);
+            for i in kb..cols {
+                acc += xrow[i] as i32 * wrow[i] as i32;
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
+/// Row-range AVX2 kernel over row-major nibble-packed i4 weights: 8 packed
+/// bytes (16 k-steps) are unpacked per vector iteration via
+/// [`unpack_nibbles16`], then fed through the same widened `madd` dot
+/// product as the i8 kernel. The sub-16 byte tail and the odd-column low
+/// nibble run the scalar helpers. Bit-identical to `gemm_i4_rows` /
+/// `gemm_i4_panel_rows` in `engine::ops`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) fn gemm_i4_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let bpr = packed_row_bytes(cols);
+    let pairs = cols / 2;
+    let vb = pairs - pairs % 8;
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let w0 = &wq[o * bpr..(o + 1) * bpr];
+            let w1 = &wq[(o + 1) * bpr..(o + 2) * bpr];
+            let w2 = &wq[(o + 2) * bpr..(o + 3) * bpr];
+            let w3 = &wq[(o + 3) * bpr..(o + 4) * bpr];
+            let mut v0 = _mm256_setzero_si256();
+            let mut v1 = _mm256_setzero_si256();
+            let mut v2 = _mm256_setzero_si256();
+            let mut v3 = _mm256_setzero_si256();
+            let mut b = 0;
+            while b + 8 <= vb {
+                // SAFETY: b + 8 <= vb <= pairs <= bpr, so each 8-byte weight
+                // load is in bounds; 2b + 16 <= 2·pairs <= cols keeps the
+                // 16-byte activation load in bounds too.
+                let (xv, wv0, wv1, wv2, wv3) = unsafe {
+                    (
+                        _mm_loadu_si128(xrow.as_ptr().add(2 * b).cast()),
+                        _mm_loadl_epi64(w0.as_ptr().add(b).cast()),
+                        _mm_loadl_epi64(w1.as_ptr().add(b).cast()),
+                        _mm_loadl_epi64(w2.as_ptr().add(b).cast()),
+                        _mm_loadl_epi64(w3.as_ptr().add(b).cast()),
+                    )
+                };
+                let x16 = _mm256_cvtepu8_epi16(xv);
+                let u0 = _mm256_cvtepi8_epi16(unpack_nibbles16(wv0));
+                let u1 = _mm256_cvtepi8_epi16(unpack_nibbles16(wv1));
+                let u2 = _mm256_cvtepi8_epi16(unpack_nibbles16(wv2));
+                let u3 = _mm256_cvtepi8_epi16(unpack_nibbles16(wv3));
+                v0 = _mm256_add_epi32(v0, _mm256_madd_epi16(x16, u0));
+                v1 = _mm256_add_epi32(v1, _mm256_madd_epi16(x16, u1));
+                v2 = _mm256_add_epi32(v2, _mm256_madd_epi16(x16, u2));
+                v3 = _mm256_add_epi32(v3, _mm256_madd_epi16(x16, u3));
+                b += 8;
+            }
+            let mut a0 = hsum_epi32(v0);
+            let mut a1 = hsum_epi32(v1);
+            let mut a2 = hsum_epi32(v2);
+            let mut a3 = hsum_epi32(v3);
+            for kb in vb..pairs {
+                let x0 = xrow[2 * kb] as i32;
+                let x1 = xrow[2 * kb + 1] as i32;
+                a0 += x0 * nib_lo(w0[kb]) + x1 * nib_hi(w0[kb]);
+                a1 += x0 * nib_lo(w1[kb]) + x1 * nib_hi(w1[kb]);
+                a2 += x0 * nib_lo(w2[kb]) + x1 * nib_hi(w2[kb]);
+                a3 += x0 * nib_lo(w3[kb]) + x1 * nib_hi(w3[kb]);
+            }
+            if cols % 2 == 1 {
+                let x0 = xrow[cols - 1] as i32;
+                a0 += x0 * nib_lo(w0[bpr - 1]);
+                a1 += x0 * nib_lo(w1[bpr - 1]);
+                a2 += x0 * nib_lo(w2[bpr - 1]);
+                a3 += x0 * nib_lo(w3[bpr - 1]);
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wq[o * bpr..(o + 1) * bpr];
+            let mut v = _mm256_setzero_si256();
+            let mut b = 0;
+            while b + 8 <= vb {
+                // SAFETY: b + 8 <= vb <= pairs <= bpr bounds the 8-byte
+                // weight load; 2b + 16 <= cols bounds the activation load.
+                let (xv, wv) = unsafe {
+                    (
+                        _mm_loadu_si128(xrow.as_ptr().add(2 * b).cast()),
+                        _mm_loadl_epi64(wrow.as_ptr().add(b).cast()),
+                    )
+                };
+                let u = _mm256_cvtepi8_epi16(unpack_nibbles16(wv));
+                v = _mm256_add_epi32(v, _mm256_madd_epi16(_mm256_cvtepu8_epi16(xv), u));
+                b += 8;
+            }
+            let mut acc = hsum_epi32(v);
+            for kb in vb..pairs {
+                acc += xrow[2 * kb] as i32 * nib_lo(wrow[kb])
+                    + xrow[2 * kb + 1] as i32 * nib_hi(wrow[kb]);
+            }
+            if cols % 2 == 1 {
+                acc += xrow[cols - 1] as i32 * nib_lo(wrow[bpr - 1]);
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
+/// 4-lane twin of the scalar `gemm_f32_panel_rows` (the 64-wide k-blocked
+/// convolution form). Each accumulator LANE replays the scalar kernel's
+/// per-output operation sequence — separate mul and add per k step, block
+/// partials folded in the same order — so outputs are bit-identical.
+/// Remainder rows (< 4 channels) run the scalar loop unchanged.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) fn gemm_f32_panel_rows(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    wp: &[f32],
+    cout_g: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    const BK: usize = 64;
+    for r in 0..rows {
+        let xrow = &x[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let pan = &wp[o * cols..(o + 4) * cols];
+            let mut a = _mm_setzero_ps();
+            let mut k = 0;
+            while k + BK <= cols {
+                let mut s = _mm_setzero_ps();
+                for i in k..k + BK {
+                    // SAFETY: i < cols, so the 4-wide load at i*4 ends at
+                    // i*4 + 4 <= 4*cols == pan.len().
+                    let wv = unsafe { _mm_loadu_ps(pan.as_ptr().add(i * 4)) };
+                    s = _mm_add_ps(s, _mm_mul_ps(_mm_set1_ps(xrow[i]), wv));
+                }
+                a = _mm_add_ps(a, s);
+                k += BK;
+            }
+            for i in k..cols {
+                // SAFETY: i < cols, as above.
+                let wv = unsafe { _mm_loadu_ps(pan.as_ptr().add(i * 4)) };
+                a = _mm_add_ps(a, _mm_mul_ps(_mm_set1_ps(xrow[i]), wv));
+            }
+            let mut lanes = [0.0f32; 4];
+            // SAFETY: `lanes` is 16 writable bytes; unaligned store.
+            unsafe { _mm_storeu_ps(lanes.as_mut_ptr(), a) };
+            for (j, acc) in lanes.into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[o0 + oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            // remainder rows are stored row-major at offset o*cols; this is
+            // the scalar remainder loop verbatim
+            let wrow = &wp[o * cols..(o + 1) * cols];
+            let mut acc = 0.0f32;
+            let mut k = 0;
+            while k + BK <= cols {
+                let mut s = 0.0f32;
+                for i in k..k + BK {
+                    s += xrow[i] * wrow[i];
+                }
+                acc += s;
+                k += BK;
+            }
+            for i in k..cols {
+                acc += xrow[i] * wrow[i];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o0 + o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}
+
+/// 4-lane twin of the scalar `linear_f32_panel_rows` (plain unblocked
+/// accumulation — the linear / attention-projection form). Same lane
+/// contract as [`gemm_f32_panel_rows`]: bit-identical outputs.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) fn linear_f32_panel_rows(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    wp: &[f32],
+    dout: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut o = 0;
+        while o + 4 <= dout {
+            let pan = &wp[o * din..(o + 4) * din];
+            let mut a = _mm_setzero_ps();
+            for k in 0..din {
+                // SAFETY: k < din, so the 4-wide load at k*4 ends at
+                // k*4 + 4 <= 4*din == pan.len().
+                let wv = unsafe { _mm_loadu_ps(pan.as_ptr().add(k * 4)) };
+                a = _mm_add_ps(a, _mm_mul_ps(_mm_set1_ps(xrow[k]), wv));
+            }
+            let mut lanes = [0.0f32; 4];
+            // SAFETY: `lanes` is 16 writable bytes; unaligned store.
+            unsafe { _mm_storeu_ps(lanes.as_mut_ptr(), a) };
+            for (j, acc) in lanes.into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < dout {
+            let wrow = &wp[o * din..(o + 1) * din];
+            let mut acc = 0.0f32;
+            for k in 0..din {
+                acc += xrow[k] * wrow[k];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}

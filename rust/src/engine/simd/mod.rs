@@ -1,0 +1,181 @@
+//! Kernel tiers: plan-time runtime CPU-feature detection and the SIMD
+//! inner kernels behind the planned GEMMs.
+//!
+//! The engine ships three tiers of inner kernels:
+//!
+//! * [`KernelTier::Scalar`] — the portable reference kernels in
+//!   `engine::ops`. Always available, always correct; every other tier is
+//!   asserted bit-identical against it.
+//! * [`KernelTier::Avx2`] — 256-bit x86_64 kernels ([`avx2`]): widening
+//!   i8×i8→i32 dot products (`_mm256_madd_epi16` after an exact u8→i16 /
+//!   i8→i16 widen — never the saturating `maddubs` form) for the INT8 and
+//!   nibble-packed INT4 GEMMs, and 4-lane float panels for the f32 path.
+//! * [`KernelTier::Neon`] — 128-bit aarch64 equivalents ([`neon`]) built
+//!   on `vmlal_s16` widening multiply-accumulates.
+//!
+//! The tier is resolved ONCE per deployment, in `ExecPlan::compile`
+//! ([`KernelTier::resolve`]), and recorded on the plan and on every
+//! prepacked weight panel — dispatch afterwards is a branch on a stored
+//! enum, never a per-call feature probe.
+//!
+//! ## Bit-exactness contract
+//!
+//! Per-output accumulation must be reproducible across tiers (the
+//! plan-vs-interpreter contract of `tests/plan_exactness.rs`):
+//!
+//! * **integer GEMMs** — i32 addition is associative and commutative, so
+//!   the 8-lane (AVX2) / 4-lane (NEON) partial accumulators sum to exactly
+//!   the scalar kernel's accumulator for ANY reassociation; the
+//!   requantization epilogue is shared verbatim. The static accumulator
+//!   interval of `qir::analysis::acc_bounds` contains every partial sum of
+//!   any subset of terms, so the vectorized order needs no new headroom.
+//! * **float GEMMs** — f32 addition is NOT associative, so the float
+//!   kernels vectorize across the 4-output-channel panel dimension
+//!   instead: the four accumulator lanes ARE the scalar kernel's four
+//!   accumulators, each updated with the same mul-then-add per k step
+//!   (explicit intrinsics are never contracted into FMA), preserving the
+//!   scalar accumulation order bit-for-bit per output.
+//!
+//! Forcing the fallback tier: set `PALLAS_FORCE_SCALAR=1` (any non-empty
+//! value other than `0`) — it overrides both auto-detection and an
+//! explicit `ExecConfig::kernel_tier`, which is what the CI kernel-matrix
+//! job uses to run the whole suite on the scalar tier.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+/// Environment variable forcing [`KernelTier::Scalar`] everywhere,
+/// regardless of detection or explicit configuration.
+pub const FORCE_SCALAR_ENV: &str = "PALLAS_FORCE_SCALAR";
+
+/// Inner-kernel instruction tier of a compiled execution plan. Resolved
+/// once at plan time; see the module docs for the dispatch and
+/// bit-exactness rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// Portable scalar kernels — the always-correct fallback tier.
+    Scalar,
+    /// 256-bit AVX2 integer / 4-lane float kernels (x86_64 with AVX2).
+    Avx2,
+    /// 128-bit NEON kernels (aarch64, where NEON is architecturally
+    /// baseline).
+    Neon,
+}
+
+impl KernelTier {
+    /// The tier a fresh plan would use on this machine right now:
+    /// [`FORCE_SCALAR_ENV`] wins, then the best tier the running CPU
+    /// supports.
+    pub fn detect() -> KernelTier {
+        KernelTier::resolve(None)
+    }
+
+    /// Resolve the tier for a plan: the [`FORCE_SCALAR_ENV`] kill-switch
+    /// overrides everything; otherwise an explicit request is honored when
+    /// this machine can run it (and degraded to `Scalar` when it cannot —
+    /// a plan must never dispatch an instruction set the host lacks);
+    /// otherwise the best available tier is detected.
+    pub fn resolve(requested: Option<KernelTier>) -> KernelTier {
+        if force_scalar() {
+            return KernelTier::Scalar;
+        }
+        let tier = requested.unwrap_or_else(KernelTier::native);
+        if tier.available() {
+            tier
+        } else {
+            KernelTier::Scalar
+        }
+    }
+
+    /// Best tier the running CPU supports (ignoring overrides).
+    fn native() -> KernelTier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                KernelTier::Avx2
+            } else {
+                KernelTier::Scalar
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            KernelTier::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            KernelTier::Scalar
+        }
+    }
+
+    /// True when this machine can execute the tier's kernels.
+    pub fn available(self) -> bool {
+        match self {
+            KernelTier::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => true,
+            _ => false,
+        }
+    }
+
+    /// Stable lowercase name (bench JSON, logs, reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// True when the tier reads integer weight panels in the scalar
+    /// kernels' `[k][4]`-interleaved layout. SIMD tiers keep the payload
+    /// row-major instead: their dot-product loops read each output
+    /// channel's row as one contiguous byte stream. (`ops::PackedQW::pack_for`
+    /// packs accordingly; float panels are `[k][4]`-interleaved on every
+    /// tier because the float kernels vectorize across the panel lanes.)
+    pub(crate) fn interleaved_int_panels(self) -> bool {
+        matches!(self, KernelTier::Scalar)
+    }
+}
+
+/// True when [`FORCE_SCALAR_ENV`] is set to a non-empty value other than
+/// `0`.
+fn force_scalar() -> bool {
+    std::env::var_os(FORCE_SCALAR_ENV).is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::KernelTier;
+
+    #[test]
+    fn scalar_is_always_available_and_resolution_is_sane() {
+        assert!(KernelTier::Scalar.available());
+        let auto = KernelTier::detect();
+        assert!(auto.available(), "detected tier must be runnable: {auto:?}");
+        // an explicit available request is honored (unless the env
+        // kill-switch is set, in which case everything is Scalar)
+        let forced = KernelTier::resolve(Some(KernelTier::Scalar));
+        assert_eq!(forced, KernelTier::Scalar);
+        assert_eq!(KernelTier::resolve(Some(auto)), KernelTier::resolve(Some(auto)));
+    }
+
+    #[test]
+    fn foreign_tier_requests_degrade_to_scalar() {
+        // a tier this target cannot execute must never be resolved
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(KernelTier::resolve(Some(KernelTier::Neon)), KernelTier::Scalar);
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(KernelTier::resolve(Some(KernelTier::Avx2)), KernelTier::Scalar);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(KernelTier::Scalar.label(), "scalar");
+        assert_eq!(KernelTier::Avx2.label(), "avx2");
+        assert_eq!(KernelTier::Neon.label(), "neon");
+    }
+}

@@ -1,0 +1,408 @@
+//! NEON inner kernels (aarch64). Mirror of [`super::avx2`] at 128-bit
+//! width; see the module docs in [`super`] for the tier contract:
+//!
+//! * integer kernels read ROW-MAJOR weights and widen u8→i16 / i8→i16
+//!   before `vmlal_s16` widening multiply-accumulates into i32 lanes —
+//!   exact (a pair product is at most `255·128`), and i32 accumulation is
+//!   order-independent, so outputs are bit-identical to the scalar
+//!   kernels.
+//! * float kernels read the scalar tier's `[k][4]`-interleaved panels and
+//!   vectorize ACROSS the panel: the four accumulator lanes are the scalar
+//!   kernel's `a0..a3`, updated with separate `vmulq_f32` + `vaddq_f32`
+//!   per k step (never `vmlaq_f32`/`vfmaq_f32`, which may fuse), so each
+//!   lane replays the scalar accumulation order bit-for-bit.
+//!
+//! NEON is architecturally baseline on aarch64, so [`super::KernelTier::Neon`]
+//! is always available there, these functions need no `#[target_feature]`
+//! attribute (the intrinsics are statically enabled), dispatch calls are
+//! safe, and only the pointer-based loads/stores are `unsafe`.
+
+use std::arch::aarch64::*;
+
+use crate::engine::ops::{apply_act, nib_hi, nib_lo, Act};
+use crate::tensor::quantized::packed_row_bytes;
+
+/// Multiply-accumulate 16 widened activation lanes against one 16-byte i8
+/// weight vector: four `vmlal_s16` steps into the i32x4 accumulator.
+#[inline]
+fn mac16(acc: int32x4_t, xl: int16x8_t, xh: int16x8_t, wv: int8x16_t) -> int32x4_t {
+    let wl = vmovl_s8(vget_low_s8(wv));
+    let wh = vmovl_s8(vget_high_s8(wv));
+    let mut v = vmlal_s16(acc, vget_low_s16(xl), vget_low_s16(wl));
+    v = vmlal_s16(v, vget_high_s16(xl), vget_high_s16(wl));
+    v = vmlal_s16(v, vget_low_s16(xh), vget_low_s16(wh));
+    vmlal_s16(v, vget_high_s16(xh), vget_high_s16(wh))
+}
+
+/// Unpack 8 nibble-packed int4 bytes into 16 sign-extended i8 values in k
+/// order: byte `b` carries `k = 2b` in its low nibble and `k = 2b + 1` in
+/// its high nibble.
+#[inline]
+fn unpack_nibbles16(v: uint8x8_t) -> int8x16_t {
+    let lo = vand_u8(v, vdup_n_u8(0x0f));
+    let hi = vshr_n_u8::<4>(v);
+    // 4-bit sign extension: (n ^ 8) - 8 maps 0..=15 to -8..=7
+    let eight = vdup_n_s8(8);
+    let lo = vsub_s8(veor_s8(vreinterpret_s8_u8(lo), eight), eight);
+    let hi = vsub_s8(veor_s8(vreinterpret_s8_u8(hi), eight), eight);
+    let z = vzip_s8(lo, hi);
+    vcombine_s8(z.0, z.1)
+}
+
+/// Row-range NEON kernel over row-major i8 weights: bit-identical to the
+/// scalar kernels (shared requantization epilogue, order-independent i32
+/// accumulation), 16 k-steps per vector iteration, 4-way output-channel
+/// register blocking sharing one widened activation vector.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_i8_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let kb = cols - cols % 16;
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let w0 = &wq[o * cols..(o + 1) * cols];
+            let w1 = &wq[(o + 1) * cols..(o + 2) * cols];
+            let w2 = &wq[(o + 2) * cols..(o + 3) * cols];
+            let w3 = &wq[(o + 3) * cols..(o + 4) * cols];
+            let mut v0 = vdupq_n_s32(0);
+            let mut v1 = vdupq_n_s32(0);
+            let mut v2 = vdupq_n_s32(0);
+            let mut v3 = vdupq_n_s32(0);
+            let mut k = 0;
+            while k + 16 <= cols {
+                // SAFETY: k + 16 <= cols and each of the five row slices
+                // holds `cols` bytes, so every 16-byte load is in bounds.
+                let (xv, wv0, wv1, wv2, wv3) = unsafe {
+                    (
+                        vld1q_u8(xrow.as_ptr().add(k)),
+                        vld1q_s8(w0.as_ptr().add(k)),
+                        vld1q_s8(w1.as_ptr().add(k)),
+                        vld1q_s8(w2.as_ptr().add(k)),
+                        vld1q_s8(w3.as_ptr().add(k)),
+                    )
+                };
+                // u8 values (0..=255) fit the positive i16 range
+                let xl = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(xv)));
+                let xh = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(xv)));
+                v0 = mac16(v0, xl, xh, wv0);
+                v1 = mac16(v1, xl, xh, wv1);
+                v2 = mac16(v2, xl, xh, wv2);
+                v3 = mac16(v3, xl, xh, wv3);
+                k += 16;
+            }
+            let mut a0 = vaddvq_s32(v0);
+            let mut a1 = vaddvq_s32(v1);
+            let mut a2 = vaddvq_s32(v2);
+            let mut a3 = vaddvq_s32(v3);
+            for i in kb..cols {
+                let x = xrow[i] as i32;
+                a0 += x * w0[i] as i32;
+                a1 += x * w1[i] as i32;
+                a2 += x * w2[i] as i32;
+                a3 += x * w3[i] as i32;
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wq[o * cols..(o + 1) * cols];
+            let mut v = vdupq_n_s32(0);
+            let mut k = 0;
+            while k + 16 <= cols {
+                // SAFETY: k + 16 <= cols; xrow and wrow both hold `cols`
+                // bytes, so both 16-byte loads are in bounds.
+                let (xv, wv) = unsafe {
+                    (vld1q_u8(xrow.as_ptr().add(k)), vld1q_s8(wrow.as_ptr().add(k)))
+                };
+                let xl = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(xv)));
+                let xh = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(xv)));
+                v = mac16(v, xl, xh, wv);
+                k += 16;
+            }
+            let mut acc = vaddvq_s32(v);
+            for i in kb..cols {
+                acc += xrow[i] as i32 * wrow[i] as i32;
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
+/// Row-range NEON kernel over row-major nibble-packed i4 weights: 8 packed
+/// bytes (16 k-steps) unpacked per vector iteration via
+/// [`unpack_nibbles16`], then the same widening MAC as the i8 kernel. The
+/// sub-16 byte tail and the odd-column low nibble run the scalar helpers.
+/// Bit-identical to `gemm_i4_rows` / `gemm_i4_panel_rows` in `engine::ops`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_i4_rows(
+    xq: &[u8],
+    rows: usize,
+    cols: usize,
+    wq: &[i8],
+    cout_g: usize,
+    rowsum: &[i32],
+    sxw: &[f32],
+    zx: i32,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    let bpr = packed_row_bytes(cols);
+    let pairs = cols / 2;
+    let vb = pairs - pairs % 8;
+    for r in 0..rows {
+        let xrow = &xq[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let w0 = &wq[o * bpr..(o + 1) * bpr];
+            let w1 = &wq[(o + 1) * bpr..(o + 2) * bpr];
+            let w2 = &wq[(o + 2) * bpr..(o + 3) * bpr];
+            let w3 = &wq[(o + 3) * bpr..(o + 4) * bpr];
+            let mut v0 = vdupq_n_s32(0);
+            let mut v1 = vdupq_n_s32(0);
+            let mut v2 = vdupq_n_s32(0);
+            let mut v3 = vdupq_n_s32(0);
+            let mut b = 0;
+            while b + 8 <= vb {
+                // SAFETY: b + 8 <= vb <= pairs <= bpr, so each 8-byte
+                // weight load is in bounds (slices hold `bpr` bytes, and the
+                // weight bytes are i8 reinterpreted as u8 below); 2b + 16 <=
+                // 2·pairs <= cols keeps the 16-byte activation load in
+                // bounds too.
+                let (xv, wv0, wv1, wv2, wv3) = unsafe {
+                    (
+                        vld1q_u8(xrow.as_ptr().add(2 * b)),
+                        vld1_u8(w0.as_ptr().add(b).cast()),
+                        vld1_u8(w1.as_ptr().add(b).cast()),
+                        vld1_u8(w2.as_ptr().add(b).cast()),
+                        vld1_u8(w3.as_ptr().add(b).cast()),
+                    )
+                };
+                let xl = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(xv)));
+                let xh = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(xv)));
+                v0 = mac16(v0, xl, xh, unpack_nibbles16(wv0));
+                v1 = mac16(v1, xl, xh, unpack_nibbles16(wv1));
+                v2 = mac16(v2, xl, xh, unpack_nibbles16(wv2));
+                v3 = mac16(v3, xl, xh, unpack_nibbles16(wv3));
+                b += 8;
+            }
+            let mut a0 = vaddvq_s32(v0);
+            let mut a1 = vaddvq_s32(v1);
+            let mut a2 = vaddvq_s32(v2);
+            let mut a3 = vaddvq_s32(v3);
+            for kb in vb..pairs {
+                let x0 = xrow[2 * kb] as i32;
+                let x1 = xrow[2 * kb + 1] as i32;
+                a0 += x0 * nib_lo(w0[kb]) + x1 * nib_hi(w0[kb]);
+                a1 += x0 * nib_lo(w1[kb]) + x1 * nib_hi(w1[kb]);
+                a2 += x0 * nib_lo(w2[kb]) + x1 * nib_hi(w2[kb]);
+                a3 += x0 * nib_lo(w3[kb]) + x1 * nib_hi(w3[kb]);
+            }
+            if cols % 2 == 1 {
+                let x0 = xrow[cols - 1] as i32;
+                a0 += x0 * nib_lo(w0[bpr - 1]);
+                a1 += x0 * nib_lo(w1[bpr - 1]);
+                a2 += x0 * nib_lo(w2[bpr - 1]);
+                a3 += x0 * nib_lo(w3[bpr - 1]);
+            }
+            for (j, acc) in [a0, a1, a2, a3].into_iter().enumerate() {
+                let oo = o + j;
+                let corrected = acc - zx * rowsum[oo];
+                let b = bias.map_or(0.0, |b| b[oo]);
+                orow[o0 + oo] = apply_act(corrected as f32 * sxw[oo] + b, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            let wrow = &wq[o * bpr..(o + 1) * bpr];
+            let mut v = vdupq_n_s32(0);
+            let mut b = 0;
+            while b + 8 <= vb {
+                // SAFETY: b + 8 <= vb <= pairs <= bpr bounds the 8-byte
+                // weight load; 2b + 16 <= cols bounds the activation load.
+                let (xv, wv) = unsafe {
+                    (vld1q_u8(xrow.as_ptr().add(2 * b)), vld1_u8(wrow.as_ptr().add(b).cast()))
+                };
+                let xl = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(xv)));
+                let xh = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(xv)));
+                v = mac16(v, xl, xh, unpack_nibbles16(wv));
+                b += 8;
+            }
+            let mut acc = vaddvq_s32(v);
+            for kb in vb..pairs {
+                acc += xrow[2 * kb] as i32 * nib_lo(wrow[kb])
+                    + xrow[2 * kb + 1] as i32 * nib_hi(wrow[kb]);
+            }
+            if cols % 2 == 1 {
+                acc += xrow[cols - 1] as i32 * nib_lo(wrow[bpr - 1]);
+            }
+            acc -= zx * rowsum[o];
+            let b = bias.map_or(0.0, |b| b[o]);
+            orow[o0 + o] = apply_act(acc as f32 * sxw[o] + b, act);
+            o += 1;
+        }
+    }
+}
+
+/// 4-lane twin of the scalar `gemm_f32_panel_rows` (the 64-wide k-blocked
+/// convolution form). Each accumulator LANE replays the scalar kernel's
+/// per-output operation sequence — separate mul and add per k step, block
+/// partials folded in the same order — so outputs are bit-identical.
+/// Remainder rows (< 4 channels) run the scalar loop unchanged.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_f32_panel_rows(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    wp: &[f32],
+    cout_g: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+    out_stride: usize,
+    o0: usize,
+) {
+    const BK: usize = 64;
+    for r in 0..rows {
+        let xrow = &x[r * cols..(r + 1) * cols];
+        let orow = &mut out[r * out_stride..(r + 1) * out_stride];
+        let mut o = 0;
+        while o + 4 <= cout_g {
+            let pan = &wp[o * cols..(o + 4) * cols];
+            let mut a = vdupq_n_f32(0.0);
+            let mut k = 0;
+            while k + BK <= cols {
+                let mut s = vdupq_n_f32(0.0);
+                for i in k..k + BK {
+                    // SAFETY: i < cols, so the 4-wide load at i*4 ends at
+                    // i*4 + 4 <= 4*cols == pan.len().
+                    let wv = unsafe { vld1q_f32(pan.as_ptr().add(i * 4)) };
+                    s = vaddq_f32(s, vmulq_f32(vdupq_n_f32(xrow[i]), wv));
+                }
+                a = vaddq_f32(a, s);
+                k += BK;
+            }
+            for i in k..cols {
+                // SAFETY: i < cols, as above.
+                let wv = unsafe { vld1q_f32(pan.as_ptr().add(i * 4)) };
+                a = vaddq_f32(a, vmulq_f32(vdupq_n_f32(xrow[i]), wv));
+            }
+            let mut lanes = [0.0f32; 4];
+            // SAFETY: `lanes` is 16 writable bytes.
+            unsafe { vst1q_f32(lanes.as_mut_ptr(), a) };
+            for (j, acc) in lanes.into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[o0 + oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < cout_g {
+            // remainder rows are stored row-major at offset o*cols; this is
+            // the scalar remainder loop verbatim
+            let wrow = &wp[o * cols..(o + 1) * cols];
+            let mut acc = 0.0f32;
+            let mut k = 0;
+            while k + BK <= cols {
+                let mut s = 0.0f32;
+                for i in k..k + BK {
+                    s += xrow[i] * wrow[i];
+                }
+                acc += s;
+                k += BK;
+            }
+            for i in k..cols {
+                acc += xrow[i] * wrow[i];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o0 + o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}
+
+/// 4-lane twin of the scalar `linear_f32_panel_rows` (plain unblocked
+/// accumulation — the linear / attention-projection form). Same lane
+/// contract as [`gemm_f32_panel_rows`]: bit-identical outputs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn linear_f32_panel_rows(
+    x: &[f32],
+    rows: usize,
+    din: usize,
+    wp: &[f32],
+    dout: usize,
+    bias: Option<&[f32]>,
+    act: Option<Act>,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        let mut o = 0;
+        while o + 4 <= dout {
+            let pan = &wp[o * din..(o + 4) * din];
+            let mut a = vdupq_n_f32(0.0);
+            for k in 0..din {
+                // SAFETY: k < din, so the 4-wide load at k*4 ends at
+                // k*4 + 4 <= 4*din == pan.len().
+                let wv = unsafe { vld1q_f32(pan.as_ptr().add(k * 4)) };
+                a = vaddq_f32(a, vmulq_f32(vdupq_n_f32(xrow[k]), wv));
+            }
+            let mut lanes = [0.0f32; 4];
+            // SAFETY: `lanes` is 16 writable bytes.
+            unsafe { vst1q_f32(lanes.as_mut_ptr(), a) };
+            for (j, acc) in lanes.into_iter().enumerate() {
+                let oo = o + j;
+                let mut v = acc;
+                if let Some(b) = bias {
+                    v += b[oo];
+                }
+                orow[oo] = apply_act(v, act);
+            }
+            o += 4;
+        }
+        while o < dout {
+            let wrow = &wp[o * din..(o + 1) * din];
+            let mut acc = 0.0f32;
+            for k in 0..din {
+                acc += xrow[k] * wrow[k];
+            }
+            if let Some(b) = bias {
+                acc += b[o];
+            }
+            orow[o] = apply_act(acc, act);
+            o += 1;
+        }
+    }
+}

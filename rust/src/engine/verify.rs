@@ -31,6 +31,7 @@ use std::fmt;
 use anyhow::{bail, Context, Result};
 
 use crate::engine::plan::{ExecPlan, POp, ProjW};
+use crate::engine::simd::KernelTier;
 use crate::engine::{lowp, ActMode, CompiledModel};
 use crate::qir::analysis::{
     acc_bounds, headroom_bits, propagate, AccBounds, AffineRows, AttnCtx, InputQuant, Interval,
@@ -83,6 +84,11 @@ pub const PLAN_SCRATCH_UNDER: &str = "PLAN_SCRATCH_UNDER";
 /// Swap-connected slots have unequal reservations (breaks the warm-run
 /// zero-allocation contract, not correctness).
 pub const PLAN_LEVELING: &str = "PLAN_LEVELING";
+/// A packed weight panel was laid out for a different kernel tier than the
+/// plan dispatches to. The scalar tier expects the `[k][4]` panel
+/// interleave, the SIMD tiers a row-major payload — executing across the
+/// mismatch silently multiplies against permuted weights.
+pub const PLAN_TIER_MISMATCH: &str = "PLAN_TIER_MISMATCH";
 /// A weight scale is non-finite, non-positive, or the payload metadata is
 /// inconsistent.
 pub const QP_WEIGHT_SCALE: &str = "QP_WEIGHT_SCALE";
@@ -204,6 +210,34 @@ impl ExecPlan {
                 format!("output slot {s} outside 0..{}", self.slot_count),
             ));
             return fs;
+        }
+        // every packed panel must be laid out for the tier the plan's
+        // kernels will dispatch to — a foreign layout is a wrong-result path
+        for (i, fp) in self.fpanels.iter().enumerate() {
+            if fp.tier != self.tier {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_TIER_MISMATCH,
+                    &graph.name,
+                    format!(
+                        "f32 panel {i} packed for tier {:?}, plan dispatches {:?}",
+                        fp.tier, self.tier
+                    ),
+                ));
+            }
+        }
+        for (i, qp) in self.qpanels.iter().enumerate() {
+            if qp.tier != self.tier {
+                fs.push(Finding::new(
+                    Severity::Error,
+                    PLAN_TIER_MISMATCH,
+                    &graph.name,
+                    format!(
+                        "quantized panel {i} packed for tier {:?}, plan dispatches {:?}",
+                        qp.tier, self.tier
+                    ),
+                ));
+            }
         }
         self.replay(graph, &mut fs);
         self.check_sizes(graph, &mut fs);
@@ -1048,16 +1082,19 @@ pub enum Sabotage {
     BogusSwap,
     /// Corrupt quantization parameters (NaN range, zero weight scale).
     BadQparam,
+    /// Repack one weight panel for a kernel tier the plan does not dispatch.
+    TierMismatch,
 }
 
 impl Sabotage {
-    pub const ALL: [Sabotage; 6] = [
+    pub const ALL: [Sabotage; 7] = [
         Sabotage::AliasInputOutput,
         Sabotage::StaleRead,
         Sabotage::UncoveredOutput,
         Sabotage::ScratchUnderestimate,
         Sabotage::BogusSwap,
         Sabotage::BadQparam,
+        Sabotage::TierMismatch,
     ];
 
     /// CLI name (`plan_audit --sabotage <name>`).
@@ -1069,6 +1106,7 @@ impl Sabotage {
             Sabotage::ScratchUnderestimate => "scratch-under",
             Sabotage::BogusSwap => "bogus-swap",
             Sabotage::BadQparam => "bad-qparam",
+            Sabotage::TierMismatch => "tier-mismatch",
         }
     }
 
@@ -1085,6 +1123,7 @@ impl Sabotage {
             Sabotage::ScratchUnderestimate => PLAN_SCRATCH_UNDER,
             Sabotage::BogusSwap => PLAN_BAD_LIVENESS,
             Sabotage::BadQparam => QP_RANGE,
+            Sabotage::TierMismatch => PLAN_TIER_MISMATCH,
         }
     }
 }
@@ -1159,6 +1198,23 @@ impl CompiledModel {
                     .find(|last| !**last)
                     .context("sabotage: every input is already a last use")?;
                 *victim = true;
+            }
+            Sabotage::TierMismatch => {
+                // flip one panel's recorded layout to a tier the plan does
+                // not dispatch (any different variant does — the check is
+                // equality with the plan's resolved tier)
+                let foreign = if plan.tier == KernelTier::Scalar {
+                    KernelTier::Avx2
+                } else {
+                    KernelTier::Scalar
+                };
+                if let Some(qp) = plan.qpanels.first_mut() {
+                    qp.tier = foreign;
+                } else if let Some(fp) = plan.fpanels.first_mut() {
+                    fp.tier = foreign;
+                } else {
+                    bail!("sabotage: plan has no packed panels");
+                }
             }
             Sabotage::BadQparam => unreachable!("handled above"),
         }

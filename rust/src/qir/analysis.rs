@@ -285,7 +285,12 @@ pub fn layernorm_interval(d: usize, gamma: &[f32], beta: &[f32]) -> Interval {
 /// zero point. Activations are u8 ∈ [0, 255] after clamping, so:
 ///
 /// * raw accumulator: `acc_r ∈ [255·neg_r, 255·pos_r]` — and every partial
-///   sum too, because prefix sums of same-signed term groups are monotone;
+///   sum over ANY subset of the K terms, in ANY order, because each term
+///   `xq·wq` lies in `[255·min(wq,0), 255·max(wq,0)]` (an interval that
+///   contains 0) and interval sums are order-free. This is what lets the
+///   SIMD tiers split a row across vector lanes: every lane-partial i32 is
+///   itself inside the bound, so the no-overflow proof is layout- and
+///   tier-independent;
 /// * corrected value: `acc_r − zx·row_sum_r`;
 /// * `max_abs` covers every i32 intermediate (raw acc, correction term,
 ///   corrected result) — the quantity that must stay below `i32::MAX`.
@@ -670,6 +675,39 @@ mod tests {
                         assert!(acc.abs() <= b.max_abs && corr.abs() <= b.max_abs);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn acc_bounds_contain_every_partial_sum_in_any_order() {
+        // The SIMD-tier contract: split a row's K terms across lanes in any
+        // order, sum any subset — every intermediate stays inside the raw
+        // bound, because each term's interval contains 0.
+        let mut rng = crate::testutil::Rng::new(0x51AD_5EED);
+        for _ in 0..50 {
+            let k = 1 + rng.below(40);
+            let w: Vec<i64> = (0..k).map(|_| rng.below(255) as i64 - 127).collect();
+            let xq: Vec<i64> = (0..k).map(|_| rng.below(256) as i64).collect();
+            let pos: i64 = w.iter().filter(|&&v| v > 0).sum();
+            let neg: i64 = w.iter().filter(|&&v| v < 0).sum();
+            let rs: i64 = w.iter().sum();
+            let b = acc_bounds(&[pos], &[neg], &[rs], 0, 255);
+            // random shuffled order via index draws without replacement
+            let mut idx: Vec<usize> = (0..k).collect();
+            for i in (1..k).rev() {
+                idx.swap(i, rng.below(i + 1));
+            }
+            let mut partial = 0i64;
+            for &i in &idx {
+                partial += w[i] * xq[i];
+                assert!(
+                    partial >= b.lo.min(0) && partial <= b.hi.max(0),
+                    "partial {partial} escapes raw bound [{}, {}] at k={k}",
+                    b.lo,
+                    b.hi
+                );
+                assert!(partial.abs() <= b.max_abs, "partial exceeds max_abs");
             }
         }
     }

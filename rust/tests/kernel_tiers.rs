@@ -1,0 +1,213 @@
+//! Kernel-tier equivalence suite (`engine::simd`): the SIMD tiers must be
+//! BIT-IDENTICAL to the scalar tier, not merely close.
+//!
+//! * property sweep over random and adversarial (rows, K, dout) shapes —
+//!   K under / at / over the 16-element vector step, K % 16 != 0 tails,
+//!   odd INT4 column counts (low-nibble tail) — asserting the packed
+//!   integer linear kernel produces the same bits on both tiers at both
+//!   weight bit-widths;
+//! * exact i32 accumulator recovery: with `sxw = 1`, `zx = 128` and K
+//!   small enough that `|acc| < 2^24`, the f32 output IS the corrected
+//!   accumulator, so the kernels are checked against an i64 brute-force
+//!   reference — any lost or duplicated lane/tail term is caught exactly;
+//! * f32 panel kernels: same `[k][4]` panel layout on every tier, same
+//!   mul-then-add sequence per lane, bit-identical outputs;
+//! * full planned deployments: a scalar-forced `ExecConfig` twin matches
+//!   the detected tier bitwise at INT8 and INT4, and `ExecPlan` reports
+//!   the tier it resolved.
+//!
+//! On a machine whose detected tier IS the scalar tier the comparisons are
+//! trivially true; the CI `kernel-matrix` job runs this suite on an
+//! AVX2-capable runner where they are not.
+
+use std::collections::{BTreeMap, HashMap};
+
+use quant_trim::calib::{calibrate, CalibMethod};
+use quant_trim::engine::{
+    fp32_model, ops, ActMode, CompiledModel, ExecConfig, KernelTier, WeightMode,
+};
+use quant_trim::qir::passes;
+use quant_trim::tensor::{QWeight, QuantScheme, RoundMode, Tensor};
+use quant_trim::testutil::{synth, Rng};
+
+/// Shapes chosen to hit every tail path of the 16-wide integer kernels:
+/// below / at / above one vector step, K % 16 != 0, and odd K (the INT4
+/// packed low-nibble tail).
+const SHAPES: [(usize, usize, usize); 10] = [
+    (1, 1, 1),
+    (2, 7, 3),
+    (3, 15, 5),
+    (1, 16, 4),
+    (2, 17, 6),
+    (4, 31, 9),
+    (2, 33, 8),
+    (5, 64, 16),
+    (3, 100, 11),
+    (2, 255, 7),
+];
+
+fn run_int(p: &ops::PackedQW, x: &[f32], rows: usize, sxw: &[f32], b: &[f32], out: &mut [f32]) {
+    let mut xq = Vec::new();
+    let round = RoundMode::TiesEven;
+    let act = Some(ops::Act::Relu);
+    ops::linear_int_packed(x, rows, p, Some(b), 0.04, 117, round, sxw, act, &mut xq, out);
+}
+
+#[test]
+fn int_kernels_are_bit_identical_across_tiers_and_shapes() {
+    let tier = KernelTier::detect();
+    let mut rng = Rng::new(0x71E7_0001);
+    for bits in [8u8, 4] {
+        for &(rows, din, dout) in &SHAPES {
+            let w = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.5));
+            let qw =
+                QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits);
+            let ps = ops::PackedQW::pack_for(&qw, 1, KernelTier::Scalar);
+            let pv = ops::PackedQW::pack_for(&qw, 1, tier);
+            let x: Vec<f32> = rng.normal_vec(rows * din, 1.0);
+            let sxw: Vec<f32> = qw.scales.iter().map(|&s| 0.04 * s).collect();
+            let bias: Vec<f32> = rng.normal_vec(dout, 0.1);
+            let mut out_s = vec![0.0f32; rows * dout];
+            let mut out_v = vec![0.0f32; rows * dout];
+            run_int(&ps, &x, rows, &sxw, &bias, &mut out_s);
+            run_int(&pv, &x, rows, &sxw, &bias, &mut out_v);
+            assert_eq!(
+                out_s, out_v,
+                "int{bits} {rows}x{din}x{dout}: {} tier diverged from scalar",
+                tier.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn int_accumulators_match_an_i64_brute_force_exactly() {
+    // sxw = 1, zx = 128, activations exactly on the u8 grid: the kernel's
+    // f32 output IS the zero-point-corrected accumulator (|acc| < 2^24, so
+    // the cast is lossless) — compare it against an i64 reference.
+    let tier = KernelTier::detect();
+    let mut rng = Rng::new(0xACC_0002);
+    for bits in [8u8, 4] {
+        for &(rows, din, dout) in
+            &[(2usize, 19usize, 3usize), (3, 37, 5), (1, 256, 4), (2, 51, 7)]
+        {
+            let w = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.5));
+            let qw =
+                QWeight::quantize_bits(&w, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits);
+            let wq = qw.unpacked_data();
+            let xu: Vec<u8> = (0..rows * din).map(|_| rng.below(256) as u8).collect();
+            let x: Vec<f32> = xu.iter().map(|&u| u as f32 - 128.0).collect();
+            let sxw = vec![1.0f32; dout];
+            let mut xq = Vec::new();
+            let mut out = vec![0.0f32; rows * dout];
+            for t in [KernelTier::Scalar, tier] {
+                let p = ops::PackedQW::pack_for(&qw, 1, t);
+                let round = RoundMode::TiesEven;
+                ops::linear_int_packed(
+                    &x, rows, &p, None, 1.0, 128, round, &sxw, None, &mut xq, &mut out,
+                );
+                for r in 0..rows {
+                    for c in 0..dout {
+                        let acc: i64 = (0..din)
+                            .map(|k| xu[r * din + k] as i64 * wq[c * din + k] as i64)
+                            .sum();
+                        let want = (acc - 128 * qw.row_sums[c] as i64) as f32;
+                        assert_eq!(
+                            out[r * dout + c],
+                            want,
+                            "int{bits} {rows}x{din}x{dout} r{r} c{c} on {} tier",
+                            t.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_panel_kernels_are_bit_identical_across_tiers() {
+    let tier = KernelTier::detect();
+    let mut rng = Rng::new(0xF32_0003);
+    for &(rows, din, dout) in &[(1usize, 5usize, 2usize), (3, 33, 7), (2, 64, 16), (4, 67, 11)] {
+        let w = Tensor::new(vec![dout, din], rng.normal_vec(dout * din, 0.3));
+        let x: Vec<f32> = rng.normal_vec(rows * din, 1.0);
+        let bias: Vec<f32> = rng.normal_vec(dout, 0.1);
+        let ps = ops::PackedF32::pack_for(&w, 1, KernelTier::Scalar);
+        let pv = ops::PackedF32::pack_for(&w, 1, tier);
+        let mut out_s = vec![0.0f32; rows * dout];
+        let mut out_v = vec![0.0f32; rows * dout];
+        ops::linear_f32_packed(&x, rows, &ps, Some(&bias), Some(ops::Act::Relu), &mut out_s);
+        ops::linear_f32_packed(&x, rows, &pv, Some(&bias), Some(ops::Act::Relu), &mut out_v);
+        assert_eq!(
+            out_s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            out_v.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "f32 {rows}x{din}x{dout}: {} tier diverged from scalar",
+            tier.label()
+        );
+    }
+}
+
+/// Full deployment of the synthetic ResNet at a weight bit-width, with an
+/// explicitly requested kernel tier (`None` = auto-detect).
+fn deployment(bits: u8, kernel_tier: Option<KernelTier>) -> (CompiledModel, Tensor) {
+    let sm = synth::resnet_like(16, 16);
+    let (graph, params, _f, _fused) =
+        passes::fuse_conv_bn_act(&sm.graph, &sm.params, &sm.bn).unwrap();
+    let mut rng = Rng::new(0xDE9_0004);
+    let n = 2 * 3 * 16 * 16;
+    let x = Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(n, 1.0));
+    let fp = fp32_model(graph.clone(), params.clone(), BTreeMap::new());
+    let batches: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(n, 1.0))).collect();
+    let ranges = calibrate(&fp, &batches, CalibMethod::MinMax).unwrap().ranges;
+    let mut qweights = HashMap::new();
+    for node in graph.weight_nodes() {
+        let key = format!("{}.w", node.name);
+        if let Some(w) = params.get(&key) {
+            qweights.insert(
+                key,
+                QWeight::quantize_bits(w, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits),
+            );
+        }
+    }
+    let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
+    let model = CompiledModel::new(
+        graph,
+        params,
+        BTreeMap::new(),
+        qweights,
+        ranges,
+        ExecConfig {
+            weight_mode,
+            act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier,
+        },
+    );
+    (model, x)
+}
+
+#[test]
+fn forced_scalar_deployment_matches_detected_tier_bitwise() {
+    for bits in [8u8, 4] {
+        let (auto, x) = deployment(bits, None);
+        let (scalar, _) = deployment(bits, Some(KernelTier::Scalar));
+        assert_eq!(scalar.plan().unwrap().kernel_tier(), KernelTier::Scalar);
+        assert_eq!(
+            auto.plan().unwrap().kernel_tier(),
+            KernelTier::detect(),
+            "auto plan must resolve the detected tier"
+        );
+        assert_eq!(
+            auto.run(&x).unwrap()[0].data,
+            scalar.run(&x).unwrap()[0].data,
+            "int{bits}: detected-tier logits diverged from the scalar tier"
+        );
+        // both tiers stay bit-exact vs the scalar legacy interpreter
+        assert_eq!(
+            auto.run(&x).unwrap()[0].data,
+            auto.run_interpreted(&x).unwrap()[0].data,
+            "int{bits}: planned run diverged from the interpreter"
+        );
+    }
+}

@@ -84,7 +84,7 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
         // payloads under Int4, i8 otherwise
         let qweights = if weight_mode == WeightMode::Int4 { &q4_perchan } else { &q_perchan };
         for act_mode in act_modes {
-            let cfg = ExecConfig { weight_mode, act_mode };
+            let cfg = ExecConfig { weight_mode, act_mode, kernel_tier: None };
             // dynamic scaling is calibration-free by contract: build those
             // models with NO act_ranges at all
             let cfg_ranges = if act_mode.is_dynamic() { HashMap::new() } else { ranges.clone() };
@@ -131,7 +131,7 @@ fn check_matrix(sm: &SynthModel, input_shape: &[usize], label: &str) {
                 bits,
             );
             let weight_mode = if bits == 4 { WeightMode::Int4 } else { WeightMode::Int8 };
-            let cfg = ExecConfig { weight_mode, act_mode };
+            let cfg = ExecConfig { weight_mode, act_mode, kernel_tier: None };
             let cfg_ranges = if act_mode.is_dynamic() { HashMap::new() } else { ranges.clone() };
             let model = CompiledModel::new(
                 graph.clone(),
@@ -295,6 +295,7 @@ fn dyn_int8_runs_bit_exact_without_any_act_ranges() {
         ExecConfig {
             weight_mode: WeightMode::Int8,
             act_mode: ActMode::DynInt8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
         },
     );
     let planned = dyn_model.run(&x).unwrap();
@@ -314,6 +315,7 @@ fn dyn_int8_runs_bit_exact_without_any_act_ranges() {
         ExecConfig {
             weight_mode: WeightMode::Int8,
             act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
         },
     );
     let y_static = static_model.run(&x).unwrap();
@@ -344,7 +346,11 @@ fn scratch_reuse_across_runs_batches_and_models_is_bit_exact() {
             BTreeMap::new(),
             quantize_weights(&graph, &params, QuantScheme::PerChannelSym, RoundMode::TiesEven, bits),
             ranges.clone(),
-            ExecConfig { weight_mode, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+            ExecConfig {
+                weight_mode,
+                act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+                kernel_tier: None,
+            },
         )
     };
     let m8 = model_at(8);

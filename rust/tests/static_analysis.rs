@@ -97,7 +97,7 @@ fn check_soundness(sm: &SynthModel, label: &str, seed: u64) {
     for weight_mode in [WeightMode::F32, WeightMode::Int8, WeightMode::Int4] {
         let qweights = if weight_mode == WeightMode::Int4 { &q4 } else { &q8 };
         for act_mode in act_modes {
-            let cfg = ExecConfig { weight_mode, act_mode };
+            let cfg = ExecConfig { weight_mode, act_mode, kernel_tier: None };
             // the dynamic path is calibration-free by contract
             let cfg_ranges = if act_mode.is_dynamic() { HashMap::new() } else { ranges.clone() };
             let model = CompiledModel::new(
@@ -194,7 +194,11 @@ fn predicted_accumulator_bounds_contain_runtime_accumulators() {
                 BTreeMap::new(),
                 quantize_weights(&graph, &params, bits),
                 ranges.clone(),
-                ExecConfig { weight_mode, act_mode: ActMode::Int8 { round: RoundMode::TiesEven } },
+                ExecConfig {
+                    weight_mode,
+                    act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+                    kernel_tier: None,
+                },
             );
             let report = model.audit(Some((lo, hi))).unwrap();
             let la = report
@@ -269,6 +273,7 @@ fn verifier_catches_every_injected_corruption() {
         ExecConfig {
             weight_mode: WeightMode::Int8,
             act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
         },
     );
     assert!(!has_errors(&model.verify().unwrap()), "clean deployment must verify clean");

@@ -101,6 +101,7 @@ fn int8_model() -> (CompiledModel, Tensor) {
         ExecConfig {
             weight_mode: WeightMode::Int8,
             act_mode: ActMode::Int8 { round: RoundMode::TiesEven },
+            kernel_tier: None,
         },
     );
     (model, x)

@@ -215,7 +215,7 @@ fn sabotage(which: &str) -> Result<ExitCode> {
         vec![Sabotage::parse(which)
             .with_context(|| format!("unknown sabotage class {which:?} (try: all, alias, \
                                       stale-read, uncovered-output, scratch-under, bogus-swap, \
-                                      bad-qparam)"))?]
+                                      bad-qparam, tier-mismatch)"))?]
     };
     let sm = synth::resnet_like(16, 16);
     let state = synthetic_state(&sm);
