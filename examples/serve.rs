@@ -10,6 +10,10 @@
 //! calibration-free `*_dyn` dynamic-scaling deployments where the runtime
 //! supports live-batch ranges; traffic round-robined across deployments):
 //!   cargo run --release --example serve -- --fleet [--workers 4]
+//! Sharded cluster (consistent-hash router + N loopback HTTP nodes, each
+//! wrapping its own batching server; synthetic checkpoint, no artifacts
+//! needed):
+//!   cargo run --release --example serve -- --cluster [--nodes 3] [--replication 2] [--requests 96]
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -77,8 +81,116 @@ fn compile_one(
     })
 }
 
+/// `--cluster`: a sharded multi-node cluster over loopback HTTP. Compiles a
+/// synthetic checkpoint into an INT8 + INT4 serving fleet, shards it across
+/// N nodes by consistent hash (R replicas each), and drives keyed traffic
+/// through the router's front door — no artifacts needed.
+fn run_cluster_demo(n_requests: usize, n_nodes: usize, replication: usize) -> Result<()> {
+    use quant_trim::coordinator::cluster::{infer, scrape_metrics, ClusterNode, Router};
+    use quant_trim::coordinator::cluster::{NodeConfig, RouterConfig};
+    use quant_trim::coordinator::experiment::{compile_serving_fleet, place_fleet_on_nodes};
+    use quant_trim::testutil::{synth, Rng};
+
+    println!("compiling synthetic checkpoint for the cluster fleet (hardware_d INT8 + INT4)...");
+    let sm = synth::resnet_like(16, 16);
+    let mut rng = Rng::new(0xCA11B);
+    let calib: Vec<Tensor> =
+        (0..2).map(|_| Tensor::new(vec![2, 3, 16, 16], rng.normal_vec(2 * 3 * 256, 1.0))).collect();
+    let fleet = compile_serving_fleet(
+        &sm.graph,
+        &sm.params,
+        &sm.bn,
+        &[
+            ("hardware_d", Some(Precision::Int8), ActScaling::Static),
+            ("hardware_d", Some(Precision::Int4), ActScaling::Static),
+        ],
+        &calib,
+        8,
+        Some(Duration::from_millis(2)),
+    )?;
+    let names: Vec<String> = fleet.iter().map(|d| d.name.clone()).collect();
+
+    let node_ids: Vec<String> = (0..n_nodes).map(|i| format!("cluster-n{i}")).collect();
+    let shards = place_fleet_on_nodes(&fleet, &node_ids, replication)?;
+    let router = Router::start(RouterConfig { replication, ..RouterConfig::default() })?;
+    let mut nodes = Vec::new();
+    for (id, shard) in node_ids.iter().zip(shards) {
+        if shard.is_empty() {
+            println!("  {id}: no deployments placed here, not started");
+            continue;
+        }
+        let hosted: Vec<&str> = shard.iter().map(|d| d.name.as_str()).collect();
+        println!("  {id}: hosting {hosted:?}");
+        nodes.push(ClusterNode::start(
+            id.clone(),
+            shard,
+            NodeConfig::default(),
+            Some(router.addr()),
+        )?);
+    }
+    anyhow::ensure!(!nodes.is_empty(), "placement left every node empty");
+    let want = nodes.len();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while router.members() < want {
+        anyhow::ensure!(std::time::Instant::now() < deadline, "nodes did not register in time");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!(
+        "router on {} with {} node(s), replication {replication}, epoch {}\n",
+        router.addr(),
+        router.members(),
+        router.epoch()
+    );
+
+    println!("sending {n_requests} keyed requests through the router...");
+    let mut by_node: BTreeMap<String, usize> = BTreeMap::new();
+    let mut failovers = 0u32;
+    let mut served = 0usize;
+    for i in 0..n_requests {
+        let image = Tensor::new(vec![3, 16, 16], rng.normal_vec(3 * 256, 1.0));
+        let reply = infer(
+            router.addr(),
+            Some(&names[i % names.len()]),
+            Some(&format!("req-{i}")),
+            &image,
+            None,
+            Duration::from_secs(30),
+        )?;
+        anyhow::ensure!(reply.is_served(), "request {i} failed: {:?}", reply.error);
+        failovers += reply.failovers;
+        served += 1;
+        *by_node.entry(reply.node.unwrap_or_default()).or_insert(0) += 1;
+    }
+
+    println!("served          {served} (router-level failovers: {failovers})");
+    println!("per-node        {by_node:?}");
+    let router_metrics = scrape_metrics(router.addr(), Duration::from_secs(5))?;
+    println!(
+        "router metrics  routed {} forwarded_ok {} no_replica {}",
+        router_metrics.get("pallas_router_routed").copied().unwrap_or(0.0),
+        router_metrics.get("pallas_router_forwarded_ok").copied().unwrap_or(0.0),
+        router_metrics.get("pallas_router_no_replica").copied().unwrap_or(0.0),
+    );
+    for node in nodes {
+        let id = node.id().to_string();
+        let stats = node.shutdown();
+        println!(
+            "  {id}: served {} | p50/p95 {:.2}/{:.2} ms | mean batch {:.2}",
+            stats.served, stats.p50_ms, stats.p95_ms, stats.mean_batch
+        );
+    }
+    let rstats = router.shutdown();
+    println!("router final    {rstats:?}");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let n_requests: usize = arg("--requests", "256").parse()?;
+    if flag("--cluster") {
+        let n_nodes: usize = arg("--nodes", "3").parse()?;
+        let replication: usize = arg("--replication", "2").parse()?;
+        return run_cluster_demo(n_requests.min(96), n_nodes, replication);
+    }
     // optional per-request SLO deadline in ms (0 = no deadlines)
     let slo_ms: u64 = arg("--slo-ms", "0").parse()?;
     let slo = (slo_ms > 0).then(|| Duration::from_millis(slo_ms));

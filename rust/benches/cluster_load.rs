@@ -1,0 +1,321 @@
+//! Cluster-tier load bench: drives 1 -> 4 router-attached nodes over
+//! loopback HTTP and writes `BENCH_cluster.json` — per-node-count aggregate
+//! throughput, the headline `cluster_scaling_2n_speedup` / `_4n_speedup`
+//! ratios (floor-gated by `tools/bench_gate.rs` via the `*_speedup` suffix),
+//! and a rebalance row: how long a graceful node leave takes end to end and
+//! how many in-flight requests it lost (must be 0).
+//!
+//! Nodes serve a sleep-paced echo model (one worker, one-request batches),
+//! so aggregate throughput is pinned by consistent-hash placement rather
+//! than host CPU speed: the measured speedup is the fabric's, and the
+//! committed baseline is meaningful across CI runners.
+//!
+//!   cargo bench --bench cluster_load            # 1, 2 and 4 nodes
+//!   cargo bench --bench cluster_load -- --smoke # 1 and 2 nodes (CI job)
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use quant_trim::coordinator::cluster::{infer, ClusterNode, NodeConfig, Router, RouterConfig};
+use quant_trim::coordinator::server::{BatchModel, BatchPolicy, ServerConfig, ServerDeployment};
+use quant_trim::tensor::Tensor;
+
+/// Simulated device service time per request: large enough that placement,
+/// not host scheduling jitter, dominates the wall clock.
+const DELAY_MS: u64 = 6;
+
+/// Requests per round. Keys `load-key-0..96` split 49/47 over 2 nodes and
+/// 26/23/22/25 over 4 (deterministic `stable_hash` placement at 128 vnodes).
+const TOTAL: usize = 96;
+
+/// Echo model paced by a fixed sleep; the first pixel identifies which
+/// request a response answered.
+struct PacedEcho {
+    delay: Duration,
+}
+
+impl BatchModel for PacedEcho {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        let n = images.shape[0];
+        let sz: usize = images.shape[1..].iter().product();
+        let mut out = Tensor::zeros(&[n, 1]);
+        for (i, o) in out.data.iter_mut().enumerate() {
+            *o = images.data[i * sz];
+        }
+        Ok(out)
+    }
+    fn max_batch(&self) -> usize {
+        1
+    }
+}
+
+fn node_config() -> NodeConfig {
+    NodeConfig {
+        server: ServerConfig {
+            workers: 1,
+            queue_depth: 256,
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                slo_margin: None,
+            },
+            ..ServerConfig::default()
+        },
+        heartbeat_every: Duration::from_millis(50),
+        ..NodeConfig::default()
+    }
+}
+
+fn start_cluster(n_nodes: usize, prefix: &str) -> (Router, Vec<ClusterNode>) {
+    let router = Router::start(RouterConfig::default()).expect("router start");
+    let nodes: Vec<ClusterNode> = (0..n_nodes)
+        .map(|i| {
+            ClusterNode::start(
+                format!("{prefix}{i}"),
+                vec![ServerDeployment::new(
+                    "echo",
+                    PacedEcho { delay: Duration::from_millis(DELAY_MS) },
+                )],
+                node_config(),
+                Some(router.addr()),
+            )
+            .expect("node start")
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.members() < n_nodes {
+        assert!(Instant::now() < deadline, "nodes did not register in time");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    (router, nodes)
+}
+
+struct Round {
+    nodes: usize,
+    throughput_rps: f64,
+    elapsed_ms: f64,
+    busiest_share: f64,
+    served_nodes: usize,
+}
+
+impl Round {
+    fn print(&self) {
+        println!(
+            "{} node(s): {:>8.1} rps aggregate   {:>7.1} ms wall   busiest share {:.2}",
+            self.nodes, self.throughput_rps, self.elapsed_ms, self.busiest_share
+        );
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "    {{\"nodes\": {}, \"throughput_rps\": {:.1}, \"elapsed_ms\": {:.1}, \"busiest_share\": {:.3}, \"served_nodes\": {}}}",
+            self.nodes, self.throughput_rps, self.elapsed_ms, self.busiest_share, self.served_nodes
+        )
+    }
+}
+
+/// One scaling round: `TOTAL` concurrent requests (one client thread each,
+/// so every node's backlog is fully submitted up front) against an n-node
+/// cluster. Wall clock = the busiest node's serial service time.
+fn scaling_round(n_nodes: usize) -> Round {
+    let (router, nodes) = start_cluster(n_nodes, "scale-n");
+    let router_addr = router.addr();
+    let by_node: Mutex<BTreeMap<String, usize>> = Mutex::new(BTreeMap::new());
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        let by_node = &by_node;
+        for i in 0..TOTAL {
+            scope.spawn(move || {
+                let image = Tensor::full(&[1, 2], i as f32);
+                let reply = infer(
+                    router_addr,
+                    Some("echo"),
+                    Some(&format!("load-key-{i}")),
+                    &image,
+                    None,
+                    Duration::from_secs(30),
+                )
+                .expect("loopback transport");
+                assert!(reply.is_served(), "request {i}: {:?}", reply.error);
+                assert_eq!(reply.logits.as_ref().unwrap().data, vec![i as f32]);
+                *by_node.lock().unwrap().entry(reply.node.unwrap()).or_insert(0) += 1;
+            });
+        }
+    });
+    let elapsed = started.elapsed();
+    for node in nodes {
+        node.shutdown();
+    }
+    router.shutdown();
+    let shares = by_node.into_inner().unwrap();
+    let busiest = shares.values().copied().max().unwrap_or(0);
+    Round {
+        nodes: n_nodes,
+        throughput_rps: TOTAL as f64 / elapsed.as_secs_f64().max(1e-9),
+        elapsed_ms: elapsed.as_secs_f64() * 1e3,
+        busiest_share: busiest as f64 / TOTAL as f64,
+        served_nodes: shares.len(),
+    }
+}
+
+struct Rebalance {
+    leave_ms: f64,
+    reroute_ms: f64,
+    lost_requests: usize,
+}
+
+/// Rebalance latency: under continuous traffic, gracefully remove one of
+/// `n_nodes` nodes and measure (a) the leave itself — deregister + drain +
+/// close — and (b) how long until a key the leaver owned is served again by
+/// a survivor. Counts every non-200 answer during the window as lost.
+fn rebalance_round(n_nodes: usize) -> Rebalance {
+    let (router, mut nodes) = start_cluster(n_nodes, "rebal-n");
+    let router_addr = router.addr();
+
+    // find a probe key the victim currently owns
+    let victim_id = nodes[0].id().to_string();
+    let mut probe = None;
+    for i in 0..256 {
+        let key = format!("rebal-key-{i}");
+        let reply = infer(
+            router_addr,
+            Some("echo"),
+            Some(&key),
+            &Tensor::full(&[1, 2], 0.0),
+            None,
+            Duration::from_secs(30),
+        )
+        .expect("probe transport");
+        assert!(reply.is_served());
+        if reply.node.as_deref() == Some(victim_id.as_str()) {
+            probe = Some(key);
+            break;
+        }
+    }
+    let probe = probe.expect("some key lands on the victim at 128 vnodes");
+
+    let lost = Mutex::new(0usize);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let mut leave_ms = 0.0;
+    let mut reroute_ms = 0.0;
+    std::thread::scope(|scope| {
+        // background traffic across many keys while the victim leaves
+        for t in 0..4 {
+            let lost = &lost;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut i = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let key = format!("rebal-bg-{t}-{}", i % 16);
+                    let reply = infer(
+                        router_addr,
+                        Some("echo"),
+                        Some(&key),
+                        &Tensor::full(&[1, 2], i as f32),
+                        None,
+                        Duration::from_secs(30),
+                    )
+                    .expect("bg transport");
+                    if reply.status != 200 {
+                        *lost.lock().unwrap() += 1;
+                    }
+                    i += 1;
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(50)); // let traffic build
+        let victim = nodes.remove(0);
+        let t0 = Instant::now();
+        victim.shutdown();
+        leave_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // the probe key must be served by a survivor — immediately, since
+        // /leave updated the ring before the listener closed
+        let t1 = Instant::now();
+        let reply = infer(
+            router_addr,
+            Some("echo"),
+            Some(&probe),
+            &Tensor::full(&[1, 2], 1.0),
+            None,
+            Duration::from_secs(30),
+        )
+        .expect("probe transport after leave");
+        assert!(reply.is_served(), "probe after leave: {:?}", reply.error);
+        assert_ne!(reply.node.as_deref(), Some(victim_id.as_str()));
+        reroute_ms = t1.elapsed().as_secs_f64() * 1e3;
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    for node in nodes {
+        node.shutdown();
+    }
+    router.shutdown();
+    Rebalance { leave_ms, reroute_ms, lost_requests: lost.into_inner().unwrap() }
+}
+
+fn write_json(path: &std::path::Path, json: &str) {
+    match std::fs::write(path, json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let manifest = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let node_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+
+    println!(
+        "=== cluster load bench ({} mode, {TOTAL} requests/round, {DELAY_MS} ms/request pacing) ===",
+        if smoke { "smoke" } else { "full" }
+    );
+    println!("host cpus: {cpus}\n");
+
+    let rounds: Vec<Round> = node_counts.iter().map(|&n| scaling_round(n)).collect();
+    for r in &rounds {
+        r.print();
+    }
+
+    let tp_of = |n: usize| {
+        rounds.iter().find(|r| r.nodes == n).map(|r| r.throughput_rps).unwrap_or(0.0)
+    };
+    let speedup_2n = tp_of(2) / tp_of(1).max(1e-9);
+    println!("\ncluster scaling: 2 nodes vs 1 = {speedup_2n:.2}x");
+    let speedup_4n = if smoke {
+        None
+    } else {
+        let s = tp_of(4) / tp_of(1).max(1e-9);
+        println!("cluster scaling: 4 nodes vs 1 = {s:.2}x");
+        if s < 3.0 {
+            println!("WARNING: expected >= 3x aggregate throughput from 1 -> 4 nodes");
+        }
+        Some(s)
+    };
+
+    let rebalance = rebalance_round(if smoke { 2 } else { 4 });
+    println!(
+        "\nrebalance: leave {:.1} ms, reroute {:.1} ms, lost requests {}",
+        rebalance.leave_ms, rebalance.reroute_ms, rebalance.lost_requests
+    );
+    if rebalance.lost_requests > 0 {
+        println!("WARNING: a graceful leave must lose zero accepted requests");
+    }
+
+    let gate_4n = match speedup_4n {
+        Some(s) => format!("\n  \"cluster_scaling_4n_speedup\": {s:.2},"),
+        None => String::new(),
+    };
+    let rows: Vec<String> = rounds.iter().map(Round::json).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"cluster_load{}\",\n  \"host_cpus\": {cpus},\n  \"requests_per_round\": {TOTAL},\n  \"pacing_ms\": {DELAY_MS},\n  \"cluster_scaling_2n_speedup\": {speedup_2n:.2},{gate_4n}\n  \"rebalance_leave_ms\": {:.1},\n  \"rebalance_reroute_ms\": {:.1},\n  \"rebalance_lost_requests\": {},\n  \"rounds\": [\n{}\n  ]\n}}\n",
+        if smoke { " --smoke" } else { "" },
+        rebalance.leave_ms,
+        rebalance.reroute_ms,
+        rebalance.lost_requests,
+        rows.join(",\n"),
+    );
+    write_json(&manifest.join("BENCH_cluster.json"), &json);
+}

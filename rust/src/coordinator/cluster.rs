@@ -1,0 +1,1276 @@
+//! Sharded multi-node serving cluster over `std::net` — the scale tier that
+//! turns one in-process [`Server`] fleet into many router-attached nodes.
+//!
+//! Topology:
+//!
+//! ```text
+//!   clients ──HTTP──▶ Router ──consistent-hash(key)──▶ ClusterNode (1..N)
+//!                       │        failover to replica        │
+//!                       │  membership: register/heartbeat   │  wraps Server
+//!                       ◀──────────/heartbeat───────────────┘  (PR 2/6)
+//! ```
+//!
+//! * **[`ClusterNode`]** wraps the existing [`Server`] *unchanged* behind a
+//!   minimal hand-rolled HTTP/1.1 front door ([`super::wire`]): `POST
+//!   /infer` (binary tensor body), `GET /metrics` (every [`ServerStats`]
+//!   counter via [`ServerStats::export`]), `GET /state`, `GET /healthz`.
+//!   SLO lanes, dynamic batching, retries, per-deployment breakers, and
+//!   chaos injection all compose with sharding because the node *is* a
+//!   [`Server`].
+//! * **[`Router`]** owns a consistent-hash ring ([`super::ring`]) over the
+//!   registered nodes and forwards each `/infer` to the key's primary,
+//!   failing over in ring order to the next replica when the primary's
+//!   router-side circuit breaker (the PR 6 [`BreakerPolicy`] machinery) is
+//!   open, the node was evicted, or the forward itself fails. Membership is
+//!   registration + heartbeat + timeout-based eviction, implemented in the
+//!   pure [`Membership`] struct (explicit `now` arguments — mock-clock
+//!   testable with zero sleeps, see `rust/tests/cluster.rs`).
+//! * **Replication**: a deployment lives on R nodes (placement via
+//!   [`crate::coordinator::experiment::place_fleet_on_nodes`]); the router's
+//!   replica walk only counts nodes that actually *host* the requested
+//!   deployment, so failover always lands on a serving sibling.
+//!
+//! Everything is `std::net::TcpListener`/`TcpStream` + threads: the vendor
+//! set is offline (no tokio/axum). All cluster-internal connections are
+//! one-shot (`Connection: close`), which keeps node drain deterministic —
+//! shutdown never waits on an idle keep-alive peer beyond the read timeout.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::ring::HashRing;
+use super::server::{
+    Breaker, BreakerPolicy, Outcome, Priority, Request, Server, ServerDeployment, ServerStats,
+    SubmitError,
+};
+use super::wire::{
+    decode_tensor, encode_tensor, http_call, read_request, write_response, HttpRequest,
+    HttpResponse,
+};
+use crate::tensor::Tensor;
+
+/// Metric-name prefix for node `/metrics` lines (`pallas_served 12` ...).
+pub const NODE_METRICS_PREFIX: &str = "pallas";
+/// Metric-name prefix for router `/metrics` lines.
+pub const ROUTER_METRICS_PREFIX: &str = "pallas_router";
+
+// ---------------------------------------------------------------------------
+// Membership (pure: every transition takes an explicit `now`)
+// ---------------------------------------------------------------------------
+
+/// What the router knows about one registered node.
+#[derive(Clone, Debug)]
+pub struct MemberInfo {
+    /// Node's HTTP listener address (always loopback in tests/benches).
+    pub addr: SocketAddr,
+    /// Deployments this node hosts, by name.
+    pub deployments: BTreeSet<String>,
+    /// Instant of the last heartbeat (or registration).
+    pub last_heartbeat: Instant,
+    /// Instant the node (re-)registered.
+    pub joined: Instant,
+}
+
+/// Cluster membership + placement: registration, heartbeats, timeout-based
+/// eviction, and the consistent-hash ring over the live nodes.
+///
+/// Pure state machine — every transition takes `now: Instant` explicitly
+/// (the same mock-clock pattern the PR 6 breaker uses), so the full
+/// registration -> heartbeat -> eviction lifecycle is testable with
+/// synthetic instants and zero sleeps. The [`Router`] drives it with real
+/// time.
+pub struct Membership {
+    members: BTreeMap<String, MemberInfo>,
+    ring: HashRing,
+    /// Bumped on every membership change (register/leave/evict) — lets
+    /// `/state` consumers detect topology changes cheaply.
+    epoch: u64,
+}
+
+impl Membership {
+    /// Empty membership over a ring with `vnodes` virtual nodes per node.
+    pub fn new(vnodes: usize) -> Membership {
+        Membership { members: BTreeMap::new(), ring: HashRing::new(vnodes), epoch: 0 }
+    }
+
+    /// Register (or re-register) a node. Re-registration refreshes the
+    /// address, deployment set, and heartbeat. Returns `true` if the node
+    /// was new to the ring.
+    pub fn register(
+        &mut self,
+        id: &str,
+        addr: SocketAddr,
+        deployments: impl IntoIterator<Item = String>,
+        now: Instant,
+    ) -> bool {
+        let info = MemberInfo {
+            addr,
+            deployments: deployments.into_iter().collect(),
+            last_heartbeat: now,
+            joined: now,
+        };
+        let new = self.members.insert(id.to_string(), info).is_none();
+        if new {
+            self.ring.add_node(id);
+        }
+        self.epoch += 1;
+        new
+    }
+
+    /// Record a heartbeat. Returns `false` for an unknown (never-registered
+    /// or already-evicted) node — the node should re-register.
+    pub fn heartbeat(&mut self, id: &str, now: Instant) -> bool {
+        match self.members.get_mut(id) {
+            Some(m) => {
+                m.last_heartbeat = now;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Voluntary leave: remove the node from the ring immediately. Returns
+    /// `false` if the node wasn't a member.
+    pub fn leave(&mut self, id: &str) -> bool {
+        let existed = self.members.remove(id).is_some();
+        if existed {
+            self.ring.remove_node(id);
+            self.epoch += 1;
+        }
+        existed
+    }
+
+    /// Evict every node whose last heartbeat is older than `timeout`,
+    /// returning the evicted ids (sorted, since members iterate sorted).
+    pub fn evict_stale(&mut self, timeout: Duration, now: Instant) -> Vec<String> {
+        let stale: Vec<String> = self
+            .members
+            .iter()
+            .filter(|(_, m)| now.saturating_duration_since(m.last_heartbeat) > timeout)
+            .map(|(id, _)| id.clone())
+            .collect();
+        for id in &stale {
+            self.members.remove(id);
+            self.ring.remove_node(id);
+            self.epoch += 1;
+        }
+        stale
+    }
+
+    /// The first `r` live nodes in ring order from `key` that host
+    /// `deployment` (any node when `deployment` is `None`) — primary first.
+    /// Walking the *full* ring order before filtering means replication
+    /// degrades gracefully: if the key's primary doesn't host the model, its
+    /// successor that does becomes the effective primary.
+    pub fn replicas_for(
+        &self,
+        key: &str,
+        deployment: Option<&str>,
+        r: usize,
+    ) -> Vec<(String, SocketAddr)> {
+        self.ring
+            .replicas(key, self.ring.len())
+            .into_iter()
+            .filter_map(|id| {
+                let m = self.members.get(id)?;
+                match deployment {
+                    Some(d) if !m.deployments.contains(d) => None,
+                    _ => Some((id.to_string(), m.addr)),
+                }
+            })
+            .take(r)
+            .collect()
+    }
+
+    /// Number of live members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when no node is registered.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Is this node currently a member?
+    pub fn contains(&self, id: &str) -> bool {
+        self.members.contains_key(id)
+    }
+
+    /// Live members, sorted by id.
+    pub fn members(&self) -> impl Iterator<Item = (&str, &MemberInfo)> {
+        self.members.iter().map(|(id, m)| (id.as_str(), m))
+    }
+
+    /// Membership epoch: bumps on every register/leave/evict.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection plumbing shared by node and router
+// ---------------------------------------------------------------------------
+
+/// A [`Server`] that can be shut down while connection handlers still hold
+/// references: `submit` goes through a read lock, shutdown takes the server
+/// out under the write lock (subsequent submits get `ShutDown`).
+struct ServerCell {
+    inner: RwLock<Option<Server>>,
+}
+
+impl ServerCell {
+    fn new(server: Server) -> ServerCell {
+        ServerCell { inner: RwLock::new(Some(server)) }
+    }
+
+    fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        match &*self.inner.read().unwrap() {
+            Some(s) => s.submit(req),
+            None => Err(SubmitError::ShutDown(req)),
+        }
+    }
+
+    fn stats_snapshot(&self) -> Option<ServerStats> {
+        self.inner.read().unwrap().as_ref().map(|s| s.stats_snapshot())
+    }
+
+    fn queue_len(&self) -> usize {
+        self.inner.read().unwrap().as_ref().map(|s| s.queue_len()).unwrap_or(0)
+    }
+
+    fn take(&self) -> Option<Server> {
+        self.inner.write().unwrap().take()
+    }
+}
+
+/// Accept loop + per-connection handler threads with joinable shutdown.
+/// Handlers run `serve` per parsed request until the connection closes, the
+/// stop flag rises, or the client pipelines past `Connection: close`.
+struct Acceptor {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl Acceptor {
+    /// Bind `127.0.0.1:0` (or a caller-given address) and start accepting.
+    fn start<F>(bind: &str, read_timeout: Duration, thread_name: &str, serve: F) -> Result<Acceptor>
+    where
+        F: Fn(&HttpRequest) -> (u16, &'static str, Vec<(String, String)>, Vec<u8>)
+            + Send
+            + Sync
+            + 'static,
+    {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let serve = Arc::new(serve);
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name(format!("{thread_name}-accept"))
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let stop = stop.clone();
+                        let serve = serve.clone();
+                        let h = std::thread::Builder::new()
+                            .name("cluster-conn".into())
+                            .spawn(move || handle_connection(stream, read_timeout, &stop, &*serve))
+                            .expect("spawn connection handler");
+                        conns.lock().unwrap().push(h);
+                    }
+                })
+                .with_context(|| format!("spawning {thread_name} accept loop"))?
+        };
+        Ok(Acceptor { addr, stop, accept: Some(accept), conns })
+    }
+
+    /// Stop accepting and join every connection handler. Idempotent.
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept() call with a throwaway connection to ourselves
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        loop {
+            // pop under the lock, join outside it
+            let handle = self.conns.lock().unwrap().pop();
+            let Some(h) = handle else { break };
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Acceptor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Keep-alive connection loop: parse -> serve -> answer, until close. Parse
+/// failures are answered with their [`super::wire::WireError::status`]
+/// (400/431/413) and
+/// the connection closes; transport errors just close — never a panic, and
+/// the read timeout bounds how long a silent peer can hold the handler.
+fn handle_connection<F>(stream: TcpStream, read_timeout: Duration, stop: &AtomicBool, serve: &F)
+where
+    F: Fn(&HttpRequest) -> (u16, &'static str, Vec<(String, String)>, Vec<u8>),
+{
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let _ = stream.set_write_timeout(Some(read_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut write_half = &stream;
+    loop {
+        match read_request(&mut reader) {
+            Ok(None) => return, // clean EOF
+            Ok(Some(req)) => {
+                let keep = req.keep_alive() && !stop.load(Ordering::SeqCst);
+                let (status, ctype, headers, body) = serve(&req);
+                let hdrs: Vec<(&str, &str)> =
+                    headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+                if write_response(&mut write_half, status, ctype, &hdrs, &body, keep).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+            Err(e) => {
+                let status = e.status();
+                if status != 0 {
+                    let msg = e.to_string();
+                    let _ = write_response(
+                        &mut write_half,
+                        status,
+                        "text/plain",
+                        &[],
+                        msg.as_bytes(),
+                        false,
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClusterNode
+// ---------------------------------------------------------------------------
+
+/// Sizing and timing knobs for one [`ClusterNode`].
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    /// Configuration of the wrapped [`Server`] (workers, queue, SLO lanes,
+    /// retries, breakers — all of PR 2/6 composes under the cluster).
+    pub server: super::server::ServerConfig,
+    /// How long `/infer` waits on the server's reply channel before
+    /// answering 500 (the server contract says every accepted request is
+    /// answered, so this only fires if the node is truly wedged).
+    pub request_timeout: Duration,
+    /// Per-connection socket read timeout: bounds how long a silent or
+    /// half-open peer can hold a handler thread (and therefore drain).
+    pub read_timeout: Duration,
+    /// Heartbeat period when attached to a router.
+    pub heartbeat_every: Duration,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig {
+            server: super::server::ServerConfig::default(),
+            request_timeout: Duration::from_secs(30),
+            read_timeout: Duration::from_secs(2),
+            heartbeat_every: Duration::from_millis(100),
+        }
+    }
+}
+
+/// One serving node: the existing [`Server`] (unchanged) behind an HTTP
+/// front door on a loopback/LAN `TcpListener`, optionally attached to a
+/// [`Router`] via register + heartbeat. See the module docs for endpoints.
+pub struct ClusterNode {
+    id: String,
+    addr: SocketAddr,
+    deployments: Vec<String>,
+    server: Arc<ServerCell>,
+    acceptor: Acceptor,
+    heartbeat: Option<std::thread::JoinHandle<()>>,
+    hb_stop: Arc<AtomicBool>,
+    router: Option<SocketAddr>,
+    heartbeat_every: Duration,
+}
+
+impl ClusterNode {
+    /// Start a node: spin up the wrapped [`Server`] over `deployments`, bind
+    /// an ephemeral loopback port, and — when `router` is given — register
+    /// there and heartbeat every [`NodeConfig::heartbeat_every`].
+    pub fn start(
+        id: impl Into<String>,
+        deployments: Vec<ServerDeployment>,
+        cfg: NodeConfig,
+        router: Option<SocketAddr>,
+    ) -> Result<ClusterNode> {
+        let id = id.into();
+        let names: Vec<String> = deployments.iter().map(|d| d.name.clone()).collect();
+        let server = Arc::new(ServerCell::new(Server::start(deployments, cfg.server.clone())?));
+        let acceptor = {
+            let server = server.clone();
+            let id = id.clone();
+            let names = names.clone();
+            let request_timeout = cfg.request_timeout;
+            Acceptor::start("127.0.0.1:0", cfg.read_timeout, "cluster-node", move |req| {
+                serve_node_request(req, &server, &id, &names, request_timeout)
+            })?
+        };
+        let addr = acceptor.addr;
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let heartbeat = match router {
+            None => None,
+            Some(router_addr) => {
+                let stop = hb_stop.clone();
+                let id = id.clone();
+                let names = names.clone();
+                let every = cfg.heartbeat_every;
+                Some(
+                    std::thread::Builder::new()
+                        .name("cluster-node-heartbeat".into())
+                        .spawn(move || heartbeat_loop(router_addr, &id, addr, &names, every, &stop))
+                        .context("spawning heartbeat thread")?,
+                )
+            }
+        };
+        Ok(ClusterNode {
+            id,
+            addr,
+            deployments: names,
+            server,
+            acceptor,
+            heartbeat,
+            hb_stop,
+            router,
+            heartbeat_every: cfg.heartbeat_every,
+        })
+    }
+
+    /// This node's HTTP listener address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// This node's cluster id.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Names of the deployments this node hosts.
+    pub fn deployments(&self) -> &[String] {
+        &self.deployments
+    }
+
+    /// Live stats snapshot of the wrapped server (None once shut down).
+    pub fn stats_snapshot(&self) -> Option<ServerStats> {
+        self.server.stats_snapshot()
+    }
+
+    /// Graceful leave + drain: deregister from the router (new traffic
+    /// reroutes to replicas), stop accepting connections, finish in-flight
+    /// requests, drain the wrapped server, and return its final stats.
+    /// In-flight forwards that race the listener teardown fail over at the
+    /// router — zero *accepted* requests are lost either way.
+    pub fn shutdown(mut self) -> ServerStats {
+        // 1. tell the router first so new routes avoid this node
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(router) = self.router {
+            let _ = http_call(
+                router,
+                "POST",
+                &format!("/leave?id={}", self.id),
+                &[],
+                b"",
+                Duration::from_secs(2),
+            );
+        }
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+        // 2. stop accepting and finish every in-flight connection
+        self.acceptor.shutdown();
+        // 3. drain the wrapped server (its shutdown answers everything it
+        //    accepted) and hand the stats up
+        match self.server.take() {
+            Some(server) => server.shutdown(),
+            None => ServerStats::default(),
+        }
+    }
+
+    /// Heartbeat period this node was started with (diagnostics).
+    pub fn heartbeat_every(&self) -> Duration {
+        self.heartbeat_every
+    }
+}
+
+/// Register with the router (retrying — the router may come up after the
+/// node), then heartbeat every `every` until stopped, re-registering if the
+/// router forgot us (eviction during a long GC pause, router restart).
+fn heartbeat_loop(
+    router: SocketAddr,
+    id: &str,
+    addr: SocketAddr,
+    deployments: &[String],
+    every: Duration,
+    stop: &AtomicBool,
+) {
+    let register_target =
+        format!("/register?id={id}&addr={addr}&deployments={}", deployments.join(","));
+    let timeout = Duration::from_secs(2);
+    let mut registered = false;
+    while !stop.load(Ordering::SeqCst) {
+        if !registered {
+            registered = http_call(router, "POST", &register_target, &[], b"", timeout)
+                .is_ok_and(|r| r.status == 200);
+        } else {
+            // a rejected heartbeat means the router no longer knows us;
+            // fall back to re-registration on the next tick
+            registered = http_call(router, "POST", &format!("/heartbeat?id={id}"), &[], b"", timeout)
+                .is_ok_and(|r| r.status == 200);
+        }
+        // sleep in short slices so shutdown never waits a full period
+        let deadline = Instant::now() + every;
+        while !stop.load(Ordering::SeqCst) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5).min(every));
+        }
+    }
+}
+
+type ServeReply = (u16, &'static str, Vec<(String, String)>, Vec<u8>);
+
+fn text_reply(status: u16, msg: impl Into<String>) -> ServeReply {
+    (status, "text/plain", Vec::new(), msg.into().into_bytes())
+}
+
+/// Node-side request dispatch (`/infer`, `/metrics`, `/state`, `/healthz`).
+fn serve_node_request(
+    req: &HttpRequest,
+    server: &ServerCell,
+    id: &str,
+    deployments: &[String],
+    request_timeout: Duration,
+) -> ServeReply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/infer") => serve_node_infer(req, server, id, request_timeout),
+        ("GET", "/metrics") => match server.stats_snapshot() {
+            Some(stats) => (
+                200,
+                "text/plain",
+                Vec::new(),
+                stats.render_metrics(NODE_METRICS_PREFIX).into_bytes(),
+            ),
+            None => text_reply(503, "node draining"),
+        },
+        ("GET", "/state") => {
+            let deps: Vec<String> = deployments.iter().map(|d| format!("\"{d}\"")).collect();
+            let body = format!(
+                "{{\"id\": \"{id}\", \"deployments\": [{}], \"queue_len\": {}, \"draining\": {}}}\n",
+                deps.join(", "),
+                server.queue_len(),
+                server.stats_snapshot().is_none(),
+            );
+            (200, "application/json", Vec::new(), body.into_bytes())
+        }
+        ("GET", "/healthz") => text_reply(200, "ok"),
+        ("POST" | "GET", _) => text_reply(404, format!("no such endpoint {}", req.path)),
+        _ => text_reply(405, format!("method {} not supported", req.method)),
+    }
+}
+
+/// `POST /infer?deployment=NAME` with a binary tensor body: submit to the
+/// wrapped server, wait for its response, and translate the [`Outcome`] to
+/// HTTP (Served -> 200 + logits body, Failed -> 502, Expired -> 504;
+/// submit-side backpressure -> 429, draining -> 503).
+fn serve_node_infer(
+    req: &HttpRequest,
+    server: &ServerCell,
+    id: &str,
+    request_timeout: Duration,
+) -> ServeReply {
+    let image = match decode_tensor(&req.body) {
+        Ok(t) => t,
+        Err(e) => return text_reply(400, format!("bad tensor body: {e}")),
+    };
+    let deadline = req
+        .header("x-deadline-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(|ms| Instant::now() + Duration::from_millis(ms));
+    let priority = match req.header("x-priority") {
+        Some("low") => Priority::Low,
+        Some("high") => Priority::High,
+        _ => Priority::Normal,
+    };
+    let (tx, rx) = mpsc::channel();
+    let request = Request {
+        image,
+        deployment: req.query("deployment").map(|s| s.to_string()),
+        reply: tx,
+        submitted: Instant::now(),
+        deadline,
+        priority,
+    };
+    if let Err(e) = server.submit(request) {
+        return match e {
+            SubmitError::QueueFull(_) => text_reply(429, "ingress queue full"),
+            SubmitError::Shed(_) => text_reply(429, "low-priority request shed under overload"),
+            SubmitError::ShutDown(_) => text_reply(503, "node draining"),
+        };
+    }
+    let resp = match rx.recv_timeout(request_timeout) {
+        Ok(r) => r,
+        Err(_) => return text_reply(500, "node wedged: no response within request timeout"),
+    };
+    let mut headers = vec![
+        ("X-Node".to_string(), id.to_string()),
+        ("X-Deployment".to_string(), resp.deployment.clone()),
+        ("X-Degraded".to_string(), if resp.degraded { "1" } else { "0" }.to_string()),
+        ("X-Batch-Size".to_string(), resp.batch_size.to_string()),
+        ("X-Retries".to_string(), resp.retries.to_string()),
+    ];
+    match (&resp.outcome, &resp.result) {
+        (Outcome::Served, Ok(logits)) => {
+            let body = encode_tensor(&Tensor::new(vec![logits.len()], logits.clone()));
+            headers.push(("X-Outcome".to_string(), "served".to_string()));
+            (200, "application/octet-stream", headers, body)
+        }
+        (Outcome::Expired, _) => {
+            headers.push(("X-Outcome".to_string(), "expired".to_string()));
+            (504, "text/plain", headers, b"deadline expired before execution".to_vec())
+        }
+        (Outcome::Failed, Err(msg)) => {
+            headers.push(("X-Outcome".to_string(), "failed".to_string()));
+            (502, "text/plain", headers, msg.clone().into_bytes())
+        }
+        // unreachable by the server contract (Served always carries logits,
+        // Failed always carries an error), but the parser must stay total
+        _ => (500, "text/plain", headers, b"inconsistent server response".to_vec()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// Routing, membership, and failover knobs for one [`Router`].
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Replica walk length: a request may fail over across up to this many
+    /// hosting nodes (primary included).
+    pub replication: usize,
+    /// Virtual nodes per physical node on the ring (>=128 keeps the key
+    /// share balanced; see `rust/tests/hash_ring.rs`).
+    pub vnodes: usize,
+    /// A node whose last heartbeat is older than this is evicted.
+    pub heartbeat_timeout: Duration,
+    /// Eviction sweep period.
+    pub sweep_every: Duration,
+    /// Router-side per-node circuit breaker (PR 6 semantics: consecutive
+    /// forward failures trip it open; cooldown then half-open probe).
+    pub breaker: BreakerPolicy,
+    /// Timeout for one forwarded `/infer` (connect + node-side execution).
+    pub forward_timeout: Duration,
+    /// Per-connection socket read timeout on the front door.
+    pub read_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replication: 2,
+            vnodes: 128,
+            heartbeat_timeout: Duration::from_secs(1),
+            sweep_every: Duration::from_millis(100),
+            breaker: BreakerPolicy::default(),
+            forward_timeout: Duration::from_secs(30),
+            read_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Router counters, live in shared atomics (scraped by `/metrics`, snapshot
+/// at shutdown).
+#[derive(Default)]
+struct RouterCounters {
+    routed: AtomicUsize,
+    forwarded_ok: AtomicUsize,
+    failovers: AtomicUsize,
+    forward_errors: AtomicUsize,
+    no_replica: AtomicUsize,
+    registered: AtomicUsize,
+    heartbeats: AtomicUsize,
+    left: AtomicUsize,
+    evicted: AtomicUsize,
+    bad_requests: AtomicUsize,
+}
+
+/// Snapshot of the router's counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// `/infer` requests the router accepted for routing.
+    pub routed: usize,
+    /// Forwards that came back 200 from a node.
+    pub forwarded_ok: usize,
+    /// Times the router moved past a replica (breaker-open skip, transport
+    /// failure, or a node-side 5xx/429 answer).
+    pub failovers: usize,
+    /// Forwards that failed at the transport (connect/timeout/reset).
+    pub forward_errors: usize,
+    /// `/infer` requests with no live hosting replica (answered 503).
+    pub no_replica: usize,
+    /// Successful `/register` calls.
+    pub registered: usize,
+    /// Accepted heartbeats.
+    pub heartbeats: usize,
+    /// Voluntary `/leave` departures.
+    pub left: usize,
+    /// Nodes evicted by heartbeat timeout.
+    pub evicted: usize,
+    /// Requests answered 4xx at the front door (parse/validation failures).
+    pub bad_requests: usize,
+}
+
+impl RouterStats {
+    /// Every router counter as `(name, value)` pairs — same exhaustive-
+    /// destructuring discipline as [`ServerStats::export`], so a new counter
+    /// cannot be silently dropped from `/metrics`.
+    pub fn export(&self) -> Vec<(&'static str, f64)> {
+        let RouterStats {
+            routed,
+            forwarded_ok,
+            failovers,
+            forward_errors,
+            no_replica,
+            registered,
+            heartbeats,
+            left,
+            evicted,
+            bad_requests,
+        } = self;
+        vec![
+            ("routed", *routed as f64),
+            ("forwarded_ok", *forwarded_ok as f64),
+            ("failovers", *failovers as f64),
+            ("forward_errors", *forward_errors as f64),
+            ("no_replica", *no_replica as f64),
+            ("registered", *registered as f64),
+            ("heartbeats", *heartbeats as f64),
+            ("left", *left as f64),
+            ("evicted", *evicted as f64),
+            ("bad_requests", *bad_requests as f64),
+        ]
+    }
+
+    /// Plain-text exposition (`<prefix>_<name> <value>` lines).
+    pub fn render_metrics(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        for (name, value) in self.export() {
+            out.push_str(&format!("{prefix}_{name} {value}\n"));
+        }
+        out
+    }
+}
+
+impl RouterCounters {
+    fn snapshot(&self) -> RouterStats {
+        let ld = Ordering::Relaxed;
+        RouterStats {
+            routed: self.routed.load(ld),
+            forwarded_ok: self.forwarded_ok.load(ld),
+            failovers: self.failovers.load(ld),
+            forward_errors: self.forward_errors.load(ld),
+            no_replica: self.no_replica.load(ld),
+            registered: self.registered.load(ld),
+            heartbeats: self.heartbeats.load(ld),
+            left: self.left.load(ld),
+            evicted: self.evicted.load(ld),
+            bad_requests: self.bad_requests.load(ld),
+        }
+    }
+
+    fn bump(&self, c: &AtomicUsize) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Everything the router's request handlers share.
+struct RouterCore {
+    cfg: RouterConfig,
+    membership: Mutex<Membership>,
+    /// Router-side breaker per node id. Entries persist across
+    /// eviction/re-registration so a flapping node re-joins with its
+    /// history.
+    breakers: Mutex<HashMap<String, Arc<Breaker>>>,
+    counters: RouterCounters,
+}
+
+impl RouterCore {
+    fn breaker_for(&self, id: &str) -> Arc<Breaker> {
+        self.breakers
+            .lock()
+            .unwrap()
+            .entry(id.to_string())
+            .or_insert_with(|| Arc::new(Breaker::new(self.cfg.breaker)))
+            .clone()
+    }
+}
+
+/// The cluster front door: consistent-hash request routing with replica
+/// failover, plus the membership endpoints. See the module docs.
+pub struct Router {
+    core: Arc<RouterCore>,
+    acceptor: Acceptor,
+    sweep_stop: Arc<AtomicBool>,
+    sweeper: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind the front door on an ephemeral loopback port and start the
+    /// eviction sweeper.
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        let core = Arc::new(RouterCore {
+            membership: Mutex::new(Membership::new(cfg.vnodes)),
+            breakers: Mutex::new(HashMap::new()),
+            counters: RouterCounters::default(),
+            cfg: cfg.clone(),
+        });
+        let acceptor = {
+            let core = core.clone();
+            Acceptor::start("127.0.0.1:0", cfg.read_timeout, "cluster-router", move |req| {
+                serve_router_request(req, &core)
+            })?
+        };
+        let sweep_stop = Arc::new(AtomicBool::new(false));
+        let sweeper = {
+            let core = core.clone();
+            let stop = sweep_stop.clone();
+            std::thread::Builder::new()
+                .name("cluster-router-sweep".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        std::thread::sleep(core.cfg.sweep_every);
+                        let evicted = core
+                            .membership
+                            .lock()
+                            .unwrap()
+                            .evict_stale(core.cfg.heartbeat_timeout, Instant::now());
+                        for _ in &evicted {
+                            core.counters.bump(&core.counters.evicted);
+                        }
+                    }
+                })
+                .context("spawning eviction sweeper")?
+        };
+        Ok(Router { core, acceptor, sweep_stop, sweeper: Some(sweeper) })
+    }
+
+    /// The front door's address (hand this to clients and nodes).
+    pub fn addr(&self) -> SocketAddr {
+        self.acceptor.addr
+    }
+
+    /// Register a node directly (tests and in-process wiring; the HTTP
+    /// `/register` endpoint is the same transition).
+    pub fn admit(&self, id: &str, addr: SocketAddr, deployments: &[String]) {
+        self.core.membership.lock().unwrap().register(
+            id,
+            addr,
+            deployments.iter().cloned(),
+            Instant::now(),
+        );
+        self.core.counters.bump(&self.core.counters.registered);
+    }
+
+    /// Live membership size (diagnostics).
+    pub fn members(&self) -> usize {
+        self.core.membership.lock().unwrap().len()
+    }
+
+    /// Current membership epoch (bumps on register/leave/evict).
+    pub fn epoch(&self) -> u64 {
+        self.core.membership.lock().unwrap().epoch()
+    }
+
+    /// Live counter snapshot.
+    pub fn stats(&self) -> RouterStats {
+        self.core.counters.snapshot()
+    }
+
+    /// Stop the sweeper and the front door (in-flight forwards complete),
+    /// returning the final counters.
+    pub fn shutdown(mut self) -> RouterStats {
+        self.sweep_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
+        self.acceptor.shutdown();
+        self.core.counters.snapshot()
+    }
+}
+
+/// Router-side request dispatch.
+fn serve_router_request(req: &HttpRequest, core: &RouterCore) -> ServeReply {
+    let counters = &core.counters;
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/infer") => serve_router_infer(req, core),
+        ("POST", "/register") => {
+            let (Some(id), Some(addr)) = (req.query("id"), req.query("addr")) else {
+                counters.bump(&counters.bad_requests);
+                return text_reply(400, "register needs id= and addr=");
+            };
+            let Ok(addr) = addr.parse::<SocketAddr>() else {
+                counters.bump(&counters.bad_requests);
+                return text_reply(400, format!("bad addr {:?}", addr));
+            };
+            let deployments = req
+                .query("deployments")
+                .unwrap_or("")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string());
+            core.membership.lock().unwrap().register(id, addr, deployments, Instant::now());
+            counters.bump(&counters.registered);
+            text_reply(200, "registered")
+        }
+        ("POST", "/heartbeat") => {
+            let Some(id) = req.query("id") else {
+                counters.bump(&counters.bad_requests);
+                return text_reply(400, "heartbeat needs id=");
+            };
+            if core.membership.lock().unwrap().heartbeat(id, Instant::now()) {
+                counters.bump(&counters.heartbeats);
+                text_reply(200, "ok")
+            } else {
+                text_reply(404, "unknown node; re-register")
+            }
+        }
+        ("POST", "/leave") => {
+            let Some(id) = req.query("id") else {
+                counters.bump(&counters.bad_requests);
+                return text_reply(400, "leave needs id=");
+            };
+            if core.membership.lock().unwrap().leave(id) {
+                counters.bump(&counters.left);
+                text_reply(200, "left")
+            } else {
+                text_reply(404, "unknown node")
+            }
+        }
+        ("GET", "/metrics") => (
+            200,
+            "text/plain",
+            Vec::new(),
+            core.counters.snapshot().render_metrics(ROUTER_METRICS_PREFIX).into_bytes(),
+        ),
+        ("GET", "/state") => (200, "application/json", Vec::new(), router_state_json(core)),
+        ("GET", "/healthz") => text_reply(200, "ok"),
+        ("POST" | "GET", _) => text_reply(404, format!("no such endpoint {}", req.path)),
+        _ => text_reply(405, format!("method {} not supported", req.method)),
+    }
+}
+
+/// `/state`: membership, per-node breaker state, and routing config as JSON.
+fn router_state_json(core: &RouterCore) -> Vec<u8> {
+    let now = Instant::now();
+    let membership = core.membership.lock().unwrap();
+    let mut members = Vec::new();
+    for (id, m) in membership.members() {
+        let deps: Vec<String> = m.deployments.iter().map(|d| format!("\"{d}\"")).collect();
+        let breaker = core.breaker_for(id).state_label(now);
+        members.push(format!(
+            "    {{\"id\": \"{id}\", \"addr\": \"{}\", \"deployments\": [{}], \
+             \"heartbeat_age_ms\": {:.1}, \"breaker\": \"{breaker}\"}}",
+            m.addr,
+            deps.join(", "),
+            now.saturating_duration_since(m.last_heartbeat).as_secs_f64() * 1e3,
+        ));
+    }
+    format!(
+        "{{\n  \"epoch\": {},\n  \"nodes\": {},\n  \"replication\": {},\n  \"vnodes\": {},\n  \"members\": [\n{}\n  ]\n}}\n",
+        membership.epoch(),
+        membership.len(),
+        core.cfg.replication,
+        core.cfg.vnodes,
+        members.join(",\n"),
+    )
+    .into_bytes()
+}
+
+/// Headers worth relaying from a node's `/infer` answer to the client.
+const RELAY_HEADERS: [&str; 5] =
+    ["x-node", "x-deployment", "x-degraded", "x-batch-size", "x-outcome"];
+
+/// `POST /infer?deployment=D&key=K`: walk the key's replica set in ring
+/// order, skipping nodes whose router-side breaker is open, forwarding to
+/// the first candidate; a transport failure or a node-side 5xx/429 records
+/// a breaker failure and fails over to the next replica. The sharding key
+/// defaults to a stable hash of the body, so keyless clients still spread.
+fn serve_router_infer(req: &HttpRequest, core: &RouterCore) -> ServeReply {
+    let counters = &core.counters;
+    counters.bump(&counters.routed);
+    let deployment = req.query("deployment");
+    let key = match req.query("key") {
+        Some(k) => k.to_string(),
+        None => format!("body-{:016x}", super::ring::stable_hash(&req.body)),
+    };
+    let candidates = {
+        let membership = core.membership.lock().unwrap();
+        membership.replicas_for(&key, deployment, core.cfg.replication)
+    };
+    if candidates.is_empty() {
+        counters.bump(&counters.no_replica);
+        return text_reply(
+            503,
+            match deployment {
+                Some(d) => format!("no live node hosts deployment {d:?}"),
+                None => "no live nodes".to_string(),
+            },
+        );
+    }
+    let mut target = format!("/infer?key={key}");
+    if let Some(d) = deployment {
+        target.push_str(&format!("&deployment={d}"));
+    }
+    let fwd_headers: Vec<(&str, &str)> = req
+        .headers
+        .iter()
+        .filter(|(k, _)| k.as_str() == "x-deadline-ms" || k.as_str() == "x-priority")
+        .map(|(k, v)| (k.as_str(), v.as_str()))
+        .collect();
+    let mut hops = 0u32;
+    let mut last_failure: Option<ServeReply> = None;
+    for (id, addr) in &candidates {
+        let breaker = core.breaker_for(id);
+        if !breaker.allows(Instant::now()) {
+            counters.bump(&counters.failovers);
+            hops += 1;
+            continue;
+        }
+        let forwarded = http_call(
+            *addr,
+            "POST",
+            &target,
+            &fwd_headers,
+            &req.body,
+            core.cfg.forward_timeout,
+        );
+        match forwarded {
+            Ok(resp) if resp.status == 200 => {
+                breaker.record(true, Instant::now());
+                counters.bump(&counters.forwarded_ok);
+                return relay(resp, hops);
+            }
+            // 4xx from the node is the client's fault (bad tensor, unknown
+            // deployment on a hosting node, oversized body): relay verbatim,
+            // no breaker penalty, no failover — every replica would agree.
+            Ok(resp) if resp.status < 500 && resp.status != 429 => {
+                breaker.record(true, Instant::now());
+                return relay(resp, hops);
+            }
+            // node-side overload (429) or failure (5xx): penalize + fail over
+            Ok(resp) => {
+                breaker.record(false, Instant::now());
+                counters.bump(&counters.failovers);
+                hops += 1;
+                last_failure = Some(relay(resp, hops));
+            }
+            Err(_) => {
+                breaker.record(false, Instant::now());
+                counters.bump(&counters.forward_errors);
+                counters.bump(&counters.failovers);
+                hops += 1;
+                last_failure =
+                    Some(text_reply(502, format!("forward to node {id:?} ({addr}) failed")));
+            }
+        }
+    }
+    last_failure.unwrap_or_else(|| {
+        text_reply(503, "all replicas skipped by open circuit breakers".to_string())
+    })
+}
+
+/// Relay a node response to the client, preserving the diagnostic headers
+/// and stamping the failover count.
+fn relay(resp: HttpResponse, hops: u32) -> ServeReply {
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for name in RELAY_HEADERS {
+        if let Some(v) = resp.header(name) {
+            headers.push((name.to_string(), v.to_string()));
+        }
+    }
+    headers.push(("X-Failovers".to_string(), hops.to_string()));
+    let ctype = if resp.status == 200 { "application/octet-stream" } else { "text/plain" };
+    (resp.status, ctype, headers, resp.body)
+}
+
+// ---------------------------------------------------------------------------
+// Client helper
+// ---------------------------------------------------------------------------
+
+/// One `/infer` answer as seen by a cluster client.
+#[derive(Debug)]
+pub struct InferReply {
+    /// HTTP status (200 = served).
+    pub status: u16,
+    /// Decoded logits on success.
+    pub logits: Option<Tensor>,
+    /// Node that executed (X-Node).
+    pub node: Option<String>,
+    /// Server deployment that executed (X-Deployment).
+    pub deployment: Option<String>,
+    /// The node's server served this via a fallback sibling.
+    pub degraded: bool,
+    /// Replicas the router skipped/failed over before this answer.
+    pub failovers: u32,
+    /// Error text for non-200 answers.
+    pub error: Option<String>,
+}
+
+impl InferReply {
+    /// True when the request was served with logits.
+    pub fn is_served(&self) -> bool {
+        self.status == 200 && self.logits.is_some()
+    }
+}
+
+/// Send one image to a cluster front door (router or node) and decode the
+/// answer. `key` drives consistent-hash placement (defaults to a body hash
+/// at the router); `deadline_ms` becomes the node-side SLO deadline.
+pub fn infer(
+    addr: SocketAddr,
+    deployment: Option<&str>,
+    key: Option<&str>,
+    image: &Tensor,
+    deadline_ms: Option<u64>,
+    timeout: Duration,
+) -> Result<InferReply> {
+    let mut target = String::from("/infer");
+    let mut sep = '?';
+    if let Some(d) = deployment {
+        target.push_str(&format!("{sep}deployment={d}"));
+        sep = '&';
+    }
+    if let Some(k) = key {
+        target.push_str(&format!("{sep}key={k}"));
+    }
+    let deadline_hdr = deadline_ms.map(|ms| ms.to_string());
+    let mut headers: Vec<(&str, &str)> = Vec::new();
+    if let Some(ms) = &deadline_hdr {
+        headers.push(("X-Deadline-Ms", ms));
+    }
+    let resp = http_call(addr, "POST", &target, &headers, &encode_tensor(image), timeout)?;
+    let logits = if resp.status == 200 { decode_tensor(&resp.body).ok() } else { None };
+    Ok(InferReply {
+        status: resp.status,
+        node: resp.header("x-node").map(|s| s.to_string()),
+        deployment: resp.header("x-deployment").map(|s| s.to_string()),
+        degraded: resp.header("x-degraded") == Some("1"),
+        failovers: resp
+            .header("x-failovers")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0),
+        error: if resp.status == 200 { None } else { Some(resp.text()) },
+        logits,
+    })
+}
+
+/// Fetch and parse a `/metrics` endpoint into `name -> value` pairs
+/// (inverse of [`ServerStats::render_metrics`] — used by the counter-export
+/// regression test and ops tooling).
+pub fn scrape_metrics(addr: SocketAddr, timeout: Duration) -> Result<BTreeMap<String, f64>> {
+    let resp = http_call(addr, "GET", "/metrics", &[], b"", timeout)?;
+    anyhow::ensure!(resp.status == 200, "/metrics answered {}", resp.status);
+    let mut out = BTreeMap::new();
+    for line in resp.text().lines() {
+        if let Some((name, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.parse::<f64>() {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    #[test]
+    fn membership_register_heartbeat_evict_with_mock_clock() {
+        let t0 = Instant::now();
+        let t = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut m = Membership::new(64);
+        assert!(m.register("a", addr(9001), ["m".to_string()], t(0)));
+        assert!(m.register("b", addr(9002), ["m".to_string()], t(0)));
+        assert!(!m.register("a", addr(9001), ["m".to_string()], t(10)), "re-register not new");
+        assert_eq!(m.len(), 2);
+        // b heartbeats, a goes silent
+        assert!(m.heartbeat("b", t(500)));
+        assert!(!m.heartbeat("ghost", t(500)));
+        let evicted = m.evict_stale(Duration::from_millis(400), t(600));
+        assert_eq!(evicted, vec!["a".to_string()], "a's last beat was t0");
+        assert!(m.contains("b") && !m.contains("a"));
+        // an evicted node's heartbeat is refused until it re-registers
+        assert!(!m.heartbeat("a", t(700)));
+        assert!(m.register("a", addr(9001), ["m".to_string()], t(700)));
+        assert!(m.heartbeat("a", t(800)));
+    }
+
+    #[test]
+    fn replicas_filter_by_hosted_deployment() {
+        let now = Instant::now();
+        let mut m = Membership::new(64);
+        m.register("a", addr(9001), ["x".to_string()], now);
+        m.register("b", addr(9002), ["y".to_string()], now);
+        m.register("c", addr(9003), ["x".to_string(), "y".to_string()], now);
+        for key in ["k1", "k2", "k3", "k4"] {
+            let xs = m.replicas_for(key, Some("x"), 3);
+            assert_eq!(xs.len(), 2, "only a and c host x");
+            assert!(xs.iter().all(|(id, _)| id == "a" || id == "c"));
+            let any = m.replicas_for(key, None, 3);
+            assert_eq!(any.len(), 3);
+        }
+        assert!(m.replicas_for("k", Some("zzz"), 2).is_empty());
+    }
+
+    #[test]
+    fn epoch_bumps_on_every_membership_change() {
+        let now = Instant::now();
+        let mut m = Membership::new(16);
+        let e0 = m.epoch();
+        m.register("a", addr(9001), Vec::new(), now);
+        assert!(m.epoch() > e0);
+        let e1 = m.epoch();
+        m.leave("a");
+        assert!(m.epoch() > e1);
+    }
+}

@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::backends::{backend_by_name, BackendSpec, CheckpointView, PtqOptions, RangeSource};
 use crate::ckpt::Checkpoint;
+use crate::coordinator::ring::HashRing;
 use crate::coordinator::server::{EngineModel, ServerDeployment};
 use crate::coordinator::state::TrainState;
 use crate::coordinator::trainer::{EpochLog, TrainConfig, Trainer};
@@ -393,6 +394,58 @@ pub fn compile_serving_fleet(
         fleet[i].fallbacks = names;
     }
     Ok(fleet)
+}
+
+/// Shard a compiled serving fleet across cluster nodes: each deployment is
+/// placed on `replication` distinct nodes, chosen by a consistent-hash ring
+/// over `node_ids` keyed by the deployment name (128 vnodes — the balanced
+/// regime, see `rust/tests/hash_ring.rs`). Returns one deployment list per
+/// node, parallel to `node_ids`, ready for
+/// [`crate::coordinator::ClusterNode::start`].
+///
+/// Placement is deterministic: the same `(fleet, node_ids, replication)`
+/// always yields the same shards, so replicas of a *static-precision*
+/// deployment are bit-exact siblings and router failover is invisible to
+/// accuracy (asserted in `rust/tests/cluster.rs`). Fallback wiring from
+/// [`compile_serving_fleet`] is pruned per node to the siblings actually
+/// co-located there — [`crate::coordinator::Server`] rejects dangling
+/// fallback names at startup.
+///
+/// The models behind the deployments are shared (`Arc`), not recompiled:
+/// in-process multi-node tests and benches pay one compile per fleet entry
+/// regardless of the replication factor.
+pub fn place_fleet_on_nodes(
+    fleet: &[ServerDeployment],
+    node_ids: &[String],
+    replication: usize,
+) -> Result<Vec<Vec<ServerDeployment>>> {
+    anyhow::ensure!(!node_ids.is_empty(), "placement needs at least one node");
+    anyhow::ensure!(replication >= 1, "replication factor must be >= 1");
+    let mut ring = HashRing::new(128);
+    for id in node_ids {
+        ring.add_node(id);
+    }
+    anyhow::ensure!(ring.len() == node_ids.len(), "node ids must be unique");
+    let mut shards: Vec<Vec<ServerDeployment>> = node_ids.iter().map(|_| Vec::new()).collect();
+    for dep in fleet {
+        for owner in ring.replicas(&dep.name, replication) {
+            let slot =
+                node_ids.iter().position(|id| id.as_str() == owner).expect("owner is a node id");
+            shards[slot].push(ServerDeployment {
+                name: dep.name.clone(),
+                model: Arc::clone(&dep.model),
+                fallbacks: dep.fallbacks.clone(),
+            });
+        }
+    }
+    // prune fallbacks to co-located siblings (the server validates names)
+    for shard in &mut shards {
+        let local: Vec<String> = shard.iter().map(|d| d.name.clone()).collect();
+        for dep in shard.iter_mut() {
+            dep.fallbacks.retain(|f| local.contains(f));
+        }
+    }
+    Ok(shards)
 }
 
 /// A `TrainState` wrapping a synthetic seeded model (testutil::synth):

@@ -1,14 +1,23 @@
 //! Layer-3 coordinator: training orchestration (curriculum, epoch loop over
 //! the AOT train-step executable, reverse-pruning triggers, checkpointing),
-//! evaluation, and the batching inference server.
+//! evaluation, the batching inference server, and the sharded multi-node
+//! cluster tier (consistent-hash router + HTTP nodes over `std::net`).
 
+pub mod cluster;
 pub mod faults;
+pub mod ring;
 pub mod schedule;
 pub mod server;
 pub mod state;
 pub mod trainer;
+pub mod wire;
 
+pub use cluster::{
+    infer, scrape_metrics, ClusterNode, InferReply, Membership, NodeConfig, Router, RouterConfig,
+    RouterStats,
+};
 pub use faults::{Brownout, BrownoutMode, FaultPlan, FaultyModel};
+pub use ring::{stable_hash, HashRing};
 pub use schedule::{cosine_lr, Curriculum};
 pub use server::{
     is_transient, latency_percentile, transient_error, BatchModel, BatchPolicy, BreakerPolicy,

@@ -1,0 +1,208 @@
+//! Consistent-hash ring with virtual nodes: the request-placement half of
+//! the cluster tier.
+//!
+//! Each physical node is hashed onto the 64-bit ring at `vnodes` points
+//! ("virtual nodes"); a key is owned by the first vnode clockwise from the
+//! key's hash. Virtual nodes smooth the load: at >=128 vnodes per node the
+//! per-node key share stays within a tight band around `1/N` (asserted by
+//! the property suite in `rust/tests/hash_ring.rs`). Consistent hashing
+//! gives the *minimal-disruption* property the rebalancing story relies on:
+//!
+//! * **Node join** moves only the keys the joiner now owns (~`K/N` of them);
+//!   every moved key moves *to* the joiner.
+//! * **Node leave** moves only the keys the leaver owned; everyone else's
+//!   placement is untouched.
+//!
+//! Hashing is a fixed splitmix64-style avalanche over the raw bytes — fully
+//! deterministic across processes and runs (no `RandomState`), so the router
+//! and any observer (tests, `/state` consumers) agree on placement.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Deterministic 64-bit hash of a byte string: FNV-1a accumulation followed
+/// by a splitmix64 finalizer (same avalanche the fault injector uses).
+/// Stable across processes — placement must not depend on `RandomState`.
+pub fn stable_hash(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // splitmix64 finalizer: FNV alone clusters short ASCII keys
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// Consistent-hash ring: node ids placed at `vnodes` points each, keys owned
+/// by the first vnode clockwise. See the module docs for the distribution
+/// and minimal-disruption properties.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    vnodes: usize,
+    /// ring position -> owning node id (BTreeMap = the sorted ring).
+    ring: BTreeMap<u64, String>,
+    nodes: BTreeSet<String>,
+}
+
+impl HashRing {
+    /// An empty ring placing each node at `vnodes` points (clamped to >= 1).
+    /// 128+ vnodes keep per-node key share within the tested statistical
+    /// band; fewer trade balance for a smaller ring.
+    pub fn new(vnodes: usize) -> HashRing {
+        HashRing { vnodes: vnodes.max(1), ring: BTreeMap::new(), nodes: BTreeSet::new() }
+    }
+
+    /// Vnodes per node this ring was built with.
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    /// Hash positions of one node's vnodes ("node#i" for i in 0..vnodes).
+    fn vnode_positions(&self, node: &str) -> impl Iterator<Item = u64> + '_ {
+        let node = node.to_string();
+        (0..self.vnodes).map(move |i| stable_hash(format!("{node}#{i}").as_bytes()))
+    }
+
+    /// Add a node (idempotent). Returns `true` if the node was new.
+    pub fn add_node(&mut self, node: &str) -> bool {
+        if !self.nodes.insert(node.to_string()) {
+            return false;
+        }
+        for pos in self.vnode_positions(node).collect::<Vec<_>>() {
+            // vnode hash collisions between different nodes are possible in
+            // principle (64-bit space); first writer keeps the slot, which
+            // both sides compute identically — placement stays deterministic
+            self.ring.entry(pos).or_insert_with(|| node.to_string());
+        }
+        true
+    }
+
+    /// Remove a node and all its vnodes (idempotent). Returns `true` if the
+    /// node was present.
+    pub fn remove_node(&mut self, node: &str) -> bool {
+        if !self.nodes.remove(node) {
+            return false;
+        }
+        self.ring.retain(|_, owner| owner != node);
+        true
+    }
+
+    /// Is this node on the ring?
+    pub fn contains(&self, node: &str) -> bool {
+        self.nodes.contains(node)
+    }
+
+    /// Number of physical nodes on the ring.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when no node is on the ring.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// All node ids, sorted.
+    pub fn nodes(&self) -> impl Iterator<Item = &str> {
+        self.nodes.iter().map(|s| s.as_str())
+    }
+
+    /// The node owning `key`: first vnode clockwise from the key's hash
+    /// (wrapping). `None` on an empty ring.
+    pub fn primary(&self, key: &str) -> Option<&str> {
+        let h = stable_hash(key.as_bytes());
+        self.ring
+            .range(h..)
+            .next()
+            .or_else(|| self.ring.iter().next())
+            .map(|(_, owner)| owner.as_str())
+    }
+
+    /// The first `r` *distinct* nodes clockwise from `key` — the replica set
+    /// (primary first). Fewer than `r` nodes on the ring yields all of them.
+    pub fn replicas(&self, key: &str, r: usize) -> Vec<&str> {
+        let want = r.min(self.nodes.len());
+        let mut out: Vec<&str> = Vec::with_capacity(want);
+        if want == 0 {
+            return out;
+        }
+        let h = stable_hash(key.as_bytes());
+        for (_, owner) in self.ring.range(h..).chain(self.ring.range(..h)) {
+            if !out.contains(&owner.as_str()) {
+                out.push(owner.as_str());
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let ring = HashRing::new(128);
+        assert!(ring.is_empty());
+        assert_eq!(ring.primary("k"), None);
+        assert!(ring.replicas("k", 3).is_empty());
+    }
+
+    #[test]
+    fn add_remove_are_idempotent() {
+        let mut ring = HashRing::new(16);
+        assert!(ring.add_node("a"));
+        assert!(!ring.add_node("a"), "second add is a no-op");
+        assert_eq!(ring.len(), 1);
+        assert!(ring.remove_node("a"));
+        assert!(!ring.remove_node("a"), "second remove is a no-op");
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn single_node_owns_everything() {
+        let mut ring = HashRing::new(128);
+        ring.add_node("only");
+        for k in ["a", "b", "zzz", "0"] {
+            assert_eq!(ring.primary(k), Some("only"));
+            assert_eq!(ring.replicas(k, 3), vec!["only"]);
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_start_at_primary() {
+        let mut ring = HashRing::new(128);
+        for n in ["a", "b", "c", "d"] {
+            ring.add_node(n);
+        }
+        for i in 0..64 {
+            let key = format!("key-{i}");
+            let reps = ring.replicas(&key, 3);
+            assert_eq!(reps.len(), 3);
+            assert_eq!(reps[0], ring.primary(&key).unwrap());
+            let set: BTreeSet<&str> = reps.iter().copied().collect();
+            assert_eq!(set.len(), 3, "replica set must be distinct nodes");
+        }
+    }
+
+    #[test]
+    fn placement_is_deterministic_across_ring_instances() {
+        let build = || {
+            let mut r = HashRing::new(128);
+            for n in ["n0", "n1", "n2"] {
+                r.add_node(n);
+            }
+            r
+        };
+        let (a, b) = (build(), build());
+        for i in 0..256 {
+            let key = format!("k{i}");
+            assert_eq!(a.primary(&key), b.primary(&key));
+            assert_eq!(a.replicas(&key, 2), b.replicas(&key, 2));
+        }
+    }
+}

@@ -239,20 +239,21 @@ enum BreakerState {
 }
 
 /// Consecutive-failure circuit breaker (interior mutability: the router
-/// consults it while workers record outcomes).
-struct Breaker {
+/// consults it while workers record outcomes). Also reused per-node by the
+/// cluster router (`coordinator::cluster`) to gate forwarding.
+pub(crate) struct Breaker {
     policy: BreakerPolicy,
     state: Mutex<BreakerState>,
 }
 
 impl Breaker {
-    fn new(policy: BreakerPolicy) -> Breaker {
+    pub(crate) fn new(policy: BreakerPolicy) -> Breaker {
         Breaker { policy, state: Mutex::new(BreakerState::Closed { fails: 0 }) }
     }
 
     /// May traffic be routed to this deployment right now? An open breaker
     /// whose cooldown elapsed transitions to half-open and admits a probe.
-    fn allows(&self, now: Instant) -> bool {
+    pub(crate) fn allows(&self, now: Instant) -> bool {
         let mut st = self.state.lock().unwrap();
         match *st {
             BreakerState::Closed { .. } | BreakerState::HalfOpen => true,
@@ -267,10 +268,27 @@ impl Breaker {
         }
     }
 
+    /// Human-readable state for diagnostics (the cluster's `/state`):
+    /// "closed", "open", or "half-open". Read-only — unlike [`Breaker::allows`]
+    /// it does not perform the open -> half-open transition.
+    pub(crate) fn state_label(&self, now: Instant) -> &'static str {
+        match *self.state.lock().unwrap() {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open { until } => {
+                if now >= until {
+                    "half-open"
+                } else {
+                    "open"
+                }
+            }
+        }
+    }
+
     /// Record a batch outcome. Returns `true` iff this record tripped the
     /// breaker open (closed->open on the threshold, or a failed half-open
     /// probe re-opening it).
-    fn record(&self, ok: bool, now: Instant) -> bool {
+    pub(crate) fn record(&self, ok: bool, now: Instant) -> bool {
         let mut st = self.state.lock().unwrap();
         if ok {
             *st = BreakerState::Closed { fails: 0 };
@@ -372,6 +390,71 @@ impl ServerStats {
         } else {
             (self.expired + self.slo_misses) as f64 / n as f64
         }
+    }
+
+    /// Every stat as a `(name, value)` pair — the single serialization point
+    /// behind the cluster's `/metrics` endpoint and anything else that
+    /// exports counters. The **exhaustive destructuring** is the fix for the
+    /// dropped-counter class of bug: adding a `ServerStats` field without
+    /// exporting it fails to *compile* here instead of silently vanishing
+    /// from `/metrics` (regression-tested against a seeded chaos replay in
+    /// `rust/tests/cluster.rs`). Derived values (`accepted`,
+    /// `slo_violation_rate`) are exported too, so scrapers need no
+    /// server-side arithmetic.
+    pub fn export(&self) -> Vec<(&'static str, f64)> {
+        let ServerStats {
+            served,
+            errors,
+            expired,
+            rejected,
+            shed,
+            retried,
+            degraded,
+            breaker_trips,
+            worker_panics,
+            workers_restarted,
+            router_panics,
+            slo_misses,
+            batches,
+            mean_batch,
+            p50_ms,
+            p95_ms,
+            p99_ms,
+            throughput_rps,
+        } = self;
+        vec![
+            ("served", *served as f64),
+            ("errors", *errors as f64),
+            ("expired", *expired as f64),
+            ("rejected", *rejected as f64),
+            ("shed", *shed as f64),
+            ("retried", *retried as f64),
+            ("degraded", *degraded as f64),
+            ("breaker_trips", *breaker_trips as f64),
+            ("worker_panics", *worker_panics as f64),
+            ("workers_restarted", *workers_restarted as f64),
+            ("router_panics", *router_panics as f64),
+            ("slo_misses", *slo_misses as f64),
+            ("batches", *batches as f64),
+            ("mean_batch", *mean_batch),
+            ("p50_ms", *p50_ms),
+            ("p95_ms", *p95_ms),
+            ("p99_ms", *p99_ms),
+            ("throughput_rps", *throughput_rps),
+            ("accepted", self.accepted() as f64),
+            ("slo_violation_rate", self.slo_violation_rate()),
+        ]
+    }
+
+    /// Plain-text exposition of [`ServerStats::export`] — one
+    /// `<prefix>_<name> <value>` line per stat (Prometheus-style flat
+    /// gauges), served by the cluster's `/metrics` endpoint.
+    pub fn render_metrics(&self, prefix: &str) -> String {
+        let mut out = String::new();
+        for (name, value) in self.export() {
+            out.push_str(&format!("{prefix}_{name} {value}\n"));
+        }
+        out
     }
 }
 
@@ -696,6 +779,45 @@ impl SharedStats {
     fn bump(&self, c: &AtomicUsize) {
         c.fetch_add(1, Ordering::Relaxed);
     }
+
+    /// Aggregate the live atomics into a [`ServerStats`] — the ONE
+    /// aggregation path, shared by `shutdown()` and the live
+    /// [`Server::stats_snapshot`] so the `/metrics` view can never diverge
+    /// from the shutdown view by reading a different set of counters.
+    fn aggregate(&self, started: Instant) -> ServerStats {
+        let ld = Ordering::Relaxed;
+        let latencies = {
+            let r = self.latencies.lock().unwrap();
+            r.samples_ms.clone()
+        };
+        let batches = self.batches.load(ld);
+        let mut stats = ServerStats {
+            served: self.served.load(ld),
+            errors: self.errors.load(ld),
+            expired: self.expired.load(ld),
+            rejected: self.rejected.load(ld),
+            shed: self.shed.load(ld),
+            retried: self.retried.load(ld),
+            degraded: self.degraded.load(ld),
+            breaker_trips: self.breaker_trips.load(ld),
+            worker_panics: self.worker_panics.load(ld),
+            workers_restarted: self.workers_restarted.load(ld),
+            router_panics: self.router_panics.load(ld),
+            slo_misses: self.slo_misses.load(ld),
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                self.batched_requests.load(ld) as f64 / batches as f64
+            },
+            ..ServerStats::default()
+        };
+        stats.p50_ms = latency_percentile(&latencies, 0.50);
+        stats.p95_ms = latency_percentile(&latencies, 0.95);
+        stats.p99_ms = latency_percentile(&latencies, 0.99);
+        stats.throughput_rps = stats.served as f64 / started.elapsed().as_secs_f64().max(1e-9);
+        stats
+    }
 }
 
 /// The concurrent batching server. Start with [`Server::start`] (multiple
@@ -898,6 +1020,15 @@ impl Server {
         self.ingress.len()
     }
 
+    /// Live snapshot of the aggregated stats while the server runs — the
+    /// exact same aggregation `shutdown()` performs (one shared code path),
+    /// so a `/metrics` scrape between batches agrees field-for-field with
+    /// the stats a subsequent shutdown would report (modulo
+    /// `throughput_rps`, whose elapsed-time denominator keeps growing).
+    pub fn stats_snapshot(&self) -> ServerStats {
+        self.stats.aggregate(self.started)
+    }
+
     /// Graceful shutdown: stop accepting, drain every accepted request
     /// through the workers (partial batches included), then aggregate stats.
     ///
@@ -930,40 +1061,7 @@ impl Server {
                 None => break,
             }
         }
-        let s = &self.stats;
-        let ld = Ordering::Relaxed;
-        let latencies = {
-            let r = s.latencies.lock().unwrap();
-            r.samples_ms.clone()
-        };
-        let batches = s.batches.load(ld);
-        let mut stats = ServerStats {
-            served: s.served.load(ld),
-            errors: s.errors.load(ld),
-            expired: s.expired.load(ld),
-            rejected: s.rejected.load(ld),
-            shed: s.shed.load(ld),
-            retried: s.retried.load(ld),
-            degraded: s.degraded.load(ld),
-            breaker_trips: s.breaker_trips.load(ld),
-            worker_panics: s.worker_panics.load(ld),
-            workers_restarted: s.workers_restarted.load(ld),
-            router_panics: s.router_panics.load(ld),
-            slo_misses: s.slo_misses.load(ld),
-            batches,
-            mean_batch: if batches == 0 {
-                0.0
-            } else {
-                s.batched_requests.load(ld) as f64 / batches as f64
-            },
-            ..ServerStats::default()
-        };
-        stats.p50_ms = latency_percentile(&latencies, 0.50);
-        stats.p95_ms = latency_percentile(&latencies, 0.95);
-        stats.p99_ms = latency_percentile(&latencies, 0.99);
-        stats.throughput_rps =
-            stats.served as f64 / self.started.elapsed().as_secs_f64().max(1e-9);
-        stats
+        self.stats.aggregate(self.started)
     }
 }
 

@@ -1,0 +1,560 @@
+//! Hand-rolled HTTP/1.1 wire layer for the cluster tier (std-only — the
+//! offline vendor set has no tokio/axum/hyper).
+//!
+//! One protocol everywhere: the router's public front door, node-internal
+//! forwarding, registration/heartbeat, and `/metrics`/`/state` scraping all
+//! speak the same minimal HTTP/1.1 subset, so the parser here is exercised
+//! by every cluster interaction (and adversarially in
+//! `rust/tests/http_wire.rs`).
+//!
+//! The parser is **total**: any byte stream yields either a well-formed
+//! [`HttpRequest`] or a typed [`WireError`] carrying the status the server
+//! should answer with (400 malformed / 431 oversized headers / 413 oversized
+//! body) — never a panic and never an unbounded read. Limits:
+//!
+//! * request line <= [`MAX_REQUEST_LINE`] bytes (431)
+//! * <= [`MAX_HEADERS`] headers, each line <= [`MAX_HEADER_LINE`] bytes (431)
+//! * body (`Content-Length`) <= [`MAX_BODY`] bytes (413)
+//!
+//! Pipelining falls out of the design: [`read_request`] consumes exactly one
+//! request from a `BufRead`, so a keep-alive loop reads back-to-back
+//! requests off one connection. Tensors travel as a little-endian binary
+//! body ([`encode_tensor`] / [`decode_tensor`]) — no JSON on the data path.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Longest accepted `METHOD SP PATH SP VERSION` line, bytes (431 beyond).
+pub const MAX_REQUEST_LINE: usize = 4096;
+/// Longest accepted single header line, bytes (431 beyond).
+pub const MAX_HEADER_LINE: usize = 4096;
+/// Maximum accepted header count per request (431 beyond).
+pub const MAX_HEADERS: usize = 64;
+/// Maximum accepted `Content-Length` in bytes (413 beyond).
+pub const MAX_BODY: usize = 64 << 20;
+
+/// Why a request could not be parsed, carrying the HTTP status a server
+/// should answer before closing the connection.
+#[derive(Debug)]
+pub enum WireError {
+    /// Malformed request (bad request line, bad header syntax, truncated
+    /// stream mid-request, invalid Content-Length) — answer 400.
+    Malformed(String),
+    /// Request line or header section beyond the fixed limits — answer 431.
+    HeadersTooLarge(String),
+    /// Declared body beyond [`MAX_BODY`] — answer 413.
+    BodyTooLarge(usize),
+    /// Transport error (timeout, reset). No answer is possible; close.
+    Io(std::io::Error),
+}
+
+impl WireError {
+    /// HTTP status this parse failure should be answered with (0 = none:
+    /// transport is gone).
+    pub fn status(&self) -> u16 {
+        match self {
+            WireError::Malformed(_) => 400,
+            WireError::HeadersTooLarge(_) => 431,
+            WireError::BodyTooLarge(_) => 413,
+            WireError::Io(_) => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Malformed(m) => write!(f, "malformed request: {m}"),
+            WireError::HeadersTooLarge(m) => write!(f, "headers too large: {m}"),
+            WireError::BodyTooLarge(n) => write!(f, "declared body of {n} bytes exceeds limit"),
+            WireError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One parsed HTTP/1.1 request. Header names are lower-cased at parse time;
+/// the query string is split into raw `k=v` pairs (no percent-decoding — the
+/// cluster's identifiers never need it).
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Verb as sent (`GET`, `POST`, ...), upper-cased token.
+    pub method: String,
+    /// Path without the query string, e.g. `/infer`.
+    pub path: String,
+    /// Raw query parameters in order of appearance (later keys win in
+    /// [`HttpRequest::query`]).
+    pub query_pairs: Vec<(String, String)>,
+    /// Headers, names lower-cased, values trimmed.
+    pub headers: BTreeMap<String, String>,
+    /// Request body (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Last value of query parameter `name`, if present.
+    pub fn query(&self, name: &str) -> Option<&str> {
+        self.query_pairs.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Header value by lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    /// Did the client ask to keep the connection open? HTTP/1.1 defaults to
+    /// keep-alive unless `Connection: close` is sent.
+    pub fn keep_alive(&self) -> bool {
+        !self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, erroring past `limit`
+/// bytes. `Ok(None)` = clean EOF before any byte of this line.
+fn read_limited_line(
+    r: &mut impl BufRead,
+    limit: usize,
+    what: &str,
+) -> Result<Option<String>, WireError> {
+    let mut line: Vec<u8> = Vec::with_capacity(128);
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(WireError::Malformed(format!("connection closed mid-{what}")));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return match String::from_utf8(line) {
+                        Ok(s) => Ok(Some(s)),
+                        Err(_) => Err(WireError::Malformed(format!("non-UTF8 {what}"))),
+                    };
+                }
+                line.push(byte[0]);
+                if line.len() > limit {
+                    return Err(WireError::HeadersTooLarge(format!(
+                        "{what} exceeds {limit} bytes"
+                    )));
+                }
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+}
+
+/// Split `/path?a=1&b=2` into the path and its raw query pairs.
+fn split_target(target: &str) -> (String, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target.to_string(), Vec::new()),
+        Some((path, qs)) => {
+            let pairs = qs
+                .split('&')
+                .filter(|p| !p.is_empty())
+                .map(|p| match p.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (p.to_string(), String::new()),
+                })
+                .collect();
+            (path.to_string(), pairs)
+        }
+    }
+}
+
+/// Parse exactly one HTTP/1.1 request off `r`. `Ok(None)` = the peer closed
+/// cleanly before sending anything (normal end of a keep-alive connection).
+/// Every malformed, oversized, or truncated input comes back as a typed
+/// [`WireError`] — this function never panics and never reads past the
+/// declared body.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>, WireError> {
+    let Some(request_line) = read_limited_line(r, MAX_REQUEST_LINE, "request line")? else {
+        return Ok(None);
+    };
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(WireError::Malformed(format!(
+                "bad request line {request_line:?} (want `METHOD SP TARGET SP VERSION`)"
+            )))
+        }
+    };
+    if !method.bytes().all(|b| b.is_ascii_alphanumeric()) {
+        return Err(WireError::Malformed(format!("bad method token {method:?}")));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(WireError::Malformed(format!("unsupported version {version:?}")));
+    }
+    if !target.starts_with('/') {
+        return Err(WireError::Malformed(format!("target {target:?} must be origin-form")));
+    }
+    let mut headers = BTreeMap::new();
+    loop {
+        let Some(line) = read_limited_line(r, MAX_HEADER_LINE, "header")? else {
+            return Err(WireError::Malformed("connection closed inside headers".into()));
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(WireError::HeadersTooLarge(format!(">{MAX_HEADERS} headers")));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(WireError::Malformed(format!("header line {line:?} has no colon")));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(WireError::Malformed(format!("bad header name {name:?}")));
+        }
+        headers.insert(name.to_ascii_lowercase(), value.trim().to_string());
+    }
+    let body = match headers.get("content-length") {
+        None => Vec::new(),
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| WireError::Malformed(format!("bad Content-Length {v:?}")))?;
+            if n > MAX_BODY {
+                return Err(WireError::BodyTooLarge(n));
+            }
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    WireError::Malformed(format!("connection closed inside {n}-byte body"))
+                } else {
+                    WireError::Io(e)
+                }
+            })?;
+            body
+        }
+    };
+    let (path, query_pairs) = split_target(target);
+    Ok(Some(HttpRequest {
+        method: method.to_ascii_uppercase(),
+        path,
+        query_pairs,
+        headers,
+        body,
+    }))
+}
+
+/// Canonical reason phrase for the statuses the cluster emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one HTTP/1.1 response (status + extra headers + body). Always sends
+/// `Content-Length`; `Connection: close` is sent when `keep_alive` is false.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+        reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    if !keep_alive {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// A parsed HTTP response (client side of [`http_call`]).
+#[derive(Debug)]
+pub struct HttpResponse {
+    /// Status code from the status line.
+    pub status: u16,
+    /// Headers, names lower-cased.
+    pub headers: BTreeMap<String, String>,
+    /// Response body (sized by `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Header value by lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    /// Body as UTF-8 (lossy) — convenient for text endpoints.
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Parse one HTTP/1.1 response off `r` (status line, headers,
+/// `Content-Length` body). Same limits as the request parser.
+pub fn read_http_response(r: &mut impl BufRead) -> Result<HttpResponse> {
+    let status_line = read_limited_line(r, MAX_REQUEST_LINE, "status line")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .ok_or_else(|| anyhow::anyhow!("peer closed before a status line"))?;
+    let mut parts = status_line.split(' ');
+    let (version, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad response status line {status_line:?}");
+    }
+    let status: u16 = code.parse().map_err(|_| anyhow::anyhow!("bad status code {code:?}"))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = read_limited_line(r, MAX_HEADER_LINE, "response header")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .ok_or_else(|| anyhow::anyhow!("peer closed inside response headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("response carries more than {MAX_HEADERS} headers");
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            bail!("bad response header line {line:?}");
+        };
+        headers.insert(name.to_ascii_lowercase(), value.trim().to_string());
+    }
+    let body = match headers.get("content-length") {
+        None => Vec::new(),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| anyhow::anyhow!("bad Content-Length {v:?}"))?;
+            if n > MAX_BODY {
+                bail!("response body of {n} bytes exceeds limit");
+            }
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)?;
+            body
+        }
+    };
+    Ok(HttpResponse { status, headers, body })
+}
+
+/// One-shot HTTP call over a fresh connection: connect (with timeout), send
+/// `method target` plus headers/body, read the response, close. The cluster
+/// uses one-shot connections internally (`Connection: close`), keeping node
+/// drain deterministic — no idle keep-alive connections to wait out.
+pub fn http_call(
+    addr: SocketAddr,
+    method: &str,
+    target: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    let mut head = format!("{method} {target} HTTP/1.1\r\nHost: {addr}\r\n");
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", body.len()));
+    let mut w = &stream;
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    let mut reader = BufReader::new(&stream);
+    read_http_response(&mut reader)
+}
+
+// ---------------------------------------------------------------------------
+// Tensor body codec
+// ---------------------------------------------------------------------------
+
+/// Most dimensions a wire tensor may carry.
+pub const MAX_TENSOR_DIMS: usize = 8;
+/// Most elements a wire tensor may carry (64M floats = 256 MiB).
+pub const MAX_TENSOR_ELEMS: usize = 1 << 26;
+
+/// Encode a tensor as a little-endian binary body:
+/// `ndim: u32 | dims: u32 * ndim | data: f32 * prod(dims)`.
+pub fn encode_tensor(t: &Tensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 4 * t.shape.len() + 4 * t.data.len());
+    out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode [`encode_tensor`]'s format, validating dims, element count, and
+/// exact body length. Total: any byte slice yields a tensor or an error.
+pub fn decode_tensor(bytes: &[u8]) -> Result<Tensor> {
+    let take_u32 = |at: usize| -> Result<u32> {
+        let end = at.checked_add(4).filter(|&e| e <= bytes.len());
+        let end = end.ok_or_else(|| anyhow::anyhow!("tensor body truncated at byte {at}"))?;
+        Ok(u32::from_le_bytes(bytes[at..end].try_into().expect("4-byte slice")))
+    };
+    let ndim = take_u32(0)? as usize;
+    if ndim == 0 || ndim > MAX_TENSOR_DIMS {
+        bail!("tensor ndim {ndim} outside 1..={MAX_TENSOR_DIMS}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut elems: usize = 1;
+    for i in 0..ndim {
+        let d = take_u32(4 + 4 * i)? as usize;
+        if d == 0 {
+            bail!("tensor dimension {i} is zero");
+        }
+        elems = elems
+            .checked_mul(d)
+            .filter(|&e| e <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| anyhow::anyhow!("tensor element count exceeds {MAX_TENSOR_ELEMS}"))?;
+        shape.push(d);
+    }
+    let data_at = 4 + 4 * ndim;
+    let want = data_at + 4 * elems;
+    if bytes.len() != want {
+        bail!("tensor body is {} bytes, shape {shape:?} needs exactly {want}", bytes.len());
+    }
+    let data = bytes[data_at..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+        .collect();
+    Ok(Tensor::new(shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Result<Option<HttpRequest>, WireError> {
+        read_request(&mut Cursor::new(bytes.to_vec()))
+    }
+
+    #[test]
+    fn parses_a_minimal_get() {
+        let req = parse(b"GET /state HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/state");
+        assert!(req.query_pairs.is_empty());
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn parses_query_and_body() {
+        let req = parse(b"POST /infer?deployment=npu&key=k7 HTTP/1.1\r\nContent-Length: 3\r\nConnection: close\r\n\r\nabc")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.path, "/infer");
+        assert_eq!(req.query("deployment"), Some("npu"));
+        assert_eq!(req.query("key"), Some("k7"));
+        assert_eq!(req.body, b"abc");
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn bare_lf_lines_are_accepted() {
+        let req = parse(b"GET / HTTP/1.1\nHost: x\n\n").unwrap().unwrap();
+        assert_eq!(req.path, "/");
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncated_is_malformed() {
+        assert!(parse(b"").unwrap().is_none(), "clean EOF before any byte");
+        for partial in [&b"GET /x HT"[..], b"GET /x HTTP/1.1\r\nHost: x", b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"] {
+            let err = parse(partial).unwrap_err();
+            assert_eq!(err.status(), 400, "{err}");
+        }
+    }
+
+    #[test]
+    fn oversized_inputs_get_431_and_413() {
+        let long_target = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE + 10));
+        assert_eq!(parse(long_target.as_bytes()).unwrap_err().status(), 431);
+        let big_header =
+            format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "b".repeat(MAX_HEADER_LINE + 10));
+        assert_eq!(parse(big_header.as_bytes()).unwrap_err().status(), 431);
+        let many: String = (0..MAX_HEADERS + 1).map(|i| format!("X-{i}: v\r\n")).collect();
+        let req = format!("GET / HTTP/1.1\r\n{many}\r\n");
+        assert_eq!(parse(req.as_bytes()).unwrap_err().status(), 431);
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert_eq!(parse(huge.as_bytes()).unwrap_err().status(), 413);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let two = b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let mut cur = Cursor::new(two.to_vec());
+        let a = read_request(&mut cur).unwrap().unwrap();
+        let b = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!(a.path, "/a");
+        assert_eq!(b.path, "/b");
+        assert_eq!(b.body, b"hi");
+        assert!(read_request(&mut cur).unwrap().is_none(), "then clean EOF");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "text/plain", &[("X-Node", "n0")], b"hello", false)
+            .unwrap();
+        let resp = read_http_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("x-node"), Some("n0"));
+        assert_eq!(resp.text(), "hello");
+    }
+
+    #[test]
+    fn tensor_codec_roundtrips_and_rejects_garbage() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]);
+        let enc = encode_tensor(&t);
+        let back = decode_tensor(&enc).unwrap();
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.data, t.data);
+        assert!(decode_tensor(&[]).is_err());
+        assert!(decode_tensor(&enc[..enc.len() - 1]).is_err(), "short body");
+        assert!(decode_tensor(&[&enc[..], &[0u8]].concat()).is_err(), "long body");
+        let mut zero_dim = enc.clone();
+        zero_dim[4..8].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_tensor(&zero_dim).is_err(), "zero dim");
+        let mut huge = enc;
+        huge[0..4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode_tensor(&huge).is_err(), "ndim over limit");
+    }
+}

@@ -1,0 +1,219 @@
+//! Property suite for the consistent-hash ring (`coordinator::ring`): the
+//! statistical load-balance bound at >=128 vnodes and the minimal-disruption
+//! property under join/leave, swept over seeded random membership sequences
+//! (testutil::Rng — fully deterministic, no network, no clock).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use quant_trim::coordinator::ring::{stable_hash, HashRing};
+use quant_trim::testutil::Rng;
+
+/// Keys used by the distribution / disruption sweeps.
+fn keys(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("request-key-{i}")).collect()
+}
+
+/// Owner of every key, as a map key -> node.
+fn ownership(ring: &HashRing, keys: &[String]) -> BTreeMap<String, String> {
+    keys.iter()
+        .map(|k| (k.clone(), ring.primary(k).expect("non-empty ring").to_string()))
+        .collect()
+}
+
+/// Per-node key counts.
+fn shares(owners: &BTreeMap<String, String>) -> BTreeMap<String, usize> {
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for owner in owners.values() {
+        *counts.entry(owner.clone()).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[test]
+fn stable_hash_is_deterministic_and_spreads() {
+    assert_eq!(stable_hash(b"abc"), stable_hash(b"abc"));
+    assert_ne!(stable_hash(b"abc"), stable_hash(b"abd"));
+    // avalanche sanity: low bits of sequential keys should not be constant
+    let low_bits: BTreeSet<u64> = (0..64).map(|i| stable_hash(format!("k{i}").as_bytes()) & 0xff).collect();
+    assert!(low_bits.len() > 32, "low byte shows only {} values over 64 keys", low_bits.len());
+}
+
+/// At >=128 vnodes the per-node share of a large key population stays within
+/// a band around the ideal 1/N — the bound the router's throughput-scaling
+/// assertion leans on. Swept over node counts 2..=8.
+#[test]
+fn key_distribution_is_balanced_at_128_vnodes() {
+    let keys = keys(4096);
+    for n in 2..=8usize {
+        let mut ring = HashRing::new(128);
+        for i in 0..n {
+            ring.add_node(&format!("node-{i}"));
+        }
+        let owners = ownership(&ring, &keys);
+        let counts = shares(&owners);
+        assert_eq!(counts.len(), n, "every node owns at least one key");
+        let ideal = keys.len() as f64 / n as f64;
+        for (node, count) in &counts {
+            let ratio = *count as f64 / ideal;
+            // generous statistical band: 128 vnodes keeps empirical shares
+            // well inside [0.5, 1.6]x ideal for these populations
+            assert!(
+                (0.5..=1.6).contains(&ratio),
+                "{node} owns {count} keys at n={n} ({ratio:.2}x ideal {ideal:.0})"
+            );
+        }
+    }
+}
+
+/// Fewer vnodes must still cover all nodes (no starvation), even if the
+/// balance band is wider — guards the `vnodes.max(1)` clamp too.
+#[test]
+fn low_vnode_rings_still_cover_all_nodes() {
+    let keys = keys(4096);
+    for vnodes in [1usize, 8, 32] {
+        let mut ring = HashRing::new(vnodes);
+        for i in 0..4 {
+            ring.add_node(&format!("node-{i}"));
+        }
+        let counts = shares(&ownership(&ring, &keys));
+        assert!(!counts.is_empty(), "someone owns keys at vnodes={vnodes}");
+    }
+}
+
+/// Node join moves at most ~K/N keys, and every moved key moves *to* the
+/// joiner (nobody else's placement changes).
+#[test]
+fn join_moves_at_most_k_over_n_keys_and_only_to_the_joiner() {
+    let keys = keys(4096);
+    for n in 2..=6usize {
+        let mut ring = HashRing::new(128);
+        for i in 0..n {
+            ring.add_node(&format!("node-{i}"));
+        }
+        let before = ownership(&ring, &keys);
+        ring.add_node("joiner");
+        let after = ownership(&ring, &keys);
+        let mut moved = 0usize;
+        for k in &keys {
+            if before[k] != after[k] {
+                moved += 1;
+                assert_eq!(after[k], "joiner", "moved key {k} must land on the joiner");
+            }
+        }
+        // ideal is K/(N+1); allow 2x slack for hash variance
+        let bound = 2 * keys.len() / (n + 1);
+        assert!(
+            moved <= bound,
+            "join at n={n} moved {moved} keys, bound {bound} (~2K/(N+1))"
+        );
+        assert!(moved > 0, "the joiner must take some keys");
+    }
+}
+
+/// Node leave moves only the leaver's keys: every key the leaver did not own
+/// keeps its owner.
+#[test]
+fn leave_moves_only_the_leavers_keys() {
+    let keys = keys(4096);
+    for n in 3..=6usize {
+        let mut ring = HashRing::new(128);
+        for i in 0..n {
+            ring.add_node(&format!("node-{i}"));
+        }
+        let before = ownership(&ring, &keys);
+        ring.remove_node("node-0");
+        let after = ownership(&ring, &keys);
+        for k in &keys {
+            if before[k] != "node-0" {
+                assert_eq!(before[k], after[k], "key {k} moved although its owner stayed");
+            } else {
+                assert_ne!(after[k], "node-0", "key {k} still owned by the departed node");
+            }
+        }
+    }
+}
+
+/// Seeded random membership sequences: after any interleaving of joins and
+/// leaves, placement equals a fresh ring built from the surviving member
+/// set (history-independence), and each individual step only disrupts the
+/// expected keys.
+#[test]
+fn random_membership_sequences_preserve_ring_invariants() {
+    let keys = keys(1024);
+    for seed in [1u64, 7, 42, 1234] {
+        let mut rng = Rng::new(seed);
+        let mut ring = HashRing::new(128);
+        let mut live: BTreeSet<String> = BTreeSet::new();
+        // start from a random initial population of 3..6 nodes
+        for i in 0..(3 + rng.below(4)) {
+            let id = format!("s{seed}-n{i}");
+            ring.add_node(&id);
+            live.insert(id);
+        }
+        let mut next_id = 100usize;
+        for _step in 0..40 {
+            let join = live.len() <= 1 || rng.below(2) == 0;
+            let before = ownership(&ring, &keys);
+            if join {
+                let id = format!("s{seed}-n{next_id}");
+                next_id += 1;
+                ring.add_node(&id);
+                live.insert(id.clone());
+                let after = ownership(&ring, &keys);
+                let moved = keys.iter().filter(|k| before[*k] != after[*k]).count();
+                assert!(
+                    moved <= 2 * keys.len() / live.len(),
+                    "seed {seed}: join moved {moved} of {} keys across {} nodes",
+                    keys.len(),
+                    live.len()
+                );
+                for k in &keys {
+                    if before[k] != after[k] {
+                        assert_eq!(after[k], id);
+                    }
+                }
+            } else {
+                let victim = {
+                    let idx = rng.below(live.len());
+                    live.iter().nth(idx).expect("index in range").clone()
+                };
+                ring.remove_node(&victim);
+                live.remove(&victim);
+                let after = ownership(&ring, &keys);
+                for k in &keys {
+                    if before[k] != victim.as_str() {
+                        assert_eq!(before[k], after[k], "seed {seed}: non-victim key moved");
+                    }
+                }
+            }
+            assert_eq!(ring.len(), live.len());
+        }
+        // history-independence: same member set, fresh ring, same placement
+        let mut fresh = HashRing::new(128);
+        for id in &live {
+            fresh.add_node(id);
+        }
+        for k in &keys {
+            assert_eq!(ring.primary(k), fresh.primary(k), "seed {seed}: history leaked");
+            assert_eq!(ring.replicas(k, 2), fresh.replicas(k, 2));
+        }
+    }
+}
+
+/// Replica sets are distinct, ordered from the primary, and shrink gracefully
+/// below R live nodes — the failover walk the router relies on.
+#[test]
+fn replica_sets_support_failover_walks() {
+    let mut ring = HashRing::new(128);
+    for i in 0..3 {
+        ring.add_node(&format!("node-{i}"));
+    }
+    for k in keys(256) {
+        let reps = ring.replicas(&k, 2);
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0], ring.primary(&k).unwrap());
+        assert_ne!(reps[0], reps[1]);
+        // asking for more replicas than nodes yields all nodes
+        assert_eq!(ring.replicas(&k, 10).len(), 3);
+    }
+}

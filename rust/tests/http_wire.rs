@@ -1,0 +1,410 @@
+//! Adversarial HTTP/1.1 parser tests for `coordinator::wire` — at the parser
+//! level (seeded byte-mangling corpus, split/partial reads) and against a
+//! live loopback `ClusterNode` (malformed request lines, oversized headers,
+//! premature disconnects, pipelined requests). Contract: every input yields
+//! a 400/431/413 answer or a clean close — never a panic and never a hung
+//! connection. Fully deterministic: loopback only, seeded corpus, EOF-driven
+//! closes (no timing races).
+
+use std::io::{BufReader, Cursor, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use anyhow::Result;
+use quant_trim::coordinator::cluster::{ClusterNode, NodeConfig};
+use quant_trim::coordinator::server::{
+    BatchModel, BatchPolicy, ServerConfig, ServerDeployment,
+};
+use quant_trim::coordinator::wire::{
+    decode_tensor, encode_tensor, read_http_response, read_request, HttpRequest, WireError,
+    MAX_HEADERS, MAX_HEADER_LINE, MAX_REQUEST_LINE,
+};
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::Rng;
+
+/// Echoes each request's first pixel.
+struct FirstPixel;
+
+impl BatchModel for FirstPixel {
+    fn run_batch(&self, images: &Tensor) -> Result<Tensor> {
+        let n = images.shape[0];
+        let sz: usize = images.shape[1..].iter().product();
+        let mut out = Tensor::zeros(&[n, 1]);
+        for (i, o) in out.data.iter_mut().enumerate() {
+            *o = images.data[i * sz];
+        }
+        Ok(out)
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+fn parse(bytes: &[u8]) -> Result<Option<HttpRequest>, WireError> {
+    read_request(&mut Cursor::new(bytes.to_vec()))
+}
+
+/// A small corpus of well-formed requests the mangler starts from.
+fn valid_corpus() -> Vec<Vec<u8>> {
+    let tensor = encode_tensor(&Tensor::full(&[1, 2], 7.0));
+    let mut infer = format!(
+        "POST /infer?deployment=echo&key=k1 HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        tensor.len()
+    )
+    .into_bytes();
+    infer.extend_from_slice(&tensor);
+    vec![
+        b"GET /healthz HTTP/1.1\r\n\r\n".to_vec(),
+        b"GET /state HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n".to_vec(),
+        b"GET /metrics HTTP/1.1\r\nAccept: text/plain\r\n\r\n".to_vec(),
+        b"POST /heartbeat?id=n0 HTTP/1.1\r\nContent-Length: 0\r\n\r\n".to_vec(),
+        infer,
+    ]
+}
+
+/// Seeded mangles: truncate, bit-flip, byte insert, byte zero, slice swap.
+fn mangle(rng: &mut Rng, base: &[u8]) -> Vec<u8> {
+    let mut bytes = base.to_vec();
+    match rng.below(5) {
+        0 => {
+            let at = rng.below(bytes.len().max(1));
+            bytes.truncate(at);
+        }
+        1 => {
+            let at = rng.below(bytes.len().max(1));
+            if at < bytes.len() {
+                bytes[at] ^= 1 << rng.below(8);
+            }
+        }
+        2 => {
+            let at = rng.below(bytes.len() + 1);
+            bytes.insert(at, (rng.below(256)) as u8);
+        }
+        3 => {
+            let at = rng.below(bytes.len().max(1));
+            if at < bytes.len() {
+                bytes[at] = 0;
+            }
+        }
+        _ => {
+            if bytes.len() >= 4 {
+                let a = rng.below(bytes.len() - 1);
+                let b = rng.below(bytes.len() - 1);
+                bytes.swap(a, b);
+            }
+        }
+    }
+    bytes
+}
+
+// ---------------------------------------------------------------------------
+// Parser-level properties (no sockets)
+// ---------------------------------------------------------------------------
+
+/// Hand-picked malformed request lines all answer 400.
+#[test]
+fn malformed_request_lines_are_400() {
+    let cases: &[&[u8]] = &[
+        b"\r\n\r\n",                                  // empty request line
+        b"GET\r\n\r\n",                               // no target
+        b"GET /x\r\n\r\n",                            // no version
+        b"GET  /x HTTP/1.1\r\n\r\n",                  // double space
+        b"GET /x HTTP/1.1 extra\r\n\r\n",             // trailing token
+        b"G@T /x HTTP/1.1\r\n\r\n",                   // bad method token
+        b"GET x HTTP/1.1\r\n\r\n",                    // not origin-form
+        b"GET /x HTTP/2.0\r\n\r\n",                   // unsupported version
+        b"GET /x HTTP/1.1\r\nNoColonHere\r\n\r\n",    // header without colon
+        b"GET /x HTTP/1.1\r\nBad Name: v\r\n\r\n",    // space in header name
+        b"GET /x HTTP/1.1\r\n: empty-name\r\n\r\n",   // empty header name
+        b"POST /x HTTP/1.1\r\nContent-Length: -1\r\n\r\n", // bad length
+        b"POST /x HTTP/1.1\r\nContent-Length: 99999999999999999999\r\n\r\n",
+        b"GET /x HT",                                 // truncated request line
+        b"GET /x HTTP/1.1\r\nHost: x",                // truncated headers
+        b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", // truncated body
+    ];
+    for case in cases {
+        let err = parse(case).expect_err(&format!("{:?} must not parse", String::from_utf8_lossy(case)));
+        assert_eq!(err.status(), 400, "{}", err);
+    }
+}
+
+/// Oversized inputs answer 431 (request line / header line / header count).
+#[test]
+fn oversized_inputs_are_431() {
+    let long_line = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_REQUEST_LINE + 1));
+    assert_eq!(parse(long_line.as_bytes()).unwrap_err().status(), 431);
+    let long_header = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "b".repeat(MAX_HEADER_LINE + 1));
+    assert_eq!(parse(long_header.as_bytes()).unwrap_err().status(), 431);
+    let many: String = (0..=MAX_HEADERS).map(|i| format!("X-{i}: v\r\n")).collect();
+    assert_eq!(parse(format!("GET / HTTP/1.1\r\n{many}\r\n").as_bytes()).unwrap_err().status(), 431);
+}
+
+/// The seeded byte-mangling corpus: every mangled request either parses or
+/// yields a typed error with a sane status — the parser is total and never
+/// panics. 600 cases across 3 seeds, fully deterministic.
+#[test]
+fn mangled_corpus_never_panics_and_errors_are_typed() {
+    let corpus = valid_corpus();
+    for seed in [0xF00Du64, 0xBEEF, 0x5EED] {
+        let mut rng = Rng::new(seed);
+        for i in 0..200 {
+            let base = &corpus[rng.below(corpus.len())];
+            let mut mangled = base.clone();
+            // stack 1..=3 mangles for deeper corruption
+            for _ in 0..(1 + rng.below(3)) {
+                mangled = mangle(&mut rng, &mangled);
+            }
+            match parse(&mangled) {
+                Ok(_) => {} // still (or again) well-formed — fine
+                Err(e) => {
+                    assert!(
+                        matches!(e.status(), 400 | 413 | 431),
+                        "seed {seed} case {i}: unexpected status {} for {e}",
+                        e.status()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A reader that drips bytes in seeded small chunks: split/partial reads
+/// must parse identically to a whole-buffer read.
+struct DripReader {
+    data: Vec<u8>,
+    at: usize,
+    sizes: Vec<usize>,
+    step: usize,
+}
+
+impl Read for DripReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.at >= self.data.len() {
+            return Ok(0);
+        }
+        let want = self.sizes[self.step % self.sizes.len()].max(1);
+        self.step += 1;
+        let n = want.min(buf.len()).min(self.data.len() - self.at);
+        buf[..n].copy_from_slice(&self.data[self.at..self.at + n]);
+        self.at += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn split_reads_parse_identically_to_whole_buffer() {
+    let corpus = valid_corpus();
+    let mut rng = Rng::new(0xD41);
+    for base in &corpus {
+        let whole = parse(base).unwrap().expect("corpus entry is valid");
+        for _ in 0..8 {
+            let sizes: Vec<usize> = (0..8).map(|_| 1 + rng.below(7)).collect();
+            let drip = DripReader { data: base.clone(), at: 0, sizes, step: 0 };
+            // tiny BufReader capacity worsens the splitting further
+            let mut r = BufReader::with_capacity(3, drip);
+            let req = read_request(&mut r).unwrap().expect("split read must still parse");
+            assert_eq!(req.method, whole.method);
+            assert_eq!(req.path, whole.path);
+            assert_eq!(req.query_pairs, whole.query_pairs);
+            assert_eq!(req.headers, whole.headers);
+            assert_eq!(req.body, whole.body);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live loopback node: adversarial clients against the real front door
+// ---------------------------------------------------------------------------
+
+fn echo_node() -> ClusterNode {
+    ClusterNode::start(
+        "adversarial-target",
+        vec![ServerDeployment::new("echo", FirstPixel)],
+        NodeConfig {
+            server: ServerConfig {
+                workers: 1,
+                queue_depth: 32,
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                    slo_margin: None,
+                },
+                ..ServerConfig::default()
+            },
+            request_timeout: Duration::from_secs(10),
+            // bounds how long a silent peer can hold a handler
+            read_timeout: Duration::from_millis(300),
+            ..NodeConfig::default()
+        },
+        None,
+    )
+    .expect("start adversarial target node")
+}
+
+/// Send raw bytes, half-close the write side (deterministic EOF at the
+/// server), and read whatever comes back until the server closes.
+fn raw_exchange(addr: std::net::SocketAddr, bytes: &[u8]) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    stream.write_all(bytes).expect("send");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out); // server-side close ends this
+    out
+}
+
+fn status_of(raw: &[u8]) -> Option<u16> {
+    let text = String::from_utf8_lossy(raw);
+    let mut parts = text.split(' ');
+    match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code.parse().ok(),
+        _ => None,
+    }
+}
+
+fn assert_healthy(node: &ClusterNode) {
+    let raw = raw_exchange(node.addr(), b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status_of(&raw), Some(200), "node must stay healthy");
+}
+
+#[test]
+fn live_node_answers_malformed_lines_with_400_and_survives() {
+    let node = echo_node();
+    for case in
+        [&b"BAD\r\n\r\n"[..], b"GET x HTTP/1.1\r\n\r\n", b"GET /x HTTP/9.9\r\n\r\n", b"\x00\x01\x02\x03"]
+    {
+        let raw = raw_exchange(node.addr(), case);
+        assert_eq!(status_of(&raw), Some(400), "case {:?}", String::from_utf8_lossy(case));
+    }
+    assert_healthy(&node);
+    node.shutdown();
+}
+
+#[test]
+fn live_node_answers_oversized_headers_with_431_and_survives() {
+    let node = echo_node();
+    let big = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "x".repeat(MAX_HEADER_LINE + 100));
+    let raw = raw_exchange(node.addr(), big.as_bytes());
+    assert_eq!(status_of(&raw), Some(431));
+    assert_healthy(&node);
+    node.shutdown();
+}
+
+#[test]
+fn premature_disconnects_never_wedge_the_node() {
+    let node = echo_node();
+    let cuts: &[&[u8]] = &[
+        b"",                                        // connect + immediate close
+        b"GET /hea",                                // mid request line
+        b"GET /healthz HTTP/1.1\r\nHost: ",         // mid header
+        b"POST /infer HTTP/1.1\r\nContent-Length: 500\r\n\r\nshort", // mid body
+    ];
+    for cut in cuts {
+        let raw = raw_exchange(node.addr(), cut);
+        // empty cut = clean EOF (no response); the rest are truncations (400)
+        if cut.is_empty() {
+            assert!(raw.is_empty(), "clean EOF deserves no response bytes");
+        } else {
+            assert_eq!(status_of(&raw), Some(400), "cut {:?}", String::from_utf8_lossy(cut));
+        }
+        assert_healthy(&node);
+    }
+    node.shutdown();
+}
+
+/// A silent open connection is dropped at the read timeout — the handler is
+/// not held forever, and the node keeps serving others meanwhile.
+#[test]
+fn silent_connections_time_out_without_blocking_service() {
+    let node = echo_node();
+    let idle = TcpStream::connect(node.addr()).expect("connect");
+    // while the silent peer idles, service continues
+    assert_healthy(&node);
+    // after the 300ms read timeout the server closes the silent connection
+    std::thread::sleep(Duration::from_millis(600));
+    assert_healthy(&node);
+    drop(idle);
+    node.shutdown();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let node = echo_node();
+    let mut stream = TcpStream::connect(node.addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    stream
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\n\r\nGET /state HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n",
+        )
+        .expect("pipeline 3 requests");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let a = read_http_response(&mut reader).expect("first pipelined response");
+    let b = read_http_response(&mut reader).expect("second pipelined response");
+    let c = read_http_response(&mut reader).expect("third pipelined response");
+    assert_eq!((a.status, b.status, c.status), (200, 200, 200));
+    assert_eq!(a.text(), "ok");
+    assert!(b.text().contains("\"deployments\""), "state body: {}", b.text());
+    // after Connection: close the server must close — EOF, not a hang
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).expect("clean close after Connection: close");
+    assert!(rest.is_empty());
+    node.shutdown();
+}
+
+/// The live-socket version of the mangling corpus: every mangled blob gets a
+/// typed response or a clean close, and the node never stops serving. The
+/// half-close after each blob makes server-side EOF (not timeouts) drive
+/// every case — deterministic and fast.
+#[test]
+fn live_mangled_corpus_gets_typed_answers_and_node_survives() {
+    let node = echo_node();
+    let corpus = valid_corpus();
+    let mut rng = Rng::new(0xC0FFEE);
+    for i in 0..60 {
+        let base = &corpus[rng.below(corpus.len())];
+        let mangled = mangle(&mut rng, base);
+        let raw = raw_exchange(node.addr(), &mangled);
+        // a blob without a parseable status means the server closed without
+        // answering (clean-EOF case) — legal; reaching this line at all
+        // proves the connection was closed rather than hung
+        if let Some(status) = status_of(&raw) {
+            assert!(
+                matches!(status, 200 | 400 | 404 | 405 | 413 | 429 | 431 | 500 | 502 | 503 | 504),
+                "case {i}: unexpected status {status}"
+            );
+        }
+    }
+    assert_healthy(&node);
+    let stats = node.shutdown();
+    // the adversarial barrage must not have crashed any server thread
+    assert_eq!((stats.worker_panics, stats.router_panics), (0, 0));
+}
+
+/// Tensor codec adversarial cases: truncations and mangles of a valid body
+/// must error (or decode), never panic — and the error path is the node's
+/// 400 on /infer.
+#[test]
+fn tensor_codec_is_total_under_mangling() {
+    let valid = encode_tensor(&Tensor::new(vec![2, 3], vec![0.5; 6]));
+    for cut in 0..valid.len() {
+        let _ = decode_tensor(&valid[..cut]); // must not panic; mostly errors
+    }
+    let mut rng = Rng::new(0xDEC0DE);
+    for _ in 0..200 {
+        let mangled = mangle(&mut rng, &valid);
+        let _ = decode_tensor(&mangled); // total: Ok or Err, never a panic
+    }
+    // live: a garbage /infer body answers 400 and the node survives
+    let node = echo_node();
+    let body = b"not-a-tensor";
+    let req = format!(
+        "POST /infer?deployment=echo HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let mut blob = req.into_bytes();
+    blob.extend_from_slice(body);
+    let raw = raw_exchange(node.addr(), &blob);
+    assert_eq!(status_of(&raw), Some(400));
+    assert_healthy(&node);
+    node.shutdown();
+}
