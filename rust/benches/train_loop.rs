@@ -1,0 +1,97 @@
+//! Native Quant-Trim training-loop bench: times the pure-Rust train step,
+//! the atomic checkpoint save/load path, and the headline **kill-and-resume
+//! speedup** — a full from-scratch run vs resuming the same run from its
+//! last epoch checkpoint. Writes `BENCH_train.json`; the CI train-smoke job
+//! gates `train_resume_speedup` (floor) against
+//! `BENCH_baseline/train.json` via `tools/bench_gate.rs`.
+//!
+//! The speedup is a ratio of two runs in the SAME process on the SAME
+//! synthetic model, so it is machine-independent: resuming a 6-epoch run
+//! with one epoch left must be much cheaper than retraining all six. A
+//! ratio near 1.0 means resume silently restarted from scratch.
+//!
+//!   cargo bench --bench train_loop
+
+use std::time::Instant;
+
+use quant_trim::coordinator::qtrain::{NativeTrainer, QtConfig, RunControls};
+use quant_trim::testutil::synth;
+
+const EPOCHS: usize = 6;
+const STEPS: usize = 4;
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("qt_bench_train_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create bench scratch dir");
+    dir
+}
+
+fn main() {
+    let cfg = QtConfig::tiny(EPOCHS, STEPS);
+    let sm = synth::resnet_like(8, 8);
+
+    // Full from-scratch run.
+    let dir_full = scratch("full");
+    let mut full = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let t0 = Instant::now();
+    let rep = full.train(&dir_full, RunControls::default()).expect("full run");
+    let full_us = t0.elapsed().as_micros() as f64;
+    assert_eq!(rep.logs.len(), EPOCHS);
+    let step_us = full_us / (EPOCHS * STEPS) as f64;
+
+    // Killed run: checkpoint EPOCHS-1 epochs, then die mid-run.
+    let dir_kill = scratch("kill");
+    let mut killed = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let rep = killed
+        .train(
+            &dir_kill,
+            RunControls { abort_after_steps: Some((EPOCHS - 1) * STEPS), ..Default::default() },
+        )
+        .expect("killed run");
+    assert!(rep.aborted);
+    drop(killed);
+
+    // Resume: manifest parse + checkpoint load + ONE remaining epoch.
+    let t0 = Instant::now();
+    let mut resumed = NativeTrainer::resume(sm.graph.clone(), cfg.clone(), &dir_kill)
+        .expect("resume parses")
+        .expect("manifest present");
+    let rep = resumed.train(&dir_kill, RunControls::default()).expect("resumed run");
+    let resume_us = t0.elapsed().as_micros() as f64;
+    assert_eq!(rep.logs.len(), 1, "exactly one epoch left after the kill");
+
+    let speedup = full_us / resume_us.max(1.0);
+
+    // Checkpoint save/load microbench on the trained state.
+    let ck = resumed.state.to_checkpoint_full();
+    let ck_path = dir_kill.join("bench_probe.qtckpt");
+    let reps = 20;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        ck.save(&ck_path).expect("checkpoint save");
+    }
+    let save_us = t0.elapsed().as_micros() as f64 / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        quant_trim::ckpt::Checkpoint::load(&ck_path).expect("checkpoint load");
+    }
+    let load_us = t0.elapsed().as_micros() as f64 / reps as f64;
+
+    println!("train_loop bench  ({EPOCHS} epochs x {STEPS} steps, synthetic resnet-like 3x8x8)");
+    println!("  full run        {:>10.0} us", full_us);
+    println!("  resume (1 ep)   {:>10.0} us", resume_us);
+    println!("  resume speedup  {:>10.2} x", speedup);
+    println!("  train step      {:>10.0} us", step_us);
+    println!("  ckpt save       {:>10.0} us", save_us);
+    println!("  ckpt load       {:>10.0} us", load_us);
+
+    let json = format!(
+        "{{\n  \"bench\": \"train_loop\",\n  \"model\": \"synthetic resnet-like 3x8x8, native Quant-Trim trainer\",\n  \"epochs\": {EPOCHS},\n  \"steps_per_epoch\": {STEPS},\n  \"train_resume_speedup\": {speedup:.3},\n  \"train_full_us\": {full_us:.0},\n  \"train_resume_us\": {resume_us:.0},\n  \"train_step_us\": {step_us:.1},\n  \"checkpoint_save_us\": {save_us:.1},\n  \"checkpoint_load_us\": {load_us:.1}\n}}\n"
+    );
+    std::fs::write("BENCH_train.json", &json).expect("write BENCH_train.json");
+    println!("wrote BENCH_train.json");
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_kill);
+}

@@ -1,19 +1,121 @@
 //! `.qtckpt` checkpoint reader/writer — binary twin of `python/compile/ckpt.py`.
 //!
 //! Checkpoints hold the full training state as named f32 tensors with
-//! role prefixes: `param/...`, `bn/...`, `qstate/...` (and `opt_m/`, `opt_v/`
-//! once training has started on the Rust side).
+//! role prefixes: `param/...`, `bn/...`, `qstate/...` (and `opt_m/`, `opt_v/`,
+//! `meta/...` once training has started on the Rust side).
+//!
+//! Durability contract (version 2):
+//! - every file ends with an FNV-1a 64 checksum over all preceding bytes, so
+//!   bit-flips are detected at load instead of yielding garbage tensors;
+//! - `save` is atomic: bytes go to a unique temp file in the destination
+//!   directory, are fsynced, then renamed over the target (plus a
+//!   best-effort directory fsync), so a crash mid-save leaves either the
+//!   old file or the new one, never a torn write;
+//! - `from_bytes` is fully bounds-checked and returns `Err` on truncated,
+//!   corrupt, or adversarial input — it never panics. Version-1 files
+//!   (no checksum) are still accepted for backward compatibility.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"QTCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Oldest on-disk version `from_bytes` still accepts (pre-checksum format).
+const LEGACY_VERSION: u32 = 1;
+const MAX_NDIM: usize = 8;
+const CHECKSUM_LEN: usize = 8;
+
+/// FNV-1a 64-bit hash — the trailing checksum of version-2 `.qtckpt` files.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Atomically replace `path` with `bytes`: unique temp file in the same
+/// directory, `write` + `fsync`, `rename`, then best-effort directory fsync.
+/// A crash at any point leaves either the previous file or the new one.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let path = path.as_ref();
+    let dir: PathBuf = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let base = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("qtckpt");
+    let tmp = dir.join(format!(
+        ".{base}.{}.{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let res = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        f.write_all(bytes)?;
+        f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+        drop(f);
+        std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        Ok(())
+    })();
+    if res.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    res?;
+    // Directory fsync makes the rename itself durable; not all platforms
+    // allow opening a directory for sync, so failures are non-fatal.
+    if let Ok(d) = std::fs::File::open(&dir) {
+        d.sync_all().ok();
+    }
+    Ok(())
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .with_context(|| {
+                format!(
+                    "truncated .qtckpt: need {n} bytes at offset {}, have {}",
+                    self.off,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+}
 
 /// An ordered (BTreeMap — sorted keys, matching jax dict flattening order)
 /// collection of named tensors.
@@ -32,48 +134,84 @@ impl Checkpoint {
             .with_context(|| format!("open {:?}", path.as_ref()))?;
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
-        Self::from_bytes(&buf)
+        Self::from_bytes(&buf).with_context(|| format!("load {:?}", path.as_ref()))
     }
 
     pub fn from_bytes(buf: &[u8]) -> Result<Self> {
-        if buf.len() < 12 || &buf[..4] != MAGIC {
+        if buf.len() < 12 {
+            bail!("truncated .qtckpt: {} bytes, need at least 12", buf.len());
+        }
+        if &buf[..4] != MAGIC {
             bail!("bad .qtckpt magic");
         }
-        let version = u32::from_le_bytes(buf[4..8].try_into()?);
-        if version != VERSION {
-            bail!("unsupported .qtckpt version {version}");
+        let version = u32::from_le_bytes(buf[4..8].try_into().expect("len 4"));
+        let body = match version {
+            LEGACY_VERSION => buf,
+            VERSION => {
+                if buf.len() < 12 + CHECKSUM_LEN {
+                    bail!("truncated .qtckpt: missing checksum trailer");
+                }
+                let split = buf.len() - CHECKSUM_LEN;
+                let want = u64::from_le_bytes(buf[split..].try_into().expect("len 8"));
+                let got = fnv1a64(&buf[..split]);
+                if want != got {
+                    bail!("corrupt .qtckpt: checksum mismatch (stored {want:#018x}, computed {got:#018x})");
+                }
+                &buf[..split]
+            }
+            v => bail!("unsupported .qtckpt version {v}"),
+        };
+        let mut cur = Cur { buf: body, off: 8 };
+        let count = cur.u32()? as usize;
+        // Each record is at least 4 bytes (nlen + dtype + ndim); an
+        // adversarial count can't force work beyond the buffer size.
+        if count > body.len() / 4 {
+            bail!("corrupt .qtckpt: tensor count {count} exceeds file capacity");
         }
-        let count = u32::from_le_bytes(buf[8..12].try_into()?) as usize;
-        let mut off = 12;
         let mut tensors = BTreeMap::new();
         for _ in 0..count {
-            let nlen = u16::from_le_bytes(buf[off..off + 2].try_into()?) as usize;
-            off += 2;
-            let name = std::str::from_utf8(&buf[off..off + nlen])?.to_string();
-            off += nlen;
-            let dtype = buf[off];
-            let ndim = buf[off + 1] as usize;
-            off += 2;
+            let nlen = cur.u16()? as usize;
+            let name = std::str::from_utf8(cur.take(nlen)?)
+                .context("corrupt .qtckpt: tensor name is not utf-8")?
+                .to_string();
+            let dtype = cur.u8()?;
             if dtype != 0 {
                 bail!("unsupported dtype {dtype} for {name}");
             }
+            let ndim = cur.u8()? as usize;
+            if ndim > MAX_NDIM {
+                bail!("corrupt .qtckpt: {name} claims {ndim} dims (max {MAX_NDIM})");
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(u32::from_le_bytes(buf[off..off + 4].try_into()?) as usize);
-                off += 4;
+                shape.push(cur.u32()? as usize);
             }
-            let n: usize = shape.iter().product();
+            let n = shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .with_context(|| format!("corrupt .qtckpt: {name} element count overflows"))?;
+            let nbytes = n
+                .checked_mul(4)
+                .with_context(|| format!("corrupt .qtckpt: {name} byte size overflows"))?;
+            let raw = cur.take(nbytes)?;
             let mut data = Vec::with_capacity(n);
-            for i in 0..n {
-                data.push(f32::from_le_bytes(buf[off + 4 * i..off + 4 * i + 4].try_into()?));
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into().expect("len 4")));
             }
-            off += 4 * n;
             tensors.insert(name, Tensor::new(shape, data));
+        }
+        if cur.off != body.len() {
+            bail!(
+                "corrupt .qtckpt: {} trailing bytes after last tensor",
+                body.len() - cur.off
+            );
         }
         Ok(Checkpoint { tensors })
     }
 
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+    /// Serialized version-2 bytes, checksum trailer included. Deterministic:
+    /// identical tensor maps produce identical bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut out: Vec<u8> = Vec::new();
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
@@ -90,10 +228,14 @@ impl Checkpoint {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
-        let mut f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("create {:?}", path.as_ref()))?;
-        f.write_all(&out)?;
-        Ok(())
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Atomic, checksummed save: temp file + fsync + rename.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_atomic(path, &self.to_bytes())
     }
 
     /// All tensors under a `role/` prefix, with the prefix stripped,
@@ -120,11 +262,16 @@ impl Checkpoint {
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
+    fn sample() -> Checkpoint {
         let mut ck = Checkpoint::new();
         ck.insert("param/a.w", Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
         ck.insert("qstate/a.m", Tensor::scalar(0.5));
+        ck
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = sample();
         let dir = std::env::temp_dir().join("qt_ckpt_test.qtckpt");
         ck.save(&dir).unwrap();
         let ck2 = Checkpoint::load(&dir).unwrap();
@@ -144,5 +291,80 @@ mod tests {
         assert_eq!(sec.len(), 2);
         assert_eq!(sec[0].0, "a");
         assert_eq!(sec[1].0, "b");
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        assert_eq!(sample().to_bytes(), sample().to_bytes());
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // Hand-build the pre-checksum version-1 layout.
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        let name = b"param/w";
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.push(0); // dtype f32
+        out.push(1); // ndim
+        out.extend_from_slice(&3u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let ck = Checkpoint::from_bytes(&out).unwrap();
+        assert_eq!(ck.get("param/w").unwrap().data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn every_truncation_errors() {
+        let bytes = sample().to_bytes();
+        for len in 0..bytes.len() {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..len]).is_err(),
+                "truncation to {len} of {} bytes must not parse",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_errors() {
+        let bytes = sample().to_bytes();
+        for i in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[i] ^= 1 << bit;
+                assert!(
+                    Checkpoint::from_bytes(&bad).is_err(),
+                    "bit flip at byte {i} bit {bit} must not parse"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_headers_error_without_panic() {
+        // Absurd tensor count.
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Checkpoint::from_bytes(&out).is_err());
+        // Shape product that overflows usize (v1 so no checksum shields it).
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.push(b'w');
+        out.push(0);
+        out.push(8);
+        for _ in 0..8 {
+            out.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(Checkpoint::from_bytes(&out).is_err());
     }
 }

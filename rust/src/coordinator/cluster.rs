@@ -43,12 +43,12 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::ring::HashRing;
 use super::server::{
-    Breaker, BreakerPolicy, Outcome, Priority, Request, Server, ServerDeployment, ServerStats,
-    SubmitError,
+    Breaker, BreakerPolicy, EngineModel, Outcome, Priority, Request, Server, ServerDeployment,
+    ServerStats, SubmitError,
 };
 use super::wire::{
     decode_tensor, encode_tensor, http_call, read_request, write_response, HttpRequest,
@@ -248,6 +248,19 @@ impl ServerCell {
 
     fn take(&self) -> Option<Server> {
         self.inner.write().unwrap().take()
+    }
+
+    /// Delegate an audit-gated model hot-swap to the wrapped server (read
+    /// lock: swaps don't block concurrent submits on the cell).
+    fn swap_model(
+        &self,
+        deployment: &str,
+        candidate: EngineModel,
+    ) -> Result<crate::engine::verify::AuditReport> {
+        match &*self.inner.read().unwrap() {
+            Some(s) => s.swap_model(deployment, candidate),
+            None => bail!("node is shut down"),
+        }
     }
 }
 
@@ -490,6 +503,17 @@ impl ClusterNode {
     /// Live stats snapshot of the wrapped server (None once shut down).
     pub fn stats_snapshot(&self) -> Option<ServerStats> {
         self.server.stats_snapshot()
+    }
+
+    /// Hot-swap one hosted deployment's model under live traffic, gated on
+    /// a clean audit ([`Server::swap_model`] semantics: an ERROR finding
+    /// refuses the swap and the incumbent keeps serving).
+    pub fn swap_model(
+        &self,
+        deployment: &str,
+        candidate: EngineModel,
+    ) -> Result<crate::engine::verify::AuditReport> {
+        self.server.swap_model(deployment, candidate)
     }
 
     /// Graceful leave + drain: deregister from the router (new traffic

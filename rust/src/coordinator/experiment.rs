@@ -119,8 +119,7 @@ pub fn train_with_validation<'rt>(
                 pruned = true;
             }
         }
-        let mut ep_loss = 0.0;
-        let mut ep_metric = 0.0;
+        let mut acc = crate::coordinator::trainer::EpochAccum::default();
         let total_steps = cfg.epochs * cfg.steps_per_epoch;
         for s in 0..cfg.steps_per_epoch {
             let g = e * cfg.steps_per_epoch + s;
@@ -132,8 +131,7 @@ pub fn train_with_validation<'rt>(
             );
             let b = make(e, s);
             let (l, m) = tr.train_step(&b, lam as f32, lr as f32)?;
-            ep_loss += l as f64;
-            ep_metric += m as f64;
+            acc.push(l, m);
         }
         let (vl, vm) = if !val.is_empty() {
             let (l, a) = tr.evaluate(&val)?;
@@ -141,11 +139,13 @@ pub fn train_with_validation<'rt>(
         } else {
             (None, None)
         };
+        let (loss, metric, nonfinite_steps) = acc.summary();
         let log = EpochLog {
             epoch: e,
             lam,
-            loss: ep_loss / cfg.steps_per_epoch as f64,
-            metric: ep_metric / cfg.steps_per_epoch as f64,
+            loss,
+            metric,
+            nonfinite_steps,
             pruned,
             val_loss: vl,
             val_metric: vm,

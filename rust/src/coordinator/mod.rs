@@ -5,6 +5,7 @@
 
 pub mod cluster;
 pub mod faults;
+pub mod qtrain;
 pub mod ring;
 pub mod schedule;
 pub mod server;
@@ -17,6 +18,7 @@ pub use cluster::{
     RouterStats,
 };
 pub use faults::{Brownout, BrownoutMode, FaultPlan, FaultyModel};
+pub use qtrain::{NativeTrainer, QtConfig, QtEpochLog, QtReport, RunControls};
 pub use ring::{stable_hash, HashRing};
 pub use schedule::{cosine_lr, Curriculum};
 pub use server::{
@@ -25,6 +27,6 @@ pub use server::{
     ServerDeployment, ServerStats, SubmitError, TRANSIENT_MARKER,
 };
 pub use state::{CallExtras, TrainState};
-pub use trainer::{EpochLog, TrainConfig, Trainer};
+pub use trainer::{EpochAccum, EpochLog, TrainConfig, Trainer};
 
 pub mod experiment;

@@ -1,0 +1,1641 @@
+//! Native Quant-Trim training — the paper's loop, closed in pure Rust.
+//!
+//! `coordinator/trainer.rs` drives exported PJRT artifacts; this module is
+//! its artifact-free twin: an f32 forward/backward over QIR CNN graphs
+//! (everything `testutil::synth` emits) with straight-through-estimator
+//! fake quantization on the progressive [`Curriculum`] lambda schedule and
+//! epoch-boundary reverse pruning, porting the semantics of
+//! `python/compile/quant.py`, `train.py`, and `kernels/{fake_quant,
+//! reverse_prune}.py`. Training runs from `cargo test` alone.
+//!
+//! Around the loop sits a robustness supervisor:
+//! - every epoch ends with an atomic, checksummed checkpoint
+//!   ([`Checkpoint::save`]: temp + fsync + rename) plus a resume manifest,
+//!   so a `kill -9` at ANY step resumes to a bit-identical final
+//!   checkpoint (seeded data order + fixed sequential accumulation);
+//! - a non-finite loss or gradient never touches optimizer state: the step
+//!   is refused, the trainer rolls back to the last good epoch boundary,
+//!   and lambda/LR are backed off multiplicatively before retrying;
+//! - a scale-inflation watchdog compiles the in-training weights through a
+//!   real backend each epoch and runs the static plan auditor's interval
+//!   pass; when `SCALE_INFLATION` fires it triggers an early reverse-prune
+//!   — the paper's outlier story, closed-loop.
+//!
+//! Determinism contract: given the same config, data seed, and fault
+//! history, every f32 in `TrainState` is bit-identical across runs,
+//! interruptions included. All reductions run in fixed sequential order
+//! and all state lives in `BTreeMap`s (sorted iteration).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backends::{backend_by_name, CheckpointView, PtqOptions, RangeSource};
+use crate::ckpt::{write_atomic, Checkpoint};
+use crate::data::{epoch_seeds, gen_cls_batch, Batch, ClsSpec};
+use crate::engine::verify::SCALE_INFLATION;
+use crate::metrics::nan_safe_argmax;
+use crate::perfmodel::{ActScaling, Precision};
+use crate::qir::{Graph, Node};
+use crate::tensor::{empirical_quantile, subsample, Tensor};
+
+use super::schedule::{cosine_lr, Curriculum};
+use super::state::TrainState;
+
+// Quantization grid + EMA constants (python/compile/kernels/ref.py).
+const EPS: f32 = 1e-6;
+const QMIN_W: f32 = -128.0;
+const QMAX_W: f32 = 127.0;
+const QMAX_A: f32 = 255.0;
+/// Weight-quantile order statistic (quant.py `p_hi`).
+pub const P_HI: f64 = 0.999;
+/// Reverse-prune tensor-quantile subsample cap (ref.py `S_MAX_W`).
+const S_MAX_W: usize = 100_000;
+
+// AdamW (python/compile/train.py).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+// BatchNorm train mode (python/compile/jax_exec.py; eps matches the
+// engine's inference-side folding).
+const BN_MOM: f32 = 0.1;
+const BN_EPS: f32 = 1e-5;
+
+const MANIFEST_NAME: &str = "MANIFEST";
+const MANIFEST_HEADER: &str = "qtrain-manifest v1";
+
+/// Native training configuration.
+#[derive(Clone, Debug)]
+pub struct QtConfig {
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub batch_size: usize,
+    pub base_lr: f64,
+    pub weight_decay: f32,
+    pub curriculum: Curriculum,
+    /// false = plain f32 baseline (no fake quant, no pruning).
+    pub quant_trim: bool,
+    pub seed: u64,
+    pub data: ClsSpec,
+    /// Abort training after this many non-finite rollbacks.
+    pub max_rollbacks: usize,
+    /// Multiplier applied to both lambda and LR on each rollback.
+    pub backoff: f64,
+    /// Run the per-epoch scale-inflation watchdog (audit interval pass).
+    pub watchdog: bool,
+}
+
+impl QtConfig {
+    /// Small-but-real Quant-Trim run on the tiny synthetic task; the
+    /// curriculum is the paper's CIFAR column compressed to `epochs`.
+    pub fn tiny(epochs: usize, steps_per_epoch: usize) -> Self {
+        QtConfig {
+            epochs,
+            steps_per_epoch,
+            batch_size: 4,
+            base_lr: 3e-3,
+            weight_decay: 0.01,
+            curriculum: Curriculum::cifar().scaled_to(epochs, 100),
+            quant_trim: true,
+            seed: 0xDA7A,
+            data: ClsSpec::tiny(),
+            max_rollbacks: 8,
+            backoff: 0.5,
+            watchdog: true,
+        }
+    }
+
+    fn total_steps(&self) -> usize {
+        self.epochs * self.steps_per_epoch
+    }
+}
+
+/// Per-epoch training log.
+#[derive(Clone, Debug)]
+pub struct QtEpochLog {
+    pub epoch: usize,
+    /// Effective lambda (curriculum value times rollback backoff).
+    pub lam: f64,
+    /// Mean loss over finite steps of the final (successful) epoch attempt.
+    pub loss: f64,
+    /// Mean train accuracy over finite steps.
+    pub acc: f64,
+    /// Steps whose loss/grads were non-finite across all attempts of this
+    /// epoch (each one triggered a rollback).
+    pub nonfinite_steps: usize,
+    /// Scheduled reverse-prune fired at this epoch's start.
+    pub pruned: bool,
+    /// Watchdog-triggered early reverse-prune fired at this epoch's end.
+    pub watchdog_pruned: bool,
+}
+
+/// Result of a completed (or aborted) training run.
+#[derive(Debug)]
+pub struct QtReport {
+    pub logs: Vec<QtEpochLog>,
+    pub rollbacks: usize,
+    pub watchdog_prunes: usize,
+    /// Path of the last epoch's checkpoint (None if aborted before the
+    /// first epoch completed).
+    pub final_checkpoint: Option<PathBuf>,
+    /// True when the run stopped via `RunControls::abort_after_steps`.
+    pub aborted: bool,
+}
+
+/// Test/fault-injection controls for one `train` call. `Default` runs
+/// training straight through.
+#[derive(Default)]
+pub struct RunControls<'a> {
+    /// Called before each step with (epoch, step); returning true poisons
+    /// that step's loss with NaN (simulating a numeric fault).
+    pub fault: Option<&'a mut dyn FnMut(usize, usize) -> bool>,
+    /// Stop abruptly after this many executed steps — no checkpoint, no
+    /// cleanup — simulating `kill -9` mid-epoch.
+    pub abort_after_steps: Option<usize>,
+}
+
+enum StepOutcome {
+    Ok { loss: f32, acc: f32 },
+    NonFinite,
+}
+
+/// Everything one step computes before any state is committed, so a
+/// non-finite result can be discarded without corrupting the trainer.
+pub struct StepEval {
+    pub loss: f32,
+    pub acc: f32,
+    pub grads: BTreeMap<String, Tensor>,
+    pub new_bn: BTreeMap<String, Tensor>,
+    pub new_qstate: BTreeMap<String, Tensor>,
+}
+
+/// Pure-Rust Quant-Trim trainer + robustness supervisor.
+pub struct NativeTrainer {
+    pub graph: Graph,
+    pub state: TrainState,
+    pub cfg: QtConfig,
+    lam_scale: f64,
+    lr_scale: f64,
+    rollbacks: usize,
+    watchdog_prunes: usize,
+    start_epoch: usize,
+    /// In-memory twin of the last on-disk checkpoint (initial state before
+    /// the first epoch completes) — the rollback target.
+    last_good: Option<Box<TrainState>>,
+}
+
+impl NativeTrainer {
+    pub fn new(
+        graph: Graph,
+        params: BTreeMap<String, Tensor>,
+        bn: BTreeMap<String, Tensor>,
+        cfg: QtConfig,
+    ) -> Self {
+        let qstate = if cfg.quant_trim {
+            init_qstate(&graph, &params, P_HI, cfg.curriculum.p_clip)
+        } else {
+            BTreeMap::new()
+        };
+        let mut state = TrainState::default();
+        for (k, t) in &params {
+            state.opt_m.insert(k.clone(), Tensor::zeros(&t.shape));
+            state.opt_v.insert(k.clone(), Tensor::zeros(&t.shape));
+        }
+        state.params = params;
+        state.bn = bn;
+        state.qstate = qstate;
+        NativeTrainer {
+            graph,
+            state,
+            cfg,
+            lam_scale: 1.0,
+            lr_scale: 1.0,
+            rollbacks: 0,
+            watchdog_prunes: 0,
+            start_epoch: 0,
+            last_good: None,
+        }
+    }
+
+    /// Resume from `dir`'s manifest. Returns `None` when no training has
+    /// checkpointed there yet. A corrupt latest checkpoint (detected by the
+    /// file checksum) falls back to the newest earlier epoch that loads.
+    pub fn resume(graph: Graph, cfg: QtConfig, dir: &Path) -> Result<Option<Self>> {
+        let mpath = dir.join(MANIFEST_NAME);
+        if !mpath.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&mpath).with_context(|| format!("read {mpath:?}"))?;
+        let (epoch, file) = parse_manifest(&text)?;
+        let mut candidates = vec![dir.join(&file)];
+        for e in (0..epoch).rev() {
+            candidates.push(dir.join(ckpt_name(e)));
+        }
+        let mut last_err = None;
+        for path in &candidates {
+            match Checkpoint::load(path) {
+                Ok(ck) => {
+                    let state = TrainState::from_checkpoint(&ck);
+                    let meta = |key: &str, default: f32| {
+                        ck.get(key).and_then(|t| t.data.first().copied()).unwrap_or(default)
+                    };
+                    let ck_epoch = meta("meta/epoch", 0.0) as usize;
+                    let mut tr = NativeTrainer {
+                        graph,
+                        state,
+                        cfg,
+                        lam_scale: meta("meta/lam_scale", 1.0) as f64,
+                        lr_scale: meta("meta/lr_scale", 1.0) as f64,
+                        rollbacks: meta("meta/rollbacks", 0.0) as usize,
+                        watchdog_prunes: meta("meta/watchdog_prunes", 0.0) as usize,
+                        start_epoch: ck_epoch + 1,
+                        last_good: None,
+                    };
+                    tr.last_good = Some(Box::new(tr.state.clone()));
+                    return Ok(Some(tr));
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("no checkpoint candidates"))
+            .context(format!("manifest at {mpath:?} points at no loadable checkpoint")))
+    }
+
+    /// Resume from `dir` if a manifest exists there, else start fresh.
+    pub fn resume_or_new(
+        graph: Graph,
+        params: BTreeMap<String, Tensor>,
+        bn: BTreeMap<String, Tensor>,
+        cfg: QtConfig,
+        dir: &Path,
+    ) -> Result<Self> {
+        match Self::resume(graph.clone(), cfg.clone(), dir)? {
+            Some(t) => Ok(t),
+            None => Ok(Self::new(graph, params, bn, cfg)),
+        }
+    }
+
+    pub fn rollbacks(&self) -> usize {
+        self.rollbacks
+    }
+
+    pub fn watchdog_prunes(&self) -> usize {
+        self.watchdog_prunes
+    }
+
+    /// Run (or continue) training, checkpointing into `dir` each epoch.
+    pub fn train(&mut self, dir: &Path, mut controls: RunControls<'_>) -> Result<QtReport> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+        if self.last_good.is_none() {
+            self.last_good = Some(Box::new(self.state.clone()));
+        }
+        let total_steps = self.cfg.total_steps();
+        let warmup = total_steps / 20 + 1;
+        let mut logs: Vec<QtEpochLog> = Vec::new();
+        let mut executed = 0usize;
+        let mut epoch = self.start_epoch;
+        let mut carry_nonfinite = 0usize;
+        let mut final_ckpt = (self.start_epoch > 0).then(|| dir.join(ckpt_name(self.start_epoch - 1)));
+        'epoch: while epoch < self.cfg.epochs {
+            let lam = if self.cfg.quant_trim {
+                self.cfg.curriculum.lam(epoch) * self.lam_scale
+            } else {
+                0.0
+            };
+            let pruned = self.cfg.quant_trim && self.cfg.curriculum.prune_now(epoch);
+            if pruned {
+                reverse_prune(
+                    &self.graph,
+                    &mut self.state,
+                    self.cfg.curriculum.p_clip,
+                    self.cfg.curriculum.beta,
+                );
+            }
+            let seeds = epoch_seeds(self.cfg.seed, epoch, self.cfg.steps_per_epoch);
+            let mut ep_loss = 0f64;
+            let mut ep_acc = 0f64;
+            let mut ok_steps = 0usize;
+            for (step, &seed) in seeds.iter().enumerate() {
+                if let Some(k) = controls.abort_after_steps {
+                    if executed >= k {
+                        return Ok(QtReport {
+                            logs,
+                            rollbacks: self.rollbacks,
+                            watchdog_prunes: self.watchdog_prunes,
+                            final_checkpoint: final_ckpt,
+                            aborted: true,
+                        });
+                    }
+                }
+                let global = epoch * self.cfg.steps_per_epoch + step;
+                let lr = cosine_lr(self.cfg.base_lr, global, total_steps, warmup) * self.lr_scale;
+                let batch = gen_cls_batch(self.cfg.data, self.cfg.batch_size, seed);
+                let poison = controls.fault.as_mut().is_some_and(|f| f(epoch, step));
+                executed += 1;
+                match self.train_step(&batch, lam as f32, lr as f32, poison)? {
+                    StepOutcome::Ok { loss, acc } => {
+                        ep_loss += loss as f64;
+                        ep_acc += acc as f64;
+                        ok_steps += 1;
+                    }
+                    StepOutcome::NonFinite => {
+                        // Refuse the step, restore the last epoch boundary,
+                        // back off lambda and LR, and retry this epoch.
+                        carry_nonfinite += 1;
+                        self.rollbacks += 1;
+                        if self.rollbacks > self.cfg.max_rollbacks {
+                            bail!(
+                                "training diverged: {} non-finite rollbacks (max {})",
+                                self.rollbacks,
+                                self.cfg.max_rollbacks
+                            );
+                        }
+                        let good = self.last_good.as_ref().expect("set at train start");
+                        self.state = (**good).clone();
+                        self.lam_scale *= self.cfg.backoff;
+                        self.lr_scale *= self.cfg.backoff;
+                        continue 'epoch;
+                    }
+                }
+            }
+            let mut watchdog_pruned = false;
+            if self.cfg.watchdog && self.cfg.quant_trim && self.scale_inflation_fires() {
+                reverse_prune(
+                    &self.graph,
+                    &mut self.state,
+                    self.cfg.curriculum.p_clip,
+                    self.cfg.curriculum.beta,
+                );
+                self.watchdog_prunes += 1;
+                watchdog_pruned = true;
+            }
+            let path = self.save_epoch(dir, epoch)?;
+            self.last_good = Some(Box::new(self.state.clone()));
+            final_ckpt = Some(path);
+            logs.push(QtEpochLog {
+                epoch,
+                lam,
+                loss: ep_loss / ok_steps.max(1) as f64,
+                acc: ep_acc / ok_steps.max(1) as f64,
+                nonfinite_steps: carry_nonfinite,
+                pruned,
+                watchdog_pruned,
+            });
+            carry_nonfinite = 0;
+            epoch += 1;
+        }
+        Ok(QtReport {
+            logs,
+            rollbacks: self.rollbacks,
+            watchdog_prunes: self.watchdog_prunes,
+            final_checkpoint: final_ckpt,
+            aborted: false,
+        })
+    }
+
+    /// Held-out evaluation through the real deployment path: the current
+    /// state is compiled to an fp32 `CompiledModel` and run on seeded
+    /// validation batches. Returns (mean loss, top-1 accuracy).
+    pub fn evaluate(&self, batches: usize) -> Result<(f64, f64)> {
+        let model = crate::engine::fp32_model(
+            self.graph.clone(),
+            self.state.params.clone(),
+            self.state.bn.clone(),
+        );
+        let mut loss = 0f64;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for b in 0..batches {
+            let batch =
+                gen_cls_batch(self.cfg.data, self.cfg.batch_size, 0xEA7_0000 + b as u64);
+            let out = model.run(&batch.images)?;
+            let (l, _, _) = softmax_xent(&out[0], &batch.labels);
+            loss += l as f64;
+            let k = out[0].shape[1];
+            for (i, &label) in batch.labels.iter().enumerate() {
+                let row = &out[0].data[i * k..(i + 1) * k];
+                if nan_safe_argmax(row) == Some(label as usize) {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok((loss / batches.max(1) as f64, hits as f64 / total.max(1) as f64))
+    }
+
+    fn train_step(
+        &mut self,
+        batch: &Batch,
+        lam: f32,
+        lr: f32,
+        poison: bool,
+    ) -> Result<StepOutcome> {
+        let ev = self.loss_and_grads(batch, lam)?;
+        let loss = if poison { f32::NAN } else { ev.loss };
+        let finite = loss.is_finite()
+            && ev
+                .grads
+                .values()
+                .all(|g| g.data.iter().all(|v| v.is_finite()));
+        if !finite {
+            return Ok(StepOutcome::NonFinite);
+        }
+        self.adamw(&ev.grads, lr);
+        for (k, t) in ev.new_bn {
+            self.state.bn.insert(k, t);
+        }
+        for (k, t) in ev.new_qstate {
+            self.state.qstate.insert(k, t);
+        }
+        Ok(StepOutcome::Ok { loss, acc: ev.acc })
+    }
+
+    /// One full forward/backward without committing anything: loss, top-1
+    /// accuracy, parameter gradients, and the would-be BN/qstate updates.
+    pub fn loss_and_grads(&self, batch: &Batch, lam: f32) -> Result<StepEval> {
+        let tape = self.forward(&batch.images, lam)?;
+        let out_name = &self.graph.outputs[0];
+        let logits = tape
+            .acts
+            .get(out_name)
+            .with_context(|| format!("forward produced no output {out_name}"))?;
+        let (loss, acc, dlogits) = softmax_xent(logits, &batch.labels);
+        let grads = self.backward(&tape, dlogits)?;
+        Ok(StepEval { loss, acc, grads, new_bn: tape.new_bn, new_qstate: tape.new_qstate })
+    }
+
+    // -- forward ----------------------------------------------------------
+
+    fn forward(&self, x: &Tensor, lam: f32) -> Result<Tape> {
+        let mut tape = Tape::default();
+        let n = x.shape[0];
+        let mu = self.cfg.curriculum.mu as f32;
+        for node in &self.graph.nodes {
+            let out = match node.kind.as_str() {
+                "input" => {
+                    if x.shape[1..] != node.shape[..] {
+                        bail!(
+                            "input shape {:?} does not match graph input {:?}",
+                            &x.shape[1..],
+                            node.shape
+                        );
+                    }
+                    x.clone()
+                }
+                "conv2d" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let w = self.param(node, "w")?;
+                    let b = self.state.params.get(&format!("{}.b", node.name));
+                    let w_eff = if self.cfg.quant_trim {
+                        fake_quant_weight(&node.name, w, lam, mu, &self.state.qstate, &mut tape.new_qstate)
+                    } else {
+                        w.clone()
+                    };
+                    let out = conv2d_fwd(
+                        xin,
+                        &w_eff,
+                        b,
+                        node.attr_usize("stride")?,
+                        node.attr_usize("pad")?,
+                        node.attr_usize("groups")?,
+                        &node.shape,
+                    );
+                    tape.w_eff.insert(node.name.clone(), w_eff);
+                    out
+                }
+                "linear" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let w = self.param(node, "w")?;
+                    let b = self.state.params.get(&format!("{}.b", node.name));
+                    let w_eff = if self.cfg.quant_trim {
+                        fake_quant_weight(&node.name, w, lam, mu, &self.state.qstate, &mut tape.new_qstate)
+                    } else {
+                        w.clone()
+                    };
+                    let out = linear_fwd(xin, &w_eff, b);
+                    tape.w_eff.insert(node.name.clone(), w_eff);
+                    out
+                }
+                "bn" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let gamma = self.param(node, "gamma")?;
+                    let beta = self.param(node, "beta")?;
+                    let (out, mean, inv) = bn_fwd_train(xin, gamma, beta);
+                    // Running stats: new = (1-mom)*old + mom*batch (biased
+                    // batch variance, matching the jax twin).
+                    let var: Vec<f32> = inv
+                        .iter()
+                        .map(|&iv| (1.0 / (iv * iv)) - BN_EPS)
+                        .collect();
+                    for (suffix, batch_v) in [("mean", &mean), ("var", &var)] {
+                        let key = format!("{}.{suffix}", node.name);
+                        let old = self
+                            .state
+                            .bn
+                            .get(&key)
+                            .with_context(|| format!("bn state missing {key}"))?;
+                        let merged: Vec<f32> = old
+                            .data
+                            .iter()
+                            .zip(batch_v.iter())
+                            .map(|(&o, &bv)| (1.0 - BN_MOM) * o + BN_MOM * bv)
+                            .collect();
+                        tape.new_bn.insert(key, Tensor::new(old.shape.clone(), merged));
+                    }
+                    tape.bn_stats.insert(node.name.clone(), (mean, inv));
+                    out
+                }
+                "aq" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    if self.cfg.quant_trim {
+                        fake_quant_act(&node.name, xin, lam, mu, &self.state.qstate, &mut tape.new_qstate)
+                    } else {
+                        xin.clone()
+                    }
+                }
+                "relu" | "relu6" | "hswish" | "hsigmoid" | "silu" | "gelu" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    xin.map(act_fn(&node.kind))
+                }
+                "maxpool" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let (out, idx) = maxpool_fwd(
+                        xin,
+                        node.attr_usize("k")?,
+                        node.attr_usize("stride")?,
+                        node.attr_usize("pad")?,
+                        &node.shape,
+                    );
+                    tape.pool_idx.insert(node.name.clone(), idx);
+                    out
+                }
+                "avgpool" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    avgpool_fwd(
+                        xin,
+                        node.attr_usize("k")?,
+                        node.attr_usize("stride")?,
+                        node.attr_usize("pad")?,
+                        &node.shape,
+                    )
+                }
+                "gap" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    gap_fwd(xin)
+                }
+                "add" => {
+                    let a = taped(&tape.acts, &node.inputs[0])?;
+                    let bt = taped(&tape.acts, &node.inputs[1])?;
+                    if a.shape != bt.shape {
+                        bail!("add {}: shape mismatch {:?} vs {:?}", node.name, a.shape, bt.shape);
+                    }
+                    let data = a.data.iter().zip(bt.data.iter()).map(|(&u, &v)| u + v).collect();
+                    Tensor::new(a.shape.clone(), data)
+                }
+                "mul" => {
+                    let a = taped(&tape.acts, &node.inputs[0])?;
+                    let bt = taped(&tape.acts, &node.inputs[1])?;
+                    mul_fwd(a, bt, &node.name)?
+                }
+                "flatten" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let flat: usize = xin.shape[1..].iter().product();
+                    xin.clone().reshaped(&[n, flat])
+                }
+                other => bail!("native trainer does not support op `{other}` (node {})", node.name),
+            };
+            tape.acts.insert(node.name.clone(), out);
+        }
+        Ok(tape)
+    }
+
+    // -- backward ---------------------------------------------------------
+
+    fn backward(&self, tape: &Tape, dlogits: Tensor) -> Result<BTreeMap<String, Tensor>> {
+        let mut gacts: BTreeMap<String, Tensor> = BTreeMap::new();
+        gacts.insert(self.graph.outputs[0].clone(), dlogits);
+        let mut gparams: BTreeMap<String, Tensor> = BTreeMap::new();
+        // Nodes are topo-ordered, so the reverse pass sees every consumer's
+        // contribution before reaching the producer.
+        for node in self.graph.nodes.iter().rev() {
+            let Some(dy) = gacts.remove(&node.name) else { continue };
+            match node.kind.as_str() {
+                "input" => {}
+                "conv2d" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let w_eff = tape
+                        .w_eff
+                        .get(&node.name)
+                        .with_context(|| format!("no blended weight taped for {}", node.name))?;
+                    let has_bias = self.state.params.contains_key(&format!("{}.b", node.name));
+                    let (dx, dw, db) = conv2d_bwd(
+                        xin,
+                        w_eff,
+                        &dy,
+                        node.attr_usize("stride")?,
+                        node.attr_usize("pad")?,
+                        node.attr_usize("groups")?,
+                    );
+                    // STE: dL/dw equals dL/dw_eff — the fake-quant blend
+                    // backpropagates as identity.
+                    gparams.insert(format!("{}.w", node.name), dw);
+                    if has_bias {
+                        gparams.insert(format!("{}.b", node.name), db);
+                    }
+                    accum(&mut gacts, &node.inputs[0], dx);
+                }
+                "linear" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let w_eff = tape
+                        .w_eff
+                        .get(&node.name)
+                        .with_context(|| format!("no blended weight taped for {}", node.name))?;
+                    let has_bias = self.state.params.contains_key(&format!("{}.b", node.name));
+                    let (dx, dw, db) = linear_bwd(xin, w_eff, &dy);
+                    gparams.insert(format!("{}.w", node.name), dw);
+                    if has_bias {
+                        gparams.insert(format!("{}.b", node.name), db);
+                    }
+                    accum(&mut gacts, &node.inputs[0], dx);
+                }
+                "bn" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let gamma = self.param(node, "gamma")?;
+                    let (mean, inv) = tape
+                        .bn_stats
+                        .get(&node.name)
+                        .with_context(|| format!("no bn stats taped for {}", node.name))?;
+                    let (dx, dgamma, dbeta) = bn_bwd_train(xin, gamma, mean, inv, &dy);
+                    gparams.insert(format!("{}.gamma", node.name), dgamma);
+                    gparams.insert(format!("{}.beta", node.name), dbeta);
+                    accum(&mut gacts, &node.inputs[0], dx);
+                }
+                // Straight-through estimator: the fake-quant blend is
+                // identity for gradients.
+                "aq" => accum(&mut gacts, &node.inputs[0], dy),
+                "relu" | "relu6" | "hswish" | "hsigmoid" | "silu" | "gelu" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let d = act_grad(&node.kind);
+                    let data = xin.data.iter().zip(dy.data.iter()).map(|(&x, &g)| g * d(x)).collect();
+                    accum(&mut gacts, &node.inputs[0], Tensor::new(xin.shape.clone(), data));
+                }
+                "maxpool" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let idx = tape
+                        .pool_idx
+                        .get(&node.name)
+                        .with_context(|| format!("no pool indices taped for {}", node.name))?;
+                    let mut dx = Tensor::zeros(&xin.shape);
+                    for (o, &src) in idx.iter().enumerate() {
+                        dx.data[src] += dy.data[o];
+                    }
+                    accum(&mut gacts, &node.inputs[0], dx);
+                }
+                "avgpool" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let dx = avgpool_bwd(
+                        xin,
+                        &dy,
+                        node.attr_usize("k")?,
+                        node.attr_usize("stride")?,
+                        node.attr_usize("pad")?,
+                    );
+                    accum(&mut gacts, &node.inputs[0], dx);
+                }
+                "gap" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    let (h, w) = (xin.shape[2], xin.shape[3]);
+                    let scale = 1.0 / (h * w) as f32;
+                    let mut dx = Tensor::zeros(&xin.shape);
+                    let (nb, c) = (xin.shape[0], xin.shape[1]);
+                    for ni in 0..nb {
+                        for ci in 0..c {
+                            let g = dy.data[ni * c + ci] * scale;
+                            let base = (ni * c + ci) * h * w;
+                            for i in 0..h * w {
+                                dx.data[base + i] = g;
+                            }
+                        }
+                    }
+                    accum(&mut gacts, &node.inputs[0], dx);
+                }
+                "add" => {
+                    accum(&mut gacts, &node.inputs[0], dy.clone());
+                    accum(&mut gacts, &node.inputs[1], dy);
+                }
+                "mul" => {
+                    let a = taped(&tape.acts, &node.inputs[0])?;
+                    let bt = taped(&tape.acts, &node.inputs[1])?;
+                    let (da, db) = mul_bwd(a, bt, &dy, &node.name)?;
+                    accum(&mut gacts, &node.inputs[0], da);
+                    accum(&mut gacts, &node.inputs[1], db);
+                }
+                "flatten" => {
+                    let xin = taped(&tape.acts, &node.inputs[0])?;
+                    accum(&mut gacts, &node.inputs[0], dy.reshaped(&xin.shape));
+                }
+                other => bail!("native trainer does not support op `{other}` in backward"),
+            }
+        }
+        Ok(gparams)
+    }
+
+    // -- optimizer / supervisor internals ---------------------------------
+
+    /// AdamW exactly as `train.py::_adamw`: bias-corrected moments, decoupled
+    /// weight decay on every parameter, step incremented first.
+    fn adamw(&mut self, grads: &BTreeMap<String, Tensor>, lr: f32) {
+        self.state.step += 1.0;
+        let t = self.state.step;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        let wd = self.cfg.weight_decay;
+        for (k, g) in grads {
+            let Some(p) = self.state.params.get_mut(k) else { continue };
+            let m = self
+                .state
+                .opt_m
+                .entry(k.clone())
+                .or_insert_with(|| Tensor::zeros(&p.shape));
+            let v = self
+                .state
+                .opt_v
+                .entry(k.clone())
+                .or_insert_with(|| Tensor::zeros(&p.shape));
+            for i in 0..p.data.len() {
+                let gi = g.data[i];
+                m.data[i] = ADAM_B1 * m.data[i] + (1.0 - ADAM_B1) * gi;
+                v.data[i] = ADAM_B2 * v.data[i] + (1.0 - ADAM_B2) * gi * gi;
+                let upd = (m.data[i] / bc1) / ((v.data[i] / bc2).sqrt() + ADAM_EPS);
+                p.data[i] -= lr * (upd + wd * p.data[i]);
+            }
+        }
+    }
+
+    /// Compile the in-training weights through a real per-channel backend
+    /// and run the static auditor's interval pass; true when the
+    /// `SCALE_INFLATION` finding fires. Compile failures (e.g. an op a
+    /// backend refuses) are treated as "no signal", never as faults.
+    fn scale_inflation_fires(&self) -> bool {
+        for be_name in ["hardware_b", "hardware_d"] {
+            let Some(be) = backend_by_name(be_name) else { continue };
+            let view = CheckpointView {
+                graph: &self.graph,
+                params: &self.state.params,
+                bn: &self.state.bn,
+                qstate: &self.state.qstate,
+            };
+            let Ok(dep) = be.compile_scaled(
+                view,
+                Precision::Int8,
+                ActScaling::Static,
+                RangeSource::QatScales,
+                &[],
+                PtqOptions::default(),
+            ) else {
+                continue;
+            };
+            let Ok(report) = dep.audit(None) else { continue };
+            return report.findings.iter().any(|f| f.code == SCALE_INFLATION);
+        }
+        false
+    }
+
+    fn save_epoch(&self, dir: &Path, epoch: usize) -> Result<PathBuf> {
+        let mut ck = self.state.to_checkpoint_full();
+        ck.insert("meta/epoch", Tensor::scalar(epoch as f32));
+        ck.insert("meta/lam_scale", Tensor::scalar(self.lam_scale as f32));
+        ck.insert("meta/lr_scale", Tensor::scalar(self.lr_scale as f32));
+        ck.insert("meta/rollbacks", Tensor::scalar(self.rollbacks as f32));
+        ck.insert("meta/watchdog_prunes", Tensor::scalar(self.watchdog_prunes as f32));
+        let name = ckpt_name(epoch);
+        let path = dir.join(&name);
+        ck.save(&path)?;
+        // The manifest is written only after the checkpoint is durable, so
+        // a crash between the two leaves the previous epoch resumable.
+        let manifest = format!("{MANIFEST_HEADER}\nepoch {epoch}\nfile {name}\n");
+        write_atomic(dir.join(MANIFEST_NAME), manifest.as_bytes())?;
+        Ok(path)
+    }
+
+    fn param(&self, node: &Node, suffix: &str) -> Result<&Tensor> {
+        self.state
+            .params
+            .get(&format!("{}.{suffix}", node.name))
+            .with_context(|| format!("missing param {}.{suffix}", node.name))
+    }
+}
+
+fn ckpt_name(epoch: usize) -> String {
+    format!("ckpt_e{epoch:04}.qtckpt")
+}
+
+fn parse_manifest(text: &str) -> Result<(usize, String)> {
+    let mut lines = text.lines();
+    if lines.next().map(str::trim) != Some(MANIFEST_HEADER) {
+        bail!("unrecognized manifest header");
+    }
+    let mut epoch = None;
+    let mut file = None;
+    for line in lines {
+        match line.split_once(' ') {
+            Some(("epoch", v)) => epoch = Some(v.trim().parse::<usize>().context("manifest epoch")?),
+            Some(("file", v)) => file = Some(v.trim().to_string()),
+            _ => {}
+        }
+    }
+    Ok((
+        epoch.context("manifest missing epoch")?,
+        file.context("manifest missing file")?,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// tape
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Tape {
+    /// Node name -> forward activation (batch dim included).
+    acts: BTreeMap<String, Tensor>,
+    /// Weight node name -> blended (fake-quantized) weight used in forward.
+    w_eff: BTreeMap<String, Tensor>,
+    /// BN node name -> (batch mean, 1/sqrt(var+eps)) per channel.
+    bn_stats: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    /// Maxpool node name -> per-output flat argmax index into the input.
+    pool_idx: BTreeMap<String, Vec<usize>>,
+    new_bn: BTreeMap<String, Tensor>,
+    new_qstate: BTreeMap<String, Tensor>,
+}
+
+/// Field-level activation lookup (keeps borrows of the other tape fields
+/// available while an activation reference is live).
+fn taped<'a>(acts: &'a BTreeMap<String, Tensor>, name: &str) -> Result<&'a Tensor> {
+    acts.get(name)
+        .with_context(|| format!("activation {name} not on tape (topo order violated?)"))
+}
+
+fn accum(gacts: &mut BTreeMap<String, Tensor>, name: &str, t: Tensor) {
+    match gacts.get_mut(name) {
+        Some(acc) => {
+            for (a, b) in acc.data.iter_mut().zip(t.data.iter()) {
+                *a += b;
+            }
+        }
+        None => {
+            gacts.insert(name.to_string(), t);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fake quantization (python/compile/quant.py train mode, exact port)
+// ---------------------------------------------------------------------------
+
+/// Per-output-channel symmetric weight fake quant with EMA'd quantile
+/// ranges; the EMA is updated every step and the *updated* value scales this
+/// step (quant.py semantics). Returns the STE blend `w + lam*(wq - w)`.
+fn fake_quant_weight(
+    name: &str,
+    w: &Tensor,
+    lam: f32,
+    mu: f32,
+    qstate: &BTreeMap<String, Tensor>,
+    new_qstate: &mut BTreeMap<String, Tensor>,
+) -> Tensor {
+    let cout = w.shape[0];
+    let row = w.data.len() / cout.max(1);
+    let key = format!("{name}.m");
+    let prev = qstate.get(&key);
+    let mut m_ema = vec![0f32; cout];
+    for oc in 0..cout {
+        let abs: Vec<f32> = w.data[oc * row..(oc + 1) * row].iter().map(|v| v.abs()).collect();
+        let m = empirical_quantile(&abs, P_HI);
+        let p = prev.and_then(|t| t.data.get(oc).copied()).unwrap_or(m);
+        m_ema[oc] = (1.0 - mu) * p + mu * m;
+    }
+    new_qstate.insert(key, Tensor::new(vec![cout], m_ema.clone()));
+    let mut out = Vec::with_capacity(w.data.len());
+    for oc in 0..cout {
+        let s = m_ema[oc].max(EPS) / QMAX_W;
+        for &v in &w.data[oc * row..(oc + 1) * row] {
+            let wq = (v / s).round_ties_even().clamp(QMIN_W, QMAX_W) * s;
+            out.push(v + lam * (wq - v));
+        }
+    }
+    Tensor::new(w.shape.clone(), out)
+}
+
+/// Asymmetric u8 activation fake quant at `aq` nodes: exact batch min/max
+/// (stop-grad), EMA'd into qstate, updated EMA used this step.
+fn fake_quant_act(
+    name: &str,
+    x: &Tensor,
+    lam: f32,
+    mu: f32,
+    qstate: &BTreeMap<String, Tensor>,
+    new_qstate: &mut BTreeMap<String, Tensor>,
+) -> Tensor {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in &x.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scalar = |q: &BTreeMap<String, Tensor>, key: &str, d: f32| {
+        q.get(key).and_then(|t| t.data.first().copied()).unwrap_or(d)
+    };
+    let lo_key = format!("{name}.lo");
+    let hi_key = format!("{name}.hi");
+    let lo_e = (1.0 - mu) * scalar(qstate, &lo_key, lo) + mu * lo;
+    let hi_e = (1.0 - mu) * scalar(qstate, &hi_key, hi) + mu * hi;
+    new_qstate.insert(lo_key, Tensor::scalar(lo_e));
+    new_qstate.insert(hi_key, Tensor::scalar(hi_e));
+    let s = (hi_e - lo_e).max(EPS) / QMAX_A;
+    let z = (-lo_e / s).round_ties_even().clamp(0.0, QMAX_A);
+    let data = x
+        .data
+        .iter()
+        .map(|&v| {
+            let q = ((v / s).round_ties_even() + z).clamp(0.0, QMAX_A);
+            let xq = (q - z) * s;
+            v + lam * (xq - v)
+        })
+        .collect();
+    Tensor::new(x.shape.clone(), data)
+}
+
+/// Initialize Quant-Trim statistics from the float weights, matching
+/// `train.py::init_qstate`: per-output-channel `p_hi` quantile of |w| plus a
+/// scalar `p_clip` tensor quantile (`tau`) for every conv/linear node, and
+/// `(lo, hi) = (0, 6)` priors for every `aq` node.
+pub fn init_qstate(
+    graph: &Graph,
+    params: &BTreeMap<String, Tensor>,
+    p_hi: f64,
+    p_clip: f64,
+) -> BTreeMap<String, Tensor> {
+    let mut q = BTreeMap::new();
+    for node in &graph.nodes {
+        match node.kind.as_str() {
+            "conv2d" | "linear" => {
+                let Some(w) = params.get(&format!("{}.w", node.name)) else { continue };
+                let cout = w.shape[0];
+                let row = w.data.len() / cout.max(1);
+                let m: Vec<f32> = (0..cout)
+                    .map(|oc| {
+                        let abs: Vec<f32> =
+                            w.data[oc * row..(oc + 1) * row].iter().map(|v| v.abs()).collect();
+                        empirical_quantile(&abs, p_hi)
+                    })
+                    .collect();
+                q.insert(format!("{}.m", node.name), Tensor::new(vec![cout], m));
+                q.insert(
+                    format!("{}.tau", node.name),
+                    Tensor::scalar(tensor_quantile_abs(&w.data, p_clip)),
+                );
+            }
+            "aq" => {
+                q.insert(format!("{}.lo", node.name), Tensor::scalar(0.0));
+                q.insert(format!("{}.hi", node.name), Tensor::scalar(6.0));
+            }
+            _ => {}
+        }
+    }
+    q
+}
+
+/// `ref.py::tensor_quantile` of |w|: strided subsample capped at `S_MAX_W`,
+/// then the order-statistic quantile.
+fn tensor_quantile_abs(data: &[f32], p: f64) -> f32 {
+    let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+    let sub = subsample(&abs, S_MAX_W);
+    empirical_quantile(&sub, p)
+}
+
+/// Reverse pruning (`kernels/reverse_prune.py`): for every conv/linear node,
+/// EMA the clip threshold `tau` toward the current `p_clip` quantile of |w|
+/// and clip the weights into `[-tau, tau]` — outliers are pulled back in
+/// rather than the grid stretched to cover them.
+pub fn reverse_prune(graph: &Graph, state: &mut TrainState, p_clip: f64, beta: f64) {
+    let beta = beta as f32;
+    for node in &graph.nodes {
+        if node.kind != "conv2d" && node.kind != "linear" {
+            continue;
+        }
+        let wk = format!("{}.w", node.name);
+        let tk = format!("{}.tau", node.name);
+        let Some(w) = state.params.get_mut(&wk) else { continue };
+        let that = tensor_quantile_abs(&w.data, p_clip);
+        let tau = state
+            .qstate
+            .get(&tk)
+            .and_then(|t| t.data.first().copied())
+            .unwrap_or(that);
+        let tnew = (1.0 - beta) * tau + beta * that;
+        for v in &mut w.data {
+            *v = v.clamp(-tnew, tnew);
+        }
+        state.qstate.insert(tk, Tensor::scalar(tnew));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loss
+// ---------------------------------------------------------------------------
+
+/// Softmax cross-entropy (mean over batch) + top-1 accuracy + dlogits.
+/// NaN-safe: rows whose logits are all NaN count as misses, never panic.
+pub fn softmax_xent(logits: &Tensor, labels: &[i32]) -> (f32, f32, Tensor) {
+    let n = logits.shape[0];
+    let k = logits.shape[1];
+    let mut dl = Tensor::zeros(&logits.shape);
+    let mut loss = 0f32;
+    let mut hits = 0usize;
+    for (i, &label) in labels.iter().enumerate().take(n) {
+        let row = &logits.data[i * k..(i + 1) * k];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let logz = mx + sum.ln();
+        loss += logz - row[label as usize];
+        for j in 0..k {
+            let p = (row[j] - mx).exp() / sum;
+            let onehot = if j == label as usize { 1.0 } else { 0.0 };
+            dl.data[i * k + j] = (p - onehot) / n as f32;
+        }
+        if nan_safe_argmax(row) == Some(label as usize) {
+            hits += 1;
+        }
+    }
+    (loss / n as f32, hits as f32 / n as f32, dl)
+}
+
+// ---------------------------------------------------------------------------
+// op kernels (forward + backward)
+// ---------------------------------------------------------------------------
+
+fn conv2d_fwd(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&Tensor>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    oshape: &[usize],
+) -> Tensor {
+    let (n, cin, ih, iw) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, oh, ow) = (oshape[0], oshape[1], oshape[2]);
+    let cin_g = cin / groups;
+    let cout_g = cout / groups;
+    let (kh, kw) = (w.shape[2], w.shape[3]);
+    let mut out = Tensor::zeros(&[n, cout, oh, ow]);
+    for ni in 0..n {
+        for oc in 0..cout {
+            let base_ic = (oc / cout_g) * cin_g;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = b.map_or(0.0, |t| t.data[oc]);
+                    for ic in 0..cin_g {
+                        let xc = base_ic + ic;
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= ih as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= iw as isize {
+                                    continue;
+                                }
+                                acc += x.data[((ni * cin + xc) * ih + iy as usize) * iw
+                                    + ix as usize]
+                                    * w.data[((oc * cin_g + ic) * kh + ky) * kw + kx];
+                            }
+                        }
+                    }
+                    out.data[((ni * cout + oc) * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn conv2d_bwd(
+    x: &Tensor,
+    w: &Tensor,
+    dy: &Tensor,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let (n, cin, ih, iw) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (cout, oh, ow) = (dy.shape[1], dy.shape[2], dy.shape[3]);
+    let cin_g = cin / groups;
+    let cout_g = cout / groups;
+    let (kh, kw) = (w.shape[2], w.shape[3]);
+    let mut dx = Tensor::zeros(&x.shape);
+    let mut dw = Tensor::zeros(&w.shape);
+    let mut db = Tensor::zeros(&[cout]);
+    for ni in 0..n {
+        for oc in 0..cout {
+            let base_ic = (oc / cout_g) * cin_g;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dy.data[((ni * cout + oc) * oh + oy) * ow + ox];
+                    db.data[oc] += g;
+                    for ic in 0..cin_g {
+                        let xc = base_ic + ic;
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= ih as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= iw as isize {
+                                    continue;
+                                }
+                                let xi = ((ni * cin + xc) * ih + iy as usize) * iw + ix as usize;
+                                let wi = ((oc * cin_g + ic) * kh + ky) * kw + kx;
+                                dx.data[xi] += g * w.data[wi];
+                                dw.data[wi] += g * x.data[xi];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+fn linear_fwd(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Tensor {
+    let (n, din) = (x.shape[0], x.shape[1]);
+    let dout = w.shape[0];
+    let mut out = Tensor::zeros(&[n, dout]);
+    for ni in 0..n {
+        for o in 0..dout {
+            let mut acc = b.map_or(0.0, |t| t.data[o]);
+            for i in 0..din {
+                acc += x.data[ni * din + i] * w.data[o * din + i];
+            }
+            out.data[ni * dout + o] = acc;
+        }
+    }
+    out
+}
+
+fn linear_bwd(x: &Tensor, w: &Tensor, dy: &Tensor) -> (Tensor, Tensor, Tensor) {
+    let (n, din) = (x.shape[0], x.shape[1]);
+    let dout = w.shape[0];
+    let mut dx = Tensor::zeros(&x.shape);
+    let mut dw = Tensor::zeros(&w.shape);
+    let mut db = Tensor::zeros(&[dout]);
+    for ni in 0..n {
+        for o in 0..dout {
+            let g = dy.data[ni * dout + o];
+            db.data[o] += g;
+            for i in 0..din {
+                dx.data[ni * din + i] += g * w.data[o * din + i];
+                dw.data[o * din + i] += g * x.data[ni * din + i];
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+/// Train-mode BN: normalize with the *batch* statistics (biased variance over
+/// N, H, W per channel). Returns (y, batch_mean, 1/sqrt(var+eps)).
+fn bn_fwd_train(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let count = (n * h * w) as f32;
+    let hw = h * w;
+    let mut mean = vec![0f32; c];
+    let mut inv = vec![0f32; c];
+    let mut out = Tensor::zeros(&x.shape);
+    for ci in 0..c {
+        let mut sum = 0f32;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                sum += x.data[base + i];
+            }
+        }
+        let mu = sum / count;
+        let mut var = 0f32;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let d = x.data[base + i] - mu;
+                var += d * d;
+            }
+        }
+        var /= count;
+        let iv = 1.0 / (var + BN_EPS).sqrt();
+        mean[ci] = mu;
+        inv[ci] = iv;
+        let (ga, be) = (gamma.data[ci], beta.data[ci]);
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                out.data[base + i] = ga * (x.data[base + i] - mu) * iv + be;
+            }
+        }
+    }
+    (out, mean, inv)
+}
+
+/// Train-mode BN backward, including the gradient paths through the batch
+/// mean and variance:
+/// `dx = (gamma*inv) * (dy - mean(dy) - xhat * mean(dy*xhat))` per channel.
+fn bn_bwd_train(
+    x: &Tensor,
+    gamma: &Tensor,
+    mean: &[f32],
+    inv: &[f32],
+    dy: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let count = (n * h * w) as f32;
+    let hw = h * w;
+    let mut dx = Tensor::zeros(&x.shape);
+    let mut dgamma = Tensor::zeros(&[c]);
+    let mut dbeta = Tensor::zeros(&[c]);
+    for ci in 0..c {
+        let (mu, iv) = (mean[ci], inv[ci]);
+        let mut sum_dy = 0f32;
+        let mut sum_dy_xhat = 0f32;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let xhat = (x.data[base + i] - mu) * iv;
+                let g = dy.data[base + i];
+                sum_dy += g;
+                sum_dy_xhat += g * xhat;
+            }
+        }
+        dgamma.data[ci] = sum_dy_xhat;
+        dbeta.data[ci] = sum_dy;
+        let mdy = sum_dy / count;
+        let mdyx = sum_dy_xhat / count;
+        let ga_iv = gamma.data[ci] * iv;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let xhat = (x.data[base + i] - mu) * iv;
+                dx.data[base + i] = ga_iv * (dy.data[base + i] - mdy - xhat * mdyx);
+            }
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+fn maxpool_fwd(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oshape: &[usize],
+) -> (Tensor, Vec<usize>) {
+    let (n, c, ih, iw) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (oshape[1], oshape[2]);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let mut idx = vec![0usize; n * c * oh * ow];
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = usize::MAX;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= iw as isize {
+                                continue;
+                            }
+                            let xi = ((ni * c + ci) * ih + iy as usize) * iw + ix as usize;
+                            let v = x.data[xi];
+                            if best_i == usize::MAX || v > best {
+                                best = v;
+                                best_i = xi;
+                            }
+                        }
+                    }
+                    let o = ((ni * c + ci) * oh + oy) * ow + ox;
+                    out.data[o] = best;
+                    idx[o] = best_i;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Average pool matching the jax twin: padded cells contribute 0 to the sum
+/// and the divisor is always `k*k`.
+fn avgpool_fwd(x: &Tensor, k: usize, stride: usize, pad: usize, oshape: &[usize]) -> Tensor {
+    let (n, c, ih, iw) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (oshape[1], oshape[2]);
+    let norm = 1.0 / (k * k) as f32;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut sum = 0f32;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= iw as isize {
+                                continue;
+                            }
+                            sum += x.data[((ni * c + ci) * ih + iy as usize) * iw + ix as usize];
+                        }
+                    }
+                    out.data[((ni * c + ci) * oh + oy) * ow + ox] = sum * norm;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn avgpool_bwd(x: &Tensor, dy: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, c, ih, iw) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (dy.shape[2], dy.shape[3]);
+    let norm = 1.0 / (k * k) as f32;
+    let mut dx = Tensor::zeros(&x.shape);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let g = dy.data[((ni * c + ci) * oh + oy) * ow + ox] * norm;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= iw as isize {
+                                continue;
+                            }
+                            dx.data[((ni * c + ci) * ih + iy as usize) * iw + ix as usize] += g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+fn gap_fwd(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let hw = h * w;
+    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            let mut sum = 0f32;
+            for i in 0..hw {
+                sum += x.data[base + i];
+            }
+            out.data[ni * c + ci] = sum / hw as f32;
+        }
+    }
+    out
+}
+
+/// Elementwise mul with the SE-gate broadcast: either both operands share a
+/// shape, or the second is `(C,1,1)` against the first's `(C,H,W)`.
+fn mul_fwd(a: &Tensor, b: &Tensor, name: &str) -> Result<Tensor> {
+    if a.shape == b.shape {
+        let data = a.data.iter().zip(b.data.iter()).map(|(&u, &v)| u * v).collect();
+        return Ok(Tensor::new(a.shape.clone(), data));
+    }
+    if a.shape.len() == 4 && b.shape.len() == 4 && a.shape[..2] == b.shape[..2] && b.shape[2] == 1 && b.shape[3] == 1 {
+        let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+        let hw = h * w;
+        let mut out = Tensor::zeros(&a.shape);
+        for ni in 0..n {
+            for ci in 0..c {
+                let g = b.data[ni * c + ci];
+                let base = (ni * c + ci) * hw;
+                for i in 0..hw {
+                    out.data[base + i] = a.data[base + i] * g;
+                }
+            }
+        }
+        return Ok(out);
+    }
+    bail!("mul {name}: unsupported broadcast {:?} x {:?}", a.shape, b.shape)
+}
+
+fn mul_bwd(a: &Tensor, b: &Tensor, dy: &Tensor, name: &str) -> Result<(Tensor, Tensor)> {
+    if a.shape == b.shape {
+        let da = dy.data.iter().zip(b.data.iter()).map(|(&g, &v)| g * v).collect();
+        let db = dy.data.iter().zip(a.data.iter()).map(|(&g, &v)| g * v).collect();
+        return Ok((Tensor::new(a.shape.clone(), da), Tensor::new(b.shape.clone(), db)));
+    }
+    if a.shape.len() == 4 && b.shape.len() == 4 && a.shape[..2] == b.shape[..2] && b.shape[2] == 1 && b.shape[3] == 1 {
+        let (n, c, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+        let hw = h * w;
+        let mut da = Tensor::zeros(&a.shape);
+        let mut db = Tensor::zeros(&b.shape);
+        for ni in 0..n {
+            for ci in 0..c {
+                let g = b.data[ni * c + ci];
+                let base = (ni * c + ci) * hw;
+                let mut acc = 0f32;
+                for i in 0..hw {
+                    da.data[base + i] = dy.data[base + i] * g;
+                    acc += dy.data[base + i] * a.data[base + i];
+                }
+                db.data[ni * c + ci] = acc;
+            }
+        }
+        return Ok((da, db));
+    }
+    bail!("mul {name}: unsupported broadcast {:?} x {:?} in backward", a.shape, b.shape)
+}
+
+// Activation functions + derivatives (formulas match python/compile/jax_exec.py).
+
+fn act_fn(kind: &str) -> fn(f32) -> f32 {
+    match kind {
+        "relu" => |x| x.max(0.0),
+        "relu6" => |x| x.clamp(0.0, 6.0),
+        "hswish" => |x| x * (x + 3.0).clamp(0.0, 6.0) / 6.0,
+        "hsigmoid" => |x| (x + 3.0).clamp(0.0, 6.0) / 6.0,
+        "silu" => |x| x / (1.0 + (-x).exp()),
+        "gelu" => |x| {
+            let c = 0.797_884_56_f32; // sqrt(2/pi)
+            0.5 * x * (1.0 + (c * (x + 0.044_715 * x * x * x)).tanh())
+        },
+        _ => unreachable!("act_fn called for non-activation kind"),
+    }
+}
+
+fn act_grad(kind: &str) -> fn(f32) -> f32 {
+    match kind {
+        "relu" => |x| if x > 0.0 { 1.0 } else { 0.0 },
+        "relu6" => |x| if x > 0.0 && x < 6.0 { 1.0 } else { 0.0 },
+        "hswish" => |x| {
+            if x <= -3.0 {
+                0.0
+            } else if x < 3.0 {
+                (2.0 * x + 3.0) / 6.0
+            } else {
+                1.0
+            }
+        },
+        "hsigmoid" => |x| if x > -3.0 && x < 3.0 { 1.0 / 6.0 } else { 0.0 },
+        "silu" => |x| {
+            let s = 1.0 / (1.0 + (-x).exp());
+            s * (1.0 + x * (1.0 - s))
+        },
+        "gelu" => |x| {
+            let c = 0.797_884_56_f32;
+            let u = c * (x + 0.044_715 * x * x * x);
+            let t = u.tanh();
+            0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * c * (1.0 + 3.0 * 0.044_715 * x * x)
+        },
+        _ => unreachable!("act_grad called for non-activation kind"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_xent_uniform_logits_and_grad_rows_sum_to_zero() {
+        let n = 3;
+        let k = 10;
+        let logits = Tensor::zeros(&[n, k]);
+        let labels = [0i32, 3, 7];
+        let (loss, _, dl) = softmax_xent(&logits, &labels);
+        assert!((loss - (k as f32).ln()).abs() < 1e-5, "uniform logits -> ln(k), got {loss}");
+        for i in 0..n {
+            let row_sum: f32 = dl.data[i * k..(i + 1) * k].iter().sum();
+            assert!(row_sum.abs() < 1e-6, "softmax grad row must sum to zero, got {row_sum}");
+            // the label entry carries (p - 1)/n, every other entry p/n > 0
+            assert!(dl.data[i * k + labels[i] as usize] < 0.0);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_confident_correct_logits_have_low_loss_full_acc() {
+        let mut logits = Tensor::zeros(&[2, 4]);
+        logits.data[0] = 10.0; // sample 0 -> class 0
+        logits.data[4 + 2] = 10.0; // sample 1 -> class 2
+        let (loss, acc, _) = softmax_xent(&logits, &[0, 2]);
+        assert!(loss < 1e-3);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_rejection() {
+        let name = ckpt_name(7);
+        assert_eq!(name, "ckpt_e0007.qtckpt");
+        let text = format!("{MANIFEST_HEADER}\nepoch 7\nfile {name}\n");
+        let (epoch, file) = parse_manifest(&text).expect("well-formed manifest parses");
+        assert_eq!(epoch, 7);
+        assert_eq!(file, name);
+        assert!(parse_manifest("not a manifest\nepoch 1\nfile x\n").is_err());
+        assert!(parse_manifest(&format!("{MANIFEST_HEADER}\nfile only.qtckpt\n")).is_err());
+        assert!(parse_manifest(&format!("{MANIFEST_HEADER}\nepoch 3\n")).is_err());
+    }
+
+    #[test]
+    fn init_qstate_covers_every_quantized_node() {
+        let sm = crate::testutil::synth::resnet_like(8, 8);
+        let q = init_qstate(&sm.graph, &sm.params, P_HI, 0.9);
+        for node in &sm.graph.nodes {
+            match node.kind.as_str() {
+                "conv2d" | "linear" => {
+                    let m = q.get(&format!("{}.m", node.name)).expect("per-channel m");
+                    assert_eq!(m.len(), sm.params[&format!("{}.w", node.name)].shape[0]);
+                    assert!(m.data.iter().all(|v| *v > 0.0 && v.is_finite()));
+                    assert!(q.contains_key(&format!("{}.tau", node.name)));
+                }
+                "aq" => {
+                    assert!(q.contains_key(&format!("{}.lo", node.name)));
+                    assert!(q.contains_key(&format!("{}.hi", node.name)));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn reverse_prune_clamps_outliers_to_tau() {
+        let sm = crate::testutil::synth::resnet_like(8, 8);
+        let mut state = TrainState {
+            params: sm.params.clone(),
+            qstate: init_qstate(&sm.graph, &sm.params, P_HI, 0.9),
+            ..Default::default()
+        };
+        let w = state.params.get_mut("c2.w").unwrap();
+        w.data[0] = 50.0; // plant an outlier far past any weight quantile
+        reverse_prune(&sm.graph, &mut state, 0.9, 0.5);
+        let tau = state.qstate["c2.tau"].data[0];
+        assert!(tau.is_finite() && tau > 0.0);
+        let w = &state.params["c2.w"];
+        let max = w.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!(max <= tau + 1e-6, "weights must be clipped into [-tau, tau]");
+        assert!(max < 50.0, "the planted outlier must be pulled back in");
+    }
+
+    #[test]
+    fn fake_quant_weight_is_identity_at_lambda_zero_and_on_grid_at_one() {
+        let w = Tensor::new(vec![2, 4], vec![0.5, -0.25, 0.1, 0.9, -1.5, 0.7, 0.0, 0.3]);
+        let q = BTreeMap::new();
+        let mut nq = BTreeMap::new();
+        let id = fake_quant_weight("t", &w, 0.0, 1e-2, &q, &mut nq);
+        assert_eq!(id.data, w.data, "lambda 0 must pass weights through untouched");
+        let mut nq2 = BTreeMap::new();
+        let fq = fake_quant_weight("t", &w, 1.0, 1e-2, &q, &mut nq2);
+        let m = &nq2["t.m"];
+        for oc in 0..2 {
+            let s = m.data[oc].max(EPS) / QMAX_W;
+            for &v in &fq.data[oc * 4..(oc + 1) * 4] {
+                let steps = v / s;
+                assert!(
+                    (steps - steps.round()).abs() < 1e-3,
+                    "lambda 1 output must land on the quant grid (got {v}, scale {s})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fake_quant_act_clamps_to_u8_grid_at_lambda_one() {
+        let x = Tensor::new(vec![1, 4], vec![-2.0, 0.0, 3.0, 9.0]);
+        let q = BTreeMap::new();
+        let mut nq = BTreeMap::new();
+        let out = fake_quant_act("a", &x, 1.0, 1.0, &q, &mut nq);
+        let lo = nq["a.lo"].data[0];
+        let hi = nq["a.hi"].data[0];
+        assert_eq!((lo, hi), (-2.0, 9.0), "mu=1 EMA adopts the batch range");
+        for &v in &out.data {
+            assert!(v >= lo - 0.1 && v <= hi + 0.1, "quantized activation escapes the range: {v}");
+        }
+    }
+}

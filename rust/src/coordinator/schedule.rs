@@ -170,4 +170,95 @@ mod tests {
         assert!((cosine_lr(base, 10, 100, 10) - base).abs() < 1e-9);
         assert!(cosine_lr(base, 99, 100, 10) < base * 0.01);
     }
+
+    /// Random curriculum with valid shape: e_w < e_f, horizon/prune_every
+    /// >= 1, lam_max in (0, 1].
+    fn random_curriculum(rng: &mut crate::testutil::Rng) -> Curriculum {
+        let e_w = rng.below(30);
+        Curriculum {
+            e_w,
+            e_f: e_w + 1 + rng.below(60),
+            horizon: 1 + rng.below(30),
+            lam_max: 0.05 + 0.95 * f64::from(rng.uniform()),
+            p_clip: 0.9,
+            prune_every: 1 + rng.below(10),
+            beta: 0.5,
+            mu: 1e-2,
+        }
+    }
+
+    /// PROPERTY (satellite): lambda is monotone non-decreasing and stays in
+    /// [0, lam_max] for every valid curriculum, not just the paper presets.
+    #[test]
+    fn prop_lambda_monotone_and_bounded() {
+        crate::testutil::prop_check(
+            "lam monotone+bounded",
+            200,
+            |rng| random_curriculum(rng),
+            |c| {
+                let mut prev = 0.0f64;
+                for t in 0..(c.e_f + c.horizon + 20) {
+                    let v = c.lam(t);
+                    if v < prev || !(0.0..=c.lam_max).contains(&v) {
+                        return false;
+                    }
+                    prev = v;
+                }
+                true
+            },
+        );
+    }
+
+    /// PROPERTY (satellite): prune_now fires exactly on {e_w, e_w+K,
+    /// e_w+2K, ...} and never before warmup.
+    #[test]
+    fn prop_prune_fires_exactly_configured_epochs() {
+        crate::testutil::prop_check(
+            "prune epochs exact",
+            200,
+            |rng| random_curriculum(rng),
+            |c| {
+                (0..(c.e_f + 3 * c.prune_every)).all(|t| {
+                    let expected = t >= c.e_w && (t - c.e_w) % c.prune_every == 0;
+                    c.prune_now(t) == expected
+                })
+            },
+        );
+    }
+
+    /// PROPERTY (satellite): cosine_lr is never negative and never exceeds
+    /// base_lr, across warmup edge cases (0 warmup, warmup == total,
+    /// warmup > total, 1-step schedules).
+    #[test]
+    fn prop_cosine_lr_bounded() {
+        crate::testutil::prop_check(
+            "cosine_lr in [0, base]",
+            300,
+            |rng| {
+                let total = 1 + rng.below(400);
+                // deliberately includes warmup == 0, == total, and > total
+                let warmup = rng.below(total + 3);
+                let base = 10f64.powf(-4.0 + 3.0 * f64::from(rng.uniform()));
+                (base, total, warmup)
+            },
+            |&(base, total, warmup)| {
+                (0..total + 5).all(|s| {
+                    let lr = cosine_lr(base, s, total, warmup);
+                    lr >= 0.0 && lr <= base + 1e-15
+                })
+            },
+        );
+    }
+
+    /// Warmup edge cases pinned exactly: zero-warmup starts at base_lr;
+    /// the last warmup step reaches base_lr exactly; a one-step schedule
+    /// never divides by zero.
+    #[test]
+    fn cosine_lr_warmup_edges() {
+        let base = 1e-3;
+        assert!((cosine_lr(base, 0, 100, 0) - base).abs() < 1e-15);
+        assert!((cosine_lr(base, 9, 100, 10) - base).abs() < 1e-15);
+        let lr = cosine_lr(base, 0, 1, 1);
+        assert!(lr > 0.0 && lr <= base);
+    }
 }

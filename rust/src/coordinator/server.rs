@@ -63,7 +63,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
@@ -367,6 +367,9 @@ pub struct ServerStats {
     pub router_panics: usize,
     /// Served responses that finished past their request deadline.
     pub slo_misses: usize,
+    /// Audit-gated checkpoint hot-swaps applied via [`Server::swap_model`]
+    /// (refused candidates don't count).
+    pub model_swaps: usize,
     pub batches: usize,
     pub mean_batch: f64,
     pub p50_ms: f64,
@@ -415,6 +418,7 @@ impl ServerStats {
             workers_restarted,
             router_panics,
             slo_misses,
+            model_swaps,
             batches,
             mean_batch,
             p50_ms,
@@ -435,6 +439,7 @@ impl ServerStats {
             ("workers_restarted", *workers_restarted as f64),
             ("router_panics", *router_panics as f64),
             ("slo_misses", *slo_misses as f64),
+            ("model_swaps", *model_swaps as f64),
             ("batches", *batches as f64),
             ("mean_batch", *mean_batch),
             ("p50_ms", *p50_ms),
@@ -698,13 +703,30 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
-struct DeployEntry {
+/// The hot-swappable part of a deployment: the model plus everything derived
+/// from it. Swapped atomically under the entry's `RwLock` by
+/// [`Server::swap_model`]; the router and workers take short read locks and
+/// clone the `Arc` out, so in-flight batches finish on the plan they started
+/// with while new submissions route to the replacement.
+struct ModelSlot {
     model: Arc<dyn BatchModel>,
     /// Effective batch bound: min(policy.max_batch, model.max_batch()).
     max_batch: usize,
     input_shape: Option<Vec<usize>>,
+}
+
+struct DeployEntry {
+    slot: RwLock<ModelSlot>,
     breaker: Breaker,
     fallbacks: Vec<String>,
+}
+
+impl DeployEntry {
+    /// Snapshot the current serving model (short read lock; never held
+    /// across model execution).
+    fn model(&self) -> Arc<dyn BatchModel> {
+        self.slot.read().unwrap().model.clone()
+    }
 }
 
 struct Deployments {
@@ -772,6 +794,7 @@ struct SharedStats {
     slo_misses: AtomicUsize,
     batches: AtomicUsize,
     batched_requests: AtomicUsize,
+    model_swaps: AtomicUsize,
     latencies: Mutex<LatencyReservoir>,
 }
 
@@ -804,6 +827,7 @@ impl SharedStats {
             workers_restarted: self.workers_restarted.load(ld),
             router_panics: self.router_panics.load(ld),
             slo_misses: self.slo_misses.load(ld),
+            model_swaps: self.model_swaps.load(ld),
             batches,
             mean_batch: if batches == 0 {
                 0.0
@@ -832,6 +856,12 @@ pub struct Server {
     /// always joins the current generation (loop-until-empty).
     workers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
     stats: Arc<SharedStats>,
+    /// Deployment table shared with the router and workers — kept here so
+    /// [`Server::swap_model`] can hot-swap a slot under live traffic.
+    deps: Arc<Deployments>,
+    /// `cfg.policy.max_batch` at start time; a swapped-in model recomputes
+    /// its effective batch bound against this.
+    policy_max_batch: usize,
     shed_watermark: Option<usize>,
     started: Instant,
 }
@@ -863,11 +893,13 @@ impl Server {
                 );
             }
             let entry = DeployEntry {
-                max_batch: cfg.policy.max_batch.min(model.max_batch()),
-                input_shape: model.input_shape(),
+                slot: RwLock::new(ModelSlot {
+                    max_batch: cfg.policy.max_batch.min(model.max_batch()),
+                    input_shape: model.input_shape(),
+                    model,
+                }),
                 breaker: Breaker::new(cfg.breaker),
                 fallbacks,
-                model,
             };
             if map.insert(name.clone(), entry).is_some() {
                 bail!("duplicate deployment name {name:?}");
@@ -953,9 +985,70 @@ impl Server {
             router: Some(router),
             workers: registry,
             stats,
+            deps,
+            policy_max_batch: cfg.policy.max_batch,
             shed_watermark: cfg.shed_watermark,
             started: Instant::now(),
         })
+    }
+
+    /// Audit-gated zero-downtime checkpoint hot-swap.
+    ///
+    /// The candidate's compiled plan is audited first
+    /// ([`crate::engine::CompiledModel::audit`]); any ERROR-severity finding
+    /// refuses the swap with the report in the error and the incumbent
+    /// keeps serving untouched. On success the deployment's model slot is
+    /// replaced atomically: batches already executing (workers clone the
+    /// `Arc` out before running) complete on the old plan, while every
+    /// subsequent batch routes to the new one — no accepted request is
+    /// dropped either way. A candidate whose statically-declared input
+    /// shape differs from the incumbent's is also refused, since requests
+    /// validated against the old shape could otherwise land on a model that
+    /// can't take them.
+    ///
+    /// Returns the (error-free) audit report of the installed candidate.
+    pub fn swap_model(
+        &self,
+        deployment: &str,
+        candidate: EngineModel,
+    ) -> Result<crate::engine::verify::AuditReport> {
+        let entry = self
+            .deps
+            .map
+            .get(deployment)
+            .ok_or_else(|| anyhow!("swap_model: unknown deployment {deployment:?}"))?;
+        ensure!(candidate.batch >= 1, "swap_model: candidate max_batch must be >= 1");
+        let report = candidate.model.audit(None)?;
+        if report.has_errors() {
+            let errs: Vec<String> = report
+                .findings
+                .iter()
+                .filter(|f| f.severity == crate::engine::verify::Severity::Error)
+                .map(|f| format!("{} @ {}: {}", f.code, f.node, f.message))
+                .collect();
+            bail!(
+                "swap refused for {deployment:?}: candidate audit has {} ERROR finding(s): {}",
+                errs.len(),
+                errs.join("; ")
+            );
+        }
+        let new_shape = candidate.input_shape();
+        let new_slot = ModelSlot {
+            max_batch: self.policy_max_batch.min(candidate.batch),
+            input_shape: new_shape.clone(),
+            model: Arc::new(candidate),
+        };
+        let mut slot = entry.slot.write().unwrap();
+        if let (Some(old), Some(new)) = (&slot.input_shape, &new_shape) {
+            ensure!(
+                old == new,
+                "swap refused for {deployment:?}: input shape changes {old:?} -> {new:?}"
+            );
+        }
+        *slot = new_slot;
+        drop(slot);
+        self.stats.bump(&self.stats.model_swaps);
+        Ok(report)
     }
 
     /// Single-deployment convenience (the deployment is named `"default"`).
@@ -1167,9 +1260,15 @@ fn route_request(
             }
         }
     };
+    // snapshot the swappable slot once per request: shape screening and the
+    // batch bound must agree on ONE model generation even mid-hot-swap
+    let (input_shape, max_batch) = {
+        let slot = dep.slot.read().unwrap();
+        (slot.input_shape.clone(), slot.max_batch)
+    };
     // shape screening: a statically declared input shape wins; otherwise a
     // request must at least match the batch it would join
-    if let Some(expected) = &dep.input_shape {
+    if let Some(expected) = &input_shape {
         if &req.image.shape != expected {
             let msg = format!(
                 "deployment {name}: request shape {:?} != expected input shape {expected:?}",
@@ -1201,7 +1300,7 @@ fn route_request(
         entry.deadline = entry.deadline.min(target);
     }
     entry.requests.push(req);
-    if entry.requests.len() >= dep.max_batch {
+    if entry.requests.len() >= max_batch {
         let batch = pending.remove(&name).expect("pending batch just filled");
         let _ = work.push(WorkBatch { deployment: name, requests: batch.requests });
     }
@@ -1360,11 +1459,15 @@ fn run_one_batch(ctx: &WorkerCtx, batch: WorkBatch) -> BatchExit {
     let mut attempt: u32 = 0;
     loop {
         let exec_start = Instant::now();
+        // Clone the model Arc out of the swappable slot BEFORE executing: a
+        // concurrent `swap_model` replaces the slot for future batches while
+        // this one finishes on the plan it started with.
+        let model = serving.model();
         // Containment boundary: a panicking model (or a kernel-chunk panic
         // re-raised by engine::pool) becomes an error response, not a dead
         // worker with abandoned reply channels.
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            serving.model.run_batch(&images)
+            model.run_batch(&images)
         }));
         let done = Instant::now();
         match run {

@@ -26,7 +26,11 @@ pub struct TrainState {
 }
 
 impl TrainState {
-    /// Initialize from an exported `.init.qtckpt` (opt moments start at 0).
+    /// Initialize from a `.qtckpt`. Optimizer moments and the step counter
+    /// are restored when the checkpoint carries `opt_m/` / `opt_v/` /
+    /// `meta/step` entries (a mid-training checkpoint from
+    /// [`TrainState::to_checkpoint_full`]); otherwise they start at zero,
+    /// matching an exported `.init.qtckpt`.
     pub fn from_checkpoint(ck: &Checkpoint) -> Self {
         let mut s = TrainState::default();
         for (k, t) in ck.section("param") {
@@ -40,9 +44,21 @@ impl TrainState {
         for (k, t) in ck.section("qstate") {
             s.qstate.insert(k, t.clone());
         }
+        for (k, t) in ck.section("opt_m") {
+            s.opt_m.insert(k, t.clone());
+        }
+        for (k, t) in ck.section("opt_v") {
+            s.opt_v.insert(k, t.clone());
+        }
+        if let Some(t) = ck.get("meta/step") {
+            if let Some(&v) = t.data.first() {
+                s.step = v;
+            }
+        }
         s
     }
 
+    /// Deployment-facing checkpoint: params, BN state, and quant stats only.
     pub fn to_checkpoint(&self) -> Checkpoint {
         let mut ck = Checkpoint::new();
         for (k, t) in &self.params {
@@ -54,6 +70,23 @@ impl TrainState {
         for (k, t) in &self.qstate {
             ck.insert(format!("qstate/{k}"), t.clone());
         }
+        ck
+    }
+
+    /// Resume-grade checkpoint: everything in [`to_checkpoint`] plus AdamW
+    /// moments and the step counter, so a reload continues training
+    /// bit-identically instead of restarting the optimizer cold.
+    ///
+    /// [`to_checkpoint`]: TrainState::to_checkpoint
+    pub fn to_checkpoint_full(&self) -> Checkpoint {
+        let mut ck = self.to_checkpoint();
+        for (k, t) in &self.opt_m {
+            ck.insert(format!("opt_m/{k}"), t.clone());
+        }
+        for (k, t) in &self.opt_v {
+            ck.insert(format!("opt_v/{k}"), t.clone());
+        }
+        ck.insert("meta/step", Tensor::scalar(self.step));
         ck
     }
 

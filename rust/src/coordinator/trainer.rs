@@ -16,11 +16,48 @@ use crate::tensor::Tensor;
 pub struct EpochLog {
     pub epoch: usize,
     pub lam: f64,
+    /// Mean loss over the epoch's *finite* steps (see `nonfinite_steps`).
     pub loss: f64,
+    /// Mean metric over the epoch's *finite* steps.
     pub metric: f64,
+    /// Steps whose loss or metric came back non-finite. They are excluded
+    /// from the means instead of silently poisoning them.
+    pub nonfinite_steps: usize,
     pub pruned: bool,
     pub val_loss: Option<f64>,
     pub val_metric: Option<f64>,
+}
+
+/// Accumulates per-step (loss, metric) pairs into epoch means, excluding
+/// non-finite steps rather than letting one NaN absorb the whole average.
+#[derive(Default)]
+pub struct EpochAccum {
+    loss: f64,
+    metric: f64,
+    finite: usize,
+    nonfinite: usize,
+}
+
+impl EpochAccum {
+    pub fn push(&mut self, loss: f32, metric: f32) {
+        if loss.is_finite() && metric.is_finite() {
+            self.loss += loss as f64;
+            self.metric += metric as f64;
+            self.finite += 1;
+        } else {
+            self.nonfinite += 1;
+        }
+    }
+
+    /// (mean loss, mean metric, nonfinite step count). An epoch with zero
+    /// finite steps reports NaN means — visible, not silently zero.
+    pub fn summary(&self) -> (f64, f64, usize) {
+        if self.finite == 0 {
+            (f64::NAN, f64::NAN, self.nonfinite)
+        } else {
+            (self.loss / self.finite as f64, self.metric / self.finite as f64, self.nonfinite)
+        }
+    }
 }
 
 /// Training configuration for a run.
@@ -121,21 +158,21 @@ impl<'rt> Trainer<'rt> {
                     pruned = true;
                 }
             }
-            let mut ep_loss = 0.0f64;
-            let mut ep_metric = 0.0f64;
+            let mut acc = EpochAccum::default();
             for s in 0..self.cfg.steps_per_epoch {
                 let global = epoch * self.cfg.steps_per_epoch + s;
                 let lr = cosine_lr(self.cfg.base_lr, global, total_steps, total_steps / 20 + 1);
                 let batch = make_batch(epoch, s);
                 let (loss, metric) = self.train_step(&batch, lam as f32, lr as f32)?;
-                ep_loss += loss as f64;
-                ep_metric += metric as f64;
+                acc.push(loss, metric);
             }
+            let (loss, metric, nonfinite_steps) = acc.summary();
             let log = EpochLog {
                 epoch,
                 lam,
-                loss: ep_loss / self.cfg.steps_per_epoch as f64,
-                metric: ep_metric / self.cfg.steps_per_epoch as f64,
+                loss,
+                metric,
+                nonfinite_steps,
                 pruned,
                 val_loss: None,
                 val_metric: None,
@@ -227,18 +264,48 @@ impl<'rt> Trainer<'rt> {
                 let y = b.labels[i] as usize;
                 let p = crate::metrics::softmax_row(row);
                 loss -= (p[y].max(1e-12)).ln() as f64;
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                if pred == y {
+                // NaN logits must degrade to a miss, not a panic: an
+                // all-NaN row has no argmax and counts as wrong.
+                if crate::metrics::nan_safe_argmax(row) == Some(y) {
                     correct += 1;
                 }
                 total += 1;
             }
         }
         Ok((loss / total as f64, correct as f64 / total as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::EpochAccum;
+
+    #[test]
+    fn epoch_accum_excludes_nonfinite_steps_from_means() {
+        let mut acc = EpochAccum::default();
+        acc.push(2.0, 0.5);
+        acc.push(f32::NAN, 0.5);
+        acc.push(4.0, 1.0);
+        acc.push(1.0, f32::INFINITY);
+        let (loss, metric, bad) = acc.summary();
+        assert_eq!(bad, 2);
+        assert!((loss - 3.0).abs() < 1e-12);
+        assert!((metric - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epoch_accum_all_nonfinite_reports_nan_not_zero() {
+        let mut acc = EpochAccum::default();
+        acc.push(f32::NAN, f32::NAN);
+        let (loss, metric, bad) = acc.summary();
+        assert_eq!(bad, 1);
+        assert!(loss.is_nan() && metric.is_nan());
+    }
+
+    #[test]
+    fn epoch_accum_empty_epoch_is_visible() {
+        let (loss, _, bad) = EpochAccum::default().summary();
+        assert_eq!(bad, 0);
+        assert!(loss.is_nan());
     }
 }

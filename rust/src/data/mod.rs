@@ -36,6 +36,11 @@ impl ClsSpec {
     pub fn cifar10() -> Self {
         ClsSpec { classes: 10, image: 32, outlier_p: 0.002 }
     }
+    /// Smallest spec the synth CNNs accept (8x8 images) — keeps native
+    /// training fast enough for debug-mode `cargo test`.
+    pub fn tiny() -> Self {
+        ClsSpec { classes: 10, image: 8, outlier_p: 0.002 }
+    }
 }
 
 /// Deterministic class "style" parameters derived from the class id.

@@ -25,6 +25,24 @@ pub fn topk_accuracy(logits: &Tensor, labels: &[i32]) -> (f64, f64) {
     (top1 as f64 / n as f64, top5 as f64 / n as f64)
 }
 
+/// NaN-safe argmax over one logit row: NaN entries are skipped, ties go to
+/// the first maximum, and a row with no finite-comparable entry (empty or
+/// all-NaN) returns `None` so callers can count it as a miss instead of
+/// panicking on `partial_cmp`.
+pub fn nan_safe_argmax(row: &[f32]) -> Option<usize> {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v <= bv => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 pub fn softmax_row(row: &[f32]) -> Vec<f32> {
     let mx = row.iter().fold(f32::MIN, |m, &v| m.max(v));
     let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
@@ -269,5 +287,20 @@ mod tests {
         let dh = dist_summary(&heavy);
         assert!(dh.kurtosis > dn.kurtosis + 1.0);
         assert!(dh.tail_ratio > dn.tail_ratio);
+    }
+
+    #[test]
+    fn nan_safe_argmax_skips_nan_and_handles_degenerate_rows() {
+        assert_eq!(nan_safe_argmax(&[1.0, 3.0, 2.0]), Some(1));
+        // NaN entries are skipped wherever they sit, including a NaN max.
+        assert_eq!(nan_safe_argmax(&[f32::NAN, 3.0, 2.0]), Some(1));
+        assert_eq!(nan_safe_argmax(&[1.0, f32::NAN, 2.0]), Some(2));
+        // Ties go to the first maximum.
+        assert_eq!(nan_safe_argmax(&[2.0, 2.0, 1.0]), Some(0));
+        // Infinities are ordinary values, not errors.
+        assert_eq!(nan_safe_argmax(&[f32::NEG_INFINITY, f32::INFINITY]), Some(1));
+        // Degenerate rows report None instead of panicking.
+        assert_eq!(nan_safe_argmax(&[f32::NAN, f32::NAN]), None);
+        assert_eq!(nan_safe_argmax(&[]), None);
     }
 }

@@ -1,0 +1,477 @@
+//! Robustness contract of the native Quant-Trim trainer and the serving
+//! hot-swap path:
+//!
+//! * kill-and-resume determinism — a run killed mid-epoch and resumed from
+//!   its atomic checkpoint produces a byte-identical final checkpoint;
+//! * non-finite-loss containment — an injected NaN step rolls back to the
+//!   last epoch boundary with lambda/LR backoff, training completes, and
+//!   the final checkpoint audits clean;
+//! * corrupt-checkpoint fallback — a flipped byte in the newest checkpoint
+//!   is caught by the file checksum and resume falls back one epoch;
+//! * scale-inflation watchdog — an inflated weight channel triggers an
+//!   early reverse-prune via the static audit pass;
+//! * gradient correctness — the handwritten backward matches directional
+//!   finite differences on the f32 path;
+//! * audit-gated zero-downtime hot-swap — a live server swaps checkpoints
+//!   without losing a request, post-swap responses are bit-exact against a
+//!   directly-run instance of the candidate, and a NaN-weighted candidate
+//!   is refused while the incumbent keeps serving.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use quant_trim::ckpt::Checkpoint;
+use quant_trim::coordinator::qtrain::{NativeTrainer, QtConfig, RunControls};
+use quant_trim::coordinator::server::{
+    EngineModel, Outcome, Server, ServerConfig, ServerDeployment,
+};
+use quant_trim::coordinator::TrainState;
+use quant_trim::data::gen_cls_batch;
+use quant_trim::engine::fp32_model;
+use quant_trim::tensor::Tensor;
+use quant_trim::testutil::{synth, Rng};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qt_train_{}_{}", name, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Tiny-but-real config: small enough for debug-mode CI, big enough that
+/// the curriculum ramps and checkpoints span several epochs. The watchdog
+/// is off by default here (its own test turns it on) so these tests
+/// exercise exactly one robustness mechanism each.
+fn tiny_cfg(epochs: usize, steps: usize) -> QtConfig {
+    let mut cfg = QtConfig::tiny(epochs, steps);
+    cfg.watchdog = false;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// kill -9 and resume
+// ---------------------------------------------------------------------------
+
+/// A run aborted abruptly mid-epoch (no checkpoint, no cleanup — the moral
+/// equivalent of `kill -9`) and resumed from its manifest must converge to
+/// a final checkpoint that is BYTE-identical to an uninterrupted run's.
+#[test]
+fn kill_and_resume_reproduces_final_checkpoint_bit_exactly() {
+    let cfg = tiny_cfg(4, 3);
+
+    // Uninterrupted reference run.
+    let dir_a = fresh_dir("resume_a");
+    let sm = synth::resnet_like(8, 8);
+    let mut full = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let rep_a = full.train(&dir_a, RunControls::default()).expect("reference run");
+    assert!(!rep_a.aborted);
+    assert_eq!(rep_a.logs.len(), 4);
+    let final_a = rep_a.final_checkpoint.expect("reference final checkpoint");
+
+    // Killed run: epochs 0-1 checkpoint, epoch 2 dies after one step.
+    let dir_b = fresh_dir("resume_b");
+    let mut killed = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let rep_kill = killed
+        .train(&dir_b, RunControls { abort_after_steps: Some(7), ..Default::default() })
+        .expect("aborted run still returns a report");
+    assert!(rep_kill.aborted);
+    assert_eq!(rep_kill.logs.len(), 2, "two epochs checkpointed before the kill");
+    drop(killed); // the process is gone; only the files survive
+
+    // Resume from disk and finish.
+    let mut resumed = NativeTrainer::resume(sm.graph.clone(), cfg.clone(), &dir_b)
+        .expect("resume parses manifest")
+        .expect("manifest present after two checkpointed epochs");
+    let rep_b = resumed.train(&dir_b, RunControls::default()).expect("resumed run");
+    assert!(!rep_b.aborted);
+    let first = rep_b.logs.first().expect("resumed run trains at least one epoch");
+    assert_eq!(first.epoch, 2, "resume must not repeat completed epochs");
+    let final_b = rep_b.final_checkpoint.expect("resumed final checkpoint");
+
+    let bytes_a = std::fs::read(&final_a).expect("read reference checkpoint");
+    let bytes_b = std::fs::read(&final_b).expect("read resumed checkpoint");
+    assert_eq!(final_a.file_name(), final_b.file_name());
+    assert!(
+        bytes_a == bytes_b,
+        "final checkpoints diverge after kill-and-resume ({} vs {} bytes)",
+        bytes_a.len(),
+        bytes_b.len()
+    );
+}
+
+/// Resume is a no-op source of state when nothing has checkpointed yet.
+#[test]
+fn resume_on_empty_dir_reports_fresh_start() {
+    let dir = fresh_dir("resume_empty");
+    let sm = synth::resnet_like(8, 8);
+    let got = NativeTrainer::resume(sm.graph.clone(), tiny_cfg(2, 2), &dir).expect("no manifest is not an error");
+    assert!(got.is_none());
+}
+
+// ---------------------------------------------------------------------------
+// corrupt checkpoint fallback
+// ---------------------------------------------------------------------------
+
+/// A flipped byte in the newest checkpoint must be caught by the file
+/// checksum; resume falls back to the previous epoch instead of loading
+/// garbage weights, and retraining repairs the corrupt file.
+#[test]
+fn corrupt_latest_checkpoint_falls_back_one_epoch() {
+    let cfg = tiny_cfg(3, 2);
+    let dir = fresh_dir("corrupt_fallback");
+    let sm = synth::resnet_like(8, 8);
+    let mut tr = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let rep = tr.train(&dir, RunControls::default()).expect("seed run");
+    let latest = rep.final_checkpoint.expect("final checkpoint");
+    assert!(latest.to_string_lossy().contains("ckpt_e0002"));
+
+    let mut bytes = std::fs::read(&latest).expect("read latest");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&latest, &bytes).expect("plant corruption");
+    assert!(Checkpoint::load(&latest).is_err(), "checksum must reject the corrupt file");
+
+    let mut resumed = NativeTrainer::resume(sm.graph.clone(), cfg.clone(), &dir)
+        .expect("resume survives a corrupt manifest target")
+        .expect("earlier epochs still load");
+    let rep2 = resumed.train(&dir, RunControls::default()).expect("repair run");
+    assert_eq!(rep2.logs.len(), 1, "exactly the lost epoch is retrained");
+    assert_eq!(rep2.logs[0].epoch, 2);
+    let repaired = rep2.final_checkpoint.expect("repaired checkpoint");
+    assert_eq!(repaired, latest);
+    Checkpoint::load(&repaired).expect("repaired checkpoint loads cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// non-finite containment
+// ---------------------------------------------------------------------------
+
+/// An injected NaN loss must never reach the optimizer: the step is
+/// refused, state rolls back to the last epoch boundary, lambda/LR back
+/// off, and the run still completes with a clean, auditable checkpoint.
+#[test]
+fn nan_step_rolls_back_and_training_still_completes() {
+    let cfg = tiny_cfg(3, 3);
+    let dir = fresh_dir("nan_rollback");
+    let sm = synth::resnet_like(8, 8);
+    let mut tr = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+
+    let mut fired = false;
+    let mut fault = |epoch: usize, step: usize| {
+        if !fired && epoch == 1 && step == 1 {
+            fired = true;
+            true
+        } else {
+            false
+        }
+    };
+    let rep = tr
+        .train(&dir, RunControls { fault: Some(&mut fault), ..Default::default() })
+        .expect("training survives the injected fault");
+
+    assert!(fired, "fault hook must have fired");
+    assert!(!rep.aborted);
+    assert_eq!(rep.rollbacks, 1);
+    assert_eq!(tr.rollbacks(), 1);
+    assert_eq!(rep.logs.len(), 3, "every epoch still completes");
+    let ep1 = &rep.logs[1];
+    assert_eq!(ep1.nonfinite_steps, 1, "the poisoned step is visible in the epoch log");
+    assert!(ep1.loss.is_finite(), "the retried epoch's mean excludes the poisoned step");
+    for log in &rep.logs {
+        assert!(log.loss.is_finite() && log.acc.is_finite());
+    }
+
+    // The final checkpoint must be numerically sound end to end: load,
+    // restore, compile through the real deployment path, audit, run.
+    let path = rep.final_checkpoint.expect("final checkpoint");
+    let ck = Checkpoint::load(&path).expect("final checkpoint loads");
+    let state = TrainState::from_checkpoint(&ck);
+    let model = fp32_model(sm.graph.clone(), state.params.clone(), state.bn.clone());
+    let report = model.audit(None).expect("audit runs");
+    assert!(
+        !report.has_errors(),
+        "post-rollback checkpoint must audit ERROR-free: {:?}",
+        report.findings
+    );
+    let batch = gen_cls_batch(cfg.data, 2, 0xF00D);
+    let out = model.run(&batch.images).expect("restored model runs");
+    assert!(out[0].data.iter().all(|v| v.is_finite()), "restored logits are finite");
+}
+
+/// A fault that poisons every attempt must abort with a diverged error
+/// after `max_rollbacks` instead of looping forever.
+#[test]
+fn persistent_nan_fault_aborts_after_max_rollbacks() {
+    let mut cfg = tiny_cfg(2, 2);
+    cfg.max_rollbacks = 3;
+    let dir = fresh_dir("nan_diverge");
+    let sm = synth::resnet_like(8, 8);
+    let mut tr = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg);
+    let mut fault = |_: usize, _: usize| true;
+    let err = tr
+        .train(&dir, RunControls { fault: Some(&mut fault), ..Default::default() })
+        .expect_err("an unrecoverable fault must surface as an error");
+    assert!(err.to_string().contains("diverged"), "unexpected error: {err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// scale-inflation watchdog
+// ---------------------------------------------------------------------------
+
+/// Inflating one output channel of a conv weight (the paper's outlier-
+/// driven scale-inflation failure) must trip the in-training audit
+/// watchdog, which reverse-prunes the outlier early instead of letting it
+/// dictate the deployment grid.
+#[test]
+fn watchdog_reverse_prunes_on_scale_inflation() {
+    let sm = synth::resnet_like(8, 8);
+    let mut params = sm.params.clone();
+    let w = params.get_mut("c2.w").expect("c2.w exists");
+    let row = w.data.len() / w.shape[0];
+    for v in &mut w.data[..row] {
+        *v *= 100.0; // channel 0 now dwarfs every other channel's scale
+    }
+    let inflated_max = w.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+
+    let mut cfg = QtConfig::tiny(1, 2);
+    cfg.watchdog = true;
+    let dir = fresh_dir("watchdog");
+    let mut tr = NativeTrainer::new(sm.graph.clone(), params, sm.bn.clone(), cfg);
+    let rep = tr.train(&dir, RunControls::default()).expect("watchdog run");
+
+    assert!(rep.watchdog_prunes >= 1, "watchdog must fire on the inflated channel");
+    assert!(rep.logs[0].watchdog_pruned);
+    let pruned_max = tr
+        .state
+        .params
+        .get("c2.w")
+        .expect("c2.w survives")
+        .data
+        .iter()
+        .fold(0.0f32, |a, &v| a.max(v.abs()));
+    assert!(
+        pruned_max < inflated_max,
+        "reverse prune must pull the outlier channel in ({pruned_max} vs {inflated_max})"
+    );
+}
+
+/// Healthy seeded weights must NOT trip the watchdog — it is an outlier
+/// detector, not a per-epoch tax on every run.
+#[test]
+fn watchdog_stays_quiet_on_healthy_weights() {
+    let sm = synth::resnet_like(8, 8);
+    let mut cfg = QtConfig::tiny(1, 2);
+    cfg.watchdog = true;
+    let dir = fresh_dir("watchdog_quiet");
+    let mut tr = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg);
+    let rep = tr.train(&dir, RunControls::default()).expect("healthy run");
+    assert_eq!(rep.watchdog_prunes, 0, "no inflation, no watchdog prune");
+}
+
+// ---------------------------------------------------------------------------
+// gradient correctness
+// ---------------------------------------------------------------------------
+
+/// Directional finite differences on the plain f32 path: for a fixed
+/// random direction d over one parameter tensor,
+/// `(L(w + h d) - L(w - h d)) / 2h` must match `<grad, d>`.
+#[test]
+fn backward_matches_directional_finite_differences() {
+    let sm = synth::resnet_like(8, 8);
+    let mut cfg = tiny_cfg(1, 1);
+    cfg.quant_trim = false; // exact f32 path: no STE, no fake quant
+    let mut tr = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let batch = gen_cls_batch(cfg.data, 4, 0xBEEF);
+
+    let analytic = tr.loss_and_grads(&batch, 0.0).expect("analytic grads");
+    let mut rng = Rng::new(0x6AD5);
+    let h = 5e-3f32; // large enough to clear f32 loss noise, small enough
+                     // that relu/hswish kink crossings stay second-order
+    for key in ["c1.w", "c3.w", "cdw.w", "head.w", "head.b", "b2.gamma"] {
+        let n = tr.state.params.get(key).expect("param exists").len();
+        let dir: Vec<f32> = rng.normal_vec(n, 1.0);
+        let base = tr.state.params.get(key).unwrap().data.clone();
+
+        let loss_at = |sign: f32, tr: &mut NativeTrainer| -> f32 {
+            let t = tr.state.params.get_mut(key).unwrap();
+            for (v, (&b, &d)) in t.data.iter_mut().zip(base.iter().zip(dir.iter())) {
+                *v = b + sign * h * d;
+            }
+            tr.loss_and_grads(&batch, 0.0).expect("perturbed forward").loss
+        };
+        let lp = loss_at(1.0, &mut tr);
+        let lm = loss_at(-1.0, &mut tr);
+        tr.state.params.get_mut(key).unwrap().data.copy_from_slice(&base);
+
+        let numeric = f64::from(lp - lm) / (2.0 * f64::from(h));
+        let ana: f64 = analytic
+            .grads
+            .get(key)
+            .unwrap_or_else(|| panic!("no gradient for {key}"))
+            .data
+            .iter()
+            .zip(dir.iter())
+            .map(|(&g, &d)| f64::from(g) * f64::from(d))
+            .sum();
+        let tol = 3e-3 + 0.1 * ana.abs();
+        assert!(
+            (numeric - ana).abs() <= tol,
+            "{key}: directional derivative mismatch numeric={numeric:.6} analytic={ana:.6}"
+        );
+    }
+}
+
+/// End-to-end smoke of the full Quant-Trim loop: every epoch logs finite
+/// loss/accuracy, held-out evaluation through the compiled deployment path
+/// is finite, and the scheduled reverse prune fires on schedule.
+#[test]
+fn quant_trim_run_trains_and_evaluates_finite() {
+    let cfg = tiny_cfg(3, 3);
+    let dir = fresh_dir("qt_smoke");
+    let sm = synth::resnet_like(8, 8);
+    let mut tr = NativeTrainer::new(sm.graph.clone(), sm.params.clone(), sm.bn.clone(), cfg.clone());
+    let rep = tr.train(&dir, RunControls::default()).expect("training runs");
+    assert_eq!(rep.logs.len(), 3);
+    assert!(rep.logs.iter().any(|l| l.pruned), "the compressed curriculum schedules a prune");
+    for log in &rep.logs {
+        assert!(log.loss.is_finite(), "epoch {} loss non-finite", log.epoch);
+        assert!((0.0..=1.0).contains(&log.acc), "epoch {} acc out of range", log.epoch);
+        assert_eq!(log.nonfinite_steps, 0);
+    }
+    let (val_loss, val_acc) = tr.evaluate(2).expect("held-out eval");
+    assert!(val_loss.is_finite());
+    assert!((0.0..=1.0).contains(&val_acc));
+}
+
+// ---------------------------------------------------------------------------
+// audit-gated zero-downtime hot-swap
+// ---------------------------------------------------------------------------
+
+/// Hot-swapping a checkpoint into a live server must lose zero accepted
+/// requests; once the swap lands, responses are bit-exact against a
+/// directly-run instance of the very same candidate model.
+#[test]
+fn hot_swap_under_live_traffic_loses_nothing_and_is_bit_exact() {
+    let sm = synth::resnet_like(8, 8);
+    let model_a = Arc::new(fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone()));
+    // Candidate: same architecture, visibly different weights.
+    let params_b: BTreeMap<String, Tensor> =
+        sm.params.iter().map(|(k, t)| (k.clone(), t.map(|v| v * 0.8))).collect();
+    let model_b = Arc::new(fp32_model(sm.graph.clone(), params_b, sm.bn.clone()));
+
+    let server = Server::start(
+        vec![ServerDeployment::new("qt", EngineModel::new(model_a.clone(), 8))],
+        ServerConfig { workers: 2, ..Default::default() },
+    )
+    .expect("server starts");
+
+    const THREADS: usize = 3;
+    const PER_THREAD: usize = 40;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let server = &server;
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(0x10AD + t as u64);
+                let mut served = 0usize;
+                for _ in 0..PER_THREAD {
+                    let img = Tensor::new(vec![3, 8, 8], rng.normal_vec(3 * 64, 1.0));
+                    let rx = server
+                        .submit_image(img, Some("qt"))
+                        .unwrap_or_else(|_| panic!("submit refused under light load"));
+                    let resp = rx.recv_timeout(RECV_TIMEOUT).expect("response arrives");
+                    assert_eq!(resp.outcome, Outcome::Served, "{:?}", resp.result);
+                    assert!(resp.result.is_ok());
+                    served += 1;
+                }
+                served
+            }));
+        }
+        // Swap mid-flight: traffic before the swap runs on A, after on B,
+        // and nothing in between is dropped.
+        std::thread::sleep(Duration::from_millis(10));
+        let report = server.swap_model("qt", EngineModel::new(model_b.clone(), 8)).expect("audit-clean swap lands");
+        assert!(!report.has_errors());
+        let total: usize = handles.into_iter().map(|h| h.join().expect("submitter")).sum();
+        assert_eq!(total, THREADS * PER_THREAD, "every accepted request was answered");
+    });
+
+    // Post-swap determinism: the served logits equal running the candidate
+    // model directly, bit for bit.
+    let mut rng = Rng::new(0x0B5E);
+    let probe = rng.normal_vec(3 * 64, 1.0);
+    let rx = server
+        .submit_image(Tensor::new(vec![3, 8, 8], probe.clone()), Some("qt"))
+        .unwrap_or_else(|_| panic!("probe submit"));
+    let resp = rx.recv_timeout(RECV_TIMEOUT).expect("probe response");
+    let served = resp.result.expect("probe served");
+    let direct = model_b.run(&Tensor::new(vec![1, 3, 8, 8], probe)).expect("direct run");
+    assert_eq!(served, direct[0].data, "post-swap responses must be bit-exact vs the candidate");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.errors, 0, "zero requests lost or errored across the swap");
+    assert_eq!(stats.served, THREADS * PER_THREAD + 1);
+    assert_eq!(stats.model_swaps, 1);
+}
+
+/// A candidate that fails the static audit (NaN weights here) must be
+/// refused while the incumbent keeps serving — a bad checkpoint can never
+/// take down a healthy deployment.
+#[test]
+fn audit_failing_candidate_is_refused_and_old_model_keeps_serving() {
+    let sm = synth::resnet_like(8, 8);
+    let model_a = Arc::new(fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone()));
+    let mut params_bad = sm.params.clone();
+    params_bad.get_mut("head.w").expect("head.w").data[0] = f32::NAN;
+    let model_bad = fp32_model(sm.graph.clone(), params_bad, sm.bn.clone());
+
+    let server = Server::start(
+        vec![ServerDeployment::new("qt", EngineModel::new(model_a.clone(), 8))],
+        ServerConfig { workers: 1, ..Default::default() },
+    )
+    .expect("server starts");
+
+    let err = server
+        .swap_model("qt", EngineModel::new(Arc::new(model_bad), 8))
+        .expect_err("NaN-weighted candidate must be refused");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("NONFINITE_PARAM") || msg.to_lowercase().contains("refused") || msg.contains("ERROR"),
+        "refusal should cite the audit: {msg}"
+    );
+
+    // The incumbent still serves, bit-exact.
+    let mut rng = Rng::new(0x5AFE);
+    let probe = rng.normal_vec(3 * 64, 1.0);
+    let rx = server
+        .submit_image(Tensor::new(vec![3, 8, 8], probe.clone()), Some("qt"))
+        .unwrap_or_else(|_| panic!("probe submit"));
+    let resp = rx.recv_timeout(RECV_TIMEOUT).expect("probe response");
+    assert_eq!(resp.outcome, Outcome::Served);
+    let direct = model_a.run(&Tensor::new(vec![1, 3, 8, 8], probe)).expect("direct run");
+    assert_eq!(resp.result.expect("served"), direct[0].data);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.model_swaps, 0, "a refused candidate must not count as a swap");
+    assert_eq!(stats.errors, 0);
+}
+
+/// Unknown deployments are a swap error, not a panic or a silent no-op.
+#[test]
+fn swap_on_unknown_deployment_errors() {
+    let sm = synth::resnet_like(8, 8);
+    let model = Arc::new(fp32_model(sm.graph.clone(), sm.params.clone(), sm.bn.clone()));
+    let server = Server::start(
+        vec![ServerDeployment::new("qt", EngineModel::new(model.clone(), 4))],
+        ServerConfig { workers: 1, ..Default::default() },
+    )
+    .expect("server starts");
+    assert!(server.swap_model("nope", EngineModel::new(model, 4)).is_err());
+    let stats = server.shutdown();
+    assert_eq!(stats.model_swaps, 0);
+}
